@@ -1,0 +1,54 @@
+//! Case study 1 (paper §5.3.1): *Should I rent a cloud GPU?*
+//!
+//! You develop GNMT on a P4000 workstation and wonder whether renting a
+//! P100, T4, or V100 is worth it. Habitat predicts, for each cloud GPU
+//! and batch size, the training throughput and the cost-normalized
+//! throughput — the two numbers the decision actually needs.
+//!
+//! ```bash
+//! cargo run --release --example case_study_cloud
+//! ```
+
+use habitat::{cost, models, Device, HybridPredictor, OperationTracker};
+
+fn main() -> anyhow::Result<()> {
+    let origin = Device::P4000;
+    let clouds = [Device::P100, Device::T4, Device::V100];
+    let predictor = habitat::runtime::predictor_from_artifacts("artifacts")
+        .unwrap_or_else(|_| HybridPredictor::wave_only());
+
+    println!("GNMT from your {origin}: predicted cloud performance\n");
+    for batch in [16usize, 32, 64] {
+        let trace = OperationTracker::new(origin).track(&models::gnmt(batch));
+        let base_tput = cost::throughput(batch, trace.run_time_ms());
+        println!("batch {batch}  (your P4000: {base_tput:.1} samples/s)");
+        println!(
+            "  {:<8} {:>12} {:>12} {:>14} {:>12}",
+            "GPU", "speedup", "samples/s", "samples/s/$", "$/hr"
+        );
+
+        let mut best: Option<(Device, f64)> = None;
+        for dest in clouds {
+            let pred = predictor.predict(&trace, dest);
+            let tput = pred.throughput();
+            let cnt = cost::cost_normalized_throughput(dest, tput).unwrap();
+            let price = dest.spec().rental_usd_per_hr.unwrap();
+            println!(
+                "  {:<8} {:>11.2}× {:>12.1} {:>14.1} {:>12.2}",
+                dest.id(),
+                tput / base_tput,
+                tput,
+                cnt,
+                price
+            );
+            if best.map_or(true, |(_, b)| cnt > b) {
+                best = Some((dest, cnt));
+            }
+        }
+        let (winner, _) = best.unwrap();
+        println!("  → most cost-efficient rental: {winner}\n");
+    }
+    println!("(paper's finding: V100 fastest, but the T4 wins samples/s/$ everywhere —");
+    println!(" if you are not time-constrained, rent the T4 or keep the P4000.)");
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Case study 2 (paper §5.3.2): *Is the V100 always better?*
+//!
+//! You have a 2080Ti and train DCGAN. Habitat predicts whether any other
+//! GPU — including the much more expensive V100 — would actually help.
+//! The paper's answer: no; DCGAN is computationally light and the V100
+//! offers only ~1.1×.
+//!
+//! ```bash
+//! cargo run --release --example case_study_v100
+//! ```
+
+use habitat::{models, Device, HybridPredictor, OperationTracker};
+
+fn main() -> anyhow::Result<()> {
+    let origin = Device::Rtx2080Ti;
+    let predictor = habitat::runtime::predictor_from_artifacts("artifacts")
+        .unwrap_or_else(|_| HybridPredictor::wave_only());
+
+    for batch in [64usize, 128] {
+        let trace = OperationTracker::new(origin).track(&models::dcgan(batch));
+        let base = trace.run_time_ms();
+        println!("DCGAN batch {batch}: {base:.1} ms/iter on your {origin}");
+        println!("  {:<10} {:>10} {:>21}", "GPU", "pred ms", "throughput vs 2080Ti");
+        for dest in habitat::device::ALL_DEVICES {
+            if dest == origin {
+                continue;
+            }
+            let pred = predictor.predict(&trace, dest);
+            println!(
+                "  {:<10} {:>10.1} {:>20.2}×",
+                dest.id(),
+                pred.run_time_ms(),
+                base / pred.run_time_ms()
+            );
+        }
+        let v100 = predictor.predict(&trace, Device::V100);
+        let speedup = base / v100.run_time_ms();
+        println!(
+            "  → V100 speedup {speedup:.2}×: {}\n",
+            if speedup < 1.35 {
+                "not worth renting — keep the 2080Ti"
+            } else {
+                "might be worth it if you are time-constrained"
+            }
+        );
+    }
+    Ok(())
+}

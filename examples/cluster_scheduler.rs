@@ -1,0 +1,84 @@
+//! Heterogeneous-cluster scheduling with Habitat predictions (intro
+//! use-case 3 of the paper; Gavel-style [61] objective).
+//!
+//! Six training jobs — each profiled only on its owner's workstation GPU
+//! — must be placed onto a small heterogeneous cluster. The scheduler's
+//! throughput matrix comes entirely from Habitat's cross-GPU
+//! predictions: no job ever ran on the cluster's GPUs.
+//!
+//! ```bash
+//! cargo run --release --example cluster_scheduler
+//! ```
+
+use habitat::cluster::{schedule, Inventory, Job, ThroughputMatrix};
+use habitat::{models, Device, HybridPredictor, OperationTracker};
+
+fn main() -> anyhow::Result<()> {
+    let predictor = habitat::runtime::predictor_from_artifacts("artifacts")
+        .unwrap_or_else(|_| HybridPredictor::wave_only());
+
+    // Jobs profiled on their owners' (diverse) workstation GPUs.
+    let jobs = [
+        ("alice/resnet50", "resnet50", 64, Device::Rtx2070),
+        ("bob/gnmt", "gnmt", 32, Device::P4000),
+        ("carol/transformer", "transformer", 64, Device::Rtx2080Ti),
+        ("dave/dcgan", "dcgan", 128, Device::Rtx2070),
+        ("erin/inception3", "inception3", 32, Device::P4000),
+        ("frank/resnet50", "resnet50", 32, Device::Rtx2080Ti),
+    ];
+    let traces: Vec<(Job, habitat::Trace)> = jobs
+        .iter()
+        .map(|(name, model, batch, origin)| {
+            let job = Job {
+                name: name.to_string(),
+                model: model.to_string(),
+                batch: *batch,
+                origin: *origin,
+            };
+            let trace =
+                OperationTracker::new(*origin).track(&models::by_name(model, *batch).unwrap());
+            (job, trace)
+        })
+        .collect();
+
+    // The cluster: a few of each server GPU.
+    let devices = [Device::V100, Device::P100, Device::T4];
+    let inventory: Inventory = [(Device::V100, 2), (Device::P100, 2), (Device::T4, 2)].into();
+    println!("cluster inventory: 2×V100, 2×P100, 2×T4\n");
+
+    let matrix = ThroughputMatrix::build(&predictor, &traces, &devices);
+    println!("Habitat-predicted throughput matrix (samples/s):");
+    print!("{:<20}", "job");
+    for d in &devices {
+        print!("{:>10}", d.id());
+    }
+    println!();
+    for (j, row) in matrix.matrix.iter().enumerate() {
+        print!("{:<20}", matrix.jobs[j].name);
+        for v in row {
+            print!("{v:>10.1}");
+        }
+        println!();
+    }
+
+    let placements = schedule(&matrix, &inventory);
+    println!("\ngreedy max-normalized-throughput placement:");
+    let mut total_norm = 0.0;
+    for p in &placements {
+        println!(
+            "  {:<20} → {:<8} ({:.1} samples/s, {:.0}% of its best device)",
+            p.job,
+            p.device.id(),
+            p.throughput,
+            p.normalized * 100.0
+        );
+        total_norm += p.normalized;
+    }
+    println!(
+        "\nplaced {}/{} jobs; objective (Σ normalized throughput) = {:.2}",
+        placements.len(),
+        jobs.len(),
+        total_norm
+    );
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! End-to-end driver: the full three-layer system on a real workload.
+//!
+//! ```bash
+//! make dataset train artifacts && cargo run --release --example end_to_end
+//! ```
+//!
+//! Proves all layers compose (EXPERIMENTS.md records a run):
+//! 1. **L1/L2 artifacts** — loads the AOT-compiled JAX+Pallas MLPs via
+//!    PJRT (errors out if `make artifacts` has not been run).
+//! 2. **L3 serving** — starts the batching prediction service and drives
+//!    it with **concurrent** client threads issuing the paper's full
+//!    Fig. 3 workload (5 models × 3 batch sizes × 30 GPU pairs = 450
+//!    prediction requests), reporting latency percentiles, throughput,
+//!    and the dynamic batcher's coalescing stats.
+//! 3. **Accuracy** — compares every prediction against simulator ground
+//!    truth and prints the paper's headline metric (avg error; paper:
+//!    11.8%).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use habitat::coordinator::{PredictionRequest, PredictionService};
+use habitat::device::ALL_DEVICES;
+use habitat::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. load artifacts (hybrid predictor or bust) --------------------
+    let service = Arc::new(PredictionService::new("artifacts").map_err(|e| {
+        anyhow::anyhow!("{e}\nrun `make dataset train artifacts` first — this driver requires the full stack")
+    })?);
+    println!("loaded MLP artifacts; hybrid predictor ready");
+
+    // --- 2. build the fig3 request load ----------------------------------
+    let mut requests = Vec::new();
+    for model in habitat::models::MODEL_NAMES {
+        for &batch in habitat::models::eval_batch_sizes(model) {
+            for origin in ALL_DEVICES {
+                for dest in ALL_DEVICES {
+                    if origin != dest {
+                        requests.push(PredictionRequest {
+                            model: model.to_string(),
+                            batch,
+                            origin: origin.id().to_lowercase(),
+                            dest: dest.id().to_lowercase(),
+                            precision: None,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    println!("issuing {} prediction requests from 8 client threads...", requests.len());
+
+    // --- 3. drive concurrently, measure latency --------------------------
+    let t0 = Instant::now();
+    let chunk = requests.len().div_ceil(8);
+    let mut handles = Vec::new();
+    for chunk_reqs in requests.chunks(chunk).map(<[PredictionRequest]>::to_vec) {
+        let service = service.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut out = Vec::new();
+            for req in chunk_reqs {
+                let t = Instant::now();
+                let resp = service.handle(&req).expect("prediction failed");
+                out.push((req, resp, t.elapsed().as_secs_f64() * 1e3));
+            }
+            out
+        }));
+    }
+    let mut results = Vec::new();
+    for h in handles {
+        results.extend(h.join().expect("worker panicked"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let latencies: Vec<f64> = results.iter().map(|(_, _, ms)| *ms).collect();
+    println!(
+        "done in {wall:.2}s: {:.0} predictions/s | latency p50 {:.1} ms, p95 {:.1} ms, max {:.1} ms",
+        results.len() as f64 / wall,
+        stats::percentile(&latencies, 50.0),
+        stats::percentile(&latencies, 95.0),
+        stats::max(&latencies),
+    );
+
+    // --- 4. accuracy vs simulator ground truth ----------------------------
+    let mut errs = Vec::new();
+    let mut fallbacks = 0usize;
+    for (req, resp, _) in &results {
+        let dest = habitat::Device::parse(&req.dest).unwrap();
+        let truth = habitat::experiments::ground_truth_ms(&req.model, req.batch, dest);
+        errs.push(stats::ape(resp.iter_ms, truth));
+        fallbacks += resp.mlp_fallbacks;
+    }
+    println!(
+        "accuracy vs ground truth: avg {:.1}% | p95 {:.1}% | max {:.1}%  (paper: 11.8% avg) | {} MLP fallbacks",
+        stats::mean(&errs) * 100.0,
+        stats::percentile(&errs, 95.0) * 100.0,
+        stats::max(&errs) * 100.0,
+        fallbacks,
+    );
+    anyhow::ensure!(fallbacks == 0, "MLP fallbacks occurred — artifacts incomplete?");
+    anyhow::ensure!(
+        stats::mean(&errs) < 0.35,
+        "end-to-end error out of expected range"
+    );
+    println!("END-TO-END OK");
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Quickstart — the paper's Listing 1, in Rust.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Tracks one ResNet-50 training iteration on an RTX 2070 (the GPU "you
+//! have") and predicts the iteration execution time on a V100 (the GPU
+//! "you are considering"). Uses the full hybrid predictor when
+//! `artifacts/` exists (`make artifacts`), wave scaling otherwise.
+
+use habitat::{models, Device, HybridPredictor, OperationTracker};
+
+fn main() -> anyhow::Result<()> {
+    // Equivalent of: tracker = habitat.OperationTracker(origin_device=...)
+    let tracker = OperationTracker::new(Device::Rtx2070);
+
+    // Equivalent of: with tracker.track(): run_my_training_iteration()
+    let graph = models::resnet50(32);
+    let trace = tracker.track(&graph);
+    println!(
+        "tracked {} ops of {} (batch {}): {:.2} ms/iter on {}",
+        trace.ops.len(),
+        trace.model,
+        trace.batch_size,
+        trace.run_time_ms(),
+        trace.origin
+    );
+
+    // Equivalent of: trace.to_device(habitat.Device.V100).run_time_ms
+    let predictor = habitat::runtime::predictor_from_artifacts("artifacts")
+        .unwrap_or_else(|e| {
+            eprintln!("(no MLP artifacts: {e}; falling back to wave scaling)");
+            HybridPredictor::wave_only()
+        });
+    let pred = predictor.predict(&trace, Device::V100);
+    println!(
+        "Pred. iter. exec. time on V100: {:.2} ms  ({:.1} samples/s)",
+        pred.run_time_ms(),
+        pred.throughput()
+    );
+
+    // Habitat's purpose is comparison — print the whole device lineup.
+    println!("\n{:<10} {:>12} {:>14} {:>16}", "GPU", "pred ms", "samples/s", "samples/s/$");
+    for dest in habitat::device::ALL_DEVICES {
+        let p = predictor.predict(&trace, dest);
+        let tput = p.throughput();
+        println!(
+            "{:<10} {:>12.2} {:>14.1} {:>16}",
+            dest.id(),
+            p.run_time_ms(),
+            tput,
+            habitat::cost::cost_normalized_throughput(dest, tput)
+                .map(|v| format!("{v:.1}"))
+                .unwrap_or_else(|| "(not rented)".into())
+        );
+    }
+    Ok(())
+}

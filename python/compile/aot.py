@@ -1,0 +1,114 @@
+"""AOT-lower the trained MLP predictors to HLO text for the Rust runtime.
+
+Usage: `python -m compile.aot --weights ../weights --out ../artifacts`
+(normally via `make artifacts`).
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: the
+image's xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit instruction ids,
+while the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md). Each op family gets one artifact per batch
+bucket — PJRT executables are static-shaped, so the Rust side pads a
+request to the smallest bucket that fits — plus a `<op>.meta.json`
+sidecar with the feature statistics.
+
+Weights are baked into the HLO as constants: the exported function takes
+only the standardized feature matrix `f32[bucket, F]` and returns a
+1-tuple `(f32[bucket, 1],)` of `ln(time_ms)` predictions. The forward
+pass goes through the Layer-1 Pallas kernel (interpret-mode lowering), so
+the kernel is part of the artifact Rust executes.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+OPS = ("conv2d", "lstm", "bmm", "linear")
+# Batch buckets exported per op. Keep in sync with nothing — the Rust
+# runtime reads the list from meta.json.
+BUCKETS = (1, 8, 32, 64, 128, 256, 512)
+
+
+def load_params(path):
+    """Load weights + stats from a train.py npz."""
+    z = np.load(path)
+    params = [
+        (jnp.asarray(z[f"w{i}"]), jnp.asarray(z[f"b{i}"]))
+        for i in range(int(z["layers"]))
+    ]
+    return params, z
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_op(op: str, weights_dir: str, out_dir: str,
+              buckets=BUCKETS, use_pallas: bool = True) -> dict:
+    """Export all buckets + sidecar for one op family; returns the meta."""
+    params, z = load_params(f"{weights_dir}/{op}.npz")
+    features = int(z["features"])
+
+    def infer(x):
+        return (model.mlp_forward(params, x, use_pallas=use_pallas),)
+
+    for bucket in buckets:
+        spec = jax.ShapeDtypeStruct((bucket, features), jnp.float32)
+        lowered = jax.jit(infer).lower(spec)
+        text = to_hlo_text(lowered)
+        path = f"{out_dir}/{op}_b{bucket}.hlo.txt"
+        with open(path, "w") as f:
+            f.write(text)
+
+    meta = {
+        "op": op,
+        "features": features,
+        "buckets": list(buckets),
+        "mean": [float(v) for v in z["mean"]],
+        "std": [float(v) for v in z["std"]],
+        "output": "log_ms",
+        "hidden_layers": int(z["hidden_layers"]),
+        "hidden_width": int(z["hidden_width"]),
+        "test_mape": float(z["test_mape"]),
+    }
+    with open(f"{out_dir}/{op}.meta.json", "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--weights", default="../weights")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--ops", nargs="*", default=list(OPS))
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="export the pure-jnp forward (ablation only)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    for op in args.ops:
+        npz = f"{args.weights}/{op}.npz"
+        if not os.path.exists(npz):
+            raise SystemExit(
+                f"{npz} missing — run `make train` (or `make dataset train`) first"
+            )
+        meta = export_op(op, args.weights, args.out,
+                         use_pallas=not args.no_pallas)
+        print(f"{op}: exported buckets {meta['buckets']} "
+              f"(features={meta['features']}, "
+              f"test MAPE {meta['test_mape'] * 100:.1f}%) → {args.out}/")
+
+
+if __name__ == "__main__":
+    main()

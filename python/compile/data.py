@@ -1,0 +1,88 @@
+"""Dataset loading + preprocessing shared by train.py and sweep.py.
+
+Reads the CSVs emitted by `habitat dataset` (one per op family; schema in
+`rust/src/dataset/mod.rs`), applies the paper's §4.3.3 preprocessing —
+standardize inputs with training-set statistics — on log1p-transformed
+features, and splits 80/20 **by configuration** so that no configuration
+evaluated in the test set ever appears in training (the paper's
+guarantee; rows for the same config on different GPUs never straddle the
+split).
+"""
+
+import dataclasses
+
+import numpy as np
+
+OPS = ("conv2d", "lstm", "bmm", "linear")
+GPUS_PER_CONFIG = 6
+
+
+@dataclasses.dataclass
+class Dataset:
+    op: str
+    feature_names: list
+    # Standardization stats over log1p(features), training split only.
+    mean: np.ndarray
+    std: np.ndarray
+    # Standardized features and ln(time_ms) targets.
+    x_train: np.ndarray
+    y_train: np.ndarray
+    x_test: np.ndarray
+    y_test: np.ndarray
+
+    @property
+    def features(self) -> int:
+        return self.x_train.shape[1]
+
+
+def load_csv(path: str):
+    """(header, float matrix) from a habitat dataset CSV."""
+    with open(path) as f:
+        header = f.readline().strip().split(",")
+    data = np.loadtxt(path, delimiter=",", skiprows=1, dtype=np.float64)
+    if data.ndim == 1:
+        data = data[None, :]
+    return header, data
+
+
+def load(op: str, data_dir: str, test_frac: float = 0.2, seed: int = 0) -> Dataset:
+    """Load one op family's dataset with the §4.3.3 preprocessing."""
+    header, data = load_csv(f"{data_dir}/{op}.csv")
+    assert header[-1] == "time_ms", f"unexpected schema in {op}.csv"
+    raw_x = data[:, :-1]
+    time_ms = data[:, -1]
+    assert (time_ms > 0).all(), "non-positive measured time"
+
+    # Group rows by configuration (GPUS_PER_CONFIG consecutive rows share
+    # a config by construction) and split on configs.
+    n_configs = len(data) // GPUS_PER_CONFIG
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n_configs)
+    n_test = max(1, int(n_configs * test_frac))
+    test_configs = np.zeros(n_configs, dtype=bool)
+    test_configs[order[:n_test]] = True
+    row_is_test = np.repeat(test_configs, GPUS_PER_CONFIG)
+    # Tail rows (partial config group) go to train.
+    if len(row_is_test) < len(data):
+        row_is_test = np.concatenate(
+            [row_is_test, np.zeros(len(data) - len(row_is_test), dtype=bool)]
+        )
+
+    logx = np.log1p(np.maximum(raw_x, 0.0))
+    y = np.log(time_ms)
+
+    mean = logx[~row_is_test].mean(axis=0)
+    std = logx[~row_is_test].std(axis=0)
+    std = np.where(std < 1e-12, 1.0, std)
+    x = (logx - mean) / std
+
+    return Dataset(
+        op=op,
+        feature_names=header[:-1],
+        mean=mean,
+        std=std,
+        x_train=x[~row_is_test].astype(np.float32),
+        y_train=y[~row_is_test].astype(np.float32),
+        x_test=x[row_is_test].astype(np.float32),
+        y_test=y[row_is_test].astype(np.float32),
+    )

@@ -1,0 +1,127 @@
+"""Layer-1: the fused linear(+bias)(+ReLU) Pallas kernel.
+
+This is the compute hot-spot of Habitat's MLP predictors: every hidden
+layer of every per-operation MLP funnels through this kernel, and the
+AOT-exported inference HLO that the Rust runtime executes contains it.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper's MLPs would
+run through cuBLAS GEMM + separate bias/ReLU kernels on a GPU. On TPU the
+same insight — keep the matrix unit fed from fast on-chip memory — is
+expressed with `BlockSpec`s: the kernel tiles `x:[M,K] @ w:[K,N]` into
+`(block_m × block_k) × (block_k × block_n)` VMEM-resident tiles on a
+`(M/bm, N/bn, K/bk)` grid, accumulates partial products in the f32 output
+tile across the K axis (revisited grid dimension), and fuses the bias add
+and ReLU into the final K step — no extra HBM round-trip for the
+activation, the way a separate ReLU kernel would pay on GPU.
+
+For the production MLP shapes (K, N ≤ 512 after padding) one block covers
+the whole operand, so the grid degenerates to a single step and the
+kernel is one MXU-shaped matmul; the tiling path is exercised by the
+hypothesis tests with larger shapes. `interpret=True` everywhere: the CPU
+PJRT plugin cannot run Mosaic custom-calls, and interpret-mode lowering
+produces plain HLO that both pytest and the Rust runtime execute.
+
+VMEM footprint at the default blocks (512, 512, 512):
+  x-tile 512·512·4 B = 1 MiB, w-tile 1 MiB, out-tile 1 MiB, bias 2 KiB
+  →  ~3 MiB ≪ 16 MiB VMEM, with headroom for double buffering
+(DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes — MXU-friendly multiples of (8, 128), sized so every
+# production MLP layer (≤512 wide, buckets ≤512 rows) is a SINGLE
+# VMEM-resident grid step: interpret-mode Pallas pays a large per-grid-step
+# cost (a while-loop iteration with dynamic slicing in the lowered HLO), and
+# one 512³ step is still only ~3 MiB of VMEM at f32 — far under the 16 MiB
+# budget even with double buffering (see §Perf in EXPERIMENTS.md: this
+# change cut the conv2d MLP call latency ~7×).
+BLOCK_M = 512
+BLOCK_N = 512
+BLOCK_K = 512
+
+
+def _round_up(value: int, multiple: int) -> int:
+    return (value + multiple - 1) // multiple * multiple
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, n_k: int, activation: str):
+    """One (i, j, k) grid step: accumulate x_tile @ w_tile into o_ref."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        acc = o_ref[...] + b_ref[...]
+        if activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "block_m", "block_n", "block_k")
+)
+def linear_act(
+    x,
+    w,
+    b,
+    activation: str = "relu",
+    *,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+):
+    """Fused `activation(x @ w + b)` as a Pallas kernel.
+
+    Args:
+      x: ``[M, K]`` float32 input rows.
+      w: ``[K, N]`` float32 weights.
+      b: ``[N]`` float32 bias.
+      activation: ``"relu"`` or ``"none"``.
+
+    Shapes need not be multiples of the block sizes: operands are
+    zero-padded to the block grid and the result is sliced back. Zero
+    padding is exact for matmul+bias, and ReLU(0) = 0 keeps padded rows
+    inert.
+    """
+    if activation not in ("relu", "none"):
+        raise ValueError(f"unknown activation {activation!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2 or b.shape != (n,):
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+
+    # Shrink blocks to the (padded) problem, then pad to block multiples.
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 128))
+    bk = min(block_k, _round_up(k, 128))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n))
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=grid[2], activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp, bp)
+    return out[:m, :n]

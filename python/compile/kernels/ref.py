@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the Pallas kernel — the correctness ground truth.
+
+`linear_act_ref` computes exactly what `kernels.linear.linear_act`
+promises, with no tiling, padding, or fusion. pytest asserts
+`assert_allclose` between the two across hypothesis-generated shapes.
+"""
+
+import jax.numpy as jnp
+
+
+def linear_act_ref(x, w, b, activation: str = "relu"):
+    """Reference `activation(x @ w + b)` in plain jnp (f32 accumulate)."""
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return out
+
+
+def mlp_forward_ref(params, x):
+    """Reference MLP forward: hidden ReLU layers, linear head.
+
+    `params` is a list of `(w, b)` pairs; returns `[M, out]`.
+    """
+    h = x
+    for i, (w, b) in enumerate(params):
+        last = i == len(params) - 1
+        h = linear_act_ref(h, w, b, activation="none" if last else "relu")
+    return h

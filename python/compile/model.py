@@ -1,0 +1,97 @@
+"""Layer-2: the MLP execution-time predictor in JAX (paper §3.4).
+
+One MLP per kernel-varying operation family (conv2d, lstm, bmm, linear).
+Architecture follows the paper — an input layer, `L` hidden layers of
+width `H` with ReLU, and a scalar output head — with the sizes scaled for
+CPU-only training (paper: 8×1024; default here: 4×256; Fig. 5 sweeps the
+grid). Inputs are the op's configuration features plus four GPU hardware
+features, log1p-transformed and standardized; the output is `ln(time_ms)`
+(forward+backward), trained with a relative-error loss equivalent to the
+paper's MAPE.
+
+The forward pass calls the Layer-1 Pallas kernel (`kernels.linear`), so
+the AOT-lowered inference HLO that Rust executes contains the kernel.
+`use_pallas=False` selects the pure-jnp path (used during training, where
+interpret-mode Pallas would be needlessly slow; pytest asserts the two
+paths agree to float tolerance).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.linear import linear_act
+from compile.kernels.ref import linear_act_ref
+
+# Default architecture (see module docstring).
+DEFAULT_HIDDEN_LAYERS = 4
+DEFAULT_HIDDEN_WIDTH = 256
+
+
+def layer_dims(features: int, hidden_layers: int = DEFAULT_HIDDEN_LAYERS,
+               hidden_width: int = DEFAULT_HIDDEN_WIDTH):
+    """[(in, out), ...] for every layer of the MLP."""
+    dims = [(features, hidden_width)]
+    for _ in range(hidden_layers - 1):
+        dims.append((hidden_width, hidden_width))
+    dims.append((hidden_width, 1))
+    return dims
+
+
+def init_params(key, features: int, hidden_layers: int = DEFAULT_HIDDEN_LAYERS,
+                hidden_width: int = DEFAULT_HIDDEN_WIDTH):
+    """He-initialized weights: list of (w[in,out], b[out]) pairs."""
+    params = []
+    for d_in, d_out in layer_dims(features, hidden_layers, hidden_width):
+        key, wkey = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / d_in)
+        params.append(
+            (
+                jax.random.normal(wkey, (d_in, d_out), jnp.float32) * scale,
+                jnp.zeros((d_out,), jnp.float32),
+            )
+        )
+    return params
+
+
+def mlp_forward(params, x, use_pallas: bool = True):
+    """Predict `ln(time_ms)` for standardized feature rows `x:[M,F]`.
+
+    Returns `[M, 1]`. Hidden layers are fused linear+ReLU (the Pallas
+    kernel); the head is linear.
+    """
+    dense = linear_act if use_pallas else linear_act_ref
+    h = x
+    for i, (w, b) in enumerate(params):
+        last = i == len(params) - 1
+        h = dense(h, w, b, activation="none" if last else "relu")
+    return h
+
+
+def train_loss(params, x, y_log, use_pallas: bool = False):
+    """Log-space MAE: mean |pred − ln(t)|.
+
+    This is the smooth training surrogate for MAPE: for small errors
+    |ln(p/t)| ≈ |p/t − 1|, but unlike the raw MAPE it is symmetric in
+    over/under-prediction and its gradients do not explode when the
+    network is far off — which matters early in training when targets
+    span five orders of magnitude. Evaluation still reports the paper's
+    MAPE ([`mape`]).
+    """
+    pred = mlp_forward(params, x, use_pallas=use_pallas)[:, 0]
+    return jnp.mean(jnp.abs(pred - y_log))
+
+
+def relative_error_loss(params, x, y_log, use_pallas: bool = False):
+    """Mean |predicted/measured − 1| — identical to the paper's MAPE.
+
+    `y_log = ln(time_ms)`; with predictions in log space the MAPE is
+    `|exp(pred − y_log) − 1|`, which is smooth, scale-free, and exactly
+    the paper's loss after the exp head.
+    """
+    pred = mlp_forward(params, x, use_pallas=use_pallas)[:, 0]
+    return jnp.mean(jnp.abs(jnp.expm1(pred - y_log)))
+
+
+def mape(params, x, y_log, use_pallas: bool = False):
+    """Test-set MAPE as a fraction (paper reports this in Fig. 5)."""
+    return float(relative_error_loss(params, x, y_log, use_pallas=use_pallas))

@@ -1,0 +1,57 @@
+"""Fig. 5 — MLP architecture sensitivity sweep (paper §5.2.4).
+
+Trains each op family's MLP over a grid of hidden-layer counts and
+widths, recording the test MAPE after training — the reproduction of the
+paper's Fig. 5 (which swept 2–8 layers × 2^5–2^11 widths for 80 epochs and
+found diminishing returns past width 2^9). Scaled defaults keep the sweep
+CPU-friendly; pass --layers/--widths/--epochs to widen it.
+
+Usage: `python -m compile.sweep --data ../data --out ../results/fig5.csv`
+(normally via `make fig5`).
+"""
+
+import argparse
+import os
+import time
+
+from compile import data as data_mod
+from compile import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--data", default="../data")
+    ap.add_argument("--out", default="../results/fig5.csv")
+    ap.add_argument("--ops", nargs="*", default=list(data_mod.OPS))
+    ap.add_argument("--layers", nargs="*", type=int, default=[2, 4, 6, 8])
+    ap.add_argument("--widths", nargs="*", type=int,
+                    default=[32, 64, 128, 256, 512])
+    ap.add_argument("--epochs", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    rows = ["op,hidden_layers,hidden_width,test_mape_pct"]
+    for op in args.ops:
+        ds = data_mod.load(op, args.data, seed=args.seed)
+        for layers in args.layers:
+            for width in args.widths:
+                t0 = time.time()
+                _, test = train_mod.train_one(
+                    ds,
+                    hidden_layers=layers,
+                    hidden_width=width,
+                    epochs=args.epochs,
+                    seed=args.seed,
+                    verbose=False,
+                )
+                print(f"{op}: layers={layers} width={width} "
+                      f"test MAPE {test * 100:.1f}% ({time.time() - t0:.0f}s)")
+                rows.append(f"{op},{layers},{width},{test * 100:.2f}")
+    with open(args.out, "w") as f:
+        f.write("\n".join(rows) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

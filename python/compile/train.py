@@ -1,0 +1,136 @@
+"""Train the four MLP predictors (paper §4.3.3).
+
+Usage: `python -m compile.train --data ../data --out ../weights`
+(normally via `make train`).
+
+Follows the paper's recipe, scaled for CPU: Adam, lr 5e-4 halved to 1e-4
+after half the epochs, weight decay 1e-4, batch 512, MAPE loss, 80/20
+config-level split. Saves per-op `<op>.npz` containing the weights, the
+feature statistics, the architecture, and the test MAPE.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as data_mod
+from compile import model
+
+
+def make_adam():
+    """Adam update as a jit-able pure function over pytrees."""
+
+    def init(params):
+        return {
+            "m": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(params, grads, state, lr, weight_decay=1e-4,
+               b1=0.9, b2=0.999, eps=1e-8):
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+        def upd(p, m_, v_):
+            mhat = m_ / (1 - b1 ** t.astype(jnp.float32))
+            vhat = v_ / (1 - b2 ** t.astype(jnp.float32))
+            return p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+        params = jax.tree_util.tree_map(upd, params, m, v)
+        return params, {"m": m, "v": v, "t": t}
+
+    return init, update
+
+
+def train_one(ds, *, hidden_layers=model.DEFAULT_HIDDEN_LAYERS,
+              hidden_width=model.DEFAULT_HIDDEN_WIDTH, epochs=30,
+              batch=512, lr=3e-3, seed=0, verbose=True):
+    """Train one op family's MLP; returns (params, test_mape)."""
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(key, ds.features, hidden_layers, hidden_width)
+    init, update = make_adam()
+    opt = init(params)
+
+    loss_grad = jax.jit(jax.value_and_grad(
+        lambda p, x, y: model.train_loss(p, x, y, use_pallas=False)
+    ))
+    update = jax.jit(update)
+
+    x_train = jnp.asarray(ds.x_train)
+    y_train = jnp.asarray(ds.y_train)
+    n = len(ds.x_train)
+    steps_per_epoch = max(1, n // batch)
+    rng = np.random.default_rng(seed)
+
+    t0 = time.time()
+    for epoch in range(epochs):
+        # Paper: lr 5e-4 dropped to 1e-4 at the halfway point.
+        epoch_lr = lr if epoch < epochs // 2 else lr / 5.0
+        order = rng.permutation(n)
+        epoch_loss = 0.0
+        for s in range(steps_per_epoch):
+            idx = order[s * batch:(s + 1) * batch]
+            loss, grads = loss_grad(params, x_train[idx], y_train[idx])
+            params, opt = update(params, grads, opt, epoch_lr)
+            epoch_loss += float(loss)
+        if verbose and (epoch + 1) % max(1, epochs // 6) == 0:
+            test = model.mape(params, jnp.asarray(ds.x_test), jnp.asarray(ds.y_test))
+            print(f"  [{ds.op}] epoch {epoch + 1:>3}/{epochs} "
+                  f"train-loss {epoch_loss / steps_per_epoch:.4f} "
+                  f"test-mape {test * 100:.1f}%  ({time.time() - t0:.0f}s)")
+    test = model.mape(params, jnp.asarray(ds.x_test), jnp.asarray(ds.y_test))
+    return params, test
+
+
+def save(path, params, ds, hidden_layers, hidden_width, test_mape):
+    arrays = {}
+    for i, (w, b) in enumerate(params):
+        arrays[f"w{i}"] = np.asarray(w)
+        arrays[f"b{i}"] = np.asarray(b)
+    np.savez(
+        path,
+        layers=len(params),
+        hidden_layers=hidden_layers,
+        hidden_width=hidden_width,
+        features=ds.features,
+        mean=ds.mean,
+        std=ds.std,
+        test_mape=test_mape,
+        **arrays,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--data", default="../data")
+    ap.add_argument("--out", default="../weights")
+    ap.add_argument("--ops", nargs="*", default=list(data_mod.OPS))
+    ap.add_argument("--epochs", type=int, default=30)
+    ap.add_argument("--hidden-layers", type=int, default=model.DEFAULT_HIDDEN_LAYERS)
+    ap.add_argument("--hidden-width", type=int, default=model.DEFAULT_HIDDEN_WIDTH)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import os
+    os.makedirs(args.out, exist_ok=True)
+    for op in args.ops:
+        ds = data_mod.load(op, args.data, seed=args.seed)
+        print(f"{op}: {len(ds.x_train)} train / {len(ds.x_test)} test rows, "
+              f"{ds.features} features")
+        params, test = train_one(
+            ds,
+            hidden_layers=args.hidden_layers,
+            hidden_width=args.hidden_width,
+            epochs=args.epochs,
+            seed=args.seed,
+        )
+        save(f"{args.out}/{op}.npz", params, ds, args.hidden_layers,
+             args.hidden_width, test)
+        print(f"{op}: test MAPE {test * 100:.1f}% → {args.out}/{op}.npz")
+
+
+if __name__ == "__main__":
+    main()

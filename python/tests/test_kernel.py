@@ -1,0 +1,104 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+This is the core numerical signal of the build path: hypothesis sweeps
+shapes (including non-block-multiple, tiling-triggering, and degenerate
+ones) and both activations, asserting allclose against `ref.py`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.linear import linear_act
+from compile.kernels.ref import linear_act_ref
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+def assert_matches_ref(m, k, n, activation, key=0):
+    x = rand(key, (m, k))
+    w = rand(key + 1, (k, n))
+    b = rand(key + 2, (n,))
+    got = linear_act(x, w, b, activation)
+    want = linear_act_ref(x, w, b, activation)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 80),
+    n=st.integers(1, 80),
+    activation=st.sampled_from(["relu", "none"]),
+    key=st.integers(0, 1000),
+)
+def test_small_shapes_match_ref(m, k, n, activation, key):
+    assert_matches_ref(m, k, n, activation, key)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    m=st.sampled_from([1, 127, 128, 129, 300]),
+    k=st.sampled_from([11, 256, 300]),
+    n=st.sampled_from([1, 256, 257]),
+)
+def test_block_boundary_shapes_match_ref(m, k, n):
+    # Shapes straddling the default 128/256 block sizes (exercise padding
+    # and the multi-step K grid).
+    assert_matches_ref(m, k, n, "relu")
+
+
+def test_multi_block_grid_accumulates():
+    # Force a multi-step K reduction with small blocks.
+    x = rand(0, (64, 512))
+    w = rand(1, (512, 64))
+    b = rand(2, (64,))
+    got = linear_act(x, w, b, "none", block_m=32, block_n=64, block_k=128)
+    want = linear_act_ref(x, w, b, "none")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_production_mlp_shapes():
+    # The exact shapes the AOT artifacts use: bucket × features → hidden.
+    for bucket in (1, 8, 32, 128, 512):
+        assert_matches_ref(bucket, 11, 256, "relu", key=bucket)
+    assert_matches_ref(512, 256, 1, "none", key=7)
+
+
+def test_relu_clamps_negatives():
+    x = -jnp.ones((4, 8))
+    w = jnp.eye(8)
+    b = jnp.zeros((8,))
+    out = linear_act(x, w, b, "relu")
+    assert (np.asarray(out) == 0).all()
+
+
+def test_bias_applied_once():
+    # With x = 0 the output must equal the bias exactly (relu of it).
+    x = jnp.zeros((3, 5))
+    w = rand(1, (5, 7))
+    b = rand(2, (7,))
+    out = linear_act(x, w, b, "none")
+    np.testing.assert_allclose(np.asarray(out), np.tile(np.asarray(b), (3, 1)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_rejects_bad_shapes_and_activation():
+    x, w, b = jnp.zeros((2, 3)), jnp.zeros((4, 5)), jnp.zeros((5,))
+    with pytest.raises(ValueError):
+        linear_act(x, w, b)
+    with pytest.raises(ValueError):
+        linear_act(jnp.zeros((2, 4)), w, b, "gelu")
+
+
+def test_deterministic():
+    x, w, b = rand(0, (17, 13)), rand(1, (13, 9)), rand(2, (9,))
+    a = np.asarray(linear_act(x, w, b))
+    c = np.asarray(linear_act(x, w, b))
+    np.testing.assert_array_equal(a, c)

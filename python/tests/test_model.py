@@ -1,0 +1,71 @@
+"""L2 tests: the MLP predictor model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import mlp_forward_ref
+
+
+def test_layer_dims_shape():
+    dims = model.layer_dims(11, hidden_layers=4, hidden_width=256)
+    assert dims[0] == (11, 256)
+    assert dims[-1] == (256, 1)
+    assert len(dims) == 5  # 4 hidden + head
+
+
+def test_init_params_shapes():
+    params = model.init_params(jax.random.PRNGKey(0), 8, 3, 64)
+    assert len(params) == 4
+    assert params[0][0].shape == (8, 64)
+    assert params[-1][0].shape == (64, 1)
+    assert params[-1][1].shape == (1,)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    rows=st.integers(1, 64),
+    features=st.integers(4, 16),
+    layers=st.integers(1, 4),
+    width=st.sampled_from([16, 64, 256]),
+)
+def test_pallas_and_jnp_paths_agree(rows, features, layers, width):
+    """The AOT-exported (Pallas) forward must equal the training (jnp)
+    forward — otherwise the Rust runtime would serve a different model
+    than was trained."""
+    params = model.init_params(jax.random.PRNGKey(1), features, layers, width)
+    x = jax.random.normal(jax.random.PRNGKey(2), (rows, features))
+    a = model.mlp_forward(params, x, use_pallas=True)
+    b = model.mlp_forward(params, x, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+    # And equals the fully independent reference implementation.
+    c = mlp_forward_ref(params, x)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(c), rtol=1e-6, atol=1e-6)
+
+
+def test_loss_is_relative_error():
+    """With a single linear identity layer the loss is checkable by hand."""
+    params = [(jnp.ones((1, 1)), jnp.zeros((1,)))]
+    x = jnp.array([[np.log(2.0)]], jnp.float32)  # prediction: ln 2
+    y = jnp.array([np.log(1.0)], jnp.float32)    # truth: ln 1
+    # |exp(ln2 - ln1) - 1| = 1.0 → 100% relative error.
+    loss = model.relative_error_loss(params, x, y)
+    assert abs(float(loss) - 1.0) < 1e-6
+
+
+def test_loss_zero_at_perfect_prediction():
+    params = model.init_params(jax.random.PRNGKey(3), 4, 2, 32)
+    x = jax.random.normal(jax.random.PRNGKey(4), (16, 4))
+    y = model.mlp_forward(params, x, use_pallas=False)[:, 0]
+    assert float(model.relative_error_loss(params, x, y)) < 1e-6
+
+
+def test_gradients_flow():
+    params = model.init_params(jax.random.PRNGKey(5), 4, 2, 32)
+    x = jax.random.normal(jax.random.PRNGKey(6), (8, 4))
+    y = jnp.zeros((8,))
+    grads = jax.grad(model.relative_error_loss)(params, x, y)
+    total = sum(float(jnp.abs(g).sum()) for w, b in grads for g in (w, b))
+    assert total > 0.0

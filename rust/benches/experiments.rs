@@ -1,0 +1,98 @@
+//! End-to-end experiment benches — one per paper table/figure family.
+//!
+//! These time the full regeneration paths (what `habitat experiment`
+//! runs), bounding the cost of reproducing the paper's evaluation.
+
+use habitat::device::{Device, ALL_DEVICES};
+use habitat::predict::HybridPredictor;
+use habitat::tracker::OperationTracker;
+use habitat::util::bench::bench;
+
+fn main() {
+    println!("== experiment benches ==");
+    let predictor = habitat::runtime::predictor_from_artifacts("artifacts")
+        .unwrap_or_else(|e| {
+            println!("(wave-only: {e})");
+            HybridPredictor::wave_only()
+        });
+
+    // fig1: DCGAN from T4 to 5 destinations (heuristic + habitat).
+    let dcgan = habitat::models::dcgan(128);
+    let t4_trace = OperationTracker::new(Device::T4).track(&dcgan);
+    bench("fig1/dcgan_t4_to_all", || {
+        ALL_DEVICES
+            .into_iter()
+            .filter(|d| *d != Device::T4)
+            .map(|d| {
+                habitat::predict::heuristic::flops_ratio_prediction(&t4_trace, d)
+                    + predictor.predict(&t4_trace, d).run_time_ms()
+            })
+            .sum::<f64>()
+    });
+
+    // fig3 (single cell): one model × 3 batches × 30 pairs.
+    bench("fig3/resnet50_30pairs_x_3batches", || {
+        let mut total = 0.0;
+        for &batch in habitat::models::eval_batch_sizes("resnet50") {
+            let graph = habitat::models::resnet50(batch);
+            for origin in ALL_DEVICES {
+                let trace = OperationTracker::new(origin).track(&graph);
+                for dest in ALL_DEVICES {
+                    if dest != origin {
+                        total += predictor.predict(&trace, dest).run_time_ms();
+                    }
+                }
+            }
+        }
+        total
+    });
+
+    // fig6: GNMT case study (3 batches × 3 clouds).
+    bench("fig6/gnmt_case_study", || {
+        let mut total = 0.0;
+        for &batch in habitat::models::eval_batch_sizes("gnmt") {
+            let trace = OperationTracker::new(Device::P4000).track(&habitat::models::gnmt(batch));
+            for dest in [Device::P100, Device::T4, Device::V100] {
+                total += predictor.predict(&trace, dest).throughput();
+            }
+        }
+        total
+    });
+
+    // fig7: DCGAN case study (2 batches × 5 dests).
+    bench("fig7/dcgan_case_study", || {
+        let mut total = 0.0;
+        for batch in [64usize, 128] {
+            let trace =
+                OperationTracker::new(Device::Rtx2080Ti).track(&habitat::models::dcgan(batch));
+            for dest in ALL_DEVICES {
+                if dest != Device::Rtx2080Ti {
+                    total += predictor.predict(&trace, dest).run_time_ms();
+                }
+            }
+        }
+        total
+    });
+
+    // amp: Habitat∘Daydream composition.
+    let resnet = habitat::models::resnet50(32);
+    let p4000_trace = OperationTracker::new(Device::P4000).track(&resnet);
+    bench("amp/resnet50_p4000_to_2080ti", || {
+        habitat::predict::amp::predict_amp(&predictor, &p4000_trace, Device::Rtx2080Ti)
+            .run_time_ms()
+    });
+
+    // table1-scale dataset sampling (1 config × 6 GPUs per op family).
+    bench("dataset/sample_and_measure_x100", || {
+        let mut rng = habitat::util::Rng::new(7);
+        let sim = habitat::sim::Simulator::default();
+        let mut total = 0.0;
+        for _ in 0..100 {
+            for op in habitat::opgraph::MlpOp::ALL {
+                let s = habitat::dataset::sample(op, &mut rng);
+                total += habitat::dataset::measure(&s, Device::V100, &sim);
+            }
+        }
+        total
+    });
+}

@@ -1,0 +1,46 @@
+//! Benchmarks for the prediction hot path: tracking, wave scaling, and
+//! the full hybrid predictor (when artifacts are available).
+
+use habitat::device::Device;
+use habitat::predict::{HybridPredictor, MetricsPolicy};
+use habitat::tracker::OperationTracker;
+use habitat::util::bench::bench;
+
+fn main() {
+    println!("== predictor benches ==");
+    for model in habitat::models::MODEL_NAMES {
+        let graph = habitat::models::by_name(model, 32).unwrap();
+        bench(&format!("track/{model}/bs32"), || {
+            OperationTracker::new(Device::Rtx2070).track(&graph).run_time_ms()
+        });
+    }
+
+    let graph = habitat::models::resnet50(32);
+    let trace = OperationTracker::new(Device::Rtx2070).track(&graph);
+
+    let wave = HybridPredictor::wave_only();
+    bench("predict/wave_only/resnet50", || {
+        wave.predict(&trace, Device::V100).run_time_ms()
+    });
+    let warm = HybridPredictor::wave_only().with_metrics_policy(MetricsPolicy::All);
+    bench("predict/wave_only_warm_cache/resnet50", || {
+        warm.predict(&trace, Device::V100).run_time_ms()
+    });
+    let eq1 = HybridPredictor::wave_only().with_eq1(true);
+    bench("predict/wave_only_eq1/resnet50", || {
+        eq1.predict(&trace, Device::V100).run_time_ms()
+    });
+
+    match habitat::runtime::predictor_from_artifacts("artifacts") {
+        Ok(hybrid) => {
+            for model in habitat::models::MODEL_NAMES {
+                let graph = habitat::models::by_name(model, 32).unwrap();
+                let trace = OperationTracker::new(Device::Rtx2070).track(&graph);
+                bench(&format!("predict/hybrid/{model}"), || {
+                    hybrid.predict(&trace, Device::V100).run_time_ms()
+                });
+            }
+        }
+        Err(e) => println!("(skipping hybrid benches: {e})"),
+    }
+}

@@ -1,0 +1,69 @@
+//! Benchmarks for the PJRT MLP runtime: per-call latency across batch
+//! sizes (bucket padding), per-op-family models, and the dynamic
+//! batcher's coalescing under concurrency.
+//!
+//! Requires `make artifacts`; prints a note and exits otherwise.
+
+use habitat::device::Device;
+use habitat::opgraph::MlpOp;
+use habitat::predict::MlpBackend;
+use habitat::runtime::MlpService;
+use habitat::util::bench::bench;
+
+fn features_for(op: MlpOp, n: usize) -> Vec<Vec<f64>> {
+    // Plausible mid-range configs per family.
+    let row = match op {
+        MlpOp::Conv2d => vec![32.0, 256.0, 256.0, 3.0, 1.0, 1.0, 28.0],
+        MlpOp::Lstm => vec![32.0, 1024.0, 1024.0, 50.0, 1.0, 0.0, 1.0],
+        MlpOp::Bmm => vec![64.0, 50.0, 64.0, 50.0],
+        MlpOp::Linear => vec![512.0, 1024.0, 1024.0, 1.0],
+    };
+    vec![row; n]
+}
+
+fn main() {
+    println!("== runtime benches ==");
+    let handle = match MlpService::spawn("artifacts".into()) {
+        Ok(h) => h,
+        Err(e) => {
+            println!("(skipping runtime benches: {e})");
+            return;
+        }
+    };
+
+    // Bucket-ladder latency: 1 → 512 rows through the conv2d MLP.
+    for n in [1usize, 8, 32, 128, 512] {
+        let rows = features_for(MlpOp::Conv2d, n);
+        bench(&format!("mlp_predict/conv2d/rows={n}"), || {
+            handle.predict_batch(MlpOp::Conv2d, &rows, Device::V100).unwrap()
+        });
+    }
+
+    // Per-family latency at a typical per-trace row count.
+    for op in MlpOp::ALL {
+        let rows = features_for(op, 32);
+        bench(&format!("mlp_predict/{op}/rows=32"), || {
+            handle.predict_batch(op, &rows, Device::T4).unwrap()
+        });
+    }
+
+    // Dynamic batching under concurrency: 8 threads × small requests.
+    let before = handle.stats().executions.load(std::sync::atomic::Ordering::Relaxed);
+    bench("mlp_predict/conv2d/8threads_x_8rows", || {
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let h = handle.clone();
+                s.spawn(move || {
+                    h.predict_batch(MlpOp::Conv2d, &features_for(MlpOp::Conv2d, 8), Device::V100)
+                        .unwrap()
+                });
+            }
+        });
+    });
+    let after = handle.stats().executions.load(std::sync::atomic::Ordering::Relaxed);
+    let requests = handle.stats().requests.load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "(batcher coalescing over the whole run: {requests} requests → {} executions)",
+        after.max(before) // `after` includes everything
+    );
+}

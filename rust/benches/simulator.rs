@@ -1,0 +1,37 @@
+//! Benchmarks for the ground-truth substrate: lowering + simulation.
+//!
+//! These paths run inside every tracker call and every ground-truth
+//! evaluation, so they bound how fast the experiment harness can go.
+
+use habitat::device::Device;
+use habitat::lowering::{lower_graph, Precision};
+use habitat::sim::Simulator;
+use habitat::util::bench::bench;
+
+fn main() {
+    println!("== simulator benches ==");
+    let sim = Simulator::default();
+    let v100 = Device::V100.spec();
+
+    for model in habitat::models::MODEL_NAMES {
+        let graph = habitat::models::by_name(model, 32).unwrap();
+        bench(&format!("lower_graph/{model}/bs32"), || {
+            lower_graph(&graph, v100.arch, Precision::Fp32).len()
+        });
+        bench(&format!("sim_graph/{model}/bs32/v100"), || {
+            sim.graph_time_ms(v100, &graph, Precision::Fp32)
+        });
+    }
+
+    // Single-kernel timing cost (the innermost hot function).
+    let graph = habitat::models::resnet50(32);
+    let lowered = lower_graph(&graph, v100.arch, Precision::Fp32);
+    let kernels: Vec<_> = lowered.iter().flat_map(|(_, _, ks)| ks.clone()).collect();
+    println!("({} kernels in resnet50/bs32)", kernels.len());
+    bench("kernel_time_ms/resnet50_all_kernels", || {
+        kernels
+            .iter()
+            .map(|k| sim.kernel_time_ms(v100, k, Precision::Fp32))
+            .sum::<f64>()
+    });
+}

@@ -1,0 +1,181 @@
+//! Heterogeneous-cluster scheduling on top of Habitat predictions.
+//!
+//! The paper's introduction motivates Habitat with cluster scheduling:
+//! *"Determining how to schedule a job in a heterogeneous GPU cluster …
+//! will typically depend on the job's … performance on the GPU being
+//! considered [18, 61]"*. This module is that consumer: a Gavel-style
+//! [61] throughput-aware scheduler whose throughput matrix comes from
+//! Habitat predictions instead of exhaustive on-hardware profiling —
+//! each job only needs to have been profiled once, on whatever GPU the
+//! owner had.
+
+use std::collections::BTreeMap;
+
+
+use crate::device::Device;
+use crate::predict::HybridPredictor;
+use crate::tracker::Trace;
+
+/// One training job waiting for placement.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub name: String,
+    pub model: String,
+    pub batch: usize,
+    /// The GPU the job was profiled on (its owner's workstation).
+    pub origin: Device,
+}
+
+/// Cluster inventory: how many of each GPU are free.
+pub type Inventory = BTreeMap<Device, usize>;
+
+/// A placement decision.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub job: String,
+    pub device: Device,
+    /// Predicted throughput of the job on that device, samples/s.
+    pub throughput: f64,
+    /// Throughput normalized to the job's best-device throughput ∈ (0, 1].
+    pub normalized: f64,
+}
+
+/// Habitat-predicted throughput matrix: jobs × devices.
+pub struct ThroughputMatrix {
+    pub jobs: Vec<Job>,
+    pub devices: Vec<Device>,
+    /// `matrix[j][d]` = predicted samples/s for job `j` on device `d`.
+    pub matrix: Vec<Vec<f64>>,
+}
+
+impl ThroughputMatrix {
+    /// Build the matrix by tracking each job once on its origin and
+    /// predicting every candidate device.
+    pub fn build(
+        predictor: &HybridPredictor,
+        traces: &[(Job, Trace)],
+        devices: &[Device],
+    ) -> Self {
+        let mut matrix = Vec::with_capacity(traces.len());
+        for (_, trace) in traces {
+            let row: Vec<f64> = devices
+                .iter()
+                .map(|d| predictor.predict(trace, *d).throughput())
+                .collect();
+            matrix.push(row);
+        }
+        ThroughputMatrix {
+            jobs: traces.iter().map(|(j, _)| j.clone()).collect(),
+            devices: devices.to_vec(),
+            matrix,
+        }
+    }
+}
+
+/// Greedy max-normalized-throughput scheduler (the Gavel "max sum of
+/// normalized throughputs" objective, solved greedily): repeatedly place
+/// the (job, device) pair with the highest normalized throughput among
+/// unplaced jobs and free devices.
+pub fn schedule(matrix: &ThroughputMatrix, inventory: &Inventory) -> Vec<Placement> {
+    let mut free = inventory.clone();
+    let mut placed = vec![false; matrix.jobs.len()];
+    let mut placements = Vec::new();
+
+    // Per-job best throughput for normalization.
+    let best: Vec<f64> = matrix
+        .matrix
+        .iter()
+        .map(|row| row.iter().cloned().fold(f64::MIN, f64::max))
+        .collect();
+
+    loop {
+        let mut candidate: Option<(usize, usize, f64)> = None;
+        for (j, row) in matrix.matrix.iter().enumerate() {
+            if placed[j] {
+                continue;
+            }
+            for (d, tput) in row.iter().enumerate() {
+                let device = matrix.devices[d];
+                if free.get(&device).copied().unwrap_or(0) == 0 {
+                    continue;
+                }
+                let norm = tput / best[j];
+                if candidate.map_or(true, |(_, _, n)| norm > n) {
+                    candidate = Some((j, d, norm));
+                }
+            }
+        }
+        let Some((j, d, norm)) = candidate else { break };
+        let device = matrix.devices[d];
+        *free.get_mut(&device).unwrap() -= 1;
+        placed[j] = true;
+        placements.push(Placement {
+            job: matrix.jobs[j].name.clone(),
+            device,
+            throughput: matrix.matrix[j][d],
+            normalized: norm,
+        });
+    }
+    placements
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tracker::OperationTracker;
+
+    fn job(name: &str, model: &str, batch: usize) -> (Job, Trace) {
+        let j = Job {
+            name: name.into(),
+            model: model.into(),
+            batch,
+            origin: Device::Rtx2070,
+        };
+        let g = crate::models::by_name(model, batch).unwrap();
+        let t = OperationTracker::new(j.origin).track(&g);
+        (j, t)
+    }
+
+    fn toy_matrix() -> ThroughputMatrix {
+        let predictor = HybridPredictor::wave_only();
+        let traces = vec![job("a", "mlp", 64), job("b", "dcgan", 64)];
+        ThroughputMatrix::build(&predictor, &traces, &[Device::V100, Device::T4])
+    }
+
+    #[test]
+    fn schedules_all_jobs_when_capacity_allows() {
+        let m = toy_matrix();
+        let inv: Inventory = [(Device::V100, 1), (Device::T4, 1)].into();
+        let placements = schedule(&m, &inv);
+        assert_eq!(placements.len(), 2);
+        // Each device used once.
+        let mut devs: Vec<Device> = placements.iter().map(|p| p.device).collect();
+        devs.sort();
+        devs.dedup();
+        assert_eq!(devs.len(), 2);
+    }
+
+    #[test]
+    fn respects_inventory_limits() {
+        let m = toy_matrix();
+        let inv: Inventory = [(Device::T4, 1)].into();
+        let placements = schedule(&m, &inv);
+        assert_eq!(placements.len(), 1, "only one slot available");
+        assert_eq!(placements[0].device, Device::T4);
+    }
+
+    #[test]
+    fn normalized_throughput_in_unit_interval() {
+        let m = toy_matrix();
+        let inv: Inventory = [(Device::V100, 2), (Device::T4, 2)].into();
+        for p in schedule(&m, &inv) {
+            assert!(p.normalized > 0.0 && p.normalized <= 1.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn empty_inventory_places_nothing() {
+        let m = toy_matrix();
+        assert!(schedule(&m, &Inventory::new()).is_empty());
+    }
+}

@@ -1,0 +1,112 @@
+//! Blocking TCP client for the prediction service.
+//!
+//! Speaks the newline-delimited JSON protocol of [`super::service`]:
+//! requests may be pipelined; responses return in order. Used by the
+//! service integration tests and available to downstream tools (e.g. a
+//! cluster scheduler running on a different host than the predictor).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use crate::coordinator::{PredictionRequest, PredictionResponse};
+use crate::Result;
+
+/// A connected prediction-service client.
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    /// Connect to a running `habitat serve` instance.
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { writer: stream, reader })
+    }
+
+    /// Send one request and wait for its response.
+    pub fn predict(&mut self, request: &PredictionRequest) -> Result<PredictionResponse> {
+        self.send(request)?;
+        self.recv()
+    }
+
+    /// Pipeline: send without waiting.
+    pub fn send(&mut self, request: &PredictionRequest) -> Result<()> {
+        self.writer.write_all(request.to_json().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Receive the next in-order response.
+    pub fn recv(&mut self) -> Result<PredictionResponse> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "server closed the connection");
+        PredictionResponse::from_json(line.trim())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PredictionService;
+    use crate::predict::HybridPredictor;
+    use std::sync::Arc;
+
+    fn spawn_server() -> String {
+        let service = Arc::new(PredictionService::with_predictor(HybridPredictor::wave_only()));
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let service = service.clone();
+                std::thread::spawn(move || {
+                    let _ = crate::coordinator::service::handle_connection(stream.unwrap(), &service);
+                });
+            }
+        });
+        addr
+    }
+
+    fn req(model: &str, dest: &str) -> PredictionRequest {
+        PredictionRequest {
+            model: model.into(),
+            batch: 16,
+            origin: "t4".into(),
+            dest: dest.into(),
+            precision: None,
+        }
+    }
+
+    #[test]
+    fn simple_roundtrip() {
+        let addr = spawn_server();
+        let mut client = Client::connect(&addr).unwrap();
+        let resp = client.predict(&req("mlp", "v100")).unwrap();
+        assert_eq!(resp.model, "mlp");
+        assert!(resp.iter_ms > 0.0);
+    }
+
+    #[test]
+    fn pipelined_requests_come_back_in_order() {
+        let addr = spawn_server();
+        let mut client = Client::connect(&addr).unwrap();
+        for dest in ["v100", "p100", "p4000"] {
+            client.send(&req("mlp", dest)).unwrap();
+        }
+        assert_eq!(client.recv().unwrap().dest, "V100");
+        assert_eq!(client.recv().unwrap().dest, "P100");
+        assert_eq!(client.recv().unwrap().dest, "P4000");
+    }
+
+    #[test]
+    fn server_errors_surface_as_client_errors() {
+        let addr = spawn_server();
+        let mut client = Client::connect(&addr).unwrap();
+        let err = client.predict(&req("not_a_model", "v100")).unwrap_err();
+        assert!(err.to_string().contains("unknown model"), "{err}");
+    }
+}

@@ -1,0 +1,30 @@
+//! Layer-3 coordination: the prediction service.
+//!
+//! Habitat is a library in the paper; in this reproduction it is also a
+//! deployable *service*: a TCP front end (newline-delimited JSON, one
+//! thread per connection) that routes prediction requests through a
+//! shared [`PredictionService`]. The service composes:
+//!
+//! * a **trace cache** — tracking a model on the simulator is the
+//!   expensive, reusable step, so traces are memoized per
+//!   (model, batch, origin);
+//! * the **hybrid predictor**, whose kernel-varying ops funnel into the
+//!   MLP service thread ([`crate::runtime::MlpService`]), where requests
+//!   from all concurrent connections are **dynamically batched** into a
+//!   few large PJRT executions;
+//! * the **cost model**, so responses carry decision-ready metrics
+//!   (throughput, cost-normalized throughput), not just milliseconds.
+
+pub mod client;
+pub mod service;
+
+pub use client::Client;
+pub use service::{PredictionRequest, PredictionResponse, PredictionService};
+
+use crate::Result;
+
+/// Run the TCP prediction server (the `habitat serve` subcommand).
+/// Blocks forever.
+pub fn serve(addr: &str, artifacts: &str) -> Result<()> {
+    service::serve(addr, artifacts)
+}

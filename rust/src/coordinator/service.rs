@@ -1,0 +1,350 @@
+//! The prediction service and its TCP front end.
+//!
+//! Wire protocol: newline-delimited JSON, one request per line, one
+//! response per line, pipelining allowed. The server is thread-per-
+//! connection over `std::net` (the image has no async runtime); the
+//! heavy lifting — PJRT MLP execution — is centralized on the batching
+//! service thread regardless of how many connections are open, so
+//! concurrency still coalesces into few large executions.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+
+use crate::device::Device;
+use crate::lowering::Precision;
+use crate::predict::{amp, HybridPredictor};
+use crate::tracker::{OperationTracker, Trace};
+use crate::util::json::{self, Json};
+use crate::{cost, models, Result};
+
+/// One prediction request (wire format and internal API).
+#[derive(Debug, Clone)]
+pub struct PredictionRequest {
+    /// Model name (see [`crate::models::MODEL_NAMES`]).
+    pub model: String,
+    pub batch: usize,
+    /// Origin GPU short name (e.g. `"t4"`).
+    pub origin: String,
+    /// Destination GPU short name.
+    pub dest: String,
+    /// `"fp32"` (default) or `"amp"` — AMP composes Habitat with the
+    /// Daydream transformation (§6.1.2).
+    pub precision: Option<String>,
+}
+
+impl PredictionRequest {
+    /// Parse from a JSON object line.
+    pub fn from_json(line: &str) -> Result<Self> {
+        let v = json::parse(line)?;
+        Ok(PredictionRequest {
+            model: v.req_str("model")?.to_string(),
+            batch: v.req_usize("batch")?,
+            origin: v.req_str("origin")?.to_string(),
+            dest: v.req_str("dest")?.to_string(),
+            precision: v.get("precision").and_then(Json::as_str).map(str::to_string),
+        })
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut pairs = vec![
+            ("model", Json::Str(self.model.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("origin", Json::Str(self.origin.clone())),
+            ("dest", Json::Str(self.dest.clone())),
+        ];
+        if let Some(p) = &self.precision {
+            pairs.push(("precision", Json::Str(p.clone())));
+        }
+        Json::obj(pairs).dump()
+    }
+}
+
+/// The service's answer: decision-ready metrics.
+#[derive(Debug, Clone)]
+pub struct PredictionResponse {
+    pub model: String,
+    pub batch: usize,
+    pub origin: String,
+    pub dest: String,
+    /// Measured iteration time on the origin, ms.
+    pub origin_iter_ms: f64,
+    /// Predicted iteration time on the destination, ms.
+    pub iter_ms: f64,
+    /// Predicted training throughput, samples/s.
+    pub throughput: f64,
+    /// Throughput per rental dollar, if the destination is rentable.
+    pub cost_normalized_throughput: Option<f64>,
+    /// Fraction of predicted time that came from the MLP predictors.
+    pub mlp_time_fraction: f64,
+    /// Kernel-varying ops that fell back to wave scaling.
+    pub mlp_fallbacks: usize,
+}
+
+impl PredictionResponse {
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("origin", Json::Str(self.origin.clone())),
+            ("dest", Json::Str(self.dest.clone())),
+            ("origin_iter_ms", Json::Num(self.origin_iter_ms)),
+            ("iter_ms", Json::Num(self.iter_ms)),
+            ("throughput", Json::Num(self.throughput)),
+            (
+                "cost_normalized_throughput",
+                self.cost_normalized_throughput.map_or(Json::Null, Json::Num),
+            ),
+            ("mlp_time_fraction", Json::Num(self.mlp_time_fraction)),
+            ("mlp_fallbacks", Json::Num(self.mlp_fallbacks as f64)),
+        ])
+        .dump()
+    }
+
+    /// Parse a response line (used by clients/examples/tests).
+    pub fn from_json(line: &str) -> Result<Self> {
+        let v = json::parse(line)?;
+        if let Some(err) = v.get("error").and_then(Json::as_str) {
+            anyhow::bail!("server error: {err}");
+        }
+        Ok(PredictionResponse {
+            model: v.req_str("model")?.to_string(),
+            batch: v.req_usize("batch")?,
+            origin: v.req_str("origin")?.to_string(),
+            dest: v.req_str("dest")?.to_string(),
+            origin_iter_ms: v
+                .get("origin_iter_ms")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing origin_iter_ms"))?,
+            iter_ms: v
+                .get("iter_ms")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing iter_ms"))?,
+            throughput: v
+                .get("throughput")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing throughput"))?,
+            cost_normalized_throughput: v.get("cost_normalized_throughput").and_then(Json::as_f64),
+            mlp_time_fraction: v.get("mlp_time_fraction").and_then(Json::as_f64).unwrap_or(0.0),
+            mlp_fallbacks: v.get("mlp_fallbacks").and_then(Json::as_usize).unwrap_or(0),
+        })
+    }
+}
+
+fn error_json(msg: &str) -> String {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))]).dump()
+}
+
+type TraceKey = (String, usize, Device);
+
+/// Shared prediction engine: predictor + trace cache.
+pub struct PredictionService {
+    predictor: HybridPredictor,
+    traces: Mutex<HashMap<TraceKey, Arc<Trace>>>,
+}
+
+impl PredictionService {
+    /// Build with the paper's full hybrid predictor (requires artifacts).
+    pub fn new(artifacts: &str) -> Result<Self> {
+        Ok(Self::with_predictor(crate::runtime::predictor_from_artifacts(artifacts)?))
+    }
+
+    /// Build around any predictor (wave-only for tests / no artifacts).
+    pub fn with_predictor(predictor: HybridPredictor) -> Self {
+        PredictionService {
+            predictor,
+            traces: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn predictor(&self) -> &HybridPredictor {
+        &self.predictor
+    }
+
+    /// Get or build the origin trace for a request (memoized). The tracker
+    /// always measures FP32 — the paper profiles FP32 and *predicts* AMP.
+    pub fn trace_for(&self, model: &str, batch: usize, origin: Device) -> Result<Arc<Trace>> {
+        let key = (model.to_string(), batch, origin);
+        if let Some(t) = self.traces.lock().unwrap().get(&key) {
+            return Ok(t.clone());
+        }
+        let graph = models::by_name(model, batch)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
+        let trace = Arc::new(OperationTracker::new(origin).track(&graph));
+        self.traces.lock().unwrap().insert(key, trace.clone());
+        Ok(trace)
+    }
+
+    /// Handle one request synchronously.
+    pub fn handle(&self, req: &PredictionRequest) -> Result<PredictionResponse> {
+        let origin = Device::parse(&req.origin)
+            .ok_or_else(|| anyhow::anyhow!("unknown origin device {:?}", req.origin))?;
+        let dest = Device::parse(&req.dest)
+            .ok_or_else(|| anyhow::anyhow!("unknown destination device {:?}", req.dest))?;
+        let precision = match req.precision.as_deref() {
+            None | Some("fp32") => Precision::Fp32,
+            Some("amp") => Precision::Amp,
+            Some(p) => anyhow::bail!("unknown precision {p:?} (want fp32|amp)"),
+        };
+        anyhow::ensure!(req.batch > 0, "batch must be positive");
+
+        let trace = self.trace_for(&req.model, req.batch, origin)?;
+        let pred = match precision {
+            Precision::Fp32 => self.predictor.predict(&trace, dest),
+            Precision::Amp => amp::predict_amp(&self.predictor, &trace, dest),
+        };
+        let tput = pred.throughput();
+        Ok(PredictionResponse {
+            model: req.model.clone(),
+            batch: req.batch,
+            origin: origin.id().to_string(),
+            dest: dest.id().to_string(),
+            origin_iter_ms: trace.run_time_ms(),
+            iter_ms: pred.run_time_ms(),
+            throughput: tput,
+            cost_normalized_throughput: cost::cost_normalized_throughput(dest, tput),
+            mlp_time_fraction: pred.mlp_time_fraction(),
+            mlp_fallbacks: pred.mlp_fallbacks,
+        })
+    }
+}
+
+/// Serve newline-delimited JSON requests over TCP, one thread per
+/// connection (the `habitat serve` subcommand). Blocks forever.
+pub fn serve(addr: &str, artifacts: &str) -> Result<()> {
+    let service = Arc::new(PredictionService::new(artifacts)?);
+    let listener = TcpListener::bind(addr)?;
+    println!("habitat: serving predictions on {addr}");
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let service = service.clone();
+        std::thread::spawn(move || {
+            let peer = stream.peer_addr().map(|p| p.to_string()).unwrap_or_default();
+            if let Err(e) = handle_connection(stream, &service) {
+                eprintln!("habitat: connection {peer}: {e}");
+            }
+        });
+    }
+    Ok(())
+}
+
+/// Handle one connection until EOF.
+pub fn handle_connection(stream: TcpStream, service: &PredictionService) -> Result<()> {
+    let mut write = stream.try_clone()?;
+    let read = BufReader::new(stream);
+    for line in read.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match PredictionRequest::from_json(&line) {
+            Ok(req) => match service.handle(&req) {
+                Ok(resp) => resp.to_json(),
+                Err(e) => error_json(&e.to_string()),
+            },
+            Err(e) => error_json(&format!("bad request: {e}")),
+        };
+        write.write_all(reply.as_bytes())?;
+        write.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wave_service() -> PredictionService {
+        PredictionService::with_predictor(HybridPredictor::wave_only())
+    }
+
+    fn req(model: &str, batch: usize, origin: &str, dest: &str) -> PredictionRequest {
+        PredictionRequest {
+            model: model.into(),
+            batch,
+            origin: origin.into(),
+            dest: dest.into(),
+            precision: None,
+        }
+    }
+
+    #[test]
+    fn handles_basic_request() {
+        let s = wave_service();
+        let r = s.handle(&req("mlp", 32, "t4", "v100")).unwrap();
+        assert!(r.iter_ms > 0.0);
+        assert!(r.throughput > 0.0);
+        assert!(r.cost_normalized_throughput.is_some());
+        assert_eq!(r.dest, "V100");
+    }
+
+    #[test]
+    fn rejects_unknown_inputs() {
+        let s = wave_service();
+        assert!(s.handle(&req("nope", 32, "t4", "v100")).is_err());
+        assert!(s.handle(&req("mlp", 32, "a100", "v100")).is_err());
+        assert!(s.handle(&req("mlp", 0, "t4", "v100")).is_err());
+        let mut r = req("mlp", 8, "t4", "v100");
+        r.precision = Some("fp64".into());
+        assert!(s.handle(&r).is_err());
+    }
+
+    #[test]
+    fn request_response_json_roundtrip() {
+        let r = req("gnmt", 64, "p4000", "t4");
+        let parsed = PredictionRequest::from_json(&r.to_json()).unwrap();
+        assert_eq!(parsed.model, "gnmt");
+        assert_eq!(parsed.batch, 64);
+
+        let resp = wave_service().handle(&r).unwrap();
+        let parsed = PredictionResponse::from_json(&resp.to_json()).unwrap();
+        assert!((parsed.iter_ms - resp.iter_ms).abs() < 1e-9);
+        assert_eq!(
+            parsed.cost_normalized_throughput.is_some(),
+            resp.cost_normalized_throughput.is_some()
+        );
+    }
+
+    #[test]
+    fn trace_cache_hits() {
+        let s = wave_service();
+        let a = s.trace_for("mlp", 16, Device::T4).unwrap();
+        let b = s.trace_for("mlp", 16, Device::T4).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+    }
+
+    #[test]
+    fn amp_prediction_not_slower_than_fp32() {
+        let s = wave_service();
+        let fp32 = s.handle(&req("mlp", 32, "p4000", "2080ti")).unwrap();
+        let mut amp_req = req("mlp", 32, "p4000", "2080ti");
+        amp_req.precision = Some("amp".into());
+        let amp = s.handle(&amp_req).unwrap();
+        assert!(amp.iter_ms <= fp32.iter_ms);
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let service = Arc::new(wave_service());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let srv = service.clone();
+        std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            handle_connection(stream, &srv).unwrap();
+        });
+
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut write = stream.try_clone().unwrap();
+        write
+            .write_all(b"{\"model\":\"mlp\",\"batch\":16,\"origin\":\"t4\",\"dest\":\"p100\"}\nnot json\n")
+            .unwrap();
+        drop(write);
+        let mut lines = BufReader::new(stream).lines();
+        let ok = PredictionResponse::from_json(&lines.next().unwrap().unwrap()).unwrap();
+        assert!(ok.iter_ms > 0.0);
+        let err_line = lines.next().unwrap().unwrap();
+        assert!(err_line.contains("bad request"));
+    }
+}

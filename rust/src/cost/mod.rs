@@ -1,0 +1,78 @@
+//! Cost-efficiency analysis (paper §5.1 Metrics, §5.3 case studies).
+//!
+//! Habitat's end product is not a time in ms but an *informed decision*:
+//! which GPU maximizes throughput, and which maximizes throughput per
+//! dollar. This module turns predicted iteration times into those
+//! decision metrics using the rental prices of Table 2.
+
+use crate::device::Device;
+
+/// Training throughput: samples per second for a batch size and iteration
+/// time.
+pub fn throughput(batch_size: usize, iter_ms: f64) -> f64 {
+    debug_assert!(iter_ms > 0.0);
+    batch_size as f64 / (iter_ms / 1e3)
+}
+
+/// Cost-normalized throughput: samples per second per $/hr. `None` when
+/// the device is not offered for rent (paper Table 2 leaves these blank).
+pub fn cost_normalized_throughput(device: Device, tput: f64) -> Option<f64> {
+    device.spec().rental_usd_per_hr.map(|price| tput / price)
+}
+
+/// Dollars to process `samples` at a given throughput on a rented device.
+pub fn cost_to_train(device: Device, tput: f64, samples: u64) -> Option<f64> {
+    device
+        .spec()
+        .rental_usd_per_hr
+        .map(|price| samples as f64 / tput / 3600.0 * price)
+}
+
+/// Rank devices by a metric, descending; ties broken by device order.
+pub fn rank_devices<F: Fn(Device) -> f64>(devices: &[Device], metric: F) -> Vec<Device> {
+    let mut v: Vec<(Device, f64)> = devices.iter().map(|d| (*d, metric(*d))).collect();
+    v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    v.into_iter().map(|(d, _)| d).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_formula() {
+        // batch 64 at 100 ms ⇒ 640 samples/s.
+        assert!((throughput(64, 100.0) - 640.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_normalized_only_for_rentable() {
+        assert!(cost_normalized_throughput(Device::V100, 640.0).is_some());
+        assert!(cost_normalized_throughput(Device::Rtx2080Ti, 640.0).is_none());
+        let t4 = cost_normalized_throughput(Device::T4, 320.0).unwrap();
+        assert!((t4 - 320.0 / 0.35).abs() < 1e-9);
+    }
+
+    #[test]
+    fn t4_cost_efficiency_beats_v100_at_same_throughput() {
+        let t4 = cost_normalized_throughput(Device::T4, 100.0).unwrap();
+        let v100 = cost_normalized_throughput(Device::V100, 100.0).unwrap();
+        assert!(t4 > v100);
+    }
+
+    #[test]
+    fn cost_to_train_scales_with_samples() {
+        let one = cost_to_train(Device::P100, 1000.0, 1_000_000).unwrap();
+        let two = cost_to_train(Device::P100, 1000.0, 2_000_000).unwrap();
+        assert!((two / one - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_devices_descending() {
+        let ranked = rank_devices(&[Device::T4, Device::V100, Device::P100], |d| {
+            d.spec().peak_fp32_tflops
+        });
+        assert_eq!(ranked[0], Device::V100);
+        assert_eq!(ranked[2], Device::T4);
+    }
+}

@@ -1,0 +1,306 @@
+//! MLP training-data generation (paper §4.3.1–§4.3.2).
+//!
+//! The paper measures kernel-varying operations at randomly sampled input
+//! configurations on all six GPUs (same seed everywhere ⇒ same configs),
+//! then joins entries per configuration across GPUs and attaches four GPU
+//! hardware features. This module reproduces that pipeline with the
+//! simulator as the measurement substrate, writing one CSV per operation:
+//!
+//! ```text
+//! <op features...>, gpu_mem_gib, gpu_bw_gbps, gpu_sms, gpu_tflops, time_ms
+//! ```
+//!
+//! where `time_ms` is the forward + backward execution time. Feature
+//! layouts match [`crate::opgraph::Op::mlp_features`] and the GPU feature
+//! block matches [`gpu_features`] — the Python training code and the Rust
+//! PJRT runtime both rely on this exact ordering.
+
+use crate::device::{Device, ALL_DEVICES};
+use crate::lowering::{lower, Pass, Precision};
+use crate::opgraph::{MlpOp, Op, OpKind};
+use crate::sim::Simulator;
+use crate::util::csv::CsvWriter;
+use crate::util::Rng;
+use crate::Result;
+
+/// The four GPU hardware features attached to every sample (§4.3.2):
+/// memory capacity, memory bandwidth, SM count, peak FLOPS.
+pub fn gpu_features(device: Device) -> [f64; 4] {
+    let s = device.spec();
+    [
+        s.mem_gib,
+        s.achieved_mem_bw_gbps,
+        s.sms as f64,
+        s.peak_fp32_tflops,
+    ]
+}
+
+/// CSV header for an operation's dataset.
+pub fn header(op: MlpOp) -> Vec<&'static str> {
+    let mut h: Vec<&'static str> = match op {
+        MlpOp::Conv2d => vec!["batch", "in_ch", "out_ch", "kernel", "stride", "padding", "image"],
+        MlpOp::Lstm => vec!["batch", "input", "hidden", "seq", "layers", "bidir", "bias"],
+        MlpOp::Bmm => vec!["b", "l", "m", "r"],
+        MlpOp::Linear => vec!["rows", "in_features", "out_features", "bias"],
+    };
+    h.extend(["gpu_mem_gib", "gpu_bw_gbps", "gpu_sms", "gpu_tflops", "time_ms"]);
+    h
+}
+
+/// Rough per-GPU memory-feasibility check: the paper discards sampled
+/// configurations that run out of memory. 3× covers activations, grads,
+/// and optimizer/workspace.
+fn fits_in_memory(activation_elems: f64, weight_elems: f64, mem_gib: f64) -> bool {
+    (activation_elems + weight_elems) * 4.0 * 3.0 < mem_gib * 0.9 * (1u64 << 30) as f64
+}
+
+/// Sample one conv2d configuration (§4.3.1 ranges, extended: batch→128, image→320 to cover the paper's own eval workloads). Returns `None` for
+/// invalid or OOM configurations, which the caller resamples.
+pub fn sample_conv2d(rng: &mut Rng) -> Option<Op> {
+    let batch = rng.int_range(1, 128) as usize;
+    let in_ch = rng.log_int_range(3, 2048) as usize;
+    let out_ch = rng.log_int_range(16, 2048) as usize;
+    // Kernel size and stride are sampled with torchvision-informed weights
+    // (the paper selected its ranges "by surveying the convolutional
+    // neural networks included in torchvision"): 3×3 stride-1 dominates
+    // real CNNs, and it is also exactly the algorithm-selection boundary
+    // (Winograd vs implicit GEMM) the MLP must learn per architecture.
+    let kernel = *rng.choose(&[1usize, 1, 1, 3, 3, 3, 3, 5, 5, 7, 9, 11]);
+    let padding = rng.int_range(0, 3) as usize;
+    let stride = *rng.choose(&[1usize, 1, 1, 2, 2, 3, 4]);
+    let image = rng.log_int_range(1, 320) as usize;
+    let bias = rng.bool();
+    // Invalid: window larger than padded image.
+    if kernel > image + 2 * padding {
+        return None;
+    }
+    let op = Op::new(
+        "sample",
+        OpKind::Conv2d {
+            in_ch,
+            out_ch,
+            kernel,
+            stride,
+            padding,
+            bias,
+        },
+        vec![batch, in_ch, image, image],
+    );
+    let out = crate::opgraph::shape::conv_out(image, kernel, stride, padding);
+    let act = (batch * in_ch * image * image + batch * out_ch * out * out) as f64;
+    let w = (in_ch * out_ch * kernel * kernel) as f64;
+    fits_in_memory(act, w, 8.0).then_some(op)
+}
+
+/// Sample one LSTM configuration.
+pub fn sample_lstm(rng: &mut Rng) -> Option<Op> {
+    let batch = rng.int_range(1, 128) as usize;
+    let input = rng.log_int_range(1, 1280) as usize;
+    let hidden = rng.log_int_range(1, 1280) as usize;
+    let seq = rng.int_range(1, 64) as usize;
+    let layers = rng.int_range(1, 6) as usize;
+    let bidirectional = rng.bool();
+    let bias = rng.bool();
+    let op = Op::new(
+        "sample",
+        OpKind::Lstm {
+            input,
+            hidden,
+            layers,
+            seq,
+            bidirectional,
+            bias,
+        },
+        vec![seq, batch, input],
+    );
+    let dirs = if bidirectional { 2 } else { 1 };
+    let act = (seq * batch * (input + layers * hidden * dirs)) as f64;
+    let w = op.kind.parameter_count() as f64;
+    fits_in_memory(act, w, 8.0).then_some(op)
+}
+
+/// Sample one batched-matmul configuration.
+pub fn sample_bmm(rng: &mut Rng) -> Option<Op> {
+    let b = rng.log_int_range(1, 1024) as usize;
+    let l = rng.log_int_range(1, 1024) as usize;
+    let m = rng.log_int_range(1, 1024) as usize;
+    let r = rng.log_int_range(1, 1024) as usize;
+    let op = Op::new(
+        "sample",
+        OpKind::BatchedMatmul { b, l, m, r },
+        vec![b, l, m],
+    );
+    let act = (b * (l * m + m * r + l * r)) as f64;
+    fits_in_memory(act, 0.0, 8.0).then_some(op)
+}
+
+/// Sample one linear-layer configuration.
+pub fn sample_linear(rng: &mut Rng) -> Option<Op> {
+    let rows = rng.int_range(1, 4096) as usize;
+    let in_features = rng.log_int_range(1, 32_768) as usize;
+    let out_features = rng.log_int_range(1, 32_768) as usize;
+    let bias = rng.bool();
+    let op = Op::new(
+        "sample",
+        OpKind::Linear {
+            in_features,
+            out_features,
+            bias,
+        },
+        vec![rows, in_features],
+    );
+    let act = (rows * (in_features + out_features)) as f64;
+    let w = (in_features * out_features) as f64;
+    fits_in_memory(act, w, 8.0).then_some(op)
+}
+
+/// Sample a valid configuration for an op family (resampling rejects).
+pub fn sample(op: MlpOp, rng: &mut Rng) -> Op {
+    loop {
+        let candidate = match op {
+            MlpOp::Conv2d => sample_conv2d(rng),
+            MlpOp::Lstm => sample_lstm(rng),
+            MlpOp::Bmm => sample_bmm(rng),
+            MlpOp::Linear => sample_linear(rng),
+        };
+        if let Some(op) = candidate {
+            return op;
+        }
+    }
+}
+
+/// Measure one op's forward+backward time on one device (the per-GPU
+/// measurement of §4.3.1). A fresh salt per (config, device) mimics
+/// independent measurement runs.
+pub fn measure(op: &Op, device: Device, sim: &Simulator) -> f64 {
+    let spec = device.spec();
+    let fwd = lower(op, spec.arch, Precision::Fp32, Pass::Forward);
+    let bwd = lower(op, spec.arch, Precision::Fp32, Pass::Backward);
+    sim.kernels_time_ms(spec, &fwd, Precision::Fp32)
+        + sim.kernels_time_ms(spec, &bwd, Precision::Fp32)
+}
+
+/// Generate the dataset for one op family: `configs` sampled
+/// configurations × six GPUs, written to `<out_dir>/<op>.csv`.
+pub fn generate(op: MlpOp, out_dir: &str, configs: usize, seed: u64) -> Result<usize> {
+    let mut rng = Rng::new(seed ^ crate::util::rng::hash_str(op.id()));
+    let path = format!("{out_dir}/{}.csv", op.id());
+    let mut w = CsvWriter::create(&path, &header(op))?;
+    let mut rows = 0usize;
+    for i in 0..configs {
+        let sample_op = sample(op, &mut rng);
+        let (mlp_op, features) = sample_op.mlp_features().expect("sampled op is kernel-varying");
+        debug_assert_eq!(mlp_op, op);
+        // Per-config measurement salt (same across devices, like the
+        // paper's same-seed cross-GPU sampling).
+        let sim = Simulator::new(crate::sim::SimConfig {
+            salt: i as u64,
+            ..Default::default()
+        });
+        for device in ALL_DEVICES {
+            let time_ms = measure(&sample_op, device, &sim);
+            let mut row = features.clone();
+            row.extend(gpu_features(device));
+            row.push(time_ms);
+            w.row_f64(&row)?;
+            rows += 1;
+        }
+    }
+    w.finish()?;
+    Ok(rows)
+}
+
+/// Generate all four datasets (the `habitat dataset` subcommand).
+pub fn generate_all(out_dir: &str, configs: usize, seed: u64) -> Result<()> {
+    for op in MlpOp::ALL {
+        let rows = generate(op, out_dir, configs, seed)?;
+        println!(
+            "{}: {} configs × {} GPUs = {} rows → {out_dir}/{}.csv",
+            op.id(),
+            configs,
+            ALL_DEVICES.len(),
+            rows,
+            op.id()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_respect_paper_ranges() {
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let op = sample(MlpOp::Conv2d, &mut rng);
+            if let OpKind::Conv2d {
+                in_ch,
+                out_ch,
+                kernel,
+                stride,
+                padding,
+                ..
+            } = op.kind
+            {
+                assert!((3..=2048).contains(&in_ch));
+                assert!((16..=2048).contains(&out_ch));
+                assert!((1..=11).contains(&kernel));
+                assert!((1..=4).contains(&stride));
+                assert!(padding <= 3);
+                assert!(kernel <= op.input[2] + 2 * padding);
+            } else {
+                panic!("not a conv");
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..50 {
+            let x = sample(MlpOp::Bmm, &mut a);
+            let y = sample(MlpOp::Bmm, &mut b);
+            assert_eq!(format!("{:?}", x.kind), format!("{:?}", y.kind));
+        }
+    }
+
+    #[test]
+    fn measurement_positive_and_device_dependent() {
+        let mut rng = Rng::new(3);
+        let sim = Simulator::noiseless();
+        let op = sample(MlpOp::Linear, &mut rng);
+        let t4 = measure(&op, Device::T4, &sim);
+        let v100 = measure(&op, Device::V100, &sim);
+        assert!(t4 > 0.0 && v100 > 0.0);
+        assert_ne!(t4, v100);
+    }
+
+    #[test]
+    fn generate_writes_joined_rows() {
+        let dir = std::env::temp_dir().join("habitat_ds_test");
+        let dir_s = dir.to_str().unwrap();
+        let rows = generate(MlpOp::Bmm, dir_s, 10, 1).unwrap();
+        assert_eq!(rows, 60);
+        let (header_row, data) =
+            crate::util::csv::read_numeric(format!("{dir_s}/bmm.csv")).unwrap();
+        assert_eq!(header_row.len(), 4 + 4 + 1);
+        assert_eq!(data.len(), 60);
+        // Same config appears for all six GPUs consecutively.
+        for gpu_rows in data.chunks(6) {
+            for r in gpu_rows {
+                assert_eq!(r[..4], gpu_rows[0][..4]);
+                assert!(r[8] > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn header_matches_feature_count() {
+        for op in MlpOp::ALL {
+            assert_eq!(header(op).len(), op.feature_count() + 5);
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! GPU device database and execution-model parameters.
+//!
+//! This is the substrate that replaces the paper's six physical GPUs
+//! (Table 2): a datasheet-accurate specification for each device, plus the
+//! per-architecture occupancy limits the CUDA occupancy calculator needs to
+//! compute *wave sizes* (`W_i` in Eq. 1/2 of the paper).
+
+pub mod occupancy;
+pub mod specs;
+
+pub use occupancy::{blocks_per_sm, occupancy_fraction, wave_size, LaunchConfig};
+pub use specs::{Arch, Device, GpuSpec, ALL_DEVICES};

@@ -1,0 +1,170 @@
+//! CUDA thread-block occupancy calculator.
+//!
+//! Wave scaling (§3.3 of the paper) needs `W_i`, the number of thread
+//! blocks in one *wave* of execution on GPU *i*: the number of blocks that
+//! can be resident simultaneously across the chip. The paper computes it
+//! with the occupancy calculator from the CUDA Toolkit; this module
+//! reimplements that calculation from the architecture limits in
+//! [`crate::device::GpuSpec`].
+//!
+//! Blocks per SM is the minimum over four constraints:
+//! 1. the SM's hard block limit,
+//! 2. the SM's thread residency limit,
+//! 3. the register file (registers are allocated per-warp with a
+//!    granularity of 256 registers),
+//! 4. shared memory (allocated per-block with 256-byte granularity).
+
+
+use crate::device::GpuSpec;
+
+/// Kernel launch configuration — what CUPTI would report per kernel and
+/// what the occupancy calculation consumes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LaunchConfig {
+    /// Total thread blocks in the grid (`B` in Eq. 1).
+    pub grid_blocks: u64,
+    /// Threads per block.
+    pub threads_per_block: u32,
+    /// Registers per thread.
+    pub regs_per_thread: u32,
+    /// Static + dynamic shared memory per block, bytes.
+    pub smem_per_block: u32,
+}
+
+impl LaunchConfig {
+    pub fn new(grid_blocks: u64, threads_per_block: u32, regs_per_thread: u32, smem_per_block: u32) -> Self {
+        LaunchConfig {
+            grid_blocks,
+            threads_per_block,
+            regs_per_thread,
+            smem_per_block,
+        }
+    }
+
+    /// Warps per block (32 threads per warp, rounded up).
+    pub fn warps_per_block(&self) -> u32 {
+        self.threads_per_block.div_ceil(32)
+    }
+}
+
+const WARP_SIZE: u32 = 32;
+const REG_ALLOC_GRANULARITY: u32 = 256;
+const SMEM_ALLOC_GRANULARITY: u32 = 256;
+
+fn round_up(v: u32, granularity: u32) -> u32 {
+    v.div_ceil(granularity) * granularity
+}
+
+/// Maximum thread blocks of this kernel resident on one SM.
+pub fn blocks_per_sm(spec: &GpuSpec, cfg: &LaunchConfig) -> u32 {
+    debug_assert!(cfg.threads_per_block >= 1);
+
+    // 1. Hard block limit.
+    let by_blocks = spec.max_blocks_per_sm;
+
+    // 2. Thread residency.
+    let by_threads = spec.max_threads_per_sm / cfg.threads_per_block.max(1);
+
+    // 3. Register file. Registers are allocated per warp, rounded up.
+    let regs_per_warp = round_up(cfg.regs_per_thread.max(1) * WARP_SIZE, REG_ALLOC_GRANULARITY);
+    let regs_per_block = regs_per_warp * cfg.warps_per_block();
+    let by_regs = if regs_per_block == 0 {
+        by_blocks
+    } else {
+        spec.regs_per_sm / regs_per_block
+    };
+
+    // 4. Shared memory.
+    let by_smem = if cfg.smem_per_block == 0 {
+        by_blocks
+    } else {
+        spec.smem_per_sm_bytes / round_up(cfg.smem_per_block, SMEM_ALLOC_GRANULARITY)
+    };
+
+    by_blocks.min(by_threads).min(by_regs).min(by_smem).max(1)
+    // `.max(1)`: a kernel that over-subscribes a single SM still runs one
+    // block at a time (the driver would reject truly impossible launches;
+    // our lowering never produces them).
+}
+
+/// Wave size `W_i`: resident blocks across the whole chip.
+pub fn wave_size(spec: &GpuSpec, cfg: &LaunchConfig) -> u64 {
+    blocks_per_sm(spec, cfg) as u64 * spec.sms as u64
+}
+
+/// Achieved occupancy as a fraction of the SM's thread residency limit.
+/// The simulator uses this to derate memory-level parallelism for
+/// low-occupancy kernels.
+pub fn occupancy_fraction(spec: &GpuSpec, cfg: &LaunchConfig) -> f64 {
+    let resident_threads = blocks_per_sm(spec, cfg) as f64 * cfg.threads_per_block as f64;
+    (resident_threads / spec.max_threads_per_sm as f64).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+
+    fn cfg(threads: u32, regs: u32, smem: u32) -> LaunchConfig {
+        LaunchConfig::new(1024, threads, regs, smem)
+    }
+
+    #[test]
+    fn thread_limit_binds_for_light_kernels() {
+        // 256-thread, low-register kernel on Volta: 2048/256 = 8 blocks/SM.
+        let v100 = Device::V100.spec();
+        assert_eq!(blocks_per_sm(v100, &cfg(256, 32, 0)), 8);
+        // Same kernel on Turing (1024 threads/SM): 4 blocks/SM.
+        let t4 = Device::T4.spec();
+        assert_eq!(blocks_per_sm(t4, &cfg(256, 32, 0)), 4);
+    }
+
+    #[test]
+    fn register_limit_binds_for_heavy_kernels() {
+        // 256 threads × 128 regs = 32768 regs/block ⇒ 2 blocks/SM on 64k.
+        let v100 = Device::V100.spec();
+        assert_eq!(blocks_per_sm(v100, &cfg(256, 128, 0)), 2);
+    }
+
+    #[test]
+    fn smem_limit_binds() {
+        // 48 KiB smem per block on a 96 KiB SM ⇒ 2 blocks.
+        let v100 = Device::V100.spec();
+        assert_eq!(blocks_per_sm(v100, &cfg(128, 32, 48 * 1024)), 2);
+        // On a 64 KiB-SM part ⇒ 1 block.
+        let t4 = Device::T4.spec();
+        assert_eq!(blocks_per_sm(t4, &cfg(128, 32, 48 * 1024)), 1);
+    }
+
+    #[test]
+    fn block_limit_binds_for_tiny_blocks() {
+        // 32-thread featherweight blocks: Volta caps at 32 blocks/SM.
+        let v100 = Device::V100.spec();
+        assert_eq!(blocks_per_sm(v100, &cfg(32, 16, 0)), 32);
+    }
+
+    #[test]
+    fn wave_size_scales_with_sms() {
+        let c = cfg(256, 32, 0);
+        let w_v100 = wave_size(Device::V100.spec(), &c);
+        let w_p4000 = wave_size(Device::P4000.spec(), &c);
+        assert_eq!(w_v100, 8 * 80);
+        assert_eq!(w_p4000, 8 * 14);
+        assert!(w_v100 > w_p4000);
+    }
+
+    #[test]
+    fn occupancy_fraction_bounds() {
+        for d in crate::device::ALL_DEVICES {
+            let f = occupancy_fraction(d.spec(), &cfg(256, 64, 16 * 1024));
+            assert!((0.0..=1.0).contains(&f), "{d}: {f}");
+        }
+    }
+
+    #[test]
+    fn never_zero_blocks() {
+        // Pathologically heavy kernel still gets one block.
+        let t4 = Device::T4.spec();
+        assert_eq!(blocks_per_sm(t4, &cfg(1024, 255, 64 * 1024)), 1);
+    }
+}

@@ -1,0 +1,334 @@
+//! The six GPUs of the paper's evaluation (Table 2), with the hardware
+//! characteristics Habitat's models consume. All numbers come from public
+//! NVIDIA datasheets / whitepapers; rental prices are the paper's Table 2
+//! (Google Cloud us-central1, June 2021).
+
+
+/// GPU micro-architecture generation. The paper spans three.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Arch {
+    Pascal,
+    Volta,
+    Turing,
+}
+
+impl Arch {
+    /// Architectures ordered by release; used by the kernel-selection
+    /// substrate (newer arch ⇒ newer kernel library dispatch).
+    pub fn generation(self) -> u32 {
+        match self {
+            Arch::Pascal => 0,
+            Arch::Volta => 1,
+            Arch::Turing => 2,
+        }
+    }
+
+    /// Whether the architecture has tensor cores (mixed-precision MMA).
+    pub fn has_tensor_cores(self) -> bool {
+        !matches!(self, Arch::Pascal)
+    }
+}
+
+impl std::fmt::Display for Arch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// The evaluated GPUs. Naming follows the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Device {
+    P4000,
+    P100,
+    V100,
+    Rtx2070,
+    Rtx2080Ti,
+    T4,
+}
+
+/// All six devices, in the paper's Table 2 order.
+pub const ALL_DEVICES: [Device; 6] = [
+    Device::P4000,
+    Device::P100,
+    Device::V100,
+    Device::Rtx2070,
+    Device::Rtx2080Ti,
+    Device::T4,
+];
+
+/// Full hardware description of one GPU.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub device: Device,
+    pub name: &'static str,
+    pub arch: Arch,
+    /// Streaming multiprocessors.
+    pub sms: u32,
+    /// CUDA cores (FP32 lanes) across the chip.
+    pub cuda_cores: u32,
+    /// Device memory capacity, GiB.
+    pub mem_gib: f64,
+    /// Peak DRAM bandwidth, GB/s (datasheet).
+    pub peak_mem_bw_gbps: f64,
+    /// *Achieved* DRAM bandwidth, GB/s. The paper measures this once per
+    /// GPU and ships it in a config file (§3.3); we model it as a
+    /// memory-technology-dependent fraction of peak (HBM2 sustains a higher
+    /// fraction than GDDR).
+    pub achieved_mem_bw_gbps: f64,
+    /// Boost clock, MHz — the `C_i` of Eq. 1/2.
+    pub boost_clock_mhz: f64,
+    /// Peak FP32 throughput, TFLOP/s (datasheet).
+    pub peak_fp32_tflops: f64,
+    /// Peak FP16/tensor-core throughput, TFLOP/s (FP16 accumulate where
+    /// applicable). Pascal has no tensor cores: this is 2× FP32 on P100
+    /// (half-rate FP16 path) and ≈FP32 on P4000.
+    pub peak_fp16_tflops: f64,
+    /// L2 cache size, KiB — drives the simulator's DRAM-traffic reuse model.
+    pub l2_cache_kib: u32,
+    /// Occupancy limits (per SM).
+    pub max_threads_per_sm: u32,
+    pub max_blocks_per_sm: u32,
+    pub regs_per_sm: u32,
+    pub smem_per_sm_bytes: u32,
+    /// Rental cost on Google Cloud us-central1 (paper Table 2), if offered.
+    pub rental_usd_per_hr: Option<f64>,
+}
+
+impl GpuSpec {
+    /// Peak FP32 throughput in FLOP/s (not TFLOP/s).
+    pub fn peak_flops(&self) -> f64 {
+        self.peak_fp32_tflops * 1e12
+    }
+
+    /// Achieved memory bandwidth in bytes/s.
+    pub fn achieved_bw_bytes(&self) -> f64 {
+        self.achieved_mem_bw_gbps * 1e9
+    }
+
+    /// Roofline ridge point `R = P / D` in FLOPs per byte (§4.2).
+    pub fn ridge_point(&self) -> f64 {
+        self.peak_flops() / self.achieved_bw_bytes()
+    }
+}
+
+impl Device {
+    /// Look up the full hardware spec for this device.
+    pub fn spec(self) -> &'static GpuSpec {
+        match self {
+            // Quadro P4000 (GP104): 14 SMs × 128 cores, 8 GiB GDDR5.
+            Device::P4000 => &GpuSpec {
+                device: Device::P4000,
+                name: "P4000",
+                arch: Arch::Pascal,
+                sms: 14,
+                cuda_cores: 1792,
+                mem_gib: 8.0,
+                peak_mem_bw_gbps: 243.0,
+                achieved_mem_bw_gbps: 192.0, // GDDR5 ≈ 79% of peak
+                boost_clock_mhz: 1480.0,
+                peak_fp32_tflops: 5.3,
+                peak_fp16_tflops: 5.3, // GP104 fp16 is not a fast path
+                l2_cache_kib: 2048,
+                max_threads_per_sm: 2048,
+                max_blocks_per_sm: 32,
+                regs_per_sm: 65_536,
+                smem_per_sm_bytes: 96 * 1024,
+                rental_usd_per_hr: None,
+            },
+            // Tesla P100 PCIe 16 GiB (GP100): 56 SMs × 64 cores, HBM2.
+            Device::P100 => &GpuSpec {
+                device: Device::P100,
+                name: "P100",
+                arch: Arch::Pascal,
+                sms: 56,
+                cuda_cores: 3584,
+                mem_gib: 16.0,
+                peak_mem_bw_gbps: 732.0,
+                achieved_mem_bw_gbps: 578.0, // HBM2 ≈ 79% of peak
+                boost_clock_mhz: 1303.0,
+                peak_fp32_tflops: 9.3,
+                peak_fp16_tflops: 18.7, // GP100 half-precision 2× path
+                l2_cache_kib: 4096,
+                max_threads_per_sm: 2048,
+                max_blocks_per_sm: 32,
+                regs_per_sm: 65_536,
+                smem_per_sm_bytes: 64 * 1024,
+                rental_usd_per_hr: Some(1.46),
+            },
+            // Tesla V100 SXM2 16 GiB (GV100): 80 SMs × 64 cores, HBM2.
+            Device::V100 => &GpuSpec {
+                device: Device::V100,
+                name: "V100",
+                arch: Arch::Volta,
+                sms: 80,
+                cuda_cores: 5120,
+                mem_gib: 16.0,
+                peak_mem_bw_gbps: 900.0,
+                achieved_mem_bw_gbps: 790.0, // HBM2 on Volta sustains ~88%
+                boost_clock_mhz: 1530.0,
+                peak_fp32_tflops: 15.7,
+                peak_fp16_tflops: 125.0, // tensor cores
+                l2_cache_kib: 6144,
+                max_threads_per_sm: 2048,
+                max_blocks_per_sm: 32,
+                regs_per_sm: 65_536,
+                smem_per_sm_bytes: 96 * 1024,
+                rental_usd_per_hr: Some(2.48),
+            },
+            // GeForce RTX 2070 (TU106): 36 SMs × 64 cores, GDDR6.
+            Device::Rtx2070 => &GpuSpec {
+                device: Device::Rtx2070,
+                name: "RTX2070",
+                arch: Arch::Turing,
+                sms: 36,
+                cuda_cores: 2304,
+                mem_gib: 8.0,
+                peak_mem_bw_gbps: 448.0,
+                achieved_mem_bw_gbps: 362.0, // GDDR6 ≈ 81% of peak
+                boost_clock_mhz: 1620.0,
+                peak_fp32_tflops: 7.5,
+                peak_fp16_tflops: 59.7, // tensor cores
+                l2_cache_kib: 4096,
+                max_threads_per_sm: 1024, // Turing halves thread residency
+                max_blocks_per_sm: 16,
+                regs_per_sm: 65_536,
+                smem_per_sm_bytes: 64 * 1024,
+                rental_usd_per_hr: None,
+            },
+            // GeForce RTX 2080 Ti (TU102): 68 SMs × 64 cores, GDDR6.
+            Device::Rtx2080Ti => &GpuSpec {
+                device: Device::Rtx2080Ti,
+                name: "RTX2080Ti",
+                arch: Arch::Turing,
+                sms: 68,
+                cuda_cores: 4352,
+                mem_gib: 11.0,
+                peak_mem_bw_gbps: 616.0,
+                achieved_mem_bw_gbps: 499.0,
+                boost_clock_mhz: 1545.0,
+                peak_fp32_tflops: 13.4,
+                peak_fp16_tflops: 107.0, // tensor cores
+                l2_cache_kib: 5632,
+                max_threads_per_sm: 1024,
+                max_blocks_per_sm: 16,
+                regs_per_sm: 65_536,
+                smem_per_sm_bytes: 64 * 1024,
+                rental_usd_per_hr: None,
+            },
+            // Tesla T4 (TU104): 40 SMs × 64 cores, GDDR6, 70 W envelope.
+            Device::T4 => &GpuSpec {
+                device: Device::T4,
+                name: "T4",
+                arch: Arch::Turing,
+                sms: 40,
+                cuda_cores: 2560,
+                mem_gib: 16.0,
+                peak_mem_bw_gbps: 320.0,
+                achieved_mem_bw_gbps: 259.0,
+                // T4 is power-limited: the sustained clock is well below the
+                // 1590 MHz datasheet boost. We model the sustained clock.
+                boost_clock_mhz: 1350.0,
+                peak_fp32_tflops: 8.1,
+                peak_fp16_tflops: 65.0, // tensor cores
+                l2_cache_kib: 4096,
+                max_threads_per_sm: 1024,
+                max_blocks_per_sm: 16,
+                regs_per_sm: 65_536,
+                smem_per_sm_bytes: 64 * 1024,
+                rental_usd_per_hr: Some(0.35),
+            },
+        }
+    }
+
+    /// Short stable identifier (used in CSV output and the CLI).
+    pub fn id(self) -> &'static str {
+        self.spec().name
+    }
+
+    /// Parse a device from its short name (case-insensitive).
+    pub fn parse(s: &str) -> Option<Device> {
+        let s = s.to_ascii_lowercase();
+        ALL_DEVICES
+            .into_iter()
+            .find(|d| d.id().to_ascii_lowercase() == s)
+            .or(match s.as_str() {
+                "2070" => Some(Device::Rtx2070),
+                "2080ti" => Some(Device::Rtx2080Ti),
+                _ => None,
+            })
+    }
+}
+
+impl std::fmt::Display for Device {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.id())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_devices_with_unique_names() {
+        let mut names: Vec<_> = ALL_DEVICES.iter().map(|d| d.id()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 6);
+    }
+
+    #[test]
+    fn paper_table2_sm_counts() {
+        assert_eq!(Device::P4000.spec().sms, 14);
+        assert_eq!(Device::P100.spec().sms, 56);
+        assert_eq!(Device::V100.spec().sms, 80);
+        assert_eq!(Device::Rtx2070.spec().sms, 36);
+        assert_eq!(Device::Rtx2080Ti.spec().sms, 68);
+        assert_eq!(Device::T4.spec().sms, 40);
+    }
+
+    #[test]
+    fn paper_table2_memory_and_prices() {
+        assert_eq!(Device::P4000.spec().mem_gib, 8.0);
+        assert_eq!(Device::T4.spec().mem_gib, 16.0);
+        assert_eq!(Device::P100.spec().rental_usd_per_hr, Some(1.46));
+        assert_eq!(Device::V100.spec().rental_usd_per_hr, Some(2.48));
+        assert_eq!(Device::T4.spec().rental_usd_per_hr, Some(0.35));
+        assert_eq!(Device::Rtx2080Ti.spec().rental_usd_per_hr, None);
+    }
+
+    #[test]
+    fn achieved_bw_below_peak() {
+        for d in ALL_DEVICES {
+            let s = d.spec();
+            assert!(s.achieved_mem_bw_gbps < s.peak_mem_bw_gbps);
+            assert!(s.achieved_mem_bw_gbps > 0.5 * s.peak_mem_bw_gbps);
+        }
+    }
+
+    #[test]
+    fn ridge_points_plausible() {
+        // FP32 ridge points for these GPUs fall between ~15 and ~40 FLOP/B.
+        for d in ALL_DEVICES {
+            let r = d.spec().ridge_point();
+            assert!((10.0..60.0).contains(&r), "{d}: R={r}");
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip_and_aliases() {
+        for d in ALL_DEVICES {
+            assert_eq!(Device::parse(d.id()), Some(d));
+        }
+        assert_eq!(Device::parse("2080ti"), Some(Device::Rtx2080Ti));
+        assert_eq!(Device::parse("v100"), Some(Device::V100));
+        assert_eq!(Device::parse("a100"), None);
+    }
+
+    #[test]
+    fn turing_has_tensor_cores_pascal_does_not() {
+        assert!(!Arch::Pascal.has_tensor_cores());
+        assert!(Arch::Volta.has_tensor_cores());
+        assert!(Arch::Turing.has_tensor_cores());
+    }
+}

@@ -1,0 +1,69 @@
+//! Ablations the paper discusses but does not plot:
+//!
+//! * **Eq. 1 vs Eq. 2** — §3.3 argues the ⌈B/W⌉ terms can be dropped
+//!   because kernels have many waves; quantify the difference.
+//! * **Metrics policy** — §4.2's γ=1 fallback: how much accuracy do we
+//!   lose at the paper's 99.5th-percentile profiling threshold vs a warm
+//!   cache (all kernels profiled) vs no metrics at all?
+
+use crate::device::ALL_DEVICES;
+use crate::experiments::{ground_truth_ms, Ctx};
+use crate::predict::{HybridPredictor, MetricsPolicy};
+use crate::tracker::OperationTracker;
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+use crate::Result;
+
+fn sweep(predictor: &HybridPredictor) -> f64 {
+    let mut errs = Vec::new();
+    for model in crate::models::MODEL_NAMES {
+        let batch = crate::models::eval_batch_sizes(model)[1];
+        let graph = crate::models::by_name(model, batch).unwrap();
+        for origin in [crate::Device::Rtx2070, crate::Device::P100] {
+            let trace = OperationTracker::new(origin).track(&graph);
+            for dest in ALL_DEVICES {
+                if dest == origin {
+                    continue;
+                }
+                let pred = predictor.predict(&trace, dest).run_time_ms();
+                errs.push(stats::ape(pred, ground_truth_ms(model, batch, dest)));
+            }
+        }
+    }
+    stats::mean(&errs)
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n=== Ablations: Eq.1 vs Eq.2; metrics-policy sensitivity ===");
+    // Ablate on the wave-only predictor: in the hybrid configuration the
+    // MLPs absorb ~90% of predicted time, washing out any difference in
+    // the wave-scaling machinery. Wave-only isolates Eq.1-vs-Eq.2 and the
+    // γ metrics policy — plus one hybrid row as the reference point.
+    let wave = HybridPredictor::wave_only();
+    let variants: Vec<(&str, HybridPredictor)> = vec![
+        ("hybrid (reference)", ctx.predictor.clone()),
+        ("wave eq2 + percentile-99.5 (paper)", wave.clone()),
+        ("wave eq1 + percentile-99.5", wave.clone().with_eq1(true)),
+        (
+            "wave eq2 + warm cache (All)",
+            wave.clone().with_metrics_policy(MetricsPolicy::All),
+        ),
+        (
+            "wave eq2 + cold cache (None, γ=1)",
+            wave.clone().with_metrics_policy(MetricsPolicy::None),
+        ),
+        (
+            "wave eq2 + percentile-50",
+            wave.with_metrics_policy(MetricsPolicy::Percentile(50.0)),
+        ),
+    ];
+    let mut w = CsvWriter::create(ctx.csv_path("ablation"), &["variant", "avg_err_pct"])?;
+    println!("{:<38} {:>8}", "variant", "avg err");
+    for (name, predictor) in variants {
+        let err = sweep(&predictor);
+        println!("{name:<38} {:>7.1}%", err * 100.0);
+        w.row(&[name.to_string(), format!("{:.2}", err * 100.0)])?;
+    }
+    w.finish()?;
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! §6.1.2 — mixed-precision prediction (Habitat ∘ Daydream).
+//!
+//! From a P4000 FP32 trace, predict the **AMP** iteration time of
+//! ResNet-50 on the 2070 and 2080Ti; also between the 2070 and 2080Ti.
+//! Paper: the combined approach averages 16.1% error; Daydream alone
+//! (from ground-truth FP32 on the destination) averages 10.7%.
+
+use crate::device::Device;
+use crate::experiments::Ctx;
+use crate::predict::amp;
+use crate::sim::{Precision, Simulator};
+use crate::tracker::OperationTracker;
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+use crate::Result;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n=== §6.1.2: mixed-precision prediction (Habitat + Daydream) ===");
+    let pairs = [
+        (Device::P4000, Device::Rtx2070),
+        (Device::P4000, Device::Rtx2080Ti),
+        (Device::Rtx2070, Device::Rtx2080Ti),
+        (Device::Rtx2080Ti, Device::Rtx2070),
+    ];
+    let batch = 32;
+    let graph = crate::models::resnet50(batch);
+    let sim = Simulator::default();
+
+    let mut w = CsvWriter::create(
+        ctx.csv_path("amp"),
+        &["origin", "dest", "measured_amp_ms", "habitat_daydream_ms", "err_pct", "daydream_only_ms", "daydream_err_pct"],
+    )?;
+    println!(
+        "{:<9} {:<9} {:>10} {:>13} {:>6} {:>13} {:>6}",
+        "origin", "dest", "meas(amp)", "hab+daydream", "err%", "daydream-only", "err%"
+    );
+    let (mut combined, mut alone) = (Vec::new(), Vec::new());
+    for (origin, dest) in pairs {
+        // Ground truth: the simulator running the AMP iteration on dest.
+        let measured = sim.graph_time_ms(dest.spec(), &graph, Precision::Amp);
+        // Habitat + Daydream from the origin's FP32 trace.
+        let trace = OperationTracker::new(origin).track(&graph);
+        let predicted = amp::predict_amp(&ctx.predictor, &trace, dest).run_time_ms();
+        // Daydream alone, from the destination's own FP32 trace.
+        let dest_trace = OperationTracker::new(dest).track(&graph);
+        let daydream = amp::amp_time_same_device(&dest_trace);
+        let e1 = stats::ape(predicted, measured);
+        let e2 = stats::ape(daydream, measured);
+        combined.push(e1);
+        alone.push(e2);
+        println!(
+            "{:<9} {:<9} {:>8.1}ms {:>11.1}ms {:>5.1}% {:>11.1}ms {:>5.1}%",
+            origin.id(), dest.id(), measured, predicted, e1 * 100.0, daydream, e2 * 100.0
+        );
+        w.row(&[
+            origin.id().to_string(),
+            dest.id().to_string(),
+            format!("{measured:.4}"),
+            format!("{predicted:.4}"),
+            format!("{:.2}", e1 * 100.0),
+            format!("{daydream:.4}"),
+            format!("{:.2}", e2 * 100.0),
+        ])?;
+    }
+    w.finish()?;
+    println!(
+        "\ncombined avg {:.1}% (paper 16.1%) | daydream-alone avg {:.1}% (paper 10.7%)",
+        stats::mean(&combined) * 100.0,
+        stats::mean(&alone) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! §5.2.3 — prediction contribution breakdown.
+//!
+//! How much of Habitat's end-to-end prediction flows through each
+//! mechanism? Paper: wave scaling covers **95% of unique operations** but
+//! only **46% of execution time**; the MLPs cover the remaining 5% of ops
+//! and **54% of time**.
+
+use crate::device::ALL_DEVICES;
+use crate::experiments::Ctx;
+use crate::predict::PredictionMethod;
+use crate::tracker::OperationTracker;
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+use crate::Result;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n=== §5.2.3: wave scaling vs MLP contribution breakdown ===");
+    if !ctx.hybrid {
+        println!("(wave-only mode: MLP contribution is 0 by construction — build artifacts first)");
+    }
+    let mut w = CsvWriter::create(
+        ctx.csv_path("contribution"),
+        &["model", "wave_op_frac", "mlp_op_frac", "wave_time_frac", "mlp_time_frac"],
+    )?;
+    let mut op_fracs = Vec::new();
+    let mut time_fracs = Vec::new();
+    println!(
+        "{:<12} {:>10} {:>10} {:>12} {:>12}",
+        "model", "wave ops", "mlp ops", "wave time", "mlp time"
+    );
+    for model in crate::models::MODEL_NAMES {
+        let batch = crate::models::eval_batch_sizes(model)[1];
+        let graph = crate::models::by_name(model, batch).unwrap();
+        let mut model_mlp_ops = 0.0;
+        let mut model_mlp_time = 0.0;
+        let mut n = 0.0;
+        for origin in ALL_DEVICES {
+            let trace = OperationTracker::new(origin).track(&graph);
+            for dest in ALL_DEVICES {
+                if dest == origin {
+                    continue;
+                }
+                let pred = ctx.predictor.predict(&trace, dest);
+                let mlp_ops = pred
+                    .ops
+                    .iter()
+                    .filter(|o| o.method == PredictionMethod::Mlp)
+                    .count() as f64
+                    / pred.ops.len() as f64;
+                model_mlp_ops += mlp_ops;
+                model_mlp_time += pred.mlp_time_fraction();
+                n += 1.0;
+            }
+        }
+        let (op_frac, time_frac) = (model_mlp_ops / n, model_mlp_time / n);
+        op_fracs.push(op_frac);
+        time_fracs.push(time_frac);
+        println!(
+            "{model:<12} {:>9.1}% {:>9.1}% {:>11.1}% {:>11.1}%",
+            (1.0 - op_frac) * 100.0,
+            op_frac * 100.0,
+            (1.0 - time_frac) * 100.0,
+            time_frac * 100.0
+        );
+        w.row(&[
+            model.to_string(),
+            format!("{:.4}", 1.0 - op_frac),
+            format!("{op_frac:.4}"),
+            format!("{:.4}", 1.0 - time_frac),
+            format!("{time_frac:.4}"),
+        ])?;
+    }
+    w.finish()?;
+    println!(
+        "\naverage: wave {:.0}% of ops / {:.0}% of time; MLP {:.0}% of ops / {:.0}% of time  (paper: 95%/46% vs 5%/54%)",
+        (1.0 - stats::mean(&op_fracs)) * 100.0,
+        (1.0 - stats::mean(&time_fracs)) * 100.0,
+        stats::mean(&op_fracs) * 100.0,
+        stats::mean(&time_fracs) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! §6.1.1 — data-parallel scaling predictions.
+//!
+//! Habitat's single-GPU predictions composed with the ring all-reduce
+//! model: predicted scaling curves (1–8 × V100) for a compute-heavy model
+//! (ResNet-50) and a communication-heavy model (GNMT, 160M parameters),
+//! over NVLink and PCIe 3.0 — the qualitative pattern every data-parallel
+//! performance study reports (GNMT over PCIe scales poorly; ResNet over
+//! NVLink scales almost linearly).
+
+use crate::device::Device;
+use crate::experiments::Ctx;
+use crate::predict::distributed::{predict_data_parallel, DataParallelConfig, Interconnect};
+use crate::tracker::OperationTracker;
+use crate::util::csv::CsvWriter;
+use crate::Result;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n=== §6.1.1: data-parallel scaling (Habitat compute + ring all-reduce) ===");
+    let origin = Device::Rtx2070;
+    let dest = Device::V100;
+    let mut w = CsvWriter::create(
+        ctx.csv_path("dp"),
+        &["model", "interconnect", "world", "iter_ms", "exposed_comm_ms", "throughput", "efficiency"],
+    )?;
+    for (model, batch) in [("resnet50", 32usize), ("gnmt", 32)] {
+        let graph = crate::models::by_name(model, batch).unwrap();
+        let trace = OperationTracker::new(origin).track(&graph);
+        let pred = ctx.predictor.predict(&trace, dest);
+        for (ic_name, ic) in [("nvlink", Interconnect::NvLink), ("pcie3", Interconnect::Pcie3)] {
+            println!("\n{model} bs={batch}/gpu on {dest} over {ic_name}:");
+            println!(
+                "{:>6} {:>10} {:>13} {:>12} {:>11}",
+                "GPUs", "iter ms", "exposed comm", "samples/s", "efficiency"
+            );
+            for world in [1usize, 2, 4, 8] {
+                let dp = predict_data_parallel(
+                    &trace,
+                    &pred,
+                    &DataParallelConfig {
+                        world,
+                        interconnect: ic,
+                        overlap: 0.7,
+                    },
+                );
+                println!(
+                    "{world:>6} {:>10.1} {:>12.1}ms {:>12.0} {:>10.0}%",
+                    dp.iter_ms,
+                    dp.exposed_ms,
+                    dp.throughput,
+                    dp.efficiency * 100.0
+                );
+                w.row(&[
+                    model.to_string(),
+                    ic_name.to_string(),
+                    world.to_string(),
+                    format!("{:.4}", dp.iter_ms),
+                    format!("{:.4}", dp.exposed_ms),
+                    format!("{:.2}", dp.throughput),
+                    format!("{:.4}", dp.efficiency),
+                ])?;
+            }
+        }
+    }
+    w.finish()?;
+    println!("\n(expected shape: resnet/nvlink ≈ linear; gnmt/pcie3 scales worst)");
+    Ok(())
+}

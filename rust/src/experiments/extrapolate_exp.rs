@@ -1,0 +1,58 @@
+//! §6.1.3 — batch-size extrapolation.
+//!
+//! Predict ResNet-50 on a V100 at batch sizes that "don't fit" on the
+//! 2070 origin by fitting a linear model over predictions at three small
+//! batch sizes, then extrapolating — and compare against ground truth.
+
+use crate::device::Device;
+use crate::experiments::{ground_truth_ms, Ctx};
+use crate::predict::extrapolate::BatchExtrapolator;
+use crate::tracker::OperationTracker;
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+use crate::Result;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n=== §6.1.3: batch-size extrapolation (ResNet-50, 2070 → V100) ===");
+    let origin = Device::Rtx2070;
+    let dest = Device::V100;
+    let fit_batches = [8usize, 16, 24];
+    let targets = [32usize, 48, 64, 96];
+
+    // Predict the fit points with the full predictor.
+    let mut points = Vec::new();
+    for &b in &fit_batches {
+        let graph = crate::models::resnet50(b);
+        let trace = OperationTracker::new(origin).track(&graph);
+        let pred = ctx.predictor.predict(&trace, dest).run_time_ms();
+        points.push((b, pred));
+    }
+    let model = BatchExtrapolator::fit(&points);
+    println!(
+        "fitted from predictions at batches {fit_batches:?}: time ≈ {:.2} + {:.3}·batch ms",
+        model.a, model.b
+    );
+
+    let mut w = CsvWriter::create(
+        ctx.csv_path("extrapolate"),
+        &["batch", "extrapolated_ms", "measured_ms", "err_pct"],
+    )?;
+    println!("{:<8} {:>14} {:>12} {:>6}", "batch", "extrapolated", "measured", "err%");
+    let mut errs = Vec::new();
+    for &b in &targets {
+        let pred = model.predict(b);
+        let measured = ground_truth_ms("resnet50", b, dest);
+        let err = stats::ape(pred, measured);
+        errs.push(err);
+        println!("{b:<8} {:>12.1}ms {:>10.1}ms {:>5.1}%", pred, measured, err * 100.0);
+        w.row(&[
+            b.to_string(),
+            format!("{pred:.4}"),
+            format!("{measured:.4}"),
+            format!("{:.2}", err * 100.0),
+        ])?;
+    }
+    w.finish()?;
+    println!("avg extrapolation error {:.1}%", stats::mean(&errs) * 100.0);
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Fig. 1 — the peak-FLOPS heuristic goes wrong (paper §2.3).
+//!
+//! Measure DCGAN (batch 128) on the T4, predict every other GPU with the
+//! FLOPS-ratio heuristic, and compare against ground truth — then show
+//! Habitat's error on the same predictions. Paper: heuristic errors
+//! 42.5–64.9%; Habitat 10.2% average (max 21.8%).
+
+use crate::device::{Device, ALL_DEVICES};
+use crate::experiments::{ground_truth_ms, Ctx};
+use crate::predict::heuristic;
+use crate::tracker::OperationTracker;
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+use crate::Result;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n=== Fig. 1: peak-FLOPS heuristic vs Habitat (DCGAN bs=128 from T4) ===");
+    let origin = Device::T4;
+    let graph = crate::models::dcgan(128);
+    let trace = OperationTracker::new(origin).track(&graph);
+
+    let mut w = CsvWriter::create(
+        ctx.csv_path("fig1"),
+        &["dest", "measured_ms", "heuristic_ms", "heuristic_err_pct", "habitat_ms", "habitat_err_pct"],
+    )?;
+    println!(
+        "{:<10} {:>11} {:>12} {:>9} {:>11} {:>9}",
+        "dest", "measured", "heuristic", "err%", "habitat", "err%"
+    );
+    let mut heur_errs = Vec::new();
+    let mut hab_errs = Vec::new();
+    for dest in ALL_DEVICES {
+        if dest == origin {
+            continue;
+        }
+        let measured = ground_truth_ms("dcgan", 128, dest);
+        let heur = heuristic::flops_ratio_prediction(&trace, dest);
+        let hab = ctx.predictor.predict(&trace, dest).run_time_ms();
+        let he = stats::ape(heur, measured);
+        let ha = stats::ape(hab, measured);
+        heur_errs.push(he);
+        hab_errs.push(ha);
+        println!(
+            "{:<10} {:>9.1}ms {:>10.1}ms {:>8.1}% {:>9.1}ms {:>8.1}%",
+            dest.id(),
+            measured,
+            heur,
+            he * 100.0,
+            hab,
+            ha * 100.0
+        );
+        w.row(&[
+            dest.id().to_string(),
+            format!("{measured:.4}"),
+            format!("{heur:.4}"),
+            format!("{:.2}", he * 100.0),
+            format!("{hab:.4}"),
+            format!("{:.2}", ha * 100.0),
+        ])?;
+    }
+    w.finish()?;
+    println!(
+        "heuristic: avg {:.1}% / max {:.1}%   habitat: avg {:.1}% / max {:.1}%   (paper: ≥42.5%/64.9% vs 10.2%/21.8%)",
+        stats::mean(&heur_errs) * 100.0,
+        stats::max(&heur_errs) * 100.0,
+        stats::mean(&hab_errs) * 100.0,
+        stats::max(&hab_errs) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Fig. 3 — end-to-end iteration-time predictions (paper §5.2.1).
+//!
+//! All five models × three batch sizes × all 30 (origin, destination)
+//! pairs. For each (model, batch, destination) the paper plots the
+//! measured time and the prediction averaged over the five origins, with
+//! the average error on top. Paper headline: 11.8% average error overall;
+//! per-model 13.4% / 9.5% / 12.6% / 11.2% / 12.3%.
+
+use std::collections::BTreeMap;
+
+use crate::device::ALL_DEVICES;
+use crate::experiments::{ground_truth_ms, Ctx};
+use crate::tracker::OperationTracker;
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+use crate::Result;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n=== Fig. 3: end-to-end predictions (5 models × 3 batch sizes × 30 GPU pairs) ===");
+    let mut w = CsvWriter::create(
+        ctx.csv_path("fig3"),
+        &["model", "batch", "origin", "dest", "measured_ms", "predicted_ms", "err_pct"],
+    )?;
+
+    let mut per_model: BTreeMap<&str, Vec<f64>> = Default::default();
+    let mut all_errs = Vec::new();
+
+    for model in crate::models::MODEL_NAMES {
+        for &batch in crate::models::eval_batch_sizes(model) {
+            let graph = crate::models::by_name(model, batch).unwrap();
+            // Track once per origin, reuse for all destinations.
+            let traces: Vec<_> = ALL_DEVICES
+                .into_iter()
+                .map(|o| (o, OperationTracker::new(o).track(&graph)))
+                .collect();
+            for dest in ALL_DEVICES {
+                let measured = ground_truth_ms(model, batch, dest);
+                let mut dest_preds = Vec::new();
+                for (origin, trace) in &traces {
+                    if *origin == dest {
+                        continue;
+                    }
+                    let pred = ctx.predictor.predict(trace, dest).run_time_ms();
+                    let err = stats::ape(pred, measured);
+                    dest_preds.push(pred);
+                    all_errs.push(err);
+                    per_model.entry(model).or_default().push(err);
+                    w.row(&[
+                        model.to_string(),
+                        batch.to_string(),
+                        origin.id().to_string(),
+                        dest.id().to_string(),
+                        format!("{measured:.4}"),
+                        format!("{pred:.4}"),
+                        format!("{:.2}", err * 100.0),
+                    ])?;
+                }
+                let avg_pred = stats::mean(&dest_preds);
+                println!(
+                    "{model:<12} bs={batch:<3} → {:<10} measured {:>9.1} ms | avg-pred {:>9.1} ms | err {:>5.1}%",
+                    dest.id(),
+                    measured,
+                    avg_pred,
+                    stats::ape(avg_pred, measured) * 100.0
+                );
+            }
+        }
+    }
+    w.finish()?;
+
+    println!("\nper-model average error (paper: resnet 13.4%, inception 9.5%, transformer 12.6%, gnmt 11.2%, dcgan 12.3%):");
+    for (model, errs) in &per_model {
+        println!("  {model:<12} {:>5.1}%  (n={})", stats::mean(errs) * 100.0, errs.len());
+    }
+    println!(
+        "OVERALL average error: {:.1}%  (paper: 11.8%)  [{} predictions, {}]",
+        stats::mean(&all_errs) * 100.0,
+        all_errs.len(),
+        if ctx.hybrid { "hybrid" } else { "wave-only" }
+    );
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Fig. 4 — per-operation prediction-error breakdown with importance
+//! (paper §5.2.2).
+//!
+//! For every op *type*, averaged across all models and all 30 GPU pairs:
+//! the prediction error of that op's time, annotated with the op's
+//! importance (share of iteration time). Paper: MLP ops average 18.0%
+//! error; wave-scaled ops average 29.8%, but high-error wave-scaled ops
+//! (`__add__`, `scatter`) have ≤0.3% importance.
+
+use std::collections::BTreeMap;
+
+use crate::device::ALL_DEVICES;
+use crate::experiments::Ctx;
+use crate::sim::Simulator;
+use crate::tracker::OperationTracker;
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+use crate::Result;
+
+#[derive(Default)]
+struct OpAgg {
+    errs: Vec<f64>,
+    time_ms: f64,
+    mlp: bool,
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n=== Fig. 4: per-op error breakdown (importance on top) ===");
+    let sim = Simulator::default();
+    let mut agg: BTreeMap<String, OpAgg> = Default::default();
+    let mut total_time = 0.0;
+
+    for model in crate::models::MODEL_NAMES {
+        let batch = crate::models::eval_batch_sizes(model)[1];
+        let graph = crate::models::by_name(model, batch).unwrap();
+        let traces: Vec<_> = ALL_DEVICES
+            .into_iter()
+            .map(|o| (o, OperationTracker::new(o).track(&graph)))
+            .collect();
+        for dest in ALL_DEVICES {
+            // Per-op ground truth on the destination.
+            let dest_trace = OperationTracker::new(dest)
+                .with_simulator(sim.clone())
+                .track(&graph);
+            for (origin, trace) in &traces {
+                if *origin == dest {
+                    continue;
+                }
+                let pred = ctx.predictor.predict(trace, dest);
+                for (p, t) in pred.ops.iter().zip(&dest_trace.ops) {
+                    let measured = t.total_ms();
+                    if measured <= 0.0 {
+                        continue;
+                    }
+                    let e = agg.entry(p.short_name.clone()).or_default();
+                    e.errs.push(stats::ape(p.time_ms, measured));
+                    e.time_ms += measured;
+                    e.mlp |= p.method == crate::predict::PredictionMethod::Mlp;
+                    total_time += measured;
+                }
+            }
+        }
+    }
+
+    let mut rows: Vec<(String, f64, f64, bool)> = agg
+        .into_iter()
+        .map(|(name, a)| (name, stats::mean(&a.errs), a.time_ms / total_time, a.mlp))
+        .collect();
+    rows.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+
+    let mut w = CsvWriter::create(
+        ctx.csv_path("fig4"),
+        &["op", "method", "avg_err_pct", "importance_pct"],
+    )?;
+    println!("{:<20} {:>8} {:>10} {:>12}", "op", "method", "err%", "importance%");
+    let (mut mlp_errs, mut wave_errs) = (Vec::new(), Vec::new());
+    for (name, err, importance, mlp) in &rows {
+        if *importance >= 0.001 {
+            println!(
+                "{name:<20} {:>8} {:>9.1}% {:>11.2}%",
+                if *mlp { "mlp" } else { "wave" },
+                err * 100.0,
+                importance * 100.0
+            );
+        }
+        if *mlp {
+            mlp_errs.push(*err);
+        } else {
+            wave_errs.push(*err);
+        }
+        w.row(&[
+            name.clone(),
+            if *mlp { "mlp" } else { "wave" }.into(),
+            format!("{:.2}", err * 100.0),
+            format!("{:.3}", importance * 100.0),
+        ])?;
+    }
+    w.finish()?;
+    println!(
+        "MLP-op avg error {:.1}% (paper 18.0%) | wave-scaled avg error {:.1}% (paper 29.8%)",
+        stats::mean(&mlp_errs) * 100.0,
+        stats::mean(&wave_errs) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Fig. 6 — case study 1: should I rent a cloud GPU? (paper §5.3.1)
+//!
+//! A user with a P4000 workstation considers renting a P100, T4, or V100
+//! to train GNMT. Fig. 6a: predicted training throughput normalized to
+//! the P4000. Fig. 6b: predicted cost-normalized throughput. The paper's
+//! finding: the V100 is fastest (up to 4.0×), but the **T4** has the best
+//! cost-normalized throughput at every batch size — and Habitat predicts
+//! the correct *ordering* everywhere (avg error 10.7%).
+
+use crate::device::Device;
+use crate::experiments::{ground_truth_ms, Ctx};
+use crate::tracker::OperationTracker;
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+use crate::{cost, Result};
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n=== Fig. 6: case study 1 — GNMT from a P4000, rent P100/T4/V100? ===");
+    let origin = Device::P4000;
+    let clouds = [Device::P100, Device::T4, Device::V100];
+    let batches = crate::models::eval_batch_sizes("gnmt");
+
+    let mut w = CsvWriter::create(
+        ctx.csv_path("fig6"),
+        &[
+            "batch", "dest", "pred_ms", "measured_ms", "err_pct",
+            "pred_speedup_vs_p4000", "measured_speedup", "pred_cost_norm_tput", "measured_cost_norm_tput",
+        ],
+    )?;
+
+    let mut errs = Vec::new();
+    for &batch in batches {
+        let graph = crate::models::gnmt(batch);
+        let trace = OperationTracker::new(origin).track(&graph);
+        let base_measured = ground_truth_ms("gnmt", batch, origin);
+        println!("\nbatch {batch}:  (P4000 measured {base_measured:.1} ms)");
+        println!(
+            "{:<8} {:>9} {:>9} {:>6} {:>11} {:>11} {:>14} {:>14}",
+            "dest", "pred", "meas", "err%", "pred-spdup", "meas-spdup", "pred-$/tput", "meas-$/tput"
+        );
+
+        let mut pred_cost_rank: Vec<(Device, f64)> = Vec::new();
+        let mut meas_cost_rank: Vec<(Device, f64)> = Vec::new();
+        for dest in clouds {
+            let pred = ctx.predictor.predict(&trace, dest);
+            let measured = ground_truth_ms("gnmt", batch, dest);
+            let err = stats::ape(pred.run_time_ms(), measured);
+            errs.push(err);
+            let pred_speedup = base_measured / pred.run_time_ms();
+            let meas_speedup = base_measured / measured;
+            let pred_cnt = cost::cost_normalized_throughput(dest, pred.throughput()).unwrap();
+            let meas_tput = cost::throughput(batch, measured);
+            let meas_cnt = cost::cost_normalized_throughput(dest, meas_tput).unwrap();
+            pred_cost_rank.push((dest, pred_cnt));
+            meas_cost_rank.push((dest, meas_cnt));
+            println!(
+                "{:<8} {:>7.1}ms {:>7.1}ms {:>5.1}% {:>10.2}× {:>10.2}× {:>14.1} {:>14.1}",
+                dest.id(), pred.run_time_ms(), measured, err * 100.0,
+                pred_speedup, meas_speedup, pred_cnt, meas_cnt
+            );
+            w.row(&[
+                batch.to_string(),
+                dest.id().to_string(),
+                format!("{:.4}", pred.run_time_ms()),
+                format!("{measured:.4}"),
+                format!("{:.2}", err * 100.0),
+                format!("{pred_speedup:.4}"),
+                format!("{meas_speedup:.4}"),
+                format!("{pred_cnt:.2}"),
+                format!("{meas_cnt:.2}"),
+            ])?;
+        }
+        let best = |v: &[(Device, f64)]| {
+            v.iter().max_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap().0
+        };
+        let (pb, mb) = (best(&pred_cost_rank), best(&meas_cost_rank));
+        println!(
+            "  best cost-normalized: predicted {} / measured {}  → {}",
+            pb.id(),
+            mb.id(),
+            if pb == mb { "CORRECT decision" } else { "WRONG decision" }
+        );
+    }
+    w.finish()?;
+    println!(
+        "\navg prediction error {:.1}% (paper: 10.7%); paper's finding: T4 best cost-normalized at all batch sizes",
+        stats::mean(&errs) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Fig. 7 — case study 2: is the V100 always better? (paper §5.3.2)
+//!
+//! A user with a 2080Ti considers other GPUs for DCGAN (batch 64 and
+//! 128). The paper's finding: the V100 offers only ~1.1× over the 2080Ti
+//! and nothing else helps at all — DCGAN is too computationally light to
+//! exploit a bigger GPU. Habitat predicts this correctly (avg error 7.7%).
+
+use crate::device::{Device, ALL_DEVICES};
+use crate::experiments::{ground_truth_ms, Ctx};
+use crate::tracker::OperationTracker;
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+use crate::Result;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n=== Fig. 7: case study 2 — DCGAN from a 2080Ti: is the V100 worth it? ===");
+    let origin = Device::Rtx2080Ti;
+    let mut w = CsvWriter::create(
+        ctx.csv_path("fig7"),
+        &["batch", "dest", "pred_tput_norm", "measured_tput_norm", "err_pct"],
+    )?;
+
+    let mut errs = Vec::new();
+    for batch in [64usize, 128] {
+        let graph = crate::models::dcgan(batch);
+        let trace = OperationTracker::new(origin).track(&graph);
+        let base = ground_truth_ms("dcgan", batch, origin);
+        println!("\nbatch {batch}:  (2080Ti measured {base:.1} ms)");
+        println!("{:<10} {:>16} {:>16} {:>6}", "dest", "pred tput (norm)", "meas tput (norm)", "err%");
+        for dest in ALL_DEVICES {
+            if dest == origin {
+                continue;
+            }
+            let pred = ctx.predictor.predict(&trace, dest);
+            let measured = ground_truth_ms("dcgan", batch, dest);
+            // Throughput normalized to the 2080Ti's measured throughput:
+            // ratios of iteration times (same batch size).
+            let pred_norm = base / pred.run_time_ms();
+            let meas_norm = base / measured;
+            let err = stats::ape(pred.run_time_ms(), measured);
+            errs.push(err);
+            println!(
+                "{:<10} {:>15.2}× {:>15.2}× {:>5.1}%",
+                dest.id(), pred_norm, meas_norm, err * 100.0
+            );
+            w.row(&[
+                batch.to_string(),
+                dest.id().to_string(),
+                format!("{pred_norm:.4}"),
+                format!("{meas_norm:.4}"),
+                format!("{:.2}", err * 100.0),
+            ])?;
+        }
+        let v100_meas = base / ground_truth_ms("dcgan", batch, Device::V100);
+        println!(
+            "  V100 measured speedup {v100_meas:.2}× — {}",
+            if v100_meas < 1.35 {
+                "paper's finding holds: not significantly better than the 2080Ti"
+            } else {
+                "NOTE: differs from the paper's finding"
+            }
+        );
+    }
+    w.finish()?;
+    println!("\navg prediction error {:.1}% (paper: 7.7%)", stats::mean(&errs) * 100.0);
+    Ok(())
+}

@@ -1,0 +1,132 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§2.3, §5, §6.1) against the simulator ground truth.
+//!
+//! | id             | Paper artifact                                      |
+//! |----------------|-----------------------------------------------------|
+//! | `fig1`         | Fig. 1 — peak-FLOPS heuristic vs Habitat, DCGAN/T4  |
+//! | `fig3`         | Fig. 3 — end-to-end predictions, 30 GPU pairs       |
+//! | `fig4`         | Fig. 4 — per-op error breakdown with importance     |
+//! | `table1`       | Table 1 — MLP dataset summary                       |
+//! | `contribution` | §5.2.3 — wave-scaling vs MLP contribution           |
+//! | `fig6`         | Fig. 6 — case study 1 (GNMT, rent a cloud GPU?)     |
+//! | `fig7`         | Fig. 7 — case study 2 (DCGAN, is the V100 better?)  |
+//! | `amp`          | §6.1.2 — mixed-precision composition with Daydream  |
+//! | `extrapolate`  | §6.1.3 — batch-size extrapolation                   |
+//! | `ablation`     | (extra) Eq. 1 vs Eq. 2, metrics-policy sensitivity  |
+//! | `dp`           | §6.1.1 — data-parallel scaling composition          |
+//! | `scheduler`    | (extra) value of predictions to a Gavel scheduler   |
+//! | `all`          | everything above                                    |
+//!
+//! Each experiment prints a paper-style table to stdout and writes a CSV
+//! under the output directory; EXPERIMENTS.md records paper-vs-measured.
+
+mod ablation;
+mod amp_exp;
+mod contribution;
+mod dp;
+mod extrapolate_exp;
+mod fig1;
+mod fig3;
+mod fig4;
+mod fig6;
+mod fig7;
+mod scheduler;
+mod table1;
+
+use crate::predict::HybridPredictor;
+use crate::Result;
+
+/// Shared context passed to every experiment.
+pub struct Ctx {
+    pub predictor: HybridPredictor,
+    pub out_dir: String,
+    /// Whether the MLP artifacts were available (experiments note this).
+    pub hybrid: bool,
+}
+
+impl Ctx {
+    fn new(out_dir: &str, artifacts: &str) -> Self {
+        let (predictor, hybrid) = match crate::runtime::predictor_from_artifacts(artifacts) {
+            Ok(p) => (p, true),
+            Err(e) => {
+                eprintln!(
+                    "note: MLP artifacts unavailable ({e}); running with wave scaling only.\n\
+                     Run `make artifacts` for the paper's full hybrid predictor."
+                );
+                (HybridPredictor::wave_only(), false)
+            }
+        };
+        std::fs::create_dir_all(out_dir).ok();
+        Ctx {
+            predictor,
+            out_dir: out_dir.to_string(),
+            hybrid,
+        }
+    }
+
+    pub fn csv_path(&self, name: &str) -> String {
+        format!("{}/{name}.csv", self.out_dir)
+    }
+}
+
+/// Ground truth: simulate the model directly on the destination GPU —
+/// the stand-in for the paper's "measured" bars.
+pub fn ground_truth_ms(model: &str, batch: usize, dest: crate::Device) -> f64 {
+    let graph = crate::models::by_name(model, batch).expect("known model");
+    crate::sim::Simulator::default().graph_time_ms(dest.spec(), &graph, crate::Precision::Fp32)
+}
+
+/// Run one experiment (or `all`).
+pub fn run(id: &str, out_dir: &str, artifacts: &str) -> Result<()> {
+    let ctx = Ctx::new(out_dir, artifacts);
+    match id {
+        "fig1" => fig1::run(&ctx)?,
+        "fig3" => fig3::run(&ctx)?,
+        "fig4" => fig4::run(&ctx)?,
+        "table1" => table1::run(&ctx)?,
+        "contribution" => contribution::run(&ctx)?,
+        "fig6" => fig6::run(&ctx)?,
+        "fig7" => fig7::run(&ctx)?,
+        "amp" => amp_exp::run(&ctx)?,
+        "extrapolate" => extrapolate_exp::run(&ctx)?,
+        "ablation" => ablation::run(&ctx)?,
+        "dp" => dp::run(&ctx)?,
+        "scheduler" => scheduler::run(&ctx)?,
+        "all" => {
+            fig1::run(&ctx)?;
+            fig3::run(&ctx)?;
+            fig4::run(&ctx)?;
+            table1::run(&ctx)?;
+            contribution::run(&ctx)?;
+            fig6::run(&ctx)?;
+            fig7::run(&ctx)?;
+            amp_exp::run(&ctx)?;
+            extrapolate_exp::run(&ctx)?;
+            ablation::run(&ctx)?;
+            dp::run(&ctx)?;
+            scheduler::run(&ctx)?;
+        }
+        other => anyhow::bail!(
+            "unknown experiment {other:?}; want fig1|fig3|fig4|table1|contribution|fig6|fig7|amp|extrapolate|ablation|dp|scheduler|all"
+        ),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn ground_truth_positive_for_all_models() {
+        for model in crate::models::MODEL_NAMES {
+            let ms = super::ground_truth_ms(model, 16, crate::Device::V100);
+            assert!(ms > 0.0, "{model}");
+        }
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        let dir = std::env::temp_dir().join("habitat_exp_test");
+        let r = super::run("fig99", dir.to_str().unwrap(), "/nonexistent");
+        assert!(r.is_err());
+    }
+}

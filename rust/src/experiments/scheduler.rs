@@ -1,0 +1,145 @@
+//! Heterogeneous-cluster scheduling value (intro use-case 3).
+//!
+//! Quantifies what Habitat's predictions buy a Gavel-style scheduler: a
+//! pool of jobs (each profiled only on its owner's workstation GPU) is
+//! placed onto a heterogeneous cluster under three policies, and the
+//! achieved aggregate (ground-truth) throughput is compared:
+//!
+//! * `habitat`     — greedy max-normalized-throughput on *predicted* rates,
+//! * `round-robin` — device-agnostic placement,
+//! * `worst-case`  — adversarial (minimizes the objective), as a bound.
+//!
+//! The interesting number is how close habitat-informed placement gets to
+//! the oracle (same greedy policy on ground-truth rates).
+
+use crate::cluster::{schedule, Inventory, Job, ThroughputMatrix};
+use crate::device::Device;
+use crate::experiments::Ctx;
+use crate::tracker::{OperationTracker, Trace};
+use crate::util::csv::CsvWriter;
+use crate::Result;
+
+fn job_pool() -> Vec<(Job, Trace)> {
+    let specs = [
+        ("a/resnet50", "resnet50", 64, Device::Rtx2070),
+        ("b/gnmt", "gnmt", 32, Device::P4000),
+        ("c/transformer", "transformer", 64, Device::Rtx2080Ti),
+        ("d/dcgan", "dcgan", 128, Device::Rtx2070),
+        ("e/inception3", "inception3", 32, Device::P4000),
+        ("f/vgg16", "vgg16", 32, Device::Rtx2080Ti),
+        ("g/bert_base", "bert_base", 16, Device::Rtx2070),
+        ("h/resnet50", "resnet50", 32, Device::P4000),
+    ];
+    specs
+        .into_iter()
+        .map(|(name, model, batch, origin)| {
+            let job = Job {
+                name: name.into(),
+                model: model.into(),
+                batch,
+                origin,
+            };
+            let trace =
+                OperationTracker::new(origin).track(&crate::models::by_name(model, batch).unwrap());
+            (job, trace)
+        })
+        .collect()
+}
+
+/// Ground-truth throughput of a job on a device.
+fn truth_tput(job: &Job, device: Device) -> f64 {
+    let ms = crate::experiments::ground_truth_ms(&job.model, job.batch, device);
+    crate::cost::throughput(job.batch, ms)
+}
+
+/// Objective: Σ over placed jobs of (ground-truth throughput on the
+/// assigned device / job's best ground-truth throughput in the cluster).
+fn objective(placements: &[(usize, Device)], jobs: &[Job], devices: &[Device]) -> f64 {
+    placements
+        .iter()
+        .map(|(j, d)| {
+            let best = devices
+                .iter()
+                .map(|dev| truth_tput(&jobs[*j], *dev))
+                .fold(f64::MIN, f64::max);
+            truth_tput(&jobs[*j], *d) / best
+        })
+        .sum()
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n=== Scheduler value: habitat-informed vs baselines (8 jobs, 2×V100 + 2×P100 + 2×T4 + 2×2080Ti) ===");
+    let pool = job_pool();
+    let jobs: Vec<Job> = pool.iter().map(|(j, _)| j.clone()).collect();
+    let devices = [Device::V100, Device::P100, Device::T4, Device::Rtx2080Ti];
+    let inventory: Inventory = devices.iter().map(|d| (*d, 2usize)).collect();
+
+    // habitat policy: greedy on *predicted* rates.
+    let predicted = ThroughputMatrix::build(&ctx.predictor, &pool, &devices);
+    let habitat_placement: Vec<(usize, Device)> = schedule(&predicted, &inventory)
+        .into_iter()
+        .map(|p| {
+            let j = jobs.iter().position(|job| job.name == p.job).unwrap();
+            (j, p.device)
+        })
+        .collect();
+
+    // oracle policy: same greedy, on ground-truth rates.
+    let oracle_matrix = ThroughputMatrix {
+        jobs: jobs.clone(),
+        devices: devices.to_vec(),
+        matrix: jobs
+            .iter()
+            .map(|j| devices.iter().map(|d| truth_tput(j, *d)).collect())
+            .collect(),
+    };
+    let oracle_placement: Vec<(usize, Device)> = schedule(&oracle_matrix, &inventory)
+        .into_iter()
+        .map(|p| {
+            let j = jobs.iter().position(|job| job.name == p.job).unwrap();
+            (j, p.device)
+        })
+        .collect();
+
+    // round-robin: jobs in order, devices cycled.
+    let rr_placement: Vec<(usize, Device)> = (0..jobs.len())
+        .map(|j| (j, devices[j % devices.len()]))
+        .collect();
+
+    // worst-case: greedy on *negated* truth (adversarial bound).
+    let worst_matrix = ThroughputMatrix {
+        jobs: jobs.clone(),
+        devices: devices.to_vec(),
+        matrix: jobs
+            .iter()
+            .map(|j| devices.iter().map(|d| 1.0 / truth_tput(j, *d)).collect())
+            .collect(),
+    };
+    let worst_placement: Vec<(usize, Device)> = schedule(&worst_matrix, &inventory)
+        .into_iter()
+        .map(|p| {
+            let j = jobs.iter().position(|job| job.name == p.job).unwrap();
+            (j, p.device)
+        })
+        .collect();
+
+    let mut w = CsvWriter::create(ctx.csv_path("scheduler"), &["policy", "objective", "pct_of_oracle"])?;
+    let oracle_obj = objective(&oracle_placement, &jobs, &devices);
+    println!("{:<24} {:>10} {:>12}", "policy", "objective", "% of oracle");
+    for (name, placement) in [
+        ("oracle (ground truth)", &oracle_placement),
+        ("habitat (predicted)", &habitat_placement),
+        ("round-robin", &rr_placement),
+        ("worst-case", &worst_placement),
+    ] {
+        let obj = objective(placement, &jobs, &devices);
+        println!("{name:<24} {obj:>10.3} {:>11.1}%", obj / oracle_obj * 100.0);
+        w.row(&[
+            name.to_string(),
+            format!("{obj:.4}"),
+            format!("{:.2}", obj / oracle_obj * 100.0),
+        ])?;
+    }
+    w.finish()?;
+    Ok(())
+}

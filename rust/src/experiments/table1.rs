@@ -1,0 +1,62 @@
+//! Table 1 — MLP dataset summary (paper §4.3.2).
+//!
+//! Prints the feature counts and the dataset sizes actually generated
+//! (from `data/*.csv` if present) next to the paper's numbers. The paper
+//! sampled ~100k configurations per op on six physical GPUs; our default
+//! is scaled down (see DESIGN.md §1) but the schema is identical.
+
+use crate::experiments::Ctx;
+use crate::opgraph::MlpOp;
+use crate::util::csv::CsvWriter;
+use crate::Result;
+
+/// Paper Table 1 dataset sizes (configurations, ×6 GPUs).
+fn paper_size(op: MlpOp) -> usize {
+    match op {
+        MlpOp::Conv2d => 91_138,
+        MlpOp::Lstm => 124_176,
+        MlpOp::Bmm => 131_022,
+        MlpOp::Linear => 155_596,
+    }
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n=== Table 1: MLP dataset summary ===");
+    println!(
+        "{:<26} {:>10} {:>16} {:>16}",
+        "Operation", "Features", "Paper size", "Ours (rows/6)"
+    );
+    let mut w = CsvWriter::create(
+        ctx.csv_path("table1"),
+        &["op", "features", "paper_configs", "our_configs"],
+    )?;
+    for op in MlpOp::ALL {
+        let ours = match crate::util::csv::read_numeric(format!("data/{}.csv", op.id())) {
+            Ok((_, rows)) => rows.len() / 6,
+            Err(_) => 0,
+        };
+        println!(
+            "{:<26} {:>7} + 4 {:>12} × 6 {:>12} × 6",
+            match op {
+                MlpOp::Conv2d => "2D Convolution",
+                MlpOp::Lstm => "LSTM",
+                MlpOp::Bmm => "Batched Matrix Multiply",
+                MlpOp::Linear => "Linear Layer",
+            },
+            op.feature_count(),
+            paper_size(op),
+            ours
+        );
+        w.row(&[
+            op.id().to_string(),
+            op.feature_count().to_string(),
+            paper_size(op).to_string(),
+            ours.to_string(),
+        ])?;
+    }
+    w.finish()?;
+    if !std::path::Path::new("data/conv2d.csv").exists() {
+        println!("(run `make dataset` to generate the datasets)");
+    }
+    Ok(())
+}

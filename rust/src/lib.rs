@@ -1,0 +1,67 @@
+//! # Habitat — a runtime-based computational performance predictor for DNN training
+//!
+//! Reproduction of *"Habitat: A Runtime-Based Computational Performance
+//! Predictor for Deep Neural Network Training"* (Yu, Gao, Golikov,
+//! Pekhimenko; USENIX ATC '21) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Habitat answers the question *"how fast would my training job run on a
+//! GPU I don't have?"*. It records the execution time of every operation in
+//! one training iteration on an **origin** GPU and scales each operation's
+//! time onto a **destination** GPU using either:
+//!
+//! * **wave scaling** ([`predict::wave`]) — an analytical model based on the
+//!   GPU execution model (thread-block *waves*), for *kernel-alike*
+//!   operations that use the same kernels on every GPU, or
+//! * **pre-trained MLPs** ([`runtime`]) — learned predictors for
+//!   *kernel-varying* operations (`conv2d`, `lstm`, `bmm`, `linear`) whose
+//!   kernel selection differs across GPU architectures. The MLPs are
+//!   authored in JAX, AOT-lowered to HLO text at build time, and executed
+//!   from Rust through the PJRT C API — Python is never on the request path.
+//!
+//! Because this environment has no physical GPUs, the repo also contains the
+//! full substrate the paper's evaluation needs: a datasheet-accurate
+//! [`device`] database, a CUDA [`device::occupancy`] calculator, a DNN
+//! [`opgraph`] with a five-model [`models`] zoo, an architecture-aware
+//! op→kernel [`lowering`], and a kernel-granularity GPU timing [`sim`]ulator
+//! that stands in for real hardware as ground truth (see `DESIGN.md` §1).
+//!
+//! ## Quickstart (Listing 1 of the paper, in Rust)
+//!
+//! ```no_run
+//! use habitat::{Device, OperationTracker, models};
+//!
+//! let graph = models::resnet50(64);                  // batch size 64
+//! let tracker = OperationTracker::new(Device::Rtx2070);
+//! let trace = tracker.track(&graph);                 // "run" one iteration
+//! let pred = trace.to_device(Device::V100);          // wave scaling only
+//! println!("Pred. iter. exec. time: {:.2} ms", pred.run_time_ms());
+//! ```
+//!
+//! With the MLP artifacts built (`make artifacts`), use
+//! [`predict::HybridPredictor`] for the paper's full hybrid scheme, or the
+//! async [`coordinator::PredictionService`] to serve batched prediction
+//! requests.
+
+pub mod cluster;
+pub mod coordinator;
+pub mod cost;
+pub mod dataset;
+pub mod device;
+pub mod experiments;
+pub mod lowering;
+pub mod models;
+pub mod opgraph;
+pub mod predict;
+pub mod runtime;
+pub mod sim;
+pub mod tracker;
+pub mod util;
+
+pub use device::{Arch, Device, GpuSpec};
+pub use opgraph::{Graph, Op, OpKind};
+pub use predict::{HybridPredictor, PredictedTrace};
+pub use sim::Precision;
+pub use tracker::{OperationTracker, Trace};
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,281 @@
+//! Kernel-alike lowering: elementwise ops, normalization, pooling,
+//! softmax, embedding, losses, and the optimizer step.
+//!
+//! These ops use the *same* kernels on every GPU architecture (plain CUDA
+//! kernels shipped with the framework, not cuDNN algorithm dispatch), so
+//! their lowering ignores `arch` except through the hardware the simulator
+//! later runs them on. This is precisely the population of operations wave
+//! scaling is designed for.
+
+use crate::device::{Arch, LaunchConfig};
+use crate::lowering::{Kernel, Pass, Precision};
+use crate::opgraph::shape::conv_out;
+use crate::opgraph::{Op, OpKind, PoolKind};
+
+/// Elements processed per thread in framework elementwise kernels.
+const ELEMS_PER_THREAD: u64 = 4;
+const EW_THREADS: u32 = 256;
+const EW_REGS: u32 = 24;
+
+/// Build a generic streaming kernel over `n` elements.
+///
+/// * `flops_per_elem` — arithmetic per element,
+/// * `streams` — tensor streams touched per element (reads + writes).
+pub fn ew_kernel(
+    name: &str,
+    n: usize,
+    flops_per_elem: f64,
+    streams: f64,
+    precision: Precision,
+) -> Kernel {
+    let grid = (n as u64).div_ceil(EW_THREADS as u64 * ELEMS_PER_THREAD).max(1);
+    Kernel {
+        name: name.to_string(),
+        launch: LaunchConfig::new(grid, EW_THREADS, EW_REGS, 0),
+        flops: n as f64 * flops_per_elem,
+        dram_bytes: n as f64 * streams * precision.elem_bytes(),
+        tensor_core_eligible: false,
+    }
+}
+
+/// A reduction-style kernel (normalization statistics, loss reduction):
+/// same streaming traffic but a two-stage launch with some shared memory.
+pub fn reduce_kernel(name: &str, n: usize, flops_per_elem: f64, streams: f64, precision: Precision) -> Kernel {
+    let grid = (n as u64).div_ceil(EW_THREADS as u64 * ELEMS_PER_THREAD * 4).max(1);
+    Kernel {
+        name: name.to_string(),
+        launch: LaunchConfig::new(grid, EW_THREADS, 32, 4 * 1024),
+        flops: n as f64 * flops_per_elem,
+        dram_bytes: n as f64 * streams * precision.elem_bytes(),
+        tensor_core_eligible: false,
+    }
+}
+
+/// Lower every kernel-alike op kind.
+pub fn lower_simple(op: &Op, _arch: Arch, precision: Precision, pass: Pass) -> Vec<Kernel> {
+    let n = op.input_numel();
+    match &op.kind {
+        OpKind::Elementwise { kind } => {
+            let base = op.kind.short_name();
+            match pass {
+                Pass::Forward => vec![ew_kernel(
+                    base,
+                    n,
+                    kind.flops_per_elem(),
+                    kind.mem_streams(),
+                    precision,
+                )],
+                // Activations/arithmetic have an elementwise backward of
+                // similar cost (grad_out → grad_in, possibly with a mask).
+                Pass::Backward => vec![ew_kernel(
+                    &format!("{base}_bwd"),
+                    n,
+                    kind.flops_per_elem(),
+                    kind.mem_streams(),
+                    precision,
+                )],
+            }
+        }
+        OpKind::BatchNorm2d { .. } => match pass {
+            Pass::Forward => vec![
+                reduce_kernel("bn_stats", n, 3.0, 1.0, precision),
+                ew_kernel("bn_apply", n, 4.0, 2.0, precision),
+            ],
+            Pass::Backward => vec![
+                reduce_kernel("bn_bwd_stats", n, 4.0, 2.0, precision),
+                ew_kernel("bn_bwd_apply", n, 5.0, 3.0, precision),
+            ],
+        },
+        OpKind::LayerNorm { .. } => match pass {
+            Pass::Forward => vec![
+                reduce_kernel("ln_stats", n, 3.0, 1.0, precision),
+                ew_kernel("ln_apply", n, 4.0, 2.0, precision),
+            ],
+            Pass::Backward => vec![
+                reduce_kernel("ln_bwd_stats", n, 4.0, 2.0, precision),
+                ew_kernel("ln_bwd_apply", n, 5.0, 3.0, precision),
+            ],
+        },
+        OpKind::Pool2d {
+            kind,
+            kernel,
+            stride,
+            padding,
+        } => {
+            // Output elements: batch × ch × h' × w'.
+            let (b, c, h, w) = (op.input[0], op.input[1], op.input[2], op.input[3]);
+            let (oh, ow) = match kind {
+                PoolKind::AdaptiveAvg => (1, 1),
+                _ => (
+                    conv_out(h, *kernel, *stride, *padding),
+                    conv_out(w, *kernel, *stride, *padding),
+                ),
+            };
+            let out_n = b * c * oh * ow;
+            let window = match kind {
+                PoolKind::AdaptiveAvg => (h * w) as f64,
+                _ => (*kernel * *kernel) as f64,
+            };
+            let name = op.kind.short_name();
+            match pass {
+                Pass::Forward => {
+                    // Reads the full input once, writes the output.
+                    let mut k = ew_kernel(name, out_n, window, 1.0, precision);
+                    k.dram_bytes += n as f64 * precision.elem_bytes();
+                    vec![k]
+                }
+                Pass::Backward => {
+                    let mut k = ew_kernel(&format!("{name}_bwd"), out_n, window, 1.0, precision);
+                    k.dram_bytes += n as f64 * precision.elem_bytes();
+                    vec![k]
+                }
+            }
+        }
+        OpKind::Softmax { .. } => match pass {
+            Pass::Forward => vec![reduce_kernel("softmax", n, 8.0, 3.0, precision)],
+            Pass::Backward => vec![reduce_kernel("softmax_bwd", n, 6.0, 3.0, precision)],
+        },
+        OpKind::Embedding { dim, .. } => {
+            let rows: usize = op.input.iter().product();
+            let moved = rows * dim;
+            match pass {
+                // Gather: index read + row copy.
+                Pass::Forward => vec![ew_kernel("embedding", moved, 0.0, 2.0, precision)],
+                // Scatter-add into the weight gradient; atomics make it
+                // notably heavier than the gather.
+                Pass::Backward => vec![ew_kernel("scatter", moved, 1.0, 3.0, precision)],
+            }
+        }
+        OpKind::CrossEntropy { .. } => match pass {
+            Pass::Forward => vec![reduce_kernel("cross_entropy", n, 10.0, 2.0, precision)],
+            Pass::Backward => vec![ew_kernel("cross_entropy_bwd", n, 4.0, 3.0, precision)],
+        },
+        OpKind::Concat { inputs } => match pass {
+            // A concat is `inputs` contiguous copies.
+            Pass::Forward => vec![ew_kernel("cat", n, 0.0, 2.0, precision)],
+            Pass::Backward => vec![ew_kernel("cat_bwd", n, 0.0, 2.0, precision)]
+                .into_iter()
+                .chain(std::iter::once(ew_kernel(
+                    "cat_grad_split",
+                    n / inputs.max(&1),
+                    0.0,
+                    2.0,
+                    precision,
+                )))
+                .collect(),
+        },
+        // The optimizer runs once per iteration, after backward. It is
+        // attached to the backward pass; optimizer state stays FP32 even
+        // under AMP.
+        OpKind::OptimizerStep { kind, params } => match pass {
+            Pass::Forward => vec![],
+            Pass::Backward => {
+                let p = *params as usize;
+                let (name, flops, streams) = match kind {
+                    crate::opgraph::OptimizerKind::Sgd => ("sgd_step", 4.0, 4.0),
+                    crate::opgraph::OptimizerKind::Adam => ("adam_step", 12.0, 6.0),
+                };
+                vec![ew_kernel(name, p, flops, streams, Precision::Fp32)]
+            }
+        },
+        _ => unreachable!("lower_simple called on kernel-varying op"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opgraph::{EwKind, OptimizerKind};
+
+    #[test]
+    fn ew_kernel_grid_and_traffic() {
+        let k = ew_kernel("relu", 1 << 20, 1.0, 2.0, Precision::Fp32);
+        assert_eq!(k.launch.grid_blocks, (1 << 20) / (256 * 4));
+        assert_eq!(k.dram_bytes, (1 << 20) as f64 * 2.0 * 4.0);
+        assert!(!k.tensor_core_eligible);
+    }
+
+    #[test]
+    fn elementwise_is_memory_bound() {
+        let k = ew_kernel("add", 1 << 20, 2.0, 3.0, Precision::Fp32);
+        // Arithmetic intensity ≪ 1 FLOP/byte — firmly memory-bound.
+        assert!(k.arith_intensity() < 1.0);
+    }
+
+    #[test]
+    fn amp_halves_elementwise_traffic() {
+        let a = ew_kernel("relu", 1000, 1.0, 2.0, Precision::Fp32);
+        let b = ew_kernel("relu", 1000, 1.0, 2.0, Precision::Amp);
+        assert!((a.dram_bytes / b.dram_bytes - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batchnorm_has_two_kernels_each_pass() {
+        let op = Op::new(
+            "bn",
+            OpKind::BatchNorm2d { channels: 64 },
+            vec![32, 64, 56, 56],
+        );
+        assert_eq!(lower_simple(&op, Arch::Volta, Precision::Fp32, Pass::Forward).len(), 2);
+        assert_eq!(lower_simple(&op, Arch::Volta, Precision::Fp32, Pass::Backward).len(), 2);
+    }
+
+    #[test]
+    fn maxpool_output_sized() {
+        let op = Op::new(
+            "pool",
+            OpKind::Pool2d {
+                kind: PoolKind::Max,
+                kernel: 3,
+                stride: 2,
+                padding: 1,
+            },
+            vec![32, 64, 112, 112],
+        );
+        let k = &lower_simple(&op, Arch::Volta, Precision::Fp32, Pass::Forward)[0];
+        // 112 → 56; flops = out_elems × 9 window compares.
+        assert_eq!(k.flops, (32 * 64 * 56 * 56) as f64 * 9.0);
+    }
+
+    #[test]
+    fn optimizer_only_in_backward() {
+        let op = Op::new(
+            "opt",
+            OpKind::OptimizerStep {
+                kind: OptimizerKind::Adam,
+                params: 1_000_000,
+            },
+            vec![1],
+        );
+        assert!(lower_simple(&op, Arch::Volta, Precision::Fp32, Pass::Forward).is_empty());
+        let bwd = lower_simple(&op, Arch::Volta, Precision::Fp32, Pass::Backward);
+        assert_eq!(bwd.len(), 1);
+        assert_eq!(bwd[0].name, "adam_step");
+        assert_eq!(bwd[0].flops, 12.0 * 1e6);
+    }
+
+    #[test]
+    fn embedding_backward_is_scatter() {
+        let op = Op::new(
+            "emb",
+            OpKind::Embedding {
+                vocab: 32000,
+                dim: 512,
+            },
+            vec![64, 50],
+        );
+        let bwd = lower_simple(&op, Arch::Volta, Precision::Fp32, Pass::Backward);
+        assert_eq!(bwd[0].name, "scatter");
+        let fwd = lower_simple(&op, Arch::Volta, Precision::Fp32, Pass::Forward);
+        assert!(bwd[0].dram_bytes > fwd[0].dram_bytes);
+    }
+
+    #[test]
+    fn relu_backward_mirrors_forward_cost() {
+        let op = Op::new("r", OpKind::Elementwise { kind: EwKind::Relu }, vec![4096]);
+        let f = &lower_simple(&op, Arch::Pascal, Precision::Fp32, Pass::Forward)[0];
+        let b = &lower_simple(&op, Arch::Pascal, Precision::Fp32, Pass::Backward)[0];
+        assert_eq!(f.dram_bytes, b.dram_bytes);
+        assert_eq!(b.name, "relu_bwd");
+    }
+}

@@ -1,0 +1,305 @@
+//! Dense matrix-multiply lowering (cuBLAS stand-in).
+//!
+//! Everything GEMM-shaped funnels through [`gemm_kernel`]: linear layers,
+//! batched matmuls, the im2col form of convolutions, and LSTM gate
+//! projections. Tile shapes, register budgets, and shared-memory staging
+//! differ per GPU generation — exactly the arch-specific dispatch cuBLAS
+//! does — which is what makes these operations *kernel-varying*.
+
+use crate::device::{Arch, LaunchConfig};
+use crate::lowering::{Kernel, Pass, Precision};
+use crate::opgraph::{Op, OpKind};
+
+/// Tile configuration chosen for a GEMM on a given architecture.
+#[derive(Debug, Clone, Copy)]
+pub struct GemmTile {
+    pub tile_m: usize,
+    pub tile_n: usize,
+    pub threads: u32,
+    pub regs: u32,
+    pub smem: u32,
+    pub tag: &'static str,
+}
+
+/// Architecture-specific tile selection — the cuBLAS heuristic stand-in.
+/// Larger tiles amortize memory traffic but need more registers/smem;
+/// newer architectures afford bigger tiles.
+pub fn select_tile(arch: Arch, m: usize, n: usize) -> GemmTile {
+    let small = m < 128 || n < 128;
+    match (arch, small) {
+        (Arch::Pascal, false) => GemmTile {
+            tile_m: 128,
+            tile_n: 64,
+            threads: 256,
+            regs: 120,
+            smem: 16 * 1024,
+            tag: "pascal_sgemm_128x64",
+        },
+        (Arch::Pascal, true) => GemmTile {
+            tile_m: 64,
+            tile_n: 64,
+            threads: 128,
+            regs: 96,
+            smem: 8 * 1024,
+            tag: "pascal_sgemm_64x64",
+        },
+        (Arch::Volta, false) => GemmTile {
+            tile_m: 128,
+            tile_n: 128,
+            threads: 256,
+            regs: 128,
+            smem: 32 * 1024,
+            tag: "volta_sgemm_128x128",
+        },
+        (Arch::Volta, true) => GemmTile {
+            tile_m: 64,
+            tile_n: 64,
+            threads: 128,
+            regs: 90,
+            smem: 16 * 1024,
+            tag: "volta_sgemm_64x64",
+        },
+        (Arch::Turing, false) => GemmTile {
+            tile_m: 128,
+            tile_n: 128,
+            threads: 256,
+            regs: 144,
+            smem: 48 * 1024,
+            tag: "turing_sgemm_128x128",
+        },
+        (Arch::Turing, true) => GemmTile {
+            tile_m: 64,
+            tile_n: 64,
+            threads: 128,
+            regs: 112,
+            smem: 24 * 1024,
+            tag: "turing_sgemm_64x64",
+        },
+    }
+}
+
+/// L2-aware DRAM traffic estimate for a tiled GEMM.
+///
+/// With an `tm × tn` output tiling, the A operand is streamed once per
+/// column of tiles and B once per row of tiles — unless the operand fits
+/// in (half of) L2, in which case re-reads are served on chip. The L2
+/// size is per-architecture, so the same GEMM moves different DRAM bytes
+/// on different GPUs (one of the effects wave scaling cannot see and the
+/// simulator deliberately includes).
+pub fn gemm_traffic(
+    batches: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    tile: &GemmTile,
+    l2_bytes: f64,
+    elem_bytes: f64,
+) -> f64 {
+    let tiles_m = m.div_ceil(tile.tile_m) as f64;
+    let tiles_n = n.div_ceil(tile.tile_n) as f64;
+    let a_bytes = (m * k) as f64 * elem_bytes;
+    let b_bytes = (k * n) as f64 * elem_bytes;
+    let c_bytes = (m * n) as f64 * elem_bytes;
+    // Re-read factor: capped by tile count; 1.0 when the operand is L2-hot.
+    let a_rereads = if a_bytes <= 0.5 * l2_bytes { 1.0 } else { tiles_n.min(4.0) };
+    let b_rereads = if b_bytes <= 0.5 * l2_bytes { 1.0 } else { tiles_m.min(4.0) };
+    batches as f64 * (a_bytes * a_rereads + b_bytes * b_rereads + c_bytes)
+}
+
+/// Build the kernel descriptor for one (possibly batched) GEMM:
+/// `C[b] = A[b]·B[b]`, `A: m×k`, `B: k×n`.
+pub fn gemm_kernel(
+    name_hint: &str,
+    batches: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    arch: Arch,
+    precision: Precision,
+    l2_kib: u32,
+) -> Kernel {
+    let tile = select_tile(arch, m, n);
+    let grid = (batches * m.div_ceil(tile.tile_m) * n.div_ceil(tile.tile_n)) as u64;
+    let elem_bytes = precision.elem_bytes();
+    let flops = 2.0 * batches as f64 * m as f64 * n as f64 * k as f64;
+    let dram_bytes = gemm_traffic(batches, m, n, k, &tile, l2_kib as f64 * 1024.0, elem_bytes);
+    Kernel {
+        name: format!("{}_{}", tile.tag, name_hint),
+        launch: LaunchConfig::new(grid.max(1), tile.threads, tile.regs, tile.smem),
+        flops,
+        dram_bytes,
+        tensor_core_eligible: true,
+    }
+}
+
+/// Default L2 size used when the lowering is asked for an architecture
+/// without a concrete device (arch representative: the server part).
+pub fn arch_l2_kib(arch: Arch) -> u32 {
+    match arch {
+        Arch::Pascal => 4096,
+        Arch::Volta => 6144,
+        Arch::Turing => 4096,
+    }
+}
+
+/// Lower `Linear` and `BatchedMatmul` ops.
+pub fn lower_dense(op: &Op, arch: Arch, precision: Precision, pass: Pass) -> Vec<Kernel> {
+    let l2 = arch_l2_kib(arch);
+    match op.kind {
+        OpKind::Linear {
+            in_features,
+            out_features,
+            bias,
+        } => {
+            let rows: usize = op.input[..op.input.len() - 1].iter().product();
+            let mut kernels = Vec::new();
+            match pass {
+                Pass::Forward => {
+                    // y = x·Wᵀ (+ b)
+                    kernels.push(gemm_kernel(
+                        "linear_fwd",
+                        1,
+                        rows.max(1),
+                        out_features,
+                        in_features,
+                        arch,
+                        precision,
+                        l2,
+                    ));
+                    if bias {
+                        kernels.push(crate::lowering::elementwise::ew_kernel(
+                            "bias_add",
+                            rows * out_features,
+                            1.0,
+                            2.0,
+                            precision,
+                        ));
+                    }
+                }
+                Pass::Backward => {
+                    // dX = dY·W  and  dW = dYᵀ·X
+                    kernels.push(gemm_kernel(
+                        "linear_dgrad",
+                        1,
+                        rows.max(1),
+                        in_features,
+                        out_features,
+                        arch,
+                        precision,
+                        l2,
+                    ));
+                    kernels.push(gemm_kernel(
+                        "linear_wgrad",
+                        1,
+                        out_features,
+                        in_features,
+                        rows.max(1),
+                        arch,
+                        precision,
+                        l2,
+                    ));
+                    if bias {
+                        kernels.push(crate::lowering::elementwise::ew_kernel(
+                            "bias_grad",
+                            rows * out_features,
+                            1.0,
+                            1.0,
+                            precision,
+                        ));
+                    }
+                }
+            }
+            kernels
+        }
+        OpKind::BatchedMatmul { b, l, m, r } => match pass {
+            Pass::Forward => vec![gemm_kernel("bmm_fwd", b, l, r, m, arch, precision, l2)],
+            Pass::Backward => vec![
+                // dA = dC·Bᵀ, dB = Aᵀ·dC
+                gemm_kernel("bmm_dgrad_a", b, l, m, r, arch, precision, l2),
+                gemm_kernel("bmm_dgrad_b", b, m, r, l, arch, precision, l2),
+            ],
+        },
+        _ => unreachable!("lower_dense called on non-dense op"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flops_formula() {
+        let k = gemm_kernel("t", 1, 64, 128, 256, Arch::Volta, Precision::Fp32, 6144);
+        assert_eq!(k.flops, 2.0 * 64.0 * 128.0 * 256.0);
+        assert!(k.tensor_core_eligible);
+    }
+
+    #[test]
+    fn grid_covers_output_tiles() {
+        let k = gemm_kernel("t", 2, 300, 300, 64, Arch::Volta, Precision::Fp32, 6144);
+        // 300/128 → 3 tiles each way, ×2 batches.
+        assert_eq!(k.launch.grid_blocks, 2 * 3 * 3);
+    }
+
+    #[test]
+    fn tile_selection_is_arch_specific() {
+        let p = select_tile(Arch::Pascal, 1024, 1024);
+        let v = select_tile(Arch::Volta, 1024, 1024);
+        let t = select_tile(Arch::Turing, 1024, 1024);
+        assert_ne!(p.tag, v.tag);
+        assert_ne!(v.tag, t.tag);
+        assert_eq!(p.tile_n, 64);
+        assert_eq!(v.tile_n, 128);
+    }
+
+    #[test]
+    fn small_gemm_uses_small_tile() {
+        let t = select_tile(Arch::Volta, 64, 2048);
+        assert_eq!(t.tile_m, 64);
+    }
+
+    #[test]
+    fn l2_hot_operand_reduces_traffic() {
+        let tile = select_tile(Arch::Volta, 4096, 4096);
+        let cold = gemm_traffic(1, 4096, 4096, 4096, &tile, 1.0, 4.0);
+        let hot = gemm_traffic(1, 4096, 4096, 4096, &tile, 1e12, 4.0);
+        assert!(cold > hot);
+    }
+
+    #[test]
+    fn linear_backward_has_two_gemms() {
+        let op = Op::new(
+            "fc",
+            OpKind::Linear {
+                in_features: 512,
+                out_features: 256,
+                bias: true,
+            },
+            vec![64, 512],
+        );
+        let bwd = lower_dense(&op, Arch::Turing, Precision::Fp32, Pass::Backward);
+        assert_eq!(bwd.len(), 3); // dgrad + wgrad + bias_grad
+        let fwd = lower_dense(&op, Arch::Turing, Precision::Fp32, Pass::Forward);
+        let fwd_flops: f64 = fwd.iter().map(|k| k.flops).sum();
+        let bwd_flops: f64 = bwd.iter().map(|k| k.flops).sum();
+        // Backward ≈ 2× forward FLOPs for dense layers.
+        assert!(bwd_flops > 1.8 * fwd_flops && bwd_flops < 2.2 * fwd_flops);
+    }
+
+    #[test]
+    fn bmm_dims_from_kind() {
+        let op = Op::new(
+            "attn_scores",
+            OpKind::BatchedMatmul {
+                b: 8 * 16,
+                l: 50,
+                m: 64,
+                r: 50,
+            },
+            vec![8 * 16, 50, 64],
+        );
+        let fwd = lower_dense(&op, Arch::Volta, Precision::Fp32, Pass::Forward);
+        assert_eq!(fwd.len(), 1);
+        assert_eq!(fwd[0].flops, 2.0 * 128.0 * 50.0 * 50.0 * 64.0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Operation → GPU-kernel lowering.
+//!
+//! This substrate plays the role of cuDNN/cuBLAS in the paper: it decides
+//! *which kernels* implement each DNN operation on a given GPU
+//! architecture, and with what launch configuration, FLOP count, and DRAM
+//! traffic. Two properties matter for reproducing Habitat faithfully:
+//!
+//! 1. **Kernel-alike ops** (elementwise, normalization, pooling, …) lower
+//!    to the *same* kernels on every architecture — only the hardware
+//!    changes. Wave scaling's core assumption (§3.3) holds for them.
+//! 2. **Kernel-varying ops** (conv2d, lstm, bmm, linear) lower to
+//!    *architecture-specific* kernels: different algorithms (implicit GEMM
+//!    vs. Winograd convolution, standard vs. persistent RNN cells) and
+//!    different tile shapes per generation — reproducing the cuDNN/cuBLAS
+//!    behaviour that motivates the paper's MLP predictors (§3.2, [44, 75]).
+//!
+//! The lowering is deterministic: the same (op, arch, precision) always
+//! produces the same kernels, mirroring deterministic cuDNN heuristics.
+
+pub mod conv;
+pub mod elementwise;
+pub mod gemm;
+pub mod rnn;
+
+
+use crate::device::{Arch, LaunchConfig};
+use crate::opgraph::{Op, OpKind};
+
+/// Numeric precision of a training iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    /// FP32 everywhere (the paper's main evaluation).
+    #[default]
+    Fp32,
+    /// Automatic mixed precision: FP16 storage + tensor-core matmuls where
+    /// the architecture has them (§6.1.2).
+    Amp,
+}
+
+impl Precision {
+    /// Bytes per element for activation/weight storage.
+    pub fn elem_bytes(self) -> f64 {
+        match self {
+            Precision::Fp32 => 4.0,
+            Precision::Amp => 2.0,
+        }
+    }
+}
+
+/// Forward or backward half of the training step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Pass {
+    Forward,
+    Backward,
+}
+
+/// A lowered GPU kernel: everything the simulator and wave scaling need.
+/// This corresponds to what the paper records per kernel via CUPTI:
+/// launch configuration plus the metrics needed for arithmetic intensity
+/// (FLOP count, DRAM bytes).
+#[derive(Debug, Clone)]
+pub struct Kernel {
+    /// Kernel "symbol name" — encodes the selected algorithm and tile,
+    /// e.g. `volta_sgemm_128x128` or `winograd_fwd_3x3`.
+    pub name: String,
+    pub launch: LaunchConfig,
+    /// Total floating-point operations.
+    pub flops: f64,
+    /// DRAM bytes moved (after the lowering's cache-reuse estimate).
+    pub dram_bytes: f64,
+    /// Whether the kernel can use tensor cores under AMP.
+    pub tensor_core_eligible: bool,
+}
+
+impl Kernel {
+    /// Arithmetic intensity in FLOP/byte — fixed per kernel (§4.2).
+    pub fn arith_intensity(&self) -> f64 {
+        if self.dram_bytes <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.flops / self.dram_bytes
+        }
+    }
+}
+
+/// Lower one operation for one pass on one architecture.
+///
+/// The returned kernels execute sequentially (one CUDA stream), matching
+/// how PyTorch dispatches training ops.
+pub fn lower(op: &Op, arch: Arch, precision: Precision, pass: Pass) -> Vec<Kernel> {
+    match &op.kind {
+        OpKind::Conv2d { .. } | OpKind::ConvTranspose2d { .. } => {
+            conv::lower_conv(op, arch, precision, pass)
+        }
+        OpKind::Linear { .. } | OpKind::BatchedMatmul { .. } => {
+            gemm::lower_dense(op, arch, precision, pass)
+        }
+        OpKind::Lstm { .. } => rnn::lower_lstm(op, arch, precision, pass),
+        _ => elementwise::lower_simple(op, arch, precision, pass),
+    }
+}
+
+/// Lower a whole graph: per-op forward and backward kernel lists.
+/// The backward pass is walked in reverse execution order, as autograd
+/// would replay it.
+pub fn lower_graph(
+    graph: &crate::Graph,
+    arch: Arch,
+    precision: Precision,
+) -> Vec<(usize, Pass, Vec<Kernel>)> {
+    let mut out = Vec::with_capacity(graph.ops.len() * 2);
+    for (i, op) in graph.ops.iter().enumerate() {
+        out.push((i, Pass::Forward, lower(op, arch, precision, Pass::Forward)));
+    }
+    for (i, op) in graph.ops.iter().enumerate().rev() {
+        let kernels = lower(op, arch, precision, Pass::Backward);
+        if !kernels.is_empty() {
+            out.push((i, Pass::Backward, kernels));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opgraph::{EwKind, Op, OpKind};
+
+    fn relu(n: usize) -> Op {
+        Op::new("relu", OpKind::Elementwise { kind: EwKind::Relu }, vec![n])
+    }
+
+    #[test]
+    fn kernel_alike_ops_lower_identically_across_archs() {
+        let op = relu(1 << 20);
+        for pass in [Pass::Forward, Pass::Backward] {
+            let a = lower(&op, Arch::Pascal, Precision::Fp32, pass);
+            let b = lower(&op, Arch::Volta, Precision::Fp32, pass);
+            let c = lower(&op, Arch::Turing, Precision::Fp32, pass);
+            assert_eq!(a.len(), b.len());
+            for ((ka, kb), kc) in a.iter().zip(&b).zip(&c) {
+                assert_eq!(ka.name, kb.name, "kernel-alike must keep names");
+                assert_eq!(ka.flops, kb.flops);
+                assert_eq!(ka.dram_bytes, kc.dram_bytes);
+                assert_eq!(ka.launch, kb.launch);
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_varying_ops_differ_across_archs() {
+        let op = Op::new(
+            "conv",
+            OpKind::Conv2d {
+                in_ch: 256,
+                out_ch: 256,
+                kernel: 3,
+                stride: 1,
+                padding: 1,
+                bias: false,
+            },
+            vec![32, 256, 28, 28],
+        );
+        let pascal = lower(&op, Arch::Pascal, Precision::Fp32, Pass::Forward);
+        let volta = lower(&op, Arch::Volta, Precision::Fp32, Pass::Forward);
+        // Pascal picks implicit GEMM, Volta picks Winograd for 3×3/s1.
+        assert_ne!(pascal[0].name, volta[0].name);
+    }
+
+    #[test]
+    fn arith_intensity_positive_finite_for_gemm() {
+        let op = Op::new(
+            "fc",
+            OpKind::Linear {
+                in_features: 1024,
+                out_features: 1024,
+                bias: true,
+            },
+            vec![64, 1024],
+        );
+        for k in lower(&op, Arch::Volta, Precision::Fp32, Pass::Forward) {
+            assert!(k.arith_intensity().is_finite());
+            assert!(k.arith_intensity() > 0.0);
+        }
+    }
+
+    #[test]
+    fn graph_lowering_walks_backward_in_reverse() {
+        let mut g = crate::Graph::new("toy", 4);
+        g.push(relu(100));
+        g.push(Op::new(
+            "fc",
+            OpKind::Linear {
+                in_features: 8,
+                out_features: 8,
+                bias: false,
+            },
+            vec![4, 8],
+        ));
+        let lowered = lower_graph(&g, Arch::Volta, Precision::Fp32);
+        let fwd: Vec<usize> = lowered
+            .iter()
+            .filter(|(_, p, _)| *p == Pass::Forward)
+            .map(|(i, _, _)| *i)
+            .collect();
+        let bwd: Vec<usize> = lowered
+            .iter()
+            .filter(|(_, p, _)| *p == Pass::Backward)
+            .map(|(i, _, _)| *i)
+            .collect();
+        assert_eq!(fwd, vec![0, 1]);
+        assert_eq!(bwd, vec![1, 0]);
+    }
+}

@@ -1,0 +1,265 @@
+//! Habitat CLI — the Layer-3 entrypoint.
+//!
+//! ```text
+//! habitat predict   [--model M | --trace FILE] [--batch N] [--origin D]
+//!                   [--dest D] [--artifacts DIR] [--wave-only] [--amp]
+//! habitat track     [--model M] [--batch N] [--origin D] --out FILE
+//! habitat compare   [--model M] [--batch N] [--origin D] [--dp WORLD]
+//! habitat dataset   [--out DIR] [--configs N] [--seed S]
+//! habitat experiment <id|all> [--out DIR] [--artifacts DIR]
+//! habitat serve     [--addr HOST:PORT] [--artifacts DIR]
+//! habitat devices
+//! ```
+//!
+//! (Flag parsing is hand-rolled: the build environment is offline and has
+//! no clap; see Cargo.toml.)
+
+use habitat::device::{Device, ALL_DEVICES};
+use habitat::{models, OperationTracker};
+
+/// Tiny flag parser: `--key value` pairs plus boolean `--key` switches.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String], switches: &[&str]) -> anyhow::Result<Args> {
+        let mut flags = std::collections::HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if switches.contains(&key) {
+                    flags.insert(key.to_string(), "true".to_string());
+                } else {
+                    let value = argv
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow::anyhow!("flag --{key} needs a value"))?;
+                    flags.insert(key.to_string(), value.clone());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { flags, positional })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn parse_device(s: &str) -> anyhow::Result<Device> {
+    Device::parse(s).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown device {s:?}; expected one of {}",
+            ALL_DEVICES.map(|d| d.id().to_ascii_lowercase()).join(", ")
+        )
+    })
+}
+
+const USAGE: &str = "usage: habitat <predict|track|compare|dataset|experiment|serve|devices> [flags]
+  predict    [--model M | --trace FILE] --batch N --origin DEV --dest DEV
+             [--artifacts DIR] [--wave-only] [--amp]
+  track      --model M --batch N --origin DEV --out FILE   (save a trace)
+  compare    --model M --batch N --origin DEV [--dp WORLD] [--wave-only]
+  dataset    [--out DIR] [--configs N] [--seed S]
+  experiment <fig1|fig3|fig4|table1|contribution|fig6|fig7|amp|extrapolate|ablation|dp|scheduler|all>
+             [--out DIR] [--artifacts DIR]
+  serve      [--addr HOST:PORT] [--artifacts DIR]
+  devices";
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(command) = argv.first().cloned() else {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    };
+    let rest = &argv[1..];
+
+    match command.as_str() {
+        "predict" => {
+            let args = Args::parse(rest, &["wave-only", "amp"])?;
+            let dest = parse_device(&args.get("dest", "v100"))?;
+            // Trace source: a saved trace file, or track a zoo model now.
+            let trace = if args.has("trace") {
+                habitat::Trace::load(args.get("trace", ""))?
+            } else {
+                let model = args.get("model", "resnet50");
+                let batch = args.get_usize("batch", 32)?;
+                let origin = parse_device(&args.get("origin", "rtx2070"))?;
+                let graph = models::by_name(&model, batch)
+                    .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
+                if !habitat::opgraph::memory::fits(&graph, dest, habitat::Precision::Fp32) {
+                    eprintln!(
+                        "warning: {model} at batch {batch} likely exceeds {dest}'s memory ({:.1} GiB needed)",
+                        habitat::opgraph::memory::estimate(&graph, habitat::Precision::Fp32).total_gib()
+                    );
+                }
+                OperationTracker::new(origin).track(&graph)
+            };
+            let predictor = if args.has("wave-only") {
+                habitat::HybridPredictor::wave_only()
+            } else {
+                habitat::runtime::predictor_from_artifacts(&args.get("artifacts", "artifacts"))?
+            };
+            let pred = if args.has("amp") {
+                habitat::predict::amp::predict_amp(&predictor, &trace, dest)
+            } else {
+                predictor.predict(&trace, dest)
+            };
+            println!(
+                "{} (batch {}): measured on {} = {:.2} ms",
+                trace.model,
+                trace.batch_size,
+                trace.origin,
+                trace.run_time_ms()
+            );
+            println!(
+                "Pred. iter. exec. time on {dest}: {:.2} ms  ({:.1} samples/s){}",
+                pred.run_time_ms(),
+                pred.throughput(),
+                if pred.mlp_fallbacks > 0 {
+                    format!("  [{} MLP fallbacks]", pred.mlp_fallbacks)
+                } else {
+                    String::new()
+                }
+            );
+        }
+        "track" => {
+            let args = Args::parse(rest, &[])?;
+            let model = args.get("model", "resnet50");
+            let batch = args.get_usize("batch", 32)?;
+            let origin = parse_device(&args.get("origin", "rtx2070"))?;
+            let out = args.get("out", "trace.json");
+            let graph = models::by_name(&model, batch)
+                .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
+            let trace = OperationTracker::new(origin).track(&graph);
+            trace.save(&out)?;
+            println!(
+                "tracked {model} (batch {batch}) on {origin}: {:.2} ms/iter, {} ops → {out}",
+                trace.run_time_ms(),
+                trace.ops.len()
+            );
+        }
+        "compare" => {
+            let args = Args::parse(rest, &["wave-only"])?;
+            let model = args.get("model", "resnet50");
+            let batch = args.get_usize("batch", 32)?;
+            let origin = parse_device(&args.get("origin", "rtx2070"))?;
+            let graph = models::by_name(&model, batch)
+                .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
+            let trace = OperationTracker::new(origin).track(&graph);
+            let predictor = if args.has("wave-only") {
+                habitat::HybridPredictor::wave_only()
+            } else {
+                habitat::runtime::predictor_from_artifacts(&args.get("artifacts", "artifacts"))
+                    .unwrap_or_else(|e| {
+                        eprintln!("(wave scaling only: {e})");
+                        habitat::HybridPredictor::wave_only()
+                    })
+            };
+            let world = args.get_usize("dp", 1)?;
+            println!(
+                "{model} (batch {batch}) from {origin}{}:",
+                if world > 1 { format!(", data-parallel ×{world} (pcie3)") } else { String::new() }
+            );
+            println!(
+                "{:<10} {:>10} {:>12} {:>14} {:>6}",
+                "GPU", "pred ms", "samples/s", "samples/s/$", "fits"
+            );
+            for dest in ALL_DEVICES {
+                let pred = predictor.predict(&trace, dest);
+                let (ms, tput) = if world > 1 {
+                    let dp = habitat::predict::distributed::predict_data_parallel(
+                        &trace,
+                        &pred,
+                        &habitat::predict::distributed::DataParallelConfig {
+                            world,
+                            ..Default::default()
+                        },
+                    );
+                    (dp.iter_ms, dp.throughput)
+                } else {
+                    (pred.run_time_ms(), pred.throughput())
+                };
+                let fits = habitat::opgraph::memory::fits(&graph, dest, habitat::Precision::Fp32);
+                println!(
+                    "{:<10} {:>10.2} {:>12.1} {:>14} {:>6}",
+                    dest.id(),
+                    ms,
+                    tput,
+                    habitat::cost::cost_normalized_throughput(dest, tput)
+                        .map(|v| format!("{v:.1}"))
+                        .unwrap_or_else(|| "-".into()),
+                    if fits { "yes" } else { "NO" },
+                );
+            }
+        }
+        "dataset" => {
+            let args = Args::parse(rest, &[])?;
+            habitat::dataset::generate_all(
+                &args.get("out", "data"),
+                args.get_usize("configs", 6000)?,
+                args.get_usize("seed", 42)? as u64,
+            )?;
+        }
+        "experiment" => {
+            let args = Args::parse(rest, &[])?;
+            let id = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("experiment id required\n{USAGE}"))?;
+            habitat::experiments::run(id, &args.get("out", "results"), &args.get("artifacts", "artifacts"))?;
+        }
+        "serve" => {
+            let args = Args::parse(rest, &[])?;
+            habitat::coordinator::serve(
+                &args.get("addr", "127.0.0.1:7780"),
+                &args.get("artifacts", "artifacts"),
+            )?;
+        }
+        "devices" => {
+            println!(
+                "{:<10} {:<7} {:>4} {:>6} {:>9} {:>9} {:>7} {:>8}",
+                "GPU", "Arch", "SMs", "Mem", "BW(GB/s)", "TFLOPS", "Clock", "$/hr"
+            );
+            for d in ALL_DEVICES {
+                let s = d.spec();
+                println!(
+                    "{:<10} {:<7} {:>4} {:>4}GB {:>9.0} {:>9.1} {:>6.0}M {:>8}",
+                    s.name,
+                    s.arch.to_string(),
+                    s.sms,
+                    s.mem_gib,
+                    s.peak_mem_bw_gbps,
+                    s.peak_fp32_tflops,
+                    s.boost_clock_mhz,
+                    s.rental_usd_per_hr
+                        .map(|p| format!("{p:.2}"))
+                        .unwrap_or_else(|| "-".into()),
+                );
+            }
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,151 @@
+//! DCGAN [Radford et al., ICLR'16] — the PyTorch reference example [22],
+//! LSUN 3×64×64, nz = 100, ngf = ndf = 64.
+//!
+//! One GAN training iteration (as the reference implementation executes
+//! it) runs the discriminator on a real batch, the generator on a noise
+//! batch, the discriminator on the fake batch, and updates both networks.
+//! The trace therefore contains the generator ops once and the
+//! discriminator ops twice — this is the "computationally lighter" model
+//! of the paper's case study 2 (Fig. 7).
+
+use crate::models::GraphBuilder;
+use crate::opgraph::shape::conv_transpose_out;
+use crate::opgraph::{EwKind, Op, OpKind, OptimizerKind};
+use crate::Graph;
+
+const NZ: usize = 100;
+const NGF: usize = 64;
+const NDF: usize = 64;
+
+/// ConvTranspose2d helper; returns the output shape.
+#[allow(clippy::too_many_arguments)]
+fn conv_t(
+    b: &mut GraphBuilder,
+    name: &str,
+    input: Vec<usize>,
+    out_ch: usize,
+    kernel: usize,
+    stride: usize,
+    padding: usize,
+) -> Vec<usize> {
+    let in_ch = input[1];
+    let oh = conv_transpose_out(input[2], kernel, stride, padding);
+    let ow = conv_transpose_out(input[3], kernel, stride, padding);
+    let out = vec![input[0], out_ch, oh, ow];
+    b.push(Op::new(
+        name,
+        OpKind::ConvTranspose2d {
+            in_ch,
+            out_ch,
+            kernel,
+            stride,
+            padding,
+            bias: false,
+        },
+        input,
+    ));
+    out
+}
+
+/// Generator: 100-d noise → 3×64×64 image.
+fn generator(b: &mut GraphBuilder, batch: usize) {
+    let mut x = vec![batch, NZ, 1, 1];
+    let stages = [
+        (NGF * 8, 4, 1, 0), // 1 → 4
+        (NGF * 4, 4, 2, 1), // 4 → 8
+        (NGF * 2, 4, 2, 1), // 8 → 16
+        (NGF, 4, 2, 1),     // 16 → 32
+    ];
+    for (i, (ch, k, s, p)) in stages.into_iter().enumerate() {
+        x = conv_t(b, &format!("g.convT{i}"), x, ch, k, s, p);
+        b.batch_norm(&format!("g.bn{i}"), x.clone());
+        b.ew(&format!("g.relu{i}"), EwKind::Relu, x.clone());
+    }
+    let x = conv_t(b, "g.convT4", x, 3, 4, 2, 1); // 32 → 64
+    b.ew("g.tanh", EwKind::Tanh, x);
+}
+
+/// Discriminator: 3×64×64 image → scalar logit.
+fn discriminator(b: &mut GraphBuilder, tag: &str, batch: usize) {
+    let mut x = vec![batch, 3, 64, 64];
+    let stages = [
+        (NDF, false),     // 64 → 32
+        (NDF * 2, true),  // 32 → 16
+        (NDF * 4, true),  // 16 → 8
+        (NDF * 8, true),  // 8 → 4
+    ];
+    for (i, (ch, bn)) in stages.into_iter().enumerate() {
+        x = b.conv(&format!("d.{tag}.conv{i}"), x, ch, 4, 2, 1, false);
+        if bn {
+            b.batch_norm(&format!("d.{tag}.bn{i}"), x.clone());
+        }
+        b.ew(&format!("d.{tag}.lrelu{i}"), EwKind::LeakyRelu, x.clone());
+    }
+    let x = b.conv(&format!("d.{tag}.conv4"), x, 1, 4, 1, 0, false);
+    b.ew(&format!("d.{tag}.sigmoid"), EwKind::Sigmoid, x);
+}
+
+/// Build the DCGAN training iteration for a batch size.
+pub fn dcgan(batch_size: usize) -> Graph {
+    let mut b = GraphBuilder::new("dcgan", batch_size);
+    discriminator(&mut b, "real", batch_size);
+    generator(&mut b, batch_size);
+    discriminator(&mut b, "fake", batch_size);
+    // BCE losses for D(real), D(fake), and the generator objective.
+    for loss in ["d_real", "d_fake", "g"] {
+        b.cross_entropy(&format!("loss.{loss}"), batch_size, 1);
+    }
+    b.finish(OptimizerKind::Adam)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opgraph::MlpOp;
+
+    #[test]
+    fn discriminator_appears_twice() {
+        let g = dcgan(64);
+        let convs = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::Conv2d { .. }))
+            .count();
+        assert_eq!(convs, 10); // 5 conv layers × 2 passes
+        let convts = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::ConvTranspose2d { .. }))
+            .count();
+        assert_eq!(convts, 5);
+    }
+
+    #[test]
+    fn all_conv_family_maps_to_conv2d_mlp() {
+        let g = dcgan(64);
+        for op in &g.ops {
+            if op.kind.is_kernel_varying() {
+                assert_eq!(op.kind.mlp_op(), Some(MlpOp::Conv2d));
+            }
+        }
+    }
+
+    #[test]
+    fn generator_output_is_64x64() {
+        // Walk the generator shapes: last convT input must be 32×32.
+        let g = dcgan(16);
+        let last = g.ops.iter().find(|o| o.name == "g.convT4").unwrap();
+        assert_eq!(last.input[2], 32);
+    }
+
+    #[test]
+    fn lighter_than_resnet() {
+        // DCGAN at batch 64 is "computationally lighter" than ResNet-50 at
+        // batch 64 (paper §5.3.2) — compare simulated V100 times.
+        use crate::device::Device;
+        let sim = crate::sim::Simulator::noiseless();
+        let d = sim.graph_time_ms(Device::V100.spec(), &dcgan(64), crate::Precision::Fp32);
+        let r = sim.graph_time_ms(Device::V100.spec(), &crate::models::resnet50(64), crate::Precision::Fp32);
+        assert!(d < r, "dcgan {d} ms vs resnet {r} ms");
+    }
+}

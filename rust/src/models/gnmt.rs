@@ -1,0 +1,134 @@
+//! GNMT [Wu et al., 2016] — the MLPerf v0.x 4-layer variant used by the
+//! paper's evaluation suite, WMT'16 EN-DE, sequence length 50 (§5.1).
+//!
+//! Encoder: 4 LSTM layers (first bidirectional), hidden 1024, residual
+//! connections between upper layers. Decoder: 4 LSTM layers with
+//! Bahdanau-style attention over encoder states (linear + bmm + softmax +
+//! bmm + concat). 32k vocabulary, Adam optimizer. The LSTM layers are the
+//! paper's canonical recurrent kernel-varying ops.
+
+use crate::models::GraphBuilder;
+use crate::opgraph::{EwKind, Op, OpKind, OptimizerKind};
+use crate::Graph;
+
+const HIDDEN: usize = 1024;
+const VOCAB: usize = 32_000;
+const SEQ: usize = 50;
+const LAYERS: usize = 4;
+
+/// One cuDNN-style LSTM op over the full sequence.
+fn lstm(b: &mut GraphBuilder, name: &str, batch: usize, input: usize, bidirectional: bool) {
+    b.push(Op::new(
+        name,
+        OpKind::Lstm {
+            input,
+            hidden: HIDDEN,
+            layers: 1,
+            seq: SEQ,
+            bidirectional,
+            bias: true,
+        },
+        vec![SEQ, batch, input],
+    ));
+}
+
+/// Build GNMT for a batch size.
+pub fn gnmt(batch_size: usize) -> Graph {
+    let mut b = GraphBuilder::new("gnmt", batch_size);
+    let seq_rows = vec![SEQ, batch_size, HIDDEN];
+
+    // --- Encoder ---------------------------------------------------------
+    b.embedding("enc.embed", vec![batch_size, SEQ], VOCAB, HIDDEN);
+    b.ew("enc.dropout", EwKind::Dropout, seq_rows.clone());
+    lstm(&mut b, "enc.lstm0", batch_size, HIDDEN, true);
+    // Bidirectional output is 2×hidden; layer 1 consumes it.
+    lstm(&mut b, "enc.lstm1", batch_size, 2 * HIDDEN, false);
+    for l in 2..LAYERS {
+        lstm(&mut b, &format!("enc.lstm{l}"), batch_size, HIDDEN, false);
+        b.ew(&format!("enc.residual{l}"), EwKind::Add, seq_rows.clone());
+    }
+
+    // --- Decoder ---------------------------------------------------------
+    b.embedding("dec.embed", vec![batch_size, SEQ], VOCAB, HIDDEN);
+    b.ew("dec.dropout", EwKind::Dropout, seq_rows.clone());
+    lstm(&mut b, "dec.lstm0", batch_size, HIDDEN, false);
+
+    // Bahdanau attention over encoder states, batched across decoder steps:
+    // score = vᵀ·tanh(W_q·q + W_k·k); context = attn·enc_out.
+    b.linear("attn.q_proj", vec![batch_size, SEQ, HIDDEN], HIDDEN, HIDDEN, false);
+    b.linear("attn.k_proj", vec![batch_size, SEQ, HIDDEN], HIDDEN, HIDDEN, false);
+    b.ew("attn.tanh", EwKind::Tanh, vec![batch_size, SEQ, HIDDEN]);
+    b.bmm("attn.scores", batch_size, SEQ, HIDDEN, SEQ);
+    b.softmax("attn.softmax", vec![batch_size, SEQ, SEQ]);
+    b.bmm("attn.context", batch_size, SEQ, SEQ, HIDDEN);
+    // Decoder layers 1..4 consume [hidden ; context].
+    b.concat("attn.cat", vec![SEQ, batch_size, 2 * HIDDEN], 2);
+    for l in 1..LAYERS {
+        lstm(&mut b, &format!("dec.lstm{l}"), batch_size, 2 * HIDDEN, false);
+        if l >= 2 {
+            b.ew(&format!("dec.residual{l}"), EwKind::Add, seq_rows.clone());
+        }
+    }
+
+    // Classifier + loss.
+    b.linear(
+        "classifier",
+        vec![batch_size, SEQ, HIDDEN],
+        HIDDEN,
+        VOCAB,
+        true,
+    );
+    b.cross_entropy("loss", batch_size * SEQ, VOCAB);
+    b.finish(OptimizerKind::Adam)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opgraph::MlpOp;
+
+    #[test]
+    fn has_eight_lstm_layers() {
+        let g = gnmt(32);
+        let lstms = g
+            .ops
+            .iter()
+            .filter(|o| o.kind.mlp_op() == Some(MlpOp::Lstm))
+            .count();
+        assert_eq!(lstms, 8); // 4 encoder + 4 decoder
+    }
+
+    #[test]
+    fn parameter_count_in_gnmt_range() {
+        // MLPerf GNMT-4: ~160M parameters (embeddings dominate).
+        let g = gnmt(32);
+        let p = g.parameter_count() as f64;
+        assert!(p > 120e6 && p < 220e6, "{p}");
+    }
+
+    #[test]
+    fn recurrent_time_dominated_by_lstms() {
+        use crate::device::Device;
+        let trace = crate::OperationTracker::new(Device::P4000).track(&gnmt(16));
+        let lstm_ms: f64 = trace
+            .ops
+            .iter()
+            .filter(|o| o.op.kind.mlp_op() == Some(MlpOp::Lstm))
+            .map(|o| o.total_ms())
+            .sum();
+        assert!(lstm_ms / trace.run_time_ms() > 0.3);
+    }
+
+    #[test]
+    fn bidirectional_first_encoder_layer() {
+        let g = gnmt(8);
+        let first = g.ops.iter().find(|o| o.name == "enc.lstm0").unwrap();
+        assert!(matches!(
+            first.kind,
+            OpKind::Lstm {
+                bidirectional: true,
+                ..
+            }
+        ));
+    }
+}

@@ -1,0 +1,187 @@
+//! Inception v3 [Szegedy et al., 2015] — torchvision layout, 3×299×299.
+//!
+//! Inception exercises the "large fan-out" graph shape the paper calls out
+//! (§5.2.1): each inception module runs several parallel convolution
+//! branches and concatenates their outputs.
+//!
+//! Simplification (documented in DESIGN.md): the factorized 1×7/7×1 and
+//! 1×3/3×1 convolution pairs of modules B/C are folded into single square
+//! 3×3 convolutions with matching channel counts. Habitat's conv2d feature
+//! space — like the paper's §4.3.1 sampler — covers square kernels only,
+//! and the folded form preserves branch structure and ≈FLOP balance.
+
+use crate::models::GraphBuilder;
+use crate::opgraph::{OptimizerKind, PoolKind};
+use crate::Graph;
+
+/// Inception-A: 1×1 / 5×5 / double-3×3 / pool-proj branches.
+fn inception_a(b: &mut GraphBuilder, name: &str, input: Vec<usize>, pool_ch: usize) -> Vec<usize> {
+    let (n, _, h, w) = (input[0], input[1], input[2], input[3]);
+    b.conv_bn_relu(&format!("{name}.b1x1"), input.clone(), 64, 1, 1, 0);
+    let x = b.conv_bn_relu(&format!("{name}.b5x5_1"), input.clone(), 48, 1, 1, 0);
+    b.conv_bn_relu(&format!("{name}.b5x5_2"), x, 64, 5, 1, 2);
+    let x = b.conv_bn_relu(&format!("{name}.b3x3dbl_1"), input.clone(), 64, 1, 1, 0);
+    let x = b.conv_bn_relu(&format!("{name}.b3x3dbl_2"), x, 96, 3, 1, 1);
+    b.conv_bn_relu(&format!("{name}.b3x3dbl_3"), x, 96, 3, 1, 1);
+    let p = b.pool(&format!("{name}.pool"), input, PoolKind::Avg, 3, 1, 1);
+    b.conv_bn_relu(&format!("{name}.pool_proj"), p, pool_ch, 1, 1, 0);
+    let out_ch = 64 + 64 + 96 + pool_ch;
+    let out = vec![n, out_ch, h, w];
+    b.concat(&format!("{name}.cat"), out.clone(), 4);
+    out
+}
+
+/// Reduction-A: strided 3×3 + double-3×3 + maxpool.
+fn reduction_a(b: &mut GraphBuilder, name: &str, input: Vec<usize>) -> Vec<usize> {
+    let n = input[0];
+    let x1 = b.conv_bn_relu(&format!("{name}.b3x3"), input.clone(), 384, 3, 2, 0);
+    let x = b.conv_bn_relu(&format!("{name}.b3x3dbl_1"), input.clone(), 64, 1, 1, 0);
+    let x = b.conv_bn_relu(&format!("{name}.b3x3dbl_2"), x, 96, 3, 1, 1);
+    b.conv_bn_relu(&format!("{name}.b3x3dbl_3"), x, 96, 3, 2, 0);
+    b.pool(&format!("{name}.pool"), input, PoolKind::Max, 3, 2, 0);
+    let out = vec![n, 384 + 96 + 288, x1[2], x1[3]];
+    b.concat(&format!("{name}.cat"), out.clone(), 3);
+    out
+}
+
+/// Inception-B (17×17 modules) with factorized convs folded to 3×3.
+fn inception_b(b: &mut GraphBuilder, name: &str, input: Vec<usize>, ch7: usize) -> Vec<usize> {
+    let (n, _, h, w) = (input[0], input[1], input[2], input[3]);
+    b.conv_bn_relu(&format!("{name}.b1x1"), input.clone(), 192, 1, 1, 0);
+    // 1×7+7×1 pair → one 3×3 (square-kernel fold).
+    let x = b.conv_bn_relu(&format!("{name}.b7x7_1"), input.clone(), ch7, 1, 1, 0);
+    b.conv_bn_relu(&format!("{name}.b7x7_2"), x, 192, 3, 1, 1);
+    // Double 7×7 branch → two 3×3.
+    let x = b.conv_bn_relu(&format!("{name}.b7x7dbl_1"), input.clone(), ch7, 1, 1, 0);
+    let x = b.conv_bn_relu(&format!("{name}.b7x7dbl_2"), x, ch7, 3, 1, 1);
+    b.conv_bn_relu(&format!("{name}.b7x7dbl_3"), x, 192, 3, 1, 1);
+    let p = b.pool(&format!("{name}.pool"), input, PoolKind::Avg, 3, 1, 1);
+    b.conv_bn_relu(&format!("{name}.pool_proj"), p, 192, 1, 1, 0);
+    let out = vec![n, 768, h, w];
+    b.concat(&format!("{name}.cat"), out.clone(), 4);
+    out
+}
+
+/// Reduction-B.
+fn reduction_b(b: &mut GraphBuilder, name: &str, input: Vec<usize>) -> Vec<usize> {
+    let n = input[0];
+    let x = b.conv_bn_relu(&format!("{name}.b3x3_1"), input.clone(), 192, 1, 1, 0);
+    let x1 = b.conv_bn_relu(&format!("{name}.b3x3_2"), x, 320, 3, 2, 0);
+    let x = b.conv_bn_relu(&format!("{name}.b7x7x3_1"), input.clone(), 192, 1, 1, 0);
+    let x = b.conv_bn_relu(&format!("{name}.b7x7x3_2"), x, 192, 3, 1, 1);
+    let x = b.conv_bn_relu(&format!("{name}.b7x7x3_3"), x, 192, 3, 2, 0);
+    b.pool(&format!("{name}.pool"), input, PoolKind::Max, 3, 2, 0);
+    let out = vec![n, 320 + 192 + 768, x1[2], x1[3]];
+    debug_assert_eq!(x[2], x1[2]);
+    b.concat(&format!("{name}.cat"), out.clone(), 3);
+    out
+}
+
+/// Inception-C (8×8 modules) with 1×3/3×1 splits folded to 3×3.
+fn inception_c(b: &mut GraphBuilder, name: &str, input: Vec<usize>) -> Vec<usize> {
+    let (n, _, h, w) = (input[0], input[1], input[2], input[3]);
+    b.conv_bn_relu(&format!("{name}.b1x1"), input.clone(), 320, 1, 1, 0);
+    let x = b.conv_bn_relu(&format!("{name}.b3x3_1"), input.clone(), 384, 1, 1, 0);
+    b.conv_bn_relu(&format!("{name}.b3x3_2"), x, 768, 3, 1, 1); // 2×384 split folded
+    let x = b.conv_bn_relu(&format!("{name}.b3x3dbl_1"), input.clone(), 448, 1, 1, 0);
+    let x = b.conv_bn_relu(&format!("{name}.b3x3dbl_2"), x, 384, 3, 1, 1);
+    b.conv_bn_relu(&format!("{name}.b3x3dbl_3"), x, 768, 3, 1, 1); // split folded
+    let p = b.pool(&format!("{name}.pool"), input, PoolKind::Avg, 3, 1, 1);
+    b.conv_bn_relu(&format!("{name}.pool_proj"), p, 192, 1, 1, 0);
+    let out = vec![n, 320 + 768 + 768 + 192, h, w];
+    b.concat(&format!("{name}.cat"), out.clone(), 4);
+    out
+}
+
+/// Build Inception v3 for a batch size (3×299×299 input).
+pub fn inception3(batch_size: usize) -> Graph {
+    let mut b = GraphBuilder::new("inception3", batch_size);
+    // Stem.
+    let x = b.conv_bn_relu("stem.1", vec![batch_size, 3, 299, 299], 32, 3, 2, 0);
+    let x = b.conv_bn_relu("stem.2", x, 32, 3, 1, 0);
+    let x = b.conv_bn_relu("stem.3", x, 64, 3, 1, 1);
+    let x = b.pool("stem.pool1", x, PoolKind::Max, 3, 2, 0);
+    let x = b.conv_bn_relu("stem.4", x, 80, 1, 1, 0);
+    let x = b.conv_bn_relu("stem.5", x, 192, 3, 1, 0);
+    let x = b.pool("stem.pool2", x, PoolKind::Max, 3, 2, 0);
+    debug_assert_eq!(&x[1..], &[192, 35, 35]);
+
+    // 35×35 modules.
+    let x = inception_a(&mut b, "mixed5b", x, 32);
+    let x = inception_a(&mut b, "mixed5c", x, 64);
+    let x = inception_a(&mut b, "mixed5d", x, 64);
+    let x = reduction_a(&mut b, "mixed6a", x);
+    debug_assert_eq!(&x[1..], &[768, 17, 17]);
+
+    // 17×17 modules.
+    let x = inception_b(&mut b, "mixed6b", x, 128);
+    let x = inception_b(&mut b, "mixed6c", x, 160);
+    let x = inception_b(&mut b, "mixed6d", x, 160);
+    let x = inception_b(&mut b, "mixed6e", x, 192);
+    let x = reduction_b(&mut b, "mixed7a", x);
+    debug_assert_eq!(&x[1..], &[1280, 8, 8]);
+
+    // 8×8 modules.
+    let x = inception_c(&mut b, "mixed7b", x);
+    let x = inception_c(&mut b, "mixed7c", x);
+    debug_assert_eq!(&x[1..], &[2048, 8, 8]);
+
+    // Head.
+    b.pool("avgpool", x, PoolKind::AdaptiveAvg, 1, 1, 0);
+    b.linear("fc", vec![batch_size, 2048], 2048, 1000, true);
+    b.cross_entropy("loss", batch_size, 1000);
+    b.finish(OptimizerKind::Sgd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opgraph::OpKind;
+
+    #[test]
+    fn builds_with_expected_fanout() {
+        let g = inception3(16);
+        // 11 inception/reduction modules ⇒ many concats.
+        let cats = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::Concat { .. }))
+            .count();
+        assert_eq!(cats, 11);
+    }
+
+    #[test]
+    fn more_convs_than_resnet() {
+        let inc = inception3(16);
+        let res = crate::models::resnet50(16);
+        let count = |g: &crate::Graph| {
+            g.ops
+                .iter()
+                .filter(|o| matches!(o.kind, OpKind::Conv2d { .. }))
+                .count()
+        };
+        assert!(count(&inc) > count(&res));
+    }
+
+    #[test]
+    fn parameter_count_in_inceptionish_range() {
+        // torchvision inception_v3: 27.2M (with aux head; ours omits the
+        // aux classifier but folds factorized convs to square, which adds
+        // parameters). Accept a generous band around the reference.
+        let g = inception3(16);
+        let p = g.parameter_count() as f64;
+        assert!(p > 20e6 && p < 45e6, "{p}");
+    }
+
+    #[test]
+    fn final_feature_map_is_8x8() {
+        let g = inception3(4);
+        let last_conv = g
+            .ops
+            .iter()
+            .rev()
+            .find(|o| matches!(o.kind, OpKind::Conv2d { .. }))
+            .unwrap();
+        assert_eq!(last_conv.input[2], 8);
+    }
+}

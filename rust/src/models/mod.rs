@@ -1,0 +1,289 @@
+//! Model zoo: the paper's five evaluation DNNs (Table 4) as operation
+//! graphs, plus a small MLP used by self-tests.
+//!
+//! | Application      | Model        | Architecture | Input               |
+//! |------------------|--------------|--------------|---------------------|
+//! | Image classif.   | ResNet-50    | Convolution  | ImageNet 3×224×224  |
+//! | Image classif.   | Inception v3 | Convolution  | ImageNet 3×299×299  |
+//! | Machine transl.  | Transformer  | Attention    | WMT'16, seq len 50  |
+//! | Machine transl.  | GNMT         | Recurrent    | WMT'16, seq len 50  |
+//! | Image generation | DCGAN        | Convolution  | LSUN 3×64×64        |
+//!
+//! Graphs are built layer-by-layer with concrete shapes, mirroring the
+//! reference implementations (torchvision ResNet/Inception, the original
+//! Transformer-base, MLPerf GNMT, the PyTorch DCGAN example). Known
+//! simplifications are documented per model (e.g. Inception's factorized
+//! 1×7/7×1 convolutions are folded into square kernels, since Habitat's
+//! conv2d feature space — like the paper's — samples square kernels only).
+
+pub mod dcgan;
+pub mod extra;
+pub mod gnmt;
+pub mod inception;
+pub mod resnet;
+pub mod transformer;
+
+use crate::opgraph::shape::conv_out;
+use crate::opgraph::{EwKind, Op, OpKind, OptimizerKind, PoolKind};
+use crate::Graph;
+
+pub use dcgan::dcgan;
+pub use extra::{bert_base, vgg16};
+pub use gnmt::gnmt;
+pub use inception::inception3;
+pub use resnet::resnet50;
+pub use transformer::transformer;
+
+/// All model names, in the paper's order.
+pub const MODEL_NAMES: [&str; 5] = ["resnet50", "inception3", "transformer", "gnmt", "dcgan"];
+
+/// Build a model by name.
+pub fn by_name(name: &str, batch_size: usize) -> Option<Graph> {
+    match name {
+        "resnet50" => Some(resnet50(batch_size)),
+        "inception3" | "inceptionv3" => Some(inception3(batch_size)),
+        "transformer" => Some(transformer(batch_size)),
+        "gnmt" => Some(gnmt(batch_size)),
+        "dcgan" => Some(dcgan(batch_size)),
+        "vgg16" => Some(vgg16(batch_size)),
+        "bert_base" | "bert" => Some(bert_base(batch_size)),
+        "mlp" => Some(mlp_benchmark_net(batch_size)),
+        _ => None,
+    }
+}
+
+/// The batch sizes evaluated per model (three each, Fig. 3).
+pub fn eval_batch_sizes(name: &str) -> &'static [usize] {
+    match name {
+        "resnet50" | "inception3" | "gnmt" => &[16, 32, 64],
+        "transformer" => &[32, 48, 64],
+        "dcgan" => &[64, 96, 128],
+        _ => &[16, 32, 64],
+    }
+}
+
+/// Small fully-connected network — a fast workload for tests/benches.
+pub fn mlp_benchmark_net(batch_size: usize) -> Graph {
+    let mut b = GraphBuilder::new("mlp", batch_size);
+    let dims = [1024, 1024, 1024, 256, 10];
+    let mut in_dim = 784;
+    for (i, out_dim) in dims.into_iter().enumerate() {
+        b.linear(&format!("fc{i}"), vec![batch_size, in_dim], in_dim, out_dim, true);
+        if i + 1 < dims.len() {
+            b.ew(&format!("relu{i}"), EwKind::Relu, vec![batch_size, out_dim]);
+        }
+        in_dim = out_dim;
+    }
+    b.cross_entropy("loss", batch_size, 10);
+    b.finish(OptimizerKind::Sgd)
+}
+
+/// Shared builder: tracks op naming and parameter totals, and appends the
+/// optimizer step that closes every training iteration.
+pub struct GraphBuilder {
+    graph: Graph,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str, batch_size: usize) -> Self {
+        GraphBuilder {
+            graph: Graph::new(name, batch_size),
+        }
+    }
+
+    pub fn push(&mut self, op: Op) {
+        self.graph.push(op);
+    }
+
+    /// Conv2d; returns the output shape.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        &mut self,
+        name: &str,
+        input: Vec<usize>,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+        bias: bool,
+    ) -> Vec<usize> {
+        let in_ch = input[1];
+        let oh = conv_out(input[2], kernel, stride, padding);
+        let ow = conv_out(input[3], kernel, stride, padding);
+        let out = vec![input[0], out_ch, oh, ow];
+        self.push(Op::new(
+            name,
+            OpKind::Conv2d {
+                in_ch,
+                out_ch,
+                kernel,
+                stride,
+                padding,
+                bias,
+            },
+            input,
+        ));
+        out
+    }
+
+    /// Conv → BatchNorm → ReLU, the ubiquitous CNN building block.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv_bn_relu(
+        &mut self,
+        name: &str,
+        input: Vec<usize>,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+    ) -> Vec<usize> {
+        let out = self.conv(&format!("{name}.conv"), input, out_ch, kernel, stride, padding, false);
+        self.batch_norm(&format!("{name}.bn"), out.clone());
+        self.ew(&format!("{name}.relu"), EwKind::Relu, out.clone());
+        out
+    }
+
+    pub fn batch_norm(&mut self, name: &str, input: Vec<usize>) {
+        let channels = input[1];
+        self.push(Op::new(name, OpKind::BatchNorm2d { channels }, input));
+    }
+
+    pub fn layer_norm(&mut self, name: &str, input: Vec<usize>) {
+        let dim = *input.last().unwrap();
+        self.push(Op::new(name, OpKind::LayerNorm { dim }, input));
+    }
+
+    pub fn ew(&mut self, name: &str, kind: EwKind, input: Vec<usize>) {
+        self.push(Op::new(name, OpKind::Elementwise { kind }, input));
+    }
+
+    pub fn linear(
+        &mut self,
+        name: &str,
+        input: Vec<usize>,
+        in_features: usize,
+        out_features: usize,
+        bias: bool,
+    ) -> Vec<usize> {
+        debug_assert_eq!(*input.last().unwrap(), in_features);
+        let mut out = input.clone();
+        *out.last_mut().unwrap() = out_features;
+        self.push(Op::new(
+            name,
+            OpKind::Linear {
+                in_features,
+                out_features,
+                bias,
+            },
+            input,
+        ));
+        out
+    }
+
+    pub fn bmm(&mut self, name: &str, b: usize, l: usize, m: usize, r: usize) {
+        self.push(Op::new(name, OpKind::BatchedMatmul { b, l, m, r }, vec![b, l, m]));
+    }
+
+    pub fn softmax(&mut self, name: &str, input: Vec<usize>) {
+        let dim = *input.last().unwrap();
+        self.push(Op::new(name, OpKind::Softmax { dim }, input));
+    }
+
+    pub fn pool(
+        &mut self,
+        name: &str,
+        input: Vec<usize>,
+        kind: PoolKind,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+    ) -> Vec<usize> {
+        let out = match kind {
+            PoolKind::AdaptiveAvg => vec![input[0], input[1], 1, 1],
+            _ => vec![
+                input[0],
+                input[1],
+                conv_out(input[2], kernel, stride, padding),
+                conv_out(input[3], kernel, stride, padding),
+            ],
+        };
+        self.push(Op::new(
+            name,
+            OpKind::Pool2d {
+                kind,
+                kernel,
+                stride,
+                padding,
+            },
+            input,
+        ));
+        out
+    }
+
+    pub fn embedding(&mut self, name: &str, indices: Vec<usize>, vocab: usize, dim: usize) {
+        self.push(Op::new(name, OpKind::Embedding { vocab, dim }, indices));
+    }
+
+    pub fn concat(&mut self, name: &str, total_shape: Vec<usize>, inputs: usize) {
+        self.push(Op::new(name, OpKind::Concat { inputs }, total_shape));
+    }
+
+    pub fn cross_entropy(&mut self, name: &str, rows: usize, classes: usize) {
+        self.push(Op::new(name, OpKind::CrossEntropy { classes }, vec![rows, classes]));
+    }
+
+    /// Append the optimizer step over all parameters accumulated so far
+    /// and return the finished graph.
+    pub fn finish(mut self, kind: OptimizerKind) -> Graph {
+        let params = self.graph.parameter_count();
+        self.graph.push(Op::new(
+            "optimizer",
+            OpKind::OptimizerStep { kind, params },
+            vec![1],
+        ));
+        self.graph
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_covers_all_models() {
+        for name in MODEL_NAMES {
+            let g = by_name(name, 16).unwrap_or_else(|| panic!("{name} missing"));
+            assert!(!g.is_empty(), "{name} graph empty");
+            assert_eq!(g.batch_size, 16);
+        }
+        assert!(by_name("vgg", 16).is_none());
+    }
+
+    #[test]
+    fn every_model_ends_with_optimizer() {
+        for name in MODEL_NAMES {
+            let g = by_name(name, 16).unwrap();
+            assert!(
+                matches!(g.ops.last().unwrap().kind, OpKind::OptimizerStep { .. }),
+                "{name} must end with the weight update"
+            );
+        }
+    }
+
+    #[test]
+    fn every_model_has_kernel_varying_and_alike_ops() {
+        for name in MODEL_NAMES {
+            let g = by_name(name, 16).unwrap();
+            let varying = g.kernel_varying_count();
+            assert!(varying > 0, "{name} has no kernel-varying ops");
+            assert!(varying < g.len(), "{name} has no kernel-alike ops");
+        }
+    }
+
+    #[test]
+    fn eval_batch_sizes_are_three_each() {
+        for name in MODEL_NAMES {
+            assert_eq!(eval_batch_sizes(name).len(), 3);
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! ResNet-50 [He et al., CVPR'16] — torchvision layout, ImageNet input.
+//!
+//! Stem (7×7/2 conv, maxpool) → four stages of bottleneck blocks
+//! ([3, 4, 6, 3]) → global average pool → 1000-way classifier.
+//! The paper trains it with SGD (§5.1).
+
+use crate::models::GraphBuilder;
+use crate::opgraph::{EwKind, OptimizerKind, PoolKind};
+use crate::Graph;
+
+/// One bottleneck block: 1×1 reduce → 3×3 → 1×1 expand (+ projection
+/// shortcut when shape changes), residual add, ReLU.
+fn bottleneck(
+    b: &mut GraphBuilder,
+    name: &str,
+    input: Vec<usize>,
+    width: usize,
+    stride: usize,
+) -> Vec<usize> {
+    let in_ch = input[1];
+    let out_ch = width * 4;
+    let x = b.conv_bn_relu(&format!("{name}.reduce"), input.clone(), width, 1, 1, 0);
+    let x = b.conv_bn_relu(&format!("{name}.conv3x3"), x, width, 3, stride, 1);
+    let out = b.conv(&format!("{name}.expand.conv"), x, out_ch, 1, 1, 0, false);
+    b.batch_norm(&format!("{name}.expand.bn"), out.clone());
+    if in_ch != out_ch || stride != 1 {
+        let proj = b.conv(&format!("{name}.downsample.conv"), input, out_ch, 1, stride, 0, false);
+        b.batch_norm(&format!("{name}.downsample.bn"), proj);
+    }
+    b.ew(&format!("{name}.add"), EwKind::Add, out.clone());
+    b.ew(&format!("{name}.relu"), EwKind::Relu, out.clone());
+    out
+}
+
+/// Build ResNet-50 for a batch size (ImageNet 3×224×224 input).
+pub fn resnet50(batch_size: usize) -> Graph {
+    let mut b = GraphBuilder::new("resnet50", batch_size);
+    // Stem.
+    let x = b.conv_bn_relu("stem", vec![batch_size, 3, 224, 224], 64, 7, 2, 3);
+    let mut x = b.pool("stem.maxpool", x, PoolKind::Max, 3, 2, 1);
+
+    // Stages: (width, blocks, first-stride).
+    let stages = [(64, 3, 1), (128, 4, 2), (256, 6, 2), (512, 3, 2)];
+    for (s, (width, blocks, stride)) in stages.into_iter().enumerate() {
+        for block in 0..blocks {
+            let st = if block == 0 { stride } else { 1 };
+            x = bottleneck(&mut b, &format!("layer{}.{block}", s + 1), x, width, st);
+        }
+    }
+
+    // Head.
+    let x = b.pool("avgpool", x, PoolKind::AdaptiveAvg, 1, 1, 0);
+    debug_assert_eq!(x, vec![batch_size, 2048, 1, 1]);
+    b.linear("fc", vec![batch_size, 2048], 2048, 1000, true);
+    b.cross_entropy("loss", batch_size, 1000);
+    b.finish(OptimizerKind::Sgd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opgraph::OpKind;
+
+    #[test]
+    fn parameter_count_close_to_reference() {
+        // torchvision resnet50: 25.557M parameters.
+        let g = resnet50(32);
+        let params = g.parameter_count() as f64;
+        assert!(
+            (params / 25.557e6 - 1.0).abs() < 0.02,
+            "got {params} params"
+        );
+    }
+
+    #[test]
+    fn conv_count_matches_reference() {
+        // 53 convolutions in resnet50 (incl. downsample projections).
+        let g = resnet50(32);
+        let convs = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::Conv2d { .. }))
+            .count();
+        assert_eq!(convs, 53);
+    }
+
+    #[test]
+    fn spatial_pipeline_shapes() {
+        // Final feature map before pooling must be 2048×7×7.
+        let g = resnet50(8);
+        let last_conv = g
+            .ops
+            .iter()
+            .rev()
+            .find(|o| matches!(o.kind, OpKind::Conv2d { .. }))
+            .unwrap();
+        assert_eq!(last_conv.input[2], 7);
+    }
+
+    #[test]
+    fn batch_size_threads_through() {
+        for bs in [1, 16, 64] {
+            let g = resnet50(bs);
+            assert!(g.ops.iter().all(|o| matches!(o.kind, OpKind::OptimizerStep { .. })
+                || o.input[0] == bs
+                || o.input.len() < 2));
+        }
+    }
+}

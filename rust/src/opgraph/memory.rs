@@ -1,0 +1,186 @@
+//! Training-memory footprint estimation.
+//!
+//! Habitat's predictions are for a (model, batch size) pair — but a
+//! destination GPU can only run that pair if it *fits* (§6.1.3 exists
+//! precisely because the *origin* sometimes cannot fit the batch). This
+//! estimator answers "will it fit?" for any device with the standard
+//! training-memory accounting:
+//!
+//!   weights + gradients + optimizer state + saved activations + workspace
+//!
+//! Activations use the autograd rule: every op that needs its input for
+//! backward keeps it alive until the backward pass.
+
+use crate::device::Device;
+use crate::opgraph::{Op, OpKind, OptimizerKind};
+use crate::Graph;
+
+/// Estimated training-memory footprint, bytes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryEstimate {
+    pub weights: f64,
+    pub gradients: f64,
+    pub optimizer_state: f64,
+    pub activations: f64,
+    /// cuDNN-style workspace + allocator slack (fraction of activations).
+    pub workspace: f64,
+}
+
+impl MemoryEstimate {
+    pub fn total(&self) -> f64 {
+        self.weights + self.gradients + self.optimizer_state + self.activations + self.workspace
+    }
+
+    /// Total in GiB.
+    pub fn total_gib(&self) -> f64 {
+        self.total() / (1u64 << 30) as f64
+    }
+}
+
+/// Saved-activation bytes for one op (input kept for backward).
+fn saved_activation_bytes(op: &Op, elem_bytes: f64) -> f64 {
+    match op.kind {
+        // Elementwise ops with trivial backward recompute from the output
+        // (ReLU keeps a bitmask at most); dropout keeps its mask.
+        OpKind::Elementwise { .. } => op.input_numel() as f64 * elem_bytes * 0.25,
+        // Optimizer runs after backward: saves nothing.
+        OpKind::OptimizerStep { .. } => 0.0,
+        // Everything else keeps its input tensor.
+        _ => op.input_numel() as f64 * elem_bytes,
+    }
+}
+
+/// Per-parameter optimizer-state floats (FP32 regardless of precision).
+fn optimizer_state_floats(graph: &Graph) -> f64 {
+    graph
+        .ops
+        .iter()
+        .filter_map(|o| match o.kind {
+            OpKind::OptimizerStep { kind, .. } => Some(match kind {
+                OptimizerKind::Sgd => 1.0,  // momentum buffer
+                OptimizerKind::Adam => 2.0, // m + v
+            }),
+            _ => None,
+        })
+        .next()
+        .unwrap_or(1.0)
+}
+
+/// Estimate the training footprint of one iteration of `graph`.
+pub fn estimate(graph: &Graph, precision: crate::lowering::Precision) -> MemoryEstimate {
+    let elem = precision.elem_bytes();
+    let params = graph.parameter_count() as f64;
+    let weights = params * 4.0; // master weights stay FP32 under AMP too
+    let gradients = params * elem;
+    let optimizer_state = params * 4.0 * optimizer_state_floats(graph);
+    let activations: f64 = graph
+        .ops
+        .iter()
+        .map(|o| saved_activation_bytes(o, elem))
+        .sum();
+    MemoryEstimate {
+        weights,
+        gradients,
+        optimizer_state,
+        activations,
+        workspace: 0.15 * activations,
+    }
+}
+
+/// Does one training iteration of `graph` fit on `device`? Uses a 6%
+/// reserve for the CUDA context + framework overhead.
+pub fn fits(graph: &Graph, device: Device, precision: crate::lowering::Precision) -> bool {
+    let budget = device.spec().mem_gib * 0.94 * (1u64 << 30) as f64;
+    estimate(graph, precision).total() <= budget
+}
+
+/// Largest evaluated batch size that fits (doubling + binary search).
+pub fn max_batch<F: Fn(usize) -> Graph>(
+    build: F,
+    device: Device,
+    precision: crate::lowering::Precision,
+) -> usize {
+    if !fits(&build(1), device, precision) {
+        return 0;
+    }
+    let mut lo = 1usize;
+    let mut hi = 2usize;
+    while hi <= 65_536 && fits(&build(hi), device, precision) {
+        lo = hi;
+        hi *= 2;
+    }
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if fits(&build(mid), device, precision) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowering::Precision;
+    use crate::models;
+
+    #[test]
+    fn resnet50_footprint_in_plausible_range() {
+        // ResNet-50 at batch 32 trains comfortably in ~6–14 GiB in practice.
+        let est = estimate(&models::resnet50(32), Precision::Fp32);
+        let gib = est.total_gib();
+        assert!(gib > 2.0 && gib < 16.0, "{gib} GiB");
+        // Weights ≈ 25.5M × 4B ≈ 102 MB.
+        assert!((est.weights / 102e6 - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn activations_scale_with_batch() {
+        let a = estimate(&models::resnet50(16), Precision::Fp32).activations;
+        let b = estimate(&models::resnet50(64), Precision::Fp32).activations;
+        assert!((b / a - 4.0).abs() < 0.1, "{}", b / a);
+    }
+
+    #[test]
+    fn amp_reduces_activation_memory() {
+        let fp32 = estimate(&models::resnet50(32), Precision::Fp32);
+        let amp = estimate(&models::resnet50(32), Precision::Amp);
+        assert!(amp.activations < fp32.activations);
+        // Master weights + optimizer state unchanged.
+        assert_eq!(amp.weights, fp32.weights);
+        assert_eq!(amp.optimizer_state, fp32.optimizer_state);
+    }
+
+    #[test]
+    fn adam_state_twice_sgd() {
+        let resnet = estimate(&models::resnet50(16), Precision::Fp32); // SGD
+        let ratio = resnet.optimizer_state / resnet.weights;
+        assert!((ratio - 1.0).abs() < 1e-9, "SGD momentum = 1× weights");
+        let gnmt = estimate(&models::gnmt(16), Precision::Fp32); // Adam
+        assert!((gnmt.optimizer_state / gnmt.weights - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bigger_gpus_fit_bigger_batches() {
+        let p4000 = max_batch(models::resnet50, Device::P4000, Precision::Fp32);
+        let v100 = max_batch(models::resnet50, Device::V100, Precision::Fp32);
+        assert!(p4000 >= 16, "{p4000}");
+        assert!(v100 > p4000, "{v100} !> {p4000}");
+    }
+
+    #[test]
+    fn amp_fits_bigger_batches() {
+        let fp32 = max_batch(models::resnet50, Device::Rtx2070, Precision::Fp32);
+        let amp = max_batch(models::resnet50, Device::Rtx2070, Precision::Amp);
+        assert!(amp > fp32);
+    }
+
+    #[test]
+    fn max_batch_is_consistent_with_fits() {
+        let b = max_batch(models::gnmt, Device::T4, Precision::Fp32);
+        assert!(fits(&models::gnmt(b), Device::T4, Precision::Fp32));
+        assert!(!fits(&models::gnmt(b + 1), Device::T4, Precision::Fp32));
+    }
+}

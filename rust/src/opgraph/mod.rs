@@ -1,0 +1,88 @@
+//! DNN computation graphs.
+//!
+//! Habitat operates on the *trace of operations* executed by one training
+//! iteration (the paper extracts it by monkey-patching PyTorch, §4.1). Here
+//! the equivalent substrate is an explicit operation graph: each node
+//! carries its operator kind, concrete parameters, and concrete input
+//! shape, exactly the information Habitat's wrappers record at runtime.
+//!
+//! A [`Graph`] is stored in execution order. Iteration time is additive
+//! over operations (GPU kernels within one stream serialize), so execution
+//! order is all the predictor needs — graph fan-out (Inception) or
+//! dual-network structure (DCGAN) shows up only in *which* ops appear.
+
+pub mod memory;
+pub mod op;
+pub mod shape;
+
+pub use op::{EwKind, MlpOp, Op, OpKind, OptimizerKind, PoolKind};
+pub use shape::{conv_out, Shape};
+
+
+/// A DNN training-iteration computation graph, in execution order.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// Human-readable model name (e.g. `"resnet50"`).
+    pub name: String,
+    /// Training batch size the graph was instantiated for.
+    pub batch_size: usize,
+    /// Operations in forward-pass execution order.
+    pub ops: Vec<Op>,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>, batch_size: usize) -> Self {
+        Graph {
+            name: name.into(),
+            batch_size,
+            ops: Vec::new(),
+        }
+    }
+
+    /// Append an operation.
+    pub fn push(&mut self, op: Op) {
+        self.ops.push(op);
+    }
+
+    /// Total number of operations.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Count of operations that are *kernel-varying* (predicted by MLPs).
+    pub fn kernel_varying_count(&self) -> usize {
+        self.ops.iter().filter(|o| o.kind.is_kernel_varying()).count()
+    }
+
+    /// Total trainable-parameter count implied by the graph's layer ops.
+    pub fn parameter_count(&self) -> u64 {
+        self.ops.iter().map(|o| o.kind.parameter_count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_len() {
+        let mut g = Graph::new("toy", 8);
+        assert!(g.is_empty());
+        g.push(Op::new(
+            "fc",
+            OpKind::Linear {
+                in_features: 16,
+                out_features: 4,
+                bias: true,
+            },
+            vec![8, 16],
+        ));
+        assert_eq!(g.len(), 1);
+        assert_eq!(g.kernel_varying_count(), 1);
+        assert_eq!(g.parameter_count(), 16 * 4 + 4);
+    }
+}

@@ -1,0 +1,510 @@
+//! Operation kinds and per-operation parameters.
+//!
+//! The set mirrors what the paper's five evaluation models exercise
+//! (§5.1): convolution families, recurrent layers, attention building
+//! blocks, normalization, activations, pooling, losses, and the optimizer
+//! step. Each kind is classified as *kernel-varying* (implemented with
+//! architecture-specific kernels by cuDNN/cuBLAS ⇒ predicted with MLPs) or
+//! *kernel-alike* (same kernels everywhere ⇒ predicted with wave scaling),
+//! following §3.2.
+
+
+use crate::opgraph::shape::{numel, Shape};
+
+/// Simple elementwise operator flavors (all kernel-alike).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EwKind {
+    Relu,
+    LeakyRelu,
+    Tanh,
+    Sigmoid,
+    Gelu,
+    Add,
+    Mul,
+    Scale,
+    Dropout,
+    Copy,
+}
+
+impl EwKind {
+    /// FLOPs per element (rough; transcendentals cost more).
+    pub fn flops_per_elem(self) -> f64 {
+        match self {
+            EwKind::Relu | EwKind::Copy => 1.0,
+            EwKind::Add | EwKind::Mul | EwKind::Scale | EwKind::LeakyRelu | EwKind::Dropout => 2.0,
+            EwKind::Tanh | EwKind::Sigmoid => 10.0,
+            EwKind::Gelu => 14.0,
+        }
+    }
+
+    /// Input + output tensor streams touched per element.
+    pub fn mem_streams(self) -> f64 {
+        match self {
+            EwKind::Add | EwKind::Mul => 3.0, // two reads + one write
+            _ => 2.0,                         // one read + one write
+        }
+    }
+}
+
+/// Pooling flavors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PoolKind {
+    Max,
+    Avg,
+    AdaptiveAvg,
+}
+
+/// Optimizer flavors for the weight-update op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OptimizerKind {
+    /// SGD with momentum: ~4 FLOPs and 4 memory streams per parameter.
+    Sgd,
+    /// Adam: ~12 FLOPs and 6 memory streams per parameter.
+    Adam,
+}
+
+/// Which pre-trained MLP predicts a kernel-varying operation (§3.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MlpOp {
+    Conv2d,
+    Lstm,
+    Bmm,
+    Linear,
+}
+
+impl MlpOp {
+    pub const ALL: [MlpOp; 4] = [MlpOp::Conv2d, MlpOp::Lstm, MlpOp::Bmm, MlpOp::Linear];
+
+    /// Stable identifier used for dataset files and artifact names.
+    pub fn id(self) -> &'static str {
+        match self {
+            MlpOp::Conv2d => "conv2d",
+            MlpOp::Lstm => "lstm",
+            MlpOp::Bmm => "bmm",
+            MlpOp::Linear => "linear",
+        }
+    }
+
+    /// Number of operation-specific input features (paper Table 1).
+    pub fn feature_count(self) -> usize {
+        match self {
+            MlpOp::Conv2d | MlpOp::Lstm => 7,
+            MlpOp::Bmm | MlpOp::Linear => 4,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MlpOp> {
+        MlpOp::ALL.into_iter().find(|o| o.id() == s)
+    }
+}
+
+impl std::fmt::Display for MlpOp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.id())
+    }
+}
+
+/// An operation's kind and parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// 2-D convolution over NCHW input.
+    Conv2d {
+        in_ch: usize,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+        bias: bool,
+    },
+    /// 2-D transposed convolution (DCGAN generator).
+    ConvTranspose2d {
+        in_ch: usize,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+        bias: bool,
+    },
+    /// Fully connected layer over `[rows, in_features]`.
+    Linear {
+        in_features: usize,
+        out_features: usize,
+        bias: bool,
+    },
+    /// Batched matrix multiply `[b,l,m] × [b,m,r]` (attention).
+    BatchedMatmul { b: usize, l: usize, m: usize, r: usize },
+    /// (Multi-layer, optionally bidirectional) LSTM over a full sequence.
+    Lstm {
+        input: usize,
+        hidden: usize,
+        layers: usize,
+        seq: usize,
+        bidirectional: bool,
+        bias: bool,
+    },
+    /// Batch normalization over NCHW input.
+    BatchNorm2d { channels: usize },
+    /// Layer normalization over the trailing dimension.
+    LayerNorm { dim: usize },
+    /// Elementwise op over the input tensor.
+    Elementwise { kind: EwKind },
+    /// Spatial pooling.
+    Pool2d {
+        kind: PoolKind,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+    },
+    /// Softmax over the trailing dimension.
+    Softmax { dim: usize },
+    /// Embedding lookup: `[rows]` indices → `[rows, dim]`.
+    Embedding { vocab: usize, dim: usize },
+    /// Cross-entropy loss over `[rows, classes]` logits.
+    CrossEntropy { classes: usize },
+    /// Concatenation along the channel axis (Inception, GNMT attention).
+    Concat { inputs: usize },
+    /// Optimizer weight update over all model parameters.
+    OptimizerStep { kind: OptimizerKind, params: u64 },
+}
+
+impl OpKind {
+    /// Kernel-varying operations are implemented with GPU-architecture-
+    /// specific kernels (cuDNN algorithm selection, cuBLAS arch dispatch)
+    /// and are predicted with MLPs; everything else is kernel-alike.
+    pub fn is_kernel_varying(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Conv2d { .. }
+                | OpKind::ConvTranspose2d { .. }
+                | OpKind::Linear { .. }
+                | OpKind::BatchedMatmul { .. }
+                | OpKind::Lstm { .. }
+        )
+    }
+
+    /// Which MLP predicts this op, if it is kernel-varying.
+    /// Transposed convolution is the gradient of a convolution with the
+    /// channel roles swapped, so it maps onto the conv2d MLP.
+    pub fn mlp_op(&self) -> Option<MlpOp> {
+        match self {
+            OpKind::Conv2d { .. } | OpKind::ConvTranspose2d { .. } => Some(MlpOp::Conv2d),
+            OpKind::Lstm { .. } => Some(MlpOp::Lstm),
+            OpKind::BatchedMatmul { .. } => Some(MlpOp::Bmm),
+            OpKind::Linear { .. } => Some(MlpOp::Linear),
+            _ => None,
+        }
+    }
+
+    /// Trainable parameters contributed by this op.
+    pub fn parameter_count(&self) -> u64 {
+        match *self {
+            OpKind::Conv2d {
+                in_ch,
+                out_ch,
+                kernel,
+                bias,
+                ..
+            }
+            | OpKind::ConvTranspose2d {
+                in_ch,
+                out_ch,
+                kernel,
+                bias,
+                ..
+            } => (in_ch * out_ch * kernel * kernel + if bias { out_ch } else { 0 }) as u64,
+            OpKind::Linear {
+                in_features,
+                out_features,
+                bias,
+            } => (in_features * out_features + if bias { out_features } else { 0 }) as u64,
+            OpKind::Lstm {
+                input,
+                hidden,
+                layers,
+                bidirectional,
+                bias,
+                ..
+            } => {
+                let dirs = if bidirectional { 2 } else { 1 };
+                let mut total = 0u64;
+                for layer in 0..layers {
+                    let in_dim = if layer == 0 { input } else { hidden * dirs };
+                    // 4 gates: W_ih [4h×in], W_hh [4h×h], plus two bias vecs.
+                    let per_dir =
+                        4 * hidden * in_dim + 4 * hidden * hidden + if bias { 8 * hidden } else { 0 };
+                    total += (per_dir * dirs) as u64;
+                }
+                total
+            }
+            OpKind::BatchNorm2d { channels } => 2 * channels as u64,
+            OpKind::LayerNorm { dim } => 2 * dim as u64,
+            OpKind::Embedding { vocab, dim } => (vocab * dim) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Short name used in traces and the per-op error breakdown (Fig. 4).
+    pub fn short_name(&self) -> &'static str {
+        match self {
+            OpKind::Conv2d { .. } => "conv2d",
+            OpKind::ConvTranspose2d { .. } => "conv_transpose2d",
+            OpKind::Linear { .. } => "linear",
+            OpKind::BatchedMatmul { .. } => "bmm",
+            OpKind::Lstm { .. } => "lstm",
+            OpKind::BatchNorm2d { .. } => "batch_norm",
+            OpKind::LayerNorm { .. } => "layer_norm",
+            OpKind::Elementwise { kind } => match kind {
+                EwKind::Relu => "relu",
+                EwKind::LeakyRelu => "leaky_relu",
+                EwKind::Tanh => "tanh",
+                EwKind::Sigmoid => "sigmoid",
+                EwKind::Gelu => "gelu",
+                EwKind::Add => "__add__",
+                EwKind::Mul => "__mul__",
+                EwKind::Scale => "scale",
+                EwKind::Dropout => "dropout",
+                EwKind::Copy => "copy",
+            },
+            OpKind::Pool2d { kind, .. } => match kind {
+                PoolKind::Max => "max_pool2d",
+                PoolKind::Avg => "avg_pool2d",
+                PoolKind::AdaptiveAvg => "adaptive_avg_pool2d",
+            },
+            OpKind::Softmax { .. } => "softmax",
+            OpKind::Embedding { .. } => "embedding",
+            OpKind::CrossEntropy { .. } => "cross_entropy",
+            OpKind::Concat { .. } => "cat",
+            OpKind::OptimizerStep { .. } => "optimizer_step",
+        }
+    }
+}
+
+/// One node of a [`crate::Graph`]: kind + concrete input shape.
+#[derive(Debug, Clone)]
+pub struct Op {
+    /// Qualified layer name, e.g. `"layer3.4.conv2"`.
+    pub name: String,
+    pub kind: OpKind,
+    /// Concrete shape of the primary input tensor.
+    pub input: Shape,
+}
+
+impl Op {
+    pub fn new(name: impl Into<String>, kind: OpKind, input: Shape) -> Self {
+        Op {
+            name: name.into(),
+            kind,
+            input,
+        }
+    }
+
+    /// Elements in the primary input.
+    pub fn input_numel(&self) -> usize {
+        numel(&self.input)
+    }
+
+    /// MLP feature vector for kernel-varying ops (§3.4 "input features").
+    ///
+    /// Layouts (must match `python/compile/model.py`):
+    /// * conv2d: `[batch, in_ch, out_ch, kernel, stride, padding, image]`
+    /// * lstm:   `[batch, input, hidden, seq, layers, bidir, bias]`
+    /// * bmm:    `[b, l, m, r]`
+    /// * linear: `[rows, in_features, out_features, bias]`
+    pub fn mlp_features(&self) -> Option<(MlpOp, Vec<f64>)> {
+        match self.kind {
+            OpKind::Conv2d {
+                in_ch,
+                out_ch,
+                kernel,
+                stride,
+                padding,
+                ..
+            } => {
+                let batch = self.input[0] as f64;
+                let image = self.input[3] as f64;
+                Some((
+                    MlpOp::Conv2d,
+                    vec![
+                        batch,
+                        in_ch as f64,
+                        out_ch as f64,
+                        kernel as f64,
+                        stride as f64,
+                        padding as f64,
+                        image,
+                    ],
+                ))
+            }
+            // A transposed conv computes over the *output* (upsampled)
+            // spatial extent: its FLOPs equal those of a stride-1 dense
+            // convolution at the output resolution with the same channel
+            // roles — so that is the point in conv2d feature space that
+            // represents it best.
+            OpKind::ConvTranspose2d {
+                in_ch,
+                out_ch,
+                kernel,
+                stride,
+                padding,
+                ..
+            } => {
+                let batch = self.input[0] as f64;
+                let out_img =
+                    crate::opgraph::shape::conv_transpose_out(self.input[3], kernel, stride, padding)
+                        as f64;
+                Some((
+                    MlpOp::Conv2d,
+                    vec![
+                        batch,
+                        in_ch as f64,
+                        out_ch as f64,
+                        kernel as f64,
+                        1.0, // stride-1 equivalent at output resolution
+                        padding as f64,
+                        out_img,
+                    ],
+                ))
+            }
+            OpKind::Lstm {
+                input,
+                hidden,
+                layers,
+                seq,
+                bidirectional,
+                bias,
+            } => {
+                let batch = self.input[1] as f64; // input shape [seq, batch, feat]
+                Some((
+                    MlpOp::Lstm,
+                    vec![
+                        batch,
+                        input as f64,
+                        hidden as f64,
+                        seq as f64,
+                        layers as f64,
+                        bidirectional as u8 as f64,
+                        bias as u8 as f64,
+                    ],
+                ))
+            }
+            OpKind::BatchedMatmul { b, l, m, r } => {
+                Some((MlpOp::Bmm, vec![b as f64, l as f64, m as f64, r as f64]))
+            }
+            OpKind::Linear {
+                in_features,
+                out_features,
+                bias,
+            } => {
+                // Rows = product of all leading dims (e.g. batch × seq).
+                let rows: usize = self.input[..self.input.len() - 1].iter().product();
+                Some((
+                    MlpOp::Linear,
+                    vec![
+                        rows as f64,
+                        in_features as f64,
+                        out_features as f64,
+                        bias as u8 as f64,
+                    ],
+                ))
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_varying_classification() {
+        assert!(OpKind::Conv2d {
+            in_ch: 3,
+            out_ch: 64,
+            kernel: 7,
+            stride: 2,
+            padding: 3,
+            bias: false
+        }
+        .is_kernel_varying());
+        assert!(OpKind::Lstm {
+            input: 10,
+            hidden: 20,
+            layers: 1,
+            seq: 5,
+            bidirectional: false,
+            bias: true
+        }
+        .is_kernel_varying());
+        assert!(!OpKind::Elementwise { kind: EwKind::Relu }.is_kernel_varying());
+        assert!(!OpKind::BatchNorm2d { channels: 64 }.is_kernel_varying());
+    }
+
+    #[test]
+    fn conv_features_layout() {
+        let op = Op::new(
+            "conv1",
+            OpKind::Conv2d {
+                in_ch: 3,
+                out_ch: 64,
+                kernel: 7,
+                stride: 2,
+                padding: 3,
+                bias: false,
+            },
+            vec![32, 3, 224, 224],
+        );
+        let (mlp, f) = op.mlp_features().unwrap();
+        assert_eq!(mlp, MlpOp::Conv2d);
+        assert_eq!(f, vec![32.0, 3.0, 64.0, 7.0, 2.0, 3.0, 224.0]);
+        assert_eq!(f.len(), MlpOp::Conv2d.feature_count());
+    }
+
+    #[test]
+    fn linear_features_flatten_leading_dims() {
+        let op = Op::new(
+            "proj",
+            OpKind::Linear {
+                in_features: 512,
+                out_features: 512,
+                bias: true,
+            },
+            vec![64, 50, 512], // batch 64 × seq 50
+        );
+        let (mlp, f) = op.mlp_features().unwrap();
+        assert_eq!(mlp, MlpOp::Linear);
+        assert_eq!(f, vec![3200.0, 512.0, 512.0, 1.0]);
+    }
+
+    #[test]
+    fn lstm_parameter_count_matches_pytorch_formula() {
+        // PyTorch LSTM(10, 20, num_layers=2, bias=True):
+        // layer0: 4*20*10 + 4*20*20 + 2*4*20 = 800+1600+160 = 2560
+        // layer1: 4*20*20 + 4*20*20 + 160 = 3360
+        let k = OpKind::Lstm {
+            input: 10,
+            hidden: 20,
+            layers: 2,
+            seq: 5,
+            bidirectional: false,
+            bias: true,
+        };
+        assert_eq!(k.parameter_count(), 2560 + 3360);
+    }
+
+    #[test]
+    fn feature_counts_match_table1() {
+        assert_eq!(MlpOp::Conv2d.feature_count(), 7);
+        assert_eq!(MlpOp::Lstm.feature_count(), 7);
+        assert_eq!(MlpOp::Bmm.feature_count(), 4);
+        assert_eq!(MlpOp::Linear.feature_count(), 4);
+    }
+
+    #[test]
+    fn mlp_op_parse_roundtrip() {
+        for op in MlpOp::ALL {
+            assert_eq!(MlpOp::parse(op.id()), Some(op));
+        }
+        assert_eq!(MlpOp::parse("gemm"), None);
+    }
+}

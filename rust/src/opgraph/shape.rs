@@ -1,0 +1,52 @@
+//! Tensor shapes and the shape arithmetic the model builders use.
+
+/// A tensor shape: dimension sizes, NCHW for images.
+pub type Shape = Vec<usize>;
+
+/// Number of elements in a shape.
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Output spatial size of a convolution / pooling window:
+/// `floor((in + 2·pad − kernel) / stride) + 1`.
+pub fn conv_out(input: usize, kernel: usize, stride: usize, padding: usize) -> usize {
+    debug_assert!(stride >= 1);
+    debug_assert!(input + 2 * padding >= kernel, "window larger than padded input");
+    (input + 2 * padding - kernel) / stride + 1
+}
+
+/// Output spatial size of a transposed convolution:
+/// `(in − 1)·stride − 2·pad + kernel`.
+pub fn conv_transpose_out(input: usize, kernel: usize, stride: usize, padding: usize) -> usize {
+    (input - 1) * stride + kernel - 2 * padding
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_out_formula() {
+        // ResNet stem: 224, k=7, s=2, p=3 → 112.
+        assert_eq!(conv_out(224, 7, 2, 3), 112);
+        // 3×3 same-pad: 56, k=3, s=1, p=1 → 56.
+        assert_eq!(conv_out(56, 3, 1, 1), 56);
+        // 1×1 stride 2: 56 → 28.
+        assert_eq!(conv_out(56, 1, 2, 0), 28);
+    }
+
+    #[test]
+    fn conv_transpose_out_formula() {
+        // DCGAN generator: 1, k=4, s=1, p=0 → 4; then 4, k=4, s=2, p=1 → 8.
+        assert_eq!(conv_transpose_out(1, 4, 1, 0), 4);
+        assert_eq!(conv_transpose_out(4, 4, 2, 1), 8);
+        assert_eq!(conv_transpose_out(32, 4, 2, 1), 64);
+    }
+
+    #[test]
+    fn numel_product() {
+        assert_eq!(numel(&[64, 3, 224, 224]), 64 * 3 * 224 * 224);
+        assert_eq!(numel(&[]), 1);
+    }
+}

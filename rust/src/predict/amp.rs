@@ -1,0 +1,145 @@
+//! Mixed-precision prediction à la Daydream (paper §6.1.2).
+//!
+//! Daydream [110] predicts the benefit of switching FP32 → AMP on a
+//! *fixed* GPU by transforming a measured kernel timeline: matmul-class
+//! kernels speed up by the tensor-core ratio, memory-bound kernels by the
+//! halved traffic. Composed with Habitat: first predict the FP32 iteration
+//! on the destination GPU, then apply the Daydream transformation with the
+//! destination's hardware parameters.
+
+use crate::device::{Device, GpuSpec};
+use crate::predict::roofline;
+use crate::predict::{HybridPredictor, PredictedTrace};
+use crate::tracker::Trace;
+
+/// Effective AMP speedup factor (multiplier on time, < 1 is faster) for
+/// one kernel with memory-boundedness γ on a destination GPU.
+///
+/// * memory leg: traffic halves ⇒ ×0.5
+/// * compute leg: tensor-core-eligible kernels run at the FP16 peak,
+///   derated by a 0.6 achieved-efficiency factor vs the FP32 baseline;
+///   non-eligible kernels keep their FP32 compute time.
+pub fn amp_factor(gamma: f64, tensor_core_eligible: bool, dest: &GpuSpec) -> f64 {
+    let mem_factor = 0.5;
+    let compute_factor = if tensor_core_eligible && dest.arch.has_tensor_cores() {
+        (dest.peak_fp32_tflops / (dest.peak_fp16_tflops * 0.6)).min(1.0)
+    } else if tensor_core_eligible && dest.peak_fp16_tflops > dest.peak_fp32_tflops {
+        // P100: fast FP16 path without tensor cores.
+        dest.peak_fp32_tflops / dest.peak_fp16_tflops
+    } else {
+        1.0
+    };
+    gamma * mem_factor + (1.0 - gamma) * compute_factor
+}
+
+/// Transform an FP32 trace *measured on its own device* into a predicted
+/// AMP iteration time on the same device (pure Daydream).
+pub fn amp_time_same_device(trace: &Trace) -> f64 {
+    let spec = trace.origin.spec();
+    trace
+        .ops
+        .iter()
+        .flat_map(|o| o.fwd.iter().chain(&o.bwd))
+        .map(|m| {
+            let g = roofline::gamma(m.kernel.arith_intensity(), spec);
+            m.time_ms * amp_factor(g, m.kernel.tensor_core_eligible, spec)
+        })
+        .sum()
+}
+
+/// Habitat + Daydream: predict the **AMP** iteration time on a
+/// **different** GPU from an FP32 trace on the origin (§6.1.2).
+///
+/// Step 1 — Habitat predicts the FP32 time per op on `dest`.
+/// Step 2 — Daydream's transformation scales each op by its AMP factor,
+/// with γ taken from the op's measured kernels.
+pub fn predict_amp(predictor: &HybridPredictor, trace: &Trace, dest: Device) -> PredictedTrace {
+    let fp32 = predictor.predict(trace, dest);
+    let dest_spec = dest.spec();
+    let mut amped = fp32.clone();
+    for (pred_op, tracked) in amped.ops.iter_mut().zip(&trace.ops) {
+        // Time-weighted AMP factor over the op's kernels.
+        let total: f64 = tracked.total_ms();
+        if total <= 0.0 {
+            continue;
+        }
+        let factor: f64 = tracked
+            .fwd
+            .iter()
+            .chain(&tracked.bwd)
+            .map(|m| {
+                let g = roofline::gamma(m.kernel.arith_intensity(), dest_spec);
+                amp_factor(g, m.kernel.tensor_core_eligible, dest_spec) * m.time_ms
+            })
+            .sum::<f64>()
+            / total;
+        pred_op.time_ms *= factor;
+    }
+    amped
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opgraph::{Op, OpKind};
+    use crate::tracker::OperationTracker;
+
+    fn conv_trace(origin: Device) -> Trace {
+        let mut g = crate::Graph::new("toy", 32);
+        g.push(Op::new(
+            "conv",
+            OpKind::Conv2d {
+                in_ch: 256,
+                out_ch: 256,
+                kernel: 3,
+                stride: 1,
+                padding: 1,
+                bias: false,
+            },
+            vec![32, 256, 28, 28],
+        ));
+        OperationTracker::new(origin).track(&g)
+    }
+
+    #[test]
+    fn amp_factor_bounds() {
+        let v100 = Device::V100.spec();
+        for g in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            for tc in [true, false] {
+                let f = amp_factor(g, tc, v100);
+                assert!(f > 0.0 && f <= 1.0, "γ={g} tc={tc}: {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_cores_beat_no_tensor_cores() {
+        let v100 = Device::V100.spec();
+        let p4000 = Device::P4000.spec();
+        // Compute-bound kernel: tensor cores help on V100, not on P4000.
+        assert!(amp_factor(0.0, true, v100) < 0.5);
+        assert_eq!(amp_factor(0.0, true, p4000), 1.0);
+    }
+
+    #[test]
+    fn memory_bound_amp_halves_time() {
+        let t4 = Device::T4.spec();
+        assert!((amp_factor(1.0, false, t4) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn amp_faster_than_fp32_on_tensor_core_gpu() {
+        let trace = conv_trace(Device::Rtx2080Ti);
+        let amp = amp_time_same_device(&trace);
+        assert!(amp < trace.run_time_ms());
+    }
+
+    #[test]
+    fn cross_gpu_amp_prediction_faster_than_fp32_prediction() {
+        let trace = conv_trace(Device::P4000);
+        let predictor = HybridPredictor::wave_only();
+        let fp32 = predictor.predict(&trace, Device::Rtx2070);
+        let amp = predict_amp(&predictor, &trace, Device::Rtx2070);
+        assert!(amp.run_time_ms() < fp32.run_time_ms());
+    }
+}

@@ -1,0 +1,249 @@
+//! Data-parallel training prediction (paper §6.1.1).
+//!
+//! The paper positions Habitat's computation predictions as the input to
+//! existing data-parallel performance models [87, 88, 110]: predicting a
+//! distributed iteration reduces to (i) per-GPU compute time — Habitat's
+//! job — plus (ii) gradient-synchronization communication and (iii) its
+//! overlap with the backward pass. This module supplies (ii) and (iii)
+//! with the standard ring all-reduce cost model those papers use, so a
+//! single-GPU trace profiled on a workstation yields multi-GPU scaling
+//! estimates for a cluster the user does not have.
+
+use crate::predict::PredictedTrace;
+use crate::tracker::Trace;
+
+/// Interconnect between the replicas.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Interconnect {
+    /// PCIe 3.0 x16 (~12 GB/s effective).
+    Pcie3,
+    /// PCIe 4.0 x16 (~24 GB/s effective).
+    Pcie4,
+    /// NVLink 2.0 (V100-class, ~130 GB/s effective per GPU).
+    NvLink,
+    /// 25 Gb/s Ethernet between nodes (~2.9 GB/s effective).
+    Ethernet25G,
+    /// Custom effective bus bandwidth, GB/s.
+    Custom(f64),
+}
+
+impl Interconnect {
+    /// Effective all-reduce bus bandwidth, bytes/s.
+    pub fn bandwidth_bytes(self) -> f64 {
+        let gbps = match self {
+            Interconnect::Pcie3 => 12.0,
+            Interconnect::Pcie4 => 24.0,
+            Interconnect::NvLink => 130.0,
+            Interconnect::Ethernet25G => 2.9,
+            Interconnect::Custom(v) => v,
+        };
+        gbps * 1e9
+    }
+
+    /// Per-message launch latency (ring step), ms.
+    pub fn step_latency_ms(self) -> f64 {
+        match self {
+            Interconnect::Ethernet25G => 0.03,
+            _ => 0.01,
+        }
+    }
+}
+
+/// Configuration of the data-parallel job.
+#[derive(Debug, Clone, Copy)]
+pub struct DataParallelConfig {
+    /// Number of replicas (GPUs).
+    pub world: usize,
+    pub interconnect: Interconnect,
+    /// Fraction of the backward pass that gradient communication can
+    /// overlap with (bucketed all-reduce à la PyTorch DDP). 0 = fully
+    /// exposed, 1 = fully overlappable.
+    pub overlap: f64,
+}
+
+impl Default for DataParallelConfig {
+    fn default() -> Self {
+        DataParallelConfig {
+            world: 2,
+            interconnect: Interconnect::Pcie3,
+            overlap: 0.7,
+        }
+    }
+}
+
+/// A data-parallel iteration prediction.
+#[derive(Debug, Clone)]
+pub struct DpPrediction {
+    /// Per-replica compute time (Habitat's single-GPU prediction), ms.
+    pub compute_ms: f64,
+    /// Total all-reduce time, ms.
+    pub allreduce_ms: f64,
+    /// All-reduce time not hidden behind the backward pass, ms.
+    pub exposed_ms: f64,
+    /// Predicted distributed iteration time, ms.
+    pub iter_ms: f64,
+    /// Global throughput, samples/s (world × per-replica batch).
+    pub throughput: f64,
+    /// Scaling efficiency vs `world ×` the single-GPU throughput.
+    pub efficiency: f64,
+}
+
+/// Ring all-reduce time for `bytes` over `world` replicas:
+/// `2·(n−1)/n · bytes / BW + 2·(n−1) · latency`.
+pub fn ring_allreduce_ms(bytes: f64, world: usize, interconnect: Interconnect) -> f64 {
+    if world <= 1 {
+        return 0.0;
+    }
+    let n = world as f64;
+    let transfer = 2.0 * (n - 1.0) / n * bytes / interconnect.bandwidth_bytes() * 1e3;
+    let latency = 2.0 * (n - 1.0) * interconnect.step_latency_ms();
+    transfer + latency
+}
+
+/// Compose a Habitat cross-GPU prediction with the all-reduce model.
+///
+/// `pred` is the (destination-GPU) single-replica prediction for the
+/// per-replica batch; `trace` supplies the backward-time share and the
+/// gradient volume (= parameter count × 4 bytes, FP32 gradients).
+pub fn predict_data_parallel(
+    trace: &Trace,
+    pred: &PredictedTrace,
+    config: &DataParallelConfig,
+) -> DpPrediction {
+    let compute_ms = pred.run_time_ms();
+    // Gradient bytes: every trainable parameter contributes one FP32 grad.
+    let grad_bytes: f64 = trace
+        .ops
+        .iter()
+        .map(|o| o.op.kind.parameter_count() as f64 * 4.0)
+        .sum();
+    let allreduce_ms = ring_allreduce_ms(grad_bytes, config.world, config.interconnect);
+
+    // Backward share of the predicted time (from the origin trace's
+    // fwd/bwd split, assumed stable across devices).
+    let (fwd, bwd): (f64, f64) = trace
+        .ops
+        .iter()
+        .fold((0.0, 0.0), |(f, b), o| (f + o.fwd_ms(), b + o.bwd_ms()));
+    let bwd_fraction = if fwd + bwd > 0.0 { bwd / (fwd + bwd) } else { 0.5 };
+    let overlappable = config.overlap.clamp(0.0, 1.0) * bwd_fraction * compute_ms;
+    let exposed_ms = (allreduce_ms - overlappable).max(0.0);
+
+    let iter_ms = compute_ms + exposed_ms;
+    let single_throughput = pred.batch_size as f64 / (compute_ms / 1e3);
+    let throughput = config.world as f64 * pred.batch_size as f64 / (iter_ms / 1e3);
+    DpPrediction {
+        compute_ms,
+        allreduce_ms,
+        exposed_ms,
+        iter_ms,
+        throughput,
+        efficiency: throughput / (config.world as f64 * single_throughput),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::predict::HybridPredictor;
+    use crate::tracker::OperationTracker;
+
+    fn setup(model: &str, batch: usize) -> (Trace, PredictedTrace) {
+        let graph = crate::models::by_name(model, batch).unwrap();
+        let trace = OperationTracker::new(Device::Rtx2070).track(&graph);
+        let pred = HybridPredictor::wave_only().predict(&trace, Device::V100);
+        (trace, pred)
+    }
+
+    #[test]
+    fn single_gpu_has_no_communication() {
+        let (trace, pred) = setup("resnet50", 32);
+        let dp = predict_data_parallel(
+            &trace,
+            &pred,
+            &DataParallelConfig {
+                world: 1,
+                ..Default::default()
+            },
+        );
+        assert_eq!(dp.allreduce_ms, 0.0);
+        assert!((dp.iter_ms - dp.compute_ms).abs() < 1e-12);
+        assert!((dp.efficiency - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_decreases_with_world_size() {
+        let (trace, pred) = setup("resnet50", 32);
+        let mut prev = 1.01;
+        for world in [1, 2, 4, 8] {
+            let dp = predict_data_parallel(
+                &trace,
+                &pred,
+                &DataParallelConfig {
+                    world,
+                    interconnect: Interconnect::Pcie3,
+                    overlap: 0.7,
+                },
+            );
+            assert!(dp.efficiency <= prev + 1e-9, "world {world}: {}", dp.efficiency);
+            assert!(dp.efficiency > 0.2);
+            prev = dp.efficiency;
+        }
+    }
+
+    #[test]
+    fn nvlink_beats_pcie() {
+        let (trace, pred) = setup("gnmt", 32); // 160M params: comm heavy
+        let mk = |ic| {
+            predict_data_parallel(
+                &trace,
+                &pred,
+                &DataParallelConfig {
+                    world: 4,
+                    interconnect: ic,
+                    overlap: 0.7,
+                },
+            )
+        };
+        let nvlink = mk(Interconnect::NvLink);
+        let pcie = mk(Interconnect::Pcie3);
+        let eth = mk(Interconnect::Ethernet25G);
+        assert!(nvlink.iter_ms < pcie.iter_ms);
+        assert!(pcie.iter_ms < eth.iter_ms);
+    }
+
+    #[test]
+    fn overlap_hides_communication() {
+        let (trace, pred) = setup("gnmt", 32);
+        let mk = |overlap| {
+            predict_data_parallel(
+                &trace,
+                &pred,
+                &DataParallelConfig {
+                    world: 4,
+                    interconnect: Interconnect::Pcie3,
+                    overlap,
+                },
+            )
+        };
+        assert!(mk(1.0).iter_ms <= mk(0.0).iter_ms);
+        assert!(mk(0.0).exposed_ms >= mk(0.5).exposed_ms);
+    }
+
+    #[test]
+    fn ring_formula_matches_hand_computation() {
+        // 4 GPUs, 1 GB, 12 GB/s: 2·3/4·(1/12) s = 125 ms + 6·0.01 latency.
+        let ms = ring_allreduce_ms(1e9, 4, Interconnect::Pcie3);
+        assert!((ms - (125.0 + 0.06)).abs() < 0.5, "{ms}");
+    }
+
+    #[test]
+    fn throughput_scales_sublinearly_but_positively() {
+        let (trace, pred) = setup("resnet50", 32);
+        let one = predict_data_parallel(&trace, &pred, &DataParallelConfig { world: 1, ..Default::default() });
+        let four = predict_data_parallel(&trace, &pred, &DataParallelConfig { world: 4, ..Default::default() });
+        assert!(four.throughput > one.throughput, "more GPUs must help");
+        assert!(four.throughput <= 4.0 * one.throughput * (1.0 + 1e-9), "but not superlinearly");
+    }
+}

@@ -1,0 +1,65 @@
+//! Batch-size extrapolation (paper §6.1.3).
+//!
+//! When the desired batch size does not fit on the origin GPU, Habitat
+//! predicts the iteration time for several batch sizes that *do* fit,
+//! fits a linear model `time = a + b·batch` over the predictions (the
+//! paper observed an approximately linear relationship in Skyline [107]),
+//! and extrapolates.
+
+use crate::util::stats::linear_fit;
+
+/// A fitted iteration-time ∼ batch-size model.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchExtrapolator {
+    /// Intercept, ms.
+    pub a: f64,
+    /// Slope, ms per sample.
+    pub b: f64,
+}
+
+impl BatchExtrapolator {
+    /// Fit from `(batch_size, iteration_ms)` points (≥ 2; the paper
+    /// suggests three).
+    pub fn fit(points: &[(usize, f64)]) -> Self {
+        assert!(points.len() >= 2, "need at least two batch sizes");
+        let xs: Vec<f64> = points.iter().map(|(b, _)| *b as f64).collect();
+        let ys: Vec<f64> = points.iter().map(|(_, t)| *t).collect();
+        let (a, b) = linear_fit(&xs, &ys);
+        BatchExtrapolator { a, b }
+    }
+
+    /// Predicted iteration time at a batch size, ms.
+    pub fn predict(&self, batch_size: usize) -> f64 {
+        self.a + self.b * batch_size as f64
+    }
+
+    /// Predicted throughput at a batch size, samples/s.
+    pub fn throughput(&self, batch_size: usize) -> f64 {
+        batch_size as f64 / (self.predict(batch_size) / 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_on_linear_data() {
+        let m = BatchExtrapolator::fit(&[(16, 26.0), (32, 42.0), (64, 74.0)]);
+        // time = 10 + 1·batch
+        assert!((m.predict(128) - 138.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_saturates_with_batch() {
+        let m = BatchExtrapolator::fit(&[(16, 26.0), (32, 42.0)]);
+        // With a fixed intercept, throughput grows toward 1000/b
+        assert!(m.throughput(64) > m.throughput(16));
+    }
+
+    #[test]
+    #[should_panic]
+    fn refuses_single_point() {
+        BatchExtrapolator::fit(&[(16, 26.0)]);
+    }
+}

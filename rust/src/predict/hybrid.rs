@@ -1,0 +1,327 @@
+//! The full Habitat predictor: wave scaling + MLPs (paper §3.2).
+//!
+//! For every operation in the origin trace:
+//! * kernel-varying ops (conv2d, conv_transpose2d, lstm, bmm, linear) are
+//!   predicted by the pre-trained MLP for their op family, queried through
+//!   the pluggable [`MlpBackend`] (the production backend executes
+//!   AOT-compiled JAX MLPs via PJRT — see [`crate::runtime`]);
+//! * every other op is predicted by wave scaling each of its measured
+//!   kernels with a roofline-selected γ.
+//!
+//! If no MLP backend is configured (or an artifact is missing) the
+//! predictor degrades gracefully to wave scaling for the affected ops and
+//! counts the fallbacks.
+
+use std::sync::Arc;
+
+
+use crate::device::Device;
+use crate::opgraph::MlpOp;
+use crate::predict::roofline::{self, MetricsPolicy};
+use crate::predict::wave;
+use crate::tracker::Trace;
+use crate::Result;
+
+/// How one op's destination time was obtained.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredictionMethod {
+    WaveScaling,
+    Mlp,
+}
+
+/// A batched MLP inference backend. `features` rows are the op-specific
+/// feature vectors (see [`crate::opgraph::Op::mlp_features`]); the backend
+/// appends the destination GPU's hardware features and returns the
+/// predicted forward+backward time in ms for each row.
+pub trait MlpBackend: Send + Sync {
+    fn predict_batch(&self, op: MlpOp, features: &[Vec<f64>], dest: Device) -> Result<Vec<f64>>;
+}
+
+/// One predicted operation on the destination GPU.
+#[derive(Debug, Clone)]
+pub struct PredictedOp {
+    pub index: usize,
+    pub name: String,
+    pub short_name: String,
+    pub time_ms: f64,
+    pub method: PredictionMethod,
+}
+
+/// A full predicted training iteration on the destination GPU.
+#[derive(Debug, Clone)]
+pub struct PredictedTrace {
+    pub model: String,
+    pub batch_size: usize,
+    pub origin: Device,
+    pub dest: Device,
+    pub ops: Vec<PredictedOp>,
+    /// Kernel-varying ops that wanted an MLP but fell back to wave scaling.
+    pub mlp_fallbacks: usize,
+}
+
+impl PredictedTrace {
+    /// Predicted iteration execution time, ms (the paper's headline
+    /// quantity; Listing 1's `run_time_ms`).
+    pub fn run_time_ms(&self) -> f64 {
+        self.ops.iter().map(|o| o.time_ms).sum()
+    }
+
+    /// Predicted training throughput, samples/s (§5.1 Metrics).
+    pub fn throughput(&self) -> f64 {
+        self.batch_size as f64 / (self.run_time_ms() / 1e3)
+    }
+
+    /// Share of predicted time attributed to MLP predictions (§5.2.3).
+    pub fn mlp_time_fraction(&self) -> f64 {
+        let total = self.run_time_ms();
+        if total == 0.0 {
+            return 0.0;
+        }
+        self.ops
+            .iter()
+            .filter(|o| o.method == PredictionMethod::Mlp)
+            .map(|o| o.time_ms)
+            .sum::<f64>()
+            / total
+    }
+}
+
+/// The hybrid predictor.
+#[derive(Clone)]
+pub struct HybridPredictor {
+    mlp: Option<Arc<dyn MlpBackend>>,
+    /// Metrics availability policy for γ selection.
+    pub metrics_policy: MetricsPolicy,
+    /// Use Eq. 1 (exact wave counts) instead of Eq. 2. The paper ships
+    /// Eq. 2; Eq. 1 is kept for the ablation bench.
+    pub use_eq1: bool,
+}
+
+impl HybridPredictor {
+    /// Wave scaling for *all* ops (no MLP artifacts required).
+    pub fn wave_only() -> Self {
+        HybridPredictor {
+            mlp: None,
+            metrics_policy: MetricsPolicy::default(),
+            use_eq1: false,
+        }
+    }
+
+    /// The paper's full configuration: MLPs for kernel-varying ops.
+    pub fn with_mlp(backend: Arc<dyn MlpBackend>) -> Self {
+        HybridPredictor {
+            mlp: Some(backend),
+            metrics_policy: MetricsPolicy::default(),
+            use_eq1: false,
+        }
+    }
+
+    pub fn with_metrics_policy(mut self, policy: MetricsPolicy) -> Self {
+        self.metrics_policy = policy;
+        self
+    }
+
+    pub fn with_eq1(mut self, use_eq1: bool) -> Self {
+        self.use_eq1 = use_eq1;
+        self
+    }
+
+    pub fn has_mlp(&self) -> bool {
+        self.mlp.is_some()
+    }
+
+    /// Wave-scale every kernel of one tracked op.
+    fn wave_scale_op(
+        &self,
+        op: &crate::tracker::TrackedOp,
+        origin: &crate::device::GpuSpec,
+        dest: &crate::device::GpuSpec,
+        profiled: Option<&std::collections::HashSet<u64>>,
+    ) -> f64 {
+        op.fwd
+            .iter()
+            .chain(&op.bwd)
+            .map(|m| {
+                let has_metrics =
+                    profiled.map_or(true, |set| set.contains(&roofline::cache_key(&m.kernel)));
+                // γ = 1 fallback when the kernel was never profiled (§4.2).
+                let g = if has_metrics {
+                    roofline::gamma(m.kernel.arith_intensity(), dest)
+                } else {
+                    1.0
+                };
+                let r = wave::ratios(&m.kernel.launch, origin, dest);
+                if self.use_eq1 {
+                    wave::scale_eq1(m.time_ms, &r, g)
+                } else {
+                    wave::scale_eq2(m.time_ms, &r, g)
+                }
+            })
+            .sum()
+    }
+
+    /// Predict the trace's iteration time on `dest`.
+    pub fn predict(&self, trace: &Trace, dest: Device) -> PredictedTrace {
+        let origin_spec = trace.origin.spec();
+        let dest_spec = dest.spec();
+        let profiled = self.metrics_policy.profiled_kernels(trace);
+
+        // Pass 1: wave-scale everything; collect MLP work items.
+        let mut ops: Vec<PredictedOp> = Vec::with_capacity(trace.ops.len());
+        let mut mlp_items: std::collections::BTreeMap<MlpOp, (Vec<usize>, Vec<Vec<f64>>)> =
+            Default::default();
+        for (i, t) in trace.ops.iter().enumerate() {
+            let wave_ms = self.wave_scale_op(t, origin_spec, dest_spec, profiled.as_ref());
+            ops.push(PredictedOp {
+                index: t.index,
+                name: t.op.name.clone(),
+                short_name: t.op.kind.short_name().to_string(),
+                time_ms: wave_ms,
+                method: PredictionMethod::WaveScaling,
+            });
+            if self.mlp.is_some() {
+                if let Some((mlp_op, features)) = t.op.mlp_features() {
+                    let entry = mlp_items.entry(mlp_op).or_default();
+                    entry.0.push(i);
+                    entry.1.push(features);
+                }
+            }
+        }
+
+        // Pass 2: batched MLP predictions overwrite kernel-varying ops.
+        let mut fallbacks = 0;
+        if let Some(backend) = &self.mlp {
+            for (mlp_op, (indices, features)) in mlp_items {
+                match backend.predict_batch(mlp_op, &features, dest) {
+                    Ok(times) if times.len() == indices.len() => {
+                        for (slot, ms) in indices.into_iter().zip(times) {
+                            // Defensive: an MLP can extrapolate badly on
+                            // out-of-range configs; never accept a
+                            // non-positive time.
+                            if ms.is_finite() && ms > 0.0 {
+                                ops[slot].time_ms = ms;
+                                ops[slot].method = PredictionMethod::Mlp;
+                            } else {
+                                fallbacks += 1;
+                            }
+                        }
+                    }
+                    _ => fallbacks += indices.len(),
+                }
+            }
+        }
+
+        PredictedTrace {
+            model: trace.model.clone(),
+            batch_size: trace.batch_size,
+            origin: trace.origin,
+            dest,
+            ops,
+            mlp_fallbacks: fallbacks,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::opgraph::{EwKind, Op, OpKind};
+    use crate::tracker::OperationTracker;
+
+    fn toy_trace(origin: Device) -> Trace {
+        let mut g = crate::Graph::new("toy", 16);
+        g.push(Op::new(
+            "conv",
+            OpKind::Conv2d {
+                in_ch: 64,
+                out_ch: 64,
+                kernel: 3,
+                stride: 1,
+                padding: 1,
+                bias: false,
+            },
+            vec![16, 64, 32, 32],
+        ));
+        g.push(Op::new("act", OpKind::Elementwise { kind: EwKind::Relu }, vec![16, 64, 32, 32]));
+        OperationTracker::new(origin).track(&g)
+    }
+
+    #[test]
+    fn wave_only_identity_on_same_device() {
+        let trace = toy_trace(Device::V100);
+        let pred = HybridPredictor::wave_only()
+            .with_metrics_policy(MetricsPolicy::All)
+            .predict(&trace, Device::V100);
+        assert!(
+            (pred.run_time_ms() / trace.run_time_ms() - 1.0).abs() < 1e-9,
+            "same-device wave scaling must be the identity"
+        );
+    }
+
+    #[test]
+    fn all_methods_wave_without_backend() {
+        let trace = toy_trace(Device::T4);
+        let pred = HybridPredictor::wave_only().predict(&trace, Device::V100);
+        assert!(pred.ops.iter().all(|o| o.method == PredictionMethod::WaveScaling));
+        assert_eq!(pred.mlp_fallbacks, 0);
+    }
+
+    struct FixedBackend(f64);
+    impl MlpBackend for FixedBackend {
+        fn predict_batch(&self, _op: MlpOp, features: &[Vec<f64>], _dest: Device) -> Result<Vec<f64>> {
+            Ok(vec![self.0; features.len()])
+        }
+    }
+
+    #[test]
+    fn mlp_overrides_kernel_varying_ops() {
+        let trace = toy_trace(Device::T4);
+        let backend = Arc::new(FixedBackend(42.0));
+        let pred = HybridPredictor::with_mlp(backend).predict(&trace, Device::V100);
+        let conv = pred.ops.iter().find(|o| o.short_name == "conv2d").unwrap();
+        let relu = pred.ops.iter().find(|o| o.short_name == "relu").unwrap();
+        assert_eq!(conv.method, PredictionMethod::Mlp);
+        assert_eq!(conv.time_ms, 42.0);
+        assert_eq!(relu.method, PredictionMethod::WaveScaling);
+    }
+
+    struct FailingBackend;
+    impl MlpBackend for FailingBackend {
+        fn predict_batch(&self, _op: MlpOp, _f: &[Vec<f64>], _d: Device) -> Result<Vec<f64>> {
+            anyhow::bail!("artifact missing")
+        }
+    }
+
+    #[test]
+    fn backend_failure_falls_back_to_wave() {
+        let trace = toy_trace(Device::T4);
+        let pred = HybridPredictor::with_mlp(Arc::new(FailingBackend)).predict(&trace, Device::V100);
+        assert_eq!(pred.mlp_fallbacks, 1);
+        assert!(pred.ops.iter().all(|o| o.method == PredictionMethod::WaveScaling));
+        assert!(pred.run_time_ms() > 0.0);
+    }
+
+    struct NegativeBackend;
+    impl MlpBackend for NegativeBackend {
+        fn predict_batch(&self, _op: MlpOp, f: &[Vec<f64>], _d: Device) -> Result<Vec<f64>> {
+            Ok(vec![-1.0; f.len()])
+        }
+    }
+
+    #[test]
+    fn non_positive_mlp_output_rejected() {
+        let trace = toy_trace(Device::T4);
+        let pred = HybridPredictor::with_mlp(Arc::new(NegativeBackend)).predict(&trace, Device::V100);
+        assert_eq!(pred.mlp_fallbacks, 1);
+        assert!(pred.run_time_ms() > 0.0);
+    }
+
+    #[test]
+    fn throughput_definition() {
+        let trace = toy_trace(Device::T4);
+        let pred = HybridPredictor::wave_only().predict(&trace, Device::V100);
+        let tp = pred.throughput();
+        assert!((tp - 16.0 / (pred.run_time_ms() / 1e3)).abs() < 1e-9);
+    }
+}

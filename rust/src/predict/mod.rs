@@ -1,0 +1,22 @@
+//! Execution-time prediction — the paper's core contribution.
+//!
+//! * [`wave`] — wave scaling (Eq. 1 / Eq. 2), for kernel-alike operations.
+//! * [`roofline`] — γ selection from arithmetic intensity (Eq. 3, §4.2).
+//! * [`hybrid`] — the full Habitat scheme: wave scaling for kernel-alike
+//!   ops, pre-trained MLPs (through a pluggable [`MlpBackend`]) for
+//!   kernel-varying ops.
+//! * [`heuristic`] — the peak-FLOPS-ratio baseline the paper argues
+//!   against (§2.3, Fig. 1).
+//! * [`amp`] — mixed-precision prediction à la Daydream (§6.1.2).
+//! * [`extrapolate`] — batch-size extrapolation (§6.1.3).
+
+pub mod amp;
+pub mod distributed;
+pub mod extrapolate;
+pub mod heuristic;
+pub mod hybrid;
+pub mod roofline;
+pub mod wave;
+
+pub use hybrid::{HybridPredictor, MlpBackend, PredictedOp, PredictedTrace, PredictionMethod};
+pub use roofline::MetricsPolicy;

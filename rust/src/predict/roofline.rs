@@ -1,0 +1,191 @@
+//! γ selection from the roofline model (paper §4.2, Eq. 3).
+//!
+//! γ represents a kernel's *memory-bandwidth boundedness*. Habitat
+//! computes the kernel's arithmetic intensity `x` (FLOPs per DRAM byte —
+//! a property of the kernel's code, fixed across GPUs) and compares it to
+//! the destination GPU's ridge point `R = P/D`:
+//!
+//! ```text
+//! γ = (−0.5/R)·x + 1   if x < R      (1 → 0.5 linearly)
+//!   = 0.5·R/x          otherwise     (0.5 → 0 hyperbolically)
+//! ```
+//!
+//! Collecting the metrics needed for `x` is expensive on real hardware
+//! (kernel replay), so the paper only profiles kernels from operations at
+//! or above a percentile of per-op execution time, caches results keyed by
+//! kernel name + launch configuration, and falls back to γ = 1 (fully
+//! memory bound) when metrics are unavailable — a good default because
+//! unprofiled kernel-alike ops are almost always simple, memory-bound
+//! kernels. [`MetricsPolicy`] reproduces that machinery.
+
+use std::collections::HashSet;
+
+use crate::device::GpuSpec;
+use crate::tracker::Trace;
+use crate::util::rng::hash_str;
+use crate::util::stats::percentile;
+
+/// Eq. 3: γ from arithmetic intensity `x` and destination ridge point `R`.
+pub fn gamma(x: f64, dest: &GpuSpec) -> f64 {
+    let r = dest.ridge_point();
+    debug_assert!(r > 0.0);
+    if !x.is_finite() {
+        return 0.0; // no memory traffic at all ⇒ purely compute bound
+    }
+    let g = if x < r { (-0.5 / r) * x + 1.0 } else { 0.5 * r / x };
+    g.clamp(0.0, 1.0)
+}
+
+/// Which kernels have profiled metrics available (§4.2 "practical
+/// optimizations").
+#[derive(Debug, Clone)]
+pub enum MetricsPolicy {
+    /// Warm metrics cache: every kernel has metrics (the steady state
+    /// after Habitat has profiled a model a few times).
+    All,
+    /// Cold cache: no metrics; every kernel takes the γ = 1 fallback.
+    None,
+    /// The paper's default: profile kernels belonging to operations whose
+    /// execution time is at or above this percentile (e.g. 99.5), then
+    /// share results across kernels with the same name + launch via the
+    /// metrics cache.
+    Percentile(f64),
+}
+
+impl Default for MetricsPolicy {
+    fn default() -> Self {
+        // The paper's stated threshold.
+        MetricsPolicy::Percentile(99.5)
+    }
+}
+
+impl MetricsPolicy {
+    /// Resolve the policy against a trace: the set of kernel cache keys
+    /// (name + launch signature) that have metrics available.
+    /// Keys are 64-bit hashes — the predict hot path builds this set per
+    /// call, so it must not allocate per kernel (see EXPERIMENTS.md §Perf).
+    pub fn profiled_kernels(&self, trace: &Trace) -> Option<HashSet<u64>> {
+        match self {
+            MetricsPolicy::All => None, // `None` = everything profiled
+            MetricsPolicy::None => Some(HashSet::new()),
+            MetricsPolicy::Percentile(p) => {
+                let times: Vec<f64> = trace.ops.iter().map(|o| o.total_ms()).collect();
+                if times.is_empty() {
+                    return Some(HashSet::new());
+                }
+                let threshold = percentile(&times, *p);
+                let mut keys = HashSet::new();
+                for op in &trace.ops {
+                    if op.total_ms() >= threshold {
+                        for m in op.fwd.iter().chain(&op.bwd) {
+                            keys.insert(cache_key(&m.kernel));
+                        }
+                    }
+                }
+                Some(keys)
+            }
+        }
+    }
+}
+
+/// Metrics-cache key: kernel name + launch configuration (§4.2: "keyed by
+/// the kernel's name and its launch configuration"), as an allocation-free
+/// 64-bit hash.
+pub fn cache_key(kernel: &crate::lowering::Kernel) -> u64 {
+    hash_str(&kernel.name)
+        ^ kernel.launch.grid_blocks.rotate_left(17)
+        ^ (kernel.launch.threads_per_block as u64).rotate_left(41)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::tracker::OperationTracker;
+    use crate::opgraph::{EwKind, Op, OpKind};
+
+    #[test]
+    fn gamma_is_one_at_zero_intensity() {
+        let v100 = Device::V100.spec();
+        assert!((gamma(0.0, v100) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma_is_half_at_ridge_point() {
+        let v100 = Device::V100.spec();
+        let r = v100.ridge_point();
+        assert!((gamma(r, v100) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gamma_decays_beyond_ridge() {
+        let v100 = Device::V100.spec();
+        let r = v100.ridge_point();
+        assert!((gamma(2.0 * r, v100) - 0.25).abs() < 1e-9);
+        assert!(gamma(100.0 * r, v100) < 0.01);
+        assert_eq!(gamma(f64::INFINITY, v100), 0.0);
+    }
+
+    #[test]
+    fn gamma_monotone_decreasing_and_bounded() {
+        let t4 = Device::T4.spec();
+        let mut prev = 1.0 + 1e-12;
+        for i in 0..1000 {
+            let x = i as f64 * 0.5;
+            let g = gamma(x, t4);
+            assert!((0.0..=1.0).contains(&g));
+            assert!(g <= prev + 1e-12, "γ must be non-increasing in x");
+            prev = g;
+        }
+    }
+
+    fn toy_trace() -> Trace {
+        let mut g = crate::Graph::new("toy", 8);
+        // One heavy op and many light ops.
+        g.push(Op::new(
+            "fc",
+            OpKind::Linear {
+                in_features: 4096,
+                out_features: 4096,
+                bias: false,
+            },
+            vec![512, 4096],
+        ));
+        for i in 0..20 {
+            g.push(Op::new(
+                format!("relu{i}"),
+                OpKind::Elementwise { kind: EwKind::Relu },
+                vec![128],
+            ));
+        }
+        OperationTracker::new(Device::V100).track(&g)
+    }
+
+    #[test]
+    fn percentile_policy_profiles_only_heavy_ops() {
+        let trace = toy_trace();
+        let keys = MetricsPolicy::Percentile(99.0)
+            .profiled_kernels(&trace)
+            .unwrap();
+        assert!(!keys.is_empty());
+        // The heavy GEMM's kernels must be profiled; the tiny relus not.
+        let gemm_op = trace.ops.iter().find(|o| o.op.name == "fc").unwrap();
+        for m in gemm_op.fwd.iter().chain(&gemm_op.bwd) {
+            assert!(keys.contains(&cache_key(&m.kernel)));
+        }
+        let relu_op = trace.ops.iter().find(|o| o.op.name == "relu0").unwrap();
+        for m in relu_op.fwd.iter().chain(&relu_op.bwd) {
+            assert!(!keys.contains(&cache_key(&m.kernel)));
+        }
+    }
+
+    #[test]
+    fn all_and_none_policies() {
+        let trace = toy_trace();
+        assert!(MetricsPolicy::All.profiled_kernels(&trace).is_none());
+        assert!(MetricsPolicy::None
+            .profiled_kernels(&trace)
+            .unwrap()
+            .is_empty());
+    }
+}

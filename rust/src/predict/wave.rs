@@ -1,0 +1,140 @@
+//! Wave scaling (paper §3.3).
+//!
+//! A kernel's computation executes in *waves* of `W_i` thread blocks
+//! (`W_i` = resident blocks across the chip, from the occupancy
+//! calculator). Wave scaling transfers a kernel's measured time from the
+//! origin GPU `o` to the destination GPU `d` by scaling with ratios of
+//! memory bandwidth `D`, wave size `W`, and clock `C`, blended by the
+//! kernel's memory-bandwidth-boundedness γ ∈ [0, 1]:
+//!
+//! Eq. 1:  T_d = ⌈B/W_d⌉ · (D_o/D_d · W_d/W_o)^γ · (C_o/C_d)^(1−γ) · ⌈B/W_o⌉⁻¹ · T_o
+//! Eq. 2:  T_d = (D_o/D_d)^γ · (W_o/W_d)^(1−γ) · (C_o/C_d)^(1−γ) · T_o
+//!
+//! Habitat uses Eq. 2 (the large-wave-count limit of Eq. 1) by default,
+//! because real kernels almost always have many waves.
+
+use crate::device::{occupancy, GpuSpec, LaunchConfig};
+
+/// The hardware ratios wave scaling consumes, for one kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct WaveRatios {
+    /// Achieved memory bandwidth ratio `D_o / D_d`.
+    pub bw: f64,
+    /// Wave-size ratio `W_o / W_d`.
+    pub wave: f64,
+    /// Clock ratio `C_o / C_d`.
+    pub clock: f64,
+    /// Thread blocks in the kernel (`B`).
+    pub blocks: u64,
+    /// Wave sizes on each device.
+    pub w_origin: u64,
+    pub w_dest: u64,
+}
+
+/// Compute the ratios for one kernel launch between two GPUs.
+pub fn ratios(launch: &LaunchConfig, origin: &GpuSpec, dest: &GpuSpec) -> WaveRatios {
+    let w_origin = occupancy::wave_size(origin, launch).max(1);
+    let w_dest = occupancy::wave_size(dest, launch).max(1);
+    WaveRatios {
+        bw: origin.achieved_bw_bytes() / dest.achieved_bw_bytes(),
+        wave: w_origin as f64 / w_dest as f64,
+        clock: origin.boost_clock_mhz / dest.boost_clock_mhz,
+        blocks: launch.grid_blocks.max(1),
+        w_origin,
+        w_dest,
+    }
+}
+
+/// Eq. 2 — the production path.
+pub fn scale_eq2(time_origin_ms: f64, r: &WaveRatios, gamma: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&gamma));
+    time_origin_ms * r.bw.powf(gamma) * (r.wave * r.clock).powf(1.0 - gamma)
+}
+
+/// Eq. 1 — exact wave counts, for kernels with few waves.
+pub fn scale_eq1(time_origin_ms: f64, r: &WaveRatios, gamma: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&gamma));
+    let waves_o = r.blocks.div_ceil(r.w_origin) as f64;
+    let waves_d = r.blocks.div_ceil(r.w_dest) as f64;
+    time_origin_ms * waves_d * (r.bw / r.wave).powf(gamma) * r.clock.powf(1.0 - gamma) / waves_o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+
+    fn launch(blocks: u64) -> LaunchConfig {
+        LaunchConfig::new(blocks, 256, 32, 0)
+    }
+
+    #[test]
+    fn identity_when_origin_is_dest() {
+        let v100 = Device::V100.spec();
+        let r = ratios(&launch(10_000), v100, v100);
+        for gamma in [0.0, 0.3, 1.0] {
+            assert!((scale_eq2(5.0, &r, gamma) - 5.0).abs() < 1e-12);
+            assert!((scale_eq1(5.0, &r, gamma) - 5.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn memory_bound_scales_by_bandwidth() {
+        // γ=1: pure bandwidth ratio.
+        let t4 = Device::T4.spec();
+        let v100 = Device::V100.spec();
+        let r = ratios(&launch(100_000), t4, v100);
+        let scaled = scale_eq2(10.0, &r, 1.0);
+        let expected = 10.0 * t4.achieved_bw_bytes() / v100.achieved_bw_bytes();
+        assert!((scaled - expected).abs() < 1e-9);
+        assert!(scaled < 10.0, "V100 has more bandwidth than T4");
+    }
+
+    #[test]
+    fn compute_bound_scales_by_wave_and_clock() {
+        // γ=0: (W_o/W_d)·(C_o/C_d).
+        let p4000 = Device::P4000.spec();
+        let v100 = Device::V100.spec();
+        let l = launch(100_000);
+        let r = ratios(&l, p4000, v100);
+        let scaled = scale_eq2(10.0, &r, 0.0);
+        assert!(scaled < 10.0, "V100 is a much bigger chip: {scaled}");
+        assert!((scale_eq1(10.0, &r, 0.0) / scaled - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn eq1_approaches_eq2_for_many_waves() {
+        let o = Device::Rtx2070.spec();
+        let d = Device::P100.spec();
+        let l = launch(1_000_000);
+        let r = ratios(&l, o, d);
+        let a = scale_eq1(3.0, &r, 0.6);
+        let b = scale_eq2(3.0, &r, 0.6);
+        assert!((a / b - 1.0).abs() < 0.02, "eq1={a} eq2={b}");
+    }
+
+    #[test]
+    fn eq1_captures_tail_effects_for_few_waves() {
+        // One wave on the origin, forced two on a smaller destination.
+        let o = Device::V100.spec();
+        let d = Device::P4000.spec();
+        let l = launch(600); // < one V100 wave (640), > one P4000 wave (112)
+        let r = ratios(&l, o, d);
+        let eq1 = scale_eq1(1.0, &r, 0.0);
+        let eq2 = scale_eq2(1.0, &r, 0.0);
+        // Eq1 quantizes to whole waves; must differ from the smooth Eq2.
+        assert!((eq1 / eq2 - 1.0).abs() > 0.01);
+    }
+
+    #[test]
+    fn gamma_interpolates_monotonically() {
+        let o = Device::P4000.spec();
+        let d = Device::V100.spec();
+        let r = ratios(&launch(50_000), o, d);
+        let lo = scale_eq2(10.0, &r, 0.0);
+        let mid = scale_eq2(10.0, &r, 0.5);
+        let hi = scale_eq2(10.0, &r, 1.0);
+        let (min, max) = (lo.min(hi), lo.max(hi));
+        assert!(mid >= min && mid <= max);
+    }
+}

@@ -1,0 +1,240 @@
+//! Loading and executing one MLP predictor artifact set.
+//!
+//! Artifact layout (produced by `python/compile/aot.py`):
+//! ```text
+//! artifacts/
+//!   conv2d.meta.json       # buckets, feature stats, output transform
+//!   conv2d_b1.hlo.txt      # HLO text, input f32[1, F] → (f32[1, 1],)
+//!   conv2d_b8.hlo.txt      # ...
+//!   ...
+//! ```
+//!
+//! Inputs are transformed exactly as in training: `log1p`, then
+//! standardized with the training-set mean/std from the sidecar. The MLP
+//! predicts `ln(time_ms)`; [`MlpModel::predict`] exponentiates.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+
+use crate::dataset::gpu_features;
+use crate::device::Device;
+use crate::opgraph::MlpOp;
+use crate::Result;
+
+/// Sidecar metadata written next to each op's HLO artifacts.
+#[derive(Debug, Clone)]
+pub struct RuntimeMeta {
+    pub op: String,
+    /// Total input features (op features + 4 GPU features).
+    pub features: usize,
+    /// Exported batch buckets, ascending.
+    pub buckets: Vec<usize>,
+    /// Standardization statistics over log1p-transformed features.
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+    /// Output transform; currently always `"log_ms"`.
+    pub output: String,
+}
+
+impl RuntimeMeta {
+    /// Parse the sidecar JSON.
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = crate::util::json::parse(text)?;
+        let buckets = v
+            .req_f64_array("buckets")?
+            .into_iter()
+            .map(|b| b as usize)
+            .collect();
+        Ok(RuntimeMeta {
+            op: v.req_str("op")?.to_string(),
+            features: v.req_usize("features")?,
+            buckets,
+            mean: v.req_f64_array("mean")?,
+            std: v.req_f64_array("std")?,
+            output: v.req_str("output")?.to_string(),
+        })
+    }
+}
+
+/// One op family's compiled MLP: a bucket ladder of PJRT executables.
+pub struct MlpModel {
+    pub meta: RuntimeMeta,
+    /// (bucket_size, compiled executable), ascending by bucket.
+    executables: Vec<(usize, xla::PjRtLoadedExecutable)>,
+}
+
+impl MlpModel {
+    /// Load and compile all buckets for `op` from `dir`.
+    pub fn load(client: &xla::PjRtClient, dir: &Path, op: MlpOp) -> Result<Self> {
+        let meta_path = dir.join(format!("{}.meta.json", op.id()));
+        let meta = RuntimeMeta::parse(
+            &std::fs::read_to_string(&meta_path)
+                .map_err(|e| anyhow::anyhow!("reading {}: {e}", meta_path.display()))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", meta_path.display()))?;
+        anyhow::ensure!(meta.op == op.id(), "meta/op mismatch in {}", meta_path.display());
+        anyhow::ensure!(meta.output == "log_ms", "unsupported output transform {}", meta.output);
+        anyhow::ensure!(
+            meta.mean.len() == meta.features && meta.std.len() == meta.features,
+            "stats length mismatch"
+        );
+        let mut executables = Vec::new();
+        for &bucket in &meta.buckets {
+            let hlo = dir.join(format!("{}_b{bucket}.hlo.txt", op.id()));
+            let proto = xla::HloModuleProto::from_text_file(&hlo)
+                .map_err(|e| anyhow::anyhow!("loading {}: {e}", hlo.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            executables.push((bucket, exe));
+        }
+        executables.sort_by_key(|(b, _)| *b);
+        anyhow::ensure!(!executables.is_empty(), "no buckets for {}", op.id());
+        Ok(MlpModel { meta, executables })
+    }
+
+    /// Smallest bucket ≥ n (or the largest bucket, with chunking upstream).
+    fn bucket_for(&self, n: usize) -> usize {
+        self.executables
+            .iter()
+            .map(|(b, _)| *b)
+            .find(|b| *b >= n)
+            .unwrap_or_else(|| self.executables.last().unwrap().0)
+    }
+
+    fn executable(&self, bucket: usize) -> &xla::PjRtLoadedExecutable {
+        &self
+            .executables
+            .iter()
+            .find(|(b, _)| *b == bucket)
+            .expect("bucket_for returned a known bucket")
+            .1
+    }
+
+    /// Apply the training-time feature transform to one row.
+    fn normalize(&self, row: &[f64]) -> Vec<f32> {
+        row.iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let z = (v.max(0.0).ln_1p() - self.meta.mean[i]) / self.meta.std[i].max(1e-12);
+                z as f32
+            })
+            .collect()
+    }
+
+    /// Predict fwd+bwd times (ms) for feature rows. Rows longer than the
+    /// largest bucket are processed in chunks.
+    pub fn predict(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let nfeat = self.meta.features;
+        let max_bucket = self.executables.last().unwrap().0;
+        let mut out = Vec::with_capacity(rows.len());
+        let mut start = 0;
+        while start < rows.len() {
+            let n = (rows.len() - start).min(max_bucket);
+            let chunk = &rows[start..start + n];
+            let bucket = self.bucket_for(n);
+            // Flatten + pad (repeat the first row: harmless, ignored).
+            let mut flat: Vec<f32> = Vec::with_capacity(bucket * nfeat);
+            for row in chunk {
+                anyhow::ensure!(row.len() == nfeat, "feature row has {} values, want {nfeat}", row.len());
+                flat.extend(self.normalize(row));
+            }
+            for _ in n..bucket {
+                let first = flat[..nfeat].to_vec();
+                flat.extend(first);
+            }
+            // Single-copy literal construction (vec1+reshape would copy
+            // twice; see EXPERIMENTS.md §Perf).
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(flat.as_ptr() as *const u8, flat.len() * 4)
+            };
+            let literal = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &[bucket, nfeat],
+                bytes,
+            )?;
+            let result = self.executable(bucket).execute::<xla::Literal>(&[literal])?[0][0]
+                .to_literal_sync()?;
+            let values = result.to_tuple1()?.to_vec::<f32>()?;
+            anyhow::ensure!(values.len() == bucket, "unexpected output length");
+            out.extend(values[..n].iter().map(|v| (*v as f64).exp()));
+            start += n;
+        }
+        Ok(out)
+    }
+}
+
+/// All four op families' MLPs on one PJRT client. **Not `Send`** (PJRT
+/// handles are `Rc`-based) — wrap in [`super::MlpService`] to share.
+pub struct MlpRuntime {
+    models: HashMap<MlpOp, MlpModel>,
+}
+
+impl MlpRuntime {
+    /// Load every op family that has artifacts in `dir`. Errors if none do.
+    pub fn load(dir: &str) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let dir = Path::new(dir);
+        let mut models = HashMap::new();
+        let mut errors = Vec::new();
+        for op in MlpOp::ALL {
+            if dir.join(format!("{}.meta.json", op.id())).exists() {
+                match MlpModel::load(&client, dir, op) {
+                    Ok(m) => {
+                        models.insert(op, m);
+                    }
+                    Err(e) => errors.push(format!("{op}: {e}")),
+                }
+            }
+        }
+        anyhow::ensure!(
+            !models.is_empty(),
+            "no MLP artifacts found in {} (run `make artifacts`){}",
+            dir.display(),
+            if errors.is_empty() {
+                String::new()
+            } else {
+                format!("; load errors: {}", errors.join("; "))
+            }
+        );
+        if !errors.is_empty() {
+            eprintln!("warning: some MLP artifacts failed to load: {}", errors.join("; "));
+        }
+        Ok(MlpRuntime { models })
+    }
+
+    pub fn loaded_ops(&self) -> Vec<MlpOp> {
+        let mut v: Vec<MlpOp> = self.models.keys().copied().collect();
+        v.sort();
+        v
+    }
+
+    /// Predict from full feature rows (op features + GPU features already
+    /// appended). Used by the batching service, which mixes destinations.
+    pub fn predict_rows(&self, op: MlpOp, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let model = self
+            .models
+            .get(&op)
+            .ok_or_else(|| anyhow::anyhow!("no MLP artifact loaded for {op}"))?;
+        model.predict(rows)
+    }
+
+    /// Predict fwd+bwd times for op-feature rows on a destination GPU:
+    /// appends the four GPU features to each row and runs the op's MLP.
+    pub fn predict(&self, op: MlpOp, features: &[Vec<f64>], dest: Device) -> Result<Vec<f64>> {
+        let model = self
+            .models
+            .get(&op)
+            .ok_or_else(|| anyhow::anyhow!("no MLP artifact loaded for {op}"))?;
+        let gpu = gpu_features(dest);
+        let rows: Vec<Vec<f64>> = features
+            .iter()
+            .map(|f| {
+                let mut row = f.clone();
+                row.extend(gpu);
+                row
+            })
+            .collect();
+        model.predict(&rows)
+    }
+}

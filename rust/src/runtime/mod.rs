@@ -1,0 +1,33 @@
+//! PJRT runtime: executes the AOT-compiled JAX MLP predictors from Rust.
+//!
+//! Layer-2 (`python/compile/model.py` + the Pallas kernel) is lowered once
+//! at build time to HLO *text* (`make artifacts`); this module loads those
+//! artifacts with the `xla` crate (`HloModuleProto::from_text_file` →
+//! `XlaComputation` → `PjRtClient::compile`) and runs them on the PJRT CPU
+//! client. Python is never on this path.
+//!
+//! PJRT executables have **static shapes**, so each op's MLP is exported
+//! at several batch *buckets* (1, 8, 32, 128, 512); inference pads a
+//! request to the smallest bucket that fits. The PJRT objects wrap
+//! non-`Send` `Rc` handles, so [`service::MlpService`] owns them on a
+//! dedicated thread and hands out a `Send + Sync` handle that implements
+//! [`crate::predict::MlpBackend`] — this thread is also where cross-request
+//! dynamic batching happens (see [`crate::coordinator`]).
+
+pub mod mlp;
+pub mod service;
+
+pub use mlp::{MlpModel, MlpRuntime, RuntimeMeta};
+pub use service::{MlpService, MlpServiceHandle};
+
+use std::sync::Arc;
+
+use crate::predict::HybridPredictor;
+use crate::Result;
+
+/// Build the paper's full hybrid predictor from an artifacts directory.
+/// Spawns the PJRT service thread on first use.
+pub fn predictor_from_artifacts(dir: &str) -> Result<HybridPredictor> {
+    let handle = MlpService::spawn(dir.to_string())?;
+    Ok(HybridPredictor::with_mlp(Arc::new(handle)))
+}

@@ -1,0 +1,155 @@
+//! The MLP service thread: owns the (non-`Send`) PJRT runtime and batches
+//! prediction requests from any number of threads/tasks.
+//!
+//! This is the bottom half of the coordinator's dynamic batcher: callers
+//! enqueue `(op, feature rows, dest)` work items; the service thread
+//! drains everything queued, groups items by op family, executes one
+//! padded PJRT call per group, and scatters results back. Under
+//! concurrency this coalesces many small MLP calls into few large ones —
+//! the same reason serving systems batch (the MLP accounts for ~54% of
+//! predicted time in the paper's §5.2.3, so it is the hot path here).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::device::Device;
+use crate::opgraph::MlpOp;
+use crate::predict::MlpBackend;
+use crate::runtime::MlpRuntime;
+use crate::Result;
+
+/// One queued inference request.
+struct Request {
+    op: MlpOp,
+    features: Vec<Vec<f64>>,
+    dest: Device,
+    reply: mpsc::Sender<Result<Vec<f64>>>,
+}
+
+/// Counters exported by the service thread (for benches and tests).
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    pub requests: std::sync::atomic::AtomicU64,
+    pub rows: std::sync::atomic::AtomicU64,
+    pub executions: std::sync::atomic::AtomicU64,
+}
+
+/// Handle to the service thread. Cheap to clone; `Send + Sync`.
+#[derive(Clone)]
+pub struct MlpServiceHandle {
+    tx: mpsc::Sender<Request>,
+    stats: Arc<ServiceStats>,
+}
+
+/// The service itself (namespace for [`MlpService::spawn`]).
+pub struct MlpService;
+
+impl MlpService {
+    /// Spawn the service thread, loading artifacts from `dir`. Returns an
+    /// error if the artifacts fail to load (reported synchronously).
+    pub fn spawn(dir: String) -> Result<MlpServiceHandle> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let stats = Arc::new(ServiceStats::default());
+        let thread_stats = stats.clone();
+        std::thread::Builder::new()
+            .name("habitat-mlp".into())
+            .spawn(move || {
+                let runtime = match MlpRuntime::load(&dir) {
+                    Ok(r) => {
+                        let _ = ready_tx.send(Ok(()));
+                        r
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                Self::run(runtime, rx, thread_stats);
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("MLP service thread died during startup"))??;
+        Ok(MlpServiceHandle { tx, stats })
+    }
+
+    /// Service loop: block for one request, then drain the queue and batch.
+    fn run(runtime: MlpRuntime, rx: mpsc::Receiver<Request>, stats: Arc<ServiceStats>) {
+        use std::sync::atomic::Ordering::Relaxed;
+        while let Ok(first) = rx.recv() {
+            // Dynamic batching: opportunistically take everything queued.
+            let mut batch = vec![first];
+            while let Ok(req) = rx.try_recv() {
+                batch.push(req);
+            }
+            stats.requests.fetch_add(batch.len() as u64, Relaxed);
+
+            // Group by op family. Rows already carry per-dest GPU features
+            // (appended below per request), so dests can share a batch.
+            let mut by_op: std::collections::BTreeMap<MlpOp, Vec<usize>> = Default::default();
+            for (i, req) in batch.iter().enumerate() {
+                by_op.entry(req.op).or_default().push(i);
+            }
+
+            for (op, indices) in by_op {
+                // Build the combined row matrix for this op family.
+                let mut rows: Vec<Vec<f64>> = Vec::new();
+                let mut spans: Vec<(usize, usize)> = Vec::with_capacity(indices.len());
+                for &i in &indices {
+                    let req = &batch[i];
+                    let gpu = crate::dataset::gpu_features(req.dest);
+                    let start = rows.len();
+                    for f in &req.features {
+                        let mut row = f.clone();
+                        row.extend(gpu);
+                        rows.push(row);
+                    }
+                    spans.push((start, rows.len()));
+                }
+                stats.rows.fetch_add(rows.len() as u64, Relaxed);
+                stats.executions.fetch_add(1, Relaxed);
+
+                // One batched execution; scatter the results.
+                let result = runtime
+                    .predict_rows(op, &rows)
+                    .map_err(|e| e.to_string());
+                for (&i, (start, end)) in indices.iter().zip(spans) {
+                    let reply = match &result {
+                        Ok(all) => Ok(all[start..end].to_vec()),
+                        Err(e) => Err(anyhow::anyhow!("{e}")),
+                    };
+                    let _ = batch[i].reply.send(reply);
+                }
+            }
+        }
+    }
+
+    // (No Drop needed: the thread exits when the last handle is dropped
+    // and the channel disconnects.)
+}
+
+impl MlpServiceHandle {
+    pub fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+}
+
+impl MlpBackend for MlpServiceHandle {
+    fn predict_batch(&self, op: MlpOp, features: &[Vec<f64>], dest: Device) -> Result<Vec<f64>> {
+        if features.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request {
+                op,
+                features: features.to_vec(),
+                dest,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("MLP service thread is gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("MLP service dropped the request"))?
+    }
+}

@@ -1,0 +1,297 @@
+//! The timing model itself.
+
+use crate::device::{occupancy, GpuSpec};
+use crate::lowering::{Kernel, Precision};
+use crate::util::rng::{hash01, hash_str};
+
+/// Simulator tuning knobs. Defaults are calibrated so absolute iteration
+/// times land in the paper's observed ranges (tens to hundreds of ms).
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Kernel launch + driver overhead added to every kernel, ms.
+    pub launch_overhead_ms: f64,
+    /// Relative amplitude of deterministic measurement jitter (±).
+    pub noise: f64,
+    /// Seed mixed into the jitter hash, so independent "measurement runs"
+    /// can observe different noise.
+    pub salt: u64,
+    /// Fraction of the non-critical resource's time that cannot be hidden
+    /// behind the critical one (imperfect compute/memory overlap).
+    pub overlap_penalty: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            launch_overhead_ms: 0.0045,
+            noise: 0.03,
+            salt: 0,
+            overlap_penalty: 0.2,
+        }
+    }
+}
+
+/// The ground-truth GPU timing simulator.
+#[derive(Debug, Clone, Default)]
+pub struct Simulator {
+    pub config: SimConfig,
+}
+
+impl Simulator {
+    pub fn new(config: SimConfig) -> Self {
+        Simulator { config }
+    }
+
+    /// Simulator with jitter disabled (for calibration and property tests).
+    pub fn noiseless() -> Self {
+        Simulator::new(SimConfig {
+            noise: 0.0,
+            ..SimConfig::default()
+        })
+    }
+
+    /// Sustained compute efficiency (fraction of peak) for a kernel class
+    /// on an architecture. GEMM-class kernels come close to peak; the
+    /// remainder (pointwise, reductions) never do, but they are memory
+    /// bound so the compute leg rarely matters.
+    fn compute_efficiency(spec: &GpuSpec, k: &Kernel) -> f64 {
+        use crate::device::Arch::*;
+        if k.tensor_core_eligible {
+            match spec.arch {
+                Pascal => 0.62,
+                Volta => 0.70,
+                Turing => 0.66,
+            }
+        } else {
+            0.35
+        }
+    }
+
+    /// Peak FLOP/s available to this kernel under the given precision.
+    fn peak_flops(spec: &GpuSpec, k: &Kernel, precision: Precision) -> f64 {
+        match precision {
+            Precision::Fp32 => spec.peak_flops(),
+            Precision::Amp => {
+                if k.tensor_core_eligible {
+                    spec.peak_fp16_tflops * 1e12
+                } else {
+                    spec.peak_flops()
+                }
+            }
+        }
+    }
+
+    /// Execution time of one kernel on one GPU, in milliseconds.
+    pub fn kernel_time_ms(&self, spec: &GpuSpec, k: &Kernel, precision: Precision) -> f64 {
+        let wave = occupancy::wave_size(spec, &k.launch).max(1) as f64;
+        let blocks = k.launch.grid_blocks.max(1) as f64;
+
+        // Chip fill: a grid smaller than one wave leaves SMs idle.
+        let fill = (blocks / wave).min(1.0);
+
+        // Compute leg.
+        let eff_c = Self::compute_efficiency(spec, k);
+        let peak = Self::peak_flops(spec, k, precision);
+        let compute_ms = k.flops / (peak * eff_c * fill) * 1e3;
+
+        // Memory leg: achieved bandwidth derated by occupancy-driven
+        // memory-level parallelism, and by chip fill.
+        let occ = occupancy::occupancy_fraction(spec, &k.launch);
+        let mlp_factor = 0.55 + 0.45 * occ;
+        let fill_mem = 0.3 + 0.7 * fill;
+        let mem_ms = k.dram_bytes / (spec.achieved_bw_bytes() * mlp_factor * fill_mem) * 1e3;
+
+        // Imperfect overlap of the two legs.
+        let (hi, lo) = if compute_ms >= mem_ms {
+            (compute_ms, mem_ms)
+        } else {
+            (mem_ms, compute_ms)
+        };
+        let mut time = hi + self.config.overlap_penalty * lo;
+
+        // Tail-wave quantization: the last wave runs as long as a full one.
+        if blocks > wave {
+            let waves = (blocks / wave).ceil();
+            time *= waves * wave / blocks;
+        }
+
+        time += self.config.launch_overhead_ms;
+
+        // Deterministic measurement jitter.
+        if self.config.noise > 0.0 {
+            let u = hash01(&[
+                hash_str(&k.name),
+                hash_str(spec.name),
+                k.launch.grid_blocks,
+                k.flops.to_bits(),
+                self.config.salt,
+            ]);
+            time *= 1.0 + self.config.noise * (2.0 * u - 1.0);
+        }
+        time
+    }
+
+    /// Total time of a kernel sequence (one CUDA stream: times add).
+    pub fn kernels_time_ms(&self, spec: &GpuSpec, kernels: &[Kernel], precision: Precision) -> f64 {
+        kernels
+            .iter()
+            .map(|k| self.kernel_time_ms(spec, k, precision))
+            .sum()
+    }
+
+    /// Simulate a full training-iteration graph on a device: the ground
+    /// truth the paper obtains by running PyTorch on the destination GPU.
+    pub fn graph_time_ms(
+        &self,
+        spec: &GpuSpec,
+        graph: &crate::Graph,
+        precision: Precision,
+    ) -> f64 {
+        crate::lowering::lower_graph(graph, spec.arch, precision)
+            .iter()
+            .map(|(_, _, ks)| self.kernels_time_ms(spec, ks, precision))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, LaunchConfig};
+    use crate::lowering::elementwise::ew_kernel;
+    use crate::lowering::gemm::gemm_kernel;
+    use crate::Arch;
+
+    fn sim() -> Simulator {
+        Simulator::noiseless()
+    }
+
+    #[test]
+    fn bigger_kernel_takes_longer() {
+        let s = sim();
+        let v100 = Device::V100.spec();
+        let small = ew_kernel("relu", 1 << 16, 1.0, 2.0, Precision::Fp32);
+        let large = ew_kernel("relu", 1 << 24, 1.0, 2.0, Precision::Fp32);
+        assert!(
+            s.kernel_time_ms(v100, &large, Precision::Fp32)
+                > s.kernel_time_ms(v100, &small, Precision::Fp32)
+        );
+    }
+
+    #[test]
+    fn memory_bound_kernel_tracks_bandwidth_ratio() {
+        // A large memory-bound kernel should scale ≈ with achieved BW.
+        let s = sim();
+        let k = ew_kernel("add", 1 << 26, 2.0, 3.0, Precision::Fp32);
+        let t_v100 = s.kernel_time_ms(Device::V100.spec(), &k, Precision::Fp32);
+        let t_t4 = s.kernel_time_ms(Device::T4.spec(), &k, Precision::Fp32);
+        let ratio = t_t4 / t_v100;
+        let bw_ratio = Device::V100.spec().achieved_mem_bw_gbps / Device::T4.spec().achieved_mem_bw_gbps;
+        assert!((ratio / bw_ratio - 1.0).abs() < 0.35, "ratio={ratio}, bw={bw_ratio}");
+    }
+
+    #[test]
+    fn compute_bound_gemm_tracks_flops_ratio_loosely() {
+        let s = sim();
+        let k = gemm_kernel("big", 1, 4096, 4096, 4096, Arch::Volta, Precision::Fp32, 6144);
+        let t_v100 = s.kernel_time_ms(Device::V100.spec(), &k, Precision::Fp32);
+        let k_p = gemm_kernel("big", 1, 4096, 4096, 4096, Arch::Pascal, Precision::Fp32, 4096);
+        let t_p4000 = s.kernel_time_ms(Device::P4000.spec(), &k_p, Precision::Fp32);
+        let ratio = t_p4000 / t_v100;
+        let flops_ratio = 15.7 / 5.3;
+        assert!(ratio > 0.5 * flops_ratio && ratio < 2.0 * flops_ratio, "ratio={ratio}");
+    }
+
+    #[test]
+    fn launch_overhead_floors_tiny_kernels() {
+        let s = sim();
+        let k = ew_kernel("tiny", 32, 1.0, 2.0, Precision::Fp32);
+        let t = s.kernel_time_ms(Device::V100.spec(), &k, Precision::Fp32);
+        assert!(t >= s.config.launch_overhead_ms);
+        assert!(t < 3.0 * s.config.launch_overhead_ms);
+    }
+
+    #[test]
+    fn tail_wave_quantization_monotone_grid() {
+        // Time must be monotonically nondecreasing in grid size for fixed
+        // per-block work... (here: fixed total work split over more blocks
+        // is not required monotone; instead check tail effect directly).
+        let s = sim();
+        let v100 = Device::V100.spec();
+        let mk = |blocks: u64| Kernel {
+            name: "t".into(),
+            launch: LaunchConfig::new(blocks, 256, 32, 0),
+            flops: 1e9,
+            dram_bytes: 1e8,
+            tensor_core_eligible: false,
+        };
+        // 8 blocks/SM × 80 SMs = 640-wide wave: 641 blocks ⇒ 2 waves.
+        let exact = s.kernel_time_ms(v100, &mk(640), Precision::Fp32);
+        let spill = s.kernel_time_ms(v100, &mk(641), Precision::Fp32);
+        assert!(spill > exact * 1.5, "tail wave must hurt: {exact} vs {spill}");
+    }
+
+    #[test]
+    fn amp_speeds_up_gemm_on_tensor_core_archs_only() {
+        let s = sim();
+        let k = gemm_kernel("g", 1, 2048, 2048, 2048, Arch::Volta, Precision::Fp32, 6144);
+        let v100 = Device::V100.spec();
+        let fp32 = s.kernel_time_ms(v100, &k, Precision::Fp32);
+        let amp = s.kernel_time_ms(v100, &k, Precision::Amp);
+        assert!(amp < fp32 * 0.5, "tensor cores should win big: {fp32} vs {amp}");
+
+        let kp = gemm_kernel("g", 1, 2048, 2048, 2048, Arch::Pascal, Precision::Fp32, 4096);
+        let p4000 = Device::P4000.spec();
+        let fp32_p = s.kernel_time_ms(p4000, &kp, Precision::Fp32);
+        let amp_p = s.kernel_time_ms(p4000, &kp, Precision::Amp);
+        // P4000 has no fast FP16 path: only memory traffic shrinks.
+        assert!(amp_p > 0.5 * fp32_p);
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_deterministic() {
+        let noisy = Simulator::default();
+        let clean = Simulator::noiseless();
+        let k = ew_kernel("relu", 1 << 20, 1.0, 2.0, Precision::Fp32);
+        let v100 = Device::V100.spec();
+        let a = noisy.kernel_time_ms(v100, &k, Precision::Fp32);
+        let b = noisy.kernel_time_ms(v100, &k, Precision::Fp32);
+        let c = clean.kernel_time_ms(v100, &k, Precision::Fp32);
+        assert_eq!(a, b, "same salt ⇒ same measurement");
+        assert!((a / c - 1.0).abs() <= noisy.config.noise + 1e-9);
+    }
+
+    #[test]
+    fn different_salt_changes_measurement() {
+        let s1 = Simulator::new(SimConfig { salt: 1, ..SimConfig::default() });
+        let s2 = Simulator::new(SimConfig { salt: 2, ..SimConfig::default() });
+        let k = ew_kernel("relu", 1 << 20, 1.0, 2.0, Precision::Fp32);
+        let v100 = Device::V100.spec();
+        assert_ne!(
+            s1.kernel_time_ms(v100, &k, Precision::Fp32),
+            s2.kernel_time_ms(v100, &k, Precision::Fp32)
+        );
+    }
+
+    #[test]
+    fn underfilled_chip_slower_than_filled_per_unit_work() {
+        let s = sim();
+        let v100 = Device::V100.spec();
+        // Same total FLOPs/bytes, one wave vs a tiny grid.
+        let filled = Kernel {
+            name: "f".into(),
+            launch: LaunchConfig::new(640, 256, 32, 0),
+            flops: 1e10,
+            dram_bytes: 1e8,
+            tensor_core_eligible: true,
+        };
+        let tiny = Kernel {
+            launch: LaunchConfig::new(8, 256, 32, 0),
+            ..filled.clone()
+        };
+        assert!(
+            s.kernel_time_ms(v100, &tiny, Precision::Fp32)
+                > 2.0 * s.kernel_time_ms(v100, &filled, Precision::Fp32)
+        );
+    }
+}

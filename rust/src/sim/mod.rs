@@ -1,0 +1,26 @@
+//! Kernel-granularity GPU timing simulator — the ground-truth substrate.
+//!
+//! The paper measures kernels on six physical GPUs; this module stands in
+//! for those GPUs (DESIGN.md §1). Given a lowered [`Kernel`] and a
+//! [`GpuSpec`], it produces an execution time from a calibrated
+//! wave/roofline model that is *deliberately richer* than the predictor's
+//! own model:
+//!
+//! * per-architecture compute/memory efficiency curves,
+//! * occupancy-dependent memory-level parallelism,
+//! * chip under-fill for small grids and tail-wave quantization for
+//!   large ones,
+//! * fixed kernel launch overhead,
+//! * imperfect compute/memory overlap (not a pure roofline `max`),
+//! * tensor-core speedups under mixed precision,
+//! * deterministic per-kernel measurement jitter.
+//!
+//! Because the simulator models effects wave scaling cannot see (and the
+//! lowering already made kernel-varying ops use different algorithms per
+//! architecture), Habitat's predictions against this ground truth carry
+//! realistic errors instead of being trivially exact.
+
+pub mod engine;
+
+pub use crate::lowering::Precision;
+pub use engine::{SimConfig, Simulator};

@@ -1,0 +1,228 @@
+//! Operation tracking — the paper's Listing 1 / §4.1.
+//!
+//! In the paper, `habitat.OperationTracker` monkey-patches PyTorch, runs a
+//! training iteration on the origin GPU, re-runs each operation in
+//! isolation to time it with CUDA events, and records kernel metadata via
+//! CUPTI. Here, the origin GPU is the [`crate::sim::Simulator`]: tracking
+//! a [`crate::Graph`] lowers every op for the origin architecture and
+//! "measures" each kernel on the simulator, producing the same trace
+//! content — per-op forward/backward kernel timings plus launch configs
+//! and arithmetic-intensity metrics.
+
+
+pub mod persist;
+
+use crate::device::Device;
+use crate::lowering::{self, Kernel, Pass, Precision};
+use crate::sim::Simulator;
+use crate::Graph;
+
+/// One timed kernel within an operation, as CUPTI would report it.
+#[derive(Debug, Clone)]
+pub struct KernelMeasurement {
+    pub kernel: Kernel,
+    /// Measured execution time on the origin GPU, ms.
+    pub time_ms: f64,
+}
+
+/// One tracked operation: the op itself plus its measured kernels.
+#[derive(Debug, Clone)]
+pub struct TrackedOp {
+    /// Index in the graph's execution order.
+    pub index: usize,
+    pub op: crate::Op,
+    pub fwd: Vec<KernelMeasurement>,
+    pub bwd: Vec<KernelMeasurement>,
+}
+
+impl TrackedOp {
+    pub fn fwd_ms(&self) -> f64 {
+        self.fwd.iter().map(|k| k.time_ms).sum()
+    }
+
+    pub fn bwd_ms(&self) -> f64 {
+        self.bwd.iter().map(|k| k.time_ms).sum()
+    }
+
+    /// Forward + backward time (the quantity Habitat predicts per op).
+    pub fn total_ms(&self) -> f64 {
+        self.fwd_ms() + self.bwd_ms()
+    }
+}
+
+/// The tracked trace of one training iteration on the origin GPU.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub model: String,
+    pub batch_size: usize,
+    pub origin: Device,
+    pub precision: Precision,
+    pub ops: Vec<TrackedOp>,
+}
+
+impl Trace {
+    /// Measured iteration execution time on the origin GPU, ms.
+    pub fn run_time_ms(&self) -> f64 {
+        self.ops.iter().map(|o| o.total_ms()).sum()
+    }
+
+    /// Predict this iteration's execution time on a different GPU using
+    /// wave scaling only (no MLP artifacts needed). For the paper's full
+    /// hybrid scheme use [`crate::predict::HybridPredictor`].
+    pub fn to_device(&self, dest: Device) -> crate::predict::PredictedTrace {
+        crate::predict::HybridPredictor::wave_only().predict(self, dest)
+    }
+
+    /// Per-op share of iteration time — the "importance" annotation of the
+    /// paper's Fig. 4, keyed by the op's short name.
+    pub fn op_importance(&self) -> Vec<(String, f64)> {
+        let total = self.run_time_ms();
+        let mut by_name: std::collections::BTreeMap<String, f64> = Default::default();
+        for op in &self.ops {
+            *by_name.entry(op.op.kind.short_name().to_string()).or_default() += op.total_ms();
+        }
+        let mut v: Vec<(String, f64)> = by_name
+            .into_iter()
+            .map(|(k, ms)| (k, ms / total))
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+}
+
+/// Records the operations of a training iteration on an origin device.
+#[derive(Debug, Clone)]
+pub struct OperationTracker {
+    origin: Device,
+    precision: Precision,
+    sim: Simulator,
+}
+
+impl OperationTracker {
+    /// Track on `origin` in FP32 with the default simulator.
+    pub fn new(origin: Device) -> Self {
+        OperationTracker {
+            origin,
+            precision: Precision::Fp32,
+            sim: Simulator::default(),
+        }
+    }
+
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    /// Replace the measurement substrate (e.g. a noiseless simulator, or a
+    /// different measurement-noise salt).
+    pub fn with_simulator(mut self, sim: Simulator) -> Self {
+        self.sim = sim;
+        self
+    }
+
+    pub fn origin(&self) -> Device {
+        self.origin
+    }
+
+    /// "Run" one training iteration of `graph` and record every operation.
+    pub fn track(&self, graph: &Graph) -> Trace {
+        let spec = self.origin.spec();
+        let mut ops: Vec<TrackedOp> = graph
+            .ops
+            .iter()
+            .enumerate()
+            .map(|(index, op)| TrackedOp {
+                index,
+                op: op.clone(),
+                fwd: Vec::new(),
+                bwd: Vec::new(),
+            })
+            .collect();
+
+        for (index, pass, kernels) in lowering::lower_graph(graph, spec.arch, self.precision) {
+            let measured: Vec<KernelMeasurement> = kernels
+                .into_iter()
+                .map(|kernel| {
+                    let time_ms = self.sim.kernel_time_ms(spec, &kernel, self.precision);
+                    KernelMeasurement { kernel, time_ms }
+                })
+                .collect();
+            match pass {
+                Pass::Forward => ops[index].fwd = measured,
+                Pass::Backward => ops[index].bwd = measured,
+            }
+        }
+
+        Trace {
+            model: graph.name.clone(),
+            batch_size: graph.batch_size,
+            origin: self.origin,
+            precision: self.precision,
+            ops,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opgraph::{EwKind, Op, OpKind};
+
+    fn toy_graph() -> Graph {
+        let mut g = Graph::new("toy", 8);
+        g.push(Op::new(
+            "fc1",
+            OpKind::Linear {
+                in_features: 64,
+                out_features: 64,
+                bias: true,
+            },
+            vec![8, 64],
+        ));
+        g.push(Op::new("act", OpKind::Elementwise { kind: EwKind::Relu }, vec![8, 64]));
+        g
+    }
+
+    #[test]
+    fn trace_covers_all_ops_with_both_passes() {
+        let trace = OperationTracker::new(Device::V100).track(&toy_graph());
+        assert_eq!(trace.ops.len(), 2);
+        for op in &trace.ops {
+            assert!(!op.fwd.is_empty(), "{} missing fwd", op.op.name);
+            assert!(!op.bwd.is_empty(), "{} missing bwd", op.op.name);
+            assert!(op.total_ms() > 0.0);
+        }
+    }
+
+    #[test]
+    fn run_time_is_sum_of_ops() {
+        let trace = OperationTracker::new(Device::T4).track(&toy_graph());
+        let sum: f64 = trace.ops.iter().map(|o| o.total_ms()).sum();
+        assert!((trace.run_time_ms() - sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tracking_is_deterministic() {
+        let g = toy_graph();
+        let a = OperationTracker::new(Device::P100).track(&g);
+        let b = OperationTracker::new(Device::P100).track(&g);
+        assert_eq!(a.run_time_ms(), b.run_time_ms());
+    }
+
+    #[test]
+    fn importance_sums_to_one() {
+        let trace = OperationTracker::new(Device::Rtx2080Ti).track(&toy_graph());
+        let total: f64 = trace.op_importance().iter().map(|(_, f)| f).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn amp_tracking_differs_from_fp32() {
+        let g = toy_graph();
+        let fp32 = OperationTracker::new(Device::V100).track(&g);
+        let amp = OperationTracker::new(Device::V100)
+            .with_precision(Precision::Amp)
+            .track(&g);
+        assert_ne!(fp32.run_time_ms(), amp.run_time_ms());
+    }
+}

@@ -1,0 +1,328 @@
+//! Trace (de)serialization.
+//!
+//! The paper's workflow separates *profiling* (done once, on whatever GPU
+//! the user has — the shipped artifacts [106] are exactly such recorded
+//! kernel metadata) from *prediction* (run anywhere, any number of
+//! times). This module makes traces durable as JSON so the CLI can do
+//! `habitat track --out trace.json` on one machine and
+//! `habitat predict --trace trace.json --dest v100` on another.
+
+use crate::device::{Device, LaunchConfig};
+use crate::lowering::{Kernel, Precision};
+use crate::opgraph::{Op, OpKind};
+use crate::tracker::{KernelMeasurement, Trace, TrackedOp};
+use crate::util::json::{self, Json};
+use crate::Result;
+
+fn kernel_to_json(m: &KernelMeasurement) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(m.kernel.name.clone())),
+        ("grid", Json::Num(m.kernel.launch.grid_blocks as f64)),
+        ("threads", Json::Num(m.kernel.launch.threads_per_block as f64)),
+        ("regs", Json::Num(m.kernel.launch.regs_per_thread as f64)),
+        ("smem", Json::Num(m.kernel.launch.smem_per_block as f64)),
+        ("flops", Json::Num(m.kernel.flops)),
+        ("dram_bytes", Json::Num(m.kernel.dram_bytes)),
+        ("tc", Json::Bool(m.kernel.tensor_core_eligible)),
+        ("time_ms", Json::Num(m.time_ms)),
+    ])
+}
+
+fn kernel_from_json(v: &Json) -> Result<KernelMeasurement> {
+    let num = |k: &str| -> Result<f64> {
+        v.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("kernel missing field {k:?}"))
+    };
+    Ok(KernelMeasurement {
+        kernel: Kernel {
+            name: v.req_str("name")?.to_string(),
+            launch: LaunchConfig::new(
+                num("grid")? as u64,
+                num("threads")? as u32,
+                num("regs")? as u32,
+                num("smem")? as u32,
+            ),
+            flops: num("flops")?,
+            dram_bytes: num("dram_bytes")?,
+            tensor_core_eligible: matches!(v.get("tc"), Some(Json::Bool(true))),
+        },
+        time_ms: num("time_ms")?,
+    })
+}
+
+impl Trace {
+    /// Serialize the trace (including all kernel metadata) to JSON.
+    pub fn to_json(&self) -> String {
+        let ops: Vec<Json> = self
+            .ops
+            .iter()
+            .map(|op| {
+                Json::obj(vec![
+                    ("index", Json::Num(op.index as f64)),
+                    ("name", Json::Str(op.op.name.clone())),
+                    // The op kind round-trips through its debug form plus
+                    // the feature-relevant fields; prediction only needs
+                    // kind-classification + features + input shape.
+                    ("kind", Json::Str(serialize_kind(&op.op.kind))),
+                    (
+                        "input",
+                        Json::Arr(op.op.input.iter().map(|d| Json::Num(*d as f64)).collect()),
+                    ),
+                    ("fwd", Json::Arr(op.fwd.iter().map(kernel_to_json).collect())),
+                    ("bwd", Json::Arr(op.bwd.iter().map(kernel_to_json).collect())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("format", Json::Str("habitat-trace-v1".into())),
+            ("model", Json::Str(self.model.clone())),
+            ("batch_size", Json::Num(self.batch_size as f64)),
+            ("origin", Json::Str(self.origin.id().to_string())),
+            (
+                "precision",
+                Json::Str(match self.precision {
+                    Precision::Fp32 => "fp32".into(),
+                    Precision::Amp => "amp".into(),
+                }),
+            ),
+            ("ops", Json::Arr(ops)),
+        ])
+        .dump()
+    }
+
+    /// Parse a trace serialized by [`Trace::to_json`].
+    pub fn from_json(text: &str) -> Result<Trace> {
+        let v = json::parse(text)?;
+        anyhow::ensure!(
+            v.req_str("format")? == "habitat-trace-v1",
+            "unknown trace format"
+        );
+        let origin = Device::parse(v.req_str("origin")?)
+            .ok_or_else(|| anyhow::anyhow!("unknown origin device in trace"))?;
+        let precision = match v.req_str("precision")? {
+            "fp32" => Precision::Fp32,
+            "amp" => Precision::Amp,
+            other => anyhow::bail!("unknown precision {other:?}"),
+        };
+        let mut ops = Vec::new();
+        for op_v in v
+            .get("ops")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing ops array"))?
+        {
+            let input: Vec<usize> = op_v
+                .req_f64_array("input")?
+                .into_iter()
+                .map(|d| d as usize)
+                .collect();
+            let kind = parse_kind(op_v.req_str("kind")?)?;
+            let parse_kernels = |key: &str| -> Result<Vec<KernelMeasurement>> {
+                op_v.get(key)
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(kernel_from_json)
+                    .collect()
+            };
+            ops.push(TrackedOp {
+                index: op_v.req_usize("index")?,
+                op: Op::new(op_v.req_str("name")?, kind, input),
+                fwd: parse_kernels("fwd")?,
+                bwd: parse_kernels("bwd")?,
+            });
+        }
+        Ok(Trace {
+            model: v.req_str("model")?.to_string(),
+            batch_size: v.req_usize("batch_size")?,
+            origin,
+            precision,
+            ops,
+        })
+    }
+
+    /// Write the trace to a file.
+    pub fn save<P: AsRef<std::path::Path>>(&self, path: P) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+
+    /// Load a trace from a file.
+    pub fn load<P: AsRef<std::path::Path>>(path: P) -> Result<Trace> {
+        Trace::from_json(&std::fs::read_to_string(path)?)
+    }
+}
+
+/// Compact kind encoding: `name(arg,arg,...)`.
+fn serialize_kind(kind: &OpKind) -> String {
+    use OpKind::*;
+    match kind {
+        Conv2d { in_ch, out_ch, kernel, stride, padding, bias } => {
+            format!("conv2d({in_ch},{out_ch},{kernel},{stride},{padding},{})", *bias as u8)
+        }
+        ConvTranspose2d { in_ch, out_ch, kernel, stride, padding, bias } => {
+            format!("conv_t2d({in_ch},{out_ch},{kernel},{stride},{padding},{})", *bias as u8)
+        }
+        Linear { in_features, out_features, bias } => {
+            format!("linear({in_features},{out_features},{})", *bias as u8)
+        }
+        BatchedMatmul { b, l, m, r } => format!("bmm({b},{l},{m},{r})"),
+        Lstm { input, hidden, layers, seq, bidirectional, bias } => format!(
+            "lstm({input},{hidden},{layers},{seq},{},{})",
+            *bidirectional as u8, *bias as u8
+        ),
+        BatchNorm2d { channels } => format!("bn2d({channels})"),
+        LayerNorm { dim } => format!("ln({dim})"),
+        Elementwise { kind } => format!("ew({kind:?})"),
+        Pool2d { kind, kernel, stride, padding } => {
+            format!("pool({kind:?},{kernel},{stride},{padding})")
+        }
+        Softmax { dim } => format!("softmax({dim})"),
+        Embedding { vocab, dim } => format!("embedding({vocab},{dim})"),
+        CrossEntropy { classes } => format!("ce({classes})"),
+        Concat { inputs } => format!("cat({inputs})"),
+        OptimizerStep { kind, params } => format!("opt({kind:?},{params})"),
+    }
+}
+
+fn parse_kind(s: &str) -> Result<OpKind> {
+    let (name, args) = s
+        .split_once('(')
+        .ok_or_else(|| anyhow::anyhow!("bad kind {s:?}"))?;
+    let args = args.trim_end_matches(')');
+    let parts: Vec<&str> = if args.is_empty() { vec![] } else { args.split(',').collect() };
+    let n = |i: usize| -> Result<usize> {
+        parts
+            .get(i)
+            .ok_or_else(|| anyhow::anyhow!("kind {s:?}: missing arg {i}"))?
+            .parse::<usize>()
+            .map_err(|e| anyhow::anyhow!("kind {s:?}: {e}"))
+    };
+    let b = |i: usize| -> Result<bool> { Ok(n(i)? != 0) };
+    use crate::opgraph::{EwKind, OptimizerKind, PoolKind};
+    use OpKind::*;
+    Ok(match name {
+        "conv2d" => Conv2d {
+            in_ch: n(0)?, out_ch: n(1)?, kernel: n(2)?, stride: n(3)?, padding: n(4)?, bias: b(5)?,
+        },
+        "conv_t2d" => ConvTranspose2d {
+            in_ch: n(0)?, out_ch: n(1)?, kernel: n(2)?, stride: n(3)?, padding: n(4)?, bias: b(5)?,
+        },
+        "linear" => Linear { in_features: n(0)?, out_features: n(1)?, bias: b(2)? },
+        "bmm" => BatchedMatmul { b: n(0)?, l: n(1)?, m: n(2)?, r: n(3)? },
+        "lstm" => Lstm {
+            input: n(0)?, hidden: n(1)?, layers: n(2)?, seq: n(3)?,
+            bidirectional: b(4)?, bias: b(5)?,
+        },
+        "bn2d" => BatchNorm2d { channels: n(0)? },
+        "ln" => LayerNorm { dim: n(0)? },
+        "softmax" => Softmax { dim: n(0)? },
+        "embedding" => Embedding { vocab: n(0)?, dim: n(1)? },
+        "ce" => CrossEntropy { classes: n(0)? },
+        "cat" => Concat { inputs: n(0)? },
+        "ew" => {
+            let kind = match parts[0] {
+                "Relu" => EwKind::Relu,
+                "LeakyRelu" => EwKind::LeakyRelu,
+                "Tanh" => EwKind::Tanh,
+                "Sigmoid" => EwKind::Sigmoid,
+                "Gelu" => EwKind::Gelu,
+                "Add" => EwKind::Add,
+                "Mul" => EwKind::Mul,
+                "Scale" => EwKind::Scale,
+                "Dropout" => EwKind::Dropout,
+                "Copy" => EwKind::Copy,
+                other => anyhow::bail!("unknown elementwise kind {other:?}"),
+            };
+            Elementwise { kind }
+        }
+        "pool" => {
+            let kind = match parts[0] {
+                "Max" => PoolKind::Max,
+                "Avg" => PoolKind::Avg,
+                "AdaptiveAvg" => PoolKind::AdaptiveAvg,
+                other => anyhow::bail!("unknown pool kind {other:?}"),
+            };
+            Pool2d { kind, kernel: n(1)?, stride: n(2)?, padding: n(3)? }
+        }
+        "opt" => {
+            let kind = match parts[0] {
+                "Sgd" => OptimizerKind::Sgd,
+                "Adam" => OptimizerKind::Adam,
+                other => anyhow::bail!("unknown optimizer kind {other:?}"),
+            };
+            OptimizerStep {
+                kind,
+                params: parts[1]
+                    .parse::<u64>()
+                    .map_err(|e| anyhow::anyhow!("opt params: {e}"))?,
+            }
+        }
+        other => anyhow::bail!("unknown op kind {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tracker::OperationTracker;
+
+    #[test]
+    fn roundtrip_preserves_everything_that_matters() {
+        for model in ["resnet50", "gnmt", "transformer", "dcgan"] {
+            let graph = crate::models::by_name(model, 16).unwrap();
+            let trace = OperationTracker::new(Device::T4).track(&graph);
+            let back = Trace::from_json(&trace.to_json()).unwrap();
+            assert_eq!(back.model, trace.model);
+            assert_eq!(back.batch_size, trace.batch_size);
+            assert_eq!(back.origin, trace.origin);
+            assert_eq!(back.ops.len(), trace.ops.len());
+            assert!((back.run_time_ms() - trace.run_time_ms()).abs() < 1e-9);
+            // Predictions from the deserialized trace must be identical.
+            let p1 = crate::predict::HybridPredictor::wave_only().predict(&trace, Device::V100);
+            let p2 = crate::predict::HybridPredictor::wave_only().predict(&back, Device::V100);
+            assert!(
+                (p1.run_time_ms() - p2.run_time_ms()).abs() < 1e-9,
+                "{model}: {} vs {}",
+                p1.run_time_ms(),
+                p2.run_time_ms()
+            );
+            // Kind classification survives (MLP features identical).
+            for (a, b) in trace.ops.iter().zip(&back.ops) {
+                assert_eq!(a.op.mlp_features(), b.op.mlp_features(), "{model}/{}", a.op.name);
+            }
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let graph = crate::models::mlp_benchmark_net(8);
+        let trace = OperationTracker::new(Device::P100).track(&graph);
+        let path = std::env::temp_dir().join("habitat_trace_test.json");
+        trace.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(back.ops.len(), trace.ops.len());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Trace::from_json("{}").is_err());
+        assert!(Trace::from_json("{\"format\":\"habitat-trace-v1\"}").is_err());
+        assert!(Trace::from_json("not json").is_err());
+        assert!(parse_kind("frobnicate(1,2)").is_err());
+        assert!(parse_kind("conv2d(1)").is_err());
+    }
+
+    #[test]
+    fn amp_precision_roundtrips() {
+        let graph = crate::models::mlp_benchmark_net(8);
+        let trace = OperationTracker::new(Device::V100)
+            .with_precision(Precision::Amp)
+            .track(&graph);
+        let back = Trace::from_json(&trace.to_json()).unwrap();
+        assert_eq!(back.precision, Precision::Amp);
+    }
+}

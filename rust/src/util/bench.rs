@@ -1,0 +1,80 @@
+//! Tiny benchmark harness (the image has no criterion).
+//!
+//! `cargo bench` runs each `[[bench]]` target's `main()`; this module
+//! provides the timing loop: warmup, then timed iterations, reporting
+//! mean / p50 / p95 and throughput. Deterministic workloads + wall-clock
+//! medians make results stable enough for the §Perf iteration log.
+
+use std::time::Instant;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10.1} µs/iter (p50 {:>9.1}, p95 {:>9.1}, n={})",
+            self.name, self.mean_us, self.p50_us, self.p95_us, self.iters
+        );
+    }
+}
+
+/// Run `f` with warmup then timed iterations; prints and returns stats.
+/// The closure's return value is black-boxed to keep the optimizer honest.
+pub fn bench<T, F: FnMut() -> T>(name: &str, mut f: F) -> BenchResult {
+    // Calibrate: aim for ~0.6 s of timed work, 3..=200 iterations.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().as_secs_f64().max(1e-7);
+    let iters = ((0.6 / once) as usize).clamp(3, 200);
+
+    // Warmup.
+    for _ in 0..(iters / 5).max(1) {
+        std::hint::black_box(f());
+    }
+
+    let mut samples_us = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples_us.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    let mean = crate::util::stats::mean(&samples_us);
+    let p50 = crate::util::stats::percentile(&samples_us, 50.0);
+    let p95 = crate::util::stats::percentile(&samples_us, 95.0);
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_us: mean,
+        p50_us: p50,
+        p95_us: p95,
+    };
+    result.print();
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.mean_us >= 0.0);
+        assert!(r.p50_us <= r.p95_us + 1e-9);
+        assert!(r.iters >= 3);
+    }
+}

@@ -1,0 +1,110 @@
+//! Minimal CSV writing/reading for the MLP dataset pipeline and experiment
+//! results. Values are plain (no quoting needed): numbers and identifiers.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use crate::Result;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    /// Create the file (truncating) and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            out,
+            columns: header.len(),
+        })
+    }
+
+    /// Write one row of string fields.
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        debug_assert_eq!(fields.len(), self.columns, "column count mismatch");
+        writeln!(self.out, "{}", fields.join(","))?;
+        Ok(())
+    }
+
+    /// Write one row of f64 fields with compact formatting.
+    pub fn row_f64(&mut self, fields: &[f64]) -> Result<()> {
+        let s: Vec<String> = fields.iter().map(|v| format_num(*v)).collect();
+        self.row(&s)
+    }
+
+    /// Flush buffered rows to disk.
+    pub fn finish(mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Format a float compactly: integers without a trailing `.0`, otherwise
+/// up to 6 significant decimals.
+pub fn format_num(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+/// Read a CSV file into (header, rows-of-f64). Non-numeric fields error.
+pub fn read_numeric<P: AsRef<Path>>(path: P) -> Result<(Vec<String>, Vec<Vec<f64>>)> {
+    let f = BufReader::new(File::open(path)?);
+    let mut lines = f.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty csv"))??
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let mut rows = Vec::new();
+    for line in lines {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        rows.push(
+            line.split(',')
+                .map(|s| s.trim().parse::<f64>().map_err(|e| anyhow::anyhow!("{e}: {s:?}")))
+                .collect::<Result<Vec<f64>>>()?,
+        );
+    }
+    Ok((header, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("habitat_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row_f64(&[1.0, 2.5]).unwrap();
+        w.row_f64(&[3.0, 4.0]).unwrap();
+        w.finish().unwrap();
+        let (header, rows) = read_numeric(&path).unwrap();
+        assert_eq!(header, vec!["a", "b"]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0][0], 1.0);
+        assert!((rows[0][1] - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn format_compact() {
+        assert_eq!(format_num(3.0), "3");
+        assert_eq!(format_num(3.25), "3.250000");
+    }
+}

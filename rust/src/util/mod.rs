@@ -1,0 +1,9 @@
+//! Small shared utilities: deterministic RNG, statistics, CSV I/O.
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

@@ -1,0 +1,171 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The dataset sampler (§4.3.1 of the paper) and the simulator's
+//! measurement jitter both need *reproducible* randomness: the paper uses a
+//! fixed seed so the same input configurations are sampled on every GPU.
+//! We use SplitMix64 — tiny, fast, and statistically solid for this use.
+
+/// SplitMix64 PRNG (Steele, Lea & Flood 2014). Deterministic for a seed.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a generator from a seed. The same seed always yields the same
+    /// stream, on every platform.
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    pub fn int_range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        let span = hi - lo + 1;
+        lo + self.next_u64() % span
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        self.int_range(lo as u64, hi as u64) as usize
+    }
+
+    /// Log-uniform integer in `[lo, hi]` (inclusive). Layer-dimension
+    /// parameters (channels, features) are sampled log-uniformly so small
+    /// and large configurations are both well represented — matching how
+    /// real DNN layer sizes are distributed across torchvision models.
+    pub fn log_int_range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo >= 1 && lo <= hi);
+        let (llo, lhi) = ((lo as f64).ln(), (hi as f64).ln());
+        let v = (llo + self.next_f64() * (lhi - llo)).exp().round() as u64;
+        v.clamp(lo, hi)
+    }
+
+    /// Bernoulli draw.
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Pick a random element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_range(0, xs.len() - 1)]
+    }
+}
+
+/// Stateless deterministic hash → `[0, 1)` float. Used for the simulator's
+/// per-kernel measurement jitter so that "measurements" are noisy but
+/// perfectly reproducible (same kernel + device + salt ⇒ same jitter).
+pub fn hash01(parts: &[u64]) -> f64 {
+    let mut h: u64 = 0xcbf29ce484222325; // FNV offset basis
+    for &p in parts {
+        for b in p.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3); // FNV prime
+        }
+    }
+    // Finalize through one SplitMix64 round for avalanche.
+    Rng::new(h).next_f64()
+}
+
+/// Hash a string into a u64 (FNV-1a), for use with [`hash01`].
+pub fn hash_str(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn int_range_inclusive_bounds() {
+        let mut r = Rng::new(3);
+        let (mut saw_lo, mut saw_hi) = (false, false);
+        for _ in 0..10_000 {
+            let v = r.int_range(5, 8);
+            assert!((5..=8).contains(&v));
+            saw_lo |= v == 5;
+            saw_hi |= v == 8;
+        }
+        assert!(saw_lo && saw_hi);
+    }
+
+    #[test]
+    fn log_range_clamps_and_covers() {
+        let mut r = Rng::new(11);
+        for _ in 0..10_000 {
+            let v = r.log_int_range(3, 2048);
+            assert!((3..=2048).contains(&v));
+        }
+    }
+
+    #[test]
+    fn log_range_biases_small() {
+        // Log-uniform over [1, 1024]: ~half the mass below 32.
+        let mut r = Rng::new(13);
+        let below = (0..10_000)
+            .filter(|_| r.log_int_range(1, 1024) <= 32)
+            .count();
+        assert!(below > 4_000, "below={below}");
+    }
+
+    #[test]
+    fn hash01_deterministic_and_unit() {
+        let a = hash01(&[1, 2, 3]);
+        let b = hash01(&[1, 2, 3]);
+        let c = hash01(&[1, 2, 4]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!((0.0..1.0).contains(&a));
+    }
+
+    #[test]
+    fn hash_str_stable() {
+        assert_eq!(hash_str("gemm"), hash_str("gemm"));
+        assert_ne!(hash_str("gemm"), hash_str("conv"));
+    }
+}

