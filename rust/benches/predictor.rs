@@ -1,10 +1,13 @@
-//! Benchmarks for the prediction hot path: tracking, wave scaling, and
-//! the full hybrid predictor (when artifacts are available).
+//! Benchmarks for the prediction hot path: tracking, wave scaling, the
+//! engine's cached/fan-out paths, and the full hybrid predictor (when
+//! artifacts are available).
 
-use habitat::device::Device;
+use habitat::device::{Device, ALL_DEVICES};
+use habitat::engine::PredictionEngine;
 use habitat::predict::{HybridPredictor, MetricsPolicy};
 use habitat::tracker::OperationTracker;
 use habitat::util::bench::bench;
+use habitat::Precision;
 
 fn main() {
     println!("== predictor benches ==");
@@ -30,6 +33,55 @@ fn main() {
     bench("predict/wave_only_eq1/resnet50", || {
         eq1.predict(&trace, Device::V100).run_time_ms()
     });
+
+    // --- engine: cold (tracking pipeline every time) vs cached ----------
+    let engine = PredictionEngine::wave_only();
+    bench("engine/predict_cold/resnet50", || {
+        engine.clear_trace_cache();
+        engine
+            .predict("resnet50", 32, Device::Rtx2070, Device::V100, Precision::Fp32)
+            .unwrap()
+            .pred
+            .run_time_ms()
+    });
+    bench("engine/predict_cached/resnet50", || {
+        engine
+            .predict("resnet50", 32, Device::Rtx2070, Device::V100, Precision::Fp32)
+            .unwrap()
+            .pred
+            .run_time_ms()
+    });
+
+    // --- engine: single destination vs all-destination fan-out ----------
+    let cached = engine.trace("resnet50", 32, Device::Rtx2070).unwrap();
+    bench("engine/single_dest/resnet50", || {
+        engine.predict_trace(&cached, Device::V100, Precision::Fp32).run_time_ms()
+    });
+    bench("engine/fan_out_all_dests/resnet50", || {
+        engine
+            .fan_out(&cached, &ALL_DEVICES, Precision::Fp32)
+            .iter()
+            .map(|p| p.run_time_ms())
+            .sum::<f64>()
+    });
+    bench("engine/sequential_all_dests/resnet50", || {
+        ALL_DEVICES
+            .iter()
+            .map(|d| engine.predict_trace(&cached, *d, Precision::Fp32).run_time_ms())
+            .sum::<f64>()
+    });
+    bench("engine/rank_all_dests/resnet50", || {
+        engine
+            .rank("resnet50", 32, Device::Rtx2070, &ALL_DEVICES, Precision::Fp32)
+            .unwrap()
+            .entries
+            .len()
+    });
+    let stats = engine.stats();
+    println!(
+        "(engine counters: trace {} hits / {} misses; wave table {} hits / {} misses, process-wide)",
+        stats.trace_hits, stats.trace_misses, stats.wave_hits, stats.wave_misses
+    );
 
     match habitat::runtime::predictor_from_artifacts("artifacts") {
         Ok(hybrid) => {

@@ -8,7 +8,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
-use crate::coordinator::{PredictionRequest, PredictionResponse};
+use crate::coordinator::{PredictionRequest, PredictionResponse, RankRequest, RankResponse};
 use crate::Result;
 
 /// A connected prediction-service client.
@@ -42,10 +42,26 @@ impl Client {
 
     /// Receive the next in-order response.
     pub fn recv(&mut self) -> Result<PredictionResponse> {
+        PredictionResponse::from_json(&self.recv_line()?)
+    }
+
+    /// Send one rank request and wait for the ranked response.
+    ///
+    /// Responses come back strictly in request order, so this must not
+    /// be called while pipelined [`Client::send`] requests still have
+    /// unread responses — drain them with [`Client::recv`] first, or
+    /// the streams desynchronize.
+    pub fn rank(&mut self, request: &RankRequest) -> Result<RankResponse> {
+        self.writer.write_all(request.to_json().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        RankResponse::from_json(&self.recv_line()?)
+    }
+
+    fn recv_line(&mut self) -> Result<String> {
         let mut line = String::new();
         let n = self.reader.read_line(&mut line)?;
         anyhow::ensure!(n > 0, "server closed the connection");
-        PredictionResponse::from_json(line.trim())
+        Ok(line.trim().to_string())
     }
 }
 
@@ -100,6 +116,26 @@ mod tests {
         assert_eq!(client.recv().unwrap().dest, "V100");
         assert_eq!(client.recv().unwrap().dest, "P100");
         assert_eq!(client.recv().unwrap().dest, "P4000");
+    }
+
+    #[test]
+    fn rank_roundtrip_over_tcp() {
+        let addr = spawn_server();
+        let mut client = Client::connect(&addr).unwrap();
+        let resp = client
+            .rank(&crate::coordinator::RankRequest {
+                model: "mlp".into(),
+                batch: 16,
+                origin: "t4".into(),
+                precision: None,
+                dests: None,
+            })
+            .unwrap();
+        assert_eq!(resp.ranking.len(), crate::device::ALL_DEVICES.len());
+        assert!(resp.ranking.iter().all(|r| r.iter_ms > 0.0));
+        // A predict request on the same connection still works afterwards.
+        let single = client.predict(&req("mlp", "v100")).unwrap();
+        assert!(single.iter_ms > 0.0);
     }
 
     #[test]

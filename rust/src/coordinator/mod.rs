@@ -2,24 +2,33 @@
 //!
 //! Habitat is a library in the paper; in this reproduction it is also a
 //! deployable *service*: a TCP front end (newline-delimited JSON, one
-//! thread per connection) that routes prediction requests through a
-//! shared [`PredictionService`]. The service composes:
+//! thread per connection) that routes every request through the shared
+//! [`crate::engine::PredictionEngine`]. The engine supplies:
 //!
-//! * a **trace cache** — tracking a model on the simulator is the
+//! * the **trace cache** — tracking a model on the simulator is the
 //!   expensive, reusable step, so traces are memoized per
-//!   (model, batch, origin);
+//!   (model, batch, origin, precision) in a content-keyed LRU;
+//! * the **multi-destination fan-out** behind the `rank` request — one
+//!   cached trace predicted onto every destination GPU on a worker
+//!   pool, returned sorted by cost-normalized throughput (the paper's
+//!   Fig. 1 decision as a single RPC);
 //! * the **hybrid predictor**, whose kernel-varying ops funnel into the
 //!   MLP service thread ([`crate::runtime::MlpService`]), where requests
 //!   from all concurrent connections are **dynamically batched** into a
 //!   few large PJRT executions;
 //! * the **cost model**, so responses carry decision-ready metrics
 //!   (throughput, cost-normalized throughput), not just milliseconds.
+//!
+//! The wire protocol is documented in `docs/SERVICE.md`.
 
 pub mod client;
 pub mod service;
 
 pub use client::Client;
-pub use service::{PredictionRequest, PredictionResponse, PredictionService};
+pub use service::{
+    PredictionRequest, PredictionResponse, PredictionService, RankRequest, RankResponse,
+    RankedDest, Request,
+};
 
 use crate::Result;
 

@@ -1,23 +1,34 @@
 //! The prediction service and its TCP front end.
 //!
 //! Wire protocol: newline-delimited JSON, one request per line, one
-//! response per line, pipelining allowed. The server is thread-per-
-//! connection over `std::net` (the image has no async runtime); the
-//! heavy lifting — PJRT MLP execution — is centralized on the batching
-//! service thread regardless of how many connections are open, so
-//! concurrency still coalesces into few large executions.
+//! response per line, pipelining allowed (see `docs/SERVICE.md` for the
+//! full schema and worked `nc` examples). Two request shapes share the
+//! stream:
+//!
+//! * **predict** — `{"model", "batch", "origin", "dest", "precision"?}`
+//!   → one destination's decision metrics;
+//! * **rank** — `{"rank": true, "model", "batch", "origin",
+//!   "precision"?, "dests"?}` → *every* destination GPU, ordered by
+//!   cost-normalized throughput, from a single pass over one cached
+//!   trace (the paper's Fig. 1 decision as one RPC).
+//!
+//! The server is thread-per-connection over `std::net` (the image has no
+//! async runtime); all prediction work funnels into the shared
+//! [`crate::engine::PredictionEngine`], so concurrent connections reuse
+//! each other's traces, and PJRT MLP execution stays centralized on the
+//! batching service thread regardless of how many connections are open.
 
-use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
-use crate::device::Device;
+use crate::device::{Device, ALL_DEVICES};
+use crate::engine::PredictionEngine;
 use crate::lowering::Precision;
-use crate::predict::{amp, HybridPredictor};
-use crate::tracker::{OperationTracker, Trace};
+use crate::predict::HybridPredictor;
+use crate::tracker::Trace;
 use crate::util::json::{self, Json};
-use crate::{cost, models, Result};
+use crate::Result;
 
 /// One prediction request (wire format and internal API).
 #[derive(Debug, Clone)]
@@ -37,7 +48,10 @@ pub struct PredictionRequest {
 impl PredictionRequest {
     /// Parse from a JSON object line.
     pub fn from_json(line: &str) -> Result<Self> {
-        let v = json::parse(line)?;
+        Self::from_value(&json::parse(line)?)
+    }
+
+    fn from_value(v: &Json) -> Result<Self> {
         Ok(PredictionRequest {
             model: v.req_str("model")?.to_string(),
             batch: v.req_usize("batch")?,
@@ -58,6 +72,91 @@ impl PredictionRequest {
             pairs.push(("precision", Json::Str(p.clone())));
         }
         Json::obj(pairs).dump()
+    }
+}
+
+/// A rank request: predict one origin trace onto many destinations and
+/// order them by cost-normalized throughput.
+#[derive(Debug, Clone)]
+pub struct RankRequest {
+    pub model: String,
+    pub batch: usize,
+    pub origin: String,
+    /// `"fp32"` (default) or `"amp"`.
+    pub precision: Option<String>,
+    /// Candidate destinations; `None` means every built-in device.
+    pub dests: Option<Vec<String>>,
+}
+
+impl RankRequest {
+    pub fn from_json(line: &str) -> Result<Self> {
+        Self::from_value(&json::parse(line)?)
+    }
+
+    fn from_value(v: &Json) -> Result<Self> {
+        let dests = match v.get("dests") {
+            None | Some(Json::Null) => None,
+            Some(arr) => {
+                let items = arr
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("dests must be an array of device names"))?;
+                let mut names = Vec::with_capacity(items.len());
+                for it in items {
+                    names.push(
+                        it.as_str()
+                            .ok_or_else(|| anyhow::anyhow!("dests entries must be strings"))?
+                            .to_string(),
+                    );
+                }
+                Some(names)
+            }
+        };
+        Ok(RankRequest {
+            model: v.req_str("model")?.to_string(),
+            batch: v.req_usize("batch")?,
+            origin: v.req_str("origin")?.to_string(),
+            precision: v.get("precision").and_then(Json::as_str).map(str::to_string),
+            dests,
+        })
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut pairs = vec![
+            ("rank", Json::Bool(true)),
+            ("model", Json::Str(self.model.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("origin", Json::Str(self.origin.clone())),
+        ];
+        if let Some(p) = &self.precision {
+            pairs.push(("precision", Json::Str(p.clone())));
+        }
+        if let Some(d) = &self.dests {
+            pairs.push((
+                "dests",
+                Json::Arr(d.iter().map(|s| Json::Str(s.clone())).collect()),
+            ));
+        }
+        Json::obj(pairs).dump()
+    }
+}
+
+/// Either request shape, as dispatched off the wire: a line with
+/// `"rank": true` is a [`RankRequest`], anything else a
+/// [`PredictionRequest`].
+#[derive(Debug, Clone)]
+pub enum Request {
+    Predict(PredictionRequest),
+    Rank(RankRequest),
+}
+
+impl Request {
+    pub fn from_json(line: &str) -> Result<Request> {
+        let v = json::parse(line)?;
+        if matches!(v.get("rank"), Some(Json::Bool(true))) {
+            Ok(Request::Rank(RankRequest::from_value(&v)?))
+        } else {
+            Ok(Request::Predict(PredictionRequest::from_value(&v)?))
+        }
     }
 }
 
@@ -132,81 +231,228 @@ impl PredictionResponse {
     }
 }
 
+/// One destination's row in a [`RankResponse`], best decision first.
+#[derive(Debug, Clone)]
+pub struct RankedDest {
+    pub dest: String,
+    pub iter_ms: f64,
+    pub throughput: f64,
+    pub cost_normalized_throughput: Option<f64>,
+    pub mlp_time_fraction: f64,
+    pub mlp_fallbacks: usize,
+}
+
+impl RankedDest {
+    fn to_value(&self) -> Json {
+        Json::obj(vec![
+            ("dest", Json::Str(self.dest.clone())),
+            ("iter_ms", Json::Num(self.iter_ms)),
+            ("throughput", Json::Num(self.throughput)),
+            (
+                "cost_normalized_throughput",
+                self.cost_normalized_throughput.map_or(Json::Null, Json::Num),
+            ),
+            ("mlp_time_fraction", Json::Num(self.mlp_time_fraction)),
+            ("mlp_fallbacks", Json::Num(self.mlp_fallbacks as f64)),
+        ])
+    }
+
+    fn from_value(v: &Json) -> Result<Self> {
+        Ok(RankedDest {
+            dest: v.req_str("dest")?.to_string(),
+            iter_ms: v
+                .get("iter_ms")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing iter_ms"))?,
+            throughput: v
+                .get("throughput")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing throughput"))?,
+            cost_normalized_throughput: v.get("cost_normalized_throughput").and_then(Json::as_f64),
+            mlp_time_fraction: v.get("mlp_time_fraction").and_then(Json::as_f64).unwrap_or(0.0),
+            mlp_fallbacks: v.get("mlp_fallbacks").and_then(Json::as_usize).unwrap_or(0),
+        })
+    }
+}
+
+/// The answer to a [`RankRequest`].
+#[derive(Debug, Clone)]
+pub struct RankResponse {
+    pub model: String,
+    pub batch: usize,
+    pub origin: String,
+    /// Measured iteration time on the origin, ms.
+    pub origin_iter_ms: f64,
+    /// Every requested destination, sorted: rentable devices by
+    /// descending cost-normalized throughput, then unpriced devices by
+    /// descending raw throughput.
+    pub ranking: Vec<RankedDest>,
+}
+
+impl RankResponse {
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("origin", Json::Str(self.origin.clone())),
+            ("origin_iter_ms", Json::Num(self.origin_iter_ms)),
+            (
+                "ranking",
+                Json::Arr(self.ranking.iter().map(RankedDest::to_value).collect()),
+            ),
+        ])
+        .dump()
+    }
+
+    pub fn from_json(line: &str) -> Result<Self> {
+        let v = json::parse(line)?;
+        if let Some(err) = v.get("error").and_then(Json::as_str) {
+            anyhow::bail!("server error: {err}");
+        }
+        let ranking = v
+            .get("ranking")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing ranking array"))?
+            .iter()
+            .map(RankedDest::from_value)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RankResponse {
+            model: v.req_str("model")?.to_string(),
+            batch: v.req_usize("batch")?,
+            origin: v.req_str("origin")?.to_string(),
+            origin_iter_ms: v
+                .get("origin_iter_ms")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing origin_iter_ms"))?,
+            ranking,
+        })
+    }
+}
+
 fn error_json(msg: &str) -> String {
     Json::obj(vec![("error", Json::Str(msg.to_string()))]).dump()
 }
 
-type TraceKey = (String, usize, Device);
+fn parse_device(name: &str, role: &str) -> Result<Device> {
+    Device::parse(name).ok_or_else(|| anyhow::anyhow!("unknown {role} device {name:?}"))
+}
 
-/// Shared prediction engine: predictor + trace cache.
+fn parse_precision(p: Option<&str>) -> Result<Precision> {
+    match p {
+        None | Some("fp32") => Ok(Precision::Fp32),
+        Some("amp") => Ok(Precision::Amp),
+        Some(other) => anyhow::bail!("unknown precision {other:?} (want fp32|amp)"),
+    }
+}
+
+/// The TCP-facing prediction service: a thin protocol layer over the
+/// shared [`PredictionEngine`].
 pub struct PredictionService {
-    predictor: HybridPredictor,
-    traces: Mutex<HashMap<TraceKey, Arc<Trace>>>,
+    engine: PredictionEngine,
 }
 
 impl PredictionService {
     /// Build with the paper's full hybrid predictor (requires artifacts).
     pub fn new(artifacts: &str) -> Result<Self> {
-        Ok(Self::with_predictor(crate::runtime::predictor_from_artifacts(artifacts)?))
+        Ok(Self::with_engine(PredictionEngine::from_artifacts(artifacts)?))
     }
 
     /// Build around any predictor (wave-only for tests / no artifacts).
     pub fn with_predictor(predictor: HybridPredictor) -> Self {
-        PredictionService {
-            predictor,
-            traces: Mutex::new(HashMap::new()),
-        }
+        Self::with_engine(PredictionEngine::new(predictor))
+    }
+
+    /// Build around an existing engine (shared caches, custom capacity).
+    pub fn with_engine(engine: PredictionEngine) -> Self {
+        PredictionService { engine }
+    }
+
+    pub fn engine(&self) -> &PredictionEngine {
+        &self.engine
     }
 
     pub fn predictor(&self) -> &HybridPredictor {
-        &self.predictor
+        self.engine.predictor()
     }
 
-    /// Get or build the origin trace for a request (memoized). The tracker
-    /// always measures FP32 — the paper profiles FP32 and *predicts* AMP.
+    /// Get or build the origin trace for a request (memoized in the
+    /// engine). The tracker always measures FP32 — the paper profiles
+    /// FP32 and *predicts* AMP.
     pub fn trace_for(&self, model: &str, batch: usize, origin: Device) -> Result<Arc<Trace>> {
-        let key = (model.to_string(), batch, origin);
-        if let Some(t) = self.traces.lock().unwrap().get(&key) {
-            return Ok(t.clone());
-        }
-        let graph = models::by_name(model, batch)
-            .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
-        let trace = Arc::new(OperationTracker::new(origin).track(&graph));
-        self.traces.lock().unwrap().insert(key, trace.clone());
-        Ok(trace)
+        self.engine.trace(model, batch, origin)
     }
 
-    /// Handle one request synchronously.
+    /// Handle one prediction request synchronously.
     pub fn handle(&self, req: &PredictionRequest) -> Result<PredictionResponse> {
-        let origin = Device::parse(&req.origin)
-            .ok_or_else(|| anyhow::anyhow!("unknown origin device {:?}", req.origin))?;
-        let dest = Device::parse(&req.dest)
-            .ok_or_else(|| anyhow::anyhow!("unknown destination device {:?}", req.dest))?;
-        let precision = match req.precision.as_deref() {
-            None | Some("fp32") => Precision::Fp32,
-            Some("amp") => Precision::Amp,
-            Some(p) => anyhow::bail!("unknown precision {p:?} (want fp32|amp)"),
-        };
+        let origin = parse_device(&req.origin, "origin")?;
+        let dest = parse_device(&req.dest, "destination")?;
+        let precision = parse_precision(req.precision.as_deref())?;
         anyhow::ensure!(req.batch > 0, "batch must be positive");
 
-        let trace = self.trace_for(&req.model, req.batch, origin)?;
-        let pred = match precision {
-            Precision::Fp32 => self.predictor.predict(&trace, dest),
-            Precision::Amp => amp::predict_amp(&self.predictor, &trace, dest),
-        };
-        let tput = pred.throughput();
+        let out = self.engine.predict(&req.model, req.batch, origin, dest, precision)?;
+        let tput = out.pred.throughput();
         Ok(PredictionResponse {
             model: req.model.clone(),
             batch: req.batch,
             origin: origin.id().to_string(),
             dest: dest.id().to_string(),
-            origin_iter_ms: trace.run_time_ms(),
-            iter_ms: pred.run_time_ms(),
+            origin_iter_ms: out.trace.run_time_ms(),
+            iter_ms: out.pred.run_time_ms(),
             throughput: tput,
-            cost_normalized_throughput: cost::cost_normalized_throughput(dest, tput),
-            mlp_time_fraction: pred.mlp_time_fraction(),
-            mlp_fallbacks: pred.mlp_fallbacks,
+            cost_normalized_throughput: crate::cost::cost_normalized_throughput(dest, tput),
+            mlp_time_fraction: out.pred.mlp_time_fraction(),
+            mlp_fallbacks: out.pred.mlp_fallbacks,
         })
+    }
+
+    /// Handle one rank request: a single tracking pass, fanned out to
+    /// every destination on the engine's worker pool.
+    pub fn handle_rank(&self, req: &RankRequest) -> Result<RankResponse> {
+        let origin = parse_device(&req.origin, "origin")?;
+        let precision = parse_precision(req.precision.as_deref())?;
+        anyhow::ensure!(req.batch > 0, "batch must be positive");
+        let dests: Vec<Device> = match &req.dests {
+            None => ALL_DEVICES.to_vec(),
+            Some(names) => names
+                .iter()
+                .map(|n| parse_device(n, "destination"))
+                .collect::<Result<Vec<_>>>()?,
+        };
+
+        let ranking = self.engine.rank(&req.model, req.batch, origin, &dests, precision)?;
+        Ok(RankResponse {
+            model: req.model.clone(),
+            batch: req.batch,
+            origin: origin.id().to_string(),
+            origin_iter_ms: ranking.trace.run_time_ms(),
+            ranking: ranking
+                .entries
+                .iter()
+                .map(|e| RankedDest {
+                    dest: e.dest.id().to_string(),
+                    iter_ms: e.pred.run_time_ms(),
+                    throughput: e.pred.throughput(),
+                    cost_normalized_throughput: e.cost_normalized_throughput,
+                    mlp_time_fraction: e.pred.mlp_time_fraction(),
+                    mlp_fallbacks: e.pred.mlp_fallbacks,
+                })
+                .collect(),
+        })
+    }
+
+    /// Parse one wire line, dispatch it, and serialize the reply.
+    pub fn handle_line(&self, line: &str) -> String {
+        match Request::from_json(line) {
+            Ok(Request::Predict(req)) => match self.handle(&req) {
+                Ok(resp) => resp.to_json(),
+                Err(e) => error_json(&e.to_string()),
+            },
+            Ok(Request::Rank(req)) => match self.handle_rank(&req) {
+                Ok(resp) => resp.to_json(),
+                Err(e) => error_json(&e.to_string()),
+            },
+            Err(e) => error_json(&format!("bad request: {e}")),
+        }
     }
 }
 
@@ -238,13 +484,7 @@ pub fn handle_connection(stream: TcpStream, service: &PredictionService) -> Resu
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match PredictionRequest::from_json(&line) {
-            Ok(req) => match service.handle(&req) {
-                Ok(resp) => resp.to_json(),
-                Err(e) => error_json(&e.to_string()),
-            },
-            Err(e) => error_json(&format!("bad request: {e}")),
-        };
+        let reply = service.handle_line(&line);
         write.write_all(reply.as_bytes())?;
         write.write_all(b"\n")?;
     }
@@ -266,6 +506,16 @@ mod tests {
             origin: origin.into(),
             dest: dest.into(),
             precision: None,
+        }
+    }
+
+    fn rank_req(model: &str, batch: usize, origin: &str) -> RankRequest {
+        RankRequest {
+            model: model.into(),
+            batch,
+            origin: origin.into(),
+            precision: None,
+            dests: None,
         }
     }
 
@@ -304,6 +554,123 @@ mod tests {
             parsed.cost_normalized_throughput.is_some(),
             resp.cost_normalized_throughput.is_some()
         );
+    }
+
+    #[test]
+    fn rank_request_json_roundtrip() {
+        let mut r = rank_req("mlp", 16, "t4");
+        r.dests = Some(vec!["v100".into(), "p100".into()]);
+        r.precision = Some("amp".into());
+        let line = r.to_json();
+        let parsed = match Request::from_json(&line).unwrap() {
+            Request::Rank(rr) => rr,
+            other => panic!("expected rank request, got {other:?}"),
+        };
+        assert_eq!(parsed.model, "mlp");
+        assert_eq!(parsed.batch, 16);
+        assert_eq!(parsed.precision.as_deref(), Some("amp"));
+        assert_eq!(parsed.dests.as_deref().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn predict_line_still_dispatches_as_predict() {
+        let line = req("mlp", 8, "t4", "v100").to_json();
+        assert!(matches!(Request::from_json(&line).unwrap(), Request::Predict(_)));
+    }
+
+    #[test]
+    fn rank_response_json_roundtrip() {
+        let s = wave_service();
+        let resp = s.handle_rank(&rank_req("mlp", 32, "t4")).unwrap();
+        let parsed = RankResponse::from_json(&resp.to_json()).unwrap();
+        assert_eq!(parsed.ranking.len(), resp.ranking.len());
+        for (a, b) in parsed.ranking.iter().zip(&resp.ranking) {
+            assert_eq!(a.dest, b.dest);
+            assert!((a.iter_ms - b.iter_ms).abs() < 1e-9);
+            assert_eq!(
+                a.cost_normalized_throughput.is_some(),
+                b.cost_normalized_throughput.is_some()
+            );
+        }
+    }
+
+    #[test]
+    fn rank_matches_individual_requests_with_one_tracking_pass() {
+        // The ISSUE's acceptance criterion: a rank over all built-in
+        // devices equals N individual requests, with exactly one run of
+        // the tracking pipeline.
+        let s = wave_service();
+        let ranking = s.handle_rank(&rank_req("mlp", 16, "t4")).unwrap();
+        assert_eq!(ranking.ranking.len(), ALL_DEVICES.len());
+        let stats = s.engine().stats();
+        assert_eq!(stats.trace_misses, 1, "rank must track exactly once");
+        assert_eq!(stats.trace_hits, 0);
+
+        for entry in &ranking.ranking {
+            let resp = s.handle(&req("mlp", 16, "t4", &entry.dest)).unwrap();
+            assert!(
+                (resp.iter_ms - entry.iter_ms).abs() < 1e-9,
+                "{}: rank {} vs individual {}",
+                entry.dest,
+                entry.iter_ms,
+                resp.iter_ms
+            );
+        }
+        let stats = s.engine().stats();
+        assert_eq!(stats.trace_misses, 1, "individual requests must reuse the trace");
+        assert_eq!(stats.trace_hits as usize, ALL_DEVICES.len());
+    }
+
+    #[test]
+    fn rank_is_sorted_by_cost_normalized_throughput() {
+        let s = wave_service();
+        let resp = s.handle_rank(&rank_req("mlp", 32, "p4000")).unwrap();
+        let priced: Vec<f64> = resp
+            .ranking
+            .iter()
+            .filter_map(|r| r.cost_normalized_throughput)
+            .collect();
+        assert!(!priced.is_empty());
+        for w in priced.windows(2) {
+            assert!(w[0] >= w[1], "priced devices must be in descending order");
+        }
+        // Priced devices all come before unpriced ones.
+        let first_unpriced = resp
+            .ranking
+            .iter()
+            .position(|r| r.cost_normalized_throughput.is_none())
+            .unwrap_or(resp.ranking.len());
+        assert!(resp.ranking[first_unpriced..]
+            .iter()
+            .all(|r| r.cost_normalized_throughput.is_none()));
+    }
+
+    #[test]
+    fn rank_with_explicit_dests_and_errors() {
+        let s = wave_service();
+        let mut r = rank_req("mlp", 16, "t4");
+        r.dests = Some(vec!["v100".into(), "p100".into()]);
+        let resp = s.handle_rank(&r).unwrap();
+        assert_eq!(resp.ranking.len(), 2);
+
+        let mut bad = rank_req("mlp", 16, "t4");
+        bad.dests = Some(vec!["a100".into()]);
+        assert!(s.handle_rank(&bad).is_err());
+        assert!(s.handle_rank(&rank_req("nope", 16, "t4")).is_err());
+        assert!(s.handle_rank(&rank_req("mlp", 0, "t4")).is_err());
+    }
+
+    #[test]
+    fn handle_line_dispatches_and_reports_errors() {
+        let s = wave_service();
+        let ok = s.handle_line("{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}");
+        assert!(PredictionResponse::from_json(&ok).is_ok());
+        let rank = s.handle_line("{\"rank\":true,\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\"}");
+        assert!(RankResponse::from_json(&rank).is_ok());
+        let bad = s.handle_line("not json");
+        assert!(bad.contains("bad request"));
+        let unknown = s.handle_line("{\"model\":\"mlp\",\"batch\":8,\"origin\":\"a100\",\"dest\":\"v100\"}");
+        assert!(unknown.contains("error"));
     }
 
     #[test]

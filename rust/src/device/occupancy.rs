@@ -18,8 +18,9 @@
 use crate::device::GpuSpec;
 
 /// Kernel launch configuration — what CUPTI would report per kernel and
-/// what the occupancy calculation consumes.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// what the occupancy calculation consumes. `Eq + Hash` so it can key
+/// the engine's memoized wave-size table ([`crate::engine::memo`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct LaunchConfig {
     /// Total thread blocks in the grid (`B` in Eq. 1).
     pub grid_blocks: u64,

@@ -1,0 +1,155 @@
+//! Memoized occupancy / wave-size table, shared by the simulator and
+//! wave scaling.
+//!
+//! Both the ground-truth [`crate::sim::Simulator`] and the predictor's
+//! [`crate::predict::wave`] need `W_i`, the wave size of a kernel launch
+//! on a device. The underlying calculation
+//! ([`crate::device::occupancy::blocks_per_sm`]) is pure and depends only
+//! on `(device, threads_per_block, regs_per_thread, smem_per_block)` —
+//! notably *not* on the grid size — so the result space is tiny (a few
+//! hundred distinct launch shapes per device across the whole model zoo)
+//! while the call count is enormous (every kernel of every trace of every
+//! prediction). This table memoizes it process-wide behind an `RwLock`:
+//! the steady state is read-only and uncontended.
+//!
+//! Hit/miss counters are exported through
+//! [`crate::engine::PredictionEngine::stats`] so benches and tests can
+//! observe the sharing.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{OnceLock, RwLock};
+
+use crate::device::{occupancy, Device, GpuSpec, LaunchConfig};
+
+/// The occupancy-relevant projection of `(device, LaunchConfig)`:
+/// `grid_blocks` is dropped because resident blocks per SM do not depend
+/// on how many blocks the grid has in total.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct OccKey {
+    device: Device,
+    threads_per_block: u32,
+    regs_per_thread: u32,
+    smem_per_block: u32,
+}
+
+impl OccKey {
+    fn new(spec: &GpuSpec, cfg: &LaunchConfig) -> Self {
+        OccKey {
+            device: spec.device,
+            threads_per_block: cfg.threads_per_block,
+            regs_per_thread: cfg.regs_per_thread,
+            smem_per_block: cfg.smem_per_block,
+        }
+    }
+}
+
+/// Process-wide memo table for blocks-per-SM (and everything derived
+/// from it: wave size, occupancy fraction).
+#[derive(Default)]
+pub struct WaveTable {
+    table: RwLock<HashMap<OccKey, u32>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl WaveTable {
+    /// The shared table used by [`crate::sim`] and [`crate::predict::wave`].
+    pub fn global() -> &'static WaveTable {
+        static GLOBAL: OnceLock<WaveTable> = OnceLock::new();
+        GLOBAL.get_or_init(WaveTable::default)
+    }
+
+    /// Memoized [`occupancy::blocks_per_sm`].
+    pub fn blocks_per_sm(&self, spec: &GpuSpec, cfg: &LaunchConfig) -> u32 {
+        let key = OccKey::new(spec, cfg);
+        if let Some(v) = self.table.read().unwrap().get(&key) {
+            self.hits.fetch_add(1, Relaxed);
+            return *v;
+        }
+        self.misses.fetch_add(1, Relaxed);
+        let v = occupancy::blocks_per_sm(spec, cfg);
+        self.table.write().unwrap().insert(key, v);
+        v
+    }
+
+    /// Memoized [`occupancy::wave_size`]: resident blocks across the chip.
+    pub fn wave_size(&self, spec: &GpuSpec, cfg: &LaunchConfig) -> u64 {
+        self.blocks_per_sm(spec, cfg) as u64 * spec.sms as u64
+    }
+
+    /// Memoized [`occupancy::occupancy_fraction`].
+    pub fn occupancy_fraction(&self, spec: &GpuSpec, cfg: &LaunchConfig) -> f64 {
+        let resident = self.blocks_per_sm(spec, cfg) as f64 * cfg.threads_per_block as f64;
+        (resident / spec.max_threads_per_sm as f64).min(1.0)
+    }
+
+    /// (hits, misses) since process start.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits.load(Relaxed), self.misses.load(Relaxed))
+    }
+
+    /// Distinct launch shapes memoized so far.
+    pub fn len(&self) -> usize {
+        self.table.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::ALL_DEVICES;
+
+    fn launch(blocks: u64) -> LaunchConfig {
+        LaunchConfig::new(blocks, 256, 32, 0)
+    }
+
+    #[test]
+    fn matches_direct_calculation() {
+        let t = WaveTable::default();
+        for d in ALL_DEVICES {
+            let spec = d.spec();
+            for cfg in [
+                LaunchConfig::new(1024, 256, 32, 0),
+                LaunchConfig::new(64, 1024, 128, 48 * 1024),
+                LaunchConfig::new(1, 32, 16, 0),
+            ] {
+                assert_eq!(t.blocks_per_sm(spec, &cfg), occupancy::blocks_per_sm(spec, &cfg));
+                assert_eq!(t.wave_size(spec, &cfg), occupancy::wave_size(spec, &cfg));
+                assert!(
+                    (t.occupancy_fraction(spec, &cfg) - occupancy::occupancy_fraction(spec, &cfg))
+                        .abs()
+                        < 1e-12
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grid_size_does_not_fragment_the_table() {
+        let t = WaveTable::default();
+        let spec = Device::V100.spec();
+        t.wave_size(spec, &launch(1));
+        t.wave_size(spec, &launch(1_000_000));
+        assert_eq!(t.len(), 1, "grid_blocks must not be part of the key");
+        let (hits, misses) = t.counters();
+        assert_eq!((hits, misses), (1, 1));
+    }
+
+    #[test]
+    fn second_lookup_hits() {
+        let t = WaveTable::default();
+        let spec = Device::T4.spec();
+        let cfg = LaunchConfig::new(77, 128, 64, 1024);
+        let a = t.wave_size(spec, &cfg);
+        let b = t.wave_size(spec, &cfg);
+        assert_eq!(a, b);
+        let (hits, misses) = t.counters();
+        assert_eq!(misses, 1);
+        assert!(hits >= 1);
+    }
+}

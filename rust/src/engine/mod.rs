@@ -1,0 +1,536 @@
+//! The unified prediction engine — the one prediction path in the
+//! library.
+//!
+//! Everything that turns `(model, batch, origin)` into destination
+//! predictions flows through [`PredictionEngine`]:
+//!
+//! * a **content-keyed LRU trace cache** over
+//!   `(model, batch, origin, precision)` — tracking a model on the
+//!   simulator is the expensive, reusable step (the analogue of the
+//!   paper's profiling run), so repeated requests skip it entirely.
+//!   Hit/miss counters are exported via [`PredictionEngine::stats`];
+//! * a **memoized occupancy/wave-size table** ([`memo::WaveTable`])
+//!   keyed by `(device, LaunchConfig)`, shared by the ground-truth
+//!   simulator and the predictor's wave scaling;
+//! * a **multi-destination fan-out** ([`PredictionEngine::fan_out`])
+//!   that predicts one cached trace onto every destination GPU,
+//!   resolving the per-trace metrics set once and parallelizing across
+//!   destinations with a `std::thread` worker pool;
+//! * a **rank** API ([`PredictionEngine::rank`]) that answers the
+//!   paper's Fig. 1 question as a single call: every destination GPU
+//!   ordered by cost-normalized throughput (rentable devices first,
+//!   descending; unpriced devices after, by raw throughput).
+//!
+//! The TCP front end ([`crate::coordinator`]), the CLI, and the
+//! experiment harness are all thin layers over this engine.
+
+pub mod cache;
+pub mod memo;
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+
+use crate::cost;
+use crate::device::Device;
+use crate::lowering::Precision;
+use crate::models;
+use crate::predict::{amp, HybridPredictor, PredictedTrace};
+use crate::tracker::{OperationTracker, Trace};
+use crate::Result;
+
+use cache::LruCache;
+
+/// Trace-cache key: model name, batch size, origin device, and the
+/// precision the iteration was *tracked* at.
+pub type TraceKey = (String, usize, Device, Precision);
+
+/// Default number of traces kept hot. A trace is a few hundred KB, so
+/// this bounds the cache at tens of MB.
+pub const DEFAULT_TRACE_CAPACITY: usize = 128;
+
+/// One engine prediction: the (shared) origin trace it was made from and
+/// the predicted destination iteration.
+pub struct EnginePrediction {
+    pub trace: Arc<Trace>,
+    pub pred: PredictedTrace,
+}
+
+/// One entry of a [`Ranking`].
+pub struct RankEntry {
+    pub dest: Device,
+    pub pred: PredictedTrace,
+    /// Samples/s per rental $/hr; `None` for devices not offered for rent.
+    pub cost_normalized_throughput: Option<f64>,
+}
+
+/// The result of [`PredictionEngine::rank`]: every destination, best
+/// decision first.
+pub struct Ranking {
+    pub trace: Arc<Trace>,
+    pub entries: Vec<RankEntry>,
+}
+
+/// The ordering used by [`PredictionEngine::rank`] (and the CLI table):
+/// rentable devices first by descending cost-normalized throughput, then
+/// unpriced devices by descending raw throughput. Each side is
+/// `(cost_normalized_throughput, throughput)`.
+pub fn rank_order(a: (Option<f64>, f64), b: (Option<f64>, f64)) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    match (a.0, b.0) {
+        (Some(x), Some(y)) => y.total_cmp(&x),
+        (Some(_), None) => Ordering::Less,
+        (None, Some(_)) => Ordering::Greater,
+        (None, None) => b.1.total_cmp(&a.1),
+    }
+}
+
+/// Counter snapshot for benches, tests, and operational visibility.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineStats {
+    /// Trace-cache hits (requests that skipped the tracking pipeline).
+    pub trace_hits: u64,
+    /// Trace-cache misses (tracking-pipeline executions).
+    pub trace_misses: u64,
+    /// Traces currently resident.
+    pub trace_entries: usize,
+    /// Wave-table hits/misses. **Process-wide**, not per engine: the
+    /// wave table is shared with the simulator and every other engine
+    /// in the process, so these count all of that activity.
+    pub wave_hits: u64,
+    pub wave_misses: u64,
+}
+
+/// The shared prediction engine. `Send + Sync`: one engine serves any
+/// number of connection threads.
+pub struct PredictionEngine {
+    predictor: HybridPredictor,
+    traces: Mutex<LruCache<TraceKey, Arc<Trace>>>,
+    /// Per-key build gates: concurrent misses on the *same* key wait for
+    /// the first builder instead of re-running the tracking pipeline
+    /// (distinct keys still track in parallel).
+    building: Mutex<std::collections::HashMap<TraceKey, Arc<Mutex<()>>>>,
+    trace_hits: AtomicU64,
+    trace_misses: AtomicU64,
+    workers: usize,
+}
+
+impl PredictionEngine {
+    /// Build around any predictor with the default cache capacity.
+    pub fn new(predictor: HybridPredictor) -> Self {
+        Self::with_capacity(predictor, DEFAULT_TRACE_CAPACITY)
+    }
+
+    /// Build with an explicit trace-cache capacity.
+    pub fn with_capacity(predictor: HybridPredictor, capacity: usize) -> Self {
+        let workers = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4)
+            .clamp(1, 8);
+        PredictionEngine {
+            predictor,
+            traces: Mutex::new(LruCache::new(capacity)),
+            building: Mutex::new(std::collections::HashMap::new()),
+            trace_hits: AtomicU64::new(0),
+            trace_misses: AtomicU64::new(0),
+            workers,
+        }
+    }
+
+    /// Wave-scaling-only engine (no MLP artifacts required).
+    pub fn wave_only() -> Self {
+        Self::new(HybridPredictor::wave_only())
+    }
+
+    /// The paper's full hybrid configuration from an artifacts directory.
+    pub fn from_artifacts(dir: &str) -> Result<Self> {
+        Ok(Self::new(crate::runtime::predictor_from_artifacts(dir)?))
+    }
+
+    /// Override the fan-out worker-pool width (defaults to the machine's
+    /// parallelism, capped at 8).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn predictor(&self) -> &HybridPredictor {
+        &self.predictor
+    }
+
+    /// Get or build the FP32 origin trace for a zoo model (memoized).
+    /// The tracker profiles FP32 — the paper measures FP32 and *predicts*
+    /// AMP (§6.1.2).
+    pub fn trace(&self, model: &str, batch: usize, origin: Device) -> Result<Arc<Trace>> {
+        self.trace_with_precision(model, batch, origin, Precision::Fp32)
+    }
+
+    /// Get or build a trace tracked at an explicit precision (memoized).
+    pub fn trace_with_precision(
+        &self,
+        model: &str,
+        batch: usize,
+        origin: Device,
+        precision: Precision,
+    ) -> Result<Arc<Trace>> {
+        let key = (model.to_string(), batch, origin, precision);
+        if let Some(t) = self.traces.lock().unwrap().get(&key) {
+            self.trace_hits.fetch_add(1, Relaxed);
+            return Ok(t);
+        }
+        // Miss: serialize builders of the *same* key so a thundering herd
+        // of identical cold requests tracks exactly once.
+        let gate = self
+            .building
+            .lock()
+            .unwrap()
+            .entry(key.clone())
+            .or_insert_with(|| Arc::new(Mutex::new(())))
+            .clone();
+        // Recover a poisoned gate: a builder that panicked mid-track must
+        // not permanently wedge this key for the life of the service.
+        let _build_guard = gate.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        // Double-check: the first builder may have just filled the cache.
+        if let Some(t) = self.traces.lock().unwrap().get(&key) {
+            self.trace_hits.fetch_add(1, Relaxed);
+            return Ok(t);
+        }
+        let Some(graph) = models::by_name(model, batch) else {
+            self.building.lock().unwrap().remove(&key);
+            anyhow::bail!("unknown model {model:?}");
+        };
+        // Count a miss only when the tracking pipeline actually runs.
+        self.trace_misses.fetch_add(1, Relaxed);
+        let trace = Arc::new(
+            OperationTracker::new(origin)
+                .with_precision(precision)
+                .track(&graph),
+        );
+        self.traces.lock().unwrap().insert(key.clone(), trace.clone());
+        self.building.lock().unwrap().remove(&key);
+        Ok(trace)
+    }
+
+    /// Predict one `(model, batch, origin) → dest` pair, tracking (or
+    /// reusing) the origin trace. `precision` selects the prediction:
+    /// FP32 directly, or the AMP transform composed on top (§6.1.2).
+    pub fn predict(
+        &self,
+        model: &str,
+        batch: usize,
+        origin: Device,
+        dest: Device,
+        precision: Precision,
+    ) -> Result<EnginePrediction> {
+        anyhow::ensure!(batch > 0, "batch must be positive");
+        let trace = self.trace(model, batch, origin)?;
+        let pred = self.predict_trace(&trace, dest, precision);
+        Ok(EnginePrediction { trace, pred })
+    }
+
+    /// Predict an already-tracked trace onto one destination.
+    pub fn predict_trace(&self, trace: &Trace, dest: Device, precision: Precision) -> PredictedTrace {
+        let profiled = self.predictor.metrics_policy.profiled_kernels(trace);
+        self.predict_one(trace, dest, precision, profiled.as_ref())
+    }
+
+    fn predict_one(
+        &self,
+        trace: &Trace,
+        dest: Device,
+        precision: Precision,
+        profiled: Option<&std::collections::HashSet<u64>>,
+    ) -> PredictedTrace {
+        let fp32 = self.predictor.predict_with_profiled(trace, dest, profiled);
+        match precision {
+            Precision::Fp32 => fp32,
+            Precision::Amp => amp::amp_transform(&fp32, trace),
+        }
+    }
+
+    /// Predict one trace onto *all* destinations in a single pass over
+    /// the trace metadata: the per-trace profiled-kernel set is resolved
+    /// once and shared, per-kernel launch metadata hits the process-wide
+    /// wave table, and destinations are spread over a `std::thread`
+    /// worker pool. Results come back in `dests` order and are
+    /// bit-identical to sequential [`PredictionEngine::predict_trace`]
+    /// calls.
+    pub fn fan_out(
+        &self,
+        trace: &Trace,
+        dests: &[Device],
+        precision: Precision,
+    ) -> Vec<PredictedTrace> {
+        if dests.is_empty() {
+            return Vec::new();
+        }
+        let profiled = self.predictor.metrics_policy.profiled_kernels(trace);
+        let profiled_ref = profiled.as_ref();
+        if dests.len() == 1 {
+            return vec![self.predict_one(trace, dests[0], precision, profiled_ref)];
+        }
+
+        let workers = self.workers.min(dests.len());
+        let next = AtomicUsize::new(0);
+        let next_ref = &next;
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, PredictedTrace)>();
+        let mut out: Vec<Option<PredictedTrace>> = Vec::with_capacity(dests.len());
+        out.resize_with(dests.len(), || None);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                s.spawn(move || loop {
+                    let i = next_ref.fetch_add(1, Relaxed);
+                    if i >= dests.len() {
+                        break;
+                    }
+                    let pred = self.predict_one(trace, dests[i], precision, profiled_ref);
+                    if tx.send((i, pred)).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+            for (i, pred) in rx {
+                out[i] = Some(pred);
+            }
+        });
+        out.into_iter()
+            .map(|p| p.expect("every destination predicted"))
+            .collect()
+    }
+
+    /// The paper's Fig. 1 decision as one call: track (or reuse) the
+    /// origin trace once, fan out to every destination, and rank by
+    /// cost-normalized throughput. Rentable devices come first in
+    /// descending samples/s/$; devices without a rental price follow,
+    /// ordered by raw throughput. Ties keep `dests` order.
+    pub fn rank(
+        &self,
+        model: &str,
+        batch: usize,
+        origin: Device,
+        dests: &[Device],
+        precision: Precision,
+    ) -> Result<Ranking> {
+        anyhow::ensure!(batch > 0, "batch must be positive");
+        anyhow::ensure!(!dests.is_empty(), "rank needs at least one destination");
+        let trace = self.trace(model, batch, origin)?;
+        let preds = self.fan_out(&trace, dests, precision);
+        let mut entries: Vec<RankEntry> = dests
+            .iter()
+            .zip(preds)
+            .map(|(&dest, pred)| {
+                let cnt = cost::cost_normalized_throughput(dest, pred.throughput());
+                RankEntry {
+                    dest,
+                    pred,
+                    cost_normalized_throughput: cnt,
+                }
+            })
+            .collect();
+        entries.sort_by(|a, b| {
+            rank_order(
+                (a.cost_normalized_throughput, a.pred.throughput()),
+                (b.cost_normalized_throughput, b.pred.throughput()),
+            )
+        });
+        Ok(Ranking { trace, entries })
+    }
+
+    /// Counter snapshot (trace cache + shared wave table).
+    pub fn stats(&self) -> EngineStats {
+        let (wave_hits, wave_misses) = memo::WaveTable::global().counters();
+        EngineStats {
+            trace_hits: self.trace_hits.load(Relaxed),
+            trace_misses: self.trace_misses.load(Relaxed),
+            trace_entries: self.traces.lock().unwrap().len(),
+            wave_hits,
+            wave_misses,
+        }
+    }
+
+    /// Drop every cached trace (the counters are preserved). Used by the
+    /// cold-path benches.
+    pub fn clear_trace_cache(&self) {
+        self.traces.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::ALL_DEVICES;
+
+    fn engine() -> PredictionEngine {
+        PredictionEngine::wave_only()
+    }
+
+    #[test]
+    fn trace_cache_hits_and_counts() {
+        let e = engine();
+        let a = e.trace("mlp", 16, Device::T4).unwrap();
+        let b = e.trace("mlp", 16, Device::T4).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+        let s = e.stats();
+        assert_eq!(s.trace_misses, 1);
+        assert_eq!(s.trace_hits, 1);
+        assert_eq!(s.trace_entries, 1);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let e = engine();
+        e.trace("mlp", 16, Device::T4).unwrap();
+        e.trace("mlp", 32, Device::T4).unwrap();
+        e.trace("mlp", 16, Device::V100).unwrap();
+        e.trace_with_precision("mlp", 16, Device::T4, Precision::Amp)
+            .unwrap();
+        let s = e.stats();
+        assert_eq!(s.trace_misses, 4);
+        assert_eq!(s.trace_entries, 4);
+    }
+
+    #[test]
+    fn unknown_model_is_an_error_not_a_miss() {
+        let e = engine();
+        assert!(e.trace("not_a_model", 16, Device::T4).is_err());
+        assert_eq!(e.stats().trace_misses, 0);
+    }
+
+    #[test]
+    fn lru_capacity_bounds_entries() {
+        let e = PredictionEngine::with_capacity(HybridPredictor::wave_only(), 2);
+        for batch in [1usize, 2, 4] {
+            e.trace("mlp", batch, Device::T4).unwrap();
+        }
+        assert_eq!(e.stats().trace_entries, 2);
+        // The least recently used (batch 1) was evicted; re-requesting it
+        // re-tracks.
+        e.trace("mlp", 1, Device::T4).unwrap();
+        assert_eq!(e.stats().trace_misses, 4);
+    }
+
+    #[test]
+    fn concurrent_identical_requests_track_once() {
+        let e = engine();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| e.trace("mlp", 16, Device::T4).unwrap());
+            }
+        });
+        let st = e.stats();
+        assert_eq!(st.trace_misses, 1, "a thundering herd must track exactly once");
+        assert_eq!(st.trace_hits, 7);
+    }
+
+    #[test]
+    fn fan_out_matches_sequential_predictions() {
+        let e = engine();
+        let trace = e.trace("mlp", 32, Device::T4).unwrap();
+        let fanned = e.fan_out(&trace, &ALL_DEVICES, Precision::Fp32);
+        assert_eq!(fanned.len(), ALL_DEVICES.len());
+        for (dest, pred) in ALL_DEVICES.iter().zip(&fanned) {
+            assert_eq!(pred.dest, *dest, "results must come back in dests order");
+            let seq = e.predict_trace(&trace, *dest, Precision::Fp32);
+            assert_eq!(
+                pred.run_time_ms(),
+                seq.run_time_ms(),
+                "{dest}: fan-out must be bit-identical to sequential"
+            );
+        }
+    }
+
+    #[test]
+    fn fan_out_amp_matches_sequential() {
+        let e = engine();
+        let trace = e.trace("mlp", 32, Device::P4000).unwrap();
+        let dests = [Device::V100, Device::Rtx2080Ti];
+        let fanned = e.fan_out(&trace, &dests, Precision::Amp);
+        for (dest, pred) in dests.iter().zip(&fanned) {
+            let seq = e.predict_trace(&trace, *dest, Precision::Amp);
+            assert_eq!(pred.run_time_ms(), seq.run_time_ms());
+        }
+    }
+
+    #[test]
+    fn fan_out_single_worker_still_covers_all() {
+        let e = PredictionEngine::wave_only().with_workers(1);
+        let trace = e.trace("mlp", 8, Device::T4).unwrap();
+        let fanned = e.fan_out(&trace, &ALL_DEVICES, Precision::Fp32);
+        assert_eq!(fanned.len(), ALL_DEVICES.len());
+    }
+
+    #[test]
+    fn rank_tracks_once_and_sorts_by_cost_normalized_throughput() {
+        let e = engine();
+        let ranking = e
+            .rank("mlp", 32, Device::T4, &ALL_DEVICES, Precision::Fp32)
+            .unwrap();
+        assert_eq!(ranking.entries.len(), ALL_DEVICES.len());
+        assert_eq!(e.stats().trace_misses, 1, "one tracking pass for the whole ranking");
+
+        // Priced devices first, descending; unpriced after, by throughput.
+        let first_unpriced = ranking
+            .entries
+            .iter()
+            .position(|en| en.cost_normalized_throughput.is_none())
+            .unwrap_or(ranking.entries.len());
+        for en in &ranking.entries[..first_unpriced] {
+            assert!(en.cost_normalized_throughput.is_some());
+        }
+        for en in &ranking.entries[first_unpriced..] {
+            assert!(en.cost_normalized_throughput.is_none());
+        }
+        for pair in ranking.entries[..first_unpriced].windows(2) {
+            assert!(
+                pair[0].cost_normalized_throughput.unwrap()
+                    >= pair[1].cost_normalized_throughput.unwrap()
+            );
+        }
+        for pair in ranking.entries[first_unpriced..].windows(2) {
+            assert!(pair[0].pred.throughput() >= pair[1].pred.throughput());
+        }
+    }
+
+    #[test]
+    fn rank_matches_individual_predictions() {
+        let e = engine();
+        let ranking = e
+            .rank("mlp", 16, Device::P4000, &ALL_DEVICES, Precision::Fp32)
+            .unwrap();
+        for en in &ranking.entries {
+            let single = e
+                .predict("mlp", 16, Device::P4000, en.dest, Precision::Fp32)
+                .unwrap();
+            assert!(
+                (en.pred.run_time_ms() - single.pred.run_time_ms()).abs() < 1e-12,
+                "{}: ranked vs individual prediction",
+                en.dest
+            );
+        }
+        // All the individual requests above were cache hits.
+        let s = e.stats();
+        assert_eq!(s.trace_misses, 1);
+        assert_eq!(s.trace_hits as usize, ALL_DEVICES.len());
+    }
+
+    #[test]
+    fn rank_rejects_bad_input() {
+        let e = engine();
+        assert!(e.rank("mlp", 0, Device::T4, &ALL_DEVICES, Precision::Fp32).is_err());
+        assert!(e.rank("mlp", 8, Device::T4, &[], Precision::Fp32).is_err());
+        assert!(e
+            .rank("not_a_model", 8, Device::T4, &ALL_DEVICES, Precision::Fp32)
+            .is_err());
+    }
+
+    #[test]
+    fn clear_trace_cache_forces_retrack() {
+        let e = engine();
+        e.trace("mlp", 16, Device::T4).unwrap();
+        e.clear_trace_cache();
+        assert_eq!(e.stats().trace_entries, 0);
+        e.trace("mlp", 16, Device::T4).unwrap();
+        assert_eq!(e.stats().trace_misses, 2);
+    }
+}

@@ -7,20 +7,22 @@
 //!   cache (all kernels profiled) vs no metrics at all?
 
 use crate::device::ALL_DEVICES;
+use crate::engine::PredictionEngine;
 use crate::experiments::{ground_truth_ms, Ctx};
 use crate::predict::{HybridPredictor, MetricsPolicy};
-use crate::tracker::OperationTracker;
 use crate::util::csv::CsvWriter;
 use crate::util::stats;
 use crate::Result;
 
-fn sweep(predictor: &HybridPredictor) -> f64 {
+/// Sweep one predictor variant. Traces come from the shared engine cache
+/// (tracked once across all variants); predictions use the variant's own
+/// configuration, which is exactly what the ablation isolates.
+fn sweep(engine: &PredictionEngine, predictor: &HybridPredictor) -> Result<f64> {
     let mut errs = Vec::new();
     for model in crate::models::MODEL_NAMES {
         let batch = crate::models::eval_batch_sizes(model)[1];
-        let graph = crate::models::by_name(model, batch).unwrap();
         for origin in [crate::Device::Rtx2070, crate::Device::P100] {
-            let trace = OperationTracker::new(origin).track(&graph);
+            let trace = engine.trace(model, batch, origin)?;
             for dest in ALL_DEVICES {
                 if dest == origin {
                     continue;
@@ -30,7 +32,7 @@ fn sweep(predictor: &HybridPredictor) -> f64 {
             }
         }
     }
-    stats::mean(&errs)
+    Ok(stats::mean(&errs))
 }
 
 pub fn run(ctx: &Ctx) -> Result<()> {
@@ -41,7 +43,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     // γ metrics policy — plus one hybrid row as the reference point.
     let wave = HybridPredictor::wave_only();
     let variants: Vec<(&str, HybridPredictor)> = vec![
-        ("hybrid (reference)", ctx.predictor.clone()),
+        ("hybrid (reference)", ctx.predictor().clone()),
         ("wave eq2 + percentile-99.5 (paper)", wave.clone()),
         ("wave eq1 + percentile-99.5", wave.clone().with_eq1(true)),
         (
@@ -60,7 +62,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     let mut w = CsvWriter::create(ctx.csv_path("ablation"), &["variant", "avg_err_pct"])?;
     println!("{:<38} {:>8}", "variant", "avg err");
     for (name, predictor) in variants {
-        let err = sweep(&predictor);
+        let err = sweep(ctx.engine(), &predictor)?;
         println!("{name:<38} {:>7.1}%", err * 100.0);
         w.row(&[name.to_string(), format!("{:.2}", err * 100.0)])?;
     }

@@ -9,7 +9,6 @@ use crate::device::Device;
 use crate::experiments::Ctx;
 use crate::predict::amp;
 use crate::sim::{Precision, Simulator};
-use crate::tracker::OperationTracker;
 use crate::util::csv::CsvWriter;
 use crate::util::stats;
 use crate::Result;
@@ -38,11 +37,12 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     for (origin, dest) in pairs {
         // Ground truth: the simulator running the AMP iteration on dest.
         let measured = sim.graph_time_ms(dest.spec(), &graph, Precision::Amp);
-        // Habitat + Daydream from the origin's FP32 trace.
-        let trace = OperationTracker::new(origin).track(&graph);
-        let predicted = amp::predict_amp(&ctx.predictor, &trace, dest).run_time_ms();
+        // Habitat + Daydream from the origin's FP32 trace, through the
+        // engine's AMP prediction path.
+        let trace = ctx.engine().trace("resnet50", batch, origin)?;
+        let predicted = ctx.engine().predict_trace(&trace, dest, Precision::Amp).run_time_ms();
         // Daydream alone, from the destination's own FP32 trace.
-        let dest_trace = OperationTracker::new(dest).track(&graph);
+        let dest_trace = ctx.engine().trace("resnet50", batch, dest)?;
         let daydream = amp::amp_time_same_device(&dest_trace);
         let e1 = stats::ape(predicted, measured);
         let e2 = stats::ape(daydream, measured);

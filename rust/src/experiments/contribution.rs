@@ -8,10 +8,9 @@
 use crate::device::ALL_DEVICES;
 use crate::experiments::Ctx;
 use crate::predict::PredictionMethod;
-use crate::tracker::OperationTracker;
 use crate::util::csv::CsvWriter;
 use crate::util::stats;
-use crate::Result;
+use crate::{Precision, Result};
 
 pub fn run(ctx: &Ctx) -> Result<()> {
     println!("\n=== §5.2.3: wave scaling vs MLP contribution breakdown ===");
@@ -30,17 +29,16 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     );
     for model in crate::models::MODEL_NAMES {
         let batch = crate::models::eval_batch_sizes(model)[1];
-        let graph = crate::models::by_name(model, batch).unwrap();
         let mut model_mlp_ops = 0.0;
         let mut model_mlp_time = 0.0;
         let mut n = 0.0;
         for origin in ALL_DEVICES {
-            let trace = OperationTracker::new(origin).track(&graph);
+            let trace = ctx.engine().trace(model, batch, origin)?;
             for dest in ALL_DEVICES {
                 if dest == origin {
                     continue;
                 }
-                let pred = ctx.predictor.predict(&trace, dest);
+                let pred = ctx.engine().predict_trace(&trace, dest, Precision::Fp32);
                 let mlp_ops = pred
                     .ops
                     .iter()

@@ -10,9 +10,8 @@
 use crate::device::Device;
 use crate::experiments::Ctx;
 use crate::predict::distributed::{predict_data_parallel, DataParallelConfig, Interconnect};
-use crate::tracker::OperationTracker;
 use crate::util::csv::CsvWriter;
-use crate::Result;
+use crate::{Precision, Result};
 
 pub fn run(ctx: &Ctx) -> Result<()> {
     println!("\n=== §6.1.1: data-parallel scaling (Habitat compute + ring all-reduce) ===");
@@ -23,9 +22,8 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         &["model", "interconnect", "world", "iter_ms", "exposed_comm_ms", "throughput", "efficiency"],
     )?;
     for (model, batch) in [("resnet50", 32usize), ("gnmt", 32)] {
-        let graph = crate::models::by_name(model, batch).unwrap();
-        let trace = OperationTracker::new(origin).track(&graph);
-        let pred = ctx.predictor.predict(&trace, dest);
+        let trace = ctx.engine().trace(model, batch, origin)?;
+        let pred = ctx.engine().predict_trace(&trace, dest, Precision::Fp32);
         for (ic_name, ic) in [("nvlink", Interconnect::NvLink), ("pcie3", Interconnect::Pcie3)] {
             println!("\n{model} bs={batch}/gpu on {dest} over {ic_name}:");
             println!(

@@ -7,10 +7,9 @@
 use crate::device::Device;
 use crate::experiments::{ground_truth_ms, Ctx};
 use crate::predict::extrapolate::BatchExtrapolator;
-use crate::tracker::OperationTracker;
 use crate::util::csv::CsvWriter;
 use crate::util::stats;
-use crate::Result;
+use crate::{Precision, Result};
 
 pub fn run(ctx: &Ctx) -> Result<()> {
     println!("\n=== §6.1.3: batch-size extrapolation (ResNet-50, 2070 → V100) ===");
@@ -19,12 +18,11 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     let fit_batches = [8usize, 16, 24];
     let targets = [32usize, 48, 64, 96];
 
-    // Predict the fit points with the full predictor.
+    // Predict the fit points through the engine.
     let mut points = Vec::new();
     for &b in &fit_batches {
-        let graph = crate::models::resnet50(b);
-        let trace = OperationTracker::new(origin).track(&graph);
-        let pred = ctx.predictor.predict(&trace, dest).run_time_ms();
+        let trace = ctx.engine().trace("resnet50", b, origin)?;
+        let pred = ctx.engine().predict_trace(&trace, dest, Precision::Fp32).run_time_ms();
         points.push((b, pred));
     }
     let model = BatchExtrapolator::fit(&points);

@@ -8,16 +8,17 @@
 use crate::device::{Device, ALL_DEVICES};
 use crate::experiments::{ground_truth_ms, Ctx};
 use crate::predict::heuristic;
-use crate::tracker::OperationTracker;
 use crate::util::csv::CsvWriter;
 use crate::util::stats;
-use crate::Result;
+use crate::{Precision, Result};
 
 pub fn run(ctx: &Ctx) -> Result<()> {
     println!("\n=== Fig. 1: peak-FLOPS heuristic vs Habitat (DCGAN bs=128 from T4) ===");
     let origin = Device::T4;
-    let graph = crate::models::dcgan(128);
-    let trace = OperationTracker::new(origin).track(&graph);
+    let trace = ctx.engine().trace("dcgan", 128, origin)?;
+    let dests: Vec<Device> = ALL_DEVICES.into_iter().filter(|d| *d != origin).collect();
+    // One fan-out pass over the trace for all five destinations.
+    let preds = ctx.engine().fan_out(&trace, &dests, Precision::Fp32);
 
     let mut w = CsvWriter::create(
         ctx.csv_path("fig1"),
@@ -29,13 +30,10 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     );
     let mut heur_errs = Vec::new();
     let mut hab_errs = Vec::new();
-    for dest in ALL_DEVICES {
-        if dest == origin {
-            continue;
-        }
+    for (&dest, pred) in dests.iter().zip(&preds) {
         let measured = ground_truth_ms("dcgan", 128, dest);
         let heur = heuristic::flops_ratio_prediction(&trace, dest);
-        let hab = ctx.predictor.predict(&trace, dest).run_time_ms();
+        let hab = pred.run_time_ms();
         let he = stats::ape(heur, measured);
         let ha = stats::ape(hab, measured);
         heur_errs.push(he);

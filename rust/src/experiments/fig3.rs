@@ -10,10 +10,9 @@ use std::collections::BTreeMap;
 
 use crate::device::ALL_DEVICES;
 use crate::experiments::{ground_truth_ms, Ctx};
-use crate::tracker::OperationTracker;
 use crate::util::csv::CsvWriter;
 use crate::util::stats;
-use crate::Result;
+use crate::{Precision, Result};
 
 pub fn run(ctx: &Ctx) -> Result<()> {
     println!("\n=== Fig. 3: end-to-end predictions (5 models × 3 batch sizes × 30 GPU pairs) ===");
@@ -27,12 +26,12 @@ pub fn run(ctx: &Ctx) -> Result<()> {
 
     for model in crate::models::MODEL_NAMES {
         for &batch in crate::models::eval_batch_sizes(model) {
-            let graph = crate::models::by_name(model, batch).unwrap();
-            // Track once per origin, reuse for all destinations.
-            let traces: Vec<_> = ALL_DEVICES
-                .into_iter()
-                .map(|o| (o, OperationTracker::new(o).track(&graph)))
-                .collect();
+            // Track once per origin through the engine's cache, reuse
+            // for all destinations (and for any later experiment).
+            let mut traces = Vec::new();
+            for o in ALL_DEVICES {
+                traces.push((o, ctx.engine().trace(model, batch, o)?));
+            }
             for dest in ALL_DEVICES {
                 let measured = ground_truth_ms(model, batch, dest);
                 let mut dest_preds = Vec::new();
@@ -40,7 +39,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
                     if *origin == dest {
                         continue;
                     }
-                    let pred = ctx.predictor.predict(trace, dest).run_time_ms();
+                    let pred = ctx.engine().predict_trace(trace, dest, Precision::Fp32).run_time_ms();
                     let err = stats::ape(pred, measured);
                     dest_preds.push(pred);
                     all_errs.push(err);

@@ -15,7 +15,7 @@ use crate::sim::Simulator;
 use crate::tracker::OperationTracker;
 use crate::util::csv::CsvWriter;
 use crate::util::stats;
-use crate::Result;
+use crate::{Precision, Result};
 
 #[derive(Default)]
 struct OpAgg {
@@ -33,12 +33,13 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     for model in crate::models::MODEL_NAMES {
         let batch = crate::models::eval_batch_sizes(model)[1];
         let graph = crate::models::by_name(model, batch).unwrap();
-        let traces: Vec<_> = ALL_DEVICES
-            .into_iter()
-            .map(|o| (o, OperationTracker::new(o).track(&graph)))
-            .collect();
+        let mut traces = Vec::new();
+        for o in ALL_DEVICES {
+            traces.push((o, ctx.engine().trace(model, batch, o)?));
+        }
         for dest in ALL_DEVICES {
-            // Per-op ground truth on the destination.
+            // Per-op ground truth on the destination (a custom-simulator
+            // tracking pass, so it stays off the engine's cache).
             let dest_trace = OperationTracker::new(dest)
                 .with_simulator(sim.clone())
                 .track(&graph);
@@ -46,7 +47,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
                 if *origin == dest {
                     continue;
                 }
-                let pred = ctx.predictor.predict(trace, dest);
+                let pred = ctx.engine().predict_trace(trace, dest, Precision::Fp32);
                 for (p, t) in pred.ops.iter().zip(&dest_trace.ops) {
                     let measured = t.total_ms();
                     if measured <= 0.0 {

@@ -9,10 +9,9 @@
 
 use crate::device::Device;
 use crate::experiments::{ground_truth_ms, Ctx};
-use crate::tracker::OperationTracker;
 use crate::util::csv::CsvWriter;
 use crate::util::stats;
-use crate::{cost, Result};
+use crate::{cost, Precision, Result};
 
 pub fn run(ctx: &Ctx) -> Result<()> {
     println!("\n=== Fig. 6: case study 1 — GNMT from a P4000, rent P100/T4/V100? ===");
@@ -30,8 +29,9 @@ pub fn run(ctx: &Ctx) -> Result<()> {
 
     let mut errs = Vec::new();
     for &batch in batches {
-        let graph = crate::models::gnmt(batch);
-        let trace = OperationTracker::new(origin).track(&graph);
+        let trace = ctx.engine().trace("gnmt", batch, origin)?;
+        // One fan-out pass over the cached trace for all three clouds.
+        let preds = ctx.engine().fan_out(&trace, &clouds, Precision::Fp32);
         let base_measured = ground_truth_ms("gnmt", batch, origin);
         println!("\nbatch {batch}:  (P4000 measured {base_measured:.1} ms)");
         println!(
@@ -41,8 +41,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
 
         let mut pred_cost_rank: Vec<(Device, f64)> = Vec::new();
         let mut meas_cost_rank: Vec<(Device, f64)> = Vec::new();
-        for dest in clouds {
-            let pred = ctx.predictor.predict(&trace, dest);
+        for (&dest, pred) in clouds.iter().zip(&preds) {
             let measured = ground_truth_ms("gnmt", batch, dest);
             let err = stats::ape(pred.run_time_ms(), measured);
             errs.push(err);

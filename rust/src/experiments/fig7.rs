@@ -7,10 +7,9 @@
 
 use crate::device::{Device, ALL_DEVICES};
 use crate::experiments::{ground_truth_ms, Ctx};
-use crate::tracker::OperationTracker;
 use crate::util::csv::CsvWriter;
 use crate::util::stats;
-use crate::Result;
+use crate::{Precision, Result};
 
 pub fn run(ctx: &Ctx) -> Result<()> {
     println!("\n=== Fig. 7: case study 2 — DCGAN from a 2080Ti: is the V100 worth it? ===");
@@ -20,18 +19,15 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         &["batch", "dest", "pred_tput_norm", "measured_tput_norm", "err_pct"],
     )?;
 
+    let dests: Vec<Device> = ALL_DEVICES.into_iter().filter(|d| *d != origin).collect();
     let mut errs = Vec::new();
     for batch in [64usize, 128] {
-        let graph = crate::models::dcgan(batch);
-        let trace = OperationTracker::new(origin).track(&graph);
+        let trace = ctx.engine().trace("dcgan", batch, origin)?;
+        let preds = ctx.engine().fan_out(&trace, &dests, Precision::Fp32);
         let base = ground_truth_ms("dcgan", batch, origin);
         println!("\nbatch {batch}:  (2080Ti measured {base:.1} ms)");
         println!("{:<10} {:>16} {:>16} {:>6}", "dest", "pred tput (norm)", "meas tput (norm)", "err%");
-        for dest in ALL_DEVICES {
-            if dest == origin {
-                continue;
-            }
-            let pred = ctx.predictor.predict(&trace, dest);
+        for (&dest, pred) in dests.iter().zip(&preds) {
             let measured = ground_truth_ms("dcgan", batch, dest);
             // Throughput normalized to the 2080Ti's measured throughput:
             // ratios of iteration times (same batch size).

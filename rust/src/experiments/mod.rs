@@ -33,12 +33,16 @@ mod fig7;
 mod scheduler;
 mod table1;
 
+use crate::engine::PredictionEngine;
 use crate::predict::HybridPredictor;
 use crate::Result;
 
-/// Shared context passed to every experiment.
+/// Shared context passed to every experiment. All predictions flow
+/// through one [`PredictionEngine`], so traces tracked by one experiment
+/// are reused by the next (`experiment all` tracks each
+/// (model, batch, origin) exactly once).
 pub struct Ctx {
-    pub predictor: HybridPredictor,
+    engine: PredictionEngine,
     pub out_dir: String,
     /// Whether the MLP artifacts were available (experiments note this).
     pub hybrid: bool,
@@ -46,22 +50,30 @@ pub struct Ctx {
 
 impl Ctx {
     fn new(out_dir: &str, artifacts: &str) -> Self {
-        let (predictor, hybrid) = match crate::runtime::predictor_from_artifacts(artifacts) {
-            Ok(p) => (p, true),
+        let (engine, hybrid) = match PredictionEngine::from_artifacts(artifacts) {
+            Ok(e) => (e, true),
             Err(e) => {
                 eprintln!(
                     "note: MLP artifacts unavailable ({e}); running with wave scaling only.\n\
                      Run `make artifacts` for the paper's full hybrid predictor."
                 );
-                (HybridPredictor::wave_only(), false)
+                (PredictionEngine::wave_only(), false)
             }
         };
         std::fs::create_dir_all(out_dir).ok();
         Ctx {
-            predictor,
+            engine,
             out_dir: out_dir.to_string(),
             hybrid,
         }
+    }
+
+    pub fn engine(&self) -> &PredictionEngine {
+        &self.engine
+    }
+
+    pub fn predictor(&self) -> &HybridPredictor {
+        self.engine.predictor()
     }
 
     pub fn csv_path(&self, name: &str) -> String {

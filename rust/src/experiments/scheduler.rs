@@ -14,12 +14,13 @@
 
 use crate::cluster::{schedule, Inventory, Job, ThroughputMatrix};
 use crate::device::Device;
+use crate::engine::PredictionEngine;
 use crate::experiments::Ctx;
-use crate::tracker::{OperationTracker, Trace};
+use crate::tracker::Trace;
 use crate::util::csv::CsvWriter;
 use crate::Result;
 
-fn job_pool() -> Vec<(Job, Trace)> {
+fn job_pool(engine: &PredictionEngine) -> Result<Vec<(Job, Trace)>> {
     let specs = [
         ("a/resnet50", "resnet50", 64, Device::Rtx2070),
         ("b/gnmt", "gnmt", 32, Device::P4000),
@@ -30,20 +31,20 @@ fn job_pool() -> Vec<(Job, Trace)> {
         ("g/bert_base", "bert_base", 16, Device::Rtx2070),
         ("h/resnet50", "resnet50", 32, Device::P4000),
     ];
-    specs
-        .into_iter()
-        .map(|(name, model, batch, origin)| {
-            let job = Job {
-                name: name.into(),
-                model: model.into(),
-                batch,
-                origin,
-            };
-            let trace =
-                OperationTracker::new(origin).track(&crate::models::by_name(model, batch).unwrap());
-            (job, trace)
-        })
-        .collect()
+    let mut pool = Vec::with_capacity(specs.len());
+    for (name, model, batch, origin) in specs {
+        let job = Job {
+            name: name.into(),
+            model: model.into(),
+            batch,
+            origin,
+        };
+        // Tracked via the shared engine cache; the matrix builder wants
+        // an owned trace, so clone out of the Arc.
+        let trace = engine.trace(model, batch, origin)?.as_ref().clone();
+        pool.push((job, trace));
+    }
+    Ok(pool)
 }
 
 /// Ground-truth throughput of a job on a device.
@@ -69,13 +70,13 @@ fn objective(placements: &[(usize, Device)], jobs: &[Job], devices: &[Device]) -
 
 pub fn run(ctx: &Ctx) -> Result<()> {
     println!("\n=== Scheduler value: habitat-informed vs baselines (8 jobs, 2×V100 + 2×P100 + 2×T4 + 2×2080Ti) ===");
-    let pool = job_pool();
+    let pool = job_pool(ctx.engine())?;
     let jobs: Vec<Job> = pool.iter().map(|(j, _)| j.clone()).collect();
     let devices = [Device::V100, Device::P100, Device::T4, Device::Rtx2080Ti];
     let inventory: Inventory = devices.iter().map(|d| (*d, 2usize)).collect();
 
     // habitat policy: greedy on *predicted* rates.
-    let predicted = ThroughputMatrix::build(&ctx.predictor, &pool, &devices);
+    let predicted = ThroughputMatrix::build(ctx.predictor(), &pool, &devices);
     let habitat_placement: Vec<(usize, Device)> = schedule(&predicted, &inventory)
         .into_iter()
         .map(|p| {

@@ -37,16 +37,45 @@
 //! println!("Pred. iter. exec. time: {:.2} ms", pred.run_time_ms());
 //! ```
 //!
-//! With the MLP artifacts built (`make artifacts`), use
-//! [`predict::HybridPredictor`] for the paper's full hybrid scheme, or the
-//! async [`coordinator::PredictionService`] to serve batched prediction
-//! requests.
+//! ## The prediction engine
+//!
+//! Production callers go through the unified [`engine::PredictionEngine`]
+//! rather than composing tracker + predictor by hand. The engine memoizes
+//! tracked traces in a content-keyed LRU cache (repeated requests skip
+//! the tracking pipeline entirely), shares a process-wide occupancy/wave-
+//! size table between the simulator and wave scaling, and fans one cached
+//! trace out to *all* destination GPUs on a worker pool:
+//!
+//! ```no_run
+//! use habitat::{engine::PredictionEngine, device::ALL_DEVICES, Device, Precision};
+//!
+//! let engine = PredictionEngine::wave_only();        // or from_artifacts(..)
+//! let ranking = engine
+//!     .rank("resnet50", 64, Device::Rtx2070, &ALL_DEVICES, Precision::Fp32)
+//!     .unwrap();
+//! for e in &ranking.entries {
+//!     println!(
+//!         "{:<10} {:>8.2} ms  {:?} samples/s/$",
+//!         e.dest,
+//!         e.pred.run_time_ms(),
+//!         e.cost_normalized_throughput,
+//!     );
+//! }
+//! ```
+//!
+//! With the MLP artifacts built (`make artifacts`), build the engine with
+//! [`engine::PredictionEngine::from_artifacts`] for the paper's full
+//! hybrid scheme. The TCP front end ([`coordinator::PredictionService`])
+//! serves the same engine over newline-delimited JSON, including a `rank`
+//! request that returns every destination GPU ordered by cost-normalized
+//! throughput in a single RPC (see `docs/SERVICE.md`).
 
 pub mod cluster;
 pub mod coordinator;
 pub mod cost;
 pub mod dataset;
 pub mod device;
+pub mod engine;
 pub mod experiments;
 pub mod lowering;
 pub mod models;
@@ -58,6 +87,7 @@ pub mod tracker;
 pub mod util;
 
 pub use device::{Arch, Device, GpuSpec};
+pub use engine::PredictionEngine;
 pub use opgraph::{Graph, Op, OpKind};
 pub use predict::{HybridPredictor, PredictedTrace};
 pub use sim::Precision;

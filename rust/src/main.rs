@@ -15,7 +15,8 @@
 //! no clap; see Cargo.toml.)
 
 use habitat::device::{Device, ALL_DEVICES};
-use habitat::{models, OperationTracker};
+use habitat::engine::PredictionEngine;
+use habitat::{models, OperationTracker, Precision};
 
 /// Tiny flag parser: `--key value` pairs plus boolean `--key` switches.
 struct Args {
@@ -96,33 +97,31 @@ fn main() -> anyhow::Result<()> {
         "predict" => {
             let args = Args::parse(rest, &["wave-only", "amp"])?;
             let dest = parse_device(&args.get("dest", "v100"))?;
-            // Trace source: a saved trace file, or track a zoo model now.
-            let trace = if args.has("trace") {
-                habitat::Trace::load(args.get("trace", ""))?
+            let engine = if args.has("wave-only") {
+                PredictionEngine::wave_only()
+            } else {
+                PredictionEngine::from_artifacts(&args.get("artifacts", "artifacts"))?
+            };
+            // Trace source: a saved trace file, or track a zoo model
+            // through the engine (memoized for the process lifetime).
+            let trace: std::sync::Arc<habitat::Trace> = if args.has("trace") {
+                std::sync::Arc::new(habitat::Trace::load(args.get("trace", ""))?)
             } else {
                 let model = args.get("model", "resnet50");
                 let batch = args.get_usize("batch", 32)?;
                 let origin = parse_device(&args.get("origin", "rtx2070"))?;
                 let graph = models::by_name(&model, batch)
                     .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
-                if !habitat::opgraph::memory::fits(&graph, dest, habitat::Precision::Fp32) {
+                if !habitat::opgraph::memory::fits(&graph, dest, Precision::Fp32) {
                     eprintln!(
                         "warning: {model} at batch {batch} likely exceeds {dest}'s memory ({:.1} GiB needed)",
-                        habitat::opgraph::memory::estimate(&graph, habitat::Precision::Fp32).total_gib()
+                        habitat::opgraph::memory::estimate(&graph, Precision::Fp32).total_gib()
                     );
                 }
-                OperationTracker::new(origin).track(&graph)
+                engine.trace(&model, batch, origin)?
             };
-            let predictor = if args.has("wave-only") {
-                habitat::HybridPredictor::wave_only()
-            } else {
-                habitat::runtime::predictor_from_artifacts(&args.get("artifacts", "artifacts"))?
-            };
-            let pred = if args.has("amp") {
-                habitat::predict::amp::predict_amp(&predictor, &trace, dest)
-            } else {
-                predictor.predict(&trace, dest)
-            };
+            let precision = if args.has("amp") { Precision::Amp } else { Precision::Fp32 };
+            let pred = engine.predict_trace(&trace, dest, precision);
             println!(
                 "{} (batch {}): measured on {} = {:.2} ms",
                 trace.model,
@@ -164,49 +163,61 @@ fn main() -> anyhow::Result<()> {
             let origin = parse_device(&args.get("origin", "rtx2070"))?;
             let graph = models::by_name(&model, batch)
                 .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
-            let trace = OperationTracker::new(origin).track(&graph);
-            let predictor = if args.has("wave-only") {
-                habitat::HybridPredictor::wave_only()
+            let engine = if args.has("wave-only") {
+                PredictionEngine::wave_only()
             } else {
-                habitat::runtime::predictor_from_artifacts(&args.get("artifacts", "artifacts"))
+                PredictionEngine::from_artifacts(&args.get("artifacts", "artifacts"))
                     .unwrap_or_else(|e| {
                         eprintln!("(wave scaling only: {e})");
-                        habitat::HybridPredictor::wave_only()
+                        PredictionEngine::wave_only()
                     })
             };
             let world = args.get_usize("dp", 1)?;
+            // One tracking pass, fanned out to every destination on the
+            // engine's worker pool, ranked by cost-normalized throughput.
+            let ranking = engine.rank(&model, batch, origin, &ALL_DEVICES, Precision::Fp32)?;
             println!(
-                "{model} (batch {batch}) from {origin}{}:",
+                "{model} (batch {batch}) from {origin}{}, best decision first:",
                 if world > 1 { format!(", data-parallel ×{world} (pcie3)") } else { String::new() }
             );
             println!(
                 "{:<10} {:>10} {:>12} {:>14} {:>6}",
                 "GPU", "pred ms", "samples/s", "samples/s/$", "fits"
             );
-            for dest in ALL_DEVICES {
-                let pred = predictor.predict(&trace, dest);
-                let (ms, tput) = if world > 1 {
-                    let dp = habitat::predict::distributed::predict_data_parallel(
-                        &trace,
-                        &pred,
-                        &habitat::predict::distributed::DataParallelConfig {
-                            world,
-                            ..Default::default()
-                        },
-                    );
-                    (dp.iter_ms, dp.throughput)
-                } else {
-                    (pred.run_time_ms(), pred.throughput())
-                };
-                let fits = habitat::opgraph::memory::fits(&graph, dest, habitat::Precision::Fp32);
+            // Rows carry the *displayed* metrics (data-parallel when
+            // --dp N), so re-rank on those: the DP communication penalty
+            // differs per device and can reorder the single-GPU ranking.
+            let mut rows: Vec<(Device, f64, f64, Option<f64>)> = ranking
+                .entries
+                .iter()
+                .map(|entry| {
+                    let dest = entry.dest;
+                    let (ms, tput) = if world > 1 {
+                        let dp = habitat::predict::distributed::predict_data_parallel(
+                            &ranking.trace,
+                            &entry.pred,
+                            &habitat::predict::distributed::DataParallelConfig {
+                                world,
+                                ..Default::default()
+                            },
+                        );
+                        (dp.iter_ms, dp.throughput)
+                    } else {
+                        (entry.pred.run_time_ms(), entry.pred.throughput())
+                    };
+                    let cnt = habitat::cost::cost_normalized_throughput(dest, tput);
+                    (dest, ms, tput, cnt)
+                })
+                .collect();
+            rows.sort_by(|a, b| habitat::engine::rank_order((a.3, a.2), (b.3, b.2)));
+            for (dest, ms, tput, cnt) in rows {
+                let fits = habitat::opgraph::memory::fits(&graph, dest, Precision::Fp32);
                 println!(
                     "{:<10} {:>10.2} {:>12.1} {:>14} {:>6}",
                     dest.id(),
                     ms,
                     tput,
-                    habitat::cost::cost_normalized_throughput(dest, tput)
-                        .map(|v| format!("{v:.1}"))
-                        .unwrap_or_else(|| "-".into()),
+                    cnt.map(|v| format!("{v:.1}")).unwrap_or_else(|| "-".into()),
                     if fits { "yes" } else { "NO" },
                 );
             }

@@ -54,8 +54,14 @@ pub fn amp_time_same_device(trace: &Trace) -> f64 {
 /// Step 2 — Daydream's transformation scales each op by its AMP factor,
 /// with γ taken from the op's measured kernels.
 pub fn predict_amp(predictor: &HybridPredictor, trace: &Trace, dest: Device) -> PredictedTrace {
-    let fp32 = predictor.predict(trace, dest);
-    let dest_spec = dest.spec();
+    amp_transform(&predictor.predict(trace, dest), trace)
+}
+
+/// Step 2 alone: apply the Daydream AMP transformation to an
+/// already-predicted FP32 destination iteration. Split out so the
+/// engine's fan-out can reuse one FP32 prediction pass per destination.
+pub fn amp_transform(fp32: &PredictedTrace, trace: &Trace) -> PredictedTrace {
+    let dest_spec = fp32.dest.spec();
     let mut amped = fp32.clone();
     for (pred_op, tracked) in amped.ops.iter_mut().zip(&trace.ops) {
         // Time-weighted AMP factor over the op's kernels.

@@ -162,16 +162,30 @@ impl HybridPredictor {
 
     /// Predict the trace's iteration time on `dest`.
     pub fn predict(&self, trace: &Trace, dest: Device) -> PredictedTrace {
+        let profiled = self.metrics_policy.profiled_kernels(trace);
+        self.predict_with_profiled(trace, dest, profiled.as_ref())
+    }
+
+    /// [`HybridPredictor::predict`] with the metrics-availability set
+    /// resolved by the caller. The engine's multi-destination fan-out
+    /// resolves the set once per trace and shares it across every
+    /// destination (`None` means every kernel has metrics, matching
+    /// [`MetricsPolicy::profiled_kernels`]).
+    pub fn predict_with_profiled(
+        &self,
+        trace: &Trace,
+        dest: Device,
+        profiled: Option<&std::collections::HashSet<u64>>,
+    ) -> PredictedTrace {
         let origin_spec = trace.origin.spec();
         let dest_spec = dest.spec();
-        let profiled = self.metrics_policy.profiled_kernels(trace);
 
         // Pass 1: wave-scale everything; collect MLP work items.
         let mut ops: Vec<PredictedOp> = Vec::with_capacity(trace.ops.len());
         let mut mlp_items: std::collections::BTreeMap<MlpOp, (Vec<usize>, Vec<Vec<f64>>)> =
             Default::default();
         for (i, t) in trace.ops.iter().enumerate() {
-            let wave_ms = self.wave_scale_op(t, origin_spec, dest_spec, profiled.as_ref());
+            let wave_ms = self.wave_scale_op(t, origin_spec, dest_spec, profiled);
             ops.push(PredictedOp {
                 index: t.index,
                 name: t.op.name.clone(),

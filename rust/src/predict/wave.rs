@@ -13,7 +13,8 @@
 //! Habitat uses Eq. 2 (the large-wave-count limit of Eq. 1) by default,
 //! because real kernels almost always have many waves.
 
-use crate::device::{occupancy, GpuSpec, LaunchConfig};
+use crate::device::{GpuSpec, LaunchConfig};
+use crate::engine::memo::WaveTable;
 
 /// The hardware ratios wave scaling consumes, for one kernel.
 #[derive(Debug, Clone, Copy)]
@@ -31,10 +32,14 @@ pub struct WaveRatios {
     pub w_dest: u64,
 }
 
-/// Compute the ratios for one kernel launch between two GPUs.
+/// Compute the ratios for one kernel launch between two GPUs. Wave sizes
+/// come from the process-wide memo table shared with the simulator
+/// ([`WaveTable`]), so repeated launches — and multi-destination fan-out
+/// over the same trace — never recompute the occupancy calculation.
 pub fn ratios(launch: &LaunchConfig, origin: &GpuSpec, dest: &GpuSpec) -> WaveRatios {
-    let w_origin = occupancy::wave_size(origin, launch).max(1);
-    let w_dest = occupancy::wave_size(dest, launch).max(1);
+    let table = WaveTable::global();
+    let w_origin = table.wave_size(origin, launch).max(1);
+    let w_dest = table.wave_size(dest, launch).max(1);
     WaveRatios {
         bw: origin.achieved_bw_bytes() / dest.achieved_bw_bytes(),
         wave: w_origin as f64 / w_dest as f64,

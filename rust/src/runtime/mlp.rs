@@ -16,6 +16,9 @@
 use std::collections::HashMap;
 use std::path::Path;
 
+// PJRT bindings: the offline build links the in-tree shim; swap in the
+// real `xla` crate here to execute actual HLO artifacts.
+use crate::runtime::xla_compat as xla;
 
 use crate::dataset::gpu_features;
 use crate::device::Device;

@@ -16,6 +16,7 @@
 
 pub mod mlp;
 pub mod service;
+pub(crate) mod xla_compat;
 
 pub use mlp::{MlpModel, MlpRuntime, RuntimeMeta};
 pub use service::{MlpService, MlpServiceHandle};

@@ -1,0 +1,97 @@
+//! Build-time shim for the `xla` crate (PJRT bindings).
+//!
+//! The build image is offline and carries no prebuilt XLA/PJRT shared
+//! libraries, so the real `xla` crate cannot be resolved or linked here.
+//! This module exposes the minimal API surface [`super::mlp`] consumes;
+//! every entry point reports PJRT as unavailable, which makes artifact
+//! loading fail cleanly and every caller degrade to wave scaling (the
+//! paper's documented no-artifacts path — see
+//! [`crate::predict::HybridPredictor`]). Swapping the real crate back in
+//! is a one-line change: replace the `use crate::runtime::xla_compat as
+//! xla;` import in `runtime/mlp.rs` with the external crate.
+
+use std::path::Path;
+
+use crate::Result;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    anyhow::bail!(
+        "PJRT runtime unavailable in this build ({what}); \
+         link the real `xla` crate to enable MLP artifacts"
+    )
+}
+
+/// Stub for `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Stub for `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Stub for `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Stub for `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Stub for `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Stub for `xla::ElementType`.
+pub enum ElementType {
+    F32,
+}
+
+/// Stub for `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Self> {
+        unavailable("Literal::create_from_shape_and_untyped_data")
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}

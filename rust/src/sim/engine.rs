@@ -1,6 +1,7 @@
 //! The timing model itself.
 
-use crate::device::{occupancy, GpuSpec};
+use crate::device::GpuSpec;
+use crate::engine::memo::WaveTable;
 use crate::lowering::{Kernel, Precision};
 use crate::util::rng::{hash01, hash_str};
 
@@ -81,9 +82,12 @@ impl Simulator {
         }
     }
 
-    /// Execution time of one kernel on one GPU, in milliseconds.
+    /// Execution time of one kernel on one GPU, in milliseconds. Wave
+    /// size and occupancy come from the memo table shared with wave
+    /// scaling ([`WaveTable`]).
     pub fn kernel_time_ms(&self, spec: &GpuSpec, k: &Kernel, precision: Precision) -> f64 {
-        let wave = occupancy::wave_size(spec, &k.launch).max(1) as f64;
+        let occ_table = WaveTable::global();
+        let wave = occ_table.wave_size(spec, &k.launch).max(1) as f64;
         let blocks = k.launch.grid_blocks.max(1) as f64;
 
         // Chip fill: a grid smaller than one wave leaves SMs idle.
@@ -96,7 +100,7 @@ impl Simulator {
 
         // Memory leg: achieved bandwidth derated by occupancy-driven
         // memory-level parallelism, and by chip fill.
-        let occ = occupancy::occupancy_fraction(spec, &k.launch);
+        let occ = occ_table.occupancy_fraction(spec, &k.launch);
         let mlp_factor = 0.55 + 0.45 * occ;
         let fill_mem = 0.3 + 0.7 * fill;
         let mem_ms = k.dram_bytes / (spec.achieved_bw_bytes() * mlp_factor * fill_mem) * 1e3;

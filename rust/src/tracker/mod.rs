@@ -74,7 +74,9 @@ impl Trace {
     }
 
     /// Per-op share of iteration time — the "importance" annotation of the
-    /// paper's Fig. 4, keyed by the op's short name.
+    /// paper's Fig. 4, keyed by the op's short name. A zero-time trace
+    /// (no ops, or all-zero measurements) reports every share as 0 rather
+    /// than dividing by zero.
     pub fn op_importance(&self) -> Vec<(String, f64)> {
         let total = self.run_time_ms();
         let mut by_name: std::collections::BTreeMap<String, f64> = Default::default();
@@ -83,9 +85,9 @@ impl Trace {
         }
         let mut v: Vec<(String, f64)> = by_name
             .into_iter()
-            .map(|(k, ms)| (k, ms / total))
+            .map(|(k, ms)| (k, if total > 0.0 { ms / total } else { 0.0 }))
             .collect();
-        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v.sort_by(|a, b| b.1.total_cmp(&a.1));
         v
     }
 }
@@ -214,6 +216,27 @@ mod tests {
         let trace = OperationTracker::new(Device::Rtx2080Ti).track(&toy_graph());
         let total: f64 = trace.op_importance().iter().map(|(_, f)| f).sum();
         assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn importance_of_zero_time_trace_does_not_panic() {
+        // An op with no measured kernels has zero time; a trace of such
+        // ops used to produce NaN shares and a panicking sort.
+        let trace = Trace {
+            model: "empty".into(),
+            batch_size: 1,
+            origin: Device::T4,
+            precision: Precision::Fp32,
+            ops: vec![TrackedOp {
+                index: 0,
+                op: Op::new("noop", OpKind::Elementwise { kind: EwKind::Relu }, vec![1]),
+                fwd: Vec::new(),
+                bwd: Vec::new(),
+            }],
+        };
+        let shares = trace.op_importance();
+        assert_eq!(shares.len(), 1);
+        assert_eq!(shares[0].1, 0.0);
     }
 
     #[test]

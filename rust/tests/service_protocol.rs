@@ -1,0 +1,180 @@
+//! Wire-protocol integration tests for the coordinator service: JSON
+//! round-trips, malformed-line rejection, and the `rank` request — all
+//! exercised over a real TCP connection against the wave-only engine
+//! (no MLP artifacts required).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use habitat::coordinator::{
+    service, PredictionRequest, PredictionResponse, PredictionService, RankRequest, RankResponse,
+    Request,
+};
+use habitat::device::ALL_DEVICES;
+use habitat::predict::HybridPredictor;
+
+/// Spawn a wave-only service accepting any number of connections;
+/// returns its address and a handle to the shared service.
+fn spawn_server() -> (String, Arc<PredictionService>) {
+    let svc = Arc::new(PredictionService::with_predictor(HybridPredictor::wave_only()));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let shared = svc.clone();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let svc = shared.clone();
+            std::thread::spawn(move || {
+                let _ = service::handle_connection(stream.unwrap(), &svc);
+            });
+        }
+    });
+    (addr, svc)
+}
+
+fn send_lines(addr: &str, lines: &[String]) -> Vec<String> {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut write = stream.try_clone().unwrap();
+    for line in lines {
+        write.write_all(line.as_bytes()).unwrap();
+        write.write_all(b"\n").unwrap();
+    }
+    drop(write);
+    BufReader::new(stream)
+        .lines()
+        .map(|l| l.unwrap())
+        .collect()
+}
+
+#[test]
+fn prediction_request_json_roundtrip() {
+    let req = PredictionRequest {
+        model: "gnmt".into(),
+        batch: 64,
+        origin: "p4000".into(),
+        dest: "t4".into(),
+        precision: Some("amp".into()),
+    };
+    let parsed = PredictionRequest::from_json(&req.to_json()).unwrap();
+    assert_eq!(parsed.model, "gnmt");
+    assert_eq!(parsed.batch, 64);
+    assert_eq!(parsed.origin, "p4000");
+    assert_eq!(parsed.dest, "t4");
+    assert_eq!(parsed.precision.as_deref(), Some("amp"));
+}
+
+#[test]
+fn rank_request_json_roundtrip_and_dispatch() {
+    let req = RankRequest {
+        model: "mlp".into(),
+        batch: 8,
+        origin: "t4".into(),
+        precision: None,
+        dests: Some(vec!["v100".into(), "p100".into()]),
+    };
+    match Request::from_json(&req.to_json()).unwrap() {
+        Request::Rank(r) => {
+            assert_eq!(r.model, "mlp");
+            assert_eq!(r.dests.as_deref().unwrap().len(), 2);
+        }
+        other => panic!("expected rank dispatch, got {other:?}"),
+    }
+}
+
+#[test]
+fn malformed_lines_are_rejected_not_fatal() {
+    let (addr, _svc) = spawn_server();
+    let replies = send_lines(
+        &addr,
+        &[
+            "not json at all".to_string(),
+            "{\"model\":\"mlp\"}".to_string(), // missing fields
+            "{\"model\":\"mlp\",\"batch\":-3,\"origin\":\"t4\",\"dest\":\"v100\"}".to_string(),
+            // The connection must survive all of the above:
+            "{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}".to_string(),
+        ],
+    );
+    assert_eq!(replies.len(), 4);
+    assert!(replies[0].contains("bad request"));
+    assert!(replies[1].contains("bad request"));
+    assert!(replies[2].contains("bad request") || replies[2].contains("error"));
+    let ok = PredictionResponse::from_json(&replies[3]).unwrap();
+    assert!(ok.iter_ms > 0.0);
+}
+
+#[test]
+fn rank_over_tcp_has_expected_shape() {
+    let (addr, _svc) = spawn_server();
+    let replies = send_lines(
+        &addr,
+        &["{\"rank\":true,\"model\":\"mlp\",\"batch\":16,\"origin\":\"t4\"}".to_string()],
+    );
+    let resp = RankResponse::from_json(&replies[0]).unwrap();
+    assert_eq!(resp.model, "mlp");
+    assert_eq!(resp.origin, "T4");
+    assert!(resp.origin_iter_ms > 0.0);
+    assert_eq!(resp.ranking.len(), ALL_DEVICES.len());
+    let mut seen: Vec<&str> = resp.ranking.iter().map(|r| r.dest.as_str()).collect();
+    seen.sort_unstable();
+    let mut want: Vec<&str> = ALL_DEVICES.iter().map(|d| d.id()).collect();
+    want.sort_unstable();
+    assert_eq!(seen, want, "every built-in device must appear exactly once");
+}
+
+#[test]
+fn rank_equals_individual_predictions_over_the_wire() {
+    let (addr, svc) = spawn_server();
+    let rank_line = "{\"rank\":true,\"model\":\"mlp\",\"batch\":32,\"origin\":\"p4000\"}".to_string();
+    let rank = RankResponse::from_json(&send_lines(&addr, &[rank_line])[0]).unwrap();
+    assert_eq!(svc.engine().stats().trace_misses, 1);
+
+    let lines: Vec<String> = rank
+        .ranking
+        .iter()
+        .map(|r| {
+            PredictionRequest {
+                model: "mlp".into(),
+                batch: 32,
+                origin: "p4000".into(),
+                dest: r.dest.clone(),
+                precision: None,
+            }
+            .to_json()
+        })
+        .collect();
+    let replies = send_lines(&addr, &lines);
+    for (entry, reply) in rank.ranking.iter().zip(&replies) {
+        let resp = PredictionResponse::from_json(reply).unwrap();
+        assert!(
+            (resp.iter_ms - entry.iter_ms).abs() < 1e-9,
+            "{}: rank {} vs individual {}",
+            entry.dest,
+            entry.iter_ms,
+            resp.iter_ms
+        );
+    }
+    // All individual requests were served from the cached trace.
+    let stats = svc.engine().stats();
+    assert_eq!(stats.trace_misses, 1);
+    assert_eq!(stats.trace_hits as usize, rank.ranking.len());
+}
+
+#[test]
+fn pipelined_mixed_requests_come_back_in_order() {
+    let (addr, _svc) = spawn_server();
+    let replies = send_lines(
+        &addr,
+        &[
+            "{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}".to_string(),
+            "{\"rank\":true,\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\"}".to_string(),
+            "{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"p100\"}".to_string(),
+        ],
+    );
+    assert_eq!(replies.len(), 3);
+    assert_eq!(PredictionResponse::from_json(&replies[0]).unwrap().dest, "V100");
+    assert_eq!(
+        RankResponse::from_json(&replies[1]).unwrap().ranking.len(),
+        ALL_DEVICES.len()
+    );
+    assert_eq!(PredictionResponse::from_json(&replies[2]).unwrap().dest, "P100");
+}
