@@ -1,9 +1,11 @@
 //! Benchmarks for the prediction hot path: tracking, wave scaling, the
-//! engine's cached/fan-out paths, and the full hybrid predictor (when
-//! artifacts are available).
+//! plan-build vs per-destination-evaluate split, the engine's
+//! cached/fan-out paths, and the full hybrid predictor (when artifacts
+//! are available).
 
 use habitat::device::{Device, ALL_DEVICES};
 use habitat::engine::PredictionEngine;
+use habitat::plan::AnalyzedPlan;
 use habitat::predict::{HybridPredictor, MetricsPolicy};
 use habitat::tracker::OperationTracker;
 use habitat::util::bench::bench;
@@ -34,6 +36,36 @@ fn main() {
         eq1.predict(&trace, Device::V100).run_time_ms()
     });
 
+    // --- plan: one-time build vs per-destination evaluate ---------------
+    // The refactor's claim: analysis (wave-size batching, γ resolution,
+    // feature prebuild) is paid once per trace; each destination is pure
+    // scaling arithmetic. Compare one evaluate against the legacy
+    // trace-walking predict, and a 60-destination fan-out against 60
+    // legacy walks.
+    let plan = AnalyzedPlan::build(&trace, &wave.metrics_policy);
+    bench("plan/build/resnet50", || {
+        AnalyzedPlan::build(&trace, &wave.metrics_policy).n_kernels()
+    });
+    bench("plan/evaluate/resnet50_to_v100", || {
+        wave.evaluate(&plan, Device::V100).run_time_ms()
+    });
+    bench("predict/legacy_trace_walk/resnet50_to_v100", || {
+        wave.predict(&trace, Device::V100).run_time_ms()
+    });
+    let many_dests: Vec<Device> = ALL_DEVICES.iter().copied().cycle().take(60).collect();
+    bench("plan/evaluate_60_dests/resnet50", || {
+        many_dests
+            .iter()
+            .map(|d| wave.evaluate(&plan, *d).run_time_ms())
+            .sum::<f64>()
+    });
+    bench("legacy/trace_walk_60_dests/resnet50", || {
+        many_dests
+            .iter()
+            .map(|d| wave.predict(&trace, *d).run_time_ms())
+            .sum::<f64>()
+    });
+
     // --- engine: cold (tracking pipeline every time) vs cached ----------
     let engine = PredictionEngine::wave_only();
     bench("engine/predict_cold/resnet50", || {
@@ -53,13 +85,13 @@ fn main() {
     });
 
     // --- engine: single destination vs all-destination fan-out ----------
-    let cached = engine.trace("resnet50", 32, Device::Rtx2070).unwrap();
+    let cached = engine.analyzed("resnet50", 32, Device::Rtx2070).unwrap();
     bench("engine/single_dest/resnet50", || {
-        engine.predict_trace(&cached, Device::V100, Precision::Fp32).run_time_ms()
+        engine.evaluate(&cached.plan, Device::V100, Precision::Fp32).run_time_ms()
     });
     bench("engine/fan_out_all_dests/resnet50", || {
         engine
-            .fan_out(&cached, &ALL_DEVICES, Precision::Fp32)
+            .fan_out(&cached.plan, &ALL_DEVICES, Precision::Fp32)
             .iter()
             .map(|p| p.run_time_ms())
             .sum::<f64>()
@@ -67,8 +99,11 @@ fn main() {
     bench("engine/sequential_all_dests/resnet50", || {
         ALL_DEVICES
             .iter()
-            .map(|d| engine.predict_trace(&cached, *d, Precision::Fp32).run_time_ms())
+            .map(|d| engine.evaluate(&cached.plan, *d, Precision::Fp32).run_time_ms())
             .sum::<f64>()
+    });
+    bench("engine/fan_out_60_dests/resnet50", || {
+        engine.fan_out(&cached.plan, &many_dests, Precision::Fp32).len()
     });
     bench("engine/rank_all_dests/resnet50", || {
         engine
@@ -79,8 +114,13 @@ fn main() {
     });
     let stats = engine.stats();
     println!(
-        "(engine counters: trace {} hits / {} misses; wave table {} hits / {} misses, process-wide)",
-        stats.trace_hits, stats.trace_misses, stats.wave_hits, stats.wave_misses
+        "(engine counters: trace {} hits / {} misses; {} plan builds; {} workers; wave table {} hits / {} misses, process-wide)",
+        stats.trace_hits,
+        stats.trace_misses,
+        stats.plan_builds,
+        stats.workers,
+        stats.wave_hits,
+        stats.wave_misses
     );
 
     match habitat::runtime::predictor_from_artifacts("artifacts") {

@@ -58,9 +58,12 @@ impl ThroughputMatrix {
     ) -> Self {
         let mut matrix = Vec::with_capacity(traces.len());
         for (_, trace) in traces {
+            // Compile each job's trace once; every candidate device is a
+            // thin evaluation over the plan's arrays.
+            let plan = crate::plan::AnalyzedPlan::build(trace, &predictor.metrics_policy);
             let row: Vec<f64> = devices
                 .iter()
-                .map(|d| predictor.predict(trace, *d).throughput())
+                .map(|d| predictor.evaluate(&plan, *d).throughput())
                 .collect();
             matrix.push(row);
         }

@@ -8,7 +8,9 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
-use crate::coordinator::{PredictionRequest, PredictionResponse, RankRequest, RankResponse};
+use crate::coordinator::{
+    PredictionRequest, PredictionResponse, RankRequest, RankResponse, StatsResponse,
+};
 use crate::Result;
 
 /// A connected prediction-service client.
@@ -55,6 +57,17 @@ impl Client {
         self.writer.write_all(request.to_json().as_bytes())?;
         self.writer.write_all(b"\n")?;
         RankResponse::from_json(&self.recv_line()?)
+    }
+
+    /// Fetch the server engine's counter snapshot (trace/plan cache
+    /// hits & misses, wave-table counters, fan-out pool size). Same
+    /// in-order caveat as [`Client::rank`]: drain any pipelined
+    /// responses first.
+    pub fn stats(&mut self) -> Result<StatsResponse> {
+        self.writer
+            .write_all(crate::coordinator::service::stats_request_json().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        StatsResponse::from_json(&self.recv_line()?)
     }
 
     fn recv_line(&mut self) -> Result<String> {
@@ -136,6 +149,19 @@ mod tests {
         // A predict request on the same connection still works afterwards.
         let single = client.predict(&req("mlp", "v100")).unwrap();
         assert!(single.iter_ms > 0.0);
+    }
+
+    #[test]
+    fn stats_over_tcp() {
+        let addr = spawn_server();
+        let mut client = Client::connect(&addr).unwrap();
+        let cold = client.stats().unwrap();
+        assert_eq!(cold.trace_misses, 0);
+        client.predict(&req("mlp", "v100")).unwrap();
+        let warm = client.stats().unwrap();
+        assert_eq!(warm.trace_misses, 1);
+        assert_eq!(warm.plan_builds, 1);
+        assert!(warm.workers >= 1);
     }
 
     #[test]

@@ -5,13 +5,14 @@
 //! thread per connection) that routes every request through the shared
 //! [`crate::engine::PredictionEngine`]. The engine supplies:
 //!
-//! * the **trace cache** — tracking a model on the simulator is the
-//!   expensive, reusable step, so traces are memoized per
-//!   (model, batch, origin, precision) in a content-keyed LRU;
+//! * the **trace/plan cache** — tracking a model on the simulator is
+//!   the expensive, reusable step, so traces are memoized per
+//!   (model, batch, origin, precision) in a content-keyed LRU, each
+//!   next to its compiled [`crate::plan::AnalyzedPlan`];
 //! * the **multi-destination fan-out** behind the `rank` request — one
-//!   cached trace predicted onto every destination GPU on a worker
-//!   pool, returned sorted by cost-normalized throughput (the paper's
-//!   Fig. 1 decision as a single RPC);
+//!   cached plan evaluated onto every destination GPU on a persistent
+//!   worker pool, returned sorted by cost-normalized throughput (the
+//!   paper's Fig. 1 decision as a single RPC);
 //! * the **hybrid predictor**, whose kernel-varying ops funnel into the
 //!   MLP service thread ([`crate::runtime::MlpService`]), where requests
 //!   from all concurrent connections are **dynamically batched** into a
@@ -27,7 +28,7 @@ pub mod service;
 pub use client::Client;
 pub use service::{
     PredictionRequest, PredictionResponse, PredictionService, RankRequest, RankResponse,
-    RankedDest, Request,
+    RankedDest, Request, StatsResponse,
 };
 
 use crate::Result;

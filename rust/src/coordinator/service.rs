@@ -10,7 +10,9 @@
 //! * **rank** — `{"rank": true, "model", "batch", "origin",
 //!   "precision"?, "dests"?}` → *every* destination GPU, ordered by
 //!   cost-normalized throughput, from a single pass over one cached
-//!   trace (the paper's Fig. 1 decision as one RPC).
+//!   trace (the paper's Fig. 1 decision as one RPC);
+//! * **stats** — `{"stats": true}` → the engine's trace/plan cache
+//!   hit & miss counters, wave-table counters, and fan-out pool size.
 //!
 //! The server is thread-per-connection over `std::net` (the image has no
 //! async runtime); all prediction work funnels into the shared
@@ -140,13 +142,14 @@ impl RankRequest {
     }
 }
 
-/// Either request shape, as dispatched off the wire: a line with
-/// `"rank": true` is a [`RankRequest`], anything else a
-/// [`PredictionRequest`].
+/// Any request shape, as dispatched off the wire: a line with
+/// `"rank": true` is a [`RankRequest`], a line with `"stats": true` a
+/// stats request, anything else a [`PredictionRequest`].
 #[derive(Debug, Clone)]
 pub enum Request {
     Predict(PredictionRequest),
     Rank(RankRequest),
+    Stats,
 }
 
 impl Request {
@@ -154,9 +157,85 @@ impl Request {
         let v = json::parse(line)?;
         if matches!(v.get("rank"), Some(Json::Bool(true))) {
             Ok(Request::Rank(RankRequest::from_value(&v)?))
+        } else if matches!(v.get("stats"), Some(Json::Bool(true))) {
+            Ok(Request::Stats)
         } else {
             Ok(Request::Predict(PredictionRequest::from_value(&v)?))
         }
+    }
+}
+
+/// The wire form of a stats request.
+pub fn stats_request_json() -> String {
+    Json::obj(vec![("stats", Json::Bool(true))]).dump()
+}
+
+/// The answer to a stats request: the engine's counter snapshot
+/// ([`crate::engine::EngineStats`]) in wire form.
+#[derive(Debug, Clone, Copy)]
+pub struct StatsResponse {
+    /// Cache hits (requests that skipped the tracking pipeline).
+    pub trace_hits: u64,
+    /// Cache misses (tracking-pipeline executions).
+    pub trace_misses: u64,
+    /// Trace+plan entries currently resident.
+    pub trace_entries: usize,
+    /// Compiled-plan builds (cache misses + one-off analyses); the
+    /// plan rides the same cache entry as its trace, so cached-plan
+    /// reuses equal `trace_hits`.
+    pub plan_builds: u64,
+    /// Process-wide wave-table counters.
+    pub wave_hits: u64,
+    pub wave_misses: u64,
+    /// Persistent fan-out worker-pool width.
+    pub workers: usize,
+}
+
+impl From<crate::engine::EngineStats> for StatsResponse {
+    fn from(s: crate::engine::EngineStats) -> Self {
+        StatsResponse {
+            trace_hits: s.trace_hits,
+            trace_misses: s.trace_misses,
+            trace_entries: s.trace_entries,
+            plan_builds: s.plan_builds,
+            wave_hits: s.wave_hits,
+            wave_misses: s.wave_misses,
+            workers: s.workers,
+        }
+    }
+}
+
+impl StatsResponse {
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![
+            ("trace_hits", Json::Num(self.trace_hits as f64)),
+            ("trace_misses", Json::Num(self.trace_misses as f64)),
+            ("trace_entries", Json::Num(self.trace_entries as f64)),
+            ("plan_builds", Json::Num(self.plan_builds as f64)),
+            ("wave_hits", Json::Num(self.wave_hits as f64)),
+            ("wave_misses", Json::Num(self.wave_misses as f64)),
+            ("workers", Json::Num(self.workers as f64)),
+        ])
+        .dump()
+    }
+
+    pub fn from_json(line: &str) -> Result<Self> {
+        let v = json::parse(line)?;
+        if let Some(err) = v.get("error").and_then(Json::as_str) {
+            anyhow::bail!("server error: {err}");
+        }
+        let req_u64 = |key: &str| -> Result<u64> {
+            Ok(v.req_usize(key)? as u64)
+        };
+        Ok(StatsResponse {
+            trace_hits: req_u64("trace_hits")?,
+            trace_misses: req_u64("trace_misses")?,
+            trace_entries: v.req_usize("trace_entries")?,
+            plan_builds: req_u64("plan_builds")?,
+            wave_hits: req_u64("wave_hits")?,
+            wave_misses: req_u64("wave_misses")?,
+            workers: v.req_usize("workers")?,
+        })
     }
 }
 
@@ -440,6 +519,11 @@ impl PredictionService {
         })
     }
 
+    /// Handle a stats request: the engine's counter snapshot.
+    pub fn handle_stats(&self) -> StatsResponse {
+        self.engine.stats().into()
+    }
+
     /// Parse one wire line, dispatch it, and serialize the reply.
     pub fn handle_line(&self, line: &str) -> String {
         match Request::from_json(line) {
@@ -451,6 +535,7 @@ impl PredictionService {
                 Ok(resp) => resp.to_json(),
                 Err(e) => error_json(&e.to_string()),
             },
+            Ok(Request::Stats) => self.handle_stats().to_json(),
             Err(e) => error_json(&format!("bad request: {e}")),
         }
     }
@@ -671,6 +756,35 @@ mod tests {
         assert!(bad.contains("bad request"));
         let unknown = s.handle_line("{\"model\":\"mlp\",\"batch\":8,\"origin\":\"a100\",\"dest\":\"v100\"}");
         assert!(unknown.contains("error"));
+    }
+
+    #[test]
+    fn stats_request_reflects_engine_counters() {
+        let s = wave_service();
+        let cold = s.handle_stats();
+        assert_eq!(cold.trace_hits, 0);
+        assert_eq!(cold.trace_misses, 0);
+        assert!(cold.workers >= 1);
+
+        s.handle(&req("mlp", 8, "t4", "v100")).unwrap();
+        s.handle(&req("mlp", 8, "t4", "p100")).unwrap();
+        let warm = s.handle_stats();
+        assert_eq!(warm.trace_misses, 1);
+        assert_eq!(warm.trace_hits, 1);
+        assert_eq!(warm.trace_entries, 1);
+        assert_eq!(warm.plan_builds, 1);
+    }
+
+    #[test]
+    fn stats_line_dispatches_and_roundtrips() {
+        let s = wave_service();
+        s.handle(&req("mlp", 8, "t4", "v100")).unwrap();
+        let line = stats_request_json();
+        assert!(matches!(Request::from_json(&line).unwrap(), Request::Stats));
+        let reply = s.handle_line(&line);
+        let parsed = StatsResponse::from_json(&reply).unwrap();
+        assert_eq!(parsed.trace_misses, 1);
+        assert_eq!(parsed.workers, s.engine().workers());
     }
 
     #[test]

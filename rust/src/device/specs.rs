@@ -245,6 +245,12 @@ impl Device {
         self.spec().name
     }
 
+    /// Position of this device in [`ALL_DEVICES`] — the index used by
+    /// the dense per-device tables of [`crate::plan::AnalyzedPlan`].
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
     /// Parse a device from its short name (case-insensitive).
     pub fn parse(s: &str) -> Option<Device> {
         let s = s.to_ascii_lowercase();
@@ -275,6 +281,13 @@ mod tests {
         names.sort();
         names.dedup();
         assert_eq!(names.len(), 6);
+    }
+
+    #[test]
+    fn index_is_the_position_in_all_devices() {
+        for (i, d) in ALL_DEVICES.into_iter().enumerate() {
+            assert_eq!(d.index(), i, "{d}");
+        }
     }
 
     #[test]

@@ -2,51 +2,72 @@
 //! library.
 //!
 //! Everything that turns `(model, batch, origin)` into destination
-//! predictions flows through [`PredictionEngine`]:
+//! predictions flows through [`PredictionEngine`], as a
+//! **track → analyze → evaluate** pipeline:
 //!
-//! * a **content-keyed LRU trace cache** over
-//!   `(model, batch, origin, precision)` — tracking a model on the
-//!   simulator is the expensive, reusable step (the analogue of the
-//!   paper's profiling run), so repeated requests skip it entirely.
-//!   Hit/miss counters are exported via [`PredictionEngine::stats`];
-//! * a **memoized occupancy/wave-size table** ([`memo::WaveTable`])
-//!   keyed by `(device, LaunchConfig)`, shared by the ground-truth
-//!   simulator and the predictor's wave scaling;
-//! * a **multi-destination fan-out** ([`PredictionEngine::fan_out`])
-//!   that predicts one cached trace onto every destination GPU,
-//!   resolving the per-trace metrics set once and parallelizing across
-//!   destinations with a `std::thread` worker pool;
-//! * a **rank** API ([`PredictionEngine::rank`]) that answers the
-//!   paper's Fig. 1 question as a single call: every destination GPU
-//!   ordered by cost-normalized throughput (rentable devices first,
-//!   descending; unpriced devices after, by raw throughput).
+//! * **track** — run one training iteration on the simulator (the
+//!   analogue of the paper's profiling run) to produce a
+//!   [`Trace`];
+//! * **analyze** — compile the trace into an [`AnalyzedPlan`]
+//!   ([`crate::plan`]): a flat structure-of-arrays arena holding
+//!   everything destination-independent — kernel launch metadata,
+//!   batched wave sizes for every `(launch shape, device)` pair,
+//!   policy-resolved γ, AMP factors, and MLP feature rows. Built once
+//!   per trace;
+//! * **evaluate** — per-destination scaling arithmetic over the plan's
+//!   arrays ([`crate::predict::HybridPredictor::evaluate`]): no lock,
+//!   no hashing, no feature recomputation in the fan-out loop.
+//!
+//! Around that pipeline the engine provides:
+//!
+//! * a **content-keyed LRU cache** over
+//!   `(model, batch, origin, precision)` holding the trace *and* its
+//!   plan ([`AnalyzedTrace`]), so repeated requests skip both tracking
+//!   and analysis. Hit/miss counters are exported via
+//!   [`PredictionEngine::stats`];
+//! * a **persistent fan-out worker pool** ([`pool::WorkerPool`]) —
+//!   spawned once at engine construction, sized by
+//!   [`PredictionEngine::with_workers`] or `HABITAT_WORKERS`, shared by
+//!   [`PredictionEngine::fan_out`] and [`PredictionEngine::rank`];
+//! * the **memoized occupancy/wave-size table** ([`memo::WaveTable`])
+//!   shared with the ground-truth simulator (consulted only at
+//!   plan-build time);
+//! * a **rank** API ([`PredictionEngine::rank`]) answering the paper's
+//!   Fig. 1 question in one call: every destination GPU ordered by
+//!   cost-normalized throughput.
 //!
 //! The TCP front end ([`crate::coordinator`]), the CLI, and the
 //! experiment harness are all thin layers over this engine.
 
 pub mod cache;
 pub mod memo;
+pub mod pool;
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::cost;
 use crate::device::Device;
 use crate::lowering::Precision;
 use crate::models;
-use crate::predict::{amp, HybridPredictor, PredictedTrace};
+use crate::plan::{AnalyzedPlan, AnalyzedTrace};
+use crate::predict::{HybridPredictor, PredictedTrace};
 use crate::tracker::{OperationTracker, Trace};
 use crate::Result;
 
 use cache::LruCache;
+use pool::WorkerPool;
 
 /// Trace-cache key: model name, batch size, origin device, and the
 /// precision the iteration was *tracked* at.
 pub type TraceKey = (String, usize, Device, Precision);
 
-/// Default number of traces kept hot. A trace is a few hundred KB, so
-/// this bounds the cache at tens of MB.
+/// Default number of trace+plan entries kept hot. An entry is a few
+/// hundred KB, so this bounds the cache at tens of MB.
 pub const DEFAULT_TRACE_CAPACITY: usize = 128;
+
+/// Environment variable overriding the fan-out worker-pool width.
+pub const WORKERS_ENV: &str = "HABITAT_WORKERS";
 
 /// One engine prediction: the (shared) origin trace it was made from and
 /// the predicted destination iteration.
@@ -84,34 +105,48 @@ pub fn rank_order(a: (Option<f64>, f64), b: (Option<f64>, f64)) -> std::cmp::Ord
     }
 }
 
-/// Counter snapshot for benches, tests, and operational visibility.
+/// Counter snapshot for benches, tests, and operational visibility
+/// (served over the wire as the `stats` request).
 #[derive(Debug, Clone, Copy)]
 pub struct EngineStats {
-    /// Trace-cache hits (requests that skipped the tracking pipeline).
+    /// Cache hits (requests that skipped the tracking pipeline).
     pub trace_hits: u64,
-    /// Trace-cache misses (tracking-pipeline executions).
+    /// Cache misses (tracking-pipeline executions).
     pub trace_misses: u64,
-    /// Traces currently resident.
+    /// Trace+plan entries currently resident.
     pub trace_entries: usize,
+    /// [`AnalyzedPlan`] compilations (cache misses plus one-off
+    /// [`PredictionEngine::analyze`] builds for external traces). The
+    /// plan rides the same cache entry as its trace, so cached-plan
+    /// reuses are exactly `trace_hits`.
+    pub plan_builds: u64,
     /// Wave-table hits/misses. **Process-wide**, not per engine: the
     /// wave table is shared with the simulator and every other engine
     /// in the process, so these count all of that activity.
     pub wave_hits: u64,
     pub wave_misses: u64,
+    /// Persistent fan-out worker-pool width.
+    pub workers: usize,
 }
 
 /// The shared prediction engine. `Send + Sync`: one engine serves any
 /// number of connection threads.
 pub struct PredictionEngine {
-    predictor: HybridPredictor,
-    traces: Mutex<LruCache<TraceKey, Arc<Trace>>>,
+    predictor: Arc<HybridPredictor>,
+    entries: Mutex<LruCache<TraceKey, AnalyzedTrace>>,
     /// Per-key build gates: concurrent misses on the *same* key wait for
     /// the first builder instead of re-running the tracking pipeline
     /// (distinct keys still track in parallel).
     building: Mutex<std::collections::HashMap<TraceKey, Arc<Mutex<()>>>>,
     trace_hits: AtomicU64,
     trace_misses: AtomicU64,
+    plan_builds: AtomicU64,
+    /// Desired fan-out pool width; the pool itself is spawned lazily on
+    /// the first [`PredictionEngine::fan_out`] that needs it, so engines
+    /// that only evaluate sequentially never spawn threads and
+    /// [`PredictionEngine::with_workers`] never discards a spawned pool.
     workers: usize,
+    pool: OnceLock<WorkerPool>,
 }
 
 impl PredictionEngine {
@@ -120,19 +155,29 @@ impl PredictionEngine {
         Self::with_capacity(predictor, DEFAULT_TRACE_CAPACITY)
     }
 
-    /// Build with an explicit trace-cache capacity.
+    /// Build with an explicit trace-cache capacity. The fan-out pool is
+    /// sized from `HABITAT_WORKERS` if set, else the machine's available
+    /// parallelism capped at 8 (see [`PredictionEngine::with_workers`]).
     pub fn with_capacity(predictor: HybridPredictor, capacity: usize) -> Self {
-        let workers = std::thread::available_parallelism()
-            .map(|p| p.get())
-            .unwrap_or(4)
-            .clamp(1, 8);
+        let workers = std::env::var(WORKERS_ENV)
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|p| p.get())
+                    .unwrap_or(4)
+                    .clamp(1, 8)
+            });
         PredictionEngine {
-            predictor,
-            traces: Mutex::new(LruCache::new(capacity)),
+            predictor: Arc::new(predictor),
+            entries: Mutex::new(LruCache::new(capacity)),
             building: Mutex::new(std::collections::HashMap::new()),
             trace_hits: AtomicU64::new(0),
             trace_misses: AtomicU64::new(0),
+            plan_builds: AtomicU64::new(0),
             workers,
+            pool: OnceLock::new(),
         }
     }
 
@@ -146,22 +191,36 @@ impl PredictionEngine {
         Ok(Self::new(crate::runtime::predictor_from_artifacts(dir)?))
     }
 
-    /// Override the fan-out worker-pool width (defaults to the machine's
-    /// parallelism, capped at 8).
+    /// Set the persistent fan-out pool width (if a pool was already
+    /// spawned, its threads are joined and a new one is spawned lazily).
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = workers.max(1);
+        self.pool = OnceLock::new();
         self
     }
 
+    /// Persistent fan-out worker-pool width.
+    pub fn workers(&self) -> usize {
+        self.pool.get().map_or(self.workers, WorkerPool::size)
+    }
+
+    /// The persistent pool, spawned on first use.
+    fn pool(&self) -> &WorkerPool {
+        self.pool.get_or_init(|| WorkerPool::new(self.workers))
+    }
+
     pub fn predictor(&self) -> &HybridPredictor {
-        &self.predictor
+        self.predictor.as_ref()
     }
 
     /// Get or build the FP32 origin trace for a zoo model (memoized).
     /// The tracker profiles FP32 — the paper measures FP32 and *predicts*
-    /// AMP (§6.1.2).
+    /// AMP (§6.1.2). The compiled plan rides along in the same cache
+    /// entry (a cold key pays one plan build even if the caller only
+    /// needs the trace — a fraction of the tracking pass it follows, and
+    /// it makes every later evaluation of that key lock-free).
     pub fn trace(&self, model: &str, batch: usize, origin: Device) -> Result<Arc<Trace>> {
-        self.trace_with_precision(model, batch, origin, Precision::Fp32)
+        Ok(self.analyzed(model, batch, origin)?.trace)
     }
 
     /// Get or build a trace tracked at an explicit precision (memoized).
@@ -172,10 +231,29 @@ impl PredictionEngine {
         origin: Device,
         precision: Precision,
     ) -> Result<Arc<Trace>> {
+        Ok(self
+            .analyzed_with_precision(model, batch, origin, precision)?
+            .trace)
+    }
+
+    /// Get or build the FP32 trace **and** its compiled plan (memoized
+    /// together — one tracking pass, one analysis pass per key).
+    pub fn analyzed(&self, model: &str, batch: usize, origin: Device) -> Result<AnalyzedTrace> {
+        self.analyzed_with_precision(model, batch, origin, Precision::Fp32)
+    }
+
+    /// [`PredictionEngine::analyzed`] at an explicit tracked precision.
+    pub fn analyzed_with_precision(
+        &self,
+        model: &str,
+        batch: usize,
+        origin: Device,
+        precision: Precision,
+    ) -> Result<AnalyzedTrace> {
         let key = (model.to_string(), batch, origin, precision);
-        if let Some(t) = self.traces.lock().unwrap().get(&key) {
+        if let Some(entry) = self.entries.lock().unwrap().get(&key) {
             self.trace_hits.fetch_add(1, Relaxed);
-            return Ok(t);
+            return Ok(entry);
         }
         // Miss: serialize builders of the *same* key so a thundering herd
         // of identical cold requests tracks exactly once.
@@ -190,9 +268,9 @@ impl PredictionEngine {
         // not permanently wedge this key for the life of the service.
         let _build_guard = gate.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
         // Double-check: the first builder may have just filled the cache.
-        if let Some(t) = self.traces.lock().unwrap().get(&key) {
+        if let Some(entry) = self.entries.lock().unwrap().get(&key) {
             self.trace_hits.fetch_add(1, Relaxed);
-            return Ok(t);
+            return Ok(entry);
         }
         let Some(graph) = models::by_name(model, batch) else {
             self.building.lock().unwrap().remove(&key);
@@ -200,14 +278,21 @@ impl PredictionEngine {
         };
         // Count a miss only when the tracking pipeline actually runs.
         self.trace_misses.fetch_add(1, Relaxed);
-        let trace = Arc::new(
-            OperationTracker::new(origin)
-                .with_precision(precision)
-                .track(&graph),
-        );
-        self.traces.lock().unwrap().insert(key.clone(), trace.clone());
+        self.plan_builds.fetch_add(1, Relaxed);
+        let entry = OperationTracker::new(origin)
+            .with_precision(precision)
+            .track_analyzed(&graph, &self.predictor.metrics_policy);
+        self.entries.lock().unwrap().insert(key.clone(), entry.clone());
         self.building.lock().unwrap().remove(&key);
-        Ok(trace)
+        Ok(entry)
+    }
+
+    /// Compile a plan for an externally supplied trace (e.g. loaded from
+    /// a file) with this engine's metrics policy. Not cached — zoo
+    /// models should go through [`PredictionEngine::analyzed`] instead.
+    pub fn analyze(&self, trace: &Trace) -> Arc<AnalyzedPlan> {
+        self.plan_builds.fetch_add(1, Relaxed);
+        Arc::new(AnalyzedPlan::build(trace, &self.predictor.metrics_policy))
     }
 
     /// Predict one `(model, batch, origin) → dest` pair, tracking (or
@@ -222,88 +307,90 @@ impl PredictionEngine {
         precision: Precision,
     ) -> Result<EnginePrediction> {
         anyhow::ensure!(batch > 0, "batch must be positive");
-        let trace = self.trace(model, batch, origin)?;
-        let pred = self.predict_trace(&trace, dest, precision);
-        Ok(EnginePrediction { trace, pred })
+        let analyzed = self.analyzed(model, batch, origin)?;
+        let pred = self.evaluate(&analyzed.plan, dest, precision);
+        Ok(EnginePrediction {
+            trace: analyzed.trace,
+            pred,
+        })
+    }
+
+    /// Evaluate a compiled plan on one destination: the thin
+    /// per-destination loop (pure scaling arithmetic, no locking).
+    pub fn evaluate(
+        &self,
+        plan: &AnalyzedPlan,
+        dest: Device,
+        precision: Precision,
+    ) -> PredictedTrace {
+        self.predictor.evaluate_with_precision(plan, dest, precision)
     }
 
     /// Predict an already-tracked trace onto one destination.
+    /// Compatibility path for external traces: compiles a one-off plan
+    /// per call — callers with a destination loop should [`Self::analyze`]
+    /// once and [`Self::evaluate`] per destination.
     pub fn predict_trace(&self, trace: &Trace, dest: Device, precision: Precision) -> PredictedTrace {
-        let profiled = self.predictor.metrics_policy.profiled_kernels(trace);
-        self.predict_one(trace, dest, precision, profiled.as_ref())
+        let plan = self.analyze(trace);
+        self.evaluate(&plan, dest, precision)
     }
 
-    fn predict_one(
-        &self,
-        trace: &Trace,
-        dest: Device,
-        precision: Precision,
-        profiled: Option<&std::collections::HashSet<u64>>,
-    ) -> PredictedTrace {
-        let fp32 = self.predictor.predict_with_profiled(trace, dest, profiled);
-        match precision {
-            Precision::Fp32 => fp32,
-            Precision::Amp => amp::amp_transform(&fp32, trace),
-        }
-    }
-
-    /// Predict one trace onto *all* destinations in a single pass over
-    /// the trace metadata: the per-trace profiled-kernel set is resolved
-    /// once and shared, per-kernel launch metadata hits the process-wide
-    /// wave table, and destinations are spread over a `std::thread`
-    /// worker pool. Results come back in `dests` order and are
-    /// bit-identical to sequential [`PredictionEngine::predict_trace`]
-    /// calls.
+    /// Evaluate one compiled plan on *all* destinations, spread over the
+    /// persistent worker pool. Every per-destination evaluation is pure
+    /// arithmetic over the shared plan (no lock, no hash, no feature
+    /// rebuild). Results come back in `dests` order and are bit-identical
+    /// to sequential [`PredictionEngine::evaluate`] calls.
     pub fn fan_out(
         &self,
-        trace: &Trace,
+        plan: &Arc<AnalyzedPlan>,
         dests: &[Device],
         precision: Precision,
     ) -> Vec<PredictedTrace> {
         if dests.is_empty() {
             return Vec::new();
         }
-        let profiled = self.predictor.metrics_policy.profiled_kernels(trace);
-        let profiled_ref = profiled.as_ref();
-        if dests.len() == 1 {
-            return vec![self.predict_one(trace, dests[0], precision, profiled_ref)];
+        if dests.len() == 1 || self.workers() == 1 {
+            return dests
+                .iter()
+                .map(|&d| self.evaluate(plan, d, precision))
+                .collect();
         }
-
-        let workers = self.workers.min(dests.len());
-        let next = AtomicUsize::new(0);
-        let next_ref = &next;
-        let (tx, rx) = std::sync::mpsc::channel::<(usize, PredictedTrace)>();
+        // Results travel as `thread::Result` so a panicking evaluation
+        // (e.g. a misbehaving external MLP backend) re-raises its
+        // original payload in the caller — matching the old scoped
+        // threads — instead of surfacing as an opaque missing result.
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, std::thread::Result<PredictedTrace>)>();
+        for (i, &dest) in dests.iter().enumerate() {
+            let plan = Arc::clone(plan);
+            let predictor = Arc::clone(&self.predictor);
+            let tx = tx.clone();
+            self.pool().execute(move || {
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    predictor.evaluate_with_precision(&plan, dest, precision)
+                }));
+                let _ = tx.send((i, result));
+            });
+        }
+        drop(tx);
         let mut out: Vec<Option<PredictedTrace>> = Vec::with_capacity(dests.len());
         out.resize_with(dests.len(), || None);
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                let tx = tx.clone();
-                s.spawn(move || loop {
-                    let i = next_ref.fetch_add(1, Relaxed);
-                    if i >= dests.len() {
-                        break;
-                    }
-                    let pred = self.predict_one(trace, dests[i], precision, profiled_ref);
-                    if tx.send((i, pred)).is_err() {
-                        break;
-                    }
-                });
+        for (i, result) in rx {
+            match result {
+                Ok(pred) => out[i] = Some(pred),
+                Err(payload) => std::panic::resume_unwind(payload),
             }
-            drop(tx);
-            for (i, pred) in rx {
-                out[i] = Some(pred);
-            }
-        });
+        }
         out.into_iter()
             .map(|p| p.expect("every destination predicted"))
             .collect()
     }
 
-    /// The paper's Fig. 1 decision as one call: track (or reuse) the
-    /// origin trace once, fan out to every destination, and rank by
-    /// cost-normalized throughput. Rentable devices come first in
-    /// descending samples/s/$; devices without a rental price follow,
-    /// ordered by raw throughput. Ties keep `dests` order.
+    /// The paper's Fig. 1 decision as one call: track + analyze (or
+    /// reuse) the origin once, fan out to every destination on the
+    /// persistent pool, and rank by cost-normalized throughput. Rentable
+    /// devices come first in descending samples/s/$; devices without a
+    /// rental price follow, ordered by raw throughput. Ties keep `dests`
+    /// order.
     pub fn rank(
         &self,
         model: &str,
@@ -314,8 +401,8 @@ impl PredictionEngine {
     ) -> Result<Ranking> {
         anyhow::ensure!(batch > 0, "batch must be positive");
         anyhow::ensure!(!dests.is_empty(), "rank needs at least one destination");
-        let trace = self.trace(model, batch, origin)?;
-        let preds = self.fan_out(&trace, dests, precision);
+        let analyzed = self.analyzed(model, batch, origin)?;
+        let preds = self.fan_out(&analyzed.plan, dests, precision);
         let mut entries: Vec<RankEntry> = dests
             .iter()
             .zip(preds)
@@ -334,25 +421,30 @@ impl PredictionEngine {
                 (b.cost_normalized_throughput, b.pred.throughput()),
             )
         });
-        Ok(Ranking { trace, entries })
+        Ok(Ranking {
+            trace: analyzed.trace,
+            entries,
+        })
     }
 
-    /// Counter snapshot (trace cache + shared wave table).
+    /// Counter snapshot (trace/plan cache + shared wave table + pool).
     pub fn stats(&self) -> EngineStats {
         let (wave_hits, wave_misses) = memo::WaveTable::global().counters();
         EngineStats {
             trace_hits: self.trace_hits.load(Relaxed),
             trace_misses: self.trace_misses.load(Relaxed),
-            trace_entries: self.traces.lock().unwrap().len(),
+            trace_entries: self.entries.lock().unwrap().len(),
+            plan_builds: self.plan_builds.load(Relaxed),
             wave_hits,
             wave_misses,
+            workers: self.workers(),
         }
     }
 
-    /// Drop every cached trace (the counters are preserved). Used by the
-    /// cold-path benches.
+    /// Drop every cached trace+plan entry (the counters are preserved).
+    /// Used by the cold-path benches.
     pub fn clear_trace_cache(&self) {
-        self.traces.lock().unwrap().clear();
+        self.entries.lock().unwrap().clear();
     }
 }
 
@@ -375,6 +467,17 @@ mod tests {
         assert_eq!(s.trace_misses, 1);
         assert_eq!(s.trace_hits, 1);
         assert_eq!(s.trace_entries, 1);
+        assert_eq!(s.plan_builds, 1, "the plan rides the same cache entry");
+    }
+
+    #[test]
+    fn analyzed_shares_the_plan_with_the_trace_entry() {
+        let e = engine();
+        let a = e.analyzed("mlp", 16, Device::T4).unwrap();
+        let b = e.analyzed("mlp", 16, Device::T4).unwrap();
+        assert!(Arc::ptr_eq(&a.trace, &b.trace));
+        assert!(Arc::ptr_eq(&a.plan, &b.plan), "plan must be compiled once");
+        assert_eq!(e.stats().plan_builds, 1);
     }
 
     #[test]
@@ -421,17 +524,18 @@ mod tests {
         let st = e.stats();
         assert_eq!(st.trace_misses, 1, "a thundering herd must track exactly once");
         assert_eq!(st.trace_hits, 7);
+        assert_eq!(st.plan_builds, 1, "…and analyze exactly once");
     }
 
     #[test]
     fn fan_out_matches_sequential_predictions() {
         let e = engine();
-        let trace = e.trace("mlp", 32, Device::T4).unwrap();
-        let fanned = e.fan_out(&trace, &ALL_DEVICES, Precision::Fp32);
+        let at = e.analyzed("mlp", 32, Device::T4).unwrap();
+        let fanned = e.fan_out(&at.plan, &ALL_DEVICES, Precision::Fp32);
         assert_eq!(fanned.len(), ALL_DEVICES.len());
         for (dest, pred) in ALL_DEVICES.iter().zip(&fanned) {
             assert_eq!(pred.dest, *dest, "results must come back in dests order");
-            let seq = e.predict_trace(&trace, *dest, Precision::Fp32);
+            let seq = e.evaluate(&at.plan, *dest, Precision::Fp32);
             assert_eq!(
                 pred.run_time_ms(),
                 seq.run_time_ms(),
@@ -443,11 +547,11 @@ mod tests {
     #[test]
     fn fan_out_amp_matches_sequential() {
         let e = engine();
-        let trace = e.trace("mlp", 32, Device::P4000).unwrap();
+        let at = e.analyzed("mlp", 32, Device::P4000).unwrap();
         let dests = [Device::V100, Device::Rtx2080Ti];
-        let fanned = e.fan_out(&trace, &dests, Precision::Amp);
+        let fanned = e.fan_out(&at.plan, &dests, Precision::Amp);
         for (dest, pred) in dests.iter().zip(&fanned) {
-            let seq = e.predict_trace(&trace, *dest, Precision::Amp);
+            let seq = e.evaluate(&at.plan, *dest, Precision::Amp);
             assert_eq!(pred.run_time_ms(), seq.run_time_ms());
         }
     }
@@ -455,9 +559,36 @@ mod tests {
     #[test]
     fn fan_out_single_worker_still_covers_all() {
         let e = PredictionEngine::wave_only().with_workers(1);
-        let trace = e.trace("mlp", 8, Device::T4).unwrap();
-        let fanned = e.fan_out(&trace, &ALL_DEVICES, Precision::Fp32);
+        assert_eq!(e.workers(), 1);
+        let at = e.analyzed("mlp", 8, Device::T4).unwrap();
+        let fanned = e.fan_out(&at.plan, &ALL_DEVICES, Precision::Fp32);
         assert_eq!(fanned.len(), ALL_DEVICES.len());
+    }
+
+    #[test]
+    fn pool_is_reused_across_fan_outs() {
+        let e = PredictionEngine::wave_only().with_workers(3);
+        let at = e.analyzed("mlp", 8, Device::T4).unwrap();
+        for _ in 0..4 {
+            let fanned = e.fan_out(&at.plan, &ALL_DEVICES, Precision::Fp32);
+            assert_eq!(fanned.len(), ALL_DEVICES.len());
+        }
+        assert_eq!(e.stats().workers, 3, "pool persists across calls");
+    }
+
+    #[test]
+    fn predict_trace_compat_path_matches_cached_plan_path() {
+        let e = engine();
+        let at = e.analyzed("mlp", 16, Device::T4).unwrap();
+        let builds = e.stats().plan_builds;
+        let compat = e.predict_trace(&at.trace, Device::V100, Precision::Fp32);
+        let cached = e.evaluate(&at.plan, Device::V100, Precision::Fp32);
+        assert_eq!(compat.run_time_ms().to_bits(), cached.run_time_ms().to_bits());
+        assert_eq!(
+            e.stats().plan_builds,
+            builds + 1,
+            "predict_trace compiles a one-off plan"
+        );
     }
 
     #[test]
@@ -512,6 +643,7 @@ mod tests {
         let s = e.stats();
         assert_eq!(s.trace_misses, 1);
         assert_eq!(s.trace_hits as usize, ALL_DEVICES.len());
+        assert_eq!(s.plan_builds, 1, "every evaluation reused the one plan");
     }
 
     #[test]

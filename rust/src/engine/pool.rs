@@ -1,0 +1,150 @@
+//! Persistent worker pool for multi-destination fan-out.
+//!
+//! The engine used to spawn-and-join a fresh set of `std::thread`s
+//! inside every `fan_out` call; under service load (every `rank` RPC
+//! fans out) that is thousands of thread spawns per second for work
+//! items that take microseconds each. This pool spawns its threads once
+//! at engine construction and feeds them closures over a channel.
+//!
+//! Sizing: [`crate::engine::PredictionEngine::with_workers`] (builder)
+//! or the `HABITAT_WORKERS` environment variable, defaulting to the
+//! machine's available parallelism capped at 8.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size pool of persistent worker threads executing boxed jobs
+/// in submission order (work-stealing is overkill: jobs are uniform
+/// per-destination evaluations).
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `size` (≥ 1) worker threads.
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("habitat-predict-{i}"))
+                    .spawn(move || loop {
+                        // Hold the receiver lock only while dequeuing,
+                        // never while running the job.
+                        let job = match rx.lock() {
+                            Ok(guard) => guard.recv(),
+                            Err(_) => break, // a job panicked mid-recv
+                        };
+                        match job {
+                            // Contain a panicking job (e.g. a
+                            // misbehaving external MlpBackend) to that
+                            // one request: the submitter sees its result
+                            // channel close, but the worker survives to
+                            // serve other requests — matching the old
+                            // per-call scoped threads, which never
+                            // outlived one request.
+                            Ok(job) => {
+                                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                            }
+                            Err(_) => break, // pool dropped
+                        }
+                    })
+                    .expect("spawn fan-out worker")
+            })
+            .collect();
+        WorkerPool { tx: Some(tx), workers }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit one job. Job panics are contained to the job (the worker
+    /// survives); the send itself cannot fail while the pool is alive.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool is alive until drop")
+            .send(Box::new(job))
+            .expect("fan-out workers alive");
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the channel lets each worker drain its queue and exit.
+        drop(self.tx.take());
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_job_across_workers() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.size(), 4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel::<usize>();
+        for i in 0..64 {
+            let counter = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                counter.fetch_add(1, Ordering::Relaxed);
+                tx.send(i).unwrap();
+            });
+        }
+        drop(tx);
+        let mut got: Vec<usize> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..64).collect::<Vec<_>>());
+        assert_eq!(counter.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn zero_size_is_clamped_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.size(), 1);
+        let (tx, rx) = channel::<u32>();
+        pool.execute(move || tx.send(7).unwrap());
+        assert_eq!(rx.recv().unwrap(), 7);
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_the_worker() {
+        let pool = WorkerPool::new(1);
+        pool.execute(|| panic!("one bad request"));
+        // The single worker must survive to run the next job.
+        let (tx, rx) = channel::<u32>();
+        pool.execute(move || tx.send(11).unwrap());
+        assert_eq!(rx.recv().unwrap(), 11);
+    }
+
+    #[test]
+    fn drop_drains_outstanding_jobs() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = WorkerPool::new(2);
+            for _ in 0..32 {
+                let counter = Arc::clone(&counter);
+                pool.execute(move || {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        } // Drop joins the workers after the queue drains.
+        assert_eq!(counter.load(Ordering::Relaxed), 32);
+    }
+}

@@ -15,19 +15,21 @@ use crate::util::stats;
 use crate::Result;
 
 /// Sweep one predictor variant. Traces come from the shared engine cache
-/// (tracked once across all variants); predictions use the variant's own
-/// configuration, which is exactly what the ablation isolates.
+/// (tracked once across all variants); each variant compiles its own
+/// plan per trace (the γ metrics policy is baked into the plan, which is
+/// exactly what the ablation isolates) and evaluates it per destination.
 fn sweep(engine: &PredictionEngine, predictor: &HybridPredictor) -> Result<f64> {
     let mut errs = Vec::new();
     for model in crate::models::MODEL_NAMES {
         let batch = crate::models::eval_batch_sizes(model)[1];
         for origin in [crate::Device::Rtx2070, crate::Device::P100] {
             let trace = engine.trace(model, batch, origin)?;
+            let plan = crate::plan::AnalyzedPlan::build(&trace, &predictor.metrics_policy);
             for dest in ALL_DEVICES {
                 if dest == origin {
                     continue;
                 }
-                let pred = predictor.predict(&trace, dest).run_time_ms();
+                let pred = predictor.evaluate(&plan, dest).run_time_ms();
                 errs.push(stats::ape(pred, ground_truth_ms(model, batch, dest)));
             }
         }

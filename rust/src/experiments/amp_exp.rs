@@ -38,9 +38,10 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         // Ground truth: the simulator running the AMP iteration on dest.
         let measured = sim.graph_time_ms(dest.spec(), &graph, Precision::Amp);
         // Habitat + Daydream from the origin's FP32 trace, through the
-        // engine's AMP prediction path.
-        let trace = ctx.engine().trace("resnet50", batch, origin)?;
-        let predicted = ctx.engine().predict_trace(&trace, dest, Precision::Amp).run_time_ms();
+        // engine's AMP prediction path (precomputed AMP factors in the
+        // compiled plan).
+        let analyzed = ctx.engine().analyzed("resnet50", batch, origin)?;
+        let predicted = ctx.engine().evaluate(&analyzed.plan, dest, Precision::Amp).run_time_ms();
         // Daydream alone, from the destination's own FP32 trace.
         let dest_trace = ctx.engine().trace("resnet50", batch, dest)?;
         let daydream = amp::amp_time_same_device(&dest_trace);

@@ -33,12 +33,12 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         let mut model_mlp_time = 0.0;
         let mut n = 0.0;
         for origin in ALL_DEVICES {
-            let trace = ctx.engine().trace(model, batch, origin)?;
+            let analyzed = ctx.engine().analyzed(model, batch, origin)?;
             for dest in ALL_DEVICES {
                 if dest == origin {
                     continue;
                 }
-                let pred = ctx.engine().predict_trace(&trace, dest, Precision::Fp32);
+                let pred = ctx.engine().evaluate(&analyzed.plan, dest, Precision::Fp32);
                 let mlp_ops = pred
                     .ops
                     .iter()

@@ -22,8 +22,9 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         &["model", "interconnect", "world", "iter_ms", "exposed_comm_ms", "throughput", "efficiency"],
     )?;
     for (model, batch) in [("resnet50", 32usize), ("gnmt", 32)] {
-        let trace = ctx.engine().trace(model, batch, origin)?;
-        let pred = ctx.engine().predict_trace(&trace, dest, Precision::Fp32);
+        let analyzed = ctx.engine().analyzed(model, batch, origin)?;
+        let trace = &analyzed.trace;
+        let pred = ctx.engine().evaluate(&analyzed.plan, dest, Precision::Fp32);
         for (ic_name, ic) in [("nvlink", Interconnect::NvLink), ("pcie3", Interconnect::Pcie3)] {
             println!("\n{model} bs={batch}/gpu on {dest} over {ic_name}:");
             println!(
@@ -32,7 +33,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
             );
             for world in [1usize, 2, 4, 8] {
                 let dp = predict_data_parallel(
-                    &trace,
+                    trace,
                     &pred,
                     &DataParallelConfig {
                         world,

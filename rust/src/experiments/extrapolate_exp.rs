@@ -21,8 +21,8 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     // Predict the fit points through the engine.
     let mut points = Vec::new();
     for &b in &fit_batches {
-        let trace = ctx.engine().trace("resnet50", b, origin)?;
-        let pred = ctx.engine().predict_trace(&trace, dest, Precision::Fp32).run_time_ms();
+        let analyzed = ctx.engine().analyzed("resnet50", b, origin)?;
+        let pred = ctx.engine().evaluate(&analyzed.plan, dest, Precision::Fp32).run_time_ms();
         points.push((b, pred));
     }
     let model = BatchExtrapolator::fit(&points);

@@ -15,10 +15,11 @@ use crate::{Precision, Result};
 pub fn run(ctx: &Ctx) -> Result<()> {
     println!("\n=== Fig. 1: peak-FLOPS heuristic vs Habitat (DCGAN bs=128 from T4) ===");
     let origin = Device::T4;
-    let trace = ctx.engine().trace("dcgan", 128, origin)?;
+    let analyzed = ctx.engine().analyzed("dcgan", 128, origin)?;
+    let trace = &analyzed.trace;
     let dests: Vec<Device> = ALL_DEVICES.into_iter().filter(|d| *d != origin).collect();
-    // One fan-out pass over the trace for all five destinations.
-    let preds = ctx.engine().fan_out(&trace, &dests, Precision::Fp32);
+    // One fan-out pass over the compiled plan for all five destinations.
+    let preds = ctx.engine().fan_out(&analyzed.plan, &dests, Precision::Fp32);
 
     let mut w = CsvWriter::create(
         ctx.csv_path("fig1"),
@@ -32,7 +33,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     let mut hab_errs = Vec::new();
     for (&dest, pred) in dests.iter().zip(&preds) {
         let measured = ground_truth_ms("dcgan", 128, dest);
-        let heur = heuristic::flops_ratio_prediction(&trace, dest);
+        let heur = heuristic::flops_ratio_prediction(trace, dest);
         let hab = pred.run_time_ms();
         let he = stats::ape(heur, measured);
         let ha = stats::ape(hab, measured);

@@ -26,20 +26,21 @@ pub fn run(ctx: &Ctx) -> Result<()> {
 
     for model in crate::models::MODEL_NAMES {
         for &batch in crate::models::eval_batch_sizes(model) {
-            // Track once per origin through the engine's cache, reuse
-            // for all destinations (and for any later experiment).
-            let mut traces = Vec::new();
+            // Track + analyze once per origin through the engine's
+            // cache; every destination below is a thin evaluation over
+            // the compiled plan (reused by any later experiment too).
+            let mut analyzed = Vec::new();
             for o in ALL_DEVICES {
-                traces.push((o, ctx.engine().trace(model, batch, o)?));
+                analyzed.push((o, ctx.engine().analyzed(model, batch, o)?));
             }
             for dest in ALL_DEVICES {
                 let measured = ground_truth_ms(model, batch, dest);
                 let mut dest_preds = Vec::new();
-                for (origin, trace) in &traces {
+                for (origin, at) in &analyzed {
                     if *origin == dest {
                         continue;
                     }
-                    let pred = ctx.engine().predict_trace(trace, dest, Precision::Fp32).run_time_ms();
+                    let pred = ctx.engine().evaluate(&at.plan, dest, Precision::Fp32).run_time_ms();
                     let err = stats::ape(pred, measured);
                     dest_preds.push(pred);
                     all_errs.push(err);

@@ -33,9 +33,9 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     for model in crate::models::MODEL_NAMES {
         let batch = crate::models::eval_batch_sizes(model)[1];
         let graph = crate::models::by_name(model, batch).unwrap();
-        let mut traces = Vec::new();
+        let mut analyzed = Vec::new();
         for o in ALL_DEVICES {
-            traces.push((o, ctx.engine().trace(model, batch, o)?));
+            analyzed.push((o, ctx.engine().analyzed(model, batch, o)?));
         }
         for dest in ALL_DEVICES {
             // Per-op ground truth on the destination (a custom-simulator
@@ -43,11 +43,11 @@ pub fn run(ctx: &Ctx) -> Result<()> {
             let dest_trace = OperationTracker::new(dest)
                 .with_simulator(sim.clone())
                 .track(&graph);
-            for (origin, trace) in &traces {
+            for (origin, at) in &analyzed {
                 if *origin == dest {
                     continue;
                 }
-                let pred = ctx.engine().predict_trace(trace, dest, Precision::Fp32);
+                let pred = ctx.engine().evaluate(&at.plan, dest, Precision::Fp32);
                 for (p, t) in pred.ops.iter().zip(&dest_trace.ops) {
                     let measured = t.total_ms();
                     if measured <= 0.0 {

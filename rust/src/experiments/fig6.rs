@@ -29,9 +29,9 @@ pub fn run(ctx: &Ctx) -> Result<()> {
 
     let mut errs = Vec::new();
     for &batch in batches {
-        let trace = ctx.engine().trace("gnmt", batch, origin)?;
-        // One fan-out pass over the cached trace for all three clouds.
-        let preds = ctx.engine().fan_out(&trace, &clouds, Precision::Fp32);
+        let analyzed = ctx.engine().analyzed("gnmt", batch, origin)?;
+        // One fan-out pass over the compiled plan for all three clouds.
+        let preds = ctx.engine().fan_out(&analyzed.plan, &clouds, Precision::Fp32);
         let base_measured = ground_truth_ms("gnmt", batch, origin);
         println!("\nbatch {batch}:  (P4000 measured {base_measured:.1} ms)");
         println!(

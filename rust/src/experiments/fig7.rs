@@ -22,8 +22,8 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     let dests: Vec<Device> = ALL_DEVICES.into_iter().filter(|d| *d != origin).collect();
     let mut errs = Vec::new();
     for batch in [64usize, 128] {
-        let trace = ctx.engine().trace("dcgan", batch, origin)?;
-        let preds = ctx.engine().fan_out(&trace, &dests, Precision::Fp32);
+        let analyzed = ctx.engine().analyzed("dcgan", batch, origin)?;
+        let preds = ctx.engine().fan_out(&analyzed.plan, &dests, Precision::Fp32);
         let base = ground_truth_ms("dcgan", batch, origin);
         println!("\nbatch {batch}:  (2080Ti measured {base:.1} ms)");
         println!("{:<10} {:>16} {:>16} {:>6}", "dest", "pred tput (norm)", "meas tput (norm)", "err%");

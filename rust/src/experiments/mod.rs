@@ -38,9 +38,10 @@ use crate::predict::HybridPredictor;
 use crate::Result;
 
 /// Shared context passed to every experiment. All predictions flow
-/// through one [`PredictionEngine`], so traces tracked by one experiment
-/// are reused by the next (`experiment all` tracks each
-/// (model, batch, origin) exactly once).
+/// through one [`PredictionEngine`], so traces tracked (and plans
+/// compiled) by one experiment are reused by the next (`experiment all`
+/// tracks and analyzes each (model, batch, origin) exactly once; every
+/// per-destination prediction is a thin plan evaluation).
 pub struct Ctx {
     engine: PredictionEngine,
     pub out_dir: String,

@@ -37,14 +37,26 @@
 //! println!("Pred. iter. exec. time: {:.2} ms", pred.run_time_ms());
 //! ```
 //!
-//! ## The prediction engine
+//! ## The prediction engine: track → analyze → evaluate
 //!
 //! Production callers go through the unified [`engine::PredictionEngine`]
-//! rather than composing tracker + predictor by hand. The engine memoizes
-//! tracked traces in a content-keyed LRU cache (repeated requests skip
-//! the tracking pipeline entirely), shares a process-wide occupancy/wave-
-//! size table between the simulator and wave scaling, and fans one cached
-//! trace out to *all* destination GPUs on a worker pool:
+//! rather than composing tracker + predictor by hand. The engine runs a
+//! three-stage pipeline (see `docs/ARCHITECTURE.md`):
+//!
+//! 1. **track** — one simulated training iteration produces the origin
+//!    [`Trace`] (the expensive, reusable step);
+//! 2. **analyze** — the trace is compiled once into a flat
+//!    [`plan::AnalyzedPlan`] that hoists every destination-independent
+//!    quantity: kernel launch metadata, wave sizes batched for all
+//!    `(launch shape, device)` pairs, policy-resolved roofline γ, AMP
+//!    factors, and MLP feature rows;
+//! 3. **evaluate** — each destination is a thin pass of scaling
+//!    arithmetic over the plan's arrays (no locking, hashing, or feature
+//!    recomputation in the fan-out loop).
+//!
+//! Trace and plan are memoized together in a content-keyed LRU cache
+//! (repeated requests skip tracking *and* analysis), and one cached plan
+//! fans out to *all* destination GPUs on a persistent worker pool:
 //!
 //! ```no_run
 //! use habitat::{engine::PredictionEngine, device::ALL_DEVICES, Device, Precision};
@@ -68,7 +80,8 @@
 //! hybrid scheme. The TCP front end ([`coordinator::PredictionService`])
 //! serves the same engine over newline-delimited JSON, including a `rank`
 //! request that returns every destination GPU ordered by cost-normalized
-//! throughput in a single RPC (see `docs/SERVICE.md`).
+//! throughput in a single RPC and a `stats` request exposing the
+//! trace/plan cache counters and pool size (see `docs/SERVICE.md`).
 
 pub mod cluster;
 pub mod coordinator;
@@ -80,6 +93,7 @@ pub mod experiments;
 pub mod lowering;
 pub mod models;
 pub mod opgraph;
+pub mod plan;
 pub mod predict;
 pub mod runtime;
 pub mod sim;
@@ -89,6 +103,7 @@ pub mod util;
 pub use device::{Arch, Device, GpuSpec};
 pub use engine::PredictionEngine;
 pub use opgraph::{Graph, Op, OpKind};
+pub use plan::{AnalyzedPlan, AnalyzedTrace};
 pub use predict::{HybridPredictor, PredictedTrace};
 pub use sim::Precision;
 pub use tracker::{OperationTracker, Trace};

@@ -102,26 +102,31 @@ fn main() -> anyhow::Result<()> {
             } else {
                 PredictionEngine::from_artifacts(&args.get("artifacts", "artifacts"))?
             };
-            // Trace source: a saved trace file, or track a zoo model
-            // through the engine (memoized for the process lifetime).
-            let trace: std::sync::Arc<habitat::Trace> = if args.has("trace") {
-                std::sync::Arc::new(habitat::Trace::load(args.get("trace", ""))?)
-            } else {
-                let model = args.get("model", "resnet50");
-                let batch = args.get_usize("batch", 32)?;
-                let origin = parse_device(&args.get("origin", "rtx2070"))?;
-                let graph = models::by_name(&model, batch)
-                    .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
-                if !habitat::opgraph::memory::fits(&graph, dest, Precision::Fp32) {
-                    eprintln!(
-                        "warning: {model} at batch {batch} likely exceeds {dest}'s memory ({:.1} GiB needed)",
-                        habitat::opgraph::memory::estimate(&graph, Precision::Fp32).total_gib()
-                    );
-                }
-                engine.trace(&model, batch, origin)?
-            };
+            // Trace source: a saved trace file (compiled into a one-off
+            // plan), or a zoo model tracked + analyzed through the
+            // engine (memoized for the process lifetime).
+            let (trace, plan): (std::sync::Arc<habitat::Trace>, std::sync::Arc<habitat::AnalyzedPlan>) =
+                if args.has("trace") {
+                    let trace = std::sync::Arc::new(habitat::Trace::load(args.get("trace", ""))?);
+                    let plan = engine.analyze(&trace);
+                    (trace, plan)
+                } else {
+                    let model = args.get("model", "resnet50");
+                    let batch = args.get_usize("batch", 32)?;
+                    let origin = parse_device(&args.get("origin", "rtx2070"))?;
+                    let graph = models::by_name(&model, batch)
+                        .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
+                    if !habitat::opgraph::memory::fits(&graph, dest, Precision::Fp32) {
+                        eprintln!(
+                            "warning: {model} at batch {batch} likely exceeds {dest}'s memory ({:.1} GiB needed)",
+                            habitat::opgraph::memory::estimate(&graph, Precision::Fp32).total_gib()
+                        );
+                    }
+                    let analyzed = engine.analyzed(&model, batch, origin)?;
+                    (analyzed.trace, analyzed.plan)
+                };
             let precision = if args.has("amp") { Precision::Amp } else { Precision::Fp32 };
-            let pred = engine.predict_trace(&trace, dest, precision);
+            let pred = engine.evaluate(&plan, dest, precision);
             println!(
                 "{} (batch {}): measured on {} = {:.2} ms",
                 trace.model,

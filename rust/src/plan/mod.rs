@@ -1,0 +1,499 @@
+//! The compiled-plan IR: everything destination-independent, hoisted.
+//!
+//! Habitat's core loop (Eq. 1/2, §3.3) scales every kernel of an origin
+//! trace onto each destination GPU. The scaling itself is cheap
+//! arithmetic — but the naive pipeline re-pays destination-independent
+//! work inside the per-destination loop: wave-size lookups through the
+//! global [`crate::engine::memo::WaveTable`] mutex, roofline γ selection
+//! per kernel per destination, and MLP feature-vector construction per
+//! op per destination. When one trace fans out to N GPUs per `rank`
+//! RPC, that per-destination cost is the product that multiplies.
+//!
+//! [`AnalyzedPlan`] is the fix: a flat structure-of-arrays arena built
+//! **once** per trace that hoists everything that does not depend on the
+//! destination *choice*:
+//!
+//! * per-kernel launch metadata (grid blocks, measured time, arithmetic
+//!   intensity, AMP/tensor-core eligibility) in one flat arena, with
+//!   op→kernel index ranges for the forward and backward passes;
+//! * wave sizes for **all** `(launch shape, device)` pairs, resolved in
+//!   one batched pass at build time — the evaluate loop never touches
+//!   the wave table (no lock, no hash);
+//! * effective γ per `(kernel, device)` with the metrics-availability
+//!   policy (§4.2) baked in at build time;
+//! * the Daydream AMP factor per `(op, device)` (§6.1.2);
+//! * per-op MLP feature vectors, grouped by MLP family in dispatch
+//!   order.
+//!
+//! The per-destination evaluators
+//! ([`crate::predict::HybridPredictor::evaluate`]) are thin loops over
+//! these arrays: pure scaling arithmetic, bit-identical to the legacy
+//! trace-walking path ([`crate::predict::HybridPredictor::predict`]),
+//! which is kept as the reference implementation and pinned against the
+//! plan path by the golden regression tests.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+use crate::device::{Device, LaunchConfig, ALL_DEVICES};
+use crate::engine::memo::WaveTable;
+use crate::lowering::Precision;
+use crate::opgraph::MlpOp;
+use crate::predict::roofline::{self, MetricsPolicy};
+use crate::predict::{amp, PredictedOp, PredictedTrace};
+use crate::tracker::Trace;
+
+/// A trace and its compiled plan, produced together by
+/// [`crate::tracker::OperationTracker::track_analyzed`] and cached
+/// together by the engine. Cloning is two `Arc` bumps.
+#[derive(Clone)]
+pub struct AnalyzedTrace {
+    pub trace: Arc<Trace>,
+    pub plan: Arc<AnalyzedPlan>,
+}
+
+/// One MLP dispatch group: every op of the trace predicted by the same
+/// MLP family, in trace order, with its feature rows prebuilt.
+#[derive(Debug, Clone)]
+pub struct MlpGroup {
+    pub op: MlpOp,
+    /// Positions (in plan-op order) of the ops this group overwrites.
+    pub slots: Vec<usize>,
+    /// One feature row per slot (see [`crate::opgraph::Op::mlp_features`]).
+    pub features: Vec<Vec<f64>>,
+}
+
+/// The flat, destination-independent compilation of one tracked trace.
+///
+/// All per-device tables are dense over [`ALL_DEVICES`], indexed by
+/// [`Device::index`]; per-kernel arrays are flattened in prediction
+/// order (for each op: forward kernels, then backward kernels).
+pub struct AnalyzedPlan {
+    pub model: String,
+    pub batch_size: usize,
+    pub origin: Device,
+    /// Precision the origin trace was *tracked* at.
+    pub precision: Precision,
+    /// Measured iteration time on the origin, ms.
+    pub origin_run_time_ms: f64,
+
+    // --- per-op arrays (len = n_ops) --------------------------------
+    op_index: Vec<usize>,
+    op_name: Vec<String>,
+    op_short_name: Vec<&'static str>,
+    /// Flat-kernel range starts; `kern_start[o]..kern_fwd_end[o]` is the
+    /// op's forward pass, `kern_fwd_end[o]..kern_end[o]` its backward.
+    kern_start: Vec<u32>,
+    kern_fwd_end: Vec<u32>,
+    kern_end: Vec<u32>,
+
+    // --- per-kernel arrays (len = n_kernels) ------------------------
+    time_ms: Vec<f64>,
+    /// Grid blocks (`B` of Eq. 1), clamped to ≥ 1.
+    blocks: Vec<u64>,
+    /// Index into the deduplicated launch-shape tables.
+    shape_idx: Vec<u32>,
+
+    // --- per-shape arrays (len = n_shapes) --------------------------
+    /// Wave size on the origin device, clamped to ≥ 1.
+    wave_origin: Vec<u64>,
+    /// Wave size on every device: `[device.index() * n_shapes + shape]`.
+    wave_dest: Vec<u64>,
+
+    // --- per-(device, kernel) / per-(device, op) tables -------------
+    /// Effective γ with the metrics policy baked in (γ = 1 fallback for
+    /// unprofiled kernels): `[device.index() * n_kernels + kernel]`.
+    gamma: Vec<f64>,
+    /// Daydream AMP factor per op: `[device.index() * n_ops + op]`.
+    amp_op_factor: Vec<f64>,
+
+    // --- MLP dispatch -----------------------------------------------
+    mlp_groups: Vec<MlpGroup>,
+}
+
+impl AnalyzedPlan {
+    /// Compile a tracked trace into a plan. `policy` is the metrics-
+    /// availability policy of the predictor that will evaluate the plan
+    /// (γ selection is baked in here, so the plan must be rebuilt if the
+    /// policy changes).
+    ///
+    /// This is the one place the pipeline touches the shared
+    /// [`WaveTable`]: wave sizes for every `(launch shape, device)` pair
+    /// are resolved in a single batched pass.
+    pub fn build(trace: &Trace, policy: &MetricsPolicy) -> AnalyzedPlan {
+        let n_ops = trace.ops.len();
+        let profiled_set = policy.profiled_kernels(trace);
+
+        let mut op_index = Vec::with_capacity(n_ops);
+        let mut op_name = Vec::with_capacity(n_ops);
+        let mut op_short_name = Vec::with_capacity(n_ops);
+        let mut kern_start = Vec::with_capacity(n_ops);
+        let mut kern_fwd_end = Vec::with_capacity(n_ops);
+        let mut kern_end = Vec::with_capacity(n_ops);
+
+        let mut time_ms = Vec::new();
+        let mut blocks = Vec::new();
+        let mut shape_idx: Vec<u32> = Vec::new();
+        let mut profiled: Vec<bool> = Vec::new();
+        let mut intensity: Vec<f64> = Vec::new();
+        let mut tensor_core: Vec<bool> = Vec::new();
+
+        // Launch-shape dedup: wave sizes depend only on this projection
+        // of the launch configuration (grid size excluded).
+        let mut shape_of: HashMap<(u32, u32, u32), u32> = HashMap::new();
+        let mut shapes: Vec<LaunchConfig> = Vec::new();
+
+        let mut mlp_items: BTreeMap<MlpOp, (Vec<usize>, Vec<Vec<f64>>)> = BTreeMap::new();
+
+        for (slot, t) in trace.ops.iter().enumerate() {
+            op_index.push(t.index);
+            op_name.push(t.op.name.clone());
+            op_short_name.push(t.op.kind.short_name());
+            kern_start.push(time_ms.len() as u32);
+            for (pass_idx, pass) in [&t.fwd, &t.bwd].into_iter().enumerate() {
+                for m in pass {
+                    let launch = &m.kernel.launch;
+                    let key = (
+                        launch.threads_per_block,
+                        launch.regs_per_thread,
+                        launch.smem_per_block,
+                    );
+                    let si = *shape_of.entry(key).or_insert_with(|| {
+                        shapes.push(*launch);
+                        (shapes.len() - 1) as u32
+                    });
+                    time_ms.push(m.time_ms);
+                    blocks.push(launch.grid_blocks.max(1));
+                    shape_idx.push(si);
+                    profiled.push(
+                        profiled_set
+                            .as_ref()
+                            .map_or(true, |set| set.contains(&roofline::cache_key(&m.kernel))),
+                    );
+                    intensity.push(m.kernel.arith_intensity());
+                    tensor_core.push(m.kernel.tensor_core_eligible);
+                }
+                if pass_idx == 0 {
+                    kern_fwd_end.push(time_ms.len() as u32);
+                }
+            }
+            kern_end.push(time_ms.len() as u32);
+
+            if let Some((mlp_op, features)) = t.op.mlp_features() {
+                let entry = mlp_items.entry(mlp_op).or_default();
+                entry.0.push(slot);
+                entry.1.push(features);
+            }
+        }
+
+        let n_kernels = time_ms.len();
+        let n_shapes = shapes.len();
+        let n_devices = ALL_DEVICES.len();
+
+        // Batched wave-size resolution: every (shape, device) pair, one
+        // pass, through the shared memo table (so the simulator and any
+        // concurrent engine still benefit from the same entries).
+        let table = WaveTable::global();
+        let origin_spec = trace.origin.spec();
+        let wave_origin: Vec<u64> = shapes
+            .iter()
+            .map(|s| table.wave_size(origin_spec, s).max(1))
+            .collect();
+        let mut wave_dest = Vec::with_capacity(n_devices * n_shapes);
+        for dev in ALL_DEVICES {
+            let spec = dev.spec();
+            for s in &shapes {
+                wave_dest.push(table.wave_size(spec, s).max(1));
+            }
+        }
+
+        // Per-device tables, one roofline pass each: the raw γ per
+        // kernel feeds both the policy-masked γ table (γ = 1 fallback
+        // for unprofiled kernels — identical to the legacy
+        // per-destination selection) and the Daydream AMP factor per op
+        // (the time-weighted mean of per-kernel AMP factors, exactly as
+        // `predict::amp::amp_transform` computes it — the AMP transform
+        // always uses the raw γ, never the fallback).
+        let mut gamma = Vec::with_capacity(n_devices * n_kernels);
+        let mut amp_op_factor = Vec::with_capacity(n_devices * n_ops);
+        let mut raw_gamma = vec![0.0f64; n_kernels];
+        for dev in ALL_DEVICES {
+            let spec = dev.spec();
+            for k in 0..n_kernels {
+                let g = roofline::gamma(intensity[k], spec);
+                raw_gamma[k] = g;
+                gamma.push(if profiled[k] { g } else { 1.0 });
+            }
+            for o in 0..n_ops {
+                let (start, mid, end) = (
+                    kern_start[o] as usize,
+                    kern_fwd_end[o] as usize,
+                    kern_end[o] as usize,
+                );
+                let fwd_ms: f64 = time_ms[start..mid].iter().sum();
+                let bwd_ms: f64 = time_ms[mid..end].iter().sum();
+                let total = fwd_ms + bwd_ms;
+                if total <= 0.0 {
+                    amp_op_factor.push(1.0);
+                    continue;
+                }
+                let weighted: f64 = (start..end)
+                    .map(|k| amp::amp_factor(raw_gamma[k], tensor_core[k], spec) * time_ms[k])
+                    .sum();
+                amp_op_factor.push(weighted / total);
+            }
+        }
+
+        let mlp_groups = mlp_items
+            .into_iter()
+            .map(|(op, (slots, features))| MlpGroup { op, slots, features })
+            .collect();
+
+        AnalyzedPlan {
+            model: trace.model.clone(),
+            batch_size: trace.batch_size,
+            origin: trace.origin,
+            precision: trace.precision,
+            origin_run_time_ms: trace.run_time_ms(),
+            op_index,
+            op_name,
+            op_short_name,
+            kern_start,
+            kern_fwd_end,
+            kern_end,
+            time_ms,
+            blocks,
+            shape_idx,
+            wave_origin,
+            wave_dest,
+            gamma,
+            amp_op_factor,
+            mlp_groups,
+        }
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.op_index.len()
+    }
+
+    pub fn n_kernels(&self) -> usize {
+        self.time_ms.len()
+    }
+
+    pub fn n_shapes(&self) -> usize {
+        self.wave_origin.len()
+    }
+
+    pub fn op_index(&self, op: usize) -> usize {
+        self.op_index[op]
+    }
+
+    pub fn op_name(&self, op: usize) -> &str {
+        &self.op_name[op]
+    }
+
+    pub fn op_short_name(&self, op: usize) -> &'static str {
+        self.op_short_name[op]
+    }
+
+    /// The op's flat kernel range (forward followed by backward).
+    pub fn kernel_range(&self, op: usize) -> std::ops::Range<usize> {
+        self.kern_start[op] as usize..self.kern_end[op] as usize
+    }
+
+    /// The op's forward/backward boundary within [`Self::kernel_range`].
+    pub fn fwd_end(&self, op: usize) -> usize {
+        self.kern_fwd_end[op] as usize
+    }
+
+    pub fn kernel_time_ms(&self, kernel: usize) -> f64 {
+        self.time_ms[kernel]
+    }
+
+    pub fn kernel_blocks(&self, kernel: usize) -> u64 {
+        self.blocks[kernel]
+    }
+
+    /// Wave size of a kernel's launch shape on the origin device.
+    pub fn wave_origin(&self, kernel: usize) -> u64 {
+        self.wave_origin[self.shape_idx[kernel] as usize]
+    }
+
+    /// Wave size of a kernel's launch shape on `dest` (precomputed).
+    pub fn wave_dest(&self, kernel: usize, dest: Device) -> u64 {
+        self.wave_dest[dest.index() * self.n_shapes() + self.shape_idx[kernel] as usize]
+    }
+
+    /// Effective γ of a kernel on `dest` (policy fallback baked in).
+    pub fn gamma(&self, kernel: usize, dest: Device) -> f64 {
+        self.gamma[dest.index() * self.n_kernels() + kernel]
+    }
+
+    pub fn mlp_groups(&self) -> &[MlpGroup] {
+        &self.mlp_groups
+    }
+
+    /// Apply the precomputed Daydream AMP transformation (§6.1.2) to an
+    /// FP32 prediction of this plan on `pred.dest`, in place.
+    /// Bit-identical to [`amp::amp_transform`] over the source trace.
+    pub fn apply_amp(&self, pred: &mut PredictedTrace) {
+        let base = pred.dest.index() * self.n_ops();
+        for (o, op) in pred.ops.iter_mut().enumerate() {
+            op.time_ms *= self.amp_op_factor[base + o];
+        }
+    }
+
+    /// A freshly initialized per-op output vector: every op wave-scaled
+    /// by default, times zeroed. Shared by the evaluators.
+    pub(crate) fn blank_ops(&self) -> Vec<PredictedOp> {
+        (0..self.n_ops())
+            .map(|o| PredictedOp {
+                index: self.op_index[o],
+                name: self.op_name[o].clone(),
+                short_name: self.op_short_name[o].to_string(),
+                time_ms: 0.0,
+                method: crate::predict::PredictionMethod::WaveScaling,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opgraph::{EwKind, Op, OpKind};
+    use crate::tracker::OperationTracker;
+
+    fn toy_trace(origin: Device) -> Trace {
+        let mut g = crate::Graph::new("toy", 16);
+        g.push(Op::new(
+            "conv",
+            OpKind::Conv2d {
+                in_ch: 64,
+                out_ch: 64,
+                kernel: 3,
+                stride: 1,
+                padding: 1,
+                bias: false,
+            },
+            vec![16, 64, 32, 32],
+        ));
+        g.push(Op::new("act", OpKind::Elementwise { kind: EwKind::Relu }, vec![16, 64, 32, 32]));
+        g.push(Op::new(
+            "fc",
+            OpKind::Linear {
+                in_features: 256,
+                out_features: 128,
+                bias: true,
+            },
+            vec![16, 256],
+        ));
+        OperationTracker::new(origin).track(&g)
+    }
+
+    #[test]
+    fn flat_arena_covers_every_kernel_in_order() {
+        let trace = toy_trace(Device::T4);
+        let plan = AnalyzedPlan::build(&trace, &MetricsPolicy::default());
+        assert_eq!(plan.n_ops(), trace.ops.len());
+        let total_kernels: usize = trace.ops.iter().map(|o| o.fwd.len() + o.bwd.len()).sum();
+        assert_eq!(plan.n_kernels(), total_kernels);
+        // Ranges partition [0, n_kernels) in op order with the fwd/bwd
+        // boundary where the trace puts it.
+        let mut cursor = 0usize;
+        for (o, t) in trace.ops.iter().enumerate() {
+            let r = plan.kernel_range(o);
+            assert_eq!(r.start, cursor);
+            assert_eq!(plan.fwd_end(o) - r.start, t.fwd.len());
+            assert_eq!(r.end - r.start, t.fwd.len() + t.bwd.len());
+            for (k, m) in r.clone().zip(t.fwd.iter().chain(&t.bwd)) {
+                assert_eq!(plan.kernel_time_ms(k), m.time_ms);
+                assert_eq!(plan.kernel_blocks(k), m.kernel.launch.grid_blocks.max(1));
+            }
+            cursor = r.end;
+        }
+        assert_eq!(cursor, plan.n_kernels());
+    }
+
+    #[test]
+    fn wave_sizes_match_the_memo_table_for_every_device() {
+        let trace = toy_trace(Device::P4000);
+        let plan = AnalyzedPlan::build(&trace, &MetricsPolicy::All);
+        let table = WaveTable::global();
+        for (o, t) in trace.ops.iter().enumerate() {
+            for (k, m) in plan.kernel_range(o).zip(t.fwd.iter().chain(&t.bwd)) {
+                assert_eq!(
+                    plan.wave_origin(k),
+                    table.wave_size(trace.origin.spec(), &m.kernel.launch).max(1)
+                );
+                for dev in ALL_DEVICES {
+                    assert_eq!(
+                        plan.wave_dest(k, dev),
+                        table.wave_size(dev.spec(), &m.kernel.launch).max(1),
+                        "{dev} wave size"
+                    );
+                }
+            }
+        }
+        assert!(plan.n_shapes() <= plan.n_kernels());
+    }
+
+    #[test]
+    fn gamma_bakes_in_the_metrics_policy() {
+        let trace = toy_trace(Device::V100);
+        // Cold cache: every kernel takes the γ = 1 fallback.
+        let cold = AnalyzedPlan::build(&trace, &MetricsPolicy::None);
+        for dev in ALL_DEVICES {
+            for k in 0..cold.n_kernels() {
+                assert_eq!(cold.gamma(k, dev), 1.0);
+            }
+        }
+        // Warm cache: γ comes from the roofline for every kernel.
+        let warm = AnalyzedPlan::build(&trace, &MetricsPolicy::All);
+        let mut non_unit = 0;
+        for (o, t) in trace.ops.iter().enumerate() {
+            for (k, m) in warm.kernel_range(o).zip(t.fwd.iter().chain(&t.bwd)) {
+                for dev in ALL_DEVICES {
+                    let expect = roofline::gamma(m.kernel.arith_intensity(), dev.spec());
+                    assert_eq!(warm.gamma(k, dev), expect);
+                    if expect != 1.0 {
+                        non_unit += 1;
+                    }
+                }
+            }
+        }
+        assert!(non_unit > 0, "a GEMM-bearing trace must have γ < 1 kernels");
+    }
+
+    #[test]
+    fn mlp_groups_match_trace_features_in_dispatch_order() {
+        let trace = toy_trace(Device::T4);
+        let plan = AnalyzedPlan::build(&trace, &MetricsPolicy::default());
+        // conv + linear ⇒ two groups, BTreeMap (MlpOp) order.
+        assert_eq!(plan.mlp_groups().len(), 2);
+        assert!(plan.mlp_groups().windows(2).all(|w| w[0].op < w[1].op));
+        for group in plan.mlp_groups() {
+            assert_eq!(group.slots.len(), group.features.len());
+            for (&slot, feat) in group.slots.iter().zip(&group.features) {
+                let (op, expect) = trace.ops[slot].op.mlp_features().unwrap();
+                assert_eq!(op, group.op);
+                assert_eq!(*feat, expect);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_metadata_mirrors_the_trace() {
+        let trace = toy_trace(Device::Rtx2070);
+        let plan = AnalyzedPlan::build(&trace, &MetricsPolicy::default());
+        assert_eq!(plan.model, trace.model);
+        assert_eq!(plan.batch_size, trace.batch_size);
+        assert_eq!(plan.origin, trace.origin);
+        assert_eq!(plan.origin_run_time_ms.to_bits(), trace.run_time_ms().to_bits());
+        for (o, t) in trace.ops.iter().enumerate() {
+            assert_eq!(plan.op_index(o), t.index);
+            assert_eq!(plan.op_name(o), t.op.name);
+            assert_eq!(plan.op_short_name(o), t.op.kind.short_name());
+        }
+    }
+}

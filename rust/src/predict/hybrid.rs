@@ -234,6 +234,88 @@ impl HybridPredictor {
             mlp_fallbacks: fallbacks,
         }
     }
+
+    /// Thin per-destination evaluator over a compiled
+    /// [`crate::plan::AnalyzedPlan`]: pure scaling arithmetic over the
+    /// plan's flat arrays — no wave-table lock, no hashing, no feature
+    /// recomputation. Bit-identical to [`HybridPredictor::predict`] on
+    /// the trace the plan was built from (provided the plan was built
+    /// with this predictor's metrics policy; γ selection is baked into
+    /// the plan at build time).
+    pub fn evaluate(&self, plan: &crate::plan::AnalyzedPlan, dest: Device) -> PredictedTrace {
+        let origin_spec = plan.origin.spec();
+        let dest_spec = dest.spec();
+        let bw = origin_spec.achieved_bw_bytes() / dest_spec.achieved_bw_bytes();
+        let clock = origin_spec.boost_clock_mhz / dest_spec.boost_clock_mhz;
+
+        // Pass 1: wave-scale every op from the precomputed arrays.
+        let mut ops = plan.blank_ops();
+        for (slot, op) in ops.iter_mut().enumerate() {
+            let mut wave_ms = 0.0;
+            for k in plan.kernel_range(slot) {
+                let g = plan.gamma(k, dest);
+                let r = wave::ratios_from_parts(
+                    bw,
+                    clock,
+                    plan.kernel_blocks(k),
+                    plan.wave_origin(k),
+                    plan.wave_dest(k, dest),
+                );
+                wave_ms += if self.use_eq1 {
+                    wave::scale_eq1(plan.kernel_time_ms(k), &r, g)
+                } else {
+                    wave::scale_eq2(plan.kernel_time_ms(k), &r, g)
+                };
+            }
+            op.time_ms = wave_ms;
+        }
+
+        // Pass 2: batched MLP predictions overwrite kernel-varying ops,
+        // from the plan's prebuilt feature rows.
+        let mut fallbacks = 0;
+        if let Some(backend) = &self.mlp {
+            for group in plan.mlp_groups() {
+                match backend.predict_batch(group.op, &group.features, dest) {
+                    Ok(times) if times.len() == group.slots.len() => {
+                        for (&slot, ms) in group.slots.iter().zip(times) {
+                            if ms.is_finite() && ms > 0.0 {
+                                ops[slot].time_ms = ms;
+                                ops[slot].method = PredictionMethod::Mlp;
+                            } else {
+                                fallbacks += 1;
+                            }
+                        }
+                    }
+                    _ => fallbacks += group.slots.len(),
+                }
+            }
+        }
+
+        PredictedTrace {
+            model: plan.model.clone(),
+            batch_size: plan.batch_size,
+            origin: plan.origin,
+            dest,
+            ops,
+            mlp_fallbacks: fallbacks,
+        }
+    }
+
+    /// [`HybridPredictor::evaluate`] with the requested prediction
+    /// precision: FP32 directly, or the precomputed Daydream AMP
+    /// transformation composed on top (§6.1.2).
+    pub fn evaluate_with_precision(
+        &self,
+        plan: &crate::plan::AnalyzedPlan,
+        dest: Device,
+        precision: crate::lowering::Precision,
+    ) -> PredictedTrace {
+        let mut pred = self.evaluate(plan, dest);
+        if precision == crate::lowering::Precision::Amp {
+            plan.apply_amp(&mut pred);
+        }
+        pred
+    }
 }
 
 #[cfg(test)]
@@ -329,6 +411,78 @@ mod tests {
         let pred = HybridPredictor::with_mlp(Arc::new(NegativeBackend)).predict(&trace, Device::V100);
         assert_eq!(pred.mlp_fallbacks, 1);
         assert!(pred.run_time_ms() > 0.0);
+    }
+
+    #[test]
+    fn evaluate_matches_predict_bit_for_bit() {
+        let trace = toy_trace(Device::T4);
+        for policy in [
+            MetricsPolicy::All,
+            MetricsPolicy::None,
+            MetricsPolicy::Percentile(99.5),
+        ] {
+            for use_eq1 in [false, true] {
+                let p = HybridPredictor::wave_only()
+                    .with_metrics_policy(policy.clone())
+                    .with_eq1(use_eq1);
+                let plan = crate::plan::AnalyzedPlan::build(&trace, &p.metrics_policy);
+                for dest in crate::device::ALL_DEVICES {
+                    let legacy = p.predict(&trace, dest);
+                    let fast = p.evaluate(&plan, dest);
+                    assert_eq!(legacy.ops.len(), fast.ops.len());
+                    for (a, b) in legacy.ops.iter().zip(&fast.ops) {
+                        assert_eq!(
+                            a.time_ms.to_bits(),
+                            b.time_ms.to_bits(),
+                            "{dest} eq1={use_eq1} {policy:?} op {}: {} vs {}",
+                            a.name,
+                            a.time_ms,
+                            b.time_ms
+                        );
+                        assert_eq!(a.method, b.method);
+                        assert_eq!(a.name, b.name);
+                        assert_eq!(a.index, b.index);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn evaluate_dispatches_mlp_from_prebuilt_features() {
+        let trace = toy_trace(Device::T4);
+        let p = HybridPredictor::with_mlp(Arc::new(FixedBackend(42.0)));
+        let plan = crate::plan::AnalyzedPlan::build(&trace, &p.metrics_policy);
+        let legacy = p.predict(&trace, Device::V100);
+        let fast = p.evaluate(&plan, Device::V100);
+        assert_eq!(fast.mlp_fallbacks, legacy.mlp_fallbacks);
+        for (a, b) in legacy.ops.iter().zip(&fast.ops) {
+            assert_eq!(a.time_ms.to_bits(), b.time_ms.to_bits());
+            assert_eq!(a.method, b.method);
+        }
+        let conv = fast.ops.iter().find(|o| o.short_name == "conv2d").unwrap();
+        assert_eq!(conv.method, PredictionMethod::Mlp);
+        assert_eq!(conv.time_ms, 42.0);
+    }
+
+    #[test]
+    fn evaluate_amp_matches_amp_transform_bit_for_bit() {
+        let trace = toy_trace(Device::P4000);
+        let p = HybridPredictor::wave_only();
+        let plan = crate::plan::AnalyzedPlan::build(&trace, &p.metrics_policy);
+        for dest in crate::device::ALL_DEVICES {
+            let legacy =
+                crate::predict::amp::amp_transform(&p.predict(&trace, dest), &trace);
+            let fast = p.evaluate_with_precision(&plan, dest, crate::lowering::Precision::Amp);
+            for (a, b) in legacy.ops.iter().zip(&fast.ops) {
+                assert_eq!(
+                    a.time_ms.to_bits(),
+                    b.time_ms.to_bits(),
+                    "{dest} AMP op {}",
+                    a.name
+                );
+            }
+        }
     }
 
     #[test]

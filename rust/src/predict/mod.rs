@@ -7,6 +7,13 @@
 //!   kernel-varying ops.
 //! * [`heuristic`] — the peak-FLOPS-ratio baseline the paper argues
 //!   against (§2.3, Fig. 1).
+//!
+//! The hybrid predictor has two interchangeable paths: the legacy
+//! trace-walking [`HybridPredictor::predict`] (kept as the reference
+//! implementation) and the plan-based [`HybridPredictor::evaluate`],
+//! a thin per-destination loop over a compiled
+//! [`crate::plan::AnalyzedPlan`]. The two are bit-identical; the engine
+//! and every fan-out path use the plan route.
 //! * [`amp`] — mixed-precision prediction à la Daydream (§6.1.2).
 //! * [`extrapolate`] — batch-size extrapolation (§6.1.3).
 

@@ -50,6 +50,23 @@ pub fn ratios(launch: &LaunchConfig, origin: &GpuSpec, dest: &GpuSpec) -> WaveRa
     }
 }
 
+/// Assemble the ratios from already-resolved wave sizes — the lock-free
+/// path used by the plan evaluator ([`crate::plan::AnalyzedPlan`] batches
+/// every wave-size lookup at build time). `bw` and `clock` are the
+/// origin/destination ratios `D_o/D_d` and `C_o/C_d`; the caller is
+/// responsible for having clamped `w_origin`/`w_dest`/`blocks` to ≥ 1,
+/// exactly as [`ratios`] does.
+pub fn ratios_from_parts(bw: f64, clock: f64, blocks: u64, w_origin: u64, w_dest: u64) -> WaveRatios {
+    WaveRatios {
+        bw,
+        wave: w_origin as f64 / w_dest as f64,
+        clock,
+        blocks,
+        w_origin,
+        w_dest,
+    }
+}
+
 /// Eq. 2 — the production path.
 pub fn scale_eq2(time_origin_ms: f64, r: &WaveRatios, gamma: f64) -> f64 {
     debug_assert!((0.0..=1.0).contains(&gamma));

@@ -126,6 +126,24 @@ impl OperationTracker {
         self.origin
     }
 
+    /// Track **and compile**: one pass produces both the measured
+    /// [`Trace`] and its destination-independent
+    /// [`crate::plan::AnalyzedPlan`], sharing the
+    /// [`lowering::lower_graph`] output (the kernels measured here are
+    /// exactly what the plan flattens — the predictors never re-derive
+    /// the lowering). `policy` is the metrics-availability policy of the
+    /// predictor that will evaluate the plan (baked into the plan's γ
+    /// tables).
+    pub fn track_analyzed(
+        &self,
+        graph: &Graph,
+        policy: &crate::predict::MetricsPolicy,
+    ) -> crate::plan::AnalyzedTrace {
+        let trace = std::sync::Arc::new(self.track(graph));
+        let plan = std::sync::Arc::new(crate::plan::AnalyzedPlan::build(&trace, policy));
+        crate::plan::AnalyzedTrace { trace, plan }
+    }
+
     /// "Run" one training iteration of `graph` and record every operation.
     pub fn track(&self, graph: &Graph) -> Trace {
         let spec = self.origin.spec();

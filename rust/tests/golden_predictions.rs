@@ -1,0 +1,193 @@
+//! Golden-value regression tests for the plan-based prediction path.
+//!
+//! The plan refactor's contract: compiling a trace into an
+//! `AnalyzedPlan` and evaluating it per destination must be
+//! **bit-identical** to the legacy trace-walking path
+//! (`HybridPredictor::predict` + `amp_transform`), which is kept in-tree
+//! as the reference implementation. These tests pin the current
+//! `predict`/`rank` outputs for all five paper models across two
+//! origin→destination pairs and both precisions:
+//!
+//! 1. every engine (plan-path) prediction is compared bit-for-bit
+//!    against the independently computed reference path — this runs
+//!    unconditionally, everywhere, and is the primary regression guard;
+//! 2. the bit patterns are additionally pinned in
+//!    `tests/golden/wave_only.txt`. A missing file is blessed (written)
+//!    on first run and the comparison starts pinning from the next run
+//!    onward — commit the blessed file to make the pin durable across
+//!    fresh checkouts. Set `GOLDEN_REQUIRE=1` to make a missing file an
+//!    error instead (for environments that expect a committed pin), or
+//!    `GOLDEN_BLESS=1` to re-bless after an intentional numeric change.
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+use habitat::device::{Device, ALL_DEVICES};
+use habitat::engine::PredictionEngine;
+use habitat::predict::{amp, HybridPredictor};
+use habitat::tracker::Trace;
+use habitat::{models, Precision};
+
+/// The two origin→destination pairs the golden set covers: a
+/// Turing→Volta upgrade and a Pascal→Turing cloud move.
+const PAIRS: [(Device, Device); 2] = [
+    (Device::Rtx2070, Device::V100),
+    (Device::P4000, Device::T4),
+];
+
+const PRECISIONS: [(Precision, &str); 2] = [(Precision::Fp32, "fp32"), (Precision::Amp, "amp")];
+
+/// The smallest paper-evaluated batch size per model keeps the golden
+/// sweep fast while exercising every lowering family.
+fn golden_batch(model: &str) -> usize {
+    models::eval_batch_sizes(model)[0]
+}
+
+/// The legacy reference path, composed exactly as the pre-plan engine
+/// did: trace-walking wave scaling, then the Daydream AMP transform.
+fn reference_ms(predictor: &HybridPredictor, trace: &Trace, dest: Device, precision: Precision) -> f64 {
+    let fp32 = predictor.predict(trace, dest);
+    match precision {
+        Precision::Fp32 => fp32.run_time_ms(),
+        Precision::Amp => amp::amp_transform(&fp32, trace).run_time_ms(),
+    }
+}
+
+#[test]
+fn plan_path_reproduces_reference_path_bit_for_bit() {
+    let engine = PredictionEngine::wave_only();
+    let reference = HybridPredictor::wave_only();
+    for model in models::MODEL_NAMES {
+        let batch = golden_batch(model);
+        for (origin, dest) in PAIRS {
+            let trace: Arc<Trace> = engine.trace(model, batch, origin).unwrap();
+            for (precision, label) in PRECISIONS {
+                let plan_ms = engine
+                    .predict(model, batch, origin, dest, precision)
+                    .unwrap()
+                    .pred
+                    .run_time_ms();
+                let legacy_ms = reference_ms(&reference, &trace, dest, precision);
+                assert_eq!(
+                    plan_ms.to_bits(),
+                    legacy_ms.to_bits(),
+                    "{model} bs={batch} {origin}→{dest} {label}: plan {plan_ms} vs legacy {legacy_ms}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_path_matches_reference_per_op() {
+    // Per-op granularity on one model per lowering family keeps the
+    // failure message actionable when a single op family drifts.
+    let engine = PredictionEngine::wave_only();
+    let reference = HybridPredictor::wave_only();
+    for (model, origin, dest) in [
+        ("resnet50", Device::Rtx2070, Device::V100),
+        ("gnmt", Device::P4000, Device::T4),
+    ] {
+        let batch = golden_batch(model);
+        let analyzed = engine.analyzed(model, batch, origin).unwrap();
+        let fast = engine.evaluate(&analyzed.plan, dest, Precision::Fp32);
+        let legacy = reference.predict(&analyzed.trace, dest);
+        assert_eq!(fast.ops.len(), legacy.ops.len());
+        for (a, b) in legacy.ops.iter().zip(&fast.ops) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.method, b.method);
+            assert_eq!(
+                a.time_ms.to_bits(),
+                b.time_ms.to_bits(),
+                "{model} {origin}→{dest} op {}: legacy {} vs plan {}",
+                a.name,
+                a.time_ms,
+                b.time_ms
+            );
+        }
+    }
+}
+
+#[test]
+fn rank_reproduces_individual_reference_predictions() {
+    let engine = PredictionEngine::wave_only();
+    let reference = HybridPredictor::wave_only();
+    for (model, origin) in [("resnet50", Device::Rtx2070), ("dcgan", Device::P4000)] {
+        let batch = golden_batch(model);
+        for (precision, label) in PRECISIONS {
+            let ranking = engine
+                .rank(model, batch, origin, &ALL_DEVICES, precision)
+                .unwrap();
+            assert_eq!(ranking.entries.len(), ALL_DEVICES.len());
+            for entry in &ranking.entries {
+                let legacy_ms = reference_ms(&reference, &ranking.trace, entry.dest, precision);
+                assert_eq!(
+                    entry.pred.run_time_ms().to_bits(),
+                    legacy_ms.to_bits(),
+                    "{model} rank {label} → {}: ranked {} vs legacy {}",
+                    entry.dest,
+                    entry.pred.run_time_ms(),
+                    legacy_ms
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_bit_patterns_are_pinned() {
+    let engine = PredictionEngine::wave_only();
+    let mut lines = Vec::new();
+    for model in models::MODEL_NAMES {
+        let batch = golden_batch(model);
+        for (origin, dest) in PAIRS {
+            for (precision, label) in PRECISIONS {
+                let ms = engine
+                    .predict(model, batch, origin, dest, precision)
+                    .unwrap()
+                    .pred
+                    .run_time_ms();
+                let mut line = String::new();
+                write!(
+                    line,
+                    "{model},{batch},{},{},{label},{:016x}",
+                    origin.id(),
+                    dest.id(),
+                    ms.to_bits()
+                )
+                .unwrap();
+                lines.push(line);
+            }
+        }
+    }
+    let current = lines.join("\n") + "\n";
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden");
+    let path = dir.join("wave_only.txt");
+    if !path.exists() && std::env::var_os("GOLDEN_REQUIRE").is_some() {
+        panic!(
+            "GOLDEN_REQUIRE is set but {} is missing — run the suite once without \
+             GOLDEN_REQUIRE and commit the blessed file",
+            path.display()
+        );
+    }
+    let bless = std::env::var_os("GOLDEN_BLESS").is_some() || !path.exists();
+    if bless {
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(&path, &current).unwrap();
+        eprintln!(
+            "golden: blessed {} ({} entries) — commit this file to pin the values",
+            path.display(),
+            lines.len()
+        );
+        return;
+    }
+    let recorded = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        recorded, current,
+        "golden predictions drifted from {} — if the change is intentional, \
+         delete the file or re-run with GOLDEN_BLESS=1 to re-bless",
+        path.display()
+    );
+}

@@ -8,8 +8,8 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
 use habitat::coordinator::{
-    service, PredictionRequest, PredictionResponse, PredictionService, RankRequest, RankResponse,
-    Request,
+    service, Client, PredictionRequest, PredictionResponse, PredictionService, RankRequest,
+    RankResponse, Request, StatsResponse,
 };
 use habitat::device::ALL_DEVICES;
 use habitat::predict::HybridPredictor;
@@ -157,6 +157,51 @@ fn rank_equals_individual_predictions_over_the_wire() {
     let stats = svc.engine().stats();
     assert_eq!(stats.trace_misses, 1);
     assert_eq!(stats.trace_hits as usize, rank.ranking.len());
+}
+
+#[test]
+fn stats_over_the_wire_counts_cache_activity() {
+    let (addr, svc) = spawn_server();
+    let replies = send_lines(
+        &addr,
+        &[
+            "{\"stats\":true}".to_string(),
+            "{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}".to_string(),
+            "{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"p100\"}".to_string(),
+            "{\"stats\":true}".to_string(),
+        ],
+    );
+    assert_eq!(replies.len(), 4);
+    let cold = StatsResponse::from_json(&replies[0]).unwrap();
+    assert_eq!((cold.trace_hits, cold.trace_misses), (0, 0));
+    assert_eq!(cold.trace_entries, 0);
+    let warm = StatsResponse::from_json(&replies[3]).unwrap();
+    assert_eq!(warm.trace_misses, 1, "one tracking pass for both predicts");
+    assert_eq!(warm.trace_hits, 1);
+    assert_eq!(warm.trace_entries, 1);
+    assert_eq!(warm.plan_builds, 1, "the plan is compiled once, next to the trace");
+    assert_eq!(warm.workers, svc.engine().workers());
+    assert!(warm.workers >= 1);
+}
+
+#[test]
+fn client_stats_helper_roundtrips() {
+    let (addr, _svc) = spawn_server();
+    let mut client = Client::connect(&addr).unwrap();
+    let cold = client.stats().unwrap();
+    assert_eq!(cold.trace_misses, 0);
+    client
+        .predict(&PredictionRequest {
+            model: "mlp".into(),
+            batch: 16,
+            origin: "t4".into(),
+            dest: "v100".into(),
+            precision: None,
+        })
+        .unwrap();
+    let warm = client.stats().unwrap();
+    assert_eq!(warm.trace_misses, 1);
+    assert_eq!(warm.plan_builds, 1);
 }
 
 #[test]
