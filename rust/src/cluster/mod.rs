@@ -181,4 +181,25 @@ mod tests {
         let m = toy_matrix();
         assert!(schedule(&m, &Inventory::new()).is_empty());
     }
+
+    #[test]
+    fn runtime_registered_device_is_schedulable() {
+        // Open-world scheduling: a GPU registered at runtime joins the
+        // throughput matrix and can win placements like any built-in.
+        let d = crate::device::registry::register(&crate::device::NewDevice {
+            usd_per_hr: Some(3.5),
+            ..crate::device::NewDevice::new("sim-sched-xl", 128, 1700.0, 1600.0, 48.0, true)
+        })
+        .unwrap();
+        let predictor = HybridPredictor::wave_only();
+        let traces = vec![job("a", "mlp", 64)];
+        let m = ThroughputMatrix::build(&predictor, &traces, &[Device::T4, d]);
+        assert!(m.matrix[0].iter().all(|t| *t > 0.0));
+        // The big registered GPU out-throughputs a T4; with only it free,
+        // the job lands there.
+        let inv: Inventory = [(d, 1)].into();
+        let placements = schedule(&m, &inv);
+        assert_eq!(placements.len(), 1);
+        assert_eq!(placements[0].device, d);
+    }
 }

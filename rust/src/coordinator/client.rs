@@ -1,16 +1,28 @@
 //! Blocking TCP client for the prediction service.
 //!
-//! Speaks the newline-delimited JSON protocol of [`super::service`]:
-//! requests may be pipelined; responses return in order. Used by the
-//! service integration tests and available to downstream tools (e.g. a
-//! cluster scheduler running on a different host than the predictor).
+//! Speaks the newline-delimited JSON protocol of [`super::service`] —
+//! both the v1 bare-object requests and the v2 envelope ops
+//! (`register_device`, `submit_trace`, trace-id predictions): requests
+//! may be pipelined; responses return in order. Used by the service
+//! integration tests and available to downstream tools (e.g. a cluster
+//! scheduler running on a different host than the predictor).
+//!
+//! Every stream carries **read and write timeouts**
+//! ([`Client::DEFAULT_TIMEOUT`] unless overridden via
+//! [`Client::connect_with_timeout`]), so a hung or wedged server
+//! surfaces as an error instead of blocking the caller forever.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 use crate::coordinator::{
-    PredictionRequest, PredictionResponse, RankRequest, RankResponse, StatsResponse,
+    service, PredictionRequest, PredictionResponse, RankRequest, RankResponse, RegisteredDevice,
+    StatsResponse,
 };
+use crate::device::NewDevice;
+use crate::tracker::Trace;
+use crate::util::json;
 use crate::Result;
 
 /// A connected prediction-service client.
@@ -20,11 +32,28 @@ pub struct Client {
 }
 
 impl Client {
-    /// Connect to a running `habitat serve` instance.
+    /// Default per-operation socket timeout: generous enough for a cold
+    /// tracking pass on a loaded server, small enough that a wedged
+    /// server cannot hold a caller hostage.
+    pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
+
+    /// Connect to a running `habitat serve` instance with
+    /// [`Client::DEFAULT_TIMEOUT`] read/write timeouts.
     pub fn connect(addr: &str) -> Result<Self> {
+        Self::connect_with_timeout(addr, Some(Self::DEFAULT_TIMEOUT))
+    }
+
+    /// Connect with explicit read/write timeouts (`None` = block
+    /// forever, the pre-timeout behavior).
+    pub fn connect_with_timeout(addr: &str, timeout: Option<Duration>) -> Result<Self> {
         let stream = TcpStream::connect(addr)
             .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))?;
         stream.set_nodelay(true).ok();
+        if let Some(t) = timeout {
+            anyhow::ensure!(!t.is_zero(), "timeout must be nonzero (use None to block forever)");
+            stream.set_read_timeout(Some(t))?;
+            stream.set_write_timeout(Some(t))?;
+        }
         let reader = BufReader::new(stream.try_clone()?);
         Ok(Client { writer: stream, reader })
     }
@@ -64,10 +93,65 @@ impl Client {
     /// in-order caveat as [`Client::rank`]: drain any pipelined
     /// responses first.
     pub fn stats(&mut self) -> Result<StatsResponse> {
-        self.writer
-            .write_all(crate::coordinator::service::stats_request_json().as_bytes())?;
-        self.writer.write_all(b"\n")?;
+        self.send_line(&service::stats_request_json())?;
         StatsResponse::from_json(&self.recv_line()?)
+    }
+
+    // --- v2 envelope operations ----------------------------------------
+    //
+    // All of these share the in-order caveat of [`Client::rank`]: drain
+    // pipelined predict responses before calling them.
+
+    /// Register a new GPU on the server (`{"v":2,"op":"register_device"}`).
+    /// Idempotent for identical descriptions; a name collision with a
+    /// different spec is a server-side `conflict` error.
+    pub fn register_device(&mut self, device: &NewDevice) -> Result<RegisteredDevice> {
+        self.send_line(&service::v2_register_device_request(device))?;
+        RegisteredDevice::from_json(&self.recv_line()?)
+    }
+
+    /// Upload a locally profiled trace (`{"v":2,"op":"submit_trace"}`)
+    /// and return its content-hashed `trace_id`, which
+    /// [`Client::predict_trace`] / [`Client::rank_trace`] accept in
+    /// place of `model` + `batch` + `origin`.
+    pub fn submit_trace(&mut self, trace: &Trace) -> Result<String> {
+        self.send_line(&service::v2_submit_trace_request(trace))?;
+        let v = json::parse(&self.recv_line()?)?;
+        service::v2_check_error(&v)?;
+        Ok(v.req_str("trace_id")?.to_string())
+    }
+
+    /// Predict a previously submitted trace onto one destination.
+    pub fn predict_trace(
+        &mut self,
+        trace_id: &str,
+        dest: &str,
+        precision: Option<&str>,
+    ) -> Result<PredictionResponse> {
+        self.send_line(&service::v2_predict_trace_request(trace_id, dest, precision))?;
+        let line = self.recv_line()?;
+        service::v2_check_error(&json::parse(&line)?)?;
+        PredictionResponse::from_json(&line)
+    }
+
+    /// Rank destinations for a previously submitted trace (`None` dests
+    /// = every device in the server's registry).
+    pub fn rank_trace(
+        &mut self,
+        trace_id: &str,
+        dests: Option<&[String]>,
+        precision: Option<&str>,
+    ) -> Result<RankResponse> {
+        self.send_line(&service::v2_rank_trace_request(trace_id, dests, precision))?;
+        let line = self.recv_line()?;
+        service::v2_check_error(&json::parse(&line)?)?;
+        RankResponse::from_json(&line)
+    }
+
+    fn send_line(&mut self, line: &str) -> Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        Ok(())
     }
 
     fn recv_line(&mut self) -> Result<String> {
@@ -144,7 +228,12 @@ mod tests {
                 dests: None,
             })
             .unwrap();
-        assert_eq!(resp.ranking.len(), crate::device::ALL_DEVICES.len());
+        // Default dests = the whole registry: at least the built-ins
+        // (other tests may have registered more devices concurrently).
+        assert!(resp.ranking.len() >= crate::device::ALL_DEVICES.len());
+        for d in crate::device::ALL_DEVICES {
+            assert!(resp.ranking.iter().any(|r| r.dest == d.id()), "{d} missing");
+        }
         assert!(resp.ranking.iter().all(|r| r.iter_ms > 0.0));
         // A predict request on the same connection still works afterwards.
         let single = client.predict(&req("mlp", "v100")).unwrap();
@@ -170,5 +259,92 @@ mod tests {
         let mut client = Client::connect(&addr).unwrap();
         let err = client.predict(&req("not_a_model", "v100")).unwrap_err();
         assert!(err.to_string().contains("unknown model"), "{err}");
+    }
+
+    #[test]
+    fn connect_applies_socket_timeouts() {
+        let addr = spawn_server();
+        let client = Client::connect(&addr).unwrap();
+        assert_eq!(
+            client.writer.read_timeout().unwrap(),
+            Some(Client::DEFAULT_TIMEOUT)
+        );
+        assert_eq!(
+            client.writer.write_timeout().unwrap(),
+            Some(Client::DEFAULT_TIMEOUT)
+        );
+        let untimed = Client::connect_with_timeout(&addr, None).unwrap();
+        assert_eq!(untimed.writer.read_timeout().unwrap(), None);
+        assert!(Client::connect_with_timeout(&addr, Some(std::time::Duration::ZERO)).is_err());
+    }
+
+    #[test]
+    fn hung_server_times_out_instead_of_wedging() {
+        // A listener that accepts and then never replies.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let _hold = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            std::thread::sleep(std::time::Duration::from_secs(5));
+            drop(stream);
+        });
+        let mut client =
+            Client::connect_with_timeout(&addr, Some(std::time::Duration::from_millis(100)))
+                .unwrap();
+        let t0 = std::time::Instant::now();
+        let err = client.predict(&req("mlp", "v100")).unwrap_err();
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(3),
+            "read must time out promptly, got {err}"
+        );
+    }
+
+    #[test]
+    fn v2_register_submit_and_trace_predictions_over_tcp() {
+        let addr = spawn_server();
+        let mut client = Client::connect(&addr).unwrap();
+
+        // Register a new GPU and see it in a default rank.
+        let ack = client
+            .register_device(&NewDevice {
+                usd_per_hr: Some(0.55),
+                ..NewDevice::new("sim-cli7", 60, 1600.0, 500.0, 14.0, true)
+            })
+            .unwrap();
+        assert_eq!(ack.device, "sim-cli7");
+        let resp = client
+            .rank(&crate::coordinator::RankRequest {
+                model: "mlp".into(),
+                batch: 16,
+                origin: "t4".into(),
+                precision: None,
+                dests: None,
+            })
+            .unwrap();
+        assert!(resp.ranking.iter().any(|r| r.dest == "sim-cli7"));
+
+        // Conflicting re-registration is a structured error.
+        let err = client
+            .register_device(&NewDevice::new("sim-cli7", 61, 1600.0, 500.0, 14.0, true))
+            .unwrap_err();
+        assert!(err.to_string().contains("conflict"), "{err}");
+
+        // Upload a locally profiled (non-zoo) trace and predict it.
+        let mut g = crate::Graph::new("homegrown", 4);
+        g.push(crate::Op::new(
+            "fc",
+            crate::OpKind::Linear { in_features: 96, out_features: 48, bias: true },
+            vec![4, 96],
+        ));
+        let trace = crate::tracker::OperationTracker::new(crate::device::Device::T4).track(&g);
+        let id = client.submit_trace(&trace).unwrap();
+        assert!(id.starts_with("tr-"));
+        let pred = client.predict_trace(&id, "v100", None).unwrap();
+        assert_eq!(pred.model, "homegrown");
+        assert!(pred.iter_ms > 0.0);
+        let ranked = client.rank_trace(&id, None, Some("amp")).unwrap();
+        assert!(ranked.ranking.len() >= crate::device::ALL_DEVICES.len());
+        let unknown = client.predict_trace("tr-ffffffffffffffff", "v100", None).unwrap_err();
+        assert!(unknown.to_string().contains("unknown_trace"), "{unknown}");
     }
 }

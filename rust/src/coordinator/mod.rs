@@ -27,8 +27,11 @@ pub mod service;
 
 pub use client::Client;
 pub use service::{
-    PredictionRequest, PredictionResponse, PredictionService, RankRequest, RankResponse,
-    RankedDest, Request, StatsResponse,
+    v2_check_error, v2_error_json, v2_predict_model_request, v2_predict_trace_request,
+    v2_rank_trace_request, v2_register_device_request, v2_stats_request,
+    v2_submit_trace_request, PredictionRequest, PredictionResponse, PredictionService,
+    RankRequest, RankResponse, RankedDest, RegisteredDevice, Request, StatsResponse,
+    PROTOCOL_V2,
 };
 
 use crate::Result;

@@ -2,17 +2,25 @@
 //!
 //! Wire protocol: newline-delimited JSON, one request per line, one
 //! response per line, pipelining allowed (see `docs/SERVICE.md` for the
-//! full schema and worked `nc` examples). Two request shapes share the
-//! stream:
+//! full schema and worked `nc` examples). Two protocol generations
+//! share the stream:
+//!
+//! **v1** (bare objects, no `"v"` field — kept bit-identical):
 //!
 //! * **predict** — `{"model", "batch", "origin", "dest", "precision"?}`
 //!   → one destination's decision metrics;
 //! * **rank** — `{"rank": true, "model", "batch", "origin",
-//!   "precision"?, "dests"?}` → *every* destination GPU, ordered by
+//!   "precision"?, "dests"?}` → destination GPUs ordered by
 //!   cost-normalized throughput, from a single pass over one cached
 //!   trace (the paper's Fig. 1 decision as one RPC);
 //! * **stats** — `{"stats": true}` → the engine's trace/plan cache
 //!   hit & miss counters, wave-table counters, and fan-out pool size.
+//!
+//! **v2** (the open-world envelope, `{"v":2,"op":...}`): everything v1
+//! does, plus **register_device** (make a new GPU rankable at runtime)
+//! and **submit_trace** (predict arbitrary client-profiled workloads by
+//! content-hashed `trace_id`), with structured
+//! `{"error":{"code","message"}}` errors. See [`PredictionService::handle_v2`].
 //!
 //! The server is thread-per-connection over `std::net` (the image has no
 //! async runtime); all prediction work funnels into the shared
@@ -24,7 +32,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
-use crate::device::{Device, ALL_DEVICES};
+use crate::device::{registry, Device, NewDevice, RegisterError};
 use crate::engine::PredictionEngine;
 use crate::lowering::Precision;
 use crate::predict::HybridPredictor;
@@ -86,7 +94,8 @@ pub struct RankRequest {
     pub origin: String,
     /// `"fp32"` (default) or `"amp"`.
     pub precision: Option<String>,
-    /// Candidate destinations; `None` means every built-in device.
+    /// Candidate destinations; `None` means every device in the
+    /// registry — built-ins plus runtime registrations.
     pub dests: Option<Vec<String>>,
 }
 
@@ -154,13 +163,18 @@ pub enum Request {
 
 impl Request {
     pub fn from_json(line: &str) -> Result<Request> {
-        let v = json::parse(line)?;
+        Self::from_value(&json::parse(line)?)
+    }
+
+    /// Dispatch an already-parsed v1 request value (the service parses
+    /// each line once, for the version sniff, and reuses the value here).
+    pub fn from_value(v: &Json) -> Result<Request> {
         if matches!(v.get("rank"), Some(Json::Bool(true))) {
-            Ok(Request::Rank(RankRequest::from_value(&v)?))
+            Ok(Request::Rank(RankRequest::from_value(v)?))
         } else if matches!(v.get("stats"), Some(Json::Bool(true))) {
             Ok(Request::Stats)
         } else {
-            Ok(Request::Predict(PredictionRequest::from_value(&v)?))
+            Ok(Request::Predict(PredictionRequest::from_value(v)?))
         }
     }
 }
@@ -207,6 +221,13 @@ impl From<crate::engine::EngineStats> for StatsResponse {
 
 impl StatsResponse {
     pub fn to_json(&self) -> String {
+        self.to_value().dump()
+    }
+
+    /// The v1 stats payload. (The v2 `stats` op extends this with the
+    /// open-world counters: `trace_uploads`, `uploaded_entries`,
+    /// `devices` — v1 keeps its original seven fields bit-for-bit.)
+    pub fn to_value(&self) -> Json {
         Json::obj(vec![
             ("trace_hits", Json::Num(self.trace_hits as f64)),
             ("trace_misses", Json::Num(self.trace_misses as f64)),
@@ -216,7 +237,6 @@ impl StatsResponse {
             ("wave_misses", Json::Num(self.wave_misses as f64)),
             ("workers", Json::Num(self.workers as f64)),
         ])
-        .dump()
     }
 
     pub fn from_json(line: &str) -> Result<Self> {
@@ -262,6 +282,10 @@ pub struct PredictionResponse {
 
 impl PredictionResponse {
     pub fn to_json(&self) -> String {
+        self.to_value().dump()
+    }
+
+    pub fn to_value(&self) -> Json {
         Json::obj(vec![
             ("model", Json::Str(self.model.clone())),
             ("batch", Json::Num(self.batch as f64)),
@@ -277,7 +301,6 @@ impl PredictionResponse {
             ("mlp_time_fraction", Json::Num(self.mlp_time_fraction)),
             ("mlp_fallbacks", Json::Num(self.mlp_fallbacks as f64)),
         ])
-        .dump()
     }
 
     /// Parse a response line (used by clients/examples/tests).
@@ -370,6 +393,10 @@ pub struct RankResponse {
 
 impl RankResponse {
     pub fn to_json(&self) -> String {
+        self.to_value().dump()
+    }
+
+    pub fn to_value(&self) -> Json {
         Json::obj(vec![
             ("model", Json::Str(self.model.clone())),
             ("batch", Json::Num(self.batch as f64)),
@@ -380,7 +407,6 @@ impl RankResponse {
                 Json::Arr(self.ranking.iter().map(RankedDest::to_value).collect()),
             ),
         ])
-        .dump()
     }
 
     pub fn from_json(line: &str) -> Result<Self> {
@@ -422,6 +448,262 @@ fn parse_precision(p: Option<&str>) -> Result<Precision> {
         Some("amp") => Ok(Precision::Amp),
         Some(other) => anyhow::bail!("unknown precision {other:?} (want fp32|amp)"),
     }
+}
+
+// ------------------------------------------------------------------ v2 --
+//
+// The versioned envelope: `{"v":2,"op":"<op>",...}` requests, answered
+// with `{"v":2,"op":"<op>",...payload}` on success and
+// `{"v":2,"error":{"code","message"}}` on failure. v1 bare-object lines
+// (no "v" field) keep flowing through the original code path
+// bit-identically. See docs/SERVICE.md for the full schema.
+
+/// Envelope protocol version served by [`PredictionService::handle_v2`].
+pub const PROTOCOL_V2: f64 = 2.0;
+
+/// A structured v2 error: a stable machine-readable `code` plus a human
+/// message. Codes: `bad_request`, `unsupported_version`,
+/// `unsupported_op`, `unknown_device`, `unknown_model`, `unknown_trace`,
+/// `invalid_argument`, `conflict`.
+struct V2Error {
+    code: &'static str,
+    message: String,
+}
+
+impl V2Error {
+    fn new(code: &'static str, message: impl Into<String>) -> V2Error {
+        V2Error { code, message: message.into() }
+    }
+}
+
+type V2Result = std::result::Result<Json, V2Error>;
+
+/// Serialize a v2 error line.
+pub fn v2_error_json(code: &str, message: &str) -> String {
+    Json::obj(vec![
+        ("v", Json::Num(PROTOCOL_V2)),
+        (
+            "error",
+            Json::obj(vec![
+                ("code", Json::Str(code.to_string())),
+                ("message", Json::Str(message.to_string())),
+            ]),
+        ),
+    ])
+    .dump()
+}
+
+/// Wrap a payload object in the v2 success envelope.
+fn v2_envelope(op: &str, payload: Json, extra: Vec<(&str, Json)>) -> Json {
+    let mut m = match payload {
+        Json::Obj(m) => m,
+        _ => Default::default(),
+    };
+    m.insert("v".to_string(), Json::Num(PROTOCOL_V2));
+    m.insert("op".to_string(), Json::Str(op.to_string()));
+    for (k, v) in extra {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+/// Fail on a v2 (or v1) error line; `Ok(())` on a success payload.
+/// Client-side counterpart of [`v2_error_json`].
+pub fn v2_check_error(v: &Json) -> Result<()> {
+    match v.get("error") {
+        None => Ok(()),
+        Some(Json::Str(msg)) => anyhow::bail!("server error: {msg}"),
+        Some(err) => {
+            let code = err.get("code").and_then(Json::as_str).unwrap_or("unknown");
+            let msg = err.get("message").and_then(Json::as_str).unwrap_or("");
+            anyhow::bail!("server error [{code}]: {msg}")
+        }
+    }
+}
+
+fn classify_engine_error(e: &anyhow::Error) -> &'static str {
+    let msg = e.to_string();
+    if msg.contains("unknown model") {
+        "unknown_model"
+    } else if msg.contains("unknown trace") {
+        "unknown_trace"
+    } else {
+        "invalid_argument"
+    }
+}
+
+// --- v2 request builders (used by the Client and the tests) -----------
+
+fn precision_pair(precision: Option<&str>) -> Vec<(&'static str, Json)> {
+    match precision {
+        Some(p) => vec![("precision", Json::Str(p.to_string()))],
+        None => Vec::new(),
+    }
+}
+
+/// `{"v":2,"op":"predict"}` over a zoo model.
+pub fn v2_predict_model_request(
+    model: &str,
+    batch: usize,
+    origin: &str,
+    dest: &str,
+    precision: Option<&str>,
+) -> String {
+    let mut pairs = vec![
+        ("v", Json::Num(PROTOCOL_V2)),
+        ("op", Json::Str("predict".into())),
+        ("model", Json::Str(model.to_string())),
+        ("batch", Json::Num(batch as f64)),
+        ("origin", Json::Str(origin.to_string())),
+        ("dest", Json::Str(dest.to_string())),
+    ];
+    pairs.extend(precision_pair(precision));
+    Json::obj(pairs).dump()
+}
+
+/// `{"v":2,"op":"predict"}` over a previously submitted trace.
+pub fn v2_predict_trace_request(trace_id: &str, dest: &str, precision: Option<&str>) -> String {
+    let mut pairs = vec![
+        ("v", Json::Num(PROTOCOL_V2)),
+        ("op", Json::Str("predict".into())),
+        ("trace_id", Json::Str(trace_id.to_string())),
+        ("dest", Json::Str(dest.to_string())),
+    ];
+    pairs.extend(precision_pair(precision));
+    Json::obj(pairs).dump()
+}
+
+/// `{"v":2,"op":"rank"}` over a previously submitted trace.
+pub fn v2_rank_trace_request(
+    trace_id: &str,
+    dests: Option<&[String]>,
+    precision: Option<&str>,
+) -> String {
+    let mut pairs = vec![
+        ("v", Json::Num(PROTOCOL_V2)),
+        ("op", Json::Str("rank".into())),
+        ("trace_id", Json::Str(trace_id.to_string())),
+    ];
+    if let Some(d) = dests {
+        pairs.push(("dests", Json::Arr(d.iter().map(|s| Json::Str(s.clone())).collect())));
+    }
+    pairs.extend(precision_pair(precision));
+    Json::obj(pairs).dump()
+}
+
+/// `{"v":2,"op":"submit_trace"}` with the trace embedded.
+pub fn v2_submit_trace_request(trace: &Trace) -> String {
+    Json::obj(vec![
+        ("v", Json::Num(PROTOCOL_V2)),
+        ("op", Json::Str("submit_trace".into())),
+        ("trace", trace.to_value()),
+    ])
+    .dump()
+}
+
+/// `{"v":2,"op":"register_device"}` from a device description.
+pub fn v2_register_device_request(d: &NewDevice) -> String {
+    let mut pairs = vec![
+        ("v", Json::Num(PROTOCOL_V2)),
+        ("op", Json::Str("register_device".into())),
+        ("name", Json::Str(d.name.clone())),
+        ("sms", Json::Num(d.sms as f64)),
+        ("clock_mhz", Json::Num(d.clock_mhz)),
+        ("mem_bw_gbps", Json::Num(d.mem_bw_gbps)),
+        ("fp32_tflops", Json::Num(d.fp32_tflops)),
+        ("tensor_cores", Json::Bool(d.tensor_cores)),
+    ];
+    if let Some(p) = d.usd_per_hr {
+        pairs.push(("usd_per_hr", Json::Num(p)));
+    }
+    if let Some(a) = d.arch {
+        pairs.push(("arch", Json::Str(a.to_string().to_ascii_lowercase())));
+    }
+    if let Some(x) = d.achieved_bw_gbps {
+        pairs.push(("achieved_bw_gbps", Json::Num(x)));
+    }
+    if let Some(x) = d.mem_gib {
+        pairs.push(("mem_gib", Json::Num(x)));
+    }
+    if let Some(x) = d.fp16_tflops {
+        pairs.push(("fp16_tflops", Json::Num(x)));
+    }
+    if let Some(x) = d.cuda_cores {
+        pairs.push(("cuda_cores", Json::Num(x as f64)));
+    }
+    if let Some(x) = d.l2_kib {
+        pairs.push(("l2_kib", Json::Num(x as f64)));
+    }
+    Json::obj(pairs).dump()
+}
+
+/// `{"v":2,"op":"stats"}`.
+pub fn v2_stats_request() -> String {
+    Json::obj(vec![("v", Json::Num(PROTOCOL_V2)), ("op", Json::Str("stats".into()))]).dump()
+}
+
+/// The `register_device` acknowledgement (client-side view).
+#[derive(Debug, Clone)]
+pub struct RegisteredDevice {
+    /// Canonical device name (as stored in the registry).
+    pub device: String,
+    /// Interned registry index on the server.
+    pub id: usize,
+    /// Registry size after the registration.
+    pub devices: usize,
+}
+
+impl RegisteredDevice {
+    pub fn from_json(line: &str) -> Result<RegisteredDevice> {
+        let v = json::parse(line)?;
+        v2_check_error(&v)?;
+        Ok(RegisteredDevice {
+            device: v.req_str("device")?.to_string(),
+            id: v.req_usize("id")?,
+            devices: v.req_usize("devices")?,
+        })
+    }
+}
+
+fn new_device_from_value(v: &Json) -> std::result::Result<NewDevice, V2Error> {
+    let req_num = |k: &str| -> std::result::Result<f64, V2Error> {
+        v.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| V2Error::new("bad_request", format!("missing/invalid number field {k:?}")))
+    };
+    let opt_num = |k: &str| v.get(k).and_then(Json::as_f64);
+    let opt_u32 = |k: &str| v.get(k).and_then(Json::as_usize).map(|x| x as u32);
+    let arch = match v.get("arch").and_then(Json::as_str) {
+        None => None,
+        Some(s) => Some(crate::device::Arch::parse(s).ok_or_else(|| {
+            V2Error::new("invalid_argument", format!("unknown arch {s:?} (want pascal|volta|turing)"))
+        })?),
+    };
+    Ok(NewDevice {
+        name: v
+            .req_str("name")
+            .map_err(|e| V2Error::new("bad_request", e.to_string()))?
+            .to_string(),
+        sms: v
+            .req_usize("sms")
+            .map_err(|e| V2Error::new("bad_request", e.to_string()))? as u32,
+        clock_mhz: req_num("clock_mhz")?,
+        mem_bw_gbps: req_num("mem_bw_gbps")?,
+        fp32_tflops: req_num("fp32_tflops")?,
+        // Absent `tensor_cores` defaults from an explicit arch (so
+        // `"arch":"turing"` alone is valid); bare requests default false.
+        tensor_cores: match v.get("tensor_cores") {
+            Some(Json::Bool(b)) => *b,
+            _ => arch.map_or(false, |a| a.has_tensor_cores()),
+        },
+        usd_per_hr: opt_num("usd_per_hr"),
+        arch,
+        achieved_bw_gbps: opt_num("achieved_bw_gbps"),
+        mem_gib: opt_num("mem_gib"),
+        fp16_tflops: opt_num("fp16_tflops"),
+        cuda_cores: opt_u32("cuda_cores"),
+        l2_kib: opt_u32("l2_kib"),
+    })
 }
 
 /// The TCP-facing prediction service: a thin protocol layer over the
@@ -490,8 +772,10 @@ impl PredictionService {
         let origin = parse_device(&req.origin, "origin")?;
         let precision = parse_precision(req.precision.as_deref())?;
         anyhow::ensure!(req.batch > 0, "batch must be positive");
+        // Default destination set: every device in the registry —
+        // including GPUs registered at runtime via `register_device`.
         let dests: Vec<Device> = match &req.dests {
-            None => ALL_DEVICES.to_vec(),
+            None => registry::all_devices(),
             Some(names) => names
                 .iter()
                 .map(|n| parse_device(n, "destination"))
@@ -525,8 +809,32 @@ impl PredictionService {
     }
 
     /// Parse one wire line, dispatch it, and serialize the reply.
+    ///
+    /// Version routing: a line with `"v":2` takes the v2 envelope path;
+    /// any other `"v"` value gets a structured `unsupported_version`
+    /// error; a line with no `"v"` field is a v1 request and flows
+    /// through the original code path **bit-identically** (pinned by the
+    /// golden suite and the CI service smoke).
     pub fn handle_line(&self, line: &str) -> String {
-        match Request::from_json(line) {
+        // One parse per line: the version sniff and the v1 dispatch
+        // share the same value.
+        let request = match json::parse(line) {
+            Ok(v) => {
+                match v.get("v") {
+                    Some(Json::Num(n)) if *n == PROTOCOL_V2 => return self.handle_v2(&v),
+                    Some(other) => {
+                        return v2_error_json(
+                            "unsupported_version",
+                            &format!("unsupported protocol version {}", other.dump()),
+                        )
+                    }
+                    None => {}
+                }
+                Request::from_value(&v)
+            }
+            Err(e) => Err(e),
+        };
+        match request {
             Ok(Request::Predict(req)) => match self.handle(&req) {
                 Ok(resp) => resp.to_json(),
                 Err(e) => error_json(&e.to_string()),
@@ -539,12 +847,243 @@ impl PredictionService {
             Err(e) => error_json(&format!("bad request: {e}")),
         }
     }
+
+    /// Dispatch one parsed v2 envelope and serialize the reply.
+    pub fn handle_v2(&self, v: &Json) -> String {
+        match self.dispatch_v2(v) {
+            Ok(reply) => reply.dump(),
+            Err(e) => v2_error_json(e.code, &e.message),
+        }
+    }
+
+    fn dispatch_v2(&self, v: &Json) -> V2Result {
+        let op = v
+            .req_str("op")
+            .map_err(|_| V2Error::new("bad_request", "missing string field \"op\""))?;
+        match op {
+            "predict" => self.v2_predict(v),
+            "rank" => self.v2_rank(v),
+            "stats" => Ok(self.v2_stats()),
+            "submit_trace" => self.v2_submit_trace(v),
+            "register_device" => self.v2_register_device(v),
+            other => Err(V2Error::new(
+                "unsupported_op",
+                format!("unsupported op {other:?} (want predict|rank|stats|submit_trace|register_device)"),
+            )),
+        }
+    }
+
+    fn v2_precision(v: &Json) -> std::result::Result<Precision, V2Error> {
+        parse_precision(v.get("precision").and_then(Json::as_str))
+            .map_err(|e| V2Error::new("invalid_argument", e.to_string()))
+    }
+
+    fn v2_dest(v: &Json) -> std::result::Result<Device, V2Error> {
+        let name = v
+            .req_str("dest")
+            .map_err(|_| V2Error::new("bad_request", "missing string field \"dest\""))?;
+        parse_device(name, "destination").map_err(|e| V2Error::new("unknown_device", e.to_string()))
+    }
+
+    fn v2_predict(&self, v: &Json) -> V2Result {
+        let precision = Self::v2_precision(v)?;
+        let dest = Self::v2_dest(v)?;
+        if let Some(trace_id) = v.get("trace_id").and_then(Json::as_str) {
+            let out = self
+                .engine
+                .predict_uploaded(trace_id, dest, precision)
+                .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
+            let resp = Self::prediction_response(&out);
+            Ok(v2_envelope(
+                "predict",
+                resp.to_value(),
+                vec![("trace_id", Json::Str(trace_id.to_string()))],
+            ))
+        } else {
+            let req = PredictionRequest::from_value(v)
+                .map_err(|e| V2Error::new("bad_request", e.to_string()))?;
+            let resp = self
+                .handle(&req)
+                .map_err(|e| V2Error::new(Self::classify_v1(&e), e.to_string()))?;
+            Ok(v2_envelope("predict", resp.to_value(), Vec::new()))
+        }
+    }
+
+    fn v2_rank(&self, v: &Json) -> V2Result {
+        if let Some(trace_id) = v.get("trace_id").and_then(Json::as_str) {
+            let precision = Self::v2_precision(v)?;
+            let dests = Self::v2_dests(v)?;
+            let ranking = self
+                .engine
+                .rank_uploaded(trace_id, &dests, precision)
+                .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
+            let resp = Self::rank_response(&ranking);
+            Ok(v2_envelope(
+                "rank",
+                resp.to_value(),
+                vec![("trace_id", Json::Str(trace_id.to_string()))],
+            ))
+        } else {
+            let req = RankRequest::from_value(v)
+                .map_err(|e| V2Error::new("bad_request", e.to_string()))?;
+            let resp = self
+                .handle_rank(&req)
+                .map_err(|e| V2Error::new(Self::classify_v1(&e), e.to_string()))?;
+            Ok(v2_envelope("rank", resp.to_value(), Vec::new()))
+        }
+    }
+
+    fn v2_stats(&self) -> Json {
+        let s = self.engine.stats();
+        v2_envelope(
+            "stats",
+            StatsResponse::from(s).to_value(),
+            vec![
+                ("trace_uploads", Json::Num(s.trace_uploads as f64)),
+                ("uploaded_entries", Json::Num(s.uploaded_entries as f64)),
+                ("devices", Json::Num(s.devices as f64)),
+            ],
+        )
+    }
+
+    fn v2_submit_trace(&self, v: &Json) -> V2Result {
+        let tv = v
+            .get("trace")
+            .ok_or_else(|| V2Error::new("bad_request", "missing object field \"trace\""))?;
+        let trace = Trace::from_value(tv)
+            .map_err(|e| V2Error::new("invalid_argument", format!("bad trace: {e}")))?;
+        let (trace_id, analyzed) = self
+            .engine
+            .submit_trace(trace)
+            .map_err(|e| V2Error::new("invalid_argument", e.to_string()))?;
+        Ok(v2_envelope(
+            "submit_trace",
+            Json::obj(vec![
+                ("trace_id", Json::Str(trace_id)),
+                ("model", Json::Str(analyzed.trace.model.clone())),
+                ("batch", Json::Num(analyzed.trace.batch_size as f64)),
+                ("origin", Json::Str(analyzed.trace.origin.id().to_string())),
+                ("ops", Json::Num(analyzed.trace.ops.len() as f64)),
+                ("origin_iter_ms", Json::Num(analyzed.trace.run_time_ms())),
+            ]),
+            Vec::new(),
+        ))
+    }
+
+    fn v2_register_device(&self, v: &Json) -> V2Result {
+        let desc = new_device_from_value(v)?;
+        let d = registry::register(&desc).map_err(|e| match e {
+            RegisterError::Conflict(m) => V2Error::new("conflict", m),
+            RegisterError::Invalid(m) => V2Error::new("invalid_argument", m),
+        })?;
+        let s = d.spec();
+        Ok(v2_envelope(
+            "register_device",
+            Json::obj(vec![
+                ("device", Json::Str(s.name.to_string())),
+                ("id", Json::Num(d.index() as f64)),
+                ("arch", Json::Str(s.arch.to_string())),
+                ("sms", Json::Num(s.sms as f64)),
+                ("mem_gib", Json::Num(s.mem_gib)),
+                ("peak_mem_bw_gbps", Json::Num(s.peak_mem_bw_gbps)),
+                ("achieved_mem_bw_gbps", Json::Num(s.achieved_mem_bw_gbps)),
+                ("clock_mhz", Json::Num(s.boost_clock_mhz)),
+                ("fp32_tflops", Json::Num(s.peak_fp32_tflops)),
+                ("fp16_tflops", Json::Num(s.peak_fp16_tflops)),
+                ("usd_per_hr", s.rental_usd_per_hr.map_or(Json::Null, Json::Num)),
+                ("devices", Json::Num(registry::device_count() as f64)),
+            ]),
+            Vec::new(),
+        ))
+    }
+
+    /// Resolve a v2 `dests` field: explicit names, or the full registry.
+    fn v2_dests(v: &Json) -> std::result::Result<Vec<Device>, V2Error> {
+        match v.get("dests") {
+            None | Some(Json::Null) => Ok(registry::all_devices()),
+            Some(arr) => {
+                let items = arr
+                    .as_arr()
+                    .ok_or_else(|| V2Error::new("bad_request", "dests must be an array of device names"))?;
+                items
+                    .iter()
+                    .map(|it| {
+                        let name = it
+                            .as_str()
+                            .ok_or_else(|| V2Error::new("bad_request", "dests entries must be strings"))?;
+                        parse_device(name, "destination")
+                            .map_err(|e| V2Error::new("unknown_device", e.to_string()))
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// v1 handler errors carry no code; classify from the message.
+    fn classify_v1(e: &anyhow::Error) -> &'static str {
+        let msg = e.to_string();
+        if msg.contains("unknown model") {
+            "unknown_model"
+        } else if msg.contains("unknown origin device") || msg.contains("unknown destination device") {
+            "unknown_device"
+        } else {
+            "invalid_argument"
+        }
+    }
+
+    /// Decision-ready response fields from an engine prediction (the
+    /// uploaded-trace path, where there is no request echo to copy).
+    fn prediction_response(out: &crate::engine::EnginePrediction) -> PredictionResponse {
+        let pred = &out.pred;
+        let tput = pred.throughput();
+        PredictionResponse {
+            model: pred.model.clone(),
+            batch: pred.batch_size,
+            origin: pred.origin.id().to_string(),
+            dest: pred.dest.id().to_string(),
+            origin_iter_ms: out.trace.run_time_ms(),
+            iter_ms: pred.run_time_ms(),
+            throughput: tput,
+            cost_normalized_throughput: crate::cost::cost_normalized_throughput(pred.dest, tput),
+            mlp_time_fraction: pred.mlp_time_fraction(),
+            mlp_fallbacks: pred.mlp_fallbacks,
+        }
+    }
+
+    fn rank_response(ranking: &crate::engine::Ranking) -> RankResponse {
+        RankResponse {
+            model: ranking.trace.model.clone(),
+            batch: ranking.trace.batch_size,
+            origin: ranking.trace.origin.id().to_string(),
+            origin_iter_ms: ranking.trace.run_time_ms(),
+            ranking: ranking
+                .entries
+                .iter()
+                .map(|e| RankedDest {
+                    dest: e.dest.id().to_string(),
+                    iter_ms: e.pred.run_time_ms(),
+                    throughput: e.pred.throughput(),
+                    cost_normalized_throughput: e.cost_normalized_throughput,
+                    mlp_time_fraction: e.pred.mlp_time_fraction(),
+                    mlp_fallbacks: e.pred.mlp_fallbacks,
+                })
+                .collect(),
+        }
+    }
 }
 
 /// Serve newline-delimited JSON requests over TCP, one thread per
 /// connection (the `habitat serve` subcommand). Blocks forever.
+/// Missing MLP artifacts degrade the server to wave-scaling-only
+/// predictions (like `habitat compare`) rather than refusing to start.
 pub fn serve(addr: &str, artifacts: &str) -> Result<()> {
-    let service = Arc::new(PredictionService::new(artifacts)?);
+    let service = Arc::new(match PredictionService::new(artifacts) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("habitat: MLP artifacts unavailable ({e}); serving wave-scaling-only predictions");
+            PredictionService::with_predictor(HybridPredictor::wave_only())
+        }
+    });
     let listener = TcpListener::bind(addr)?;
     println!("habitat: serving predictions on {addr}");
     for stream in listener.incoming() {
@@ -579,6 +1118,7 @@ pub fn handle_connection(stream: TcpStream, service: &PredictionService) -> Resu
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::device::ALL_DEVICES;
 
     fn wave_service() -> PredictionService {
         PredictionService::with_predictor(HybridPredictor::wave_only())
@@ -681,12 +1221,19 @@ mod tests {
 
     #[test]
     fn rank_matches_individual_requests_with_one_tracking_pass() {
-        // The ISSUE's acceptance criterion: a rank over all built-in
-        // devices equals N individual requests, with exactly one run of
-        // the tracking pipeline.
+        // A default rank equals N individual requests, with exactly one
+        // run of the tracking pipeline. (The default destination set is
+        // the whole registry — at least the six built-ins, plus any
+        // devices other concurrently running tests have registered.)
         let s = wave_service();
         let ranking = s.handle_rank(&rank_req("mlp", 16, "t4")).unwrap();
-        assert_eq!(ranking.ranking.len(), ALL_DEVICES.len());
+        assert!(ranking.ranking.len() >= ALL_DEVICES.len());
+        for d in ALL_DEVICES {
+            assert!(
+                ranking.ranking.iter().any(|r| r.dest == d.id()),
+                "built-in {d} missing from the default rank"
+            );
+        }
         let stats = s.engine().stats();
         assert_eq!(stats.trace_misses, 1, "rank must track exactly once");
         assert_eq!(stats.trace_hits, 0);
@@ -703,7 +1250,7 @@ mod tests {
         }
         let stats = s.engine().stats();
         assert_eq!(stats.trace_misses, 1, "individual requests must reuse the trace");
-        assert_eq!(stats.trace_hits as usize, ALL_DEVICES.len());
+        assert_eq!(stats.trace_hits as usize, ranking.ranking.len());
     }
 
     #[test]
@@ -803,6 +1350,173 @@ mod tests {
         amp_req.precision = Some("amp".into());
         let amp = s.handle(&amp_req).unwrap();
         assert!(amp.iter_ms <= fp32.iter_ms);
+    }
+
+    #[test]
+    fn v2_predict_payload_matches_v1_bit_for_bit() {
+        let s = wave_service();
+        let v1_line = "{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}";
+        let v1 = s.handle_line(v1_line);
+        let v2 = s.handle_line(&v2_predict_model_request("mlp", 8, "t4", "v100", None));
+        let v1_parsed = json::parse(&v1).unwrap();
+        let v2_parsed = json::parse(&v2).unwrap();
+        assert_eq!(v2_parsed.get("v"), Some(&Json::Num(2.0)));
+        assert_eq!(v2_parsed.req_str("op").unwrap(), "predict");
+        // Every v1 field appears identically in the v2 payload.
+        if let Json::Obj(m) = &v1_parsed {
+            for (k, val) in m {
+                assert_eq!(v2_parsed.get(k), Some(val), "field {k}");
+            }
+        } else {
+            panic!("v1 reply is not an object");
+        }
+    }
+
+    #[test]
+    fn v2_envelope_dispatches_rank_and_stats() {
+        let s = wave_service();
+        let rank = s.handle_line(
+            "{\"v\":2,\"op\":\"rank\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dests\":[\"v100\",\"t4\"]}",
+        );
+        let parsed = json::parse(&rank).unwrap();
+        assert_eq!(parsed.req_str("op").unwrap(), "rank");
+        assert_eq!(parsed.get("ranking").and_then(Json::as_arr).unwrap().len(), 2);
+
+        let stats = s.handle_line(&v2_stats_request());
+        let parsed = json::parse(&stats).unwrap();
+        assert_eq!(parsed.req_str("op").unwrap(), "stats");
+        assert_eq!(parsed.req_usize("trace_misses").unwrap(), 1);
+        assert_eq!(parsed.req_usize("trace_uploads").unwrap(), 0);
+        assert!(parsed.req_usize("devices").unwrap() >= ALL_DEVICES.len());
+    }
+
+    #[test]
+    fn v2_errors_are_structured() {
+        let s = wave_service();
+        let check = |line: &str, code: &str| {
+            let reply = s.handle_line(line);
+            let v = json::parse(&reply).unwrap();
+            assert_eq!(
+                v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+                Some(code),
+                "line {line} → {reply}"
+            );
+            assert!(v.get("error").and_then(|e| e.get("message")).is_some());
+        };
+        check("{\"v\":2}", "bad_request");
+        check("{\"v\":2,\"op\":\"frobnicate\"}", "unsupported_op");
+        check(
+            "{\"v\":2,\"op\":\"predict\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"a100\"}",
+            "unknown_device",
+        );
+        check(
+            "{\"v\":2,\"op\":\"predict\",\"model\":\"nope\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}",
+            "unknown_model",
+        );
+        check(
+            "{\"v\":2,\"op\":\"predict\",\"trace_id\":\"tr-0000000000000000\",\"dest\":\"v100\"}",
+            "unknown_trace",
+        );
+        check(
+            "{\"v\":2,\"op\":\"predict\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"precision\":\"fp64\"}",
+            "invalid_argument",
+        );
+        check("{\"v\":3,\"op\":\"predict\"}", "unsupported_version");
+        // v1 malformed lines keep the v1 error shape.
+        assert!(s.handle_line("not json").contains("bad request"));
+    }
+
+    #[test]
+    fn v2_register_device_becomes_rankable_with_correct_ordering() {
+        let s = wave_service();
+        // Absurdly cost-efficient so its rank position is deterministic:
+        // V100-class hardware at a tenth of the T4's price.
+        let line = s.handle_line(
+            "{\"v\":2,\"op\":\"register_device\",\"name\":\"sim-wire9\",\"sms\":80,\"clock_mhz\":1530,\"mem_bw_gbps\":900,\"fp32_tflops\":15.7,\"tensor_cores\":true,\"usd_per_hr\":0.03}",
+        );
+        let ack = RegisteredDevice::from_json(&line).unwrap();
+        assert_eq!(ack.device, "sim-wire9");
+        assert!(ack.id >= ALL_DEVICES.len());
+        assert!(ack.devices > ALL_DEVICES.len());
+
+        // Idempotent replay: same spec, same id, no conflict.
+        let replay = RegisteredDevice::from_json(&s.handle_line(
+            "{\"v\":2,\"op\":\"register_device\",\"name\":\"sim-wire9\",\"sms\":80,\"clock_mhz\":1530,\"mem_bw_gbps\":900,\"fp32_tflops\":15.7,\"tensor_cores\":true,\"usd_per_hr\":0.03}",
+        ))
+        .unwrap();
+        assert_eq!(replay.id, ack.id);
+
+        // Different spec under the same name → conflict.
+        let clash = s.handle_line(
+            "{\"v\":2,\"op\":\"register_device\",\"name\":\"sim-wire9\",\"sms\":81,\"clock_mhz\":1530,\"mem_bw_gbps\":900,\"fp32_tflops\":15.7,\"tensor_cores\":true}",
+        );
+        let v = json::parse(&clash).unwrap();
+        assert_eq!(
+            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("conflict")
+        );
+
+        // The new device appears in a default (v1!) rank, and — being a
+        // V100 at 1/12 the T4's price — tops the cost-normalized order.
+        let ranking = s.handle_rank(&rank_req("mlp", 16, "t4")).unwrap();
+        let pos = ranking.ranking.iter().position(|r| r.dest == "sim-wire9");
+        assert_eq!(pos, Some(0), "cheapest-per-throughput device must rank first");
+        let entry = &ranking.ranking[pos.unwrap()];
+        let expected_cnt = entry.throughput / 0.03;
+        assert!(
+            (entry.cost_normalized_throughput.unwrap() - expected_cnt).abs() < 1e-6,
+            "cost normalization must use the registered price"
+        );
+
+        // …and works as an explicit v1 predict destination.
+        let resp = s.handle(&req("mlp", 16, "t4", "sim-wire9")).unwrap();
+        assert!(resp.iter_ms > 0.0);
+        assert_eq!(resp.dest, "sim-wire9");
+    }
+
+    #[test]
+    fn v2_submit_trace_then_predict_matches_in_process_evaluation() {
+        let s = wave_service();
+        let graph = crate::models::by_name("mlp", 12).unwrap();
+        let trace = crate::tracker::OperationTracker::new(Device::P4000).track(&graph);
+
+        let reply = s.handle_line(&v2_submit_trace_request(&trace));
+        let v = json::parse(&reply).unwrap();
+        v2_check_error(&v).unwrap();
+        let trace_id = v.req_str("trace_id").unwrap().to_string();
+        assert!(trace_id.starts_with("tr-"));
+        assert_eq!(v.req_usize("ops").unwrap(), trace.ops.len());
+        assert_eq!(v.req_str("origin").unwrap(), "P4000");
+
+        // Predict by id over the wire ≡ analyze+evaluate in-process.
+        let reply = s.handle_line(&v2_predict_trace_request(&trace_id, "v100", None));
+        let v = json::parse(&reply).unwrap();
+        v2_check_error(&v).unwrap();
+        let wire_ms = v.get("iter_ms").and_then(Json::as_f64).unwrap();
+        let plan = s.engine().analyze(&trace);
+        let direct = s.engine().evaluate(&plan, Device::V100, Precision::Fp32);
+        assert_eq!(
+            wire_ms.to_bits(),
+            direct.run_time_ms().to_bits(),
+            "wire {wire_ms} vs in-process {}",
+            direct.run_time_ms()
+        );
+
+        // Rank by id: default dests cover at least the built-ins.
+        let reply = s.handle_line(&v2_rank_trace_request(&trace_id, None, Some("amp")));
+        let v = json::parse(&reply).unwrap();
+        v2_check_error(&v).unwrap();
+        let ranking = v.get("ranking").and_then(Json::as_arr).unwrap();
+        assert!(ranking.len() >= ALL_DEVICES.len());
+        assert_eq!(v.req_str("model").unwrap(), "mlp");
+
+        // Submitting garbage is a structured error.
+        let bad = s.handle_line("{\"v\":2,\"op\":\"submit_trace\",\"trace\":{\"format\":\"nope\"}}");
+        let v = json::parse(&bad).unwrap();
+        assert_eq!(
+            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("invalid_argument")
+        );
     }
 
     #[test]

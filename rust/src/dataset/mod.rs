@@ -15,7 +15,7 @@
 //! block matches [`gpu_features`] — the Python training code and the Rust
 //! PJRT runtime both rely on this exact ordering.
 
-use crate::device::{Device, ALL_DEVICES};
+use crate::device::{registry, Device};
 use crate::lowering::{lower, Pass, Precision};
 use crate::opgraph::{MlpOp, Op, OpKind};
 use crate::sim::Simulator;
@@ -181,8 +181,18 @@ pub fn measure(op: &Op, device: Device, sim: &Simulator) -> f64 {
 }
 
 /// Generate the dataset for one op family: `configs` sampled
-/// configurations × six GPUs, written to `<out_dir>/<op>.csv`.
-pub fn generate(op: MlpOp, out_dir: &str, configs: usize, seed: u64) -> Result<usize> {
+/// configurations × the given GPUs, written to `<out_dir>/<op>.csv`.
+/// The device set is a parameter so runtime-registered GPUs (see
+/// [`registry`]) can be included — or excluded for a paper-exact
+/// six-GPU dataset ([`crate::device::ALL_DEVICES`]).
+pub fn generate(
+    op: MlpOp,
+    out_dir: &str,
+    configs: usize,
+    seed: u64,
+    devices: &[Device],
+) -> Result<usize> {
+    anyhow::ensure!(!devices.is_empty(), "dataset generation needs at least one device");
     let mut rng = Rng::new(seed ^ crate::util::rng::hash_str(op.id()));
     let path = format!("{out_dir}/{}.csv", op.id());
     let mut w = CsvWriter::create(&path, &header(op))?;
@@ -197,7 +207,7 @@ pub fn generate(op: MlpOp, out_dir: &str, configs: usize, seed: u64) -> Result<u
             salt: i as u64,
             ..Default::default()
         });
-        for device in ALL_DEVICES {
+        for &device in devices {
             let time_ms = measure(&sample_op, device, &sim);
             let mut row = features.clone();
             row.extend(gpu_features(device));
@@ -210,15 +220,18 @@ pub fn generate(op: MlpOp, out_dir: &str, configs: usize, seed: u64) -> Result<u
     Ok(rows)
 }
 
-/// Generate all four datasets (the `habitat dataset` subcommand).
+/// Generate all four datasets (the `habitat dataset` subcommand) over
+/// every device in the registry — runtime registrations included, so a
+/// `register_device`d GPU contributes MLP training samples too.
 pub fn generate_all(out_dir: &str, configs: usize, seed: u64) -> Result<()> {
+    let devices = registry::all_devices();
     for op in MlpOp::ALL {
-        let rows = generate(op, out_dir, configs, seed)?;
+        let rows = generate(op, out_dir, configs, seed, &devices)?;
         println!(
             "{}: {} configs × {} GPUs = {} rows → {out_dir}/{}.csv",
             op.id(),
             configs,
-            ALL_DEVICES.len(),
+            devices.len(),
             rows,
             op.id()
         );
@@ -282,7 +295,7 @@ mod tests {
     fn generate_writes_joined_rows() {
         let dir = std::env::temp_dir().join("habitat_ds_test");
         let dir_s = dir.to_str().unwrap();
-        let rows = generate(MlpOp::Bmm, dir_s, 10, 1).unwrap();
+        let rows = generate(MlpOp::Bmm, dir_s, 10, 1, &crate::device::ALL_DEVICES).unwrap();
         assert_eq!(rows, 60);
         let (header_row, data) =
             crate::util::csv::read_numeric(format!("{dir_s}/bmm.csv")).unwrap();

@@ -4,9 +4,16 @@
 //! (Table 2): a datasheet-accurate specification for each device, plus the
 //! per-architecture occupancy limits the CUDA occupancy calculator needs to
 //! compute *wave sizes* (`W_i` in Eq. 1/2 of the paper).
+//!
+//! The device set is **open**: the six paper GPUs are seed entries of
+//! the process-wide [`registry`], and new devices can be registered at
+//! runtime ([`registry::register`], or the service's `register_device`
+//! request). A [`Device`] is an interned registry handle.
 
 pub mod occupancy;
+pub mod registry;
 pub mod specs;
 
 pub use occupancy::{blocks_per_sm, occupancy_fraction, wave_size, LaunchConfig};
-pub use specs::{Arch, Device, GpuSpec, ALL_DEVICES};
+pub use registry::{NewDevice, RegisterError};
+pub use specs::{Arch, Device, DeviceId, GpuSpec, ALL_DEVICES};

@@ -1,0 +1,458 @@
+//! The process-wide device registry — the open-world replacement for
+//! the old `Device` copy-enum.
+//!
+//! Habitat's pitch is predicting performance for *a GPU the user doesn't
+//! have*; a closed enum of six 2021-era GPUs goes stale the day a new
+//! accelerator ships. The registry keeps the six paper GPUs as **seed
+//! entries** (always present, always at indices `0..6`, so every dense
+//! per-device table and cache key built against them is stable) and lets
+//! callers [`register`] new device specs at runtime — from the CLI, from
+//! library code, or over the wire via the service's `register_device`
+//! request. A freshly registered device is immediately usable everywhere
+//! a built-in is: as a prediction origin or destination, in `rank`
+//! fan-outs, in the cluster scheduler, and in dataset generation.
+//!
+//! Interning: a [`Device`] is just an index into this registry.
+//! Registered specs are leaked (`Box::leak`) so `Device::spec()` can
+//! keep returning `&'static GpuSpec` exactly as it always has — devices
+//! are registered a handful of times per process lifetime, so the leak
+//! is bounded and intentional. Lookups for built-in devices never touch
+//! the lock.
+
+use std::sync::{OnceLock, RwLock};
+
+use super::specs::{Arch, Device, GpuSpec, ALL_DEVICES, BUILTIN_SPECS};
+
+/// Short-name aliases accepted by [`find`] in addition to spec names.
+const ALIASES: [(&str, Device); 2] = [("2070", Device::Rtx2070), ("2080ti", Device::Rtx2080Ti)];
+
+/// Hard cap on registry size. Each registration leaks one `GpuSpec`
+/// (that's the interning design) and joins every default `rank`
+/// fan-out and every plan's dense tables, so an unauthenticated wire
+/// client must not be able to grow the registry without bound.
+pub const MAX_DEVICES: usize = 1024;
+
+/// Runtime-registered specs (beyond the six built-ins), in id order.
+fn extra() -> &'static RwLock<Vec<&'static GpuSpec>> {
+    static EXTRA: OnceLock<RwLock<Vec<&'static GpuSpec>>> = OnceLock::new();
+    EXTRA.get_or_init(|| RwLock::new(Vec::new()))
+}
+
+/// Number of devices currently registered (built-ins included). Dense
+/// per-device tables (e.g. [`crate::plan::AnalyzedPlan`]) snapshot this
+/// at build time.
+pub fn device_count() -> usize {
+    ALL_DEVICES.len() + extra().read().unwrap().len()
+}
+
+/// Every registered device, in id (= index) order: the six built-ins
+/// first, then runtime registrations. This is the open-world analogue of
+/// [`ALL_DEVICES`] and the default destination set of `rank`.
+pub fn all_devices() -> Vec<Device> {
+    (0..device_count() as u32).map(Device).collect()
+}
+
+/// Every registered device name, in id order (for error messages).
+pub fn device_names() -> Vec<&'static str> {
+    let mut names: Vec<&'static str> = BUILTIN_SPECS.iter().map(|s| s.name).collect();
+    names.extend(extra().read().unwrap().iter().map(|s| s.name));
+    names
+}
+
+/// Spec lookup; `None` for an id this registry never minted.
+pub fn try_spec(d: Device) -> Option<&'static GpuSpec> {
+    let i = d.index();
+    if i < ALL_DEVICES.len() {
+        Some(&BUILTIN_SPECS[i])
+    } else {
+        extra().read().unwrap().get(i - ALL_DEVICES.len()).copied()
+    }
+}
+
+/// Spec lookup for a registry-minted id (panics otherwise — ids only
+/// come from this registry, so this is unreachable in correct code).
+pub fn spec_of(d: Device) -> &'static GpuSpec {
+    try_spec(d).unwrap_or_else(|| panic!("device id {} is not in the registry", d.index()))
+}
+
+/// Case-insensitive name (or alias) lookup.
+pub fn find(name: &str) -> Option<Device> {
+    let lower = name.to_ascii_lowercase();
+    for (i, s) in BUILTIN_SPECS.iter().enumerate() {
+        if s.name.to_ascii_lowercase() == lower {
+            return Some(ALL_DEVICES[i]);
+        }
+    }
+    for (alias, d) in ALIASES {
+        if alias == lower {
+            return Some(d);
+        }
+    }
+    let extras = extra().read().unwrap();
+    for (i, s) in extras.iter().enumerate() {
+        if s.name.to_ascii_lowercase() == lower {
+            return Some(Device((ALL_DEVICES.len() + i) as u32));
+        }
+    }
+    None
+}
+
+/// A new device description, as supplied by `register_device` (wire or
+/// library). Only the fields a datasheet front page carries are
+/// required; everything else gets an architecture-informed default.
+#[derive(Debug, Clone)]
+pub struct NewDevice {
+    /// Short unique name (e.g. `"A100"`); 1–64 chars of
+    /// `[A-Za-z0-9._-]`, compared case-insensitively.
+    pub name: String,
+    /// Streaming multiprocessors.
+    pub sms: u32,
+    /// Boost (sustained) clock, MHz.
+    pub clock_mhz: f64,
+    /// Peak DRAM bandwidth, GB/s.
+    pub mem_bw_gbps: f64,
+    /// Peak FP32 throughput, TFLOP/s.
+    pub fp32_tflops: f64,
+    /// Whether the chip has tensor cores (selects the default arch).
+    pub tensor_cores: bool,
+    /// Rental price, $/hr, if offered (drives cost-normalized ranking).
+    pub usd_per_hr: Option<f64>,
+    /// Explicit architecture; default Volta-like with tensor cores,
+    /// Pascal-like without.
+    pub arch: Option<Arch>,
+    /// Achieved DRAM bandwidth, GB/s; default 80% of peak.
+    pub achieved_bw_gbps: Option<f64>,
+    /// Memory capacity, GiB; default 16.
+    pub mem_gib: Option<f64>,
+    /// Peak FP16/tensor throughput, TFLOP/s; default 8× FP32 with
+    /// tensor cores, else = FP32.
+    pub fp16_tflops: Option<f64>,
+    /// CUDA cores; default 64 per SM.
+    pub cuda_cores: Option<u32>,
+    /// L2 cache, KiB; default 4096.
+    pub l2_kib: Option<u32>,
+}
+
+impl NewDevice {
+    /// Minimal description: everything else defaulted.
+    pub fn new(
+        name: &str,
+        sms: u32,
+        clock_mhz: f64,
+        mem_bw_gbps: f64,
+        fp32_tflops: f64,
+        tensor_cores: bool,
+    ) -> Self {
+        NewDevice {
+            name: name.to_string(),
+            sms,
+            clock_mhz,
+            mem_bw_gbps,
+            fp32_tflops,
+            tensor_cores,
+            usd_per_hr: None,
+            arch: None,
+            achieved_bw_gbps: None,
+            mem_gib: None,
+            fp16_tflops: None,
+            cuda_cores: None,
+            l2_kib: None,
+        }
+    }
+}
+
+/// Why a [`register`] call was refused. Split so the wire layer can map
+/// each to a distinct structured error code.
+#[derive(Debug)]
+pub enum RegisterError {
+    /// The name is taken by a device with a *different* spec.
+    Conflict(String),
+    /// The description failed validation.
+    Invalid(String),
+}
+
+impl std::fmt::Display for RegisterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegisterError::Conflict(m) => write!(f, "{m}"),
+            RegisterError::Invalid(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for RegisterError {}
+
+fn validate(d: &NewDevice) -> Result<(), RegisterError> {
+    let bad = |m: String| Err(RegisterError::Invalid(m));
+    if d.name.is_empty() || d.name.len() > 64 {
+        return bad("device name must be 1..=64 characters".into());
+    }
+    if !d.name.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-')) {
+        return bad(format!("device name {:?} has characters outside [A-Za-z0-9._-]", d.name));
+    }
+    if d.sms == 0 {
+        return bad("sms must be positive".into());
+    }
+    for (field, v) in [
+        ("clock_mhz", d.clock_mhz),
+        ("mem_bw_gbps", d.mem_bw_gbps),
+        ("fp32_tflops", d.fp32_tflops),
+    ] {
+        if !(v.is_finite() && v > 0.0) {
+            return bad(format!("{field} must be a positive number"));
+        }
+    }
+    if let Some(a) = d.achieved_bw_gbps {
+        if !(a.is_finite() && a > 0.0 && a <= d.mem_bw_gbps) {
+            return bad("achieved_bw_gbps must be in (0, mem_bw_gbps]".into());
+        }
+    }
+    for (field, v) in [("mem_gib", d.mem_gib), ("fp16_tflops", d.fp16_tflops)] {
+        if let Some(v) = v {
+            if !(v.is_finite() && v > 0.0) {
+                return bad(format!("{field} must be a positive number"));
+            }
+        }
+    }
+    if let Some(p) = d.usd_per_hr {
+        if !(p.is_finite() && p > 0.0) {
+            return bad("usd_per_hr must be a positive number".into());
+        }
+    }
+    if let Some(arch) = d.arch {
+        if arch.has_tensor_cores() != d.tensor_cores {
+            return bad(format!(
+                "arch {arch} contradicts tensor_cores={}",
+                d.tensor_cores
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Resolve a [`NewDevice`] into a full [`GpuSpec`] (defaults applied).
+/// `device` and `name` are placeholders until interning.
+fn resolve(d: &NewDevice) -> GpuSpec {
+    let arch = d.arch.unwrap_or(if d.tensor_cores { Arch::Volta } else { Arch::Pascal });
+    // Occupancy limits follow the architecture generation (Turing halves
+    // thread/block residency; Pascal/Volta share the classic limits).
+    let (max_threads_per_sm, max_blocks_per_sm) = match arch {
+        Arch::Turing => (1024, 16),
+        Arch::Pascal | Arch::Volta => (2048, 32),
+    };
+    let fp32 = d.fp32_tflops;
+    GpuSpec {
+        device: Device(u32::MAX), // patched at interning
+        name: "",                 // patched at interning
+        arch,
+        sms: d.sms,
+        cuda_cores: d.cuda_cores.unwrap_or(d.sms * 64),
+        mem_gib: d.mem_gib.unwrap_or(16.0),
+        peak_mem_bw_gbps: d.mem_bw_gbps,
+        achieved_mem_bw_gbps: d.achieved_bw_gbps.unwrap_or(0.8 * d.mem_bw_gbps),
+        boost_clock_mhz: d.clock_mhz,
+        peak_fp32_tflops: fp32,
+        peak_fp16_tflops: d
+            .fp16_tflops
+            .unwrap_or(if arch.has_tensor_cores() { 8.0 * fp32 } else { fp32 }),
+        l2_cache_kib: d.l2_kib.unwrap_or(4096),
+        max_threads_per_sm,
+        max_blocks_per_sm,
+        regs_per_sm: 65_536,
+        smem_per_sm_bytes: 64 * 1024,
+        rental_usd_per_hr: d.usd_per_hr,
+    }
+}
+
+/// Two specs describe the same hardware (used for idempotent re-registration).
+fn same_hardware(a: &GpuSpec, b: &GpuSpec) -> bool {
+    a.arch == b.arch
+        && a.sms == b.sms
+        && a.cuda_cores == b.cuda_cores
+        && a.mem_gib == b.mem_gib
+        && a.peak_mem_bw_gbps == b.peak_mem_bw_gbps
+        && a.achieved_mem_bw_gbps == b.achieved_mem_bw_gbps
+        && a.boost_clock_mhz == b.boost_clock_mhz
+        && a.peak_fp32_tflops == b.peak_fp32_tflops
+        && a.peak_fp16_tflops == b.peak_fp16_tflops
+        && a.l2_cache_kib == b.l2_cache_kib
+        && a.rental_usd_per_hr == b.rental_usd_per_hr
+}
+
+/// Register a new device, returning its interned handle.
+///
+/// Idempotent: re-registering an identical description returns the
+/// existing handle (so clients can blindly replay registrations after a
+/// reconnect). A name collision with a *different* spec — including the
+/// built-in names and aliases — is a [`RegisterError::Conflict`].
+pub fn register(desc: &NewDevice) -> Result<Device, RegisterError> {
+    validate(desc)?;
+    let resolved = resolve(desc);
+    let lower = desc.name.to_ascii_lowercase();
+
+    // Built-in names and aliases are reserved, idempotency aside.
+    for (i, s) in BUILTIN_SPECS.iter().enumerate() {
+        if s.name.to_ascii_lowercase() == lower {
+            return if same_hardware(s, &resolved) {
+                Ok(ALL_DEVICES[i])
+            } else {
+                Err(RegisterError::Conflict(format!(
+                    "device name {:?} is taken by a built-in device with a different spec",
+                    desc.name
+                )))
+            };
+        }
+    }
+    if ALIASES.iter().any(|(alias, _)| *alias == lower) {
+        return Err(RegisterError::Conflict(format!(
+            "device name {:?} is a reserved alias",
+            desc.name
+        )));
+    }
+
+    // Hold the write lock across the lookup so two racing registrations
+    // of the same name can't both insert.
+    let mut extras = extra().write().unwrap();
+    for (i, s) in extras.iter().enumerate() {
+        if s.name.to_ascii_lowercase() == lower {
+            return if same_hardware(s, &resolved) {
+                Ok(Device((ALL_DEVICES.len() + i) as u32))
+            } else {
+                Err(RegisterError::Conflict(format!(
+                    "device name {:?} is already registered with a different spec",
+                    desc.name
+                )))
+            };
+        }
+    }
+
+    if ALL_DEVICES.len() + extras.len() >= MAX_DEVICES {
+        return Err(RegisterError::Invalid(format!(
+            "device registry is full ({MAX_DEVICES} devices)"
+        )));
+    }
+    let id = Device((ALL_DEVICES.len() + extras.len()) as u32);
+    let mut spec = resolved;
+    spec.device = id;
+    spec.name = Box::leak(desc.name.clone().into_boxed_str());
+    extras.push(Box::leak(Box::new(spec)));
+    Ok(id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: the registry is process-global and `cargo test` runs tests
+    // concurrently in one process — every test here uses names no other
+    // test registers, asserts "contains"-style rather than exact
+    // lengths, and never registers names other tests expect to be
+    // unknown (e.g. "a100").
+
+    #[test]
+    fn builtins_are_seeded_and_lock_free_lookups_work() {
+        assert!(device_count() >= ALL_DEVICES.len());
+        for d in ALL_DEVICES {
+            assert!(d.is_builtin());
+            assert_eq!(spec_of(d).device, d);
+            assert_eq!(find(d.id()), Some(d));
+        }
+        assert!(try_spec(Device(9999)).is_none());
+    }
+
+    #[test]
+    fn register_then_parse_spec_and_enumerate() {
+        let d = register(&NewDevice {
+            usd_per_hr: Some(1.10),
+            mem_gib: Some(24.0),
+            ..NewDevice::new("sim-L4", 58, 2040.0, 300.0, 30.3, true)
+        })
+        .unwrap();
+        assert!(!d.is_builtin());
+        assert_eq!(Device::parse("sim-l4"), Some(d), "parse is case-insensitive");
+        let s = d.spec();
+        assert_eq!(s.name, "sim-L4");
+        assert_eq!(s.sms, 58);
+        assert_eq!(s.arch, Arch::Volta, "tensor cores default to Volta-like");
+        assert_eq!(s.rental_usd_per_hr, Some(1.10));
+        assert_eq!(s.achieved_mem_bw_gbps, 0.8 * 300.0);
+        assert_eq!(s.peak_fp16_tflops, 8.0 * 30.3);
+        assert!(all_devices().contains(&d));
+        assert!(device_names().contains(&"sim-L4"));
+        assert_eq!(format!("{d}"), "sim-L4");
+    }
+
+    #[test]
+    fn reregistration_is_idempotent_and_conflicts_are_refused() {
+        let desc = NewDevice::new("sim-idem", 10, 1000.0, 100.0, 5.0, false);
+        let a = register(&desc).unwrap();
+        let b = register(&desc).unwrap();
+        assert_eq!(a, b, "identical re-registration returns the same handle");
+        assert_eq!(a.spec().arch, Arch::Pascal, "no tensor cores defaults to Pascal-like");
+
+        let clash = NewDevice::new("SIM-IDEM", 12, 1000.0, 100.0, 5.0, false);
+        assert!(matches!(register(&clash), Err(RegisterError::Conflict(_))));
+    }
+
+    #[test]
+    fn builtin_names_and_aliases_are_reserved() {
+        let clash = NewDevice::new("V100", 80, 1530.0, 900.0, 15.7, true);
+        assert!(matches!(register(&clash), Err(RegisterError::Conflict(_))));
+        let alias = NewDevice::new("2080ti", 68, 1545.0, 616.0, 13.4, true);
+        assert!(matches!(register(&alias), Err(RegisterError::Conflict(_))));
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let ok = |name: &str| NewDevice::new(name, 8, 1000.0, 100.0, 5.0, false);
+        assert!(matches!(register(&ok("")), Err(RegisterError::Invalid(_))));
+        assert!(matches!(
+            register(&NewDevice::new("bad name", 8, 1000.0, 100.0, 5.0, false)),
+            Err(RegisterError::Invalid(_))
+        ));
+        assert!(matches!(
+            register(&NewDevice::new("sim-zero-sms", 0, 1000.0, 100.0, 5.0, false)),
+            Err(RegisterError::Invalid(_))
+        ));
+        assert!(matches!(
+            register(&NewDevice::new("sim-neg-clock", 8, -1.0, 100.0, 5.0, false)),
+            Err(RegisterError::Invalid(_))
+        ));
+        assert!(matches!(
+            register(&NewDevice {
+                achieved_bw_gbps: Some(200.0), // above peak
+                ..ok("sim-bad-bw")
+            }),
+            Err(RegisterError::Invalid(_))
+        ));
+        assert!(matches!(
+            register(&NewDevice {
+                arch: Some(Arch::Turing), // contradicts tensor_cores=false
+                ..ok("sim-bad-arch")
+            }),
+            Err(RegisterError::Invalid(_))
+        ));
+    }
+
+    #[test]
+    fn registered_device_flows_through_prediction_end_to_end() {
+        // The whole point: a runtime-registered GPU is a first-class
+        // origin *and* destination with no other code changes.
+        let d = register(&NewDevice {
+            mem_gib: Some(40.0),
+            usd_per_hr: Some(2.0),
+            ..NewDevice::new("sim-a40e", 84, 1740.0, 696.0, 37.4, true)
+        })
+        .unwrap();
+        let graph = crate::models::by_name("mlp", 16).unwrap();
+        let trace = crate::tracker::OperationTracker::new(d).track(&graph);
+        assert_eq!(trace.origin, d);
+        assert!(trace.run_time_ms() > 0.0);
+        let pred = crate::predict::HybridPredictor::wave_only().predict(&trace, Device::V100);
+        assert!(pred.run_time_ms() > 0.0);
+        let back = crate::predict::HybridPredictor::wave_only()
+            .predict(&crate::tracker::OperationTracker::new(Device::V100).track(&graph), d);
+        assert!(back.run_time_ms() > 0.0);
+        assert!(crate::cost::cost_normalized_throughput(d, 100.0).is_some());
+    }
+}

@@ -1,10 +1,16 @@
-//! The six GPUs of the paper's evaluation (Table 2), with the hardware
-//! characteristics Habitat's models consume. All numbers come from public
-//! NVIDIA datasheets / whitepapers; rental prices are the paper's Table 2
-//! (Google Cloud us-central1, June 2021).
+//! Device handles and the built-in GPU specifications.
+//!
+//! The six GPUs of the paper's evaluation (Table 2) ship as **seed
+//! entries** of the process-wide [`super::registry::DeviceRegistry`];
+//! additional GPUs can be registered at runtime (e.g. through the
+//! service's `register_device` request) without recompiling anything.
+//! All numbers for the built-ins come from public NVIDIA datasheets /
+//! whitepapers; rental prices are the paper's Table 2 (Google Cloud
+//! us-central1, June 2021).
 
-
-/// GPU micro-architecture generation. The paper spans three.
+/// GPU micro-architecture generation. The paper spans three; runtime-
+/// registered devices pick the closest match (it drives occupancy
+/// limits and tensor-core eligibility).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Arch {
     Pascal,
@@ -27,6 +33,16 @@ impl Arch {
     pub fn has_tensor_cores(self) -> bool {
         !matches!(self, Arch::Pascal)
     }
+
+    /// Parse from a lowercase name (used by `register_device`).
+    pub fn parse(s: &str) -> Option<Arch> {
+        match s.to_ascii_lowercase().as_str() {
+            "pascal" => Some(Arch::Pascal),
+            "volta" => Some(Arch::Volta),
+            "turing" => Some(Arch::Turing),
+            _ => None,
+        }
+    }
 }
 
 impl std::fmt::Display for Arch {
@@ -35,18 +51,22 @@ impl std::fmt::Display for Arch {
     }
 }
 
-/// The evaluated GPUs. Naming follows the paper.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub enum Device {
-    P4000,
-    P100,
-    V100,
-    Rtx2070,
-    Rtx2080Ti,
-    T4,
-}
+/// An interned device handle: a small index into the process-wide
+/// [`super::registry::DeviceRegistry`]. Built-in GPUs occupy the first
+/// six slots (in the paper's Table 2 order); devices registered at
+/// runtime follow. `Copy + Ord + Hash`, so it keys caches and dense
+/// per-device tables exactly like the old copy-enum did — but the set
+/// of devices is open.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Device(pub(crate) u32);
 
-/// All six devices, in the paper's Table 2 order.
+/// Alias that makes registry-handle intent explicit in signatures.
+pub type DeviceId = Device;
+
+/// The six built-in (seed) devices, in the paper's Table 2 order. This
+/// is the *paper's* evaluation set — experiments and golden tests sweep
+/// it. For "every device currently known" (including runtime
+/// registrations) use [`super::registry::all_devices`].
 pub const ALL_DEVICES: [Device; 6] = [
     Device::P4000,
     Device::P100,
@@ -111,133 +131,152 @@ impl GpuSpec {
     }
 }
 
+/// The built-in seed specs, indexed by [`Device::index`] of the matching
+/// [`ALL_DEVICES`] entry.
+pub(super) static BUILTIN_SPECS: [GpuSpec; 6] = [
+    // Quadro P4000 (GP104): 14 SMs × 128 cores, 8 GiB GDDR5.
+    GpuSpec {
+        device: Device::P4000,
+        name: "P4000",
+        arch: Arch::Pascal,
+        sms: 14,
+        cuda_cores: 1792,
+        mem_gib: 8.0,
+        peak_mem_bw_gbps: 243.0,
+        achieved_mem_bw_gbps: 192.0, // GDDR5 ≈ 79% of peak
+        boost_clock_mhz: 1480.0,
+        peak_fp32_tflops: 5.3,
+        peak_fp16_tflops: 5.3, // GP104 fp16 is not a fast path
+        l2_cache_kib: 2048,
+        max_threads_per_sm: 2048,
+        max_blocks_per_sm: 32,
+        regs_per_sm: 65_536,
+        smem_per_sm_bytes: 96 * 1024,
+        rental_usd_per_hr: None,
+    },
+    // Tesla P100 PCIe 16 GiB (GP100): 56 SMs × 64 cores, HBM2.
+    GpuSpec {
+        device: Device::P100,
+        name: "P100",
+        arch: Arch::Pascal,
+        sms: 56,
+        cuda_cores: 3584,
+        mem_gib: 16.0,
+        peak_mem_bw_gbps: 732.0,
+        achieved_mem_bw_gbps: 578.0, // HBM2 ≈ 79% of peak
+        boost_clock_mhz: 1303.0,
+        peak_fp32_tflops: 9.3,
+        peak_fp16_tflops: 18.7, // GP100 half-precision 2× path
+        l2_cache_kib: 4096,
+        max_threads_per_sm: 2048,
+        max_blocks_per_sm: 32,
+        regs_per_sm: 65_536,
+        smem_per_sm_bytes: 64 * 1024,
+        rental_usd_per_hr: Some(1.46),
+    },
+    // Tesla V100 SXM2 16 GiB (GV100): 80 SMs × 64 cores, HBM2.
+    GpuSpec {
+        device: Device::V100,
+        name: "V100",
+        arch: Arch::Volta,
+        sms: 80,
+        cuda_cores: 5120,
+        mem_gib: 16.0,
+        peak_mem_bw_gbps: 900.0,
+        achieved_mem_bw_gbps: 790.0, // HBM2 on Volta sustains ~88%
+        boost_clock_mhz: 1530.0,
+        peak_fp32_tflops: 15.7,
+        peak_fp16_tflops: 125.0, // tensor cores
+        l2_cache_kib: 6144,
+        max_threads_per_sm: 2048,
+        max_blocks_per_sm: 32,
+        regs_per_sm: 65_536,
+        smem_per_sm_bytes: 96 * 1024,
+        rental_usd_per_hr: Some(2.48),
+    },
+    // GeForce RTX 2070 (TU106): 36 SMs × 64 cores, GDDR6.
+    GpuSpec {
+        device: Device::Rtx2070,
+        name: "RTX2070",
+        arch: Arch::Turing,
+        sms: 36,
+        cuda_cores: 2304,
+        mem_gib: 8.0,
+        peak_mem_bw_gbps: 448.0,
+        achieved_mem_bw_gbps: 362.0, // GDDR6 ≈ 81% of peak
+        boost_clock_mhz: 1620.0,
+        peak_fp32_tflops: 7.5,
+        peak_fp16_tflops: 59.7, // tensor cores
+        l2_cache_kib: 4096,
+        max_threads_per_sm: 1024, // Turing halves thread residency
+        max_blocks_per_sm: 16,
+        regs_per_sm: 65_536,
+        smem_per_sm_bytes: 64 * 1024,
+        rental_usd_per_hr: None,
+    },
+    // GeForce RTX 2080 Ti (TU102): 68 SMs × 64 cores, GDDR6.
+    GpuSpec {
+        device: Device::Rtx2080Ti,
+        name: "RTX2080Ti",
+        arch: Arch::Turing,
+        sms: 68,
+        cuda_cores: 4352,
+        mem_gib: 11.0,
+        peak_mem_bw_gbps: 616.0,
+        achieved_mem_bw_gbps: 499.0,
+        boost_clock_mhz: 1545.0,
+        peak_fp32_tflops: 13.4,
+        peak_fp16_tflops: 107.0, // tensor cores
+        l2_cache_kib: 5632,
+        max_threads_per_sm: 1024,
+        max_blocks_per_sm: 16,
+        regs_per_sm: 65_536,
+        smem_per_sm_bytes: 64 * 1024,
+        rental_usd_per_hr: None,
+    },
+    // Tesla T4 (TU104): 40 SMs × 64 cores, GDDR6, 70 W envelope.
+    GpuSpec {
+        device: Device::T4,
+        name: "T4",
+        arch: Arch::Turing,
+        sms: 40,
+        cuda_cores: 2560,
+        mem_gib: 16.0,
+        peak_mem_bw_gbps: 320.0,
+        achieved_mem_bw_gbps: 259.0,
+        // T4 is power-limited: the sustained clock is well below the
+        // 1590 MHz datasheet boost. We model the sustained clock.
+        boost_clock_mhz: 1350.0,
+        peak_fp32_tflops: 8.1,
+        peak_fp16_tflops: 65.0, // tensor cores
+        l2_cache_kib: 4096,
+        max_threads_per_sm: 1024,
+        max_blocks_per_sm: 16,
+        regs_per_sm: 65_536,
+        smem_per_sm_bytes: 64 * 1024,
+        rental_usd_per_hr: Some(0.35),
+    },
+];
+
+// The built-in handles keep the old enum-variant names (mixed case) so
+// every existing `Device::Rtx2070`-style call site still compiles.
+#[allow(non_upper_case_globals)]
 impl Device {
-    /// Look up the full hardware spec for this device.
+    pub const P4000: Device = Device(0);
+    pub const P100: Device = Device(1);
+    pub const V100: Device = Device(2);
+    pub const Rtx2070: Device = Device(3);
+    pub const Rtx2080Ti: Device = Device(4);
+    pub const T4: Device = Device(5);
+
+    /// Look up the full hardware spec for this device in the registry.
     pub fn spec(self) -> &'static GpuSpec {
-        match self {
-            // Quadro P4000 (GP104): 14 SMs × 128 cores, 8 GiB GDDR5.
-            Device::P4000 => &GpuSpec {
-                device: Device::P4000,
-                name: "P4000",
-                arch: Arch::Pascal,
-                sms: 14,
-                cuda_cores: 1792,
-                mem_gib: 8.0,
-                peak_mem_bw_gbps: 243.0,
-                achieved_mem_bw_gbps: 192.0, // GDDR5 ≈ 79% of peak
-                boost_clock_mhz: 1480.0,
-                peak_fp32_tflops: 5.3,
-                peak_fp16_tflops: 5.3, // GP104 fp16 is not a fast path
-                l2_cache_kib: 2048,
-                max_threads_per_sm: 2048,
-                max_blocks_per_sm: 32,
-                regs_per_sm: 65_536,
-                smem_per_sm_bytes: 96 * 1024,
-                rental_usd_per_hr: None,
-            },
-            // Tesla P100 PCIe 16 GiB (GP100): 56 SMs × 64 cores, HBM2.
-            Device::P100 => &GpuSpec {
-                device: Device::P100,
-                name: "P100",
-                arch: Arch::Pascal,
-                sms: 56,
-                cuda_cores: 3584,
-                mem_gib: 16.0,
-                peak_mem_bw_gbps: 732.0,
-                achieved_mem_bw_gbps: 578.0, // HBM2 ≈ 79% of peak
-                boost_clock_mhz: 1303.0,
-                peak_fp32_tflops: 9.3,
-                peak_fp16_tflops: 18.7, // GP100 half-precision 2× path
-                l2_cache_kib: 4096,
-                max_threads_per_sm: 2048,
-                max_blocks_per_sm: 32,
-                regs_per_sm: 65_536,
-                smem_per_sm_bytes: 64 * 1024,
-                rental_usd_per_hr: Some(1.46),
-            },
-            // Tesla V100 SXM2 16 GiB (GV100): 80 SMs × 64 cores, HBM2.
-            Device::V100 => &GpuSpec {
-                device: Device::V100,
-                name: "V100",
-                arch: Arch::Volta,
-                sms: 80,
-                cuda_cores: 5120,
-                mem_gib: 16.0,
-                peak_mem_bw_gbps: 900.0,
-                achieved_mem_bw_gbps: 790.0, // HBM2 on Volta sustains ~88%
-                boost_clock_mhz: 1530.0,
-                peak_fp32_tflops: 15.7,
-                peak_fp16_tflops: 125.0, // tensor cores
-                l2_cache_kib: 6144,
-                max_threads_per_sm: 2048,
-                max_blocks_per_sm: 32,
-                regs_per_sm: 65_536,
-                smem_per_sm_bytes: 96 * 1024,
-                rental_usd_per_hr: Some(2.48),
-            },
-            // GeForce RTX 2070 (TU106): 36 SMs × 64 cores, GDDR6.
-            Device::Rtx2070 => &GpuSpec {
-                device: Device::Rtx2070,
-                name: "RTX2070",
-                arch: Arch::Turing,
-                sms: 36,
-                cuda_cores: 2304,
-                mem_gib: 8.0,
-                peak_mem_bw_gbps: 448.0,
-                achieved_mem_bw_gbps: 362.0, // GDDR6 ≈ 81% of peak
-                boost_clock_mhz: 1620.0,
-                peak_fp32_tflops: 7.5,
-                peak_fp16_tflops: 59.7, // tensor cores
-                l2_cache_kib: 4096,
-                max_threads_per_sm: 1024, // Turing halves thread residency
-                max_blocks_per_sm: 16,
-                regs_per_sm: 65_536,
-                smem_per_sm_bytes: 64 * 1024,
-                rental_usd_per_hr: None,
-            },
-            // GeForce RTX 2080 Ti (TU102): 68 SMs × 64 cores, GDDR6.
-            Device::Rtx2080Ti => &GpuSpec {
-                device: Device::Rtx2080Ti,
-                name: "RTX2080Ti",
-                arch: Arch::Turing,
-                sms: 68,
-                cuda_cores: 4352,
-                mem_gib: 11.0,
-                peak_mem_bw_gbps: 616.0,
-                achieved_mem_bw_gbps: 499.0,
-                boost_clock_mhz: 1545.0,
-                peak_fp32_tflops: 13.4,
-                peak_fp16_tflops: 107.0, // tensor cores
-                l2_cache_kib: 5632,
-                max_threads_per_sm: 1024,
-                max_blocks_per_sm: 16,
-                regs_per_sm: 65_536,
-                smem_per_sm_bytes: 64 * 1024,
-                rental_usd_per_hr: None,
-            },
-            // Tesla T4 (TU104): 40 SMs × 64 cores, GDDR6, 70 W envelope.
-            Device::T4 => &GpuSpec {
-                device: Device::T4,
-                name: "T4",
-                arch: Arch::Turing,
-                sms: 40,
-                cuda_cores: 2560,
-                mem_gib: 16.0,
-                peak_mem_bw_gbps: 320.0,
-                achieved_mem_bw_gbps: 259.0,
-                // T4 is power-limited: the sustained clock is well below the
-                // 1590 MHz datasheet boost. We model the sustained clock.
-                boost_clock_mhz: 1350.0,
-                peak_fp32_tflops: 8.1,
-                peak_fp16_tflops: 65.0, // tensor cores
-                l2_cache_kib: 4096,
-                max_threads_per_sm: 1024,
-                max_blocks_per_sm: 16,
-                regs_per_sm: 65_536,
-                smem_per_sm_bytes: 64 * 1024,
-                rental_usd_per_hr: Some(0.35),
-            },
-        }
+        super::registry::spec_of(self)
+    }
+
+    /// Whether this is one of the six built-in (paper Table 2) devices.
+    pub fn is_builtin(self) -> bool {
+        (self.0 as usize) < ALL_DEVICES.len()
     }
 
     /// Short stable identifier (used in CSV output and the CLI).
@@ -245,29 +284,34 @@ impl Device {
         self.spec().name
     }
 
-    /// Position of this device in [`ALL_DEVICES`] — the index used by
-    /// the dense per-device tables of [`crate::plan::AnalyzedPlan`].
+    /// Position of this device in the registry — the index used by the
+    /// dense per-device tables of [`crate::plan::AnalyzedPlan`]. For the
+    /// built-ins this is also the position in [`ALL_DEVICES`].
     pub fn index(self) -> usize {
-        self as usize
+        self.0 as usize
     }
 
-    /// Parse a device from its short name (case-insensitive).
+    /// Parse a device from its short name (case-insensitive), consulting
+    /// the registry — runtime-registered devices parse too.
     pub fn parse(s: &str) -> Option<Device> {
-        let s = s.to_ascii_lowercase();
-        ALL_DEVICES
-            .into_iter()
-            .find(|d| d.id().to_ascii_lowercase() == s)
-            .or(match s.as_str() {
-                "2070" => Some(Device::Rtx2070),
-                "2080ti" => Some(Device::Rtx2080Ti),
-                _ => None,
-            })
+        super::registry::find(s)
     }
 }
 
 impl std::fmt::Display for Device {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{}", self.id())
+        match super::registry::try_spec(*self) {
+            Some(s) => write!(f, "{}", s.name),
+            None => write!(f, "device#{}", self.0),
+        }
+    }
+}
+
+impl std::fmt::Debug for Device {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Print the name (like the old enum's derived Debug did), not
+        // the raw index.
+        std::fmt::Display::fmt(self, f)
     }
 }
 
@@ -343,5 +387,11 @@ mod tests {
         assert!(!Arch::Pascal.has_tensor_cores());
         assert!(Arch::Volta.has_tensor_cores());
         assert!(Arch::Turing.has_tensor_cores());
+    }
+
+    #[test]
+    fn debug_and_display_print_the_name() {
+        assert_eq!(format!("{}", Device::V100), "V100");
+        assert_eq!(format!("{:?}", Device::T4), "T4");
     }
 }

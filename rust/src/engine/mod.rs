@@ -66,6 +66,10 @@ pub type TraceKey = (String, usize, Device, Precision);
 /// hundred KB, so this bounds the cache at tens of MB.
 pub const DEFAULT_TRACE_CAPACITY: usize = 128;
 
+/// Default number of client-uploaded traces (`submit_trace`) kept hot,
+/// keyed by content hash.
+pub const DEFAULT_UPLOAD_CAPACITY: usize = 256;
+
 /// Environment variable overriding the fan-out worker-pool width.
 pub const WORKERS_ENV: &str = "HABITAT_WORKERS";
 
@@ -115,6 +119,15 @@ pub struct EngineStats {
     pub trace_misses: u64,
     /// Trace+plan entries currently resident.
     pub trace_entries: usize,
+    /// Distinct traces accepted through
+    /// [`PredictionEngine::submit_trace`] (idempotent re-submissions
+    /// not counted).
+    pub trace_uploads: u64,
+    /// Uploaded trace+plan entries currently resident.
+    pub uploaded_entries: usize,
+    /// Devices currently in the registry (built-ins + runtime
+    /// registrations).
+    pub devices: usize,
     /// [`AnalyzedPlan`] compilations (cache misses plus one-off
     /// [`PredictionEngine::analyze`] builds for external traces). The
     /// plan rides the same cache entry as its trace, so cached-plan
@@ -138,8 +151,14 @@ pub struct PredictionEngine {
     /// the first builder instead of re-running the tracking pipeline
     /// (distinct keys still track in parallel).
     building: Mutex<std::collections::HashMap<TraceKey, Arc<Mutex<()>>>>,
+    /// Client-uploaded traces (`submit_trace`), analyzed once and keyed
+    /// by a content hash of their canonical JSON — arbitrary non-zoo
+    /// workloads flow through the same plan/evaluate machinery as the
+    /// zoo models.
+    uploads: Mutex<LruCache<String, AnalyzedTrace>>,
     trace_hits: AtomicU64,
     trace_misses: AtomicU64,
+    trace_uploads: AtomicU64,
     plan_builds: AtomicU64,
     /// Desired fan-out pool width; the pool itself is spawned lazily on
     /// the first [`PredictionEngine::fan_out`] that needs it, so engines
@@ -173,8 +192,10 @@ impl PredictionEngine {
             predictor: Arc::new(predictor),
             entries: Mutex::new(LruCache::new(capacity)),
             building: Mutex::new(std::collections::HashMap::new()),
+            uploads: Mutex::new(LruCache::new(DEFAULT_UPLOAD_CAPACITY)),
             trace_hits: AtomicU64::new(0),
             trace_misses: AtomicU64::new(0),
+            trace_uploads: AtomicU64::new(0),
             plan_builds: AtomicU64::new(0),
             workers,
             pool: OnceLock::new(),
@@ -295,6 +316,90 @@ impl PredictionEngine {
         Arc::new(AnalyzedPlan::build(trace, &self.predictor.metrics_policy))
     }
 
+    /// Accept a client-supplied trace (the open-world analogue of the
+    /// zoo-model tracking pipeline): analyze it once and retain
+    /// trace + plan under a **content-hashed id** (`tr-<16 hex>`), which
+    /// [`PredictionEngine::predict_uploaded`] /
+    /// [`PredictionEngine::rank_uploaded`] accept in place of
+    /// `(model, batch, origin)`. Deterministic and idempotent: the same
+    /// trace always maps to the same id, and re-submission reuses the
+    /// already-compiled plan.
+    pub fn submit_trace(&self, trace: Trace) -> Result<(String, AnalyzedTrace)> {
+        anyhow::ensure!(!trace.ops.is_empty(), "trace has no ops");
+        anyhow::ensure!(trace.batch_size > 0, "trace batch_size must be positive");
+        let canonical = trace.to_json();
+        let id = format!("tr-{:016x}", crate::util::rng::hash_str(&canonical));
+        // The id is a 64-bit content hash; on any hit, confirm the
+        // content actually matches so a collision surfaces as an error
+        // instead of silently serving another client's trace.
+        if let Some(entry) = self.uploads.lock().unwrap().get(&id) {
+            anyhow::ensure!(
+                entry.trace.to_json() == canonical,
+                "trace id {id} collides with a different previously submitted trace"
+            );
+            return Ok((id, entry));
+        }
+        // Analyze outside the lock: a large plan compile must not block
+        // concurrent uploaded-trace predictions or stats reads.
+        let entry = AnalyzedTrace {
+            plan: self.analyze(&trace),
+            trace: Arc::new(trace),
+        };
+        let mut uploads = self.uploads.lock().unwrap();
+        if let Some(existing) = uploads.get(&id) {
+            // Raced with an identical concurrent submission: keep the
+            // first entry and count the upload once.
+            anyhow::ensure!(
+                existing.trace.to_json() == canonical,
+                "trace id {id} collides with a different previously submitted trace"
+            );
+            return Ok((id, existing));
+        }
+        self.trace_uploads.fetch_add(1, Relaxed);
+        uploads.insert(id.clone(), entry.clone());
+        Ok((id, entry))
+    }
+
+    /// Look up a previously submitted trace by id.
+    pub fn uploaded(&self, trace_id: &str) -> Option<AnalyzedTrace> {
+        self.uploads.lock().unwrap().get(&trace_id.to_string())
+    }
+
+    fn uploaded_or_err(&self, trace_id: &str) -> Result<AnalyzedTrace> {
+        self.uploaded(trace_id).ok_or_else(|| {
+            anyhow::anyhow!("unknown trace {trace_id:?} (submit_trace it first — ids may also age out of the upload cache)")
+        })
+    }
+
+    /// Predict a previously submitted trace onto one destination — the
+    /// same plan/evaluate path as a zoo model, so the result is
+    /// identical to the equivalent in-process `analyze` + `evaluate`.
+    pub fn predict_uploaded(
+        &self,
+        trace_id: &str,
+        dest: Device,
+        precision: Precision,
+    ) -> Result<EnginePrediction> {
+        let analyzed = self.uploaded_or_err(trace_id)?;
+        let pred = self.evaluate(&analyzed.plan, dest, precision);
+        Ok(EnginePrediction {
+            trace: analyzed.trace,
+            pred,
+        })
+    }
+
+    /// Rank destinations for a previously submitted trace.
+    pub fn rank_uploaded(
+        &self,
+        trace_id: &str,
+        dests: &[Device],
+        precision: Precision,
+    ) -> Result<Ranking> {
+        anyhow::ensure!(!dests.is_empty(), "rank needs at least one destination");
+        let analyzed = self.uploaded_or_err(trace_id)?;
+        Ok(self.rank_analyzed(&analyzed, dests, precision))
+    }
+
     /// Predict one `(model, batch, origin) → dest` pair, tracking (or
     /// reusing) the origin trace. `precision` selects the prediction:
     /// FP32 directly, or the AMP transform composed on top (§6.1.2).
@@ -402,6 +507,17 @@ impl PredictionEngine {
         anyhow::ensure!(batch > 0, "batch must be positive");
         anyhow::ensure!(!dests.is_empty(), "rank needs at least one destination");
         let analyzed = self.analyzed(model, batch, origin)?;
+        Ok(self.rank_analyzed(&analyzed, dests, precision))
+    }
+
+    /// Fan out one analyzed trace and sort by cost-normalized
+    /// throughput — shared by the zoo-model and uploaded-trace ranks.
+    fn rank_analyzed(
+        &self,
+        analyzed: &AnalyzedTrace,
+        dests: &[Device],
+        precision: Precision,
+    ) -> Ranking {
         let preds = self.fan_out(&analyzed.plan, dests, precision);
         let mut entries: Vec<RankEntry> = dests
             .iter()
@@ -421,10 +537,10 @@ impl PredictionEngine {
                 (b.cost_normalized_throughput, b.pred.throughput()),
             )
         });
-        Ok(Ranking {
-            trace: analyzed.trace,
+        Ranking {
+            trace: Arc::clone(&analyzed.trace),
             entries,
-        })
+        }
     }
 
     /// Counter snapshot (trace/plan cache + shared wave table + pool).
@@ -434,6 +550,9 @@ impl PredictionEngine {
             trace_hits: self.trace_hits.load(Relaxed),
             trace_misses: self.trace_misses.load(Relaxed),
             trace_entries: self.entries.lock().unwrap().len(),
+            trace_uploads: self.trace_uploads.load(Relaxed),
+            uploaded_entries: self.uploads.lock().unwrap().len(),
+            devices: crate::device::registry::device_count(),
             plan_builds: self.plan_builds.load(Relaxed),
             wave_hits,
             wave_misses,
@@ -654,6 +773,68 @@ mod tests {
         assert!(e
             .rank("not_a_model", 8, Device::T4, &ALL_DEVICES, Precision::Fp32)
             .is_err());
+    }
+
+    #[test]
+    fn submit_trace_is_content_keyed_and_idempotent() {
+        let e = engine();
+        let graph = crate::models::by_name("mlp", 24).unwrap();
+        let trace = OperationTracker::new(Device::T4).track(&graph);
+        let (id, analyzed) = e.submit_trace(trace.clone()).unwrap();
+        assert!(id.starts_with("tr-"), "{id}");
+        let (id2, analyzed2) = e.submit_trace(trace).unwrap();
+        assert_eq!(id, id2, "same content must map to the same id");
+        assert!(Arc::ptr_eq(&analyzed.plan, &analyzed2.plan), "plan compiled once");
+        let s = e.stats();
+        assert_eq!(s.trace_uploads, 1, "re-submission is not a new upload");
+        assert_eq!(s.uploaded_entries, 1);
+        assert_eq!(s.plan_builds, 1);
+
+        // A different trace gets a different id.
+        let other = OperationTracker::new(Device::T4)
+            .track(&crate::models::by_name("mlp", 48).unwrap());
+        let (other_id, _) = e.submit_trace(other).unwrap();
+        assert_ne!(id, other_id);
+    }
+
+    #[test]
+    fn uploaded_trace_predictions_match_in_process_evaluation() {
+        let e = engine();
+        let graph = crate::models::by_name("mlp", 24).unwrap();
+        let trace = OperationTracker::new(Device::T4).track(&graph);
+        let (id, analyzed) = e.submit_trace(trace).unwrap();
+
+        let up = e.predict_uploaded(&id, Device::V100, Precision::Fp32).unwrap();
+        let direct = e.evaluate(&analyzed.plan, Device::V100, Precision::Fp32);
+        assert_eq!(up.pred.run_time_ms().to_bits(), direct.run_time_ms().to_bits());
+        assert!(Arc::ptr_eq(&up.trace, &analyzed.trace));
+
+        let ranking = e.rank_uploaded(&id, &ALL_DEVICES, Precision::Amp).unwrap();
+        assert_eq!(ranking.entries.len(), ALL_DEVICES.len());
+        for en in &ranking.entries {
+            let single = e.predict_uploaded(&id, en.dest, Precision::Amp).unwrap();
+            assert_eq!(
+                en.pred.run_time_ms().to_bits(),
+                single.pred.run_time_ms().to_bits(),
+                "{}",
+                en.dest
+            );
+        }
+    }
+
+    #[test]
+    fn uploaded_trace_errors() {
+        let e = engine();
+        assert!(e.predict_uploaded("tr-nope", Device::V100, Precision::Fp32).is_err());
+        assert!(e.rank_uploaded("tr-nope", &ALL_DEVICES, Precision::Fp32).is_err());
+        let empty = Trace {
+            model: "empty".into(),
+            batch_size: 1,
+            origin: Device::T4,
+            precision: Precision::Fp32,
+            ops: Vec::new(),
+        };
+        assert!(e.submit_trace(empty).is_err(), "an op-less trace is rejected");
     }
 
     #[test]

@@ -82,6 +82,20 @@
 //! request that returns every destination GPU ordered by cost-normalized
 //! throughput in a single RPC and a `stats` request exposing the
 //! trace/plan cache counters and pool size (see `docs/SERVICE.md`).
+//!
+//! ## The open world: device registry and trace upload
+//!
+//! The device set is not a closed enum. The six paper GPUs are seed
+//! entries of the process-wide [`device::registry`]; new accelerators
+//! register at runtime — in-process via [`device::registry::register`],
+//! or over the wire via the v2 envelope's `register_device` op — and are
+//! immediately valid as origins, destinations, `rank` candidates,
+//! scheduler inventory, and dataset rows. Likewise, workloads are not
+//! limited to the model zoo: a [`Trace`] profiled anywhere can be
+//! uploaded with `submit_trace` and predicted by its content-hashed
+//! `trace_id` through the same cached-plan machinery. All v2 requests
+//! ride a versioned envelope (`{"v":2,"op":...}`) with structured
+//! errors, while v1 request lines keep working bit-identically.
 
 pub mod cluster;
 pub mod coordinator;
@@ -100,7 +114,7 @@ pub mod sim;
 pub mod tracker;
 pub mod util;
 
-pub use device::{Arch, Device, GpuSpec};
+pub use device::{Arch, Device, DeviceId, GpuSpec, NewDevice};
 pub use engine::PredictionEngine;
 pub use opgraph::{Graph, Op, OpKind};
 pub use plan::{AnalyzedPlan, AnalyzedTrace};

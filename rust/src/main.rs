@@ -14,7 +14,7 @@
 //! (Flag parsing is hand-rolled: the build environment is offline and has
 //! no clap; see Cargo.toml.)
 
-use habitat::device::{Device, ALL_DEVICES};
+use habitat::device::{registry, Device};
 use habitat::engine::PredictionEngine;
 use habitat::{models, OperationTracker, Precision};
 
@@ -69,7 +69,11 @@ fn parse_device(s: &str) -> anyhow::Result<Device> {
     Device::parse(s).ok_or_else(|| {
         anyhow::anyhow!(
             "unknown device {s:?}; expected one of {}",
-            ALL_DEVICES.map(|d| d.id().to_ascii_lowercase()).join(", ")
+            registry::device_names()
+                .iter()
+                .map(|n| n.to_ascii_lowercase())
+                .collect::<Vec<_>>()
+                .join(", ")
         )
     })
 }
@@ -180,7 +184,8 @@ fn main() -> anyhow::Result<()> {
             let world = args.get_usize("dp", 1)?;
             // One tracking pass, fanned out to every destination on the
             // engine's worker pool, ranked by cost-normalized throughput.
-            let ranking = engine.rank(&model, batch, origin, &ALL_DEVICES, Precision::Fp32)?;
+            // Every device in the registry, runtime registrations included.
+            let ranking = engine.rank(&model, batch, origin, &registry::all_devices(), Precision::Fp32)?;
             println!(
                 "{model} (batch {batch}) from {origin}{}, best decision first:",
                 if world > 1 { format!(", data-parallel ×{world} (pcie3)") } else { String::new() }
@@ -255,7 +260,7 @@ fn main() -> anyhow::Result<()> {
                 "{:<10} {:<7} {:>4} {:>6} {:>9} {:>9} {:>7} {:>8}",
                 "GPU", "Arch", "SMs", "Mem", "BW(GB/s)", "TFLOPS", "Clock", "$/hr"
             );
-            for d in ALL_DEVICES {
+            for d in registry::all_devices() {
                 let s = d.spec();
                 println!(
                     "{:<10} {:<7} {:>4} {:>4}GB {:>9.0} {:>9.1} {:>6.0}M {:>8}",

@@ -32,10 +32,11 @@
 //! which is kept as the reference implementation and pinned against the
 //! plan path by the golden regression tests.
 
+use std::borrow::Cow;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
-use crate::device::{Device, LaunchConfig, ALL_DEVICES};
+use crate::device::{registry, Device, GpuSpec, LaunchConfig};
 use crate::engine::memo::WaveTable;
 use crate::lowering::Precision;
 use crate::opgraph::MlpOp;
@@ -65,9 +66,18 @@ pub struct MlpGroup {
 
 /// The flat, destination-independent compilation of one tracked trace.
 ///
-/// All per-device tables are dense over [`ALL_DEVICES`], indexed by
+/// All per-device tables are dense over the [`registry`] **snapshot
+/// taken at build time** ([`AnalyzedPlan::n_devices`]), indexed by
 /// [`Device::index`]; per-kernel arrays are flattened in prediction
 /// order (for each op: forward kernels, then backward kernels).
+///
+/// Open-world coherence: a device registered *after* this plan was
+/// compiled is outside the dense tables, so its lane is computed on
+/// demand from the retained per-kernel metadata (same formulas, same
+/// shared wave table — bit-identical to a plan rebuilt after the
+/// registration). Cached plans therefore never go stale when the
+/// registry grows; they just serve the new device through the slightly
+/// slower computed path until the cache entry is naturally rebuilt.
 pub struct AnalyzedPlan {
     pub model: String,
     pub batch_size: usize,
@@ -93,14 +103,27 @@ pub struct AnalyzedPlan {
     blocks: Vec<u64>,
     /// Index into the deduplicated launch-shape tables.
     shape_idx: Vec<u32>,
+    /// Arithmetic intensity (FLOPs/byte) — retained so lanes for
+    /// devices registered after this plan was built can be computed.
+    intensity: Vec<f64>,
+    /// Tensor-core eligibility (AMP-lane computation for new devices).
+    tensor_core: Vec<bool>,
+    /// Metrics availability under the build policy (γ fallback mask).
+    profiled: Vec<bool>,
 
     // --- per-shape arrays (len = n_shapes) --------------------------
+    /// Deduplicated launch shapes (wave-size lookups for new devices).
+    shapes: Vec<LaunchConfig>,
     /// Wave size on the origin device, clamped to ≥ 1.
     wave_origin: Vec<u64>,
-    /// Wave size on every device: `[device.index() * n_shapes + shape]`.
+    /// Wave size on every snapshot device:
+    /// `[device.index() * n_shapes + shape]`.
     wave_dest: Vec<u64>,
 
     // --- per-(device, kernel) / per-(device, op) tables -------------
+    /// Registry size when this plan was compiled: the extent of the
+    /// dense per-device tables below.
+    n_devices: usize,
     /// Effective γ with the metrics policy baked in (γ = 1 fallback for
     /// unprofiled kernels): `[device.index() * n_kernels + kernel]`.
     gamma: Vec<f64>,
@@ -109,6 +132,73 @@ pub struct AnalyzedPlan {
 
     // --- MLP dispatch -----------------------------------------------
     mlp_groups: Vec<MlpGroup>,
+}
+
+/// One device's policy-masked γ per kernel, appended to `out`. Shared
+/// by the dense build pass and the computed lane for devices registered
+/// after a plan's snapshot (keeps the two paths bit-identical).
+fn gamma_row_into(intensity: &[f64], profiled: &[bool], spec: &GpuSpec, out: &mut Vec<f64>) {
+    for k in 0..intensity.len() {
+        out.push(if profiled[k] { roofline::gamma(intensity[k], spec) } else { 1.0 });
+    }
+}
+
+/// One device's Daydream AMP factor per op (time-weighted mean over the
+/// op's kernels, raw γ — never the policy fallback), appended to `out`.
+#[allow(clippy::too_many_arguments)]
+fn amp_row_into(
+    time_ms: &[f64],
+    intensity: &[f64],
+    tensor_core: &[bool],
+    kern_start: &[u32],
+    kern_fwd_end: &[u32],
+    kern_end: &[u32],
+    spec: &GpuSpec,
+    out: &mut Vec<f64>,
+) {
+    for o in 0..kern_start.len() {
+        let (start, mid, end) = (
+            kern_start[o] as usize,
+            kern_fwd_end[o] as usize,
+            kern_end[o] as usize,
+        );
+        let fwd_ms: f64 = time_ms[start..mid].iter().sum();
+        let bwd_ms: f64 = time_ms[mid..end].iter().sum();
+        let total = fwd_ms + bwd_ms;
+        if total <= 0.0 {
+            out.push(1.0);
+            continue;
+        }
+        let weighted: f64 = (start..end)
+            .map(|k| {
+                let g = roofline::gamma(intensity[k], spec);
+                amp::amp_factor(g, tensor_core[k], spec) * time_ms[k]
+            })
+            .sum();
+        out.push(weighted / total);
+    }
+}
+
+/// One destination's view of a plan: γ per kernel and wave size per
+/// launch shape. Borrowed slices of the dense tables for devices inside
+/// the plan's registry snapshot; computed vectors (same helpers, same
+/// wave table) for devices registered after it.
+pub struct DeviceLanes<'a> {
+    gamma: Cow<'a, [f64]>,
+    wave: Cow<'a, [u64]>,
+    shape_idx: &'a [u32],
+}
+
+impl DeviceLanes<'_> {
+    /// Effective γ of a kernel (policy fallback baked in).
+    pub fn gamma(&self, kernel: usize) -> f64 {
+        self.gamma[kernel]
+    }
+
+    /// Wave size of a kernel's launch shape on the destination.
+    pub fn wave_dest(&self, kernel: usize) -> u64 {
+        self.wave[self.shape_idx[kernel] as usize]
+    }
 }
 
 impl AnalyzedPlan {
@@ -188,7 +278,10 @@ impl AnalyzedPlan {
 
         let n_kernels = time_ms.len();
         let n_shapes = shapes.len();
-        let n_devices = ALL_DEVICES.len();
+        // Snapshot the open-world registry: runtime-registered devices
+        // get dense lanes in every plan built from here on.
+        let devices = registry::all_devices();
+        let n_devices = devices.len();
 
         // Batched wave-size resolution: every (shape, device) pair, one
         // pass, through the shared memo table (so the simulator and any
@@ -200,7 +293,7 @@ impl AnalyzedPlan {
             .map(|s| table.wave_size(origin_spec, s).max(1))
             .collect();
         let mut wave_dest = Vec::with_capacity(n_devices * n_shapes);
-        for dev in ALL_DEVICES {
+        for dev in &devices {
             let spec = dev.spec();
             for s in &shapes {
                 wave_dest.push(table.wave_size(spec, s).max(1));
@@ -213,35 +306,24 @@ impl AnalyzedPlan {
         // per-destination selection) and the Daydream AMP factor per op
         // (the time-weighted mean of per-kernel AMP factors, exactly as
         // `predict::amp::amp_transform` computes it — the AMP transform
-        // always uses the raw γ, never the fallback).
+        // always uses the raw γ, never the fallback). The same two
+        // helpers serve the post-snapshot computed lanes, so the dense
+        // and on-demand paths cannot drift.
         let mut gamma = Vec::with_capacity(n_devices * n_kernels);
         let mut amp_op_factor = Vec::with_capacity(n_devices * n_ops);
-        let mut raw_gamma = vec![0.0f64; n_kernels];
-        for dev in ALL_DEVICES {
+        for dev in &devices {
             let spec = dev.spec();
-            for k in 0..n_kernels {
-                let g = roofline::gamma(intensity[k], spec);
-                raw_gamma[k] = g;
-                gamma.push(if profiled[k] { g } else { 1.0 });
-            }
-            for o in 0..n_ops {
-                let (start, mid, end) = (
-                    kern_start[o] as usize,
-                    kern_fwd_end[o] as usize,
-                    kern_end[o] as usize,
-                );
-                let fwd_ms: f64 = time_ms[start..mid].iter().sum();
-                let bwd_ms: f64 = time_ms[mid..end].iter().sum();
-                let total = fwd_ms + bwd_ms;
-                if total <= 0.0 {
-                    amp_op_factor.push(1.0);
-                    continue;
-                }
-                let weighted: f64 = (start..end)
-                    .map(|k| amp::amp_factor(raw_gamma[k], tensor_core[k], spec) * time_ms[k])
-                    .sum();
-                amp_op_factor.push(weighted / total);
-            }
+            gamma_row_into(&intensity, &profiled, spec, &mut gamma);
+            amp_row_into(
+                &time_ms,
+                &intensity,
+                &tensor_core,
+                &kern_start,
+                &kern_fwd_end,
+                &kern_end,
+                spec,
+                &mut amp_op_factor,
+            );
         }
 
         let mlp_groups = mlp_items
@@ -264,8 +346,13 @@ impl AnalyzedPlan {
             time_ms,
             blocks,
             shape_idx,
+            intensity,
+            tensor_core,
+            profiled,
+            shapes,
             wave_origin,
             wave_dest,
+            n_devices,
             gamma,
             amp_op_factor,
             mlp_groups,
@@ -314,19 +401,89 @@ impl AnalyzedPlan {
         self.blocks[kernel]
     }
 
+    /// Registry size when this plan was compiled (the extent of the
+    /// dense per-device tables).
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
     /// Wave size of a kernel's launch shape on the origin device.
     pub fn wave_origin(&self, kernel: usize) -> u64 {
         self.wave_origin[self.shape_idx[kernel] as usize]
     }
 
-    /// Wave size of a kernel's launch shape on `dest` (precomputed).
+    /// Wave size of a kernel's launch shape on `dest` (precomputed for
+    /// snapshot devices; resolved through the shared wave table for
+    /// devices registered after the snapshot).
     pub fn wave_dest(&self, kernel: usize, dest: Device) -> u64 {
-        self.wave_dest[dest.index() * self.n_shapes() + self.shape_idx[kernel] as usize]
+        let s = self.shape_idx[kernel] as usize;
+        if dest.index() < self.n_devices {
+            self.wave_dest[dest.index() * self.n_shapes() + s]
+        } else {
+            WaveTable::global().wave_size(dest.spec(), &self.shapes[s]).max(1)
+        }
     }
 
     /// Effective γ of a kernel on `dest` (policy fallback baked in).
     pub fn gamma(&self, kernel: usize, dest: Device) -> f64 {
-        self.gamma[dest.index() * self.n_kernels() + kernel]
+        if dest.index() < self.n_devices {
+            self.gamma[dest.index() * self.n_kernels() + kernel]
+        } else if self.profiled[kernel] {
+            roofline::gamma(self.intensity[kernel], dest.spec())
+        } else {
+            1.0
+        }
+    }
+
+    /// One destination's γ/wave lanes, borrowed from the dense tables
+    /// when `dest` is inside the snapshot, computed once per call when
+    /// it was registered later (bit-identical either way). The
+    /// evaluators fetch this once and index it per kernel, keeping the
+    /// hot loop branch- and lock-free for snapshot devices.
+    pub fn device_lanes(&self, dest: Device) -> DeviceLanes<'_> {
+        let (nk, ns) = (self.n_kernels(), self.n_shapes());
+        let d = dest.index();
+        if d < self.n_devices {
+            DeviceLanes {
+                gamma: Cow::Borrowed(&self.gamma[d * nk..(d + 1) * nk]),
+                wave: Cow::Borrowed(&self.wave_dest[d * ns..(d + 1) * ns]),
+                shape_idx: &self.shape_idx,
+            }
+        } else {
+            let spec = dest.spec();
+            let mut gamma = Vec::with_capacity(nk);
+            gamma_row_into(&self.intensity, &self.profiled, spec, &mut gamma);
+            let table = WaveTable::global();
+            let wave = self.shapes.iter().map(|s| table.wave_size(spec, s).max(1)).collect();
+            DeviceLanes {
+                gamma: Cow::Owned(gamma),
+                wave: Cow::Owned(wave),
+                shape_idx: &self.shape_idx,
+            }
+        }
+    }
+
+    /// The Daydream AMP factor per op on `dest` (precomputed or, for a
+    /// post-snapshot device, recomputed with the build helpers).
+    pub fn amp_factors(&self, dest: Device) -> Cow<'_, [f64]> {
+        let d = dest.index();
+        let no = self.n_ops();
+        if d < self.n_devices {
+            Cow::Borrowed(&self.amp_op_factor[d * no..(d + 1) * no])
+        } else {
+            let mut row = Vec::with_capacity(no);
+            amp_row_into(
+                &self.time_ms,
+                &self.intensity,
+                &self.tensor_core,
+                &self.kern_start,
+                &self.kern_fwd_end,
+                &self.kern_end,
+                dest.spec(),
+                &mut row,
+            );
+            Cow::Owned(row)
+        }
     }
 
     pub fn mlp_groups(&self) -> &[MlpGroup] {
@@ -337,9 +494,9 @@ impl AnalyzedPlan {
     /// FP32 prediction of this plan on `pred.dest`, in place.
     /// Bit-identical to [`amp::amp_transform`] over the source trace.
     pub fn apply_amp(&self, pred: &mut PredictedTrace) {
-        let base = pred.dest.index() * self.n_ops();
+        let factors = self.amp_factors(pred.dest);
         for (o, op) in pred.ops.iter_mut().enumerate() {
-            op.time_ms *= self.amp_op_factor[base + o];
+            op.time_ms *= factors[o];
         }
     }
 
@@ -361,6 +518,7 @@ impl AnalyzedPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::device::ALL_DEVICES;
     use crate::opgraph::{EwKind, Op, OpKind};
     use crate::tracker::OperationTracker;
 
@@ -480,6 +638,60 @@ mod tests {
                 assert_eq!(*feat, expect);
             }
         }
+    }
+
+    #[test]
+    fn lanes_for_late_registered_device_match_a_fresh_plan_and_the_legacy_path() {
+        use crate::device::registry::{self as reg, NewDevice};
+        use crate::predict::HybridPredictor;
+
+        // A plan compiled *before* a device registration must serve the
+        // new device through its computed lanes, bit-identical to a
+        // plan whose snapshot includes it — and to the legacy
+        // trace-walking reference path.
+        let p = HybridPredictor::wave_only();
+        let trace = toy_trace(Device::T4);
+        let stale = AnalyzedPlan::build(&trace, &p.metrics_policy);
+        let d = reg::register(&NewDevice {
+            usd_per_hr: Some(0.9),
+            ..NewDevice::new("sim-plan-late", 48, 1500.0, 400.0, 12.0, true)
+        })
+        .unwrap();
+        assert!(
+            d.index() >= stale.n_devices(),
+            "the new device must be outside the stale plan's snapshot"
+        );
+        let fresh = AnalyzedPlan::build(&trace, &p.metrics_policy);
+        assert!(d.index() < fresh.n_devices());
+
+        let lanes = stale.device_lanes(d);
+        for k in 0..stale.n_kernels() {
+            assert_eq!(stale.gamma(k, d).to_bits(), fresh.gamma(k, d).to_bits());
+            assert_eq!(stale.wave_dest(k, d), fresh.wave_dest(k, d));
+            assert_eq!(lanes.gamma(k).to_bits(), fresh.gamma(k, d).to_bits());
+            assert_eq!(lanes.wave_dest(k), fresh.wave_dest(k, d));
+        }
+        assert_eq!(stale.amp_factors(d).as_ref(), fresh.amp_factors(d).as_ref());
+
+        let legacy = p.predict(&trace, d);
+        for (plan, label) in [(&stale, "stale"), (&fresh, "fresh")] {
+            let fast = p.evaluate(plan, d);
+            for (a, b) in legacy.ops.iter().zip(&fast.ops) {
+                assert_eq!(
+                    a.time_ms.to_bits(),
+                    b.time_ms.to_bits(),
+                    "{label} plan, op {}",
+                    a.name
+                );
+            }
+        }
+        let amp_stale = p.evaluate_with_precision(&stale, d, Precision::Amp);
+        let amp_fresh = p.evaluate_with_precision(&fresh, d, Precision::Amp);
+        assert_eq!(
+            amp_stale.run_time_ms().to_bits(),
+            amp_fresh.run_time_ms().to_bits(),
+            "AMP through computed lanes must match the dense path"
+        );
     }
 
     #[test]

@@ -247,19 +247,22 @@ impl HybridPredictor {
         let dest_spec = dest.spec();
         let bw = origin_spec.achieved_bw_bytes() / dest_spec.achieved_bw_bytes();
         let clock = origin_spec.boost_clock_mhz / dest_spec.boost_clock_mhz;
+        // Dense borrows for devices in the plan's registry snapshot;
+        // computed once here for devices registered after it.
+        let lanes = plan.device_lanes(dest);
 
         // Pass 1: wave-scale every op from the precomputed arrays.
         let mut ops = plan.blank_ops();
         for (slot, op) in ops.iter_mut().enumerate() {
             let mut wave_ms = 0.0;
             for k in plan.kernel_range(slot) {
-                let g = plan.gamma(k, dest);
+                let g = lanes.gamma(k);
                 let r = wave::ratios_from_parts(
                     bw,
                     clock,
                     plan.kernel_blocks(k),
                     plan.wave_origin(k),
-                    plan.wave_dest(k, dest),
+                    lanes.wave_dest(k),
                 );
                 wave_ms += if self.use_eq1 {
                     wave::scale_eq1(plan.kernel_time_ms(k), &r, g)

@@ -54,6 +54,12 @@ fn kernel_from_json(v: &Json) -> Result<KernelMeasurement> {
 impl Trace {
     /// Serialize the trace (including all kernel metadata) to JSON.
     pub fn to_json(&self) -> String {
+        self.to_value().dump()
+    }
+
+    /// The trace as a JSON value — used both for file persistence and
+    /// embedded in the wire protocol's `submit_trace` request.
+    pub fn to_value(&self) -> Json {
         let ops: Vec<Json> = self
             .ops
             .iter()
@@ -88,12 +94,16 @@ impl Trace {
             ),
             ("ops", Json::Arr(ops)),
         ])
-        .dump()
     }
 
     /// Parse a trace serialized by [`Trace::to_json`].
     pub fn from_json(text: &str) -> Result<Trace> {
-        let v = json::parse(text)?;
+        Self::from_value(&json::parse(text)?)
+    }
+
+    /// Parse a trace from an already-parsed JSON value (e.g. embedded
+    /// in a `submit_trace` request).
+    pub fn from_value(v: &Json) -> Result<Trace> {
         anyhow::ensure!(
             v.req_str("format")? == "habitat-trace-v1",
             "unknown trace format"

@@ -1,0 +1,156 @@
+//! Trace JSON persistence guarantees.
+//!
+//! The open-world API leans on trace serialization twice: the CLI's
+//! `track --out` / `predict --trace` file workflow, and the service's
+//! `submit_trace` request (which content-hashes the canonical JSON to
+//! mint `trace_id`s). Both need (a) a byte-stable round trip —
+//! save → load → save must reproduce the exact same document, or
+//! content-hash ids would drift — and (b) firm rejection of malformed
+//! input, since `submit_trace` feeds this parser with arbitrary client
+//! bytes.
+
+use habitat::device::Device;
+use habitat::tracker::{OperationTracker, Trace};
+use habitat::{models, Precision};
+
+fn tracked(model: &str, batch: usize, origin: Device) -> Trace {
+    let graph = models::by_name(model, batch).expect("known model");
+    OperationTracker::new(origin).track(&graph)
+}
+
+#[test]
+fn save_load_save_is_byte_stable() {
+    for (model, batch, origin) in [
+        ("resnet50", 16, Device::Rtx2070),
+        ("gnmt", 16, Device::P4000),
+        ("transformer", 8, Device::V100),
+        ("dcgan", 32, Device::T4),
+    ] {
+        let trace = tracked(model, batch, origin);
+        let first = trace.to_json();
+        let reloaded = Trace::from_json(&first).unwrap();
+        let second = reloaded.to_json();
+        assert_eq!(
+            first, second,
+            "{model}: save→load→save must reproduce the document byte-for-byte"
+        );
+        // And one more lap for good measure (fixed point, not a cycle).
+        assert_eq!(Trace::from_json(&second).unwrap().to_json(), second);
+    }
+}
+
+#[test]
+fn roundtrip_preserves_semantics_not_just_bytes() {
+    let trace = tracked("resnet50", 16, Device::Rtx2070);
+    let back = Trace::from_json(&trace.to_json()).unwrap();
+    assert_eq!(back.model, trace.model);
+    assert_eq!(back.batch_size, trace.batch_size);
+    assert_eq!(back.origin, trace.origin);
+    assert_eq!(back.precision, trace.precision);
+    assert_eq!(back.ops.len(), trace.ops.len());
+    for (a, b) in trace.ops.iter().zip(&back.ops) {
+        assert_eq!(a.index, b.index);
+        assert_eq!(a.op.name, b.op.name);
+        assert_eq!(a.fwd.len(), b.fwd.len());
+        assert_eq!(a.bwd.len(), b.bwd.len());
+        for (ka, kb) in a.fwd.iter().chain(&a.bwd).zip(b.fwd.iter().chain(&b.bwd)) {
+            assert_eq!(ka.time_ms.to_bits(), kb.time_ms.to_bits());
+            assert_eq!(ka.kernel.launch, kb.kernel.launch);
+            assert_eq!(ka.kernel.name, kb.kernel.name);
+        }
+    }
+}
+
+#[test]
+fn file_roundtrip_is_byte_stable() {
+    let trace = tracked("dcgan", 8, Device::P100);
+    let path = std::env::temp_dir().join("habitat_trace_persist_test.json");
+    trace.save(&path).unwrap();
+    let reloaded = Trace::load(&path).unwrap();
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), reloaded.to_json());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn malformed_input_is_rejected() {
+    // Not JSON at all.
+    assert!(Trace::from_json("").is_err());
+    assert!(Trace::from_json("not json").is_err());
+    assert!(Trace::from_json("[1,2,3]").is_err());
+    // JSON, wrong shape.
+    assert!(Trace::from_json("{}").is_err());
+    assert!(Trace::from_json("{\"format\":\"habitat-trace-v2\"}").is_err(), "unknown format tag");
+    assert!(
+        Trace::from_json(
+            "{\"format\":\"habitat-trace-v1\",\"model\":\"m\",\"batch_size\":4,\"origin\":\"warp9\",\"precision\":\"fp32\",\"ops\":[]}"
+        )
+        .is_err(),
+        "unregistered origin device"
+    );
+    assert!(
+        Trace::from_json(
+            "{\"format\":\"habitat-trace-v1\",\"model\":\"m\",\"batch_size\":4,\"origin\":\"t4\",\"precision\":\"fp8\",\"ops\":[]}"
+        )
+        .is_err(),
+        "unknown precision"
+    );
+    assert!(
+        Trace::from_json(
+            "{\"format\":\"habitat-trace-v1\",\"model\":\"m\",\"batch_size\":4,\"origin\":\"t4\",\"precision\":\"fp32\"}"
+        )
+        .is_err(),
+        "missing ops array"
+    );
+    // Valid envelope, corrupt op entries.
+    let with_ops = |ops: &str| {
+        format!(
+            "{{\"format\":\"habitat-trace-v1\",\"model\":\"m\",\"batch_size\":4,\"origin\":\"t4\",\"precision\":\"fp32\",\"ops\":[{ops}]}}"
+        )
+    };
+    assert!(Trace::from_json(&with_ops("{}")).is_err(), "op missing every field");
+    assert!(
+        Trace::from_json(&with_ops(
+            "{\"index\":0,\"name\":\"x\",\"kind\":\"frobnicate(1)\",\"input\":[4],\"fwd\":[],\"bwd\":[]}"
+        ))
+        .is_err(),
+        "unknown op kind"
+    );
+    assert!(
+        Trace::from_json(&with_ops(
+            "{\"index\":0,\"name\":\"x\",\"kind\":\"ln(8)\",\"input\":[4],\"fwd\":[{\"name\":\"k\"}],\"bwd\":[]}"
+        ))
+        .is_err(),
+        "kernel missing launch/time fields"
+    );
+}
+
+#[test]
+fn amp_and_fp32_precisions_roundtrip() {
+    for precision in [Precision::Fp32, Precision::Amp] {
+        let graph = models::by_name("dcgan", 8).unwrap();
+        let trace = OperationTracker::new(Device::V100)
+            .with_precision(precision)
+            .track(&graph);
+        let back = Trace::from_json(&trace.to_json()).unwrap();
+        assert_eq!(back.precision, precision);
+        assert_eq!(back.to_json(), trace.to_json());
+    }
+}
+
+#[test]
+fn roundtripped_trace_predicts_identically() {
+    // The property submit_trace depends on: a deserialized trace drives
+    // the predictor to the exact same numbers as the original.
+    let trace = tracked("gnmt", 16, Device::P4000);
+    let back = Trace::from_json(&trace.to_json()).unwrap();
+    let p = habitat::predict::HybridPredictor::wave_only();
+    for dest in habitat::device::ALL_DEVICES {
+        let a = p.predict(&trace, dest);
+        let b = p.predict(&back, dest);
+        assert_eq!(
+            a.run_time_ms().to_bits(),
+            b.run_time_ms().to_bits(),
+            "{dest}"
+        );
+    }
+}

@@ -1,0 +1,253 @@
+#!/usr/bin/env python3
+"""End-to-end smoke for `habitat serve`: boots the server, pipes a
+scripted v1+v2 session through one TCP connection, and diffs the
+responses against expectations.
+
+Checks, in order:
+  1. v1 predict and rank still answer (wave-only engine), and the v2
+     envelope's payload for the same request is field-for-field
+     identical to the v1 reply (the compat contract);
+  2. register_device makes a new GPU immediately rankable, with the
+     correct cost-normalized position and value;
+  3. submit_trace -> predict-by-trace_id returns the same iter_ms as a
+     v1 predict of the same (model, batch, origin, dest) — i.e. the
+     uploaded-trace path is numerically identical to the in-process
+     path;
+  4. stats reflects the session's activity;
+  5. malformed lines produce the exact expected error shapes and do not
+     kill the connection.
+
+Exit code 0 = all green. Any mismatch prints a diff-style report and
+exits 1.
+"""
+
+import json
+import socket
+import subprocess
+import sys
+import time
+
+HOST, PORT = "127.0.0.1", 7797
+FAILURES = []
+
+
+def check(name, cond, detail=""):
+    tag = "ok" if cond else "FAIL"
+    print(f"[{tag}] {name}" + (f" — {detail}" if detail and not cond else ""))
+    if not cond:
+        FAILURES.append(name)
+
+
+def expect_eq(name, got, want):
+    check(name, got == want, f"got {got!r}, want {want!r}")
+
+
+def main():
+    server = subprocess.Popen(
+        ["target/release/habitat", "serve", "--addr", f"{HOST}:{PORT}"],
+        stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT,
+    )
+    try:
+        for _ in range(100):
+            try:
+                probe = socket.create_connection((HOST, PORT), timeout=1)
+                probe.close()
+                break
+            except OSError:
+                if server.poll() is not None:
+                    out = server.stdout.read().decode()
+                    print(f"server exited early:\n{out}")
+                    sys.exit(1)
+                time.sleep(0.1)
+        else:
+            print("server never came up")
+            sys.exit(1)
+        run_session()
+    finally:
+        server.terminate()
+        server.wait(timeout=10)
+
+    if FAILURES:
+        print(f"\nsmoke FAILED: {len(FAILURES)} check(s): {FAILURES}")
+        sys.exit(1)
+    print("\nsmoke OK")
+
+
+def run_session():
+    sock = socket.create_connection((HOST, PORT), timeout=120)
+    rfile = sock.makefile("r", encoding="utf-8")
+
+    def rpc(obj_or_line):
+        line = obj_or_line if isinstance(obj_or_line, str) else json.dumps(obj_or_line)
+        sock.sendall(line.encode() + b"\n")
+        reply = rfile.readline()
+        assert reply, f"connection closed after: {line[:120]}"
+        return json.loads(reply)
+
+    # --- 1. v1 baseline + v2 payload parity ----------------------------
+    v1_predict = rpc({"model": "resnet50", "batch": 32, "origin": "rtx2070", "dest": "v100"})
+    check("v1 predict answers", "iter_ms" in v1_predict, str(v1_predict)[:200])
+    v2_predict = rpc(
+        {"v": 2, "op": "predict", "model": "resnet50", "batch": 32, "origin": "rtx2070", "dest": "v100"}
+    )
+    expect_eq("v2 envelope op echo", v2_predict.get("op"), "predict")
+    for key, val in v1_predict.items():
+        expect_eq(f"v2 predict field {key} == v1", v2_predict.get(key), val)
+
+    v1_rank = rpc({"rank": True, "model": "resnet50", "batch": 32, "origin": "rtx2070"})
+    base_names = [r["dest"] for r in v1_rank.get("ranking", [])]
+    expect_eq(
+        "v1 default rank covers the built-ins",
+        sorted(base_names),
+        sorted(["P4000", "P100", "V100", "RTX2070", "RTX2080Ti", "T4"]),
+    )
+    v2_rank = rpc({"v": 2, "op": "rank", "model": "resnet50", "batch": 32, "origin": "rtx2070"})
+    expect_eq("v2 rank payload == v1 rank", v2_rank.get("ranking"), v1_rank.get("ranking"))
+
+    # --- 2. register_device → rankable with correct ordering -----------
+    reg = rpc(
+        {
+            "v": 2,
+            "op": "register_device",
+            "name": "smoke-gpu",
+            "sms": 80,
+            "clock_mhz": 1530,
+            "mem_bw_gbps": 900,
+            "fp32_tflops": 15.7,
+            "tensor_cores": True,
+            "usd_per_hr": 0.05,
+        }
+    )
+    expect_eq("register_device acks the name", reg.get("device"), "smoke-gpu")
+    check("register_device assigns a fresh id", reg.get("id", -1) >= 6, str(reg))
+    rank2 = rpc({"rank": True, "model": "resnet50", "batch": 32, "origin": "rtx2070"})
+    names2 = [r["dest"] for r in rank2["ranking"]]
+    check("registered device appears in the next rank", "smoke-gpu" in names2, str(names2))
+    expect_eq("other devices unchanged", sorted(n for n in names2 if n != "smoke-gpu"), sorted(base_names))
+    entry = next(r for r in rank2["ranking"] if r["dest"] == "smoke-gpu")
+    want_cnt = entry["throughput"] / 0.05
+    check(
+        "cost-normalized throughput uses the registered price",
+        abs(entry["cost_normalized_throughput"] - want_cnt) < 1e-6 * max(1.0, want_cnt),
+        f'{entry["cost_normalized_throughput"]} vs {want_cnt}',
+    )
+    # V100-class silicon at $0.05/hr must out-rank every built-in on
+    # samples/s/$ — registration changed the *decision*, not just the list.
+    expect_eq("cost-normalized ordering puts it first", names2[0], "smoke-gpu")
+    priced = [r["cost_normalized_throughput"] for r in rank2["ranking"] if r["cost_normalized_throughput"]]
+    check("priced entries sorted descending", priced == sorted(priced, reverse=True), str(priced))
+
+    replay = rpc(
+        {
+            "v": 2,
+            "op": "register_device",
+            "name": "smoke-gpu",
+            "sms": 80,
+            "clock_mhz": 1530,
+            "mem_bw_gbps": 900,
+            "fp32_tflops": 15.7,
+            "tensor_cores": True,
+            "usd_per_hr": 0.05,
+        }
+    )
+    expect_eq("identical re-registration is idempotent", replay.get("id"), reg.get("id"))
+    clash = rpc(
+        {
+            "v": 2,
+            "op": "register_device",
+            "name": "smoke-gpu",
+            "sms": 81,  # differs from the registered spec
+            "clock_mhz": 1530,
+            "mem_bw_gbps": 900,
+            "fp32_tflops": 15.7,
+            "tensor_cores": True,
+            "usd_per_hr": 0.05,
+        }
+    )
+    expect_eq("conflicting re-registration errors", clash.get("error", {}).get("code"), "conflict")
+
+    # --- 3. submit_trace → trace_id predictions ≡ model predictions ----
+    # Track dcgan@16 on the server's own CLI to produce a trace file,
+    # then upload it: the id-based prediction must equal the v1
+    # model-based prediction bit-for-bit (same trace content, same
+    # engine, same plan arithmetic).
+    subprocess.run(
+        [
+            "target/release/habitat", "track", "--model", "dcgan", "--batch", "16",
+            "--origin", "t4", "--out", "/tmp/smoke_trace.json",
+        ],
+        check=True,
+        stdout=subprocess.DEVNULL,
+    )
+    with open("/tmp/smoke_trace.json", encoding="utf-8") as fh:
+        trace = json.load(fh)
+    sub = rpc({"v": 2, "op": "submit_trace", "trace": trace})
+    check("submit_trace returns a content id", str(sub.get("trace_id", "")).startswith("tr-"), str(sub))
+    expect_eq("submit_trace echoes the model", sub.get("model"), "dcgan")
+    sub2 = rpc({"v": 2, "op": "submit_trace", "trace": trace})
+    expect_eq("re-submission maps to the same id", sub2.get("trace_id"), sub.get("trace_id"))
+
+    by_id = rpc({"v": 2, "op": "predict", "trace_id": sub["trace_id"], "dest": "v100"})
+    check("trace_id predict answers", "iter_ms" in by_id, str(by_id)[:200])
+    # Note: the uploaded trace was measured by a separate CLI process
+    # with the same deterministic simulator, so the numbers must agree
+    # with a fresh server-side track of the same (model, batch, origin).
+    by_model = rpc({"model": "dcgan", "batch": 16, "origin": "t4", "dest": "v100"})
+    expect_eq("trace_id iter_ms == model-path iter_ms", by_id.get("iter_ms"), by_model.get("iter_ms"))
+    rank_by_id = rpc({"v": 2, "op": "rank", "trace_id": sub["trace_id"]})
+    check(
+        "trace_id rank includes the registered device",
+        "smoke-gpu" in [r["dest"] for r in rank_by_id.get("ranking", [])],
+        str(rank_by_id)[:200],
+    )
+
+    # --- 4. stats ------------------------------------------------------
+    v1_stats = rpc({"stats": True})
+    expect_eq(
+        "v1 stats keeps its original seven fields",
+        sorted(v1_stats.keys()),
+        sorted(["trace_hits", "trace_misses", "trace_entries", "plan_builds", "wave_hits", "wave_misses", "workers"]),
+    )
+    v2_stats = rpc({"v": 2, "op": "stats"})
+    expect_eq("stats counts the upload", v2_stats.get("trace_uploads"), 1)
+    expect_eq("stats sees the registered device", v2_stats.get("devices"), 7)
+    check("stats counted tracking work", v2_stats.get("trace_misses", 0) >= 2, str(v2_stats))
+
+    # --- 5. malformed input, exact expected error shapes ---------------
+    bad = rpc("this is not json")
+    check("v1 parse error shape", str(bad.get("error", "")).startswith("bad request:"), str(bad))
+    expect_eq(
+        "unknown v1 device error",
+        rpc({"model": "resnet50", "batch": 8, "origin": "a100", "dest": "v100"}),
+        {"error": 'unknown origin device "a100"'},
+    )
+    expect_eq(
+        "unsupported version error",
+        rpc({"v": 7, "op": "predict"}),
+        {"v": 2, "error": {"code": "unsupported_version", "message": "unsupported protocol version 7"}},
+    )
+    expect_eq(
+        "unsupported op error",
+        rpc({"v": 2, "op": "teleport"})["error"]["code"],
+        "unsupported_op",
+    )
+    expect_eq(
+        "unknown trace error",
+        rpc({"v": 2, "op": "predict", "trace_id": "tr-0000000000000000", "dest": "v100"})["error"]["code"],
+        "unknown_trace",
+    )
+    expect_eq(
+        "bad embedded trace error",
+        rpc({"v": 2, "op": "submit_trace", "trace": {"format": "nope"}})["error"]["code"],
+        "invalid_argument",
+    )
+    # The connection survived all of the above.
+    final = rpc({"model": "resnet50", "batch": 32, "origin": "rtx2070", "dest": "v100"})
+    expect_eq("connection survives; replies still deterministic", final, v1_predict)
+
+    sock.close()
+
+
+if __name__ == "__main__":
+    main()
