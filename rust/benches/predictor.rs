@@ -112,6 +112,62 @@ fn main() {
             .entries
             .len()
     });
+    // --- engine: contended access (the sharding win) ---------------------
+    // 16 threads hammering the cache. Under the old single-mutex engine
+    // the hit path serialized globally; with the sharded RwLock cache the
+    // aggregate should scale with cores. `contended_hit` is pure cache
+    // hits (one shared hot key); `contended_mixed` adds per-thread cold
+    // keys so build singleflight and hit traffic interleave.
+    bench("engine/contended_hit_16_threads/resnet50", || {
+        std::thread::scope(|s| {
+            for _ in 0..16 {
+                s.spawn(|| {
+                    for _ in 0..50 {
+                        engine.analyzed("resnet50", 32, Device::Rtx2070).unwrap();
+                    }
+                });
+            }
+        });
+        engine.stats().trace_hits
+    });
+    let mixed_engine = PredictionEngine::wave_only();
+    let mut mixed_round = 0usize;
+    bench("engine/contended_mixed_hit_build_16_threads/mlp", || {
+        // Fresh batch sizes every round so each round pays 4 real
+        // tracking passes while 16 threads pound the hit path.
+        mixed_round += 1;
+        let base = mixed_round * 4;
+        std::thread::scope(|s| {
+            for t in 0..16usize {
+                let mixed_engine = &mixed_engine;
+                s.spawn(move || {
+                    for i in 0..20usize {
+                        let batch = base + (t + i) % 4;
+                        mixed_engine.analyzed("mlp", batch, Device::T4).unwrap();
+                    }
+                });
+            }
+        });
+        mixed_engine.stats().trace_misses
+    });
+    bench("engine/contended_stats_snapshot", || {
+        // Lock-free counter snapshots must stay cheap while 8 threads
+        // hit the cache.
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..25 {
+                        engine.analyzed("resnet50", 32, Device::Rtx2070).unwrap();
+                    }
+                });
+            }
+            for _ in 0..1000 {
+                std::hint::black_box(engine.stats());
+            }
+        });
+        engine.stats().trace_hits
+    });
+
     let stats = engine.stats();
     println!(
         "(engine counters: trace {} hits / {} misses; {} plan builds; {} workers; wave table {} hits / {} misses, process-wide)",

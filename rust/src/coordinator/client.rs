@@ -11,6 +11,16 @@
 //! ([`Client::DEFAULT_TIMEOUT`] unless overridden via
 //! [`Client::connect_with_timeout`]), so a hung or wedged server
 //! surfaces as an error instead of blocking the caller forever.
+//!
+//! **Disconnect handling**: a server that closes (or resets) the
+//! connection mid-session surfaces as the typed
+//! [`ClientError::Disconnected`] — downcastable from the returned
+//! `anyhow::Error` — never as a bare broken-pipe `io::Error`. For
+//! *idempotent* operations (`predict`, `rank`, `stats`,
+//! `predict_trace`, `rank_trace`) the client additionally performs
+//! **one** automatic reconnect-and-retry; state-changing operations
+//! (`submit_trace`, `register_device`) are never retried — the caller
+//! decides whether replaying a write is safe.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -25,8 +35,44 @@ use crate::tracker::Trace;
 use crate::util::json;
 use crate::Result;
 
+/// Typed client-side failures, downcastable from the `anyhow::Error`s
+/// this module returns (`err.downcast_ref::<ClientError>()`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientError {
+    /// The server closed or reset the connection mid-session. Idempotent
+    /// operations retry once over a fresh connection before surfacing
+    /// this; state-changing operations surface it immediately.
+    Disconnected,
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Disconnected => f.write_str("server disconnected mid-session"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+/// An I/O failure that means "the peer is gone" rather than "the
+/// operation timed out" (timeouts must *not* trigger a retry: the
+/// server may still be processing the original request).
+fn is_disconnect(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::BrokenPipe
+            | std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::ConnectionAborted
+            | std::io::ErrorKind::NotConnected
+            | std::io::ErrorKind::UnexpectedEof
+    )
+}
+
 /// A connected prediction-service client.
 pub struct Client {
+    addr: String,
+    timeout: Option<Duration>,
     writer: TcpStream,
     reader: BufReader<TcpStream>,
 }
@@ -55,20 +101,39 @@ impl Client {
             stream.set_write_timeout(Some(t))?;
         }
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(Client { writer: stream, reader })
+        Ok(Client {
+            addr: addr.to_string(),
+            timeout,
+            writer: stream,
+            reader,
+        })
     }
 
-    /// Send one request and wait for its response.
-    pub fn predict(&mut self, request: &PredictionRequest) -> Result<PredictionResponse> {
-        self.send(request)?;
-        self.recv()
-    }
-
-    /// Pipeline: send without waiting.
-    pub fn send(&mut self, request: &PredictionRequest) -> Result<()> {
-        self.writer.write_all(request.to_json().as_bytes())?;
-        self.writer.write_all(b"\n")?;
+    /// Tear down the dead stream and dial the original address again
+    /// with the original timeout settings.
+    fn reconnect(&mut self) -> Result<()> {
+        *self = Self::connect_with_timeout(&self.addr, self.timeout)?;
         Ok(())
+    }
+
+    /// Send one request and wait for its response (idempotent: one
+    /// automatic reconnect-and-retry on a mid-session disconnect).
+    ///
+    /// Like [`Client::rank`], this must not be called while pipelined
+    /// [`Client::send`] requests still have unread responses — drain
+    /// them with [`Client::recv`] first. A retry replays only *this*
+    /// request over a fresh connection, which would silently lose any
+    /// outstanding pipelined replies.
+    pub fn predict(&mut self, request: &PredictionRequest) -> Result<PredictionResponse> {
+        PredictionResponse::from_json(&self.request_idempotent(&request.to_json())?)
+    }
+
+    /// Pipeline: send without waiting. Raw sends are never auto-retried
+    /// (the client cannot know how many pipelined responses were lost),
+    /// but a dead peer still surfaces as the typed
+    /// [`ClientError::Disconnected`].
+    pub fn send(&mut self, request: &PredictionRequest) -> Result<()> {
+        self.send_line(&request.to_json())
     }
 
     /// Receive the next in-order response.
@@ -76,25 +141,24 @@ impl Client {
         PredictionResponse::from_json(&self.recv_line()?)
     }
 
-    /// Send one rank request and wait for the ranked response.
+    /// Send one rank request and wait for the ranked response
+    /// (idempotent: one automatic reconnect-and-retry on disconnect).
     ///
     /// Responses come back strictly in request order, so this must not
     /// be called while pipelined [`Client::send`] requests still have
     /// unread responses — drain them with [`Client::recv`] first, or
     /// the streams desynchronize.
     pub fn rank(&mut self, request: &RankRequest) -> Result<RankResponse> {
-        self.writer.write_all(request.to_json().as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        RankResponse::from_json(&self.recv_line()?)
+        RankResponse::from_json(&self.request_idempotent(&request.to_json())?)
     }
 
     /// Fetch the server engine's counter snapshot (trace/plan cache
-    /// hits & misses, wave-table counters, fan-out pool size). Same
+    /// hits & misses, wave-table counters, pool size). Idempotent (one
+    /// automatic reconnect-and-retry on disconnect), with the same
     /// in-order caveat as [`Client::rank`]: drain any pipelined
     /// responses first.
     pub fn stats(&mut self) -> Result<StatsResponse> {
-        self.send_line(&service::stats_request_json())?;
-        StatsResponse::from_json(&self.recv_line()?)
+        StatsResponse::from_json(&self.request_idempotent(&service::stats_request_json())?)
     }
 
     // --- v2 envelope operations ----------------------------------------
@@ -103,61 +167,104 @@ impl Client {
     // pipelined predict responses before calling them.
 
     /// Register a new GPU on the server (`{"v":2,"op":"register_device"}`).
-    /// Idempotent for identical descriptions; a name collision with a
-    /// different spec is a server-side `conflict` error.
+    /// Idempotent *server-side* for identical descriptions (a name
+    /// collision with a different spec is a `conflict` error), but as a
+    /// state-changing operation it is **never** auto-retried: a
+    /// disconnect surfaces as [`ClientError::Disconnected`].
     pub fn register_device(&mut self, device: &NewDevice) -> Result<RegisteredDevice> {
-        self.send_line(&service::v2_register_device_request(device))?;
-        RegisteredDevice::from_json(&self.recv_line()?)
+        let line = self.request_once(&service::v2_register_device_request(device))?;
+        RegisteredDevice::from_json(&line)
     }
 
     /// Upload a locally profiled trace (`{"v":2,"op":"submit_trace"}`)
     /// and return its content-hashed `trace_id`, which
     /// [`Client::predict_trace`] / [`Client::rank_trace`] accept in
-    /// place of `model` + `batch` + `origin`.
+    /// place of `model` + `batch` + `origin`. State-changing: a
+    /// disconnect is **never** auto-retried and surfaces as
+    /// [`ClientError::Disconnected`].
     pub fn submit_trace(&mut self, trace: &Trace) -> Result<String> {
-        self.send_line(&service::v2_submit_trace_request(trace))?;
-        let v = json::parse(&self.recv_line()?)?;
+        let v = json::parse(&self.request_once(&service::v2_submit_trace_request(trace))?)?;
         service::v2_check_error(&v)?;
         Ok(v.req_str("trace_id")?.to_string())
     }
 
-    /// Predict a previously submitted trace onto one destination.
+    /// Predict a previously submitted trace onto one destination
+    /// (idempotent: one automatic reconnect-and-retry on disconnect).
     pub fn predict_trace(
         &mut self,
         trace_id: &str,
         dest: &str,
         precision: Option<&str>,
     ) -> Result<PredictionResponse> {
-        self.send_line(&service::v2_predict_trace_request(trace_id, dest, precision))?;
-        let line = self.recv_line()?;
+        let line =
+            self.request_idempotent(&service::v2_predict_trace_request(trace_id, dest, precision))?;
         service::v2_check_error(&json::parse(&line)?)?;
         PredictionResponse::from_json(&line)
     }
 
     /// Rank destinations for a previously submitted trace (`None` dests
-    /// = every device in the server's registry).
+    /// = every device in the server's registry). Idempotent: one
+    /// automatic reconnect-and-retry on disconnect.
     pub fn rank_trace(
         &mut self,
         trace_id: &str,
         dests: Option<&[String]>,
         precision: Option<&str>,
     ) -> Result<RankResponse> {
-        self.send_line(&service::v2_rank_trace_request(trace_id, dests, precision))?;
-        let line = self.recv_line()?;
+        let line =
+            self.request_idempotent(&service::v2_rank_trace_request(trace_id, dests, precision))?;
         service::v2_check_error(&json::parse(&line)?)?;
         RankResponse::from_json(&line)
     }
 
+    /// One request/response roundtrip, retried exactly once over a
+    /// fresh connection if the server disconnected mid-session. Only
+    /// for idempotent operations; must not be used while pipelined
+    /// responses are outstanding (a retry would replay into a
+    /// desynchronized stream).
+    fn request_idempotent(&mut self, line: &str) -> Result<String> {
+        match self.request_once(line) {
+            Err(e) if e.downcast_ref::<ClientError>() == Some(&ClientError::Disconnected) => {
+                self.reconnect()?;
+                self.request_once(line)
+            }
+            other => other,
+        }
+    }
+
+    /// One request/response roundtrip, no retry.
+    fn request_once(&mut self, line: &str) -> Result<String> {
+        self.send_line(line)?;
+        self.recv_line()
+    }
+
     fn send_line(&mut self, line: &str) -> Result<()> {
-        self.writer.write_all(line.as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        Ok(())
+        let io = self
+            .writer
+            .write_all(line.as_bytes())
+            .and_then(|()| self.writer.write_all(b"\n"));
+        io.map_err(|e| {
+            if is_disconnect(&e) {
+                anyhow::Error::new(e).context(ClientError::Disconnected)
+            } else {
+                anyhow::Error::new(e)
+            }
+        })
     }
 
     fn recv_line(&mut self) -> Result<String> {
         let mut line = String::new();
-        let n = self.reader.read_line(&mut line)?;
-        anyhow::ensure!(n > 0, "server closed the connection");
+        let n = self.reader.read_line(&mut line).map_err(|e| {
+            if is_disconnect(&e) {
+                anyhow::Error::new(e).context(ClientError::Disconnected)
+            } else {
+                anyhow::Error::new(e)
+            }
+        })?;
+        if n == 0 {
+            // A clean EOF mid-session is the typed disconnect, too.
+            return Err(anyhow::Error::new(ClientError::Disconnected));
+        }
         Ok(line.trim().to_string())
     }
 }
@@ -296,6 +403,121 @@ mod tests {
         assert!(
             t0.elapsed() < std::time::Duration::from_secs(3),
             "read must time out promptly, got {err}"
+        );
+    }
+
+    /// A server that answers exactly `answers` requests per connection,
+    /// then closes it — the disconnect/retry workhorse. Returns the
+    /// address and a counter of accepted connections.
+    fn flaky_server(answers: usize) -> (String, Arc<std::sync::atomic::AtomicUsize>) {
+        let service = Arc::new(PredictionService::with_predictor(HybridPredictor::wave_only()));
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let accepted = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let counter = Arc::clone(&accepted);
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { break };
+                counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                let mut write = stream.try_clone().unwrap();
+                let mut lines = BufReader::new(stream).lines();
+                for _ in 0..answers {
+                    let Some(Ok(line)) = lines.next() else { break };
+                    let reply = service.handle_line(&line);
+                    if write.write_all(reply.as_bytes()).is_err()
+                        || write.write_all(b"\n").is_err()
+                    {
+                        break;
+                    }
+                }
+                // Dropping both halves closes the connection mid-session.
+            }
+        });
+        (addr, accepted)
+    }
+
+    #[test]
+    fn disconnect_is_a_typed_error_and_idempotent_ops_retry_once() {
+        use std::sync::atomic::Ordering;
+        let (addr, accepted) = flaky_server(1);
+        let mut client = Client::connect(&addr).unwrap();
+        // Connection 1 has one answer in it.
+        assert_eq!(client.predict(&req("mlp", "v100")).unwrap().dest, "V100");
+        assert_eq!(accepted.load(Ordering::SeqCst), 1);
+        // The server hung up after that answer; the next predict hits the
+        // dead stream, reconnects transparently, and succeeds.
+        assert_eq!(client.predict(&req("mlp", "p100")).unwrap().dest, "P100");
+        assert_eq!(accepted.load(Ordering::SeqCst), 2, "exactly one reconnect");
+        // rank and stats retry the same way.
+        let ranking = client
+            .rank(&crate::coordinator::RankRequest {
+                model: "mlp".into(),
+                batch: 16,
+                origin: "t4".into(),
+                precision: None,
+                dests: None,
+            })
+            .unwrap();
+        assert!(!ranking.ranking.is_empty());
+        assert_eq!(accepted.load(Ordering::SeqCst), 3);
+        assert!(client.stats().unwrap().trace_misses >= 1);
+        assert_eq!(accepted.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn state_changing_ops_never_retry_and_surface_the_typed_error() {
+        use std::sync::atomic::Ordering;
+        // Answers zero requests: every operation meets a disconnect.
+        let (addr, accepted) = flaky_server(0);
+        let mut client = Client::connect(&addr).unwrap();
+        // Let the server-side close land before we write.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let before = accepted.load(Ordering::SeqCst);
+
+        let mut g = crate::Graph::new("retry-probe", 2);
+        g.push(crate::Op::new(
+            "fc",
+            crate::OpKind::Linear { in_features: 8, out_features: 4, bias: true },
+            vec![2, 8],
+        ));
+        let trace = crate::tracker::OperationTracker::new(crate::device::Device::T4).track(&g);
+        let err = client.submit_trace(&trace).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<ClientError>(),
+            Some(&ClientError::Disconnected),
+            "submit_trace must surface the typed disconnect, got: {err:#}"
+        );
+        assert_eq!(
+            accepted.load(Ordering::SeqCst),
+            before,
+            "submit_trace must not reconnect"
+        );
+
+        let err = client
+            .register_device(&NewDevice::new("sim-noretry", 10, 1000.0, 100.0, 5.0, false))
+            .unwrap_err();
+        assert_eq!(err.downcast_ref::<ClientError>(), Some(&ClientError::Disconnected));
+        assert_eq!(
+            accepted.load(Ordering::SeqCst),
+            before,
+            "register_device must not reconnect"
+        );
+    }
+
+    #[test]
+    fn idempotent_retry_gives_up_after_one_reconnect() {
+        // Answers zero requests: the retry's fresh connection dies too,
+        // so the typed error must come back instead of an infinite loop.
+        let (addr, accepted) = flaky_server(0);
+        let mut client = Client::connect(&addr).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let before = accepted.load(std::sync::atomic::Ordering::SeqCst);
+        let err = client.predict(&req("mlp", "v100")).unwrap_err();
+        assert_eq!(err.downcast_ref::<ClientError>(), Some(&ClientError::Disconnected));
+        assert_eq!(
+            accepted.load(std::sync::atomic::Ordering::SeqCst),
+            before + 1,
+            "exactly one reconnect attempt"
         );
     }
 

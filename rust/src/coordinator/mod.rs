@@ -1,8 +1,10 @@
 //! Layer-3 coordination: the prediction service.
 //!
 //! Habitat is a library in the paper; in this reproduction it is also a
-//! deployable *service*: a TCP front end (newline-delimited JSON, one
-//! thread per connection) that routes every request through the shared
+//! deployable *service*: a TCP front end (newline-delimited JSON on a
+//! bounded runtime — capped connection slots, a shared bounded compute
+//! pool, typed `overloaded` backpressure, in-order pipelining) that
+//! routes every request through the shared
 //! [`crate::engine::PredictionEngine`]. The engine supplies:
 //!
 //! * the **trace/plan cache** — tracking a model on the simulator is
@@ -25,19 +27,34 @@
 pub mod client;
 pub mod service;
 
-pub use client::Client;
+pub use client::{Client, ClientError};
 pub use service::{
-    v2_check_error, v2_error_json, v2_predict_model_request, v2_predict_trace_request,
-    v2_rank_trace_request, v2_register_device_request, v2_stats_request,
-    v2_submit_trace_request, PredictionRequest, PredictionResponse, PredictionService,
-    RankRequest, RankResponse, RankedDest, RegisteredDevice, Request, StatsResponse,
-    PROTOCOL_V2,
+    overloaded_json, v2_check_error, v2_error_json, v2_predict_model_request,
+    v2_predict_trace_request, v2_rank_trace_request, v2_register_device_request,
+    v2_stats_request, v2_submit_trace_request, PredictionRequest, PredictionResponse,
+    PredictionService, RankRequest, RankResponse, RankedDest, RegisteredDevice, Request,
+    ServeOptions, ServerHandle, StatsResponse, DEFAULT_MAX_CONNS, MAX_CONNS_ENV, PROTOCOL_V2,
 };
 
 use crate::Result;
 
-/// Run the TCP prediction server (the `habitat serve` subcommand).
-/// Blocks forever.
+/// Run the TCP prediction server (the `habitat serve` subcommand) on
+/// the bounded runtime. Blocks forever.
 pub fn serve(addr: &str, artifacts: &str) -> Result<()> {
     service::serve(addr, artifacts)
+}
+
+/// [`serve`] with explicit runtime bounds (`--max-conns` etc.).
+pub fn serve_with(addr: &str, artifacts: &str, opts: service::ServeOptions) -> Result<()> {
+    service::serve_with(addr, artifacts, opts)
+}
+
+/// Start the server on background threads and return its
+/// [`service::ServerHandle`] (tests and embedding applications).
+pub fn start(
+    addr: &str,
+    service: std::sync::Arc<PredictionService>,
+    opts: service::ServeOptions,
+) -> Result<service::ServerHandle> {
+    service::start(addr, service, opts)
 }

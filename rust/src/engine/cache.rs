@@ -1,90 +1,315 @@
-//! A small content-keyed LRU cache.
+//! A sharded, concurrently readable LRU cache with per-key
+//! singleflight build gates.
 //!
-//! Backs the engine's trace cache. Capacity is expected to be modest
-//! (hundreds of entries, each an `Arc` to a shared trace), so eviction
-//! does an O(n) scan for the least-recently-used entry instead of
-//! maintaining an intrusive list — simpler, and invisible next to the
-//! cost of producing one cache value (tracking a model is milliseconds;
-//! the scan is nanoseconds).
+//! Backs the engine's trace/plan cache and its uploaded-trace store.
+//! The previous design put one `Mutex<LruCache>` in front of every
+//! lookup, so under concurrent service load the *hit* path — a hash
+//! probe and an `Arc` clone — serialized across all connections. This
+//! version stripes the key space over N independent shards:
+//!
+//! * **reads scale**: each shard's map sits behind an `RwLock`; a hit
+//!   takes a read guard, bumps an atomic recency stamp, and clones the
+//!   value — any number of threads hit concurrently, across shards
+//!   *and* within one;
+//! * **writers only block their shard**: an insert (or an LRU eviction)
+//!   write-locks one shard; hits on the other shards proceed;
+//! * **singleflight is per key, waiting is per shard**: `claim` hands
+//!   exactly one caller a [`BuildGuard`] for a cold key; everyone else
+//!   parks on that shard's `Condvar` and wakes into a cache hit when
+//!   the builder [`BuildGuard::complete`]s (or retries the claim if
+//!   the builder failed). A build in one shard never blocks a hit —
+//!   or another build — anywhere else, and even two builds of distinct
+//!   keys in the *same* shard run in parallel (they only share the
+//!   wake-up signal);
+//! * **`len` is lock-free**: entry counts are maintained in an atomic
+//!   so stats snapshots never touch a shard lock.
+//!
+//! Capacity is split evenly across shards, so bounds are enforced
+//! per shard (a pathological key distribution can evict slightly
+//! early — acceptable for a cache whose values are recomputable).
+//! Small capacities collapse to a single shard, which preserves exact
+//! global LRU order; the shard count only grows once there is enough
+//! capacity for striping to matter.
 
-use std::collections::HashMap;
-use std::hash::Hash;
+use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::{Condvar, Mutex, RwLock};
+
+/// Upper bound on the shard count (capacity permitting).
+pub const MAX_SHARDS: usize = 16;
+
+/// Minimum per-shard capacity before another shard is worth adding.
+const TARGET_PER_SHARD: usize = 8;
 
 struct Entry<V> {
     value: V,
-    last_used: u64,
+    /// Recency stamp, updated through a shared reference on the read
+    /// path (so hits never need the write lock).
+    last_used: AtomicU64,
 }
 
-/// Least-recently-used cache over hashable keys.
-pub struct LruCache<K: Eq + Hash + Clone, V: Clone> {
-    capacity: usize,
-    tick: u64,
-    map: HashMap<K, Entry<V>>,
+struct Shard<K, V> {
+    map: RwLock<HashMap<K, Entry<V>>>,
+    tick: AtomicU64,
+    /// Keys currently being built by some thread (singleflight gates).
+    building: Mutex<HashSet<K>>,
+    /// Signaled whenever a build completes or aborts; waiters re-check
+    /// the map and either hit or take over the build.
+    built: Condvar,
 }
 
-impl<K: Eq + Hash + Clone, V: Clone> LruCache<K, V> {
-    /// Create a cache holding at most `capacity` entries.
-    pub fn new(capacity: usize) -> Self {
-        assert!(capacity > 0, "LRU capacity must be positive");
-        LruCache {
-            capacity,
-            tick: 0,
-            map: HashMap::new(),
+impl<K: Eq + Hash + Clone, V: Clone> Shard<K, V> {
+    fn new() -> Self {
+        Shard {
+            map: RwLock::new(HashMap::new()),
+            tick: AtomicU64::new(0),
+            building: Mutex::new(HashSet::new()),
+            built: Condvar::new(),
         }
     }
 
-    /// Look up a key, refreshing its recency on a hit.
-    pub fn get(&mut self, key: &K) -> Option<V> {
-        self.tick += 1;
-        let tick = self.tick;
-        self.map.get_mut(key).map(|e| {
-            e.last_used = tick;
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Relaxed) + 1
+    }
+
+    fn get(&self, key: &K) -> Option<V> {
+        let map = self.map.read().unwrap();
+        map.get(key).map(|e| {
+            e.last_used.store(self.next_tick(), Relaxed);
             e.value.clone()
         })
     }
+}
 
-    /// Insert (or replace) a key, evicting the least-recently-used entry
-    /// if the cache is over capacity.
-    pub fn insert(&mut self, key: K, value: V) {
-        self.tick += 1;
-        let tick = self.tick;
-        self.map.insert(key, Entry { value, last_used: tick });
-        if self.map.len() > self.capacity {
-            if let Some(oldest) = self
-                .map
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone())
-            {
-                self.map.remove(&oldest);
+/// The result of [`ShardedLru::claim`]: either the cached value, or an
+/// exclusive license to build it.
+pub enum Claim<'a, K: Eq + Hash + Clone, V: Clone> {
+    /// The key was resident (possibly because another thread finished
+    /// building it while this one waited).
+    Hit(V),
+    /// This caller is the designated builder for the key. Build the
+    /// value outside any lock, then [`BuildGuard::complete`]. Dropping
+    /// the guard without completing (error or panic paths) releases the
+    /// gate so waiters can retry — a failed build never wedges a key.
+    Build(BuildGuard<'a, K, V>),
+}
+
+/// Exclusive build license for one key (see [`Claim`]).
+pub struct BuildGuard<'a, K: Eq + Hash + Clone, V: Clone> {
+    cache: &'a ShardedLru<K, V>,
+    key: K,
+    done: bool,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> BuildGuard<'_, K, V> {
+    /// The key this guard licenses.
+    pub fn key(&self) -> &K {
+        &self.key
+    }
+
+    /// Publish the built value and wake every waiter into a cache hit.
+    pub fn complete(mut self, value: V) {
+        self.done = true;
+        // Insert *before* releasing the gate: a waiter that wakes (or
+        // re-checks under the `building` lock) must observe the value.
+        self.cache.insert(self.key.clone(), value);
+        self.release();
+    }
+
+    fn release(&self) {
+        let shard = self.cache.shard(&self.key);
+        shard.building.lock().unwrap().remove(&self.key);
+        shard.built.notify_all();
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Drop for BuildGuard<'_, K, V> {
+    fn drop(&mut self) {
+        if !self.done {
+            self.release();
+        }
+    }
+}
+
+/// Least-recently-used cache striped over lock-independent shards.
+pub struct ShardedLru<K: Eq + Hash + Clone, V: Clone> {
+    shards: Vec<Shard<K, V>>,
+    /// Power of two, so shard selection is a mask.
+    shard_mask: usize,
+    shard_capacity: usize,
+    capacity: usize,
+    len: AtomicUsize,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> ShardedLru<K, V> {
+    /// Create a cache holding at most (approximately) `capacity`
+    /// entries, sharded as widely as the capacity justifies.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "cache capacity must be positive");
+        let shards = (capacity / TARGET_PER_SHARD)
+            .max(1)
+            .next_power_of_two()
+            .min(MAX_SHARDS);
+        Self::with_shards(capacity, shards)
+    }
+
+    /// Explicit shard count (rounded up to a power of two). Exposed so
+    /// tests can pin deterministic single-shard LRU semantics.
+    pub fn with_shards(capacity: usize, shards: usize) -> Self {
+        assert!(capacity > 0, "cache capacity must be positive");
+        let n = shards.max(1).next_power_of_two();
+        ShardedLru {
+            shards: (0..n).map(|_| Shard::new()).collect(),
+            shard_mask: n - 1,
+            shard_capacity: capacity.div_ceil(n),
+            capacity,
+            len: AtomicUsize::new(0),
+        }
+    }
+
+    fn shard(&self, key: &K) -> &Shard<K, V> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) & self.shard_mask]
+    }
+
+    /// Look up a key, refreshing its recency on a hit. Takes only a
+    /// shard read lock — hits never serialize against each other.
+    pub fn get(&self, key: &K) -> Option<V> {
+        self.shard(key).get(key)
+    }
+
+    /// Insert (or replace) a key, evicting that shard's LRU entry if
+    /// the shard is over capacity.
+    pub fn insert(&self, key: K, value: V) {
+        let shard = self.shard(&key);
+        let tick = shard.next_tick();
+        let mut map = shard.map.write().unwrap();
+        let prev = map.insert(
+            key,
+            Entry {
+                value,
+                last_used: AtomicU64::new(tick),
+            },
+        );
+        if prev.is_none() {
+            self.len.fetch_add(1, Relaxed);
+            if map.len() > self.shard_capacity && Self::evict_lru(&mut map) {
+                self.len.fetch_sub(1, Relaxed);
             }
         }
     }
 
+    /// Insert unless the key is already resident; returns the resident
+    /// value and whether this call inserted it. The check and the
+    /// insert happen under one shard write lock, so two racing callers
+    /// agree on a single winner.
+    pub fn get_or_insert(&self, key: K, value: V) -> (V, bool) {
+        let shard = self.shard(&key);
+        let tick = shard.next_tick();
+        let mut map = shard.map.write().unwrap();
+        if let Some(e) = map.get(&key) {
+            e.last_used.store(tick, Relaxed);
+            return (e.value.clone(), false);
+        }
+        let out = value.clone();
+        map.insert(
+            key,
+            Entry {
+                value,
+                last_used: AtomicU64::new(tick),
+            },
+        );
+        self.len.fetch_add(1, Relaxed);
+        if map.len() > self.shard_capacity && Self::evict_lru(&mut map) {
+            self.len.fetch_sub(1, Relaxed);
+        }
+        (out, true)
+    }
+
+    fn evict_lru(map: &mut HashMap<K, Entry<V>>) -> bool {
+        let oldest = map
+            .iter()
+            .min_by_key(|(_, e)| e.last_used.load(Relaxed))
+            .map(|(k, _)| k.clone());
+        match oldest {
+            Some(k) => map.remove(&k).is_some(),
+            None => false,
+        }
+    }
+
+    /// Hit the cache or become the key's designated builder.
+    ///
+    /// At most one [`BuildGuard`] exists per key at a time; concurrent
+    /// claimers of the same cold key block on this shard's condvar and
+    /// return `Hit` once the builder completes. Claims of *different*
+    /// keys never wait on each other, whichever shard they land in.
+    pub fn claim(&self, key: &K) -> Claim<'_, K, V> {
+        let shard = self.shard(key);
+        if let Some(v) = shard.get(key) {
+            return Claim::Hit(v);
+        }
+        let mut building = shard.building.lock().unwrap();
+        loop {
+            // Re-check under the gate lock: a builder publishes to the
+            // map before releasing its gate, so a miss here plus an
+            // absent gate really means "nobody is building".
+            if let Some(v) = shard.get(key) {
+                return Claim::Hit(v);
+            }
+            if !building.contains(key) {
+                building.insert(key.clone());
+                return Claim::Build(BuildGuard {
+                    cache: self,
+                    key: key.clone(),
+                    done: false,
+                });
+            }
+            building = shard.built.wait(building).unwrap();
+        }
+    }
+
+    /// Resident entries, maintained atomically — reading it never takes
+    /// a shard lock (used by lock-free stats snapshots).
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.len.load(Relaxed)
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.len() == 0
     }
 
+    /// Total configured capacity (split across shards).
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
-    pub fn clear(&mut self) {
-        self.map.clear();
+    /// Number of lock-independent shards.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Drop every entry (build gates are untouched: in-flight builders
+    /// simply publish into an emptier cache).
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            let mut map = shard.map.write().unwrap();
+            self.len.fetch_sub(map.len(), Relaxed);
+            map.clear();
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::{mpsc, Arc};
 
     #[test]
     fn hit_and_miss() {
-        let mut c: LruCache<u32, String> = LruCache::new(4);
+        let c: ShardedLru<u32, String> = ShardedLru::new(4);
         assert!(c.get(&1).is_none());
         c.insert(1, "one".into());
         assert_eq!(c.get(&1).as_deref(), Some("one"));
@@ -93,8 +318,10 @@ mod tests {
     }
 
     #[test]
-    fn evicts_least_recently_used() {
-        let mut c: LruCache<u32, u32> = LruCache::new(2);
+    fn single_shard_evicts_least_recently_used() {
+        // Capacity 2 collapses to one shard → exact global LRU order.
+        let c: ShardedLru<u32, u32> = ShardedLru::new(2);
+        assert_eq!(c.shards(), 1);
         c.insert(1, 10);
         c.insert(2, 20);
         // Touch 1 so 2 becomes the LRU entry.
@@ -108,7 +335,7 @@ mod tests {
 
     #[test]
     fn replacing_does_not_evict() {
-        let mut c: LruCache<u32, u32> = LruCache::new(2);
+        let c: ShardedLru<u32, u32> = ShardedLru::new(2);
         c.insert(1, 10);
         c.insert(2, 20);
         c.insert(1, 11);
@@ -119,10 +346,129 @@ mod tests {
 
     #[test]
     fn clear_empties() {
-        let mut c: LruCache<u32, u32> = LruCache::new(2);
+        let c: ShardedLru<u32, u32> = ShardedLru::new(2);
         c.insert(1, 10);
         c.clear();
         assert!(c.is_empty());
         assert_eq!(c.capacity(), 2);
+    }
+
+    #[test]
+    fn default_capacity_shards_out() {
+        let c: ShardedLru<u32, u32> = ShardedLru::new(128);
+        assert_eq!(c.shards(), MAX_SHARDS);
+        for i in 0..100u32 {
+            c.insert(i, i);
+        }
+        assert!(c.len() <= 128);
+        assert!(c.len() >= 90, "per-shard bounds must not evict aggressively");
+    }
+
+    #[test]
+    fn get_or_insert_keeps_the_first_value() {
+        let c: ShardedLru<u32, u32> = ShardedLru::new(8);
+        let (v, inserted) = c.get_or_insert(1, 10);
+        assert_eq!((v, inserted), (10, true));
+        let (v, inserted) = c.get_or_insert(1, 99);
+        assert_eq!((v, inserted), (10, false));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn claim_builds_once_and_waiters_hit() {
+        let c: Arc<ShardedLru<String, u32>> = Arc::new(ShardedLru::new(16));
+        let builds = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = Arc::clone(&c);
+                let builds = Arc::clone(&builds);
+                s.spawn(move || match c.claim(&"k".to_string()) {
+                    Claim::Hit(v) => assert_eq!(v, 7),
+                    Claim::Build(guard) => {
+                        builds.fetch_add(1, Relaxed);
+                        // Make the build slow enough that the herd piles
+                        // onto the condvar.
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                        guard.complete(7);
+                    }
+                });
+            }
+        });
+        assert_eq!(builds.load(Relaxed), 1, "exactly one thread builds");
+        assert_eq!(c.get(&"k".to_string()), Some(7));
+    }
+
+    #[test]
+    fn abandoned_build_releases_the_gate() {
+        let c: ShardedLru<String, u32> = ShardedLru::new(16);
+        match c.claim(&"k".to_string()) {
+            Claim::Build(guard) => drop(guard), // builder failed
+            Claim::Hit(_) => panic!("cold key cannot hit"),
+        }
+        // The key is claimable again (a wedged gate would make this
+        // claim wait forever).
+        match c.claim(&"k".to_string()) {
+            Claim::Build(guard) => guard.complete(1),
+            Claim::Hit(_) => panic!("nothing was published"),
+        }
+        assert_eq!(c.get(&"k".to_string()), Some(1));
+    }
+
+    #[test]
+    fn building_one_key_does_not_block_other_keys() {
+        // Deterministic cross-key independence: hold a build gate open
+        // on one key and prove that claims and completions of *other*
+        // keys run to completion meanwhile (if they blocked, this test
+        // would hang, not fail an assert).
+        let c: Arc<ShardedLru<String, u32>> = Arc::new(ShardedLru::new(64));
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let (claimed_tx, claimed_rx) = mpsc::channel::<()>();
+        let slow = {
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || match c.claim(&"slow".to_string()) {
+                Claim::Build(guard) => {
+                    claimed_tx.send(()).unwrap();
+                    release_rx.recv().unwrap(); // gate stays held
+                    guard.complete(1);
+                }
+                Claim::Hit(_) => panic!("cold key cannot hit"),
+            })
+        };
+        claimed_rx.recv().unwrap();
+        // With "slow" mid-build, every other key remains fully usable.
+        for i in 0..32u32 {
+            let key = format!("fast-{i}");
+            match c.claim(&key) {
+                Claim::Build(guard) => guard.complete(i),
+                Claim::Hit(_) => panic!("cold key cannot hit"),
+            }
+            assert_eq!(c.get(&key), Some(i));
+        }
+        release_tx.send(()).unwrap();
+        slow.join().unwrap();
+        assert_eq!(c.get(&"slow".to_string()), Some(1));
+    }
+
+    #[test]
+    fn concurrent_reads_and_writes_keep_len_consistent() {
+        let c: Arc<ShardedLru<u32, u32>> = Arc::new(ShardedLru::new(256));
+        std::thread::scope(|s| {
+            for t in 0..8u32 {
+                let c = Arc::clone(&c);
+                s.spawn(move || {
+                    for i in 0..64 {
+                        let k = t * 64 + i;
+                        c.insert(k, k);
+                        assert_eq!(c.get(&k), Some(k));
+                    }
+                });
+            }
+        });
+        // 512 inserts into capacity 256: bounded, and len agrees with a
+        // full recount.
+        let n = c.len();
+        assert!(n <= 256, "len {n} exceeds capacity");
+        let recount: usize = (0..512u32).filter(|k| c.get(k).is_some()).count();
+        assert_eq!(n, recount, "atomic len must match resident entries");
     }
 }

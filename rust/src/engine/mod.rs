@@ -20,15 +20,23 @@
 //!
 //! Around that pipeline the engine provides:
 //!
-//! * a **content-keyed LRU cache** over
+//! * a **sharded, content-keyed LRU cache** over
 //!   `(model, batch, origin, precision)` holding the trace *and* its
 //!   plan ([`AnalyzedTrace`]), so repeated requests skip both tracking
-//!   and analysis. Hit/miss counters are exported via
+//!   and analysis. The cache ([`cache::ShardedLru`]) is lock-striped:
+//!   hits take a shard *read* guard and clone an `Arc`, misses gate on
+//!   a per-key singleflight (a thundering herd tracks once; a build in
+//!   one shard never blocks a hit in another), and all counters are
+//!   `AtomicU64`s snapshotted without locking by
 //!   [`PredictionEngine::stats`];
-//! * a **persistent fan-out worker pool** ([`pool::WorkerPool`]) —
-//!   spawned once at engine construction, sized by
-//!   [`PredictionEngine::with_workers`] or `HABITAT_WORKERS`, shared by
-//!   [`PredictionEngine::fan_out`] and [`PredictionEngine::rank`];
+//! * a **persistent shared compute pool** ([`pool::WorkerPool`]) — a
+//!   bounded submission queue feeding fixed workers, spawned once per
+//!   engine, sized by [`PredictionEngine::with_workers`] or
+//!   `HABITAT_WORKERS` (queue depth via `HABITAT_QUEUE_DEPTH`). Fan-out
+//!   helpers and the TCP service's request handlers draw from this one
+//!   budget; [`PredictionEngine::fan_out`] submits helpers without ever
+//!   blocking and always evaluates on the calling thread too, so a
+//!   `rank` running *on* a pool worker can never deadlock the pool;
 //! * the **memoized occupancy/wave-size table** ([`memo::WaveTable`])
 //!   shared with the ground-truth simulator (consulted only at
 //!   plan-build time);
@@ -43,8 +51,9 @@ pub mod cache;
 pub mod memo;
 pub mod pool;
 
-use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::mpsc;
+use std::sync::{Arc, OnceLock};
 
 use crate::cost;
 use crate::device::Device;
@@ -55,7 +64,7 @@ use crate::predict::{HybridPredictor, PredictedTrace};
 use crate::tracker::{OperationTracker, Trace};
 use crate::Result;
 
-use cache::LruCache;
+use cache::{Claim, ShardedLru};
 use pool::WorkerPool;
 
 /// Trace-cache key: model name, batch size, origin device, and the
@@ -143,28 +152,32 @@ pub struct EngineStats {
 }
 
 /// The shared prediction engine. `Send + Sync`: one engine serves any
-/// number of connection threads.
+/// number of connection threads, and under concurrency the hot path
+/// (cache hit → `Arc` clone → lock-free evaluate) takes only a shard
+/// read guard — no global mutex anywhere on it.
 pub struct PredictionEngine {
     predictor: Arc<HybridPredictor>,
-    entries: Mutex<LruCache<TraceKey, AnalyzedTrace>>,
-    /// Per-key build gates: concurrent misses on the *same* key wait for
-    /// the first builder instead of re-running the tracking pipeline
-    /// (distinct keys still track in parallel).
-    building: Mutex<std::collections::HashMap<TraceKey, Arc<Mutex<()>>>>,
+    /// Sharded trace+plan LRU with per-key singleflight build gates:
+    /// concurrent misses on the *same* key wait for the first builder
+    /// instead of re-running the tracking pipeline, and builds of
+    /// distinct keys never wait on each other.
+    entries: ShardedLru<TraceKey, AnalyzedTrace>,
     /// Client-uploaded traces (`submit_trace`), analyzed once and keyed
     /// by a content hash of their canonical JSON — arbitrary non-zoo
     /// workloads flow through the same plan/evaluate machinery as the
-    /// zoo models.
-    uploads: Mutex<LruCache<String, AnalyzedTrace>>,
+    /// zoo models. Sharded like `entries`.
+    uploads: ShardedLru<String, AnalyzedTrace>,
     trace_hits: AtomicU64,
     trace_misses: AtomicU64,
     trace_uploads: AtomicU64,
     plan_builds: AtomicU64,
-    /// Desired fan-out pool width; the pool itself is spawned lazily on
-    /// the first [`PredictionEngine::fan_out`] that needs it, so engines
-    /// that only evaluate sequentially never spawn threads and
+    /// Desired compute-pool width; the pool itself is spawned lazily on
+    /// the first use that needs it, so engines that only evaluate
+    /// sequentially never spawn threads and
     /// [`PredictionEngine::with_workers`] never discards a spawned pool.
     workers: usize,
+    /// Bounded submission-queue depth for the compute pool.
+    queue_depth: usize,
     pool: OnceLock<WorkerPool>,
 }
 
@@ -190,14 +203,14 @@ impl PredictionEngine {
             });
         PredictionEngine {
             predictor: Arc::new(predictor),
-            entries: Mutex::new(LruCache::new(capacity)),
-            building: Mutex::new(std::collections::HashMap::new()),
-            uploads: Mutex::new(LruCache::new(DEFAULT_UPLOAD_CAPACITY)),
+            entries: ShardedLru::new(capacity),
+            uploads: ShardedLru::new(DEFAULT_UPLOAD_CAPACITY),
             trace_hits: AtomicU64::new(0),
             trace_misses: AtomicU64::new(0),
             trace_uploads: AtomicU64::new(0),
             plan_builds: AtomicU64::new(0),
             workers,
+            queue_depth: pool::queue_depth_from_env(),
             pool: OnceLock::new(),
         }
     }
@@ -212,7 +225,7 @@ impl PredictionEngine {
         Ok(Self::new(crate::runtime::predictor_from_artifacts(dir)?))
     }
 
-    /// Set the persistent fan-out pool width (if a pool was already
+    /// Set the persistent compute-pool width (if a pool was already
     /// spawned, its threads are joined and a new one is spawned lazily).
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = workers.max(1);
@@ -220,14 +233,34 @@ impl PredictionEngine {
         self
     }
 
-    /// Persistent fan-out worker-pool width.
+    /// Set the compute pool's bounded submission-queue depth (same
+    /// respawn semantics as [`PredictionEngine::with_workers`]).
+    pub fn with_queue_depth(mut self, queue_depth: usize) -> Self {
+        self.queue_depth = queue_depth.max(1);
+        self.pool = OnceLock::new();
+        self
+    }
+
+    /// Persistent compute-pool width.
     pub fn workers(&self) -> usize {
         self.pool.get().map_or(self.workers, WorkerPool::size)
     }
 
-    /// The persistent pool, spawned on first use.
-    fn pool(&self) -> &WorkerPool {
-        self.pool.get_or_init(|| WorkerPool::new(self.workers))
+    /// Bounded submission-queue depth of the compute pool.
+    pub fn queue_depth(&self) -> usize {
+        self.pool
+            .get()
+            .map_or(self.queue_depth, WorkerPool::queue_depth)
+    }
+
+    /// The persistent shared compute pool, spawned on first use. The
+    /// TCP service submits request jobs here ([`WorkerPool::try_execute`]
+    /// — a full queue is its backpressure signal), and
+    /// [`PredictionEngine::fan_out`] adds evaluation helpers, so rank
+    /// fan-outs and concurrent clients share one bounded budget.
+    pub fn pool(&self) -> &WorkerPool {
+        self.pool
+            .get_or_init(|| WorkerPool::with_queue_depth(self.workers, self.queue_depth))
     }
 
     pub fn predictor(&self) -> &HybridPredictor {
@@ -272,40 +305,34 @@ impl PredictionEngine {
         precision: Precision,
     ) -> Result<AnalyzedTrace> {
         let key = (model.to_string(), batch, origin, precision);
-        if let Some(entry) = self.entries.lock().unwrap().get(&key) {
-            self.trace_hits.fetch_add(1, Relaxed);
-            return Ok(entry);
+        // Hit path: a shard read guard and an `Arc` clone — no global
+        // lock, so concurrent hits (same key or not) never serialize.
+        // Miss path: `claim` hands exactly one caller the build license;
+        // a thundering herd of identical cold requests parks on the
+        // shard's condvar and wakes into a hit, tracking exactly once.
+        match self.entries.claim(&key) {
+            Claim::Hit(entry) => {
+                self.trace_hits.fetch_add(1, Relaxed);
+                Ok(entry)
+            }
+            Claim::Build(license) => {
+                let Some(graph) = models::by_name(model, batch) else {
+                    // Dropping the license releases the gate (waiters
+                    // retry and fail the same way) — an unknown model is
+                    // an error, not a miss.
+                    anyhow::bail!("unknown model {model:?}");
+                };
+                // Count a miss only when the tracking pipeline actually
+                // runs; track outside every lock.
+                self.trace_misses.fetch_add(1, Relaxed);
+                self.plan_builds.fetch_add(1, Relaxed);
+                let entry = OperationTracker::new(origin)
+                    .with_precision(precision)
+                    .track_analyzed(&graph, &self.predictor.metrics_policy);
+                license.complete(entry.clone());
+                Ok(entry)
+            }
         }
-        // Miss: serialize builders of the *same* key so a thundering herd
-        // of identical cold requests tracks exactly once.
-        let gate = self
-            .building
-            .lock()
-            .unwrap()
-            .entry(key.clone())
-            .or_insert_with(|| Arc::new(Mutex::new(())))
-            .clone();
-        // Recover a poisoned gate: a builder that panicked mid-track must
-        // not permanently wedge this key for the life of the service.
-        let _build_guard = gate.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
-        // Double-check: the first builder may have just filled the cache.
-        if let Some(entry) = self.entries.lock().unwrap().get(&key) {
-            self.trace_hits.fetch_add(1, Relaxed);
-            return Ok(entry);
-        }
-        let Some(graph) = models::by_name(model, batch) else {
-            self.building.lock().unwrap().remove(&key);
-            anyhow::bail!("unknown model {model:?}");
-        };
-        // Count a miss only when the tracking pipeline actually runs.
-        self.trace_misses.fetch_add(1, Relaxed);
-        self.plan_builds.fetch_add(1, Relaxed);
-        let entry = OperationTracker::new(origin)
-            .with_precision(precision)
-            .track_analyzed(&graph, &self.predictor.metrics_policy);
-        self.entries.lock().unwrap().insert(key.clone(), entry.clone());
-        self.building.lock().unwrap().remove(&key);
-        Ok(entry)
     }
 
     /// Compile a plan for an externally supplied trace (e.g. loaded from
@@ -332,37 +359,36 @@ impl PredictionEngine {
         // The id is a 64-bit content hash; on any hit, confirm the
         // content actually matches so a collision surfaces as an error
         // instead of silently serving another client's trace.
-        if let Some(entry) = self.uploads.lock().unwrap().get(&id) {
+        if let Some(entry) = self.uploads.get(&id) {
             anyhow::ensure!(
                 entry.trace.to_json() == canonical,
                 "trace id {id} collides with a different previously submitted trace"
             );
             return Ok((id, entry));
         }
-        // Analyze outside the lock: a large plan compile must not block
-        // concurrent uploaded-trace predictions or stats reads.
+        // Analyze outside every lock: a large plan compile must not
+        // block concurrent uploaded-trace predictions or stats reads.
         let entry = AnalyzedTrace {
             plan: self.analyze(&trace),
             trace: Arc::new(trace),
         };
-        let mut uploads = self.uploads.lock().unwrap();
-        if let Some(existing) = uploads.get(&id) {
-            // Raced with an identical concurrent submission: keep the
-            // first entry and count the upload once.
+        // One shard write lock decides the winner of an identical
+        // concurrent submission race; the upload is counted once.
+        let (stored, inserted) = self.uploads.get_or_insert(id.clone(), entry);
+        if inserted {
+            self.trace_uploads.fetch_add(1, Relaxed);
+        } else {
             anyhow::ensure!(
-                existing.trace.to_json() == canonical,
+                stored.trace.to_json() == canonical,
                 "trace id {id} collides with a different previously submitted trace"
             );
-            return Ok((id, existing));
         }
-        self.trace_uploads.fetch_add(1, Relaxed);
-        uploads.insert(id.clone(), entry.clone());
-        Ok((id, entry))
+        Ok((id, stored))
     }
 
     /// Look up a previously submitted trace by id.
     pub fn uploaded(&self, trace_id: &str) -> Option<AnalyzedTrace> {
-        self.uploads.lock().unwrap().get(&trace_id.to_string())
+        self.uploads.get(&trace_id.to_string())
     }
 
     fn uploaded_or_err(&self, trace_id: &str) -> Result<AnalyzedTrace> {
@@ -440,11 +466,19 @@ impl PredictionEngine {
         self.evaluate(&plan, dest, precision)
     }
 
-    /// Evaluate one compiled plan on *all* destinations, spread over the
-    /// persistent worker pool. Every per-destination evaluation is pure
-    /// arithmetic over the shared plan (no lock, no hash, no feature
-    /// rebuild). Results come back in `dests` order and are bit-identical
-    /// to sequential [`PredictionEngine::evaluate`] calls.
+    /// Evaluate one compiled plan on *all* destinations, cooperatively
+    /// with the shared compute pool. Every per-destination evaluation is
+    /// pure arithmetic over the shared plan (no lock, no hash, no
+    /// feature rebuild). Results come back in `dests` order and are
+    /// bit-identical to sequential [`PredictionEngine::evaluate`] calls.
+    ///
+    /// Scheduling is **work-claiming**: destinations sit behind an
+    /// atomic cursor, helper jobs are offered to the pool with a
+    /// non-blocking [`pool::WorkerPool::try_execute`], and the calling
+    /// thread claims work too. The call therefore completes even if the
+    /// pool contributes zero helpers — which makes it safe to fan out
+    /// *from inside* a pool worker (every service `rank` does), with no
+    /// risk of the workers deadlocking on each other.
     pub fn fan_out(
         &self,
         plan: &Arc<AnalyzedPlan>,
@@ -462,24 +496,53 @@ impl PredictionEngine {
         }
         // Results travel as `thread::Result` so a panicking evaluation
         // (e.g. a misbehaving external MLP backend) re-raises its
-        // original payload in the caller — matching the old scoped
-        // threads — instead of surfacing as an opaque missing result.
-        let (tx, rx) = std::sync::mpsc::channel::<(usize, std::thread::Result<PredictedTrace>)>();
-        for (i, &dest) in dests.iter().enumerate() {
-            let plan = Arc::clone(plan);
-            let predictor = Arc::clone(&self.predictor);
-            let tx = tx.clone();
-            self.pool().execute(move || {
-                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    predictor.evaluate_with_precision(&plan, dest, precision)
-                }));
-                let _ = tx.send((i, result));
-            });
+        // original payload in the caller instead of surfacing as an
+        // opaque missing result.
+        struct FanOut {
+            plan: Arc<AnalyzedPlan>,
+            predictor: Arc<HybridPredictor>,
+            dests: Vec<Device>,
+            precision: Precision,
+            next: AtomicUsize,
+            tx: mpsc::Sender<(usize, std::thread::Result<PredictedTrace>)>,
         }
-        drop(tx);
+        impl FanOut {
+            fn run(&self) {
+                loop {
+                    let i = self.next.fetch_add(1, Relaxed);
+                    let Some(&dest) = self.dests.get(i) else { break };
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        self.predictor
+                            .evaluate_with_precision(&self.plan, dest, self.precision)
+                    }));
+                    if self.tx.send((i, result)).is_err() {
+                        break; // the caller bailed (panic propagation)
+                    }
+                }
+            }
+        }
+        let (tx, rx) = mpsc::channel();
+        let shared = Arc::new(FanOut {
+            plan: Arc::clone(plan),
+            predictor: Arc::clone(&self.predictor),
+            dests: dests.to_vec(),
+            precision,
+            next: AtomicUsize::new(0),
+            tx,
+        });
+        let helpers = self.workers().saturating_sub(1).min(dests.len() - 1);
+        for _ in 0..helpers {
+            let state = Arc::clone(&shared);
+            if self.pool().try_execute(move || state.run()).is_err() {
+                break; // pool saturated: the caller covers the rest alone
+            }
+        }
+        shared.run();
+        drop(shared);
         let mut out: Vec<Option<PredictedTrace>> = Vec::with_capacity(dests.len());
         out.resize_with(dests.len(), || None);
-        for (i, result) in rx {
+        for _ in 0..dests.len() {
+            let (i, result) = rx.recv().expect("a fan-out participant vanished");
             match result {
                 Ok(pred) => out[i] = Some(pred),
                 Err(payload) => std::panic::resume_unwind(payload),
@@ -544,14 +607,17 @@ impl PredictionEngine {
     }
 
     /// Counter snapshot (trace/plan cache + shared wave table + pool).
+    /// Entirely lock-free: every counter is an atomic — including the
+    /// cache entry counts, which the sharded caches maintain atomically
+    /// — so a stats probe never contends with the prediction hot path.
     pub fn stats(&self) -> EngineStats {
         let (wave_hits, wave_misses) = memo::WaveTable::global().counters();
         EngineStats {
             trace_hits: self.trace_hits.load(Relaxed),
             trace_misses: self.trace_misses.load(Relaxed),
-            trace_entries: self.entries.lock().unwrap().len(),
+            trace_entries: self.entries.len(),
             trace_uploads: self.trace_uploads.load(Relaxed),
-            uploaded_entries: self.uploads.lock().unwrap().len(),
+            uploaded_entries: self.uploads.len(),
             devices: crate::device::registry::device_count(),
             plan_builds: self.plan_builds.load(Relaxed),
             wave_hits,
@@ -563,7 +629,7 @@ impl PredictionEngine {
     /// Drop every cached trace+plan entry (the counters are preserved).
     /// Used by the cold-path benches.
     pub fn clear_trace_cache(&self) {
-        self.entries.lock().unwrap().clear();
+        self.entries.clear();
     }
 }
 

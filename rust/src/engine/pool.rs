@@ -1,65 +1,126 @@
-//! Persistent worker pool for multi-destination fan-out.
+//! The shared compute pool: a fixed set of worker threads fed from one
+//! **bounded** submission queue.
 //!
-//! The engine used to spawn-and-join a fresh set of `std::thread`s
-//! inside every `fan_out` call; under service load (every `rank` RPC
-//! fans out) that is thousands of thread spawns per second for work
-//! items that take microseconds each. This pool spawns its threads once
-//! at engine construction and feeds them closures over a channel.
+//! This is the single execution budget of the process. Both kinds of
+//! concurrent work draw from it:
+//!
+//! * **fan-out helpers** — `PredictionEngine::fan_out` submits
+//!   per-destination evaluation helpers with [`WorkerPool::try_execute`]
+//!   (never blocking: the calling thread always evaluates too, so a
+//!   fan-out makes progress even when every worker is busy — which is
+//!   exactly what happens when the fan-out itself runs *on* a pool
+//!   worker serving a `rank` request);
+//! * **service requests** — the TCP runtime
+//!   (`coordinator::service::start`) submits one job per request line
+//!   with `try_execute`; a full queue is answered with a typed
+//!   `overloaded` error instead of letting work pile up unboundedly.
+//!
+//! The queue is a `sync_channel` of [`DEFAULT_QUEUE_DEPTH`] slots
+//! (override with `HABITAT_QUEUE_DEPTH`): [`WorkerPool::execute`]
+//! blocks for a slot (used by tests and one-off background work),
+//! [`WorkerPool::try_execute`] returns [`Busy`] immediately — the
+//! backpressure primitive.
 //!
 //! Sizing: [`crate::engine::PredictionEngine::with_workers`] (builder)
 //! or the `HABITAT_WORKERS` environment variable, defaulting to the
 //! machine's available parallelism capped at 8.
 
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Environment variable overriding the submission-queue depth.
+pub const QUEUE_DEPTH_ENV: &str = "HABITAT_QUEUE_DEPTH";
+
+/// Default bounded submission-queue depth.
+pub const DEFAULT_QUEUE_DEPTH: usize = 1024;
+
+/// Read the queue depth from `HABITAT_QUEUE_DEPTH`, defaulting to
+/// [`DEFAULT_QUEUE_DEPTH`].
+pub fn queue_depth_from_env() -> usize {
+    std::env::var(QUEUE_DEPTH_ENV)
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(DEFAULT_QUEUE_DEPTH)
+}
+
+/// The submission queue was full (or the pool is shutting down); the
+/// job was **not** run and has been dropped. Callers that must answer
+/// regardless (the service) keep their own reply channel and send a
+/// typed `overloaded` error instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Busy;
+
+impl std::fmt::Display for Busy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("compute queue full")
+    }
+}
+
+impl std::error::Error for Busy {}
+
 /// A fixed-size pool of persistent worker threads executing boxed jobs
-/// in submission order (work-stealing is overkill: jobs are uniform
-/// per-destination evaluations).
+/// from a bounded MPMC queue in submission order (work-stealing is
+/// overkill: jobs are uniform per-destination evaluations or request
+/// handlers).
 pub struct WorkerPool {
-    tx: Option<Sender<Job>>,
+    tx: Option<SyncSender<Job>>,
     workers: Vec<JoinHandle<()>>,
+    queue_depth: usize,
 }
 
 impl WorkerPool {
-    /// Spawn `size` (≥ 1) worker threads.
+    /// Spawn `size` (≥ 1) worker threads with the environment-derived
+    /// queue depth.
     pub fn new(size: usize) -> Self {
+        Self::with_queue_depth(size, queue_depth_from_env())
+    }
+
+    /// Spawn `size` (≥ 1) worker threads over a queue of `queue_depth`
+    /// (≥ 1) slots.
+    pub fn with_queue_depth(size: usize, queue_depth: usize) -> Self {
         let size = size.max(1);
-        let (tx, rx) = channel::<Job>();
+        let queue_depth = queue_depth.max(1);
+        let (tx, rx) = sync_channel::<Job>(queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let workers = (0..size)
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 std::thread::Builder::new()
-                    .name(format!("habitat-predict-{i}"))
-                    .spawn(move || loop {
-                        // Hold the receiver lock only while dequeuing,
-                        // never while running the job.
-                        let job = match rx.lock() {
-                            Ok(guard) => guard.recv(),
-                            Err(_) => break, // a job panicked mid-recv
-                        };
-                        match job {
-                            // Contain a panicking job (e.g. a
-                            // misbehaving external MlpBackend) to that
-                            // one request: the submitter sees its result
-                            // channel close, but the worker survives to
-                            // serve other requests — matching the old
-                            // per-call scoped threads, which never
-                            // outlived one request.
-                            Ok(job) => {
-                                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
-                            }
-                            Err(_) => break, // pool dropped
-                        }
-                    })
-                    .expect("spawn fan-out worker")
+                    .name(format!("habitat-worker-{i}"))
+                    .spawn(move || Self::worker_loop(&rx))
+                    .expect("spawn pool worker")
             })
             .collect();
-        WorkerPool { tx: Some(tx), workers }
+        WorkerPool {
+            tx: Some(tx),
+            workers,
+            queue_depth,
+        }
+    }
+
+    fn worker_loop(rx: &Mutex<Receiver<Job>>) {
+        loop {
+            // Hold the receiver lock only while dequeuing, never while
+            // running the job.
+            let job = match rx.lock() {
+                Ok(guard) => guard.recv(),
+                Err(_) => break, // a job panicked mid-recv
+            };
+            match job {
+                // Contain a panicking job (e.g. a misbehaving external
+                // MlpBackend, or a request handler hitting a bug) to
+                // that one job: the submitter sees its result channel
+                // close, but the worker survives to serve other work.
+                Ok(job) => {
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                }
+                Err(_) => break, // pool dropped
+            }
+        }
     }
 
     /// Number of worker threads.
@@ -67,14 +128,37 @@ impl WorkerPool {
         self.workers.len()
     }
 
-    /// Submit one job. Job panics are contained to the job (the worker
-    /// survives); the send itself cannot fail while the pool is alive.
+    /// Bounded submission-queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
+    /// Submit one job, **blocking** until a queue slot frees up. Job
+    /// panics are contained to the job (the worker survives). Never
+    /// call this from *inside* a pool job — a full queue would deadlock
+    /// the worker; in-pool submitters use [`WorkerPool::try_execute`].
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
         self.tx
             .as_ref()
             .expect("pool is alive until drop")
             .send(Box::new(job))
-            .expect("fan-out workers alive");
+            .expect("pool workers alive");
+    }
+
+    /// Submit one job without blocking: `Err(Busy)` if every queue slot
+    /// is taken (the job is dropped, not run). This is the only
+    /// submission path safe from inside a pool job, and the hook the
+    /// service's `overloaded` backpressure hangs off.
+    pub fn try_execute(&self, job: impl FnOnce() + Send + 'static) -> Result<(), Busy> {
+        match self
+            .tx
+            .as_ref()
+            .expect("pool is alive until drop")
+            .try_send(Box::new(job))
+        {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => Err(Busy),
+        }
     }
 }
 
@@ -92,11 +176,13 @@ impl Drop for WorkerPool {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc::channel;
 
     #[test]
     fn runs_every_job_across_workers() {
         let pool = WorkerPool::new(4);
         assert_eq!(pool.size(), 4);
+        assert!(pool.queue_depth() >= 1);
         let counter = Arc::new(AtomicUsize::new(0));
         let (tx, rx) = channel::<usize>();
         for i in 0..64 {
@@ -116,8 +202,9 @@ mod tests {
 
     #[test]
     fn zero_size_is_clamped_to_one() {
-        let pool = WorkerPool::new(0);
+        let pool = WorkerPool::with_queue_depth(0, 0);
         assert_eq!(pool.size(), 1);
+        assert_eq!(pool.queue_depth(), 1);
         let (tx, rx) = channel::<u32>();
         pool.execute(move || tx.send(7).unwrap());
         assert_eq!(rx.recv().unwrap(), 7);
@@ -146,5 +233,31 @@ mod tests {
             }
         } // Drop joins the workers after the queue drains.
         assert_eq!(counter.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn try_execute_reports_busy_when_the_queue_is_full() {
+        // One worker, one queue slot. Wedge the worker on a gate, fill
+        // the single slot, and the third submission must bounce.
+        let pool = WorkerPool::with_queue_depth(1, 1);
+        let (gate_tx, gate_rx) = channel::<()>();
+        pool.execute(move || {
+            gate_rx.recv().unwrap();
+        });
+        // The worker may or may not have dequeued the gate job yet;
+        // keep try-filling until the queue slot is occupied.
+        while pool.try_execute(|| {}).is_ok() {}
+        assert_eq!(pool.try_execute(|| {}), Err(Busy));
+        gate_tx.send(()).unwrap();
+        // After the gate opens, the queue drains and submissions flow.
+        let (tx, rx) = channel::<u32>();
+        loop {
+            let tx = tx.clone();
+            if pool.try_execute(move || tx.send(5).unwrap()).is_ok() {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        assert_eq!(rx.recv().unwrap(), 5);
     }
 }

@@ -7,7 +7,8 @@
 //! habitat compare   [--model M] [--batch N] [--origin D] [--dp WORLD]
 //! habitat dataset   [--out DIR] [--configs N] [--seed S]
 //! habitat experiment <id|all> [--out DIR] [--artifacts DIR]
-//! habitat serve     [--addr HOST:PORT] [--artifacts DIR]
+//! habitat serve     [--addr HOST:PORT] [--artifacts DIR] [--max-conns N]
+//!                   [--workers N] [--queue-depth N]
 //! habitat devices
 //! ```
 //!
@@ -86,7 +87,8 @@ const USAGE: &str = "usage: habitat <predict|track|compare|dataset|experiment|se
   dataset    [--out DIR] [--configs N] [--seed S]
   experiment <fig1|fig3|fig4|table1|contribution|fig6|fig7|amp|extrapolate|ablation|dp|scheduler|all>
              [--out DIR] [--artifacts DIR]
-  serve      [--addr HOST:PORT] [--artifacts DIR]
+  serve      [--addr HOST:PORT] [--artifacts DIR] [--max-conns N]
+             [--workers N] [--queue-depth N]
   devices";
 
 fn main() -> anyhow::Result<()> {
@@ -250,9 +252,28 @@ fn main() -> anyhow::Result<()> {
         }
         "serve" => {
             let args = Args::parse(rest, &[])?;
-            habitat::coordinator::serve(
+            // Worker/queue sizing is read by the engine at construction
+            // from the environment; flags simply take precedence over
+            // whatever the environment already says.
+            if let Some(v) = args.flags.get("workers") {
+                let n = v.parse::<usize>().map_err(|e| anyhow::anyhow!("--workers: {e}"))?;
+                anyhow::ensure!(n > 0, "--workers must be positive");
+                std::env::set_var(habitat::engine::WORKERS_ENV, v);
+            }
+            if let Some(v) = args.flags.get("queue-depth") {
+                let n = v.parse::<usize>().map_err(|e| anyhow::anyhow!("--queue-depth: {e}"))?;
+                anyhow::ensure!(n > 0, "--queue-depth must be positive");
+                std::env::set_var(habitat::engine::pool::QUEUE_DEPTH_ENV, v);
+            }
+            let defaults = habitat::coordinator::ServeOptions::default();
+            let opts = habitat::coordinator::ServeOptions {
+                max_conns: args.get_usize("max-conns", defaults.max_conns)?.max(1),
+                ..defaults
+            };
+            habitat::coordinator::serve_with(
                 &args.get("addr", "127.0.0.1:7780"),
                 &args.get("artifacts", "artifacts"),
+                opts,
             )?;
         }
         "devices" => {

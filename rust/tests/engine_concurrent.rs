@@ -1,0 +1,309 @@
+//! Concurrency suite for the sharded engine and the bounded serving
+//! runtime: hammer one engine from 16 threads (singleflight, cross-key
+//! independence, atomic counters), then drive the TCP server with
+//! 8 simultaneous pipelined clients.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use habitat::coordinator::{
+    service, PredictionResponse, PredictionService, RankResponse, ServeOptions, StatsResponse,
+};
+use habitat::device::Device;
+use habitat::engine::PredictionEngine;
+use habitat::predict::HybridPredictor;
+use habitat::Precision;
+
+fn engine() -> PredictionEngine {
+    PredictionEngine::wave_only()
+}
+
+// ------------------------------------------------------ engine layer --
+
+#[test]
+fn sixteen_threads_same_key_build_exactly_once() {
+    let e = engine();
+    std::thread::scope(|s| {
+        for _ in 0..16 {
+            s.spawn(|| {
+                let analyzed = e.analyzed("mlp", 16, Device::T4).unwrap();
+                assert!(!analyzed.trace.ops.is_empty());
+            });
+        }
+    });
+    let st = e.stats();
+    assert_eq!(st.trace_misses, 1, "singleflight must track exactly once");
+    assert_eq!(st.trace_hits, 15);
+    assert_eq!(st.plan_builds, 1, "…and analyze exactly once");
+    assert_eq!(st.trace_entries, 1);
+}
+
+#[test]
+fn sixteen_threads_distinct_keys_all_build_independently() {
+    // Generous capacity so per-shard bounds cannot evict however the 16
+    // keys stripe.
+    let e = PredictionEngine::with_capacity(HybridPredictor::wave_only(), 1024);
+    std::thread::scope(|s| {
+        for t in 0..16usize {
+            let e = &e;
+            s.spawn(move || {
+                // Distinct batch per thread → 16 distinct keys, all
+                // tracked in parallel with no cross-key gating.
+                e.analyzed("mlp", t + 1, Device::T4).unwrap();
+            });
+        }
+    });
+    let st = e.stats();
+    assert_eq!(st.trace_misses, 16, "every distinct key tracks once");
+    assert_eq!(st.trace_hits, 0);
+    assert_eq!(st.trace_entries, 16);
+}
+
+#[test]
+fn atomic_stats_add_up_under_mixed_load() {
+    // 16 threads × 50 requests over 4 keys: whatever the interleaving,
+    // hits + misses == total requests, each key built exactly once, and
+    // the entry count matches the key count — the counters are atomics,
+    // not lossy approximations.
+    let e = engine();
+    let batches = [8usize, 16, 24, 32];
+    std::thread::scope(|s| {
+        for t in 0..16usize {
+            let e = &e;
+            let batches = &batches;
+            s.spawn(move || {
+                for i in 0..50usize {
+                    let batch = batches[(t + i) % batches.len()];
+                    e.analyzed("mlp", batch, Device::T4).unwrap();
+                }
+            });
+        }
+    });
+    let st = e.stats();
+    assert_eq!(st.trace_hits + st.trace_misses, 16 * 50);
+    assert_eq!(st.trace_misses, 4, "4 keys → 4 tracking passes, never more");
+    assert_eq!(st.plan_builds, 4);
+    assert_eq!(st.trace_entries, 4);
+}
+
+#[test]
+fn concurrent_identical_uploads_count_once() {
+    let e = engine();
+    let graph = habitat::models::by_name("mlp", 24).unwrap();
+    let trace = habitat::OperationTracker::new(Device::T4).track(&graph);
+    let ids: Vec<String> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let e = &e;
+                let trace = trace.clone();
+                s.spawn(move || e.submit_trace(trace).unwrap().0)
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert!(ids.windows(2).all(|w| w[0] == w[1]), "one content, one id");
+    let st = e.stats();
+    assert_eq!(st.trace_uploads, 1, "identical concurrent uploads count once");
+    assert_eq!(st.uploaded_entries, 1);
+}
+
+#[test]
+fn concurrent_rank_and_predict_agree_with_sequential() {
+    // Fan-outs racing with individual predicts must produce the same
+    // bits as a quiet engine.
+    let e = engine();
+    let expected = {
+        let quiet = engine();
+        let analyzed = quiet.analyzed("mlp", 32, Device::T4).unwrap();
+        quiet
+            .evaluate(&analyzed.plan, Device::V100, Precision::Fp32)
+            .run_time_ms()
+    };
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let e = &e;
+            s.spawn(move || {
+                let dests = habitat::device::registry::all_devices();
+                let ranking = e
+                    .rank("mlp", 32, Device::T4, &dests, Precision::Fp32)
+                    .unwrap();
+                assert_eq!(ranking.entries.len(), dests.len());
+            });
+        }
+        for _ in 0..8 {
+            let e = &e;
+            s.spawn(move || {
+                let out = e
+                    .predict("mlp", 32, Device::T4, Device::V100, Precision::Fp32)
+                    .unwrap();
+                assert_eq!(
+                    out.pred.run_time_ms().to_bits(),
+                    expected.to_bits(),
+                    "concurrency must not change prediction bits"
+                );
+            });
+        }
+    });
+    assert_eq!(e.stats().trace_misses, 1, "all 16 callers shared one tracking pass");
+}
+
+// ----------------------------------------------------- serving layer --
+
+fn start_server() -> service::ServerHandle {
+    service::start(
+        "127.0.0.1:0",
+        Arc::new(PredictionService::with_predictor(HybridPredictor::wave_only())),
+        ServeOptions::default(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn eight_simultaneous_clients_pipelined_lines_all_answered_in_order() {
+    let handle = start_server();
+    let addr = handle.local_addr();
+    let dests = ["v100", "p100", "p4000", "t4", "rtx2070", "2080ti"];
+
+    std::thread::scope(|s| {
+        for c in 0..8usize {
+            s.spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut write = stream.try_clone().unwrap();
+                // Pipeline a mixed burst: predicts with a known reply
+                // order, one rank, one stats.
+                let mut lines = Vec::new();
+                for i in 0..10usize {
+                    let dest = dests[(c + i) % dests.len()];
+                    lines.push(format!(
+                        "{{\"model\":\"mlp\",\"batch\":{},\"origin\":\"t4\",\"dest\":\"{dest}\"}}",
+                        8 + (c % 3) * 8
+                    ));
+                }
+                lines.push("{\"rank\":true,\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\"}".into());
+                lines.push("{\"stats\":true}".into());
+                for line in &lines {
+                    write.write_all(line.as_bytes()).unwrap();
+                    write.write_all(b"\n").unwrap();
+                }
+                stream.shutdown(std::net::Shutdown::Write).unwrap();
+
+                let replies: Vec<String> =
+                    BufReader::new(stream).lines().map(|l| l.unwrap()).collect();
+                assert_eq!(replies.len(), lines.len(), "no reply may be dropped");
+                for (i, reply) in replies[..10].iter().enumerate() {
+                    let resp = PredictionResponse::from_json(reply)
+                        .unwrap_or_else(|e| panic!("client {c} line {i}: {e}: {reply}"));
+                    let want = Device::parse(dests[(c + i) % dests.len()]).unwrap();
+                    assert_eq!(resp.dest, want.id(), "replies must keep request order");
+                }
+                assert!(!RankResponse::from_json(&replies[10]).unwrap().ranking.is_empty());
+                StatsResponse::from_json(&replies[11]).unwrap();
+            });
+        }
+    });
+
+    // Every connection wound down; the slots drained.
+    for _ in 0..100 {
+        if handle.active_connections() == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert_eq!(handle.active_connections(), 0);
+    handle.shutdown();
+}
+
+#[test]
+fn shutdown_joins_the_runtime_and_frees_the_port() {
+    let handle = start_server();
+    let addr = handle.local_addr();
+
+    // A connection with an in-flight request at shutdown time still gets
+    // its reply (drain, not abort).
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut write = stream.try_clone().unwrap();
+    write
+        .write_all(b"{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}\n")
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(PredictionResponse::from_json(line.trim()).is_ok());
+
+    handle.shutdown();
+    // The listener is closed and the reader was unblocked: the next read
+    // on the old connection sees EOF rather than hanging forever.
+    let mut line = String::new();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "reader must see EOF");
+    assert!(TcpStream::connect(addr).is_err(), "port must be released");
+}
+
+#[test]
+fn counters_are_coherent_after_a_concurrent_session() {
+    let handle = start_server();
+    let addr = handle.local_addr();
+    let per_client = 20usize;
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            s.spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut write = stream.try_clone().unwrap();
+                for _ in 0..per_client {
+                    write
+                        .write_all(
+                            b"{\"model\":\"mlp\",\"batch\":16,\"origin\":\"t4\",\"dest\":\"v100\"}\n",
+                        )
+                        .unwrap();
+                }
+                stream.shutdown(std::net::Shutdown::Write).unwrap();
+                let n = BufReader::new(stream).lines().filter(|l| l.is_ok()).count();
+                assert_eq!(n, per_client);
+            });
+        }
+    });
+    let st = handle.service().engine().stats();
+    assert_eq!(
+        st.trace_hits + st.trace_misses,
+        8 * per_client as u64,
+        "atomic counters must account for every request"
+    );
+    assert_eq!(st.trace_misses, 1, "one tracking pass across all clients");
+    handle.shutdown();
+}
+
+#[test]
+fn pool_counter_sharing_rank_draws_from_the_service_budget() {
+    // The engine pool and the serving workers are the same pool: the
+    // worker count the stats report is the bound that both the fan-out
+    // helpers and the request handlers live under.
+    let engine = PredictionEngine::wave_only().with_workers(3).with_queue_depth(64);
+    let service = Arc::new(PredictionService::with_engine(engine));
+    let handle = service::start("127.0.0.1:0", service, ServeOptions::default()).unwrap();
+    let addr = handle.local_addr();
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut write = stream.try_clone().unwrap();
+    write
+        .write_all(b"{\"rank\":true,\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\"}\n{\"stats\":true}\n")
+        .unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let replies: Vec<String> = BufReader::new(stream).lines().map(|l| l.unwrap()).collect();
+    assert_eq!(replies.len(), 2);
+    assert!(!RankResponse::from_json(&replies[0]).unwrap().ranking.is_empty());
+    let stats = StatsResponse::from_json(&replies[1]).unwrap();
+    assert_eq!(stats.workers, 3, "one shared pool, one worker bound");
+    assert_eq!(handle.service().engine().queue_depth(), 64);
+    handle.shutdown();
+}
+
+#[test]
+fn engine_queue_depth_is_configurable_and_clamped() {
+    let e = PredictionEngine::wave_only().with_queue_depth(0);
+    assert_eq!(e.queue_depth(), 1, "zero clamps to one");
+    let e = PredictionEngine::wave_only().with_queue_depth(7);
+    assert_eq!(e.queue_depth(), 7);
+    // Forcing the pool into existence keeps the same depth.
+    let _ = e.pool();
+    assert_eq!(e.queue_depth(), 7);
+}

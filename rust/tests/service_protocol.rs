@@ -42,7 +42,10 @@ fn send_lines(addr: &str, lines: &[String]) -> Vec<String> {
         write.write_all(line.as_bytes()).unwrap();
         write.write_all(b"\n").unwrap();
     }
-    drop(write);
+    // Half-close the write side so the server sees EOF and closes after
+    // the final reply (dropping the clone alone leaves the socket open
+    // through the read half, and this collect would never terminate).
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
     BufReader::new(stream)
         .lines()
         .map(|l| l.unwrap())

@@ -1,0 +1,267 @@
+#!/usr/bin/env python3
+"""Concurrent-client load generator for `habitat serve`.
+
+Opens N connections, each driving M requests with windowed pipelining
+(a mix of predict / rank / stats lines), measures per-request latency,
+and prints p50/p90/p99 latency plus aggregate req/s. Results are also
+written to a JSON file (default `BENCH_service.json`) so the perf
+trajectory has machine-readable data points.
+
+Exit code is non-zero if any response is dropped (a connection closed
+with requests outstanding) or any reply is an error other than the
+typed `overloaded` backpressure signal — `overloaded` replies are
+counted and reported, not treated as failures, because they are the
+bounded runtime doing its job.
+
+Usage:
+  # against an already running server
+  python3 scripts/loadgen.py --addr 127.0.0.1:7780
+
+  # boot a private server first (CI mode), quick settings
+  python3 scripts/loadgen.py --spawn target/release/habitat --quick
+"""
+
+import argparse
+import json
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+MODELS = ["mlp", "resnet50", "dcgan"]
+BATCHES = [8, 16, 32]
+DESTS = ["v100", "p100", "p4000", "t4", "rtx2070", "2080ti"]
+
+
+def build_requests(conn_id, count):
+    """A deterministic mixed workload: mostly predicts (cache-hot after
+    the first round), with periodic ranks and stats probes."""
+    lines = []
+    for i in range(count):
+        if i % 13 == 12:
+            lines.append({"stats": True})
+        elif i % 7 == 6:
+            lines.append(
+                {
+                    "rank": True,
+                    "model": MODELS[(conn_id + i) % len(MODELS)],
+                    "batch": BATCHES[conn_id % len(BATCHES)],
+                    "origin": "t4",
+                }
+            )
+        else:
+            lines.append(
+                {
+                    "model": MODELS[(conn_id + i) % len(MODELS)],
+                    "batch": BATCHES[(conn_id + i) % len(BATCHES)],
+                    "origin": "t4",
+                    "dest": DESTS[(conn_id + i) % len(DESTS)],
+                }
+            )
+    return [json.dumps(obj) for obj in lines]
+
+
+class ConnResult:
+    def __init__(self):
+        self.latencies_ms = []
+        self.overloaded = 0
+        self.errors = []
+        self.dropped = 0
+
+
+def run_connection(host, port, conn_id, requests, window, timeout, result):
+    try:
+        sock = socket.create_connection((host, port), timeout=timeout)
+    except OSError as e:
+        result.errors.append(f"conn {conn_id}: connect failed: {e}")
+        result.dropped += len(requests)
+        return
+    sock.settimeout(timeout)
+    rfile = sock.makefile("r", encoding="utf-8")
+    sent = 0
+    received = 0
+    send_times = {}
+    try:
+        while received < len(requests):
+            # Keep up to `window` requests in flight.
+            while sent < len(requests) and sent - received < window:
+                line = requests[sent]
+                send_times[sent] = time.monotonic()
+                sock.sendall(line.encode() + b"\n")
+                sent += 1
+            reply = rfile.readline()
+            if not reply:
+                result.dropped += sent - received
+                result.errors.append(
+                    f"conn {conn_id}: connection closed with {sent - received} outstanding"
+                )
+                return
+            now = time.monotonic()
+            result.latencies_ms.append((now - send_times.pop(received)) * 1e3)
+            try:
+                obj = json.loads(reply)
+            except json.JSONDecodeError:
+                result.errors.append(f"conn {conn_id}: unparseable reply: {reply[:120]!r}")
+                obj = {}
+            err = obj.get("error")
+            if err is not None:
+                code = err.get("code") if isinstance(err, dict) else None
+                if code == "overloaded":
+                    result.overloaded += 1
+                else:
+                    result.errors.append(f"conn {conn_id}: error reply: {reply.strip()[:200]}")
+            received += 1
+    except OSError as e:
+        result.dropped += sent - received
+        result.errors.append(f"conn {conn_id}: socket error: {e}")
+    finally:
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+
+def percentile(sorted_vals, p):
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(round(p / 100.0 * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]
+
+
+def wait_for_server(host, port, proc=None, attempts=100):
+    for _ in range(attempts):
+        try:
+            probe = socket.create_connection((host, port), timeout=1)
+            probe.close()
+            return True
+        except OSError:
+            if proc is not None and proc.poll() is not None:
+                out = proc.stdout.read().decode() if proc.stdout else ""
+                print(f"server exited early:\n{out}")
+                return False
+            time.sleep(0.1)
+    return False
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--addr", default="127.0.0.1:7791", help="host:port of the server")
+    ap.add_argument("--conns", type=int, default=16, help="concurrent connections")
+    ap.add_argument("--requests", type=int, default=200, help="requests per connection")
+    ap.add_argument("--window", type=int, default=8, help="pipelined requests in flight per connection")
+    ap.add_argument("--timeout", type=float, default=120.0, help="per-socket timeout, seconds")
+    ap.add_argument("--out", default="BENCH_service.json", help="JSON results path")
+    ap.add_argument("--quick", action="store_true", help="small CI-sized run (8 conns x 50 reqs)")
+    ap.add_argument(
+        "--spawn",
+        metavar="HABITAT_BIN",
+        default=None,
+        help="boot `HABITAT_BIN serve --addr ADDR` first and tear it down after",
+    )
+    args = ap.parse_args()
+    if args.quick:
+        args.conns = min(args.conns, 8)
+        args.requests = min(args.requests, 50)
+
+    host, port = args.addr.rsplit(":", 1)
+    port = int(port)
+
+    server = None
+    if args.spawn:
+        server = subprocess.Popen(
+            [args.spawn, "serve", "--addr", args.addr],
+            stdout=subprocess.PIPE,
+            stderr=subprocess.STDOUT,
+        )
+    try:
+        if not wait_for_server(host, port, server):
+            print(f"loadgen: no server at {args.addr}")
+            sys.exit(1)
+
+        # Warm the trace cache so the measured run reflects steady-state
+        # service latency, not first-touch tracking passes.
+        warm = ConnResult()
+        run_connection(host, port, 0, build_requests(0, 8), 1, args.timeout, warm)
+        if warm.errors:
+            print("loadgen: warmup failed:")
+            for e in warm.errors:
+                print(f"  {e}")
+            sys.exit(1)
+
+        results = [ConnResult() for _ in range(args.conns)]
+        threads = []
+        t0 = time.monotonic()
+        for c in range(args.conns):
+            t = threading.Thread(
+                target=run_connection,
+                args=(host, port, c, build_requests(c, args.requests), args.window, args.timeout, results[c]),
+            )
+            t.start()
+            threads.append(t)
+        for t in threads:
+            t.join()
+        elapsed = time.monotonic() - t0
+    finally:
+        if server is not None:
+            server.terminate()
+            try:
+                server.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                server.kill()
+                server.wait(timeout=10)
+
+    latencies = sorted(x for r in results for x in r.latencies_ms)
+    total = args.conns * args.requests
+    answered = len(latencies)
+    overloaded = sum(r.overloaded for r in results)
+    dropped = sum(r.dropped for r in results)
+    errors = [e for r in results for e in r.errors]
+
+    summary = {
+        "config": {
+            "addr": args.addr,
+            "conns": args.conns,
+            "requests_per_conn": args.requests,
+            "pipeline_window": args.window,
+        },
+        "totals": {
+            "requests": total,
+            "answered": answered,
+            "overloaded": overloaded,
+            "dropped": dropped,
+            "errors": len(errors),
+        },
+        "elapsed_s": round(elapsed, 4),
+        "req_per_s": round(answered / elapsed, 2) if elapsed > 0 else 0.0,
+        "latency_ms": {
+            "p50": round(percentile(latencies, 50), 4),
+            "p90": round(percentile(latencies, 90), 4),
+            "p99": round(percentile(latencies, 99), 4),
+            "max": round(latencies[-1], 4) if latencies else 0.0,
+        },
+    }
+    with open(args.out, "w", encoding="utf-8") as fh:
+        json.dump(summary, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+    lat = summary["latency_ms"]
+    print(
+        f"loadgen: {answered}/{total} answered in {elapsed:.2f}s "
+        f"({summary['req_per_s']} req/s), latency p50 {lat['p50']:.2f} ms, "
+        f"p90 {lat['p90']:.2f} ms, p99 {lat['p99']:.2f} ms; "
+        f"{overloaded} overloaded, {dropped} dropped -> {args.out}"
+    )
+    if errors:
+        print(f"loadgen FAILED: {len(errors)} non-overloaded error(s):")
+        for e in errors[:20]:
+            print(f"  {e}")
+        sys.exit(1)
+    if dropped:
+        print(f"loadgen FAILED: {dropped} dropped response(s)")
+        sys.exit(1)
+    print("loadgen OK")
+
+
+if __name__ == "__main__":
+    main()

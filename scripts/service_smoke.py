@@ -66,7 +66,11 @@ def main():
         run_session()
     finally:
         server.terminate()
-        server.wait(timeout=10)
+        try:
+            server.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            server.kill()
+            server.wait(timeout=10)
 
     if FAILURES:
         print(f"\nsmoke FAILED: {len(FAILURES)} check(s): {FAILURES}")
