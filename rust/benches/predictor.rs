@@ -5,7 +5,7 @@
 
 use habitat::device::{Device, ALL_DEVICES};
 use habitat::engine::PredictionEngine;
-use habitat::plan::AnalyzedPlan;
+use habitat::plan::{AnalyzedPlan, EvalScratch};
 use habitat::predict::{HybridPredictor, MetricsPolicy};
 use habitat::tracker::OperationTracker;
 use habitat::util::bench::bench;
@@ -66,6 +66,33 @@ fn main() {
             .sum::<f64>()
     });
 
+    // --- plan: kernel-major batched evaluation ---------------------------
+    // One sweep over the plan's kernel arrays fills every destination at
+    // once. `evaluate_batch_60_dests` is the headline comparison against
+    // `plan/evaluate_60_dests` above (60 scalar calls); the `sweep`
+    // variant reuses one scratch arena across iterations, so it also
+    // shows the zero-steady-state-allocation regime the serving path
+    // runs in (materialization of owned `PredictedTrace`s excluded).
+    bench("plan/evaluate_batch_all_dests/resnet50", || {
+        wave.evaluate_batch(&plan, &ALL_DEVICES, Precision::Fp32)
+            .iter()
+            .map(|p| p.run_time_ms())
+            .sum::<f64>()
+    });
+    bench("plan/evaluate_batch_60_dests/resnet50", || {
+        wave.evaluate_batch(&plan, &many_dests, Precision::Fp32)
+            .iter()
+            .map(|p| p.run_time_ms())
+            .sum::<f64>()
+    });
+    let mut sweep_scratch = EvalScratch::new();
+    bench("plan/evaluate_batch_sweep_60_dests/resnet50", || {
+        wave.evaluate_batch_times(&plan, &many_dests, Precision::Fp32, &mut sweep_scratch);
+        (0..many_dests.len())
+            .map(|i| sweep_scratch.run_time_ms(i))
+            .sum::<f64>()
+    });
+
     // --- engine: cold (tracking pipeline every time) vs cached ----------
     let engine = PredictionEngine::wave_only();
     bench("engine/predict_cold/resnet50", || {
@@ -104,6 +131,13 @@ fn main() {
     });
     bench("engine/fan_out_60_dests/resnet50", || {
         engine.fan_out(&cached.plan, &many_dests, Precision::Fp32).len()
+    });
+    bench("engine/evaluate_batch_60_dests/resnet50", || {
+        // The fan-out fast path without chunking: one thread-local
+        // scratch arena, one kernel-major sweep.
+        engine
+            .evaluate_batch(&cached.plan, &many_dests, Precision::Fp32)
+            .len()
     });
     bench("engine/rank_all_dests/resnet50", || {
         engine

@@ -13,6 +13,8 @@ use std::collections::BTreeMap;
 
 
 use crate::device::Device;
+use crate::lowering::Precision;
+use crate::plan::EvalScratch;
 use crate::predict::HybridPredictor;
 use crate::tracker::Trace;
 
@@ -57,13 +59,18 @@ impl ThroughputMatrix {
         devices: &[Device],
     ) -> Self {
         let mut matrix = Vec::with_capacity(traces.len());
+        // One scratch arena for the whole matrix: each job is a single
+        // kernel-major batched sweep over all candidate devices
+        // (bit-identical to per-cell scalar evaluates), and the arena's
+        // buffers carry their capacity from job to job. Throughputs are
+        // read straight off the sweep accumulator — no per-cell
+        // `PredictedTrace` materialization.
+        let mut scratch = EvalScratch::new();
         for (_, trace) in traces {
-            // Compile each job's trace once; every candidate device is a
-            // thin evaluation over the plan's arrays.
             let plan = crate::plan::AnalyzedPlan::build(trace, &predictor.metrics_policy);
-            let row: Vec<f64> = devices
-                .iter()
-                .map(|d| predictor.evaluate(&plan, *d).throughput())
+            predictor.evaluate_batch_times(&plan, devices, Precision::Fp32, &mut scratch);
+            let row: Vec<f64> = (0..devices.len())
+                .map(|i| scratch.throughput(i, plan.batch_size))
                 .collect();
             matrix.push(row);
         }
@@ -143,6 +150,30 @@ mod tests {
         let predictor = HybridPredictor::wave_only();
         let traces = vec![job("a", "mlp", 64), job("b", "dcgan", 64)];
         ThroughputMatrix::build(&predictor, &traces, &[Device::V100, Device::T4])
+    }
+
+    #[test]
+    fn matrix_is_bit_identical_to_per_cell_scalar_evaluation() {
+        // The batched rewrite of `build` must not move a single bit:
+        // every cell is pinned against an independent scalar evaluate.
+        let predictor = HybridPredictor::wave_only();
+        let traces = vec![job("a", "mlp", 64), job("b", "dcgan", 64)];
+        let devices = [Device::V100, Device::T4, Device::P4000];
+        let m = ThroughputMatrix::build(&predictor, &traces, &devices);
+        assert_eq!(m.matrix.len(), traces.len());
+        for (j, (_, trace)) in traces.iter().enumerate() {
+            let plan = crate::plan::AnalyzedPlan::build(trace, &predictor.metrics_policy);
+            assert_eq!(m.matrix[j].len(), devices.len());
+            for (d, dev) in devices.iter().enumerate() {
+                let scalar = predictor.evaluate(&plan, *dev).throughput();
+                assert_eq!(
+                    m.matrix[j][d].to_bits(),
+                    scalar.to_bits(),
+                    "job {j} on {dev}: batched {} vs scalar {scalar}",
+                    m.matrix[j][d]
+                );
+            }
+        }
     }
 
     #[test]

@@ -466,19 +466,47 @@ impl PredictionEngine {
         self.evaluate(&plan, dest, precision)
     }
 
+    /// Evaluate one compiled plan on many destinations with the
+    /// kernel-major batched sweep
+    /// ([`HybridPredictor::evaluate_batch_with`]): one pass over the
+    /// plan's flat kernel arrays accumulates every destination at once,
+    /// reusing this thread's pooled scratch arena
+    /// ([`pool::with_scratch`]) so steady-state sweeps allocate nothing
+    /// beyond the returned traces. Duplicate destinations are evaluated
+    /// once and re-expanded. Bit-identical to sequential
+    /// [`PredictionEngine::evaluate`] calls.
+    pub fn evaluate_batch(
+        &self,
+        plan: &AnalyzedPlan,
+        dests: &[Device],
+        precision: Precision,
+    ) -> Vec<PredictedTrace> {
+        pool::with_scratch(|scratch| {
+            self.predictor
+                .evaluate_batch_with(plan, dests, precision, scratch)
+        })
+    }
+
     /// Evaluate one compiled plan on *all* destinations, cooperatively
-    /// with the shared compute pool. Every per-destination evaluation is
-    /// pure arithmetic over the shared plan (no lock, no hash, no
-    /// feature rebuild). Results come back in `dests` order and are
-    /// bit-identical to sequential [`PredictionEngine::evaluate`] calls.
+    /// with the shared compute pool. Results come back in `dests` order
+    /// and are bit-identical to sequential [`PredictionEngine::evaluate`]
+    /// calls.
     ///
-    /// Scheduling is **work-claiming**: destinations sit behind an
-    /// atomic cursor, helper jobs are offered to the pool with a
-    /// non-blocking [`pool::WorkerPool::try_execute`], and the calling
-    /// thread claims work too. The call therefore completes even if the
-    /// pool contributes zero helpers — which makes it safe to fan out
-    /// *from inside* a pool worker (every service `rank` does), with no
-    /// risk of the workers deadlocking on each other.
+    /// The destination set is first **deduped** (each unique destination
+    /// evaluated once, results re-expanded to the caller's order), then
+    /// split into chunks of at least [`Self::FAN_OUT_MIN_CHUNK`] unique
+    /// destinations; each chunk is one kernel-major batched sweep
+    /// ([`PredictionEngine::evaluate_batch`]) on a pooled scratch arena,
+    /// so helpers amortize the plan walk across their whole chunk
+    /// instead of re-walking it per destination.
+    ///
+    /// Scheduling is **work-claiming**: chunks sit behind an atomic
+    /// cursor, helper jobs are offered to the pool with a non-blocking
+    /// [`pool::WorkerPool::try_execute`], and the calling thread claims
+    /// work too. The call therefore completes even if the pool
+    /// contributes zero helpers — which makes it safe to fan out *from
+    /// inside* a pool worker (every service `rank` does), with no risk
+    /// of the workers deadlocking on each other.
     pub fn fan_out(
         &self,
         plan: &Arc<AnalyzedPlan>,
@@ -488,50 +516,107 @@ impl PredictionEngine {
         if dests.is_empty() {
             return Vec::new();
         }
-        if dests.len() == 1 || self.workers() == 1 {
-            return dests
-                .iter()
-                .map(|&d| self.evaluate(plan, d, precision))
-                .collect();
+        // Dedup before dispatch (linear scan: destination sets are
+        // small). `slot[i]` maps caller position i to its unique slot.
+        let mut uniq: Vec<Device> = Vec::with_capacity(dests.len());
+        let mut slot: Vec<usize> = Vec::with_capacity(dests.len());
+        for &d in dests {
+            match uniq.iter().position(|&u| u == d) {
+                Some(i) => slot.push(i),
+                None => {
+                    slot.push(uniq.len());
+                    uniq.push(d);
+                }
+            }
         }
-        // Results travel as `thread::Result` so a panicking evaluation
-        // (e.g. a misbehaving external MLP backend) re-raises its
-        // original payload in the caller instead of surfacing as an
-        // opaque missing result.
-        struct FanOut {
+
+        let n_chunks = uniq
+            .len()
+            .div_ceil(Self::FAN_OUT_MIN_CHUNK)
+            .min(self.workers())
+            .max(1);
+        let uniq_preds = if n_chunks == 1 {
+            // Small sets (or a single worker): one sweep on the calling
+            // thread covers everything — still batched, still scratch-
+            // pooled, no channel round-trip.
+            self.evaluate_batch(plan, &uniq, precision)
+        } else {
+            self.fan_out_chunked(plan, &uniq, precision, n_chunks)
+        };
+
+        if uniq.len() == dests.len() {
+            return uniq_preds;
+        }
+        slot.into_iter().map(|i| uniq_preds[i].clone()).collect()
+    }
+
+    /// Smallest number of unique destinations worth a separate fan-out
+    /// chunk: below this, the per-chunk channel + scheduling overhead
+    /// outweighs the batched sweep it would offload.
+    pub const FAN_OUT_MIN_CHUNK: usize = 4;
+
+    /// The multi-chunk fan-out path: work-claiming over chunk indices,
+    /// each chunk one batched sweep. Chunk results travel back as
+    /// `thread::Result` so a panicking evaluation (e.g. a misbehaving
+    /// external MLP backend) re-raises its original payload in the
+    /// caller instead of surfacing as an opaque missing result.
+    fn fan_out_chunked(
+        &self,
+        plan: &Arc<AnalyzedPlan>,
+        uniq: &[Device],
+        precision: Precision,
+        n_chunks: usize,
+    ) -> Vec<PredictedTrace> {
+        struct BatchedFanOut {
             plan: Arc<AnalyzedPlan>,
             predictor: Arc<HybridPredictor>,
             dests: Vec<Device>,
+            chunk: usize,
+            n_chunks: usize,
             precision: Precision,
             next: AtomicUsize,
-            tx: mpsc::Sender<(usize, std::thread::Result<PredictedTrace>)>,
+            tx: mpsc::Sender<(usize, std::thread::Result<Vec<PredictedTrace>>)>,
         }
-        impl FanOut {
+        impl BatchedFanOut {
             fn run(&self) {
                 loop {
-                    let i = self.next.fetch_add(1, Relaxed);
-                    let Some(&dest) = self.dests.get(i) else { break };
+                    let c = self.next.fetch_add(1, Relaxed);
+                    if c >= self.n_chunks {
+                        break;
+                    }
+                    // Uneven division can leave a trailing chunk empty;
+                    // clamp so the slice stays valid (an empty sweep is
+                    // a no-op and the caller expects no entries from it).
+                    let start = (c * self.chunk).min(self.dests.len());
+                    let end = (start + self.chunk).min(self.dests.len());
                     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        self.predictor
-                            .evaluate_with_precision(&self.plan, dest, self.precision)
+                        pool::with_scratch(|scratch| {
+                            self.predictor.evaluate_batch_with(
+                                &self.plan,
+                                &self.dests[start..end],
+                                self.precision,
+                                scratch,
+                            )
+                        })
                     }));
-                    if self.tx.send((i, result)).is_err() {
+                    if self.tx.send((start, result)).is_err() {
                         break; // the caller bailed (panic propagation)
                     }
                 }
             }
         }
         let (tx, rx) = mpsc::channel();
-        let shared = Arc::new(FanOut {
+        let shared = Arc::new(BatchedFanOut {
             plan: Arc::clone(plan),
             predictor: Arc::clone(&self.predictor),
-            dests: dests.to_vec(),
+            dests: uniq.to_vec(),
+            chunk: uniq.len().div_ceil(n_chunks),
+            n_chunks,
             precision,
             next: AtomicUsize::new(0),
             tx,
         });
-        let helpers = self.workers().saturating_sub(1).min(dests.len() - 1);
-        for _ in 0..helpers {
+        for _ in 0..n_chunks - 1 {
             let state = Arc::clone(&shared);
             if self.pool().try_execute(move || state.run()).is_err() {
                 break; // pool saturated: the caller covers the rest alone
@@ -539,12 +624,16 @@ impl PredictionEngine {
         }
         shared.run();
         drop(shared);
-        let mut out: Vec<Option<PredictedTrace>> = Vec::with_capacity(dests.len());
-        out.resize_with(dests.len(), || None);
-        for _ in 0..dests.len() {
-            let (i, result) = rx.recv().expect("a fan-out participant vanished");
+        let mut out: Vec<Option<PredictedTrace>> = Vec::with_capacity(uniq.len());
+        out.resize_with(uniq.len(), || None);
+        for _ in 0..n_chunks {
+            let (start, result) = rx.recv().expect("a fan-out participant vanished");
             match result {
-                Ok(pred) => out[i] = Some(pred),
+                Ok(preds) => {
+                    for (j, pred) in preds.into_iter().enumerate() {
+                        out[start + j] = Some(pred);
+                    }
+                }
                 Err(payload) => std::panic::resume_unwind(payload),
             }
         }
@@ -738,6 +827,52 @@ mod tests {
         for (dest, pred) in dests.iter().zip(&fanned) {
             let seq = e.evaluate(&at.plan, *dest, Precision::Amp);
             assert_eq!(pred.run_time_ms(), seq.run_time_ms());
+        }
+    }
+
+    #[test]
+    fn fan_out_dedups_duplicate_destinations() {
+        let e = engine();
+        let at = e.analyzed("mlp", 16, Device::T4).unwrap();
+        // More caller positions than unique destinations, interleaved,
+        // enough to clear the chunked-dispatch threshold when cycled.
+        let dests: Vec<Device> = ALL_DEVICES
+            .iter()
+            .copied()
+            .cycle()
+            .take(3 * ALL_DEVICES.len())
+            .collect();
+        for precision in [Precision::Fp32, Precision::Amp] {
+            let fanned = e.fan_out(&at.plan, &dests, precision);
+            assert_eq!(fanned.len(), dests.len(), "re-expanded to caller order");
+            for (d, p) in dests.iter().zip(&fanned) {
+                assert_eq!(p.dest, *d);
+                let seq = e.evaluate(&at.plan, *d, precision);
+                assert_eq!(
+                    p.run_time_ms().to_bits(),
+                    seq.run_time_ms().to_bits(),
+                    "{d} {precision:?}: duplicated fan-out must stay bit-identical"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn engine_evaluate_batch_matches_scalar_evaluate() {
+        let e = engine();
+        let at = e.analyzed("mlp", 32, Device::T4).unwrap();
+        for precision in [Precision::Fp32, Precision::Amp] {
+            let batch = e.evaluate_batch(&at.plan, &ALL_DEVICES, precision);
+            assert_eq!(batch.len(), ALL_DEVICES.len());
+            for (d, p) in ALL_DEVICES.iter().zip(&batch) {
+                assert_eq!(p.dest, *d);
+                let seq = e.evaluate(&at.plan, *d, precision);
+                assert_eq!(
+                    p.run_time_ms().to_bits(),
+                    seq.run_time_ms().to_bits(),
+                    "{d} {precision:?}"
+                );
+            }
         }
     }
 

@@ -25,11 +25,34 @@
 //! or the `HABITAT_WORKERS` environment variable, defaulting to the
 //! machine's available parallelism capped at 8.
 
+use std::cell::RefCell;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::plan::EvalScratch;
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// One batched-evaluation scratch arena per thread (pool workers and
+    /// callers alike). Thread-local rather than per-pool so a fan-out
+    /// chunk keeps its warm buffers across jobs with no locking and no
+    /// cross-thread handoff.
+    static SCRATCH: RefCell<EvalScratch> = RefCell::new(EvalScratch::new());
+}
+
+/// Run `f` with this thread's pooled [`EvalScratch`]. Steady-state
+/// batched evaluations on a warm thread reuse the arena's capacity and
+/// perform no heap allocation. Re-entrant calls (an evaluation that
+/// somehow triggers another on the same thread) get a fresh arena
+/// instead of panicking on the `RefCell`.
+pub fn with_scratch<R>(f: impl FnOnce(&mut EvalScratch) -> R) -> R {
+    SCRATCH.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut scratch) => f(&mut scratch),
+        Err(_) => f(&mut EvalScratch::new()),
+    })
+}
 
 /// Environment variable overriding the submission-queue depth.
 pub const QUEUE_DEPTH_ENV: &str = "HABITAT_QUEUE_DEPTH";
@@ -177,6 +200,21 @@ mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::mpsc::channel;
+
+    #[test]
+    fn with_scratch_reuses_the_thread_arena() {
+        let cap = with_scratch(|s| {
+            s.dests.reserve(64);
+            s.dests.capacity()
+        });
+        assert!(cap >= 64);
+        let again = with_scratch(|s| s.dests.capacity());
+        assert!(again >= cap, "the arena must persist across calls");
+        // Re-entrancy degrades to a fresh arena instead of panicking.
+        with_scratch(|_outer| {
+            with_scratch(|inner| assert_eq!(inner.dests.capacity(), 0));
+        });
+    }
 
     #[test]
     fn runs_every_job_across_workers() {

@@ -201,6 +201,163 @@ impl DeviceLanes<'_> {
     }
 }
 
+/// Reusable arena for the kernel-major batched evaluator
+/// ([`crate::predict::HybridPredictor::evaluate_batch`]).
+///
+/// One sweep evaluates one plan against a whole destination set: the
+/// arena holds the dense `kernels × dests` lane matrices the sweep
+/// reads (γ, wave ratio, Eq. 1 wave counts), the `ops × dests` time
+/// accumulator it writes, and the per-destination dedup/expansion map.
+/// Buffers are `clear()` + `resize()`d each sweep, so capacity is
+/// retained: after the first sweep of a given `(plan, dests)` shape,
+/// **steady-state sweeps perform zero heap allocation** (pinned by
+/// `rust/tests/batched_alloc.rs`; destinations registered after the
+/// plan's snapshot are the exception — their computed lanes go through
+/// the shared wave table, whose *misses* memoize). The engine pools one
+/// arena per thread ([`crate::engine::pool::with_scratch`]).
+#[derive(Default)]
+pub struct EvalScratch {
+    /// Unique destinations of the current sweep, first-occurrence order.
+    pub(crate) dests: Vec<Device>,
+    /// Caller index → slot in [`EvalScratch::dests`] (dedup expansion).
+    pub(crate) slot: Vec<usize>,
+    /// `D_o/D_d` per unique destination.
+    pub(crate) bw: Vec<f64>,
+    /// `C_o/C_d` per unique destination.
+    pub(crate) clock: Vec<f64>,
+    /// γ, dense `[kernel * n_dests + dest]` (transposed so the batched
+    /// inner loop over destinations is contiguous).
+    pub(crate) gamma_t: Vec<f64>,
+    /// Wave ratio `W_o/W_d`, same `kernels × dests` layout.
+    pub(crate) wave_t: Vec<f64>,
+    /// `⌈B/W_d⌉` per `(kernel, dest)` — filled for Eq. 1 sweeps only.
+    pub(crate) waves_d_t: Vec<f64>,
+    /// `⌈B/W_o⌉` per kernel — Eq. 1 sweeps only.
+    pub(crate) waves_o: Vec<f64>,
+    /// Accumulated op times, `[op * n_dests + dest]`.
+    pub(crate) acc: Vec<f64>,
+    /// Whether an MLP overwrote the op, `[op * n_dests + dest]`.
+    pub(crate) mlp_hit: Vec<bool>,
+    /// MLP fallback count per unique destination.
+    pub(crate) fallbacks: Vec<usize>,
+    /// Computed-lane buffers for destinations registered after the
+    /// plan's snapshot (reused across sweeps like everything else).
+    pub(crate) lane_gamma: Vec<f64>,
+    pub(crate) lane_wave: Vec<u64>,
+    pub(crate) lane_amp: Vec<f64>,
+    /// Ops in the last sweep's plan (row count of `acc`).
+    pub(crate) n_ops: usize,
+    /// Whether the last sweep had to grow any buffer (a steady-state
+    /// sweep over a previously seen shape must not).
+    pub(crate) grew: bool,
+}
+
+/// `clear` + `resize` that records whether the buffer had to grow —
+/// steady-state sweeps reuse capacity and never allocate.
+fn ensure<T: Copy>(v: &mut Vec<T>, n: usize, fill: T, grew: &mut bool) {
+    if v.capacity() < n {
+        *grew = true;
+    }
+    v.clear();
+    v.resize(n, fill);
+}
+
+impl EvalScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a sweep: dedup `dests` into unique slots + expansion map.
+    pub(crate) fn begin(&mut self, dests: &[Device]) {
+        self.grew =
+            self.dests.capacity() < dests.len() || self.slot.capacity() < dests.len();
+        self.dests.clear();
+        self.slot.clear();
+        for &d in dests {
+            // Linear scan, not a hash map: destination sets are small
+            // (tens), and the sweep itself must stay allocation-free.
+            match self.dests.iter().position(|&u| u == d) {
+                Some(i) => self.slot.push(i),
+                None => {
+                    self.slot.push(self.dests.len());
+                    self.dests.push(d);
+                }
+            }
+        }
+    }
+
+    /// Unique destinations in the last sweep.
+    pub fn n_unique(&self) -> usize {
+        self.dests.len()
+    }
+
+    /// Caller destinations in the last sweep (before dedup).
+    pub fn n_dests(&self) -> usize {
+        self.slot.len()
+    }
+
+    /// Whether the last sweep had to grow a buffer. A steady-state sweep
+    /// (same plan shape, same destination-set size) returns `false`.
+    pub fn grew(&self) -> bool {
+        self.grew
+    }
+
+    /// Predicted time of op `op` for caller destination `dest_idx`
+    /// (an index into the `dests` slice passed to the sweep).
+    pub fn op_time_ms(&self, dest_idx: usize, op: usize) -> f64 {
+        self.acc[op * self.dests.len() + self.slot[dest_idx]]
+    }
+
+    /// Predicted iteration time for caller destination `dest_idx`, ms —
+    /// summed in op order, bit-identical to
+    /// [`PredictedTrace::run_time_ms`] on the materialized trace.
+    pub fn run_time_ms(&self, dest_idx: usize) -> f64 {
+        let nd = self.dests.len();
+        let di = self.slot[dest_idx];
+        (0..self.n_ops).map(|o| self.acc[o * nd + di]).sum()
+    }
+
+    /// Predicted throughput (samples/s) for caller destination
+    /// `dest_idx` — the exact [`PredictedTrace::throughput`] expression.
+    pub fn throughput(&self, dest_idx: usize, batch_size: usize) -> f64 {
+        batch_size as f64 / (self.run_time_ms(dest_idx) / 1e3)
+    }
+
+    /// MLP fallback count for caller destination `dest_idx`.
+    pub fn mlp_fallbacks(&self, dest_idx: usize) -> usize {
+        self.fallbacks[self.slot[dest_idx]]
+    }
+
+    /// Build the full [`PredictedTrace`] for caller destination
+    /// `dest_idx` — field-for-field what the scalar evaluator returns
+    /// (this is the only allocating step of the batched path).
+    pub fn materialize(&self, plan: &AnalyzedPlan, dest_idx: usize) -> PredictedTrace {
+        let nd = self.dests.len();
+        let di = self.slot[dest_idx];
+        let ops = (0..self.n_ops)
+            .map(|o| PredictedOp {
+                index: plan.op_index[o],
+                name: plan.op_name[o].clone(),
+                short_name: plan.op_short_name[o].to_string(),
+                time_ms: self.acc[o * nd + di],
+                method: if self.mlp_hit[o * nd + di] {
+                    crate::predict::PredictionMethod::Mlp
+                } else {
+                    crate::predict::PredictionMethod::WaveScaling
+                },
+            })
+            .collect();
+        PredictedTrace {
+            model: plan.model.clone(),
+            batch_size: plan.batch_size,
+            origin: plan.origin,
+            dest: self.dests[di],
+            ops,
+            mlp_fallbacks: self.fallbacks[di],
+        }
+    }
+}
+
 impl AnalyzedPlan {
     /// Compile a tracked trace into a plan. `policy` is the metrics-
     /// availability policy of the predictor that will evaluate the plan
@@ -490,6 +647,119 @@ impl AnalyzedPlan {
         &self.mlp_groups
     }
 
+    /// Measured kernel times on the origin, flat prediction order — the
+    /// one per-kernel array the batched sweep reads from the plan.
+    pub(crate) fn kernel_times(&self) -> &[f64] {
+        &self.time_ms
+    }
+
+    /// Fill `scratch` with the dense `kernels × unique-dests` lane
+    /// matrices for the batched evaluator. [`EvalScratch::begin`] must
+    /// have deduped the destination set first. The layout is transposed
+    /// (`[kernel * n_unique + dest]`) so the sweep's innermost
+    /// destination loop walks contiguous memory.
+    pub(crate) fn gather_lanes(&self, eq1: bool, scratch: &mut EvalScratch) {
+        let (nk, no, ns) = (self.n_kernels(), self.n_ops(), self.n_shapes());
+        let EvalScratch {
+            dests,
+            bw,
+            clock,
+            gamma_t,
+            wave_t,
+            waves_d_t,
+            waves_o,
+            acc,
+            mlp_hit,
+            fallbacks,
+            lane_gamma,
+            lane_wave,
+            n_ops,
+            grew,
+            ..
+        } = scratch;
+        let nd = dests.len();
+        ensure(bw, nd, 0.0, grew);
+        ensure(clock, nd, 0.0, grew);
+        ensure(gamma_t, nk * nd, 0.0, grew);
+        ensure(wave_t, nk * nd, 0.0, grew);
+        if eq1 {
+            ensure(waves_d_t, nk * nd, 0.0, grew);
+            ensure(waves_o, nk, 0.0, grew);
+            for k in 0..nk {
+                // The exact `scale_eq1` origin wave count ⌈B/W_o⌉.
+                waves_o[k] = self.blocks[k]
+                    .div_ceil(self.wave_origin[self.shape_idx[k] as usize])
+                    as f64;
+            }
+        }
+        ensure(acc, no * nd, 0.0, grew);
+        ensure(mlp_hit, no * nd, false, grew);
+        ensure(fallbacks, nd, 0, grew);
+        *n_ops = no;
+
+        let origin_spec = self.origin.spec();
+        for (di, &dest) in dests.iter().enumerate() {
+            let spec = dest.spec();
+            bw[di] = origin_spec.achieved_bw_bytes() / spec.achieved_bw_bytes();
+            clock[di] = origin_spec.boost_clock_mhz / spec.boost_clock_mhz;
+            let d = dest.index();
+            let (g_row, w_row): (&[f64], &[u64]) = if d < self.n_devices {
+                (
+                    &self.gamma[d * nk..(d + 1) * nk],
+                    &self.wave_dest[d * ns..(d + 1) * ns],
+                )
+            } else {
+                // Post-snapshot destination: compute its lanes with the
+                // same helpers the dense build uses (bit-identical),
+                // into buffers reused across sweeps. This is the one
+                // path that may touch the shared wave table.
+                if lane_gamma.capacity() < nk || lane_wave.capacity() < ns {
+                    *grew = true;
+                }
+                lane_gamma.clear();
+                gamma_row_into(&self.intensity, &self.profiled, spec, lane_gamma);
+                lane_wave.clear();
+                let table = WaveTable::global();
+                lane_wave.extend(self.shapes.iter().map(|s| table.wave_size(spec, s).max(1)));
+                (&lane_gamma[..], &lane_wave[..])
+            };
+            for k in 0..nk {
+                let s = self.shape_idx[k] as usize;
+                let w_dest = w_row[s];
+                gamma_t[k * nd + di] = g_row[k];
+                // The exact `ratios_from_parts` wave ratio `W_o/W_d`.
+                wave_t[k * nd + di] = self.wave_origin[s] as f64 / w_dest as f64;
+                if eq1 {
+                    waves_d_t[k * nd + di] = self.blocks[k].div_ceil(w_dest) as f64;
+                }
+            }
+        }
+    }
+
+    /// One destination's Daydream AMP factor row — borrowed from the
+    /// dense table for snapshot devices, recomputed into `buf` (reused
+    /// across sweeps) for post-snapshot ones.
+    pub(crate) fn amp_row<'a>(&'a self, dest: Device, buf: &'a mut Vec<f64>) -> &'a [f64] {
+        let d = dest.index();
+        let no = self.n_ops();
+        if d < self.n_devices {
+            &self.amp_op_factor[d * no..(d + 1) * no]
+        } else {
+            buf.clear();
+            amp_row_into(
+                &self.time_ms,
+                &self.intensity,
+                &self.tensor_core,
+                &self.kern_start,
+                &self.kern_fwd_end,
+                &self.kern_end,
+                dest.spec(),
+                buf,
+            );
+            buf
+        }
+    }
+
     /// Apply the precomputed Daydream AMP transformation (§6.1.2) to an
     /// FP32 prediction of this plan on `pred.dest`, in place.
     /// Bit-identical to [`amp::amp_transform`] over the source trace.
@@ -692,6 +962,82 @@ mod tests {
             amp_fresh.run_time_ms().to_bits(),
             "AMP through computed lanes must match the dense path"
         );
+    }
+
+    #[test]
+    fn eval_scratch_dedups_and_reuses_capacity() {
+        let trace = toy_trace(Device::T4);
+        let plan = AnalyzedPlan::build(&trace, &MetricsPolicy::All);
+        let mut scratch = EvalScratch::new();
+        let dests = [
+            Device::V100,
+            Device::P4000,
+            Device::V100,
+            Device::P4000,
+            Device::V100,
+        ];
+        scratch.begin(&dests);
+        assert_eq!(scratch.n_unique(), 2, "duplicates must collapse");
+        assert_eq!(scratch.n_dests(), 5);
+        assert_eq!(scratch.slot, vec![0, 1, 0, 1, 0]);
+        plan.gather_lanes(true, &mut scratch);
+        assert!(scratch.grew(), "first sweep must size the buffers");
+
+        scratch.begin(&dests);
+        plan.gather_lanes(true, &mut scratch);
+        assert!(!scratch.grew(), "steady state must reuse capacity");
+
+        // A smaller destination set fits in retained capacity too.
+        scratch.begin(&dests[..2]);
+        plan.gather_lanes(true, &mut scratch);
+        assert!(!scratch.grew(), "shrinking sweeps must not reallocate");
+    }
+
+    #[test]
+    fn gathered_lanes_match_the_scalar_accessors() {
+        let trace = toy_trace(Device::P4000);
+        let plan = AnalyzedPlan::build(&trace, &MetricsPolicy::All);
+        let mut scratch = EvalScratch::new();
+        let dests = [Device::V100, Device::T4, Device::V100];
+        scratch.begin(&dests);
+        plan.gather_lanes(true, &mut scratch);
+        let nd = scratch.n_unique();
+        assert_eq!(nd, 2);
+        let origin = plan.origin.spec();
+        for (u, &dest) in scratch.dests.iter().enumerate() {
+            let spec = dest.spec();
+            assert_eq!(
+                scratch.bw[u].to_bits(),
+                (origin.achieved_bw_bytes() / spec.achieved_bw_bytes()).to_bits()
+            );
+            assert_eq!(
+                scratch.clock[u].to_bits(),
+                (origin.boost_clock_mhz / spec.boost_clock_mhz).to_bits()
+            );
+            for k in 0..plan.n_kernels() {
+                assert_eq!(
+                    scratch.gamma_t[k * nd + u].to_bits(),
+                    plan.gamma(k, dest).to_bits(),
+                    "{dest} γ kernel {k}"
+                );
+                let (wo, wd) = (plan.wave_origin(k), plan.wave_dest(k, dest));
+                assert_eq!(
+                    scratch.wave_t[k * nd + u].to_bits(),
+                    (wo as f64 / wd as f64).to_bits(),
+                    "{dest} wave ratio kernel {k}"
+                );
+                assert_eq!(
+                    scratch.waves_d_t[k * nd + u],
+                    plan.kernel_blocks(k).div_ceil(wd) as f64,
+                    "{dest} ⌈B/W_d⌉ kernel {k}"
+                );
+                assert_eq!(
+                    scratch.waves_o[k],
+                    plan.kernel_blocks(k).div_ceil(wo) as f64,
+                    "⌈B/W_o⌉ kernel {k}"
+                );
+            }
+        }
     }
 
     #[test]

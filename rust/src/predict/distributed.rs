@@ -9,7 +9,9 @@
 //! single-GPU trace profiled on a workstation yields multi-GPU scaling
 //! estimates for a cluster the user does not have.
 
-use crate::predict::PredictedTrace;
+use crate::device::Device;
+use crate::plan::{AnalyzedPlan, EvalScratch};
+use crate::predict::{HybridPredictor, PredictedTrace};
 use crate::tracker::Trace;
 
 /// Interconnect between the replicas.
@@ -110,28 +112,52 @@ pub fn predict_data_parallel(
     pred: &PredictedTrace,
     config: &DataParallelConfig,
 ) -> DpPrediction {
-    let compute_ms = pred.run_time_ms();
-    // Gradient bytes: every trainable parameter contributes one FP32 grad.
+    compose(pred.run_time_ms(), pred.batch_size, &trace_comm(trace), config)
+}
+
+/// The destination-independent communication inputs derived from the
+/// origin trace, hoisted so a multi-destination sweep pays them once.
+struct TraceComm {
+    /// FP32 gradient volume: 4 bytes per trainable parameter.
+    grad_bytes: f64,
+    /// Backward share of the iteration (from the origin trace's fwd/bwd
+    /// split, assumed stable across devices).
+    bwd_fraction: f64,
+}
+
+fn trace_comm(trace: &Trace) -> TraceComm {
     let grad_bytes: f64 = trace
         .ops
         .iter()
         .map(|o| o.op.kind.parameter_count() as f64 * 4.0)
         .sum();
-    let allreduce_ms = ring_allreduce_ms(grad_bytes, config.world, config.interconnect);
-
-    // Backward share of the predicted time (from the origin trace's
-    // fwd/bwd split, assumed stable across devices).
     let (fwd, bwd): (f64, f64) = trace
         .ops
         .iter()
         .fold((0.0, 0.0), |(f, b), o| (f + o.fwd_ms(), b + o.bwd_ms()));
     let bwd_fraction = if fwd + bwd > 0.0 { bwd / (fwd + bwd) } else { 0.5 };
-    let overlappable = config.overlap.clamp(0.0, 1.0) * bwd_fraction * compute_ms;
+    TraceComm {
+        grad_bytes,
+        bwd_fraction,
+    }
+}
+
+/// Compose one destination's compute time with the all-reduce model —
+/// the shared arithmetic of [`predict_data_parallel`] (scalar) and
+/// [`data_parallel_sweep`] (batched), so the two cannot drift.
+fn compose(
+    compute_ms: f64,
+    batch_size: usize,
+    comm: &TraceComm,
+    config: &DataParallelConfig,
+) -> DpPrediction {
+    let allreduce_ms = ring_allreduce_ms(comm.grad_bytes, config.world, config.interconnect);
+    let overlappable = config.overlap.clamp(0.0, 1.0) * comm.bwd_fraction * compute_ms;
     let exposed_ms = (allreduce_ms - overlappable).max(0.0);
 
     let iter_ms = compute_ms + exposed_ms;
-    let single_throughput = pred.batch_size as f64 / (compute_ms / 1e3);
-    let throughput = config.world as f64 * pred.batch_size as f64 / (iter_ms / 1e3);
+    let single_throughput = batch_size as f64 / (compute_ms / 1e3);
+    let throughput = config.world as f64 * batch_size as f64 / (iter_ms / 1e3);
     DpPrediction {
         compute_ms,
         allreduce_ms,
@@ -140,6 +166,29 @@ pub fn predict_data_parallel(
         throughput,
         efficiency: throughput / (config.world as f64 * single_throughput),
     }
+}
+
+/// Sweep one compiled plan across many candidate destination GPUs: a
+/// single kernel-major batched evaluation
+/// ([`HybridPredictor::evaluate_batch_times`]) produces every
+/// destination's compute time, and each is composed with the all-reduce
+/// model. Returns one [`DpPrediction`] per destination, in caller
+/// order (duplicates evaluated once), bit-identical to evaluating each
+/// destination scalar-ly and calling [`predict_data_parallel`].
+pub fn data_parallel_sweep(
+    predictor: &HybridPredictor,
+    plan: &AnalyzedPlan,
+    trace: &Trace,
+    dests: &[Device],
+    precision: crate::lowering::Precision,
+    config: &DataParallelConfig,
+) -> Vec<DpPrediction> {
+    let comm = trace_comm(trace);
+    let mut scratch = EvalScratch::new();
+    predictor.evaluate_batch_times(plan, dests, precision, &mut scratch);
+    (0..dests.len())
+        .map(|i| compose(scratch.run_time_ms(i), plan.batch_size, &comm, config))
+        .collect()
 }
 
 #[cfg(test)]
@@ -229,6 +278,37 @@ mod tests {
         };
         assert!(mk(1.0).iter_ms <= mk(0.0).iter_ms);
         assert!(mk(0.0).exposed_ms >= mk(0.5).exposed_ms);
+    }
+
+    #[test]
+    fn sweep_matches_per_destination_composition() {
+        let graph = crate::models::by_name("resnet50", 32).unwrap();
+        let trace = OperationTracker::new(Device::Rtx2070).track(&graph);
+        let p = HybridPredictor::wave_only();
+        let plan = AnalyzedPlan::build(&trace, &p.metrics_policy);
+        // Duplicated destination exercises the dedup/re-expand path.
+        let dests = [Device::V100, Device::T4, Device::V100];
+        let config = DataParallelConfig {
+            world: 4,
+            ..Default::default()
+        };
+        let sweep = data_parallel_sweep(
+            &p,
+            &plan,
+            &trace,
+            &dests,
+            crate::lowering::Precision::Fp32,
+            &config,
+        );
+        assert_eq!(sweep.len(), dests.len());
+        for (dp, &dest) in sweep.iter().zip(&dests) {
+            let pred = p.evaluate(&plan, dest);
+            let scalar = predict_data_parallel(&trace, &pred, &config);
+            assert_eq!(dp.compute_ms.to_bits(), scalar.compute_ms.to_bits(), "{dest}");
+            assert_eq!(dp.iter_ms.to_bits(), scalar.iter_ms.to_bits(), "{dest}");
+            assert_eq!(dp.throughput.to_bits(), scalar.throughput.to_bits(), "{dest}");
+            assert_eq!(dp.efficiency.to_bits(), scalar.efficiency.to_bits(), "{dest}");
+        }
     }
 
     #[test]

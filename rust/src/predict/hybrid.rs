@@ -35,6 +35,25 @@ pub enum PredictionMethod {
 /// predicted forward+backward time in ms for each row.
 pub trait MlpBackend: Send + Sync {
     fn predict_batch(&self, op: MlpOp, features: &[Vec<f64>], dest: Device) -> Result<Vec<f64>>;
+
+    /// Predict the same feature rows against several destinations at
+    /// once, returning one [`MlpBackend::predict_batch`]-shaped result
+    /// per destination, in order. The default loops per destination —
+    /// bit-identical to N scalar calls, so existing backends need no
+    /// changes. Backends that coalesce across requests (the MLP service
+    /// thread) override this to pipeline every destination into one
+    /// batched execution instead of N round-trips.
+    fn predict_batch_multi(
+        &self,
+        op: MlpOp,
+        features: &[Vec<f64>],
+        dests: &[Device],
+    ) -> Vec<Result<Vec<f64>>> {
+        dests
+            .iter()
+            .map(|&d| self.predict_batch(op, features, d))
+            .collect()
+    }
 }
 
 /// One predicted operation on the destination GPU.
@@ -319,6 +338,145 @@ impl HybridPredictor {
         }
         pred
     }
+
+    /// Kernel-major batched evaluation: **one** pass over the plan's
+    /// flat kernel arrays accumulates per-op times for every
+    /// destination simultaneously, instead of re-walking the arrays
+    /// once per destination. Duplicate destinations are deduped before
+    /// the sweep and re-expanded to the caller's order in the result.
+    /// Bit-identical to N [`HybridPredictor::evaluate_with_precision`]
+    /// calls (pinned by the golden suite): the sweep accumulates in the
+    /// same kernel order through the same [`wave::scale_eq2_parts`] /
+    /// [`wave::scale_eq1_parts`] expressions the scalar path uses.
+    pub fn evaluate_batch(
+        &self,
+        plan: &crate::plan::AnalyzedPlan,
+        dests: &[Device],
+        precision: crate::lowering::Precision,
+    ) -> Vec<PredictedTrace> {
+        let mut scratch = crate::plan::EvalScratch::new();
+        self.evaluate_batch_with(plan, dests, precision, &mut scratch)
+    }
+
+    /// [`HybridPredictor::evaluate_batch`] with a caller-provided
+    /// scratch arena (the engine pools one per worker thread, so
+    /// steady-state sweeps reuse capacity instead of reallocating).
+    pub fn evaluate_batch_with(
+        &self,
+        plan: &crate::plan::AnalyzedPlan,
+        dests: &[Device],
+        precision: crate::lowering::Precision,
+        scratch: &mut crate::plan::EvalScratch,
+    ) -> Vec<PredictedTrace> {
+        self.evaluate_batch_times(plan, dests, precision, scratch);
+        (0..dests.len()).map(|i| scratch.materialize(plan, i)).collect()
+    }
+
+    /// The allocation-free core of the batched path: run the sweep and
+    /// leave the per-op times in `scratch`, without materializing
+    /// [`PredictedTrace`]s. Consumers that only need aggregates — the
+    /// cluster throughput matrix, distributed sweeps — query
+    /// [`crate::plan::EvalScratch::run_time_ms`] /
+    /// [`crate::plan::EvalScratch::throughput`] directly and skip the
+    /// per-op `String` clones entirely. With a warm scratch and
+    /// snapshot destinations, this performs **zero heap allocation**
+    /// (pinned by `rust/tests/batched_alloc.rs`; MLP dispatch and
+    /// post-snapshot computed lanes are the documented exceptions).
+    pub fn evaluate_batch_times(
+        &self,
+        plan: &crate::plan::AnalyzedPlan,
+        dests: &[Device],
+        precision: crate::lowering::Precision,
+        scratch: &mut crate::plan::EvalScratch,
+    ) {
+        scratch.begin(dests);
+        plan.gather_lanes(self.use_eq1, scratch);
+        let nd = scratch.n_unique();
+        let time = plan.kernel_times();
+
+        // Phase 1: the wave-scaling sweep. Kernel-major: for each
+        // kernel of each op, the innermost loop runs over destinations,
+        // reading contiguous rows of the transposed lane matrices —
+        // branch-free, hash-free, slice-indexed f64 arithmetic the
+        // compiler can vectorize.
+        {
+            let s = &mut *scratch;
+            let acc = &mut s.acc[..];
+            let (gamma_t, wave_t) = (&s.gamma_t[..], &s.wave_t[..]);
+            let (bw, clock) = (&s.bw[..], &s.clock[..]);
+            if self.use_eq1 {
+                let (waves_d_t, waves_o) = (&s.waves_d_t[..], &s.waves_o[..]);
+                for o in 0..plan.n_ops() {
+                    let row = &mut acc[o * nd..(o + 1) * nd];
+                    for k in plan.kernel_range(o) {
+                        let (t, wo) = (time[k], waves_o[k]);
+                        let g_row = &gamma_t[k * nd..(k + 1) * nd];
+                        let w_row = &wave_t[k * nd..(k + 1) * nd];
+                        let wd_row = &waves_d_t[k * nd..(k + 1) * nd];
+                        for di in 0..nd {
+                            row[di] += wave::scale_eq1_parts(
+                                t, wo, wd_row[di], bw[di], w_row[di], clock[di], g_row[di],
+                            );
+                        }
+                    }
+                }
+            } else {
+                for o in 0..plan.n_ops() {
+                    let row = &mut acc[o * nd..(o + 1) * nd];
+                    for k in plan.kernel_range(o) {
+                        let t = time[k];
+                        let g_row = &gamma_t[k * nd..(k + 1) * nd];
+                        let w_row = &wave_t[k * nd..(k + 1) * nd];
+                        for di in 0..nd {
+                            row[di] += wave::scale_eq2_parts(
+                                t, bw[di], w_row[di], clock[di], g_row[di],
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        // Phase 2: MLP overrides — one multi-destination call per MLP
+        // group (instead of one per group per destination), so a
+        // coalescing backend turns the whole sweep into one padded
+        // execution per op family.
+        if let Some(backend) = &self.mlp {
+            let s = &mut *scratch;
+            for group in plan.mlp_groups() {
+                let results = backend.predict_batch_multi(group.op, &group.features, &s.dests);
+                for (di, res) in results.into_iter().enumerate() {
+                    match res {
+                        Ok(times) if times.len() == group.slots.len() => {
+                            for (&slot, ms) in group.slots.iter().zip(times) {
+                                if ms.is_finite() && ms > 0.0 {
+                                    s.acc[slot * nd + di] = ms;
+                                    s.mlp_hit[slot * nd + di] = true;
+                                } else {
+                                    s.fallbacks[di] += 1;
+                                }
+                            }
+                        }
+                        _ => s.fallbacks[di] += group.slots.len(),
+                    }
+                }
+            }
+        }
+
+        // Phase 3: AMP — multiply the precomputed Daydream factor rows
+        // in, after MLP overrides, exactly as the scalar path composes
+        // `evaluate` + `apply_amp`.
+        if precision == crate::lowering::Precision::Amp {
+            let s = &mut *scratch;
+            for di in 0..nd {
+                let dest = s.dests[di];
+                let factors = plan.amp_row(dest, &mut s.lane_amp);
+                for o in 0..plan.n_ops() {
+                    s.acc[o * nd + di] *= factors[o];
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -483,6 +641,134 @@ mod tests {
                     b.time_ms.to_bits(),
                     "{dest} AMP op {}",
                     a.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn evaluate_batch_matches_scalar_bit_for_bit() {
+        use crate::lowering::Precision;
+        let trace = toy_trace(Device::T4);
+        for policy in [MetricsPolicy::All, MetricsPolicy::None] {
+            for use_eq1 in [false, true] {
+                let p = HybridPredictor::wave_only()
+                    .with_metrics_policy(policy.clone())
+                    .with_eq1(use_eq1);
+                let plan = crate::plan::AnalyzedPlan::build(&trace, &p.metrics_policy);
+                let dests: Vec<Device> = crate::device::ALL_DEVICES.to_vec();
+                for precision in [Precision::Fp32, Precision::Amp] {
+                    let batch = p.evaluate_batch(&plan, &dests, precision);
+                    assert_eq!(batch.len(), dests.len());
+                    for (pred, &dest) in batch.iter().zip(&dests) {
+                        let scalar = p.evaluate_with_precision(&plan, dest, precision);
+                        assert_eq!(pred.dest, dest);
+                        assert_eq!(pred.ops.len(), scalar.ops.len());
+                        assert_eq!(pred.mlp_fallbacks, scalar.mlp_fallbacks);
+                        for (a, b) in scalar.ops.iter().zip(&pred.ops) {
+                            assert_eq!(
+                                a.time_ms.to_bits(),
+                                b.time_ms.to_bits(),
+                                "{dest} eq1={use_eq1} {policy:?} {precision:?} op {}",
+                                a.name
+                            );
+                            assert_eq!(a.method, b.method);
+                            assert_eq!(a.name, b.name);
+                            assert_eq!(a.index, b.index);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn evaluate_batch_dedups_duplicate_destinations() {
+        use crate::lowering::Precision;
+        let trace = toy_trace(Device::P4000);
+        let p = HybridPredictor::wave_only();
+        let plan = crate::plan::AnalyzedPlan::build(&trace, &p.metrics_policy);
+        let dests = [
+            Device::V100,
+            Device::T4,
+            Device::V100,
+            Device::V100,
+            Device::T4,
+        ];
+        let mut scratch = crate::plan::EvalScratch::new();
+        let batch = p.evaluate_batch_with(&plan, &dests, Precision::Fp32, &mut scratch);
+        assert_eq!(scratch.n_unique(), 2, "duplicates must be evaluated once");
+        assert_eq!(batch.len(), dests.len(), "…but re-expanded to caller order");
+        for (pred, &dest) in batch.iter().zip(&dests) {
+            assert_eq!(pred.dest, dest);
+            let scalar = p.evaluate(&plan, dest);
+            assert_eq!(
+                pred.run_time_ms().to_bits(),
+                scalar.run_time_ms().to_bits(),
+                "{dest}"
+            );
+        }
+        // The scratch aggregates answer per *caller* index.
+        for (i, pred) in batch.iter().enumerate() {
+            assert_eq!(
+                scratch.run_time_ms(i).to_bits(),
+                pred.run_time_ms().to_bits()
+            );
+            assert_eq!(
+                scratch.throughput(i, plan.batch_size).to_bits(),
+                pred.throughput().to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn evaluate_batch_dispatches_mlp_once_per_group() {
+        use crate::lowering::Precision;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        struct CountingBackend(AtomicUsize);
+        impl MlpBackend for CountingBackend {
+            fn predict_batch(&self, _op: MlpOp, f: &[Vec<f64>], _d: Device) -> Result<Vec<f64>> {
+                self.0.fetch_add(1, Ordering::Relaxed);
+                Ok(vec![7.5; f.len()])
+            }
+        }
+
+        let trace = toy_trace(Device::T4);
+        let backend = Arc::new(CountingBackend(AtomicUsize::new(0)));
+        let p = HybridPredictor::with_mlp(backend.clone());
+        let plan = crate::plan::AnalyzedPlan::build(&trace, &p.metrics_policy);
+        let dests = [Device::V100, Device::P4000, Device::V100];
+        let batch = p.evaluate_batch(&plan, &dests, Precision::Fp32);
+        // One group (conv2d) × two *unique* destinations through the
+        // default predict_batch_multi loop.
+        assert_eq!(backend.0.load(Ordering::Relaxed), 2);
+        for (pred, &dest) in batch.iter().zip(&dests) {
+            let scalar = p.evaluate(&plan, dest);
+            for (a, b) in scalar.ops.iter().zip(&pred.ops) {
+                assert_eq!(a.time_ms.to_bits(), b.time_ms.to_bits());
+                assert_eq!(a.method, b.method);
+            }
+        }
+    }
+
+    #[test]
+    fn evaluate_batch_counts_fallbacks_like_scalar() {
+        use crate::lowering::Precision;
+        let trace = toy_trace(Device::T4);
+        for backend in [
+            Arc::new(FailingBackend) as Arc<dyn MlpBackend>,
+            Arc::new(NegativeBackend) as Arc<dyn MlpBackend>,
+        ] {
+            let p = HybridPredictor::with_mlp(backend);
+            let plan = crate::plan::AnalyzedPlan::build(&trace, &p.metrics_policy);
+            let batch = p.evaluate_batch(&plan, &crate::device::ALL_DEVICES, Precision::Fp32);
+            for (pred, &dest) in batch.iter().zip(&crate::device::ALL_DEVICES) {
+                let scalar = p.evaluate(&plan, dest);
+                assert_eq!(pred.mlp_fallbacks, scalar.mlp_fallbacks);
+                assert_eq!(
+                    pred.run_time_ms().to_bits(),
+                    scalar.run_time_ms().to_bits()
                 );
             }
         }

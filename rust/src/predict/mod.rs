@@ -8,12 +8,15 @@
 //! * [`heuristic`] — the peak-FLOPS-ratio baseline the paper argues
 //!   against (§2.3, Fig. 1).
 //!
-//! The hybrid predictor has two interchangeable paths: the legacy
+//! The hybrid predictor has three interchangeable paths: the legacy
 //! trace-walking [`HybridPredictor::predict`] (kept as the reference
-//! implementation) and the plan-based [`HybridPredictor::evaluate`],
-//! a thin per-destination loop over a compiled
-//! [`crate::plan::AnalyzedPlan`]. The two are bit-identical; the engine
-//! and every fan-out path use the plan route.
+//! implementation), the plan-based [`HybridPredictor::evaluate`] (a
+//! thin per-destination loop over a compiled
+//! [`crate::plan::AnalyzedPlan`]), and the kernel-major
+//! [`HybridPredictor::evaluate_batch`], which produces *every*
+//! destination of a fan-out from one pass over the plan's flat kernel
+//! arrays. All three are bit-identical; the engine's fan-out and the
+//! cluster/distributed sweeps use the batched route.
 //! * [`amp`] — mixed-precision prediction à la Daydream (§6.1.2).
 //! * [`extrapolate`] — batch-size extrapolation (§6.1.3).
 

@@ -70,7 +70,16 @@ pub fn ratios_from_parts(bw: f64, clock: f64, blocks: u64, w_origin: u64, w_dest
 /// Eq. 2 — the production path.
 pub fn scale_eq2(time_origin_ms: f64, r: &WaveRatios, gamma: f64) -> f64 {
     debug_assert!((0.0..=1.0).contains(&gamma));
-    time_origin_ms * r.bw.powf(gamma) * (r.wave * r.clock).powf(1.0 - gamma)
+    scale_eq2_parts(time_origin_ms, r.bw, r.wave, r.clock, gamma)
+}
+
+/// Eq. 2 from already-unpacked ratio parts — the branch-free form the
+/// kernel-major batched evaluator inlines in its `dests × kernels`
+/// inner loop. [`scale_eq2`] delegates here, so the scalar and batched
+/// paths share one expression and cannot drift bit-wise.
+#[inline(always)]
+pub fn scale_eq2_parts(time_origin_ms: f64, bw: f64, wave: f64, clock: f64, gamma: f64) -> f64 {
+    time_origin_ms * bw.powf(gamma) * (wave * clock).powf(1.0 - gamma)
 }
 
 /// Eq. 1 — exact wave counts, for kernels with few waves.
@@ -78,7 +87,24 @@ pub fn scale_eq1(time_origin_ms: f64, r: &WaveRatios, gamma: f64) -> f64 {
     debug_assert!((0.0..=1.0).contains(&gamma));
     let waves_o = r.blocks.div_ceil(r.w_origin) as f64;
     let waves_d = r.blocks.div_ceil(r.w_dest) as f64;
-    time_origin_ms * waves_d * (r.bw / r.wave).powf(gamma) * r.clock.powf(1.0 - gamma) / waves_o
+    scale_eq1_parts(time_origin_ms, waves_o, waves_d, r.bw, r.wave, r.clock, gamma)
+}
+
+/// Eq. 1 from already-unpacked parts (`waves_o`/`waves_d` are the
+/// origin/destination wave *counts* `⌈B/W⌉`, precomputed per kernel and
+/// per `(kernel, dest)` by the batched evaluator). Shared with
+/// [`scale_eq1`] so both paths stay bit-identical.
+#[inline(always)]
+pub fn scale_eq1_parts(
+    time_origin_ms: f64,
+    waves_o: f64,
+    waves_d: f64,
+    bw: f64,
+    wave: f64,
+    clock: f64,
+    gamma: f64,
+) -> f64 {
+    time_origin_ms * waves_d * (bw / wave).powf(gamma) * clock.powf(1.0 - gamma) / waves_o
 }
 
 #[cfg(test)]

@@ -152,4 +152,43 @@ impl MlpBackend for MlpServiceHandle {
             .recv()
             .map_err(|_| anyhow::anyhow!("MLP service dropped the request"))?
     }
+
+    fn predict_batch_multi(
+        &self,
+        op: MlpOp,
+        features: &[Vec<f64>],
+        dests: &[Device],
+    ) -> Vec<Result<Vec<f64>>> {
+        if features.is_empty() {
+            return dests.iter().map(|_| Ok(Vec::new())).collect();
+        }
+        // Pipeline: enqueue every destination *before* collecting any
+        // reply, so the service thread's drain pass sees the whole
+        // multi-destination sweep at once and coalesces it into one
+        // padded execution per op family (rows already carry per-dest
+        // GPU features, so destinations share a batch). The default
+        // trait impl would serialize N send→recv round-trips instead.
+        let pending: Vec<_> = dests
+            .iter()
+            .map(|&dest| {
+                let (reply_tx, reply_rx) = mpsc::channel();
+                let sent = self.tx.send(Request {
+                    op,
+                    features: features.to_vec(),
+                    dest,
+                    reply: reply_tx,
+                });
+                (sent, reply_rx)
+            })
+            .collect();
+        pending
+            .into_iter()
+            .map(|(sent, reply_rx)| -> Result<Vec<f64>> {
+                sent.map_err(|_| anyhow::anyhow!("MLP service thread is gone"))?;
+                reply_rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("MLP service dropped the request"))?
+            })
+            .collect()
+    }
 }

@@ -1,0 +1,83 @@
+//! Zero-allocation pin for the steady-state batched evaluator.
+//!
+//! `HybridPredictor::evaluate_batch_times` promises that once its
+//! scratch arena has been sized by a first sweep, repeat sweeps over
+//! the same `(plan, destination-set)` shape perform **no heap
+//! allocation** — the property that makes high-rate fan-out serving
+//! cheap. This binary pins it with a counting `#[global_allocator]`.
+//!
+//! It lives in its own test binary (see the `[[test]]` entry in
+//! `Cargo.toml`) with exactly one `#[test]`: the allocator counts every
+//! allocation in the process, so a concurrently running test — or a
+//! second test's harness bookkeeping — would contaminate the measured
+//! window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+use habitat::device::{Device, ALL_DEVICES};
+use habitat::plan::{AnalyzedPlan, EvalScratch};
+use habitat::predict::HybridPredictor;
+use habitat::tracker::OperationTracker;
+use habitat::Precision;
+
+#[test]
+fn steady_state_batched_sweep_allocates_nothing() {
+    let graph = habitat::models::by_name("resnet50", 16).unwrap();
+    let trace = OperationTracker::new(Device::Rtx2070).track(&graph);
+    let p = HybridPredictor::wave_only();
+    let plan = AnalyzedPlan::build(&trace, &p.metrics_policy);
+    // A rank-sized fan-out of snapshot devices (post-snapshot devices
+    // are the documented exception: their computed lanes consult the
+    // shared wave table).
+    let dests: Vec<Device> = ALL_DEVICES.iter().copied().cycle().take(60).collect();
+
+    // Warm-up sweeps size every buffer (both precisions, so the AMP
+    // phase is warm too).
+    let mut scratch = EvalScratch::new();
+    for precision in [Precision::Fp32, Precision::Amp] {
+        p.evaluate_batch_times(&plan, &dests, precision, &mut scratch);
+    }
+
+    // Measured window: steady-state sweeps plus aggregate reads.
+    let before = ALLOCS.load(Relaxed);
+    let mut checksum = 0.0_f64;
+    for _ in 0..16 {
+        p.evaluate_batch_times(&plan, &dests, Precision::Fp32, &mut scratch);
+        checksum += scratch.run_time_ms(0) + scratch.throughput(dests.len() - 1, 16);
+        p.evaluate_batch_times(&plan, &dests, Precision::Amp, &mut scratch);
+        checksum += scratch.run_time_ms(dests.len() - 1);
+    }
+    let after = ALLOCS.load(Relaxed);
+
+    assert!(checksum.is_finite() && checksum > 0.0);
+    assert!(!scratch.grew(), "warm sweeps must reuse buffer capacity");
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state batched evaluation must not touch the heap"
+    );
+}

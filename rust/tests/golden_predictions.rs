@@ -136,6 +136,81 @@ fn rank_reproduces_individual_reference_predictions() {
 }
 
 #[test]
+fn batched_evaluation_is_bit_identical_to_scalar_across_the_zoo() {
+    // The kernel-major batched sweep must reproduce N scalar `evaluate`
+    // calls bit-for-bit: every paper model × every registry device ×
+    // both precisions, per op.
+    let engine = PredictionEngine::wave_only();
+    let devices = habitat::device::registry::all_devices();
+    for model in models::MODEL_NAMES {
+        let batch = golden_batch(model);
+        let analyzed = engine.analyzed(model, batch, Device::Rtx2070).unwrap();
+        for (precision, label) in PRECISIONS {
+            let batched = engine.evaluate_batch(&analyzed.plan, &devices, precision);
+            assert_eq!(batched.len(), devices.len());
+            for (pred, &dest) in batched.iter().zip(&devices) {
+                let scalar = engine.evaluate(&analyzed.plan, dest, precision);
+                assert_eq!(pred.dest, dest);
+                assert_eq!(pred.ops.len(), scalar.ops.len());
+                assert_eq!(pred.mlp_fallbacks, scalar.mlp_fallbacks);
+                for (a, b) in scalar.ops.iter().zip(&pred.ops) {
+                    assert_eq!(
+                        a.time_ms.to_bits(),
+                        b.time_ms.to_bits(),
+                        "{model} bs={batch} {label} {dest} op {}: scalar {} vs batched {}",
+                        a.name,
+                        a.time_ms,
+                        b.time_ms
+                    );
+                    assert_eq!(a.method, b.method);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_evaluation_covers_post_snapshot_registered_devices() {
+    use habitat::device::registry::{self, NewDevice};
+
+    // Compile the plan *before* registering, so the new device sits
+    // outside the plan's dense tables and the batched sweep must route
+    // it through the computed-lane path — mixed into the same sweep as
+    // snapshot devices.
+    let engine = PredictionEngine::wave_only();
+    let analyzed = engine
+        .analyzed("resnet50", golden_batch("resnet50"), Device::Rtx2070)
+        .unwrap();
+    let d = registry::register(&NewDevice {
+        usd_per_hr: Some(1.1),
+        ..NewDevice::new("sim-golden-batch", 56, 1600.0, 700.0, 16.0, true)
+    })
+    .unwrap();
+    assert!(
+        d.index() >= analyzed.plan.n_devices(),
+        "the device must be outside the plan's registry snapshot"
+    );
+    let mut dests: Vec<Device> = ALL_DEVICES.to_vec();
+    dests.push(d);
+    dests.push(Device::V100); // duplicate, after the computed-lane dest
+    for (precision, label) in PRECISIONS {
+        let batched = engine.evaluate_batch(&analyzed.plan, &dests, precision);
+        assert_eq!(batched.len(), dests.len());
+        for (pred, &dest) in batched.iter().zip(&dests) {
+            let scalar = engine.evaluate(&analyzed.plan, dest, precision);
+            assert_eq!(pred.dest, dest);
+            assert_eq!(
+                pred.run_time_ms().to_bits(),
+                scalar.run_time_ms().to_bits(),
+                "{label} {dest}: batched {} vs scalar {}",
+                pred.run_time_ms(),
+                scalar.run_time_ms()
+            );
+        }
+    }
+}
+
+#[test]
 fn golden_bit_patterns_are_pinned() {
     let engine = PredictionEngine::wave_only();
     let mut lines = Vec::new();

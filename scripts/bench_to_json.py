@@ -1,0 +1,140 @@
+#!/usr/bin/env python3
+"""Parse `cargo bench` output from the hand-rolled harness into JSON.
+
+The harness in `rust/src/util/bench.rs` prints one line per benchmark:
+
+    plan/evaluate_batch_60_dests/resnet50             12.3 µs/iter (p50      11.9, p95      14.0, n=200)
+
+This script collects those lines (from a file or stdin), writes them to
+a JSON baseline (default `BENCH_predictor.json`) so the perf trajectory
+has machine-readable data points PR over PR, and computes the headline
+speedups the batched evaluator is accountable for:
+
+    scalar_vs_batched_60_dests = plan/evaluate_60_dests / plan/evaluate_batch_60_dests
+
+Pass `--min-speedup 2.0` to turn that ratio into a CI gate: exit
+non-zero when the batched sweep is less than 2x faster than 60 scalar
+`evaluate` calls (the acceptance floor for the kernel-major refactor).
+
+Usage:
+  cargo bench --bench predictor | tee bench.txt
+  python3 scripts/bench_to_json.py bench.txt --out BENCH_predictor.json --min-speedup 2.0
+"""
+
+import argparse
+import json
+import re
+import sys
+
+LINE_RE = re.compile(
+    r"^(?P<name>\S+)\s+(?P<mean>[\d.]+) µs/iter "
+    r"\(p50\s+(?P<p50>[\d.]+), p95\s+(?P<p95>[\d.]+), n=(?P<n>\d+)\)\s*$"
+)
+
+# (label, numerator bench, denominator bench): ratio > 1 means the
+# denominator (the new path) is faster.
+SPEEDUPS = [
+    (
+        "scalar_vs_batched_60_dests",
+        "plan/evaluate_60_dests/resnet50",
+        "plan/evaluate_batch_60_dests/resnet50",
+    ),
+    (
+        "legacy_walk_vs_batched_60_dests",
+        "legacy/trace_walk_60_dests/resnet50",
+        "plan/evaluate_batch_60_dests/resnet50",
+    ),
+    (
+        "materialized_vs_sweep_60_dests",
+        "plan/evaluate_batch_60_dests/resnet50",
+        "plan/evaluate_batch_sweep_60_dests/resnet50",
+    ),
+]
+
+# The ratio --min-speedup gates on.
+GATED_SPEEDUP = "scalar_vs_batched_60_dests"
+
+
+def parse(lines):
+    benches = []
+    for line in lines:
+        m = LINE_RE.match(line.rstrip("\n"))
+        if m:
+            benches.append(
+                {
+                    "name": m.group("name"),
+                    "mean_us": float(m.group("mean")),
+                    "p50_us": float(m.group("p50")),
+                    "p95_us": float(m.group("p95")),
+                    "iters": int(m.group("n")),
+                }
+            )
+    return benches
+
+
+def speedups(benches):
+    by_name = {b["name"]: b for b in benches}
+    out = {}
+    for label, slow, fast in SPEEDUPS:
+        if slow in by_name and fast in by_name and by_name[fast]["mean_us"] > 0:
+            out[label] = round(by_name[slow]["mean_us"] / by_name[fast]["mean_us"], 3)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("input", nargs="?", help="bench output file (default: stdin)")
+    ap.add_argument("--out", default="BENCH_predictor.json", help="JSON output path")
+    ap.add_argument(
+        "--min-speedup",
+        type=float,
+        default=None,
+        help=f"fail unless {GATED_SPEEDUP} is at least this ratio",
+    )
+    args = ap.parse_args()
+
+    if args.input:
+        with open(args.input, encoding="utf-8") as f:
+            lines = f.readlines()
+    else:
+        lines = sys.stdin.readlines()
+
+    benches = parse(lines)
+    if not benches:
+        print("bench_to_json: no bench lines recognized in input", file=sys.stderr)
+        return 1
+
+    doc = {
+        "schema": "habitat-bench-v1",
+        "source": "cargo bench --bench predictor | scripts/bench_to_json.py",
+        "benches": benches,
+        "speedups": speedups(benches),
+    }
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=2, sort_keys=False)
+        f.write("\n")
+    print(f"bench_to_json: wrote {len(benches)} benches to {args.out}")
+    for label, ratio in doc["speedups"].items():
+        print(f"  {label}: {ratio}x")
+
+    if args.min_speedup is not None:
+        got = doc["speedups"].get(GATED_SPEEDUP)
+        if got is None:
+            print(
+                f"bench_to_json: {GATED_SPEEDUP} not computable "
+                "(missing bench lines) — failing the gate",
+                file=sys.stderr,
+            )
+            return 1
+        if got < args.min_speedup:
+            print(
+                f"bench_to_json: {GATED_SPEEDUP} = {got}x is below the "
+                f"--min-speedup {args.min_speedup}x floor",
+                file=sys.stderr,
+            )
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
