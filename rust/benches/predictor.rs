@@ -225,4 +225,66 @@ fn main() {
         }
         Err(e) => println!("(skipping hybrid benches: {e})"),
     }
+
+    // --- cold start: parallel plan compile + warm restore from the store --
+    // Last so the registry inflation below cannot perturb the benches
+    // above. A fleet of synthetic devices makes per-device lane work
+    // dominate the build, which is exactly the regime the parallel
+    // compiler (one work-claimed chunk per device) is built for.
+    for i in 0..32u32 {
+        let desc = habitat::NewDevice::new(
+            &format!("sim-bench-{i:02}"),
+            40 + (i % 8) * 8,
+            1200.0 + f64::from(i) * 25.0,
+            400.0 + f64::from(i) * 20.0,
+            8.0 + f64::from(i) * 0.5,
+            i % 2 == 0,
+        );
+        habitat::device::registry::register(&desc).expect("bench device registers");
+    }
+    bench("plan/build_serial/resnet50", || {
+        AnalyzedPlan::build(&trace, &wave.metrics_policy).n_kernels()
+    });
+    bench("plan/build_parallel/resnet50", || {
+        AnalyzedPlan::build_parallel(&trace, &wave.metrics_policy, engine.pool()).0.n_kernels()
+    });
+
+    // Warm restore vs recompile over the whole five-model zoo: the store
+    // replays persisted lane tables and only reruns the cheap kernel
+    // prefix, while recompile pays tracking + full lane computation.
+    let store_dir = std::env::temp_dir()
+        .join(format!("habitat-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    {
+        let seeded = PredictionEngine::wave_only()
+            .with_store(&store_dir)
+            .expect("bench store opens");
+        for model in habitat::models::MODEL_NAMES {
+            seeded.analyzed(model, 32, Device::Rtx2070).unwrap();
+        }
+        // Dropping the engine drains the write-behind queue, so every
+        // plan is on disk before the restore bench starts.
+    }
+    bench("engine/recompile_zoo", || {
+        engine.clear_trace_cache();
+        for model in habitat::models::MODEL_NAMES {
+            engine.analyzed(model, 32, Device::Rtx2070).unwrap();
+        }
+        engine.stats().plan_builds
+    });
+    bench("engine/warm_restore_zoo", || {
+        let restored = PredictionEngine::wave_only()
+            .with_store(&store_dir)
+            .expect("bench store reopens");
+        let warm = restored.stats().warm_restores;
+        assert_eq!(warm, habitat::models::MODEL_NAMES.len() as u64);
+        warm
+    });
+    let _ = std::fs::remove_dir_all(&store_dir);
+
+    let stats = engine.stats();
+    println!(
+        "(store counters: {} hits / {} misses; {} warm restores; {} parallel build chunks)",
+        stats.store_hits, stats.store_misses, stats.warm_restores, stats.parallel_build_chunks
+    );
 }

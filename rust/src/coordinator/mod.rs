@@ -34,6 +34,7 @@ pub use service::{
     v2_stats_request, v2_submit_trace_request, PredictionRequest, PredictionResponse,
     PredictionService, RankRequest, RankResponse, RankedDest, RegisteredDevice, Request,
     ServeOptions, ServerHandle, StatsResponse, DEFAULT_MAX_CONNS, MAX_CONNS_ENV, PROTOCOL_V2,
+    STORE_ENV,
 };
 
 use crate::Result;

@@ -241,8 +241,10 @@ impl StatsResponse {
     }
 
     /// The v1 stats payload. (The v2 `stats` op extends this with the
-    /// open-world counters: `trace_uploads`, `uploaded_entries`,
-    /// `devices` — v1 keeps its original seven fields bit-for-bit.)
+    /// open-world counters — `trace_uploads`, `uploaded_entries`,
+    /// `devices` — and the store/compile counters — `store_hits`,
+    /// `store_misses`, `warm_restores`, `parallel_build_chunks`; v1
+    /// keeps its original seven fields bit-for-bit.)
     pub fn to_value(&self) -> Json {
         Json::obj(vec![
             ("trace_hits", Json::Num(self.trace_hits as f64)),
@@ -744,6 +746,12 @@ impl PredictionService {
         PredictionService { engine }
     }
 
+    /// Attach (and warm-restore) a persistent plan store — see
+    /// [`PredictionEngine::attach_store`].
+    pub fn attach_store<P: AsRef<std::path::Path>>(&mut self, dir: P) -> Result<()> {
+        self.engine.attach_store(dir)
+    }
+
     pub fn engine(&self) -> &PredictionEngine {
         &self.engine
     }
@@ -958,6 +966,13 @@ impl PredictionService {
                 ("trace_uploads", Json::Num(s.trace_uploads as f64)),
                 ("uploaded_entries", Json::Num(s.uploaded_entries as f64)),
                 ("devices", Json::Num(s.devices as f64)),
+                ("store_hits", Json::Num(s.store_hits as f64)),
+                ("store_misses", Json::Num(s.store_misses as f64)),
+                ("warm_restores", Json::Num(s.warm_restores as f64)),
+                (
+                    "parallel_build_chunks",
+                    Json::Num(s.parallel_build_chunks as f64),
+                ),
             ],
         )
     }
@@ -988,7 +1003,10 @@ impl PredictionService {
 
     fn v2_register_device(&self, v: &Json) -> V2Result {
         let desc = new_device_from_value(v)?;
-        let d = registry::register(&desc).map_err(|e| match e {
+        // Through the engine, not the bare registry: a genuinely new
+        // device gets its lane appended to every cached plan once and
+        // is logged to the persistent store's device log.
+        let d = self.engine.register_device(&desc).map_err(|e| match e {
             RegisterError::Conflict(m) => V2Error::new("conflict", m),
             RegisterError::Invalid(m) => V2Error::new("invalid_argument", m),
         })?;
@@ -1410,9 +1428,29 @@ pub fn serve(addr: &str, artifacts: &str) -> Result<()> {
     serve_with(addr, artifacts, ServeOptions::default())
 }
 
+/// Environment variable naming the persistent plan-store directory for
+/// `habitat serve` (also settable via the CLI's `--store` flag). Only
+/// the serving entry point reads it — library engines never attach a
+/// store implicitly.
+pub const STORE_ENV: &str = "HABITAT_STORE";
+
 /// [`serve`] with explicit runtime bounds.
 pub fn serve_with(addr: &str, artifacts: &str, opts: ServeOptions) -> Result<()> {
-    let service = Arc::new(service_from_artifacts(artifacts));
+    let mut service = service_from_artifacts(artifacts);
+    if let Ok(dir) = std::env::var(STORE_ENV) {
+        if !dir.is_empty() {
+            // Persistence is an optimization: a store that cannot be
+            // opened degrades to a cold boot, never a refused one.
+            match service.attach_store(&dir) {
+                Ok(()) => println!(
+                    "habitat: plan store at {dir} ({} plans warm-restored)",
+                    service.engine().stats().warm_restores
+                ),
+                Err(e) => eprintln!("habitat: plan store at {dir} unavailable ({e}); serving without persistence"),
+            }
+        }
+    }
+    let service = Arc::new(service);
     let max_conns = opts.max_conns;
     let handle = start(addr, service, opts)?;
     {

@@ -290,6 +290,20 @@ impl<K: Eq + Hash + Clone, V: Clone> ShardedLru<K, V> {
         self.shards.len()
     }
 
+    /// Visit every resident entry under its shard's read lock, without
+    /// refreshing recency. Used by the engine's incremental
+    /// plan-extension step (`register_device` appends a new device's
+    /// lanes to each cached plan exactly once). `f` must not call back
+    /// into this cache — a same-shard write would deadlock.
+    pub fn for_each(&self, mut f: impl FnMut(&K, &V)) {
+        for shard in &self.shards {
+            let map = shard.map.read().unwrap();
+            for (k, e) in map.iter() {
+                f(k, &e.value);
+            }
+        }
+    }
+
     /// Drop every entry (build gates are untouched: in-flight builders
     /// simply publish into an emptier cache).
     pub fn clear(&self) {
@@ -372,6 +386,20 @@ mod tests {
         let (v, inserted) = c.get_or_insert(1, 99);
         assert_eq!((v, inserted), (10, false));
         assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn for_each_visits_every_resident_entry() {
+        let c: ShardedLru<u32, u32> = ShardedLru::new(64);
+        for i in 0..20u32 {
+            c.insert(i, i * 10);
+        }
+        let mut seen: Vec<(u32, u32)> = Vec::new();
+        c.for_each(|k, v| seen.push((*k, *v)));
+        seen.sort_unstable();
+        assert_eq!(seen, (0..20u32).map(|i| (i, i * 10)).collect::<Vec<_>>());
+        // Visiting must not perturb LRU recency enough to break reads.
+        assert_eq!(c.get(&0), Some(0));
     }
 
     #[test]

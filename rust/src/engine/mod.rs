@@ -50,13 +50,15 @@
 pub mod cache;
 pub mod memo;
 pub mod pool;
+pub mod store;
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
 use std::sync::mpsc;
 use std::sync::{Arc, OnceLock};
 
 use crate::cost;
-use crate::device::Device;
+use crate::device::registry::RegisterError;
+use crate::device::{Device, NewDevice};
 use crate::lowering::Precision;
 use crate::models;
 use crate::plan::{AnalyzedPlan, AnalyzedTrace};
@@ -66,6 +68,7 @@ use crate::Result;
 
 use cache::{Claim, ShardedLru};
 use pool::WorkerPool;
+use store::{PlanStore, StoredKind};
 
 /// Trace-cache key: model name, batch size, origin device, and the
 /// precision the iteration was *tracked* at.
@@ -149,6 +152,18 @@ pub struct EngineStats {
     pub wave_misses: u64,
     /// Persistent fan-out worker-pool width.
     pub workers: usize,
+    /// Cache misses served from the persistent plan store instead of
+    /// the tracking/compilation pipeline (always 0 with no store).
+    pub store_hits: u64,
+    /// Compilations that checked the attached store and found no
+    /// usable record (always 0 with no store).
+    pub store_misses: u64,
+    /// Records restored from disk into the caches at
+    /// [`PredictionEngine::attach_store`] time.
+    pub warm_restores: u64,
+    /// Per-device lane rows filled by the work-claiming parallel plan
+    /// builder (serial fallback builds contribute 0).
+    pub parallel_build_chunks: u64,
 }
 
 /// The shared prediction engine. `Send + Sync`: one engine serves any
@@ -171,6 +186,18 @@ pub struct PredictionEngine {
     trace_misses: AtomicU64,
     trace_uploads: AtomicU64,
     plan_builds: AtomicU64,
+    store_hits: AtomicU64,
+    store_misses: AtomicU64,
+    warm_restores: AtomicU64,
+    parallel_build_chunks: AtomicU64,
+    /// Optional persistent plan store ([`store::PlanStore`]): attached
+    /// explicitly via [`PredictionEngine::with_store`] /
+    /// [`PredictionEngine::attach_store`] (never implicitly from the
+    /// environment, so tests and libraries stay hermetic). When
+    /// present, compiled plans are persisted write-behind on the
+    /// compute pool and cache misses consult the store before paying
+    /// for the tracking pipeline.
+    store: Option<Arc<PlanStore>>,
     /// Desired compute-pool width; the pool itself is spawned lazily on
     /// the first use that needs it, so engines that only evaluate
     /// sequentially never spawn threads and
@@ -209,6 +236,11 @@ impl PredictionEngine {
             trace_misses: AtomicU64::new(0),
             trace_uploads: AtomicU64::new(0),
             plan_builds: AtomicU64::new(0),
+            store_hits: AtomicU64::new(0),
+            store_misses: AtomicU64::new(0),
+            warm_restores: AtomicU64::new(0),
+            parallel_build_chunks: AtomicU64::new(0),
+            store: None,
             workers,
             queue_depth: pool::queue_depth_from_env(),
             pool: OnceLock::new(),
@@ -218,6 +250,49 @@ impl PredictionEngine {
     /// Wave-scaling-only engine (no MLP artifacts required).
     pub fn wave_only() -> Self {
         Self::new(HybridPredictor::wave_only())
+    }
+
+    /// Attach a persistent plan store at `dir` (created if absent) and
+    /// **warm-restore** it: every valid record on disk is decoded,
+    /// reassembled bit-identically (`AnalyzedPlan::from_parts`), and
+    /// installed in the trace/upload caches, so a restarted service
+    /// serves its whole zoo without recompiling anything. Invalid
+    /// records (truncated, corrupt, stale format, different metrics
+    /// policy) are skipped silently — they rebuild and re-persist on
+    /// first use. From here on, plan builds persist write-behind.
+    pub fn attach_store<P: AsRef<std::path::Path>>(&mut self, dir: P) -> Result<()> {
+        let store = Arc::new(PlanStore::open(dir, &self.predictor.metrics_policy)?);
+        for id in store.ids() {
+            let Some((kind, entry)) = store.load(&id) else {
+                continue;
+            };
+            match kind {
+                StoredKind::Zoo => {
+                    let key: TraceKey = (
+                        entry.trace.model.clone(),
+                        entry.trace.batch_size,
+                        entry.trace.origin,
+                        entry.trace.precision,
+                    );
+                    self.entries.insert(key, entry);
+                }
+                StoredKind::Upload => self.uploads.insert(id, entry),
+            }
+            self.warm_restores.fetch_add(1, Relaxed);
+        }
+        self.store = Some(store);
+        Ok(())
+    }
+
+    /// Builder-style [`PredictionEngine::attach_store`].
+    pub fn with_store<P: AsRef<std::path::Path>>(mut self, dir: P) -> Result<Self> {
+        self.attach_store(dir)?;
+        Ok(self)
+    }
+
+    /// The attached persistent plan store, if any.
+    pub fn store(&self) -> Option<&PlanStore> {
+        self.store.as_deref()
     }
 
     /// The paper's full hybrid configuration from an artifacts directory.
@@ -316,6 +391,20 @@ impl PredictionEngine {
                 Ok(entry)
             }
             Claim::Build(license) => {
+                // An LRU-evicted key may still sit in the persistent
+                // store: restoring it skips the whole tracking +
+                // compilation pipeline and is bit-identical to it.
+                if let Some(store) = &self.store {
+                    if let Some(entry) = store
+                        .lookup(&key)
+                        .and_then(|id| store.load(&id))
+                        .map(|(_, entry)| entry)
+                    {
+                        self.store_hits.fetch_add(1, Relaxed);
+                        license.complete(entry.clone());
+                        return Ok(entry);
+                    }
+                }
                 let Some(graph) = models::by_name(model, batch) else {
                     // Dropping the license releases the gate (waiters
                     // retry and fail the same way) — an unknown model is
@@ -325,10 +414,18 @@ impl PredictionEngine {
                 // Count a miss only when the tracking pipeline actually
                 // runs; track outside every lock.
                 self.trace_misses.fetch_add(1, Relaxed);
+                if self.store.is_some() {
+                    self.store_misses.fetch_add(1, Relaxed);
+                }
                 self.plan_builds.fetch_add(1, Relaxed);
-                let entry = OperationTracker::new(origin)
-                    .with_precision(precision)
-                    .track_analyzed(&graph, &self.predictor.metrics_policy);
+                let trace = Arc::new(
+                    OperationTracker::new(origin)
+                        .with_precision(precision)
+                        .track(&graph),
+                );
+                let plan = self.compile(&trace);
+                let entry = AnalyzedTrace { trace, plan };
+                self.persist(StoredKind::Zoo, &entry);
                 license.complete(entry.clone());
                 Ok(entry)
             }
@@ -340,7 +437,38 @@ impl PredictionEngine {
     /// models should go through [`PredictionEngine::analyzed`] instead.
     pub fn analyze(&self, trace: &Trace) -> Arc<AnalyzedPlan> {
         self.plan_builds.fetch_add(1, Relaxed);
-        Arc::new(AnalyzedPlan::build(trace, &self.predictor.metrics_policy))
+        self.compile(trace)
+    }
+
+    /// The one plan-compilation call site: the per-device lane rows fill
+    /// on the shared compute pool ([`AnalyzedPlan::build_parallel`] —
+    /// work-claiming, so compiling *from* a pool worker still makes
+    /// progress), bit-identical to the serial build.
+    fn compile(&self, trace: &Trace) -> Arc<AnalyzedPlan> {
+        let (plan, chunks) =
+            AnalyzedPlan::build_parallel(trace, &self.predictor.metrics_policy, self.pool());
+        self.parallel_build_chunks.fetch_add(chunks, Relaxed);
+        Arc::new(plan)
+    }
+
+    /// Write-behind persistence: offer the save to the compute pool and
+    /// fall back to saving inline if the queue is full (`try_execute`
+    /// consumes the job on `Busy`, hence the pre-cloned captures). A
+    /// failed save only costs a recompile on some future boot, so
+    /// errors are deliberately dropped. No-op without a store.
+    fn persist(&self, kind: StoredKind, entry: &AnalyzedTrace) {
+        let Some(store) = &self.store else { return };
+        let job_store = Arc::clone(store);
+        let job_entry = entry.clone();
+        if self
+            .pool()
+            .try_execute(move || {
+                let _ = job_store.save(kind, &job_entry);
+            })
+            .is_err()
+        {
+            let _ = store.save(kind, entry);
+        }
     }
 
     /// Accept a client-supplied trace (the open-world analogue of the
@@ -377,6 +505,7 @@ impl PredictionEngine {
         let (stored, inserted) = self.uploads.get_or_insert(id.clone(), entry);
         if inserted {
             self.trace_uploads.fetch_add(1, Relaxed);
+            self.persist(StoredKind::Upload, &stored);
         } else {
             anyhow::ensure!(
                 stored.trace.to_json() == canonical,
@@ -386,9 +515,21 @@ impl PredictionEngine {
         Ok((id, stored))
     }
 
-    /// Look up a previously submitted trace by id.
+    /// Look up a previously submitted trace by id — in the upload
+    /// cache first, then (for ids that aged out of the LRU) in the
+    /// persistent store.
     pub fn uploaded(&self, trace_id: &str) -> Option<AnalyzedTrace> {
-        self.uploads.get(&trace_id.to_string())
+        if let Some(entry) = self.uploads.get(&trace_id.to_string()) {
+            return Some(entry);
+        }
+        let store = self.store.as_ref()?;
+        let (kind, entry) = store.load(trace_id)?;
+        if kind != StoredKind::Upload {
+            return None;
+        }
+        self.store_hits.fetch_add(1, Relaxed);
+        let (stored, _) = self.uploads.get_or_insert(trace_id.to_string(), entry);
+        Some(stored)
     }
 
     fn uploaded_or_err(&self, trace_id: &str) -> Result<AnalyzedTrace> {
@@ -695,6 +836,33 @@ impl PredictionEngine {
         }
     }
 
+    /// Register a new device through this engine: intern it in the
+    /// process-wide registry, then — if it is genuinely new — **extend
+    /// every cached plan once** with the device's computed γ/wave/AMP
+    /// lane ([`AnalyzedPlan::extend_device`]) so subsequent sweeps read
+    /// a precomputed row instead of recomputing inside every
+    /// evaluation, and append the registration to the store's durable
+    /// device log. Idempotent re-registrations change nothing.
+    pub fn register_device(
+        &self,
+        desc: &NewDevice,
+    ) -> std::result::Result<Device, RegisterError> {
+        let before = crate::device::registry::device_count();
+        let d = crate::device::registry::register(desc)?;
+        if d.index() >= before {
+            self.entries.for_each(|_, entry| {
+                entry.plan.extend_device(d);
+            });
+            self.uploads.for_each(|_, entry| {
+                entry.plan.extend_device(d);
+            });
+            if let Some(store) = &self.store {
+                let _ = store.record_device(desc);
+            }
+        }
+        Ok(d)
+    }
+
     /// Counter snapshot (trace/plan cache + shared wave table + pool).
     /// Entirely lock-free: every counter is an atomic — including the
     /// cache entry counts, which the sharded caches maintain atomically
@@ -712,6 +880,10 @@ impl PredictionEngine {
             wave_hits,
             wave_misses,
             workers: self.workers(),
+            store_hits: self.store_hits.load(Relaxed),
+            store_misses: self.store_misses.load(Relaxed),
+            warm_restores: self.warm_restores.load(Relaxed),
+            parallel_build_chunks: self.parallel_build_chunks.load(Relaxed),
         }
     }
 
@@ -1036,6 +1208,139 @@ mod tests {
             ops: Vec::new(),
         };
         assert!(e.submit_trace(empty).is_err(), "an op-less trace is rejected");
+    }
+
+    fn store_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "habitat_engine_store_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    /// Write-behind saves land on the pool; poll until the expected
+    /// number of records is visible (bounded, so a bug fails fast).
+    fn await_records(e: &PredictionEngine, n: usize) {
+        for _ in 0..500 {
+            if e.store().unwrap().ids().len() >= n {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        panic!("store never reached {n} records");
+    }
+
+    #[test]
+    fn warm_restore_round_trips_zoo_and_uploads() {
+        let dir = store_dir("roundtrip");
+        let (id, fresh_ms) = {
+            let e = PredictionEngine::wave_only().with_store(&dir).unwrap();
+            let at = e.analyzed("mlp", 16, Device::T4).unwrap();
+            let fresh_ms = e.evaluate(&at.plan, Device::V100, Precision::Amp).run_time_ms();
+            let trace = OperationTracker::new(Device::T4)
+                .track(&crate::models::by_name("mlp", 24).unwrap());
+            let (id, _) = e.submit_trace(trace).unwrap();
+            let s = e.stats();
+            assert_eq!(s.warm_restores, 0, "nothing on disk yet");
+            assert_eq!(s.store_misses, 1, "the zoo compile checked the store");
+            assert!(s.parallel_build_chunks >= 2, "lane rows filled in parallel");
+            await_records(&e, 2);
+            (id, fresh_ms)
+            // Dropping the engine joins the pool, flushing any
+            // still-queued write-behind saves.
+        };
+
+        let e2 = PredictionEngine::wave_only().with_store(&dir).unwrap();
+        let s = e2.stats();
+        assert_eq!(s.warm_restores, 2, "both records restored at boot");
+        assert_eq!(s.trace_entries, 1);
+        assert_eq!(s.uploaded_entries, 1);
+
+        // The zoo entry is a plain cache hit — no re-track, no rebuild.
+        let at = e2.analyzed("mlp", 16, Device::T4).unwrap();
+        let s = e2.stats();
+        assert_eq!(s.trace_misses, 0);
+        assert_eq!(s.trace_hits, 1);
+        assert_eq!(s.plan_builds, 0, "warm restore compiles nothing");
+        // …and the restored plan evaluates bit-identically.
+        let restored_ms = e2.evaluate(&at.plan, Device::V100, Precision::Amp).run_time_ms();
+        assert_eq!(restored_ms.to_bits(), fresh_ms.to_bits());
+
+        // The restored upload serves predictions under its old id.
+        assert!(e2.predict_uploaded(&id, Device::V100, Precision::Fp32).is_ok());
+        assert_eq!(e2.stats().trace_uploads, 0, "a restore is not a new upload");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn evicted_entries_restore_from_store_without_retracking() {
+        let dir = store_dir("evict");
+        let e = PredictionEngine::with_capacity(HybridPredictor::wave_only(), 2)
+            .with_store(&dir)
+            .unwrap();
+        for batch in [1usize, 2, 4] {
+            e.trace("mlp", batch, Device::T4).unwrap();
+        }
+        await_records(&e, 3);
+        assert_eq!(e.stats().trace_entries, 2, "batch 1 evicted");
+        // Re-requesting the evicted key restores it from disk: a store
+        // hit, not a fourth tracking pass.
+        e.trace("mlp", 1, Device::T4).unwrap();
+        let s = e.stats();
+        assert_eq!(s.trace_misses, 3);
+        assert_eq!(s.store_hits, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_store_records_are_rebuilt_transparently() {
+        let dir = store_dir("corrupt");
+        {
+            let e = PredictionEngine::wave_only().with_store(&dir).unwrap();
+            e.analyzed("mlp", 16, Device::T4).unwrap();
+            await_records(&e, 1);
+        }
+        // Flip one payload byte in the record.
+        let path = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|en| en.path())
+            .find(|p| p.extension().is_some_and(|x| x == "plan"))
+            .unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&path, bytes).unwrap();
+
+        let e2 = PredictionEngine::wave_only().with_store(&dir).unwrap();
+        let s = e2.stats();
+        assert_eq!(s.warm_restores, 0, "a corrupt record must not restore");
+        // The model still works — rebuilt from source and re-persisted.
+        e2.analyzed("mlp", 16, Device::T4).unwrap();
+        assert_eq!(e2.stats().trace_misses, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn register_device_extends_cached_plans_once() {
+        let e = engine();
+        let at = e.analyzed("mlp", 16, Device::T4).unwrap();
+        let desc = crate::device::NewDevice::new("sim-eng-extend", 36, 1500.0, 320.0, 9.5, true);
+        let d = e.register_device(&desc).unwrap();
+        assert!(
+            !at.plan.extend_device(d),
+            "the registration already appended this device's lane"
+        );
+        // The appended lane is bit-identical to a fresh dense build.
+        let fresh = AnalyzedPlan::build(&at.trace, &e.predictor().metrics_policy);
+        for precision in [Precision::Fp32, Precision::Amp] {
+            let a = e.evaluate(&at.plan, d, precision);
+            let b = e.evaluate(&fresh, d, precision);
+            assert_eq!(a.run_time_ms().to_bits(), b.run_time_ms().to_bits());
+        }
+        // Idempotent re-registration neither errors nor re-extends.
+        assert_eq!(e.register_device(&desc).unwrap(), d);
     }
 
     #[test]

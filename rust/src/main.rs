@@ -8,7 +8,7 @@
 //! habitat dataset   [--out DIR] [--configs N] [--seed S]
 //! habitat experiment <id|all> [--out DIR] [--artifacts DIR]
 //! habitat serve     [--addr HOST:PORT] [--artifacts DIR] [--max-conns N]
-//!                   [--workers N] [--queue-depth N]
+//!                   [--workers N] [--queue-depth N] [--store DIR]
 //! habitat devices
 //! ```
 //!
@@ -88,7 +88,7 @@ const USAGE: &str = "usage: habitat <predict|track|compare|dataset|experiment|se
   experiment <fig1|fig3|fig4|table1|contribution|fig6|fig7|amp|extrapolate|ablation|dp|scheduler|all>
              [--out DIR] [--artifacts DIR]
   serve      [--addr HOST:PORT] [--artifacts DIR] [--max-conns N]
-             [--workers N] [--queue-depth N]
+             [--workers N] [--queue-depth N] [--store DIR]
   devices";
 
 fn main() -> anyhow::Result<()> {
@@ -264,6 +264,10 @@ fn main() -> anyhow::Result<()> {
                 let n = v.parse::<usize>().map_err(|e| anyhow::anyhow!("--queue-depth: {e}"))?;
                 anyhow::ensure!(n > 0, "--queue-depth must be positive");
                 std::env::set_var(habitat::engine::pool::QUEUE_DEPTH_ENV, v);
+            }
+            if let Some(dir) = args.flags.get("store") {
+                anyhow::ensure!(!dir.is_empty(), "--store needs a directory path");
+                std::env::set_var(habitat::coordinator::service::STORE_ENV, dir);
             }
             let defaults = habitat::coordinator::ServeOptions::default();
             let opts = habitat::coordinator::ServeOptions {

@@ -31,10 +31,24 @@
 //! trace-walking path ([`crate::predict::HybridPredictor::predict`]),
 //! which is kept as the reference implementation and pinned against the
 //! plan path by the golden regression tests.
+//!
+//! Compilation itself splits into a cheap destination-independent
+//! **prefix** (one walk over the trace: kernel arena, launch-shape
+//! dedup, MLP features) and the expensive per-device **lanes** (wave
+//! sizes, γ, AMP factors — one independent row per registry device).
+//! [`AnalyzedPlan::build_parallel`] fills those rows on the shared
+//! [`WorkerPool`] with the same work-claiming, deadlock-free shape as
+//! the engine's fan-out; [`AnalyzedPlan::build`] is the serial
+//! reference, bit-identical by construction. The same prefix/lane split
+//! powers the persistent store (`engine::store`): a restored plan
+//! reruns the prefix from the decoded trace and installs the stored
+//! lane tables as raw bit patterns.
 
-use std::borrow::Cow;
 use std::collections::{BTreeMap, HashMap};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, RwLock};
+
+use crate::engine::pool::WorkerPool;
 
 use crate::device::{registry, Device, GpuSpec, LaunchConfig};
 use crate::engine::memo::WaveTable;
@@ -72,12 +86,13 @@ pub struct MlpGroup {
 /// order (for each op: forward kernels, then backward kernels).
 ///
 /// Open-world coherence: a device registered *after* this plan was
-/// compiled is outside the dense tables, so its lane is computed on
-/// demand from the retained per-kernel metadata (same formulas, same
-/// shared wave table — bit-identical to a plan rebuilt after the
-/// registration). Cached plans therefore never go stale when the
-/// registry grows; they just serve the new device through the slightly
-/// slower computed path until the cache entry is naturally rebuilt.
+/// compiled is outside the dense tables, so its lane is **appended
+/// once** — computed from the retained per-kernel metadata (same
+/// formulas, same shared wave table — bit-identical to a plan rebuilt
+/// after the registration) and cached in [`AnalyzedPlan::extend_device`]
+/// extension slots. Cached plans therefore never go stale when the
+/// registry grows, and after the one-time extension the new device is
+/// served from its appended lane at dense-table speed.
 pub struct AnalyzedPlan {
     pub model: String,
     pub batch_size: usize,
@@ -132,6 +147,22 @@ pub struct AnalyzedPlan {
 
     // --- MLP dispatch -----------------------------------------------
     mlp_groups: Vec<MlpGroup>,
+
+    // --- post-snapshot extension lanes ------------------------------
+    /// Lanes for devices registered after the snapshot, appended once
+    /// by [`AnalyzedPlan::extend_device`]; slot `i` holds device index
+    /// `n_devices + i`. Reads are a lock + two `Arc` bumps — no
+    /// allocation, no recompute.
+    ext: RwLock<Vec<Option<ExtLane>>>,
+}
+
+/// One post-snapshot device's computed lanes, shared via `Arc` so
+/// concurrent sweeps can hold a row without cloning it.
+#[derive(Clone)]
+struct ExtLane {
+    gamma: Arc<[f64]>,
+    wave: Arc<[u64]>,
+    amp: Arc<[f64]>,
 }
 
 /// One device's policy-masked γ per kernel, appended to `out`. Shared
@@ -179,13 +210,107 @@ fn amp_row_into(
     }
 }
 
+/// One device's destination-dependent lane rows: wave size per shape,
+/// γ per kernel, AMP factor per op. The unit of work the parallel build
+/// distributes and the extension path appends.
+struct DeviceRow {
+    wave: Vec<u64>,
+    gamma: Vec<f64>,
+    amp: Vec<f64>,
+}
+
+/// Compute one device's full lane row with the shared helpers — the
+/// single code path behind the serial build loop, the parallel build
+/// workers, and [`AnalyzedPlan::extend_device`], so all three are
+/// bit-identical by construction.
+#[allow(clippy::too_many_arguments)]
+fn lane_row(
+    shapes: &[LaunchConfig],
+    intensity: &[f64],
+    profiled: &[bool],
+    time_ms: &[f64],
+    tensor_core: &[bool],
+    kern_start: &[u32],
+    kern_fwd_end: &[u32],
+    kern_end: &[u32],
+    spec: &GpuSpec,
+) -> DeviceRow {
+    let table = WaveTable::global();
+    let mut row = DeviceRow {
+        wave: Vec::with_capacity(shapes.len()),
+        gamma: Vec::with_capacity(intensity.len()),
+        amp: Vec::with_capacity(kern_start.len()),
+    };
+    for s in shapes {
+        row.wave.push(table.wave_size(spec, s).max(1));
+    }
+    gamma_row_into(intensity, profiled, spec, &mut row.gamma);
+    amp_row_into(
+        time_ms,
+        intensity,
+        tensor_core,
+        kern_start,
+        kern_fwd_end,
+        kern_end,
+        spec,
+        &mut row.amp,
+    );
+    row
+}
+
+/// A lane slice: borrowed from the dense tables for snapshot devices,
+/// an `Arc` bump of the appended extension row for later ones.
+enum Lane<'a, T> {
+    Dense(&'a [T]),
+    Ext(Arc<[T]>),
+}
+
+impl<T> std::ops::Deref for Lane<'_, T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        match self {
+            Lane::Dense(s) => s,
+            Lane::Ext(a) => a,
+        }
+    }
+}
+
+/// One destination's Daydream AMP factor row (see
+/// [`AnalyzedPlan::amp_factors`]): dereferences to `[f64]`, one factor
+/// per op.
+pub enum AmpFactors<'a> {
+    /// Borrowed from the dense table (snapshot device).
+    Dense(&'a [f64]),
+    /// The appended extension lane (post-snapshot device).
+    Ext(Arc<[f64]>),
+}
+
+impl std::ops::Deref for AmpFactors<'_> {
+    type Target = [f64];
+
+    fn deref(&self) -> &[f64] {
+        match self {
+            AmpFactors::Dense(s) => s,
+            AmpFactors::Ext(a) => a,
+        }
+    }
+}
+
+impl AsRef<[f64]> for AmpFactors<'_> {
+    fn as_ref(&self) -> &[f64] {
+        self
+    }
+}
+
 /// One destination's view of a plan: γ per kernel and wave size per
 /// launch shape. Borrowed slices of the dense tables for devices inside
-/// the plan's registry snapshot; computed vectors (same helpers, same
-/// wave table) for devices registered after it.
+/// the plan's registry snapshot; the appended extension lane (computed
+/// once, same helpers, same wave table) for devices registered after
+/// it.
 pub struct DeviceLanes<'a> {
-    gamma: Cow<'a, [f64]>,
-    wave: Cow<'a, [u64]>,
+    gamma: Lane<'a, f64>,
+    wave: Lane<'a, u64>,
     shape_idx: &'a [u32],
 }
 
@@ -211,10 +336,11 @@ impl DeviceLanes<'_> {
 /// Buffers are `clear()` + `resize()`d each sweep, so capacity is
 /// retained: after the first sweep of a given `(plan, dests)` shape,
 /// **steady-state sweeps perform zero heap allocation** (pinned by
-/// `rust/tests/batched_alloc.rs`; destinations registered after the
-/// plan's snapshot are the exception — their computed lanes go through
-/// the shared wave table, whose *misses* memoize). The engine pools one
-/// arena per thread ([`crate::engine::pool::with_scratch`]).
+/// `rust/tests/batched_alloc.rs`). Destinations registered after the
+/// plan's snapshot pay a one-time [`AnalyzedPlan::extend_device`]
+/// computation on first touch; after that their appended lane is read
+/// by `Arc` bump and the sweep stays allocation-free. The engine pools
+/// one arena per thread ([`crate::engine::pool::with_scratch`]).
 #[derive(Default)]
 pub struct EvalScratch {
     /// Unique destinations of the current sweep, first-occurrence order.
@@ -240,10 +366,9 @@ pub struct EvalScratch {
     pub(crate) mlp_hit: Vec<bool>,
     /// MLP fallback count per unique destination.
     pub(crate) fallbacks: Vec<usize>,
-    /// Computed-lane buffers for destinations registered after the
-    /// plan's snapshot (reused across sweeps like everything else).
-    pub(crate) lane_gamma: Vec<f64>,
-    pub(crate) lane_wave: Vec<u64>,
+    /// AMP-row staging buffer for destinations registered after the
+    /// plan's snapshot (the appended lane is copied in so the sweep can
+    /// borrow it; reused across sweeps like everything else).
     pub(crate) lane_amp: Vec<f64>,
     /// Ops in the last sweep's plan (row count of `acc`).
     pub(crate) n_ops: usize,
@@ -358,6 +483,198 @@ impl EvalScratch {
     }
 }
 
+/// The destination-independent prefix of a plan: one walk over the
+/// trace (kernel arena, launch-shape dedup, policy mask, MLP features).
+/// Shared by the serial build, the parallel build, and the store's
+/// restore path ([`AnalyzedPlan::from_parts`]) so the three cannot
+/// drift.
+struct PlanPrefix {
+    op_index: Vec<usize>,
+    op_name: Vec<String>,
+    op_short_name: Vec<&'static str>,
+    kern_start: Vec<u32>,
+    kern_fwd_end: Vec<u32>,
+    kern_end: Vec<u32>,
+    time_ms: Vec<f64>,
+    blocks: Vec<u64>,
+    shape_idx: Vec<u32>,
+    profiled: Vec<bool>,
+    intensity: Vec<f64>,
+    tensor_core: Vec<bool>,
+    shapes: Vec<LaunchConfig>,
+    mlp_groups: Vec<MlpGroup>,
+}
+
+fn plan_prefix(trace: &Trace, policy: &MetricsPolicy) -> PlanPrefix {
+    let n_ops = trace.ops.len();
+    let profiled_set = policy.profiled_kernels(trace);
+
+    let mut op_index = Vec::with_capacity(n_ops);
+    let mut op_name = Vec::with_capacity(n_ops);
+    let mut op_short_name = Vec::with_capacity(n_ops);
+    let mut kern_start = Vec::with_capacity(n_ops);
+    let mut kern_fwd_end = Vec::with_capacity(n_ops);
+    let mut kern_end = Vec::with_capacity(n_ops);
+
+    let mut time_ms = Vec::new();
+    let mut blocks = Vec::new();
+    let mut shape_idx: Vec<u32> = Vec::new();
+    let mut profiled: Vec<bool> = Vec::new();
+    let mut intensity: Vec<f64> = Vec::new();
+    let mut tensor_core: Vec<bool> = Vec::new();
+
+    // Launch-shape dedup: wave sizes depend only on this projection
+    // of the launch configuration (grid size excluded).
+    let mut shape_of: HashMap<(u32, u32, u32), u32> = HashMap::new();
+    let mut shapes: Vec<LaunchConfig> = Vec::new();
+
+    let mut mlp_items: BTreeMap<MlpOp, (Vec<usize>, Vec<Vec<f64>>)> = BTreeMap::new();
+
+    for (slot, t) in trace.ops.iter().enumerate() {
+        op_index.push(t.index);
+        op_name.push(t.op.name.clone());
+        op_short_name.push(t.op.kind.short_name());
+        kern_start.push(time_ms.len() as u32);
+        for (pass_idx, pass) in [&t.fwd, &t.bwd].into_iter().enumerate() {
+            for m in pass {
+                let launch = &m.kernel.launch;
+                let key = (
+                    launch.threads_per_block,
+                    launch.regs_per_thread,
+                    launch.smem_per_block,
+                );
+                let si = *shape_of.entry(key).or_insert_with(|| {
+                    shapes.push(*launch);
+                    (shapes.len() - 1) as u32
+                });
+                time_ms.push(m.time_ms);
+                blocks.push(launch.grid_blocks.max(1));
+                shape_idx.push(si);
+                profiled.push(
+                    profiled_set
+                        .as_ref()
+                        .map_or(true, |set| set.contains(&roofline::cache_key(&m.kernel))),
+                );
+                intensity.push(m.kernel.arith_intensity());
+                tensor_core.push(m.kernel.tensor_core_eligible);
+            }
+            if pass_idx == 0 {
+                kern_fwd_end.push(time_ms.len() as u32);
+            }
+        }
+        kern_end.push(time_ms.len() as u32);
+
+        if let Some((mlp_op, features)) = t.op.mlp_features() {
+            let entry = mlp_items.entry(mlp_op).or_default();
+            entry.0.push(slot);
+            entry.1.push(features);
+        }
+    }
+
+    let mlp_groups = mlp_items
+        .into_iter()
+        .map(|(op, (slots, features))| MlpGroup { op, slots, features })
+        .collect();
+
+    PlanPrefix {
+        op_index,
+        op_name,
+        op_short_name,
+        kern_start,
+        kern_fwd_end,
+        kern_end,
+        time_ms,
+        blocks,
+        shape_idx,
+        profiled,
+        intensity,
+        tensor_core,
+        shapes,
+        mlp_groups,
+    }
+}
+
+impl PlanPrefix {
+    fn lane_row(&self, spec: &GpuSpec) -> DeviceRow {
+        lane_row(
+            &self.shapes,
+            &self.intensity,
+            &self.profiled,
+            &self.time_ms,
+            &self.tensor_core,
+            &self.kern_start,
+            &self.kern_fwd_end,
+            &self.kern_end,
+            spec,
+        )
+    }
+
+    /// The per-kernel inputs a lane row needs, cloned so pool helpers
+    /// (`'static` jobs) can read them while the caller keeps the
+    /// originals for the final plan.
+    fn lane_inputs(&self) -> PlanPrefix {
+        PlanPrefix {
+            op_index: Vec::new(),
+            op_name: Vec::new(),
+            op_short_name: Vec::new(),
+            kern_start: self.kern_start.clone(),
+            kern_fwd_end: self.kern_fwd_end.clone(),
+            kern_end: self.kern_end.clone(),
+            time_ms: self.time_ms.clone(),
+            blocks: Vec::new(),
+            shape_idx: Vec::new(),
+            profiled: self.profiled.clone(),
+            intensity: self.intensity.clone(),
+            tensor_core: self.tensor_core.clone(),
+            shapes: self.shapes.clone(),
+            mlp_groups: Vec::new(),
+        }
+    }
+}
+
+/// The dense per-device tables of a plan — the expensive product of
+/// compilation, and exactly what the persistent store writes to disk.
+/// A restored plan reruns the cheap prefix walk from the decoded trace
+/// and installs these bit-preserved tables instead of recomputing them.
+pub(crate) struct DenseLanes {
+    pub(crate) n_devices: usize,
+    pub(crate) wave_origin: Vec<u64>,
+    pub(crate) wave_dest: Vec<u64>,
+    pub(crate) gamma: Vec<f64>,
+    pub(crate) amp_op_factor: Vec<f64>,
+}
+
+/// Work-claiming parallel fill of the per-device lane rows: an atomic
+/// cursor over device indices, helpers submitted with
+/// [`WorkerPool::try_execute`] (never blocking — a build running *on* a
+/// pool worker still makes progress because the caller always claims
+/// too), results sent back keyed by device index so assembly order is
+/// deterministic.
+struct LaneFanOut {
+    inputs: PlanPrefix,
+    devices: Vec<Device>,
+    next: AtomicUsize,
+    tx: mpsc::Sender<(usize, std::thread::Result<DeviceRow>)>,
+}
+
+impl LaneFanOut {
+    fn run(&self) {
+        loop {
+            let d = self.next.fetch_add(1, Ordering::Relaxed);
+            if d >= self.devices.len() {
+                break;
+            }
+            let spec = self.devices[d].spec();
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.inputs.lane_row(spec)
+            }));
+            if self.tx.send((d, result)).is_err() {
+                break;
+            }
+        }
+    }
+}
+
 impl AnalyzedPlan {
     /// Compile a tracked trace into a plan. `policy` is the metrics-
     /// availability policy of the predictor that will evaluate the plan
@@ -368,151 +685,182 @@ impl AnalyzedPlan {
     /// [`WaveTable`]: wave sizes for every `(launch shape, device)` pair
     /// are resolved in a single batched pass.
     pub fn build(trace: &Trace, policy: &MetricsPolicy) -> AnalyzedPlan {
-        let n_ops = trace.ops.len();
-        let profiled_set = policy.profiled_kernels(trace);
+        Self::build_with_pool(trace, policy, None).0
+    }
 
-        let mut op_index = Vec::with_capacity(n_ops);
-        let mut op_name = Vec::with_capacity(n_ops);
-        let mut op_short_name = Vec::with_capacity(n_ops);
-        let mut kern_start = Vec::with_capacity(n_ops);
-        let mut kern_fwd_end = Vec::with_capacity(n_ops);
-        let mut kern_end = Vec::with_capacity(n_ops);
+    /// [`AnalyzedPlan::build`] with the per-device lane rows (wave
+    /// sizes, γ, AMP factors — including the memoized [`WaveTable`]
+    /// batch fill) computed in parallel on the shared pool. Returns the
+    /// plan and the number of work-claimed lane chunks (one per
+    /// snapshot device; 0 when the build fell back to the serial path).
+    /// Bit-identical to the serial build: every row is produced by the
+    /// same `lane_row` helper and assembled in device-index order.
+    pub fn build_parallel(
+        trace: &Trace,
+        policy: &MetricsPolicy,
+        pool: &WorkerPool,
+    ) -> (AnalyzedPlan, u64) {
+        Self::build_with_pool(trace, policy, Some(pool))
+    }
 
-        let mut time_ms = Vec::new();
-        let mut blocks = Vec::new();
-        let mut shape_idx: Vec<u32> = Vec::new();
-        let mut profiled: Vec<bool> = Vec::new();
-        let mut intensity: Vec<f64> = Vec::new();
-        let mut tensor_core: Vec<bool> = Vec::new();
+    fn build_with_pool(
+        trace: &Trace,
+        policy: &MetricsPolicy,
+        pool: Option<&WorkerPool>,
+    ) -> (AnalyzedPlan, u64) {
+        let prefix = plan_prefix(trace, policy);
 
-        // Launch-shape dedup: wave sizes depend only on this projection
-        // of the launch configuration (grid size excluded).
-        let mut shape_of: HashMap<(u32, u32, u32), u32> = HashMap::new();
-        let mut shapes: Vec<LaunchConfig> = Vec::new();
-
-        let mut mlp_items: BTreeMap<MlpOp, (Vec<usize>, Vec<Vec<f64>>)> = BTreeMap::new();
-
-        for (slot, t) in trace.ops.iter().enumerate() {
-            op_index.push(t.index);
-            op_name.push(t.op.name.clone());
-            op_short_name.push(t.op.kind.short_name());
-            kern_start.push(time_ms.len() as u32);
-            for (pass_idx, pass) in [&t.fwd, &t.bwd].into_iter().enumerate() {
-                for m in pass {
-                    let launch = &m.kernel.launch;
-                    let key = (
-                        launch.threads_per_block,
-                        launch.regs_per_thread,
-                        launch.smem_per_block,
-                    );
-                    let si = *shape_of.entry(key).or_insert_with(|| {
-                        shapes.push(*launch);
-                        (shapes.len() - 1) as u32
-                    });
-                    time_ms.push(m.time_ms);
-                    blocks.push(launch.grid_blocks.max(1));
-                    shape_idx.push(si);
-                    profiled.push(
-                        profiled_set
-                            .as_ref()
-                            .map_or(true, |set| set.contains(&roofline::cache_key(&m.kernel))),
-                    );
-                    intensity.push(m.kernel.arith_intensity());
-                    tensor_core.push(m.kernel.tensor_core_eligible);
-                }
-                if pass_idx == 0 {
-                    kern_fwd_end.push(time_ms.len() as u32);
-                }
-            }
-            kern_end.push(time_ms.len() as u32);
-
-            if let Some((mlp_op, features)) = t.op.mlp_features() {
-                let entry = mlp_items.entry(mlp_op).or_default();
-                entry.0.push(slot);
-                entry.1.push(features);
-            }
-        }
-
-        let n_kernels = time_ms.len();
-        let n_shapes = shapes.len();
         // Snapshot the open-world registry: runtime-registered devices
         // get dense lanes in every plan built from here on.
         let devices = registry::all_devices();
         let n_devices = devices.len();
 
-        // Batched wave-size resolution: every (shape, device) pair, one
-        // pass, through the shared memo table (so the simulator and any
-        // concurrent engine still benefit from the same entries).
+        // Batched wave-size resolution for the origin, through the
+        // shared memo table (so the simulator and any concurrent engine
+        // still benefit from the same entries).
         let table = WaveTable::global();
         let origin_spec = trace.origin.spec();
-        let wave_origin: Vec<u64> = shapes
+        let wave_origin: Vec<u64> = prefix
+            .shapes
             .iter()
             .map(|s| table.wave_size(origin_spec, s).max(1))
             .collect();
-        let mut wave_dest = Vec::with_capacity(n_devices * n_shapes);
-        for dev in &devices {
-            let spec = dev.spec();
-            for s in &shapes {
-                wave_dest.push(table.wave_size(spec, s).max(1));
+
+        // Per-device lane rows: the raw γ per kernel feeds both the
+        // policy-masked γ table (γ = 1 fallback for unprofiled kernels —
+        // identical to the legacy per-destination selection) and the
+        // Daydream AMP factor per op (the time-weighted mean of
+        // per-kernel AMP factors, exactly as `predict::amp::amp_transform`
+        // computes it — the AMP transform always uses the raw γ, never
+        // the fallback). The same helpers serve the post-snapshot
+        // extension lanes, so no path can drift.
+        let (rows, chunks) = match pool {
+            Some(pool) if n_devices >= 2 => {
+                let (tx, rx) = mpsc::channel();
+                let shared = Arc::new(LaneFanOut {
+                    inputs: prefix.lane_inputs(),
+                    devices: devices.clone(),
+                    next: AtomicUsize::new(0),
+                    tx,
+                });
+                let helpers = pool.size().min(n_devices - 1);
+                for _ in 0..helpers {
+                    let state = Arc::clone(&shared);
+                    if pool.try_execute(move || state.run()).is_err() {
+                        break; // full queue: the caller claims the rest
+                    }
+                }
+                shared.run();
+                drop(shared);
+                let mut rows: Vec<Option<DeviceRow>> = (0..n_devices).map(|_| None).collect();
+                for _ in 0..n_devices {
+                    let (d, result) = rx.recv().expect("every claimed lane row reports");
+                    match result {
+                        Ok(row) => rows[d] = Some(row),
+                        Err(payload) => std::panic::resume_unwind(payload),
+                    }
+                }
+                let rows: Vec<DeviceRow> =
+                    rows.into_iter().map(|r| r.expect("lane row filled")).collect();
+                (rows, n_devices as u64)
             }
+            _ => {
+                let rows = devices.iter().map(|dev| prefix.lane_row(dev.spec())).collect();
+                (rows, 0)
+            }
+        };
+
+        let (nk, no, ns) = (
+            prefix.time_ms.len(),
+            prefix.op_index.len(),
+            prefix.shapes.len(),
+        );
+        let mut wave_dest = Vec::with_capacity(n_devices * ns);
+        let mut gamma = Vec::with_capacity(n_devices * nk);
+        let mut amp_op_factor = Vec::with_capacity(n_devices * no);
+        for row in rows {
+            wave_dest.extend(row.wave);
+            gamma.extend(row.gamma);
+            amp_op_factor.extend(row.amp);
         }
 
-        // Per-device tables, one roofline pass each: the raw γ per
-        // kernel feeds both the policy-masked γ table (γ = 1 fallback
-        // for unprofiled kernels — identical to the legacy
-        // per-destination selection) and the Daydream AMP factor per op
-        // (the time-weighted mean of per-kernel AMP factors, exactly as
-        // `predict::amp::amp_transform` computes it — the AMP transform
-        // always uses the raw γ, never the fallback). The same two
-        // helpers serve the post-snapshot computed lanes, so the dense
-        // and on-demand paths cannot drift.
-        let mut gamma = Vec::with_capacity(n_devices * n_kernels);
-        let mut amp_op_factor = Vec::with_capacity(n_devices * n_ops);
-        for dev in &devices {
-            let spec = dev.spec();
-            gamma_row_into(&intensity, &profiled, spec, &mut gamma);
-            amp_row_into(
-                &time_ms,
-                &intensity,
-                &tensor_core,
-                &kern_start,
-                &kern_fwd_end,
-                &kern_end,
-                spec,
-                &mut amp_op_factor,
-            );
-        }
+        let lanes = DenseLanes {
+            n_devices,
+            wave_origin,
+            wave_dest,
+            gamma,
+            amp_op_factor,
+        };
+        (Self::assemble(trace, prefix, lanes), chunks)
+    }
 
-        let mlp_groups = mlp_items
-            .into_iter()
-            .map(|(op, (slots, features))| MlpGroup { op, slots, features })
-            .collect();
+    /// Reassemble a plan from its decoded trace plus stored dense lane
+    /// tables — the persistent store's restore path. Reruns the same
+    /// prefix walk as [`AnalyzedPlan::build`]; the lanes are the only
+    /// part read from disk, installed as raw bit patterns, so a
+    /// restored plan is bit-identical to a freshly compiled one by
+    /// construction. Dimension mismatches (stale record, corrupt
+    /// length) are rejected.
+    pub(crate) fn from_parts(
+        trace: &Trace,
+        policy: &MetricsPolicy,
+        lanes: DenseLanes,
+    ) -> anyhow::Result<AnalyzedPlan> {
+        let prefix = plan_prefix(trace, policy);
+        let (nk, no, ns) = (
+            prefix.time_ms.len(),
+            prefix.op_index.len(),
+            prefix.shapes.len(),
+        );
+        anyhow::ensure!(
+            lanes.n_devices <= registry::device_count(),
+            "stored snapshot has {} devices, registry only {}",
+            lanes.n_devices,
+            registry::device_count()
+        );
+        anyhow::ensure!(lanes.wave_origin.len() == ns, "wave_origin length mismatch");
+        anyhow::ensure!(
+            lanes.wave_dest.len() == lanes.n_devices * ns,
+            "wave_dest length mismatch"
+        );
+        anyhow::ensure!(
+            lanes.gamma.len() == lanes.n_devices * nk,
+            "gamma length mismatch"
+        );
+        anyhow::ensure!(
+            lanes.amp_op_factor.len() == lanes.n_devices * no,
+            "amp factor length mismatch"
+        );
+        Ok(Self::assemble(trace, prefix, lanes))
+    }
 
+    fn assemble(trace: &Trace, prefix: PlanPrefix, lanes: DenseLanes) -> AnalyzedPlan {
         AnalyzedPlan {
             model: trace.model.clone(),
             batch_size: trace.batch_size,
             origin: trace.origin,
             precision: trace.precision,
             origin_run_time_ms: trace.run_time_ms(),
-            op_index,
-            op_name,
-            op_short_name,
-            kern_start,
-            kern_fwd_end,
-            kern_end,
-            time_ms,
-            blocks,
-            shape_idx,
-            intensity,
-            tensor_core,
-            profiled,
-            shapes,
-            wave_origin,
-            wave_dest,
-            n_devices,
-            gamma,
-            amp_op_factor,
-            mlp_groups,
+            op_index: prefix.op_index,
+            op_name: prefix.op_name,
+            op_short_name: prefix.op_short_name,
+            kern_start: prefix.kern_start,
+            kern_fwd_end: prefix.kern_fwd_end,
+            kern_end: prefix.kern_end,
+            time_ms: prefix.time_ms,
+            blocks: prefix.blocks,
+            shape_idx: prefix.shape_idx,
+            intensity: prefix.intensity,
+            tensor_core: prefix.tensor_core,
+            profiled: prefix.profiled,
+            shapes: prefix.shapes,
+            wave_origin: lanes.wave_origin,
+            wave_dest: lanes.wave_dest,
+            n_devices: lanes.n_devices,
+            gamma: lanes.gamma,
+            amp_op_factor: lanes.amp_op_factor,
+            mlp_groups: prefix.mlp_groups,
+            ext: RwLock::new(Vec::new()),
         }
     }
 
@@ -570,12 +918,15 @@ impl AnalyzedPlan {
     }
 
     /// Wave size of a kernel's launch shape on `dest` (precomputed for
-    /// snapshot devices; resolved through the shared wave table for
-    /// devices registered after the snapshot).
+    /// snapshot devices; read from the appended extension lane — or,
+    /// before any extension, resolved through the shared wave table —
+    /// for devices registered after the snapshot).
     pub fn wave_dest(&self, kernel: usize, dest: Device) -> u64 {
         let s = self.shape_idx[kernel] as usize;
         if dest.index() < self.n_devices {
             self.wave_dest[dest.index() * self.n_shapes() + s]
+        } else if let Some(lane) = self.ext_lane(dest) {
+            lane.wave[s]
         } else {
             WaveTable::global().wave_size(dest.spec(), &self.shapes[s]).max(1)
         }
@@ -585,6 +936,8 @@ impl AnalyzedPlan {
     pub fn gamma(&self, kernel: usize, dest: Device) -> f64 {
         if dest.index() < self.n_devices {
             self.gamma[dest.index() * self.n_kernels() + kernel]
+        } else if let Some(lane) = self.ext_lane(dest) {
+            lane.gamma[kernel]
         } else if self.profiled[kernel] {
             roofline::gamma(self.intensity[kernel], dest.spec())
         } else {
@@ -592,55 +945,119 @@ impl AnalyzedPlan {
         }
     }
 
+    /// Slot of `dest` in the extension-lane table, if it lies beyond
+    /// the dense snapshot.
+    fn ext_slot(&self, dest: Device) -> Option<usize> {
+        dest.index().checked_sub(self.n_devices)
+    }
+
+    /// The appended extension lane for a post-snapshot `dest`, if one
+    /// has been computed. Two `Arc` bumps under a read lock.
+    fn ext_lane(&self, dest: Device) -> Option<ExtLane> {
+        let i = self.ext_slot(dest)?;
+        self.ext.read().unwrap().get(i).and_then(|l| l.clone())
+    }
+
+    /// Append the computed lane for a device registered after this
+    /// plan's snapshot, once: γ per kernel, wave size per shape, AMP
+    /// factor per op — the same `lane_row` helper as the dense build,
+    /// so the extension is bit-identical to a plan rebuilt after the
+    /// registration. Returns `true` if this call did the work; `false`
+    /// for snapshot devices and already-extended lanes (idempotent —
+    /// concurrent extenders compute identical rows and the first insert
+    /// wins). The engine calls this from `register_device` so existing
+    /// cached plans grow incrementally instead of recomputing lanes
+    /// inside every sweep.
+    pub fn extend_device(&self, dest: Device) -> bool {
+        let Some(i) = self.ext_slot(dest) else {
+            return false;
+        };
+        if self.ext.read().unwrap().get(i).is_some_and(|l| l.is_some()) {
+            return false;
+        }
+        // Compute outside the lock: the row is deterministic, so a
+        // concurrent winner stored the same bits.
+        let row = lane_row(
+            &self.shapes,
+            &self.intensity,
+            &self.profiled,
+            &self.time_ms,
+            &self.tensor_core,
+            &self.kern_start,
+            &self.kern_fwd_end,
+            &self.kern_end,
+            dest.spec(),
+        );
+        let lane = ExtLane {
+            gamma: row.gamma.into(),
+            wave: row.wave.into(),
+            amp: row.amp.into(),
+        };
+        let mut ext = self.ext.write().unwrap();
+        if ext.len() <= i {
+            ext.resize(i + 1, None);
+        }
+        if ext[i].is_none() {
+            ext[i] = Some(lane);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The extension lane for `dest`, computing and appending it on
+    /// first touch.
+    fn ext_lane_or_extend(&self, dest: Device) -> ExtLane {
+        if let Some(lane) = self.ext_lane(dest) {
+            return lane;
+        }
+        self.extend_device(dest);
+        self.ext_lane(dest).expect("lane appended by extend_device")
+    }
+
     /// One destination's γ/wave lanes, borrowed from the dense tables
-    /// when `dest` is inside the snapshot, computed once per call when
-    /// it was registered later (bit-identical either way). The
-    /// evaluators fetch this once and index it per kernel, keeping the
-    /// hot loop branch- and lock-free for snapshot devices.
+    /// when `dest` is inside the snapshot, served from the appended
+    /// extension lane (computed once on first touch) when it was
+    /// registered later — bit-identical either way. The evaluators
+    /// fetch this once and index it per kernel, keeping the hot loop
+    /// branch- and lock-free for snapshot devices.
     pub fn device_lanes(&self, dest: Device) -> DeviceLanes<'_> {
         let (nk, ns) = (self.n_kernels(), self.n_shapes());
         let d = dest.index();
         if d < self.n_devices {
             DeviceLanes {
-                gamma: Cow::Borrowed(&self.gamma[d * nk..(d + 1) * nk]),
-                wave: Cow::Borrowed(&self.wave_dest[d * ns..(d + 1) * ns]),
+                gamma: Lane::Dense(&self.gamma[d * nk..(d + 1) * nk]),
+                wave: Lane::Dense(&self.wave_dest[d * ns..(d + 1) * ns]),
                 shape_idx: &self.shape_idx,
             }
         } else {
-            let spec = dest.spec();
-            let mut gamma = Vec::with_capacity(nk);
-            gamma_row_into(&self.intensity, &self.profiled, spec, &mut gamma);
-            let table = WaveTable::global();
-            let wave = self.shapes.iter().map(|s| table.wave_size(spec, s).max(1)).collect();
+            let lane = self.ext_lane_or_extend(dest);
             DeviceLanes {
-                gamma: Cow::Owned(gamma),
-                wave: Cow::Owned(wave),
+                gamma: Lane::Ext(lane.gamma),
+                wave: Lane::Ext(lane.wave),
                 shape_idx: &self.shape_idx,
             }
         }
     }
 
-    /// The Daydream AMP factor per op on `dest` (precomputed or, for a
-    /// post-snapshot device, recomputed with the build helpers).
-    pub fn amp_factors(&self, dest: Device) -> Cow<'_, [f64]> {
+    /// The Daydream AMP factor per op on `dest` (the dense table for
+    /// snapshot devices, the appended extension lane otherwise).
+    pub fn amp_factors(&self, dest: Device) -> AmpFactors<'_> {
         let d = dest.index();
         let no = self.n_ops();
         if d < self.n_devices {
-            Cow::Borrowed(&self.amp_op_factor[d * no..(d + 1) * no])
+            AmpFactors::Dense(&self.amp_op_factor[d * no..(d + 1) * no])
         } else {
-            let mut row = Vec::with_capacity(no);
-            amp_row_into(
-                &self.time_ms,
-                &self.intensity,
-                &self.tensor_core,
-                &self.kern_start,
-                &self.kern_fwd_end,
-                &self.kern_end,
-                dest.spec(),
-                &mut row,
-            );
-            Cow::Owned(row)
+            AmpFactors::Ext(self.ext_lane_or_extend(dest).amp)
         }
+    }
+
+    /// The dense per-device tables, exposed for the persistent store's
+    /// encoder (everything else about a record is re-derived from the
+    /// trace at load time): `(wave_origin, wave_dest, gamma,
+    /// amp_op_factor)`.
+    pub(crate) fn lane_tables(&self) -> (&[u64], &[u64], &[f64], &[f64]) {
+        (&self.wave_origin, &self.wave_dest, &self.gamma, &self.amp_op_factor)
     }
 
     pub fn mlp_groups(&self) -> &[MlpGroup] {
@@ -671,8 +1088,6 @@ impl AnalyzedPlan {
             acc,
             mlp_hit,
             fallbacks,
-            lane_gamma,
-            lane_wave,
             n_ops,
             grew,
             ..
@@ -703,25 +1118,19 @@ impl AnalyzedPlan {
             bw[di] = origin_spec.achieved_bw_bytes() / spec.achieved_bw_bytes();
             clock[di] = origin_spec.boost_clock_mhz / spec.boost_clock_mhz;
             let d = dest.index();
+            let ext;
             let (g_row, w_row): (&[f64], &[u64]) = if d < self.n_devices {
                 (
                     &self.gamma[d * nk..(d + 1) * nk],
                     &self.wave_dest[d * ns..(d + 1) * ns],
                 )
             } else {
-                // Post-snapshot destination: compute its lanes with the
-                // same helpers the dense build uses (bit-identical),
-                // into buffers reused across sweeps. This is the one
-                // path that may touch the shared wave table.
-                if lane_gamma.capacity() < nk || lane_wave.capacity() < ns {
-                    *grew = true;
-                }
-                lane_gamma.clear();
-                gamma_row_into(&self.intensity, &self.profiled, spec, lane_gamma);
-                lane_wave.clear();
-                let table = WaveTable::global();
-                lane_wave.extend(self.shapes.iter().map(|s| table.wave_size(spec, s).max(1)));
-                (&lane_gamma[..], &lane_wave[..])
+                // Post-snapshot destination: served from the appended
+                // extension lane. First touch computes it (same helpers
+                // as the dense build — bit-identical); steady-state
+                // sweeps just `Arc`-bump it and stay allocation-free.
+                ext = self.ext_lane_or_extend(dest);
+                (&ext.gamma[..], &ext.wave[..])
             };
             for k in 0..nk {
                 let s = self.shape_idx[k] as usize;
@@ -737,25 +1146,18 @@ impl AnalyzedPlan {
     }
 
     /// One destination's Daydream AMP factor row — borrowed from the
-    /// dense table for snapshot devices, recomputed into `buf` (reused
-    /// across sweeps) for post-snapshot ones.
+    /// dense table for snapshot devices, staged from the appended
+    /// extension lane into `buf` (reused across sweeps, a straight
+    /// copy) for post-snapshot ones.
     pub(crate) fn amp_row<'a>(&'a self, dest: Device, buf: &'a mut Vec<f64>) -> &'a [f64] {
         let d = dest.index();
         let no = self.n_ops();
         if d < self.n_devices {
             &self.amp_op_factor[d * no..(d + 1) * no]
         } else {
+            let lane = self.ext_lane_or_extend(dest);
             buf.clear();
-            amp_row_into(
-                &self.time_ms,
-                &self.intensity,
-                &self.tensor_core,
-                &self.kern_start,
-                &self.kern_fwd_end,
-                &self.kern_end,
-                dest.spec(),
-                buf,
-            );
+            buf.extend_from_slice(&lane.amp);
             buf
         }
     }
@@ -962,6 +1364,89 @@ mod tests {
             amp_fresh.run_time_ms().to_bits(),
             "AMP through computed lanes must match the dense path"
         );
+    }
+
+    #[test]
+    fn parallel_build_is_bit_identical_to_serial() {
+        let trace = toy_trace(Device::V100);
+        let policy = MetricsPolicy::default();
+        let serial = AnalyzedPlan::build(&trace, &policy);
+        let pool = WorkerPool::new(4);
+        let (parallel, chunks) = AnalyzedPlan::build_parallel(&trace, &policy, &pool);
+        // The registry can grow between the two builds (tests run
+        // concurrently); chunks = the parallel snapshot's device count.
+        assert_eq!(chunks as usize, parallel.n_devices());
+        assert!(chunks >= 2);
+        assert_eq!(parallel.n_kernels(), serial.n_kernels());
+        assert_eq!(parallel.n_shapes(), serial.n_shapes());
+        for k in 0..serial.n_kernels() {
+            assert_eq!(parallel.wave_origin(k), serial.wave_origin(k));
+            for dev in ALL_DEVICES {
+                assert_eq!(
+                    parallel.gamma(k, dev).to_bits(),
+                    serial.gamma(k, dev).to_bits(),
+                    "{dev} γ kernel {k}"
+                );
+                assert_eq!(parallel.wave_dest(k, dev), serial.wave_dest(k, dev));
+            }
+        }
+        for dev in ALL_DEVICES {
+            assert_eq!(parallel.amp_factors(dev).as_ref(), serial.amp_factors(dev).as_ref());
+        }
+    }
+
+    #[test]
+    fn extend_device_appends_a_lane_once() {
+        use crate::device::registry::{self as reg, NewDevice};
+
+        let trace = toy_trace(Device::T4);
+        let plan = AnalyzedPlan::build(&trace, &MetricsPolicy::All);
+        let d = reg::register(&NewDevice::new("sim-plan-ext", 40, 1400.0, 350.0, 10.0, true))
+            .unwrap();
+        assert!(d.index() >= plan.n_devices());
+        assert!(!plan.extend_device(Device::T4), "snapshot devices have dense lanes");
+        assert!(plan.extend_device(d), "first extension computes the lane");
+        assert!(!plan.extend_device(d), "second extension is a no-op");
+
+        let fresh = AnalyzedPlan::build(&trace, &MetricsPolicy::All);
+        for k in 0..plan.n_kernels() {
+            assert_eq!(plan.gamma(k, d).to_bits(), fresh.gamma(k, d).to_bits());
+            assert_eq!(plan.wave_dest(k, d), fresh.wave_dest(k, d));
+        }
+        assert_eq!(plan.amp_factors(d).as_ref(), fresh.amp_factors(d).as_ref());
+    }
+
+    #[test]
+    fn restored_lanes_reassemble_bit_identically() {
+        let trace = toy_trace(Device::Rtx2070);
+        let policy = MetricsPolicy::default();
+        let built = AnalyzedPlan::build(&trace, &policy);
+        let (wo, wd, g, a) = built.lane_tables();
+        let lanes = DenseLanes {
+            n_devices: built.n_devices(),
+            wave_origin: wo.to_vec(),
+            wave_dest: wd.to_vec(),
+            gamma: g.to_vec(),
+            amp_op_factor: a.to_vec(),
+        };
+        let restored = AnalyzedPlan::from_parts(&trace, &policy, lanes).unwrap();
+        assert_eq!(restored.n_devices(), built.n_devices());
+        for k in 0..built.n_kernels() {
+            assert_eq!(restored.wave_origin(k), built.wave_origin(k));
+            for dev in ALL_DEVICES {
+                assert_eq!(restored.gamma(k, dev).to_bits(), built.gamma(k, dev).to_bits());
+                assert_eq!(restored.wave_dest(k, dev), built.wave_dest(k, dev));
+            }
+        }
+        // Dimension mismatches are rejected, not silently mis-indexed.
+        let bad = DenseLanes {
+            n_devices: built.n_devices(),
+            wave_origin: Vec::new(),
+            wave_dest: wd.to_vec(),
+            gamma: g.to_vec(),
+            amp_op_factor: a.to_vec(),
+        };
+        assert!(AnalyzedPlan::from_parts(&trace, &policy, bad).is_err());
     }
 
     #[test]

@@ -11,6 +11,7 @@ use crate::device::{Device, LaunchConfig};
 use crate::lowering::{Kernel, Precision};
 use crate::opgraph::{Op, OpKind};
 use crate::tracker::{KernelMeasurement, Trace, TrackedOp};
+use crate::util::binio::{Reader, Writer};
 use crate::util::json::{self, Json};
 use crate::Result;
 
@@ -149,6 +150,89 @@ impl Trace {
             precision,
             ops,
         })
+    }
+
+    /// Encode the trace into the compact binary layout used by the
+    /// persistent plan store. Field-for-field equivalent to the JSON
+    /// form, but `f64`s are stored as raw bit patterns so kernel
+    /// timings round-trip exactly.
+    pub(crate) fn encode_binary(&self, w: &mut Writer) {
+        let kernel = |w: &mut Writer, m: &KernelMeasurement| {
+            w.str(&m.kernel.name);
+            w.u64(m.kernel.launch.grid_blocks);
+            w.u32(m.kernel.launch.threads_per_block);
+            w.u32(m.kernel.launch.regs_per_thread);
+            w.u32(m.kernel.launch.smem_per_block);
+            w.f64(m.kernel.flops);
+            w.f64(m.kernel.dram_bytes);
+            w.bool(m.kernel.tensor_core_eligible);
+            w.f64(m.time_ms);
+        };
+        w.str(&self.model);
+        w.u64(self.batch_size as u64);
+        w.str(self.origin.id());
+        w.u8(match self.precision {
+            Precision::Fp32 => 0,
+            Precision::Amp => 1,
+        });
+        w.u32(self.ops.len() as u32);
+        for op in &self.ops {
+            w.u64(op.index as u64);
+            w.str(&op.op.name);
+            w.str(&serialize_kind(&op.op.kind));
+            w.u64_slice(&op.op.input.iter().map(|&d| d as u64).collect::<Vec<_>>());
+            for kernels in [&op.fwd, &op.bwd] {
+                w.u32(kernels.len() as u32);
+                for m in kernels {
+                    kernel(w, m);
+                }
+            }
+        }
+    }
+
+    /// Decode a trace written by [`Trace::encode_binary`]. Any
+    /// truncation or field corruption is an `Err`, never a panic.
+    pub(crate) fn decode_binary(r: &mut Reader<'_>) -> Result<Trace> {
+        let kernel = |r: &mut Reader<'_>| -> Result<KernelMeasurement> {
+            Ok(KernelMeasurement {
+                kernel: Kernel {
+                    name: r.str()?,
+                    launch: LaunchConfig::new(r.u64()?, r.u32()?, r.u32()?, r.u32()?),
+                    flops: r.f64()?,
+                    dram_bytes: r.f64()?,
+                    tensor_core_eligible: r.bool()?,
+                },
+                time_ms: r.f64()?,
+            })
+        };
+        let model = r.str()?;
+        let batch_size = r.u64()? as usize;
+        let origin = r.str()?;
+        let origin = Device::parse(&origin)
+            .ok_or_else(|| anyhow::anyhow!("unknown origin device {origin:?} in stored trace"))?;
+        let precision = match r.u8()? {
+            0 => Precision::Fp32,
+            1 => Precision::Amp,
+            b => anyhow::bail!("unknown precision byte {b}"),
+        };
+        let n_ops = r.u32()? as usize;
+        let mut ops = Vec::with_capacity(n_ops);
+        for _ in 0..n_ops {
+            let index = r.u64()? as usize;
+            let name = r.str()?;
+            let kind = parse_kind(&r.str()?)?;
+            let input: Vec<usize> = r.u64_vec()?.into_iter().map(|d| d as usize).collect();
+            let mut fwd_bwd = [Vec::new(), Vec::new()];
+            for kernels in &mut fwd_bwd {
+                let n = r.u32()? as usize;
+                for _ in 0..n {
+                    kernels.push(kernel(r)?);
+                }
+            }
+            let [fwd, bwd] = fwd_bwd;
+            ops.push(TrackedOp { index, op: Op::new(&name, kind, input), fwd, bwd });
+        }
+        Ok(Trace { model, batch_size, origin, precision, ops })
     }
 
     /// Write the trace to a file.
@@ -324,6 +408,38 @@ mod tests {
         assert!(Trace::from_json("not json").is_err());
         assert!(parse_kind("frobnicate(1,2)").is_err());
         assert!(parse_kind("conv2d(1)").is_err());
+    }
+
+    #[test]
+    fn binary_roundtrip_is_bit_exact() {
+        for model in ["resnet50", "gnmt"] {
+            let graph = crate::models::by_name(model, 16).unwrap();
+            let trace = OperationTracker::new(Device::T4)
+                .with_precision(Precision::Amp)
+                .track(&graph);
+            let mut w = Writer::new();
+            trace.encode_binary(&mut w);
+            let bytes = w.into_bytes();
+            let back = Trace::decode_binary(&mut Reader::new(&bytes)).unwrap();
+            assert_eq!(back.model, trace.model);
+            assert_eq!(back.batch_size, trace.batch_size);
+            assert_eq!(back.origin, trace.origin);
+            assert_eq!(back.precision, trace.precision);
+            assert_eq!(back.ops.len(), trace.ops.len());
+            for (a, b) in trace.ops.iter().zip(&back.ops) {
+                assert_eq!(a.index, b.index);
+                assert_eq!(a.op.mlp_features(), b.op.mlp_features());
+                for (ka, kb) in a.fwd.iter().chain(&a.bwd).zip(b.fwd.iter().chain(&b.bwd)) {
+                    assert_eq!(ka.kernel.name, kb.kernel.name);
+                    assert_eq!(ka.time_ms.to_bits(), kb.time_ms.to_bits());
+                    assert_eq!(ka.kernel.flops.to_bits(), kb.kernel.flops.to_bits());
+                }
+            }
+            // Truncated buffers must fail cleanly at every length.
+            for cut in [0, 1, bytes.len() / 2, bytes.len() - 1] {
+                assert!(Trace::decode_binary(&mut Reader::new(&bytes[..cut])).is_err());
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Minimal little-endian binary reader/writer for the persistent plan
+//! store (`engine::store`).
+//!
+//! The store's promise is *bit*-preservation: an `f64` lane value must
+//! round-trip to the identical bit pattern, which JSON cannot guarantee
+//! (and parses far too slowly for the warm-restore budget). This module
+//! writes raw LE bytes with length-prefixed strings and slices, and
+//! reads them back with hard bounds checks — a truncated or corrupt
+//! buffer yields an `Err`, never a panic or an unbounded allocation.
+
+use anyhow::{bail, ensure, Result};
+
+/// Append-only little-endian byte writer.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Raw byte append (no length prefix) — for fixed-size framing
+    /// like the store's record magic.
+    pub fn raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `f64` as its raw bit pattern (exact round-trip, NaN included).
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// UTF-8 string, `u32` byte-length prefixed.
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// `u64` slice, `u32` count prefixed, raw LE elements.
+    pub fn u64_slice(&mut self, xs: &[u64]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.u64(x);
+        }
+    }
+
+    /// `f64` slice, `u32` count prefixed, raw bit-pattern elements.
+    pub fn f64_slice(&mut self, xs: &[f64]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.f64(x);
+        }
+    }
+}
+
+/// Bounds-checked little-endian reader over a byte slice.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.remaining() >= n, "truncated: need {n} bytes, have {}", self.remaining());
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("invalid bool byte {b}"),
+        }
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A length-prefixed count of `elem_size`-byte elements, validated
+    /// against the bytes actually remaining — a bit-flipped length
+    /// cannot trigger a huge allocation.
+    fn count(&mut self, elem_size: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        ensure!(
+            n.saturating_mul(elem_size) <= self.remaining(),
+            "corrupt length {n} exceeds remaining {} bytes",
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.count(1)?;
+        Ok(std::str::from_utf8(self.take(n)?)?.to_string())
+    }
+
+    pub fn u64_vec(&mut self) -> Result<Vec<u64>> {
+        let n = self.count(8)?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    pub fn f64_vec(&mut self) -> Result<Vec<f64>> {
+        let n = self.count(8)?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_every_type() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.bool(true);
+        w.bool(false);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 3);
+        w.f64(-0.0);
+        w.f64(f64::NAN);
+        w.str("habitat");
+        w.str("");
+        w.u64_slice(&[1, 2, 3]);
+        w.f64_slice(&[1.5, -2.25]);
+        let bytes = w.into_bytes();
+
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert!(r.bool().unwrap());
+        assert!(!r.bool().unwrap());
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.f64().unwrap().is_nan());
+        assert_eq!(r.str().unwrap(), "habitat");
+        assert_eq!(r.str().unwrap(), "");
+        assert_eq!(r.u64_vec().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.f64_vec().unwrap(), vec![1.5, -2.25]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn truncation_and_corruption_error_out() {
+        let mut w = Writer::new();
+        w.u64_slice(&[1, 2, 3, 4]);
+        let bytes = w.into_bytes();
+        // Truncated mid-slice.
+        assert!(Reader::new(&bytes[..bytes.len() - 1]).u64_vec().is_err());
+        // A length field claiming far more elements than bytes remain
+        // must be rejected before allocating.
+        let mut huge = bytes.clone();
+        huge[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Reader::new(&huge).u64_vec().is_err());
+        // Bad bool byte.
+        assert!(Reader::new(&[9]).bool().is_err());
+        // Invalid UTF-8 in a string.
+        let mut sw = Writer::new();
+        sw.u32(2);
+        sw.u8(0xFF);
+        sw.u8(0xFE);
+        assert!(Reader::new(&sw.into_bytes()).str().is_err());
+    }
+}

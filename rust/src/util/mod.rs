@@ -1,6 +1,8 @@
-//! Small shared utilities: deterministic RNG, statistics, CSV I/O.
+//! Small shared utilities: deterministic RNG, statistics, CSV and
+//! binary I/O.
 
 pub mod bench;
+pub mod binio;
 pub mod csv;
 pub mod json;
 pub mod rng;

@@ -211,6 +211,72 @@ fn batched_evaluation_covers_post_snapshot_registered_devices() {
 }
 
 #[test]
+fn restored_plans_are_bit_identical_across_the_zoo() {
+    // The persistent plan store's referee: compile + persist the whole
+    // five-model zoo, reboot a fresh engine from disk, and compare the
+    // restored plans' predictions bit-for-bit against the live compile
+    // on every golden pair and both precisions. A restore that reruns
+    // any arithmetic differently — lane decode, γ resolution, AMP
+    // factors — fails here before it can drift a served prediction.
+    let dir = std::env::temp_dir().join(format!("habitat-golden-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let compiled = PredictionEngine::wave_only();
+    {
+        let seeded = PredictionEngine::wave_only().with_store(&dir).unwrap();
+        for model in models::MODEL_NAMES {
+            let batch = golden_batch(model);
+            for (origin, _) in PAIRS {
+                seeded.analyzed(model, batch, origin).unwrap();
+                compiled.analyzed(model, batch, origin).unwrap();
+            }
+        }
+        // Drop drains the write-behind queue: every plan is on disk.
+    }
+
+    let restored = PredictionEngine::wave_only().with_store(&dir).unwrap();
+    let stats = restored.stats();
+    assert_eq!(
+        stats.warm_restores,
+        (models::MODEL_NAMES.len() * PAIRS.len()) as u64,
+        "every persisted zoo plan must warm-restore"
+    );
+    assert_eq!(stats.plan_builds, 0, "restore must not recompile");
+
+    for model in models::MODEL_NAMES {
+        let batch = golden_batch(model);
+        for (origin, dest) in PAIRS {
+            let live = compiled.analyzed(model, batch, origin).unwrap();
+            let warm = restored.analyzed(model, batch, origin).unwrap();
+            for (precision, label) in PRECISIONS {
+                let live_pred = compiled.evaluate(&live.plan, dest, precision);
+                let warm_pred = restored.evaluate(&warm.plan, dest, precision);
+                assert_eq!(live_pred.ops.len(), warm_pred.ops.len());
+                for (a, b) in live_pred.ops.iter().zip(&warm_pred.ops) {
+                    assert_eq!(
+                        a.time_ms.to_bits(),
+                        b.time_ms.to_bits(),
+                        "{model} bs={batch} {origin}→{dest} {label} op {}: live {} vs restored {}",
+                        a.name,
+                        a.time_ms,
+                        b.time_ms
+                    );
+                }
+                assert_eq!(
+                    live_pred.run_time_ms().to_bits(),
+                    warm_pred.run_time_ms().to_bits(),
+                    "{model} bs={batch} {origin}→{dest} {label}: live {} vs restored {}",
+                    live_pred.run_time_ms(),
+                    warm_pred.run_time_ms()
+                );
+            }
+        }
+    }
+    assert_eq!(restored.stats().trace_misses, 0, "restored zoo served without retracking");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn golden_bit_patterns_are_pinned() {
     let engine = PredictionEngine::wave_only();
     let mut lines = Vec::new();

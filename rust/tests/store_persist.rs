@@ -1,0 +1,181 @@
+//! Durability suite for the persistent plan store (`engine::store`).
+//!
+//! Every test here attacks the on-disk format the way a real deployment
+//! would: truncation, bit flips, a version bump, and a crash mid-write.
+//! The store's contract is *reject-and-rebuild*, never serve-corrupt:
+//! any damaged record must load as `None`, the engine must fall back to
+//! a fresh compile transparently, and the rebuilt record must land back
+//! on disk (write-behind, drained when the engine drops).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use habitat::device::Device;
+use habitat::engine::store::{PlanStore, StoredKind, STORE_FORMAT_VERSION};
+use habitat::engine::{PredictionEngine, TraceKey};
+use habitat::predict::MetricsPolicy;
+use habitat::Precision;
+
+/// Per-test scratch directory, unique across concurrently running test
+/// binaries and pre-cleaned so a crashed previous run can't leak state.
+fn store_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("habitat-storetest-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Compile + persist one zoo entry, drain the write-behind queue (by
+/// dropping the engine), and return the record's id and file path.
+fn seed_record(dir: &Path) -> (String, PathBuf) {
+    {
+        let engine = PredictionEngine::wave_only().with_store(dir).expect("store opens");
+        engine.analyzed("mlp", 16, Device::T4).expect("mlp tracks");
+    }
+    let store = PlanStore::open(dir, &MetricsPolicy::default()).expect("store reopens");
+    let ids = store.ids();
+    assert_eq!(ids.len(), 1, "exactly one record persisted after drop-drain");
+    let id = ids[0].clone();
+    let path = dir.join(format!("{id}.plan"));
+    assert!(path.exists());
+    (id, path)
+}
+
+fn key() -> TraceKey {
+    ("mlp".to_string(), 16, Device::T4, Precision::Fp32)
+}
+
+#[test]
+fn truncated_record_is_rejected_and_rebuilt() {
+    let dir = store_dir("truncate");
+    let (id, path) = seed_record(&dir);
+    let bytes = fs::read(&path).unwrap();
+    fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+
+    // Direct load refuses the damaged record.
+    let store = PlanStore::open(&dir, &MetricsPolicy::default()).unwrap();
+    assert!(store.load(&id).is_none(), "truncated record must not load");
+    assert!(store.lookup(&key()).is_none(), "rejected record must not be indexed");
+
+    // The engine restores nothing, rebuilds transparently, and the
+    // rebuilt plan (same trace content → same id) overwrites the
+    // damaged file on the write-behind path.
+    let reference = {
+        let engine = PredictionEngine::wave_only().with_store(&dir).unwrap();
+        assert_eq!(engine.stats().warm_restores, 0);
+        let entry = engine.analyzed("mlp", 16, Device::T4).unwrap();
+        let stats = engine.stats();
+        assert_eq!(stats.trace_misses, 1, "rebuild pays one tracking pass");
+        assert_eq!(stats.store_misses, 1);
+        assert_eq!(stats.plan_builds, 1);
+        engine.evaluate(&entry.plan, Device::V100, Precision::Fp32).run_time_ms()
+    };
+
+    let healed = PlanStore::open(&dir, &MetricsPolicy::default()).unwrap();
+    let (kind, entry) = healed.load(&id).expect("rebuilt record readable again");
+    assert_eq!(kind, StoredKind::Zoo);
+    let wave = habitat::HybridPredictor::wave_only();
+    assert_eq!(
+        wave.evaluate(&entry.plan, Device::V100).run_time_ms().to_bits(),
+        reference.to_bits(),
+        "healed record evaluates bit-identically"
+    );
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bit_flipped_payload_is_rejected() {
+    let dir = store_dir("bitflip");
+    let (id, path) = seed_record(&dir);
+    let mut bytes = fs::read(&path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x01; // deep in the lane tables, past the header
+    fs::write(&path, &bytes).unwrap();
+
+    let store = PlanStore::open(&dir, &MetricsPolicy::default()).unwrap();
+    assert!(store.load(&id).is_none(), "checksum must catch a single flipped bit");
+
+    let engine = PredictionEngine::wave_only().with_store(&dir).unwrap();
+    assert_eq!(engine.stats().warm_restores, 0);
+    engine.analyzed("mlp", 16, Device::T4).expect("rebuild succeeds");
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn version_mismatch_is_rejected() {
+    let dir = store_dir("version");
+    let (id, path) = seed_record(&dir);
+    let mut bytes = fs::read(&path).unwrap();
+    // Record layout: 8-byte magic, then the little-endian u32 format
+    // version. A future format must never parse as the current one.
+    bytes[8..12].copy_from_slice(&(STORE_FORMAT_VERSION + 1).to_le_bytes());
+    fs::write(&path, &bytes).unwrap();
+
+    let store = PlanStore::open(&dir, &MetricsPolicy::default()).unwrap();
+    assert!(store.load(&id).is_none(), "future-version record must not load");
+
+    let engine = PredictionEngine::wave_only().with_store(&dir).unwrap();
+    assert_eq!(engine.stats().warm_restores, 0, "version mismatch is a clean miss");
+    engine.analyzed("mlp", 16, Device::T4).expect("rebuild succeeds");
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn renamed_record_fails_the_id_check() {
+    // A record copied under the wrong id (or an id collision attempt)
+    // is internally consistent — magic, version, checksum all pass —
+    // but its content hash disagrees with its filename.
+    let dir = store_dir("rename");
+    let (_, path) = seed_record(&dir);
+    let forged = dir.join("tr-00000000deadbeef.plan");
+    fs::copy(&path, &forged).unwrap();
+
+    let store = PlanStore::open(&dir, &MetricsPolicy::default()).unwrap();
+    assert!(store.load("tr-00000000deadbeef").is_none(), "forged id must not load");
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn kill_mid_write_restart_recovers() {
+    let dir = store_dir("killmid");
+    let (id, path) = seed_record(&dir);
+
+    // Simulate a crash mid-write: a half-written temp file next to the
+    // good record (saves go to `<id>.plan.tmp-<pid>-<seq>` and rename
+    // into place, so a kill can only ever strand the temp).
+    let bytes = fs::read(&path).unwrap();
+    let debris = dir.join(format!("{id}.plan.tmp-999-7"));
+    fs::write(&debris, &bytes[..bytes.len() / 3]).unwrap();
+    let unrelated = dir.join("tr-1111111111111111.plan.tmp-999-8");
+    fs::write(&unrelated, b"\x00\x01garbage").unwrap();
+
+    // Restart: open() sweeps the debris, and the intact record still
+    // warm-restores.
+    let engine = PredictionEngine::wave_only().with_store(&dir).unwrap();
+    assert!(!debris.exists(), "stranded temp file swept on open");
+    assert!(!unrelated.exists(), "all temp debris swept on open");
+    assert_eq!(engine.stats().warm_restores, 1);
+    let entry = engine.analyzed("mlp", 16, Device::T4).unwrap();
+    let stats = engine.stats();
+    assert_eq!(stats.trace_misses, 0, "restored entry serves without retracking");
+    assert_eq!(stats.trace_hits, 1);
+    engine.evaluate(&entry.plan, Device::V100, Precision::Fp32);
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn reopen_indexes_zoo_records_for_claim_bypass() {
+    // `lookup` is how the engine's build path skips recompilation after
+    // an LRU eviction: the index must survive a reopen (rebuilt lazily
+    // from disk on load).
+    let dir = store_dir("reindex");
+    let (id, _) = seed_record(&dir);
+    let store = PlanStore::open(&dir, &MetricsPolicy::default()).unwrap();
+    let (kind, _) = store.load(&id).expect("intact record loads");
+    assert_eq!(kind, StoredKind::Zoo);
+    assert_eq!(store.lookup(&key()).as_deref(), Some(id.as_str()));
+    assert!(
+        store.lookup(&("mlp".to_string(), 99, Device::T4, Precision::Fp32)).is_none(),
+        "different batch size is a different key"
+    );
+    fs::remove_dir_all(&dir).ok();
+}

@@ -8,17 +8,27 @@ The harness in `rust/src/util/bench.rs` prints one line per benchmark:
 This script collects those lines (from a file or stdin), writes them to
 a JSON baseline (default `BENCH_predictor.json`) so the perf trajectory
 has machine-readable data points PR over PR, and computes the headline
-speedups the batched evaluator is accountable for:
+speedups the perf work is accountable for, e.g.:
 
     scalar_vs_batched_60_dests = plan/evaluate_60_dests / plan/evaluate_batch_60_dests
+    plan_build_serial_vs_parallel = plan/build_serial / plan/build_parallel
+    recompile_vs_warm_restore_zoo = engine/recompile_zoo / engine/warm_restore_zoo
 
-Pass `--min-speedup 2.0` to turn that ratio into a CI gate: exit
-non-zero when the batched sweep is less than 2x faster than 60 scalar
-`evaluate` calls (the acceptance floor for the kernel-major refactor).
+Two gating knobs turn ratios into CI gates (exit non-zero on a miss):
+
+  --min-speedup 2.0          the historical batched-evaluator gate
+                             (scalar_vs_batched_60_dests >= 2.0)
+  --gate LABEL:MIN           repeatable; gate any speedup label, e.g.
+                             --gate plan_build_serial_vs_parallel:2.0
+                             --gate recompile_vs_warm_restore_zoo:10.0
+
+The output is stable (benches sorted by name, keys sorted) so a run's
+JSON is committable as a baseline and diffs PR over PR are meaningful.
 
 Usage:
   cargo bench --bench predictor | tee bench.txt
-  python3 scripts/bench_to_json.py bench.txt --out BENCH_predictor.json --min-speedup 2.0
+  python3 scripts/bench_to_json.py bench.txt --out BENCH_predictor.json \
+      --min-speedup 2.0 --gate plan_build_serial_vs_parallel:2.0
 """
 
 import argparse
@@ -49,9 +59,19 @@ SPEEDUPS = [
         "plan/evaluate_batch_60_dests/resnet50",
         "plan/evaluate_batch_sweep_60_dests/resnet50",
     ),
+    (
+        "plan_build_serial_vs_parallel",
+        "plan/build_serial/resnet50",
+        "plan/build_parallel/resnet50",
+    ),
+    (
+        "recompile_vs_warm_restore_zoo",
+        "engine/recompile_zoo",
+        "engine/warm_restore_zoo",
+    ),
 ]
 
-# The ratio --min-speedup gates on.
+# The ratio --min-speedup gates on (kept for CI-invocation stability).
 GATED_SPEEDUP = "scalar_vs_batched_60_dests"
 
 
@@ -69,6 +89,9 @@ def parse(lines):
                     "iters": int(m.group("n")),
                 }
             )
+    # Stable order regardless of harness print order, so baselines diff
+    # cleanly PR over PR.
+    benches.sort(key=lambda b: b["name"])
     return benches
 
 
@@ -81,6 +104,16 @@ def speedups(benches):
     return out
 
 
+def parse_gate(spec):
+    label, sep, floor = spec.rpartition(":")
+    if not sep or not label:
+        raise argparse.ArgumentTypeError(f"--gate wants LABEL:MIN, got {spec!r}")
+    try:
+        return label, float(floor)
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(f"--gate {spec!r}: {e}") from e
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("input", nargs="?", help="bench output file (default: stdin)")
@@ -90,6 +123,14 @@ def main():
         type=float,
         default=None,
         help=f"fail unless {GATED_SPEEDUP} is at least this ratio",
+    )
+    ap.add_argument(
+        "--gate",
+        type=parse_gate,
+        action="append",
+        default=[],
+        metavar="LABEL:MIN",
+        help="fail unless speedup LABEL is at least MIN (repeatable)",
     )
     args = ap.parse_args()
 
@@ -111,29 +152,32 @@ def main():
         "speedups": speedups(benches),
     }
     with open(args.out, "w", encoding="utf-8") as f:
-        json.dump(doc, f, indent=2, sort_keys=False)
+        json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"bench_to_json: wrote {len(benches)} benches to {args.out}")
-    for label, ratio in doc["speedups"].items():
+    for label, ratio in sorted(doc["speedups"].items()):
         print(f"  {label}: {ratio}x")
 
+    gates = list(args.gate)
     if args.min_speedup is not None:
-        got = doc["speedups"].get(GATED_SPEEDUP)
+        gates.append((GATED_SPEEDUP, args.min_speedup))
+    failed = False
+    for label, floor in gates:
+        got = doc["speedups"].get(label)
         if got is None:
             print(
-                f"bench_to_json: {GATED_SPEEDUP} not computable "
+                f"bench_to_json: {label} not computable "
                 "(missing bench lines) — failing the gate",
                 file=sys.stderr,
             )
-            return 1
-        if got < args.min_speedup:
+            failed = True
+        elif got < floor:
             print(
-                f"bench_to_json: {GATED_SPEEDUP} = {got}x is below the "
-                f"--min-speedup {args.min_speedup}x floor",
+                f"bench_to_json: {label} = {got}x is below the {floor}x floor",
                 file=sys.stderr,
             )
-            return 1
-    return 0
+            failed = True
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

@@ -17,11 +17,24 @@ Checks, in order:
   5. malformed lines produce the exact expected error shapes and do not
      kill the connection.
 
+With `--store DIR` the server runs against the persistent plan store,
+and the script boots it TWICE: the first boot runs the full session
+(and, when the store directory started empty, asserts the cold-path
+counters), then — after the write-behind persistence has landed — a
+second boot must take the warm-restore path: the v2 stats op reports
+warm_restores >= 1, the restored plan answers the same prediction
+bit-for-bit, and no retracking happens. When DIR already holds records
+(e.g. restored from a CI cache of a previous workflow run), even the
+first boot warm-restores and the cold-only assertions are skipped.
+
 Exit code 0 = all green. Any mismatch prints a diff-style report and
 exits 1.
 """
 
+import argparse
+import glob
 import json
+import os
 import socket
 import subprocess
 import sys
@@ -29,6 +42,7 @@ import time
 
 HOST, PORT = "127.0.0.1", 7797
 FAILURES = []
+BUILTINS = ["P4000", "P100", "V100", "RTX2070", "RTX2080Ti", "T4"]
 
 
 def check(name, cond, detail=""):
@@ -42,44 +56,38 @@ def expect_eq(name, got, want):
     check(name, got == want, f"got {got!r}, want {want!r}")
 
 
-def main():
-    server = subprocess.Popen(
-        ["target/release/habitat", "serve", "--addr", f"{HOST}:{PORT}"],
-        stdout=subprocess.PIPE,
-        stderr=subprocess.STDOUT,
-    )
-    try:
-        for _ in range(100):
-            try:
-                probe = socket.create_connection((HOST, PORT), timeout=1)
-                probe.close()
-                break
-            except OSError:
-                if server.poll() is not None:
-                    out = server.stdout.read().decode()
-                    print(f"server exited early:\n{out}")
-                    sys.exit(1)
-                time.sleep(0.1)
-        else:
-            print("server never came up")
-            sys.exit(1)
-        run_session()
-    finally:
-        server.terminate()
+def boot_server(port, store):
+    argv = ["target/release/habitat", "serve", "--addr", f"{HOST}:{port}"]
+    if store:
+        argv += ["--store", store]
+    server = subprocess.Popen(argv, stdout=subprocess.PIPE, stderr=subprocess.STDOUT)
+    for _ in range(100):
         try:
-            server.wait(timeout=10)
-        except subprocess.TimeoutExpired:
-            server.kill()
-            server.wait(timeout=10)
+            probe = socket.create_connection((HOST, port), timeout=1)
+            probe.close()
+            return server
+        except OSError:
+            if server.poll() is not None:
+                out = server.stdout.read().decode()
+                print(f"server exited early:\n{out}")
+                sys.exit(1)
+            time.sleep(0.1)
+    print("server never came up")
+    server.kill()
+    sys.exit(1)
 
-    if FAILURES:
-        print(f"\nsmoke FAILED: {len(FAILURES)} check(s): {FAILURES}")
-        sys.exit(1)
-    print("\nsmoke OK")
+
+def stop_server(server):
+    server.terminate()
+    try:
+        server.wait(timeout=10)
+    except subprocess.TimeoutExpired:
+        server.kill()
+        server.wait(timeout=10)
 
 
-def run_session():
-    sock = socket.create_connection((HOST, PORT), timeout=120)
+def connect(port):
+    sock = socket.create_connection((HOST, port), timeout=120)
     rfile = sock.makefile("r", encoding="utf-8")
 
     def rpc(obj_or_line):
@@ -88,6 +96,70 @@ def run_session():
         reply = rfile.readline()
         assert reply, f"connection closed after: {line[:120]}"
         return json.loads(reply)
+
+    return sock, rpc
+
+
+def plan_count(store):
+    return len(glob.glob(os.path.join(store, "*.plan")))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--store", default=None, help="plan-store dir: enables the two-boot warm-restore checks")
+    args = ap.parse_args()
+
+    # Cold means the first boot cannot warm-restore anything: either no
+    # store at all, or a store directory with no persisted plans yet.
+    cold = args.store is None or plan_count(args.store) == 0
+
+    server = boot_server(PORT, args.store)
+    try:
+        v1_predict = run_session(PORT, cold=cold, store=args.store is not None)
+    finally:
+        if args.store:
+            # The engine persists write-behind on its worker pool; give
+            # the three records (two zoo plans + one upload) time to
+            # land before we pull the plug (SIGTERM skips the drain).
+            deadline = time.time() + 30
+            while plan_count(args.store) < 3 and time.time() < deadline:
+                time.sleep(0.2)
+        stop_server(server)
+
+    if args.store:
+        check("first boot persisted plan records", plan_count(args.store) >= 3, f"{plan_count(args.store)} *.plan files in {args.store}")
+        run_warm_boot_checks(PORT + 1, args.store, v1_predict)
+
+    if FAILURES:
+        print(f"\nsmoke FAILED: {len(FAILURES)} check(s): {FAILURES}")
+        sys.exit(1)
+    print("\nsmoke OK")
+
+
+def run_warm_boot_checks(port, store, v1_predict_ref):
+    print(f"\n-- second boot against {store} (warm-restore path) --")
+    server = boot_server(port, store)
+    try:
+        sock, rpc = connect(port)
+        boot_stats = rpc({"v": 2, "op": "stats"})
+        check(
+            "second boot warm-restored persisted plans",
+            boot_stats.get("warm_restores", 0) >= 3,
+            str(boot_stats),
+        )
+        expect_eq("warm boot did no retracking at restore", boot_stats.get("trace_misses"), 0)
+        pred = rpc({"model": "resnet50", "batch": 32, "origin": "rtx2070", "dest": "v100"})
+        expect_eq("restored plan answers bit-identically across boots", pred, v1_predict_ref)
+        after = rpc({"v": 2, "op": "stats"})
+        expect_eq("restored prediction skipped the tracking pipeline", after.get("trace_misses"), 0)
+        expect_eq("restored prediction compiled no plan", after.get("plan_builds"), 0)
+        sock.close()
+    finally:
+        stop_server(server)
+
+
+def run_session(port, cold=True, store=False):
+    sock, rpc = connect(port)
 
     # --- 1. v1 baseline + v2 payload parity ----------------------------
     v1_predict = rpc({"model": "resnet50", "batch": 32, "origin": "rtx2070", "dest": "v100"})
@@ -101,11 +173,10 @@ def run_session():
 
     v1_rank = rpc({"rank": True, "model": "resnet50", "batch": 32, "origin": "rtx2070"})
     base_names = [r["dest"] for r in v1_rank.get("ranking", [])]
-    expect_eq(
-        "v1 default rank covers the built-ins",
-        sorted(base_names),
-        sorted(["P4000", "P100", "V100", "RTX2070", "RTX2080Ti", "T4"]),
-    )
+    # On a warm boot the store's device log has already replayed
+    # smoke-gpu into the registry, so the default rank includes it.
+    want_base = BUILTINS if cold else BUILTINS + ["smoke-gpu"]
+    expect_eq("v1 default rank covers the expected registry", sorted(base_names), sorted(want_base))
     v2_rank = rpc({"v": 2, "op": "rank", "model": "resnet50", "batch": 32, "origin": "rtx2070"})
     expect_eq("v2 rank payload == v1 rank", v2_rank.get("ranking"), v1_rank.get("ranking"))
 
@@ -128,7 +199,11 @@ def run_session():
     rank2 = rpc({"rank": True, "model": "resnet50", "batch": 32, "origin": "rtx2070"})
     names2 = [r["dest"] for r in rank2["ranking"]]
     check("registered device appears in the next rank", "smoke-gpu" in names2, str(names2))
-    expect_eq("other devices unchanged", sorted(n for n in names2 if n != "smoke-gpu"), sorted(base_names))
+    expect_eq(
+        "other devices unchanged",
+        sorted(n for n in names2 if n != "smoke-gpu"),
+        sorted(n for n in base_names if n != "smoke-gpu"),
+    )
     entry = next(r for r in rank2["ranking"] if r["dest"] == "smoke-gpu")
     want_cnt = entry["throughput"] / 0.05
     check(
@@ -214,9 +289,24 @@ def run_session():
         sorted(["trace_hits", "trace_misses", "trace_entries", "plan_builds", "wave_hits", "wave_misses", "workers"]),
     )
     v2_stats = rpc({"v": 2, "op": "stats"})
-    expect_eq("stats counts the upload", v2_stats.get("trace_uploads"), 1)
     expect_eq("stats sees the registered device", v2_stats.get("devices"), 7)
-    check("stats counted tracking work", v2_stats.get("trace_misses", 0) >= 2, str(v2_stats))
+    for field in ("store_hits", "store_misses", "warm_restores", "parallel_build_chunks"):
+        check(f"v2 stats carries {field}", field in v2_stats, str(v2_stats))
+    if cold:
+        # A warm boot restores the upload from the store (no insert) and
+        # serves the session from restored plans (no tracking misses),
+        # so these counters only have fixed values on a cold boot.
+        expect_eq("stats counts the upload", v2_stats.get("trace_uploads"), 1)
+        check("stats counted tracking work", v2_stats.get("trace_misses", 0) >= 2, str(v2_stats))
+        if store:
+            expect_eq("cold boot had nothing to warm-restore", v2_stats.get("warm_restores"), 0)
+            check("cold boot recorded store misses", v2_stats.get("store_misses", 0) >= 2, str(v2_stats))
+    else:
+        check("warm boot restored persisted plans", v2_stats.get("warm_restores", 0) >= 3, str(v2_stats))
+        # The upload is usually deduped against the restored record; a
+        # store cached from an older commit may hold a trace the current
+        # simulator no longer produces, in which case it re-uploads once.
+        check("warm boot upload count sane", v2_stats.get("trace_uploads", 2) <= 1, str(v2_stats))
 
     # --- 5. malformed input, exact expected error shapes ---------------
     bad = rpc("this is not json")
@@ -251,6 +341,7 @@ def run_session():
     expect_eq("connection survives; replies still deterministic", final, v1_predict)
 
     sock.close()
+    return v1_predict
 
 
 if __name__ == "__main__":
