@@ -146,6 +146,30 @@ fn main() {
             .entries
             .len()
     });
+    // --- cluster: the full topology × world sweep ------------------------
+    // 2 topologies × 9 world sizes up to 256 ranks, all composed on a
+    // single cached plan evaluation — the collective model is a cheap
+    // analytic epilogue, so this should sit close to `single_dest`.
+    let cluster_topologies = [habitat::comm::Topology::DGX, habitat::comm::Topology::CLOUD];
+    let cluster_worlds = [1usize, 2, 4, 8, 16, 32, 64, 128, 256];
+    let cluster_params = habitat::comm::ClusterParams::default();
+    bench("cluster/sweep_256_ranks", || {
+        engine
+            .predict_cluster(
+                "resnet50",
+                32,
+                Device::Rtx2070,
+                Device::V100,
+                Precision::Fp32,
+                &cluster_topologies,
+                &cluster_worlds,
+                &cluster_params,
+            )
+            .unwrap()
+            .configs
+            .len()
+    });
+
     // --- engine: contended access (the sharding win) ---------------------
     // 16 threads hammering the cache. Under the old single-mutex engine
     // the hit path serialized globally; with the sharded RwLock cache the

@@ -80,6 +80,50 @@ impl ThroughputMatrix {
             matrix,
         }
     }
+
+    /// [`ThroughputMatrix::build`] for *gang* placements: every cell is
+    /// the **global** samples/s of a `world`-replica data-parallel gang
+    /// of that device on `topology`, composed with the topology-aware
+    /// collective model ([`crate::comm::cluster::compose`]). `world = 1`
+    /// degenerates to `build` exactly. Each job is still one
+    /// kernel-major batched sweep; the collective composition is a
+    /// per-cell epilogue on the swept compute times.
+    pub fn build_cluster(
+        predictor: &HybridPredictor,
+        traces: &[(Job, Trace)],
+        devices: &[Device],
+        topology: crate::comm::Topology,
+        world: usize,
+        params: &crate::comm::ClusterParams,
+    ) -> Self {
+        let mut matrix = Vec::with_capacity(traces.len());
+        let mut scratch = EvalScratch::new();
+        for (_, trace) in traces {
+            let plan = crate::plan::AnalyzedPlan::build(trace, &predictor.metrics_policy);
+            let comm = crate::comm::trace_comm(trace);
+            predictor.evaluate_batch_times(&plan, devices, Precision::Fp32, &mut scratch);
+            let row: Vec<f64> = (0..devices.len())
+                .map(|i| {
+                    let compute_ms = scratch.run_time_ms(i);
+                    crate::comm::cluster::compose(
+                        compute_ms,
+                        plan.batch_size,
+                        &comm,
+                        topology,
+                        world,
+                        params,
+                    )
+                    .throughput
+                })
+                .collect();
+            matrix.push(row);
+        }
+        ThroughputMatrix {
+            jobs: traces.iter().map(|(j, _)| j.clone()).collect(),
+            devices: devices.to_vec(),
+            matrix,
+        }
+    }
 }
 
 /// Greedy max-normalized-throughput scheduler (the Gavel "max sum of
@@ -173,6 +217,73 @@ mod tests {
                     m.matrix[j][d]
                 );
             }
+        }
+    }
+
+    #[test]
+    fn cluster_matrix_world_one_is_bit_identical_to_single_gpu_build() {
+        let predictor = HybridPredictor::wave_only();
+        let traces = vec![job("a", "mlp", 64), job("b", "dcgan", 64)];
+        let devices = [Device::V100, Device::T4];
+        let single = ThroughputMatrix::build(&predictor, &traces, &devices);
+        let gang = ThroughputMatrix::build_cluster(
+            &predictor,
+            &traces,
+            &devices,
+            crate::comm::Topology::DGX,
+            1,
+            &crate::comm::ClusterParams::default(),
+        );
+        for (srow, grow) in single.matrix.iter().zip(&gang.matrix) {
+            for (s, g) in srow.iter().zip(grow) {
+                assert_eq!(s.to_bits(), g.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_matrix_gangs_scale_sublinearly_but_upward() {
+        let predictor = HybridPredictor::wave_only();
+        let traces = vec![job("a", "resnet50", 32)];
+        let devices = [Device::V100];
+        let params = crate::comm::ClusterParams::default();
+        let t1 = ThroughputMatrix::build_cluster(
+            &predictor, &traces, &devices, crate::comm::Topology::DGX, 1, &params,
+        )
+        .matrix[0][0];
+        let t8 = ThroughputMatrix::build_cluster(
+            &predictor, &traces, &devices, crate::comm::Topology::DGX, 8, &params,
+        )
+        .matrix[0][0];
+        assert!(t8 > t1, "an 8-gang should beat one GPU: {t8} vs {t1}");
+        assert!(t8 <= 8.0 * t1 + 1e-9, "no superlinear scaling: {t8} vs 8×{t1}");
+        // A slower interconnect can only hurt.
+        let t8_cloud = ThroughputMatrix::build_cluster(
+            &predictor, &traces, &devices, crate::comm::Topology::CLOUD, 8, &params,
+        )
+        .matrix[0][0];
+        assert!(t8_cloud <= t8 + 1e-9, "cloud gang beat NVLink gang: {t8_cloud} vs {t8}");
+    }
+
+    #[test]
+    fn schedule_accepts_a_cluster_matrix() {
+        // Gang-level placement: cells are global gang throughputs, the
+        // greedy objective is unchanged.
+        let predictor = HybridPredictor::wave_only();
+        let traces = vec![job("a", "mlp", 64), job("b", "dcgan", 64)];
+        let m = ThroughputMatrix::build_cluster(
+            &predictor,
+            &traces,
+            &[Device::V100, Device::T4],
+            crate::comm::Topology::DGX,
+            2,
+            &crate::comm::ClusterParams::default(),
+        );
+        let inv: Inventory = [(Device::V100, 1), (Device::T4, 1)].into();
+        let placements = schedule(&m, &inv);
+        assert_eq!(placements.len(), 2);
+        for p in &placements {
+            assert!(p.throughput > 0.0 && p.normalized > 0.0 && p.normalized <= 1.0 + 1e-12);
         }
     }
 

@@ -1,0 +1,239 @@
+//! The per-step cluster composition: Habitat compute time + bucketed
+//! allreduce overlapped with backward.
+//!
+//! This is the topology-aware successor to
+//! [`crate::predict::distributed`]'s flat composition. The overlap
+//! arithmetic is identical (`exposed = max(0, comm − overlap ·
+//! bwd_fraction · compute)`), but the communication term is the
+//! hierarchical [`TopologySpec::allreduce_ms`] applied per DDP gradient
+//! bucket instead of one flat ring over a single link. At `world == 1`
+//! communication is zero and `iter_ms` reproduces the single-GPU
+//! compute prediction bit-for-bit.
+
+use crate::tracker::Trace;
+
+use super::topology::Topology;
+
+/// Tunables of the data-parallel composition (the topology itself is a
+/// separate argument, so one `ClusterParams` serves a whole sweep).
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterParams {
+    /// Fraction of the backward pass that gradient communication can
+    /// overlap with (bucketed all-reduce à la PyTorch DDP). 0 = fully
+    /// exposed, 1 = fully overlappable.
+    pub overlap: f64,
+    /// DDP gradient-bucket size in bytes; the allreduce is charged per
+    /// bucket. `<= 0` disables bucketing (one flat allreduce).
+    pub bucket_bytes: f64,
+}
+
+impl Default for ClusterParams {
+    fn default() -> Self {
+        // PyTorch DDP's default bucket_cap_mb = 25 MiB; overlap matches
+        // the legacy DataParallelConfig default.
+        ClusterParams { overlap: 0.7, bucket_bytes: 25.0 * 1024.0 * 1024.0 }
+    }
+}
+
+/// The destination-independent communication inputs derived from the
+/// origin trace, hoisted so a whole topology × world sweep pays them
+/// once.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceComm {
+    /// FP32 gradient volume: 4 bytes per trainable parameter.
+    pub grad_bytes: f64,
+    /// Backward share of the iteration (from the origin trace's fwd/bwd
+    /// split, assumed stable across devices).
+    pub bwd_fraction: f64,
+}
+
+/// Derive the communication inputs from an origin trace. Exact same
+/// arithmetic the legacy `predict::distributed` path used (and now
+/// delegates to).
+pub fn trace_comm(trace: &Trace) -> TraceComm {
+    let grad_bytes: f64 = trace
+        .ops
+        .iter()
+        .map(|o| o.op.kind.parameter_count() as f64 * 4.0)
+        .sum();
+    let (fwd, bwd): (f64, f64) = trace
+        .ops
+        .iter()
+        .fold((0.0, 0.0), |(f, b), o| (f + o.fwd_ms(), b + o.bwd_ms()));
+    let bwd_fraction = if fwd + bwd > 0.0 { bwd / (fwd + bwd) } else { 0.5 };
+    TraceComm {
+        grad_bytes,
+        bwd_fraction,
+    }
+}
+
+/// One (topology, world) cell of a cluster prediction.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterPrediction {
+    /// Number of replicas (GPUs).
+    pub world: usize,
+    /// Per-replica compute time (Habitat's single-GPU prediction), ms.
+    pub compute_ms: f64,
+    /// Total collective time (bucketed hierarchical allreduce), ms.
+    pub comm_ms: f64,
+    /// Collective time not hidden behind the backward pass, ms.
+    pub exposed_ms: f64,
+    /// Predicted distributed iteration time, ms.
+    pub iter_ms: f64,
+    /// Global throughput, samples/s (world × per-replica batch).
+    pub throughput: f64,
+    /// Scaling efficiency vs `world ×` the single-GPU throughput.
+    pub efficiency: f64,
+}
+
+/// Total allreduce time for `grad_bytes` charged per DDP bucket.
+pub fn bucketed_allreduce_ms(
+    topology: Topology,
+    world: usize,
+    grad_bytes: f64,
+    bucket_bytes: f64,
+) -> f64 {
+    if world <= 1 || grad_bytes <= 0.0 {
+        return 0.0;
+    }
+    let spec = topology.spec();
+    if bucket_bytes <= 0.0 || grad_bytes <= bucket_bytes {
+        return spec.allreduce_ms(grad_bytes, world);
+    }
+    let full = (grad_bytes / bucket_bytes).floor();
+    let rem = grad_bytes - full * bucket_bytes;
+    let mut total = full * spec.allreduce_ms(bucket_bytes, world);
+    if rem > 0.0 {
+        total += spec.allreduce_ms(rem, world);
+    }
+    total
+}
+
+/// Compose one destination's compute time with the cluster collective
+/// model. `compute_ms` is the (destination-GPU) single-replica
+/// prediction for the per-replica batch `batch_size`; `comm` comes from
+/// [`trace_comm`] on the origin trace.
+pub fn compose(
+    compute_ms: f64,
+    batch_size: usize,
+    comm: &TraceComm,
+    topology: Topology,
+    world: usize,
+    params: &ClusterParams,
+) -> ClusterPrediction {
+    let comm_ms = bucketed_allreduce_ms(topology, world, comm.grad_bytes, params.bucket_bytes);
+    let overlappable = params.overlap.clamp(0.0, 1.0) * comm.bwd_fraction * compute_ms;
+    let exposed_ms = (comm_ms - overlappable).max(0.0);
+
+    let iter_ms = compute_ms + exposed_ms;
+    let single_throughput = batch_size as f64 / (compute_ms / 1e3);
+    let throughput = world as f64 * batch_size as f64 / (iter_ms / 1e3);
+    ClusterPrediction {
+        world,
+        compute_ms,
+        comm_ms,
+        exposed_ms,
+        iter_ms,
+        throughput,
+        efficiency: throughput / (world as f64 * single_throughput),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::predict::HybridPredictor;
+    use crate::tracker::OperationTracker;
+
+    fn comm_for(model: &str, batch: usize) -> (TraceComm, f64) {
+        let graph = crate::models::by_name(model, batch).unwrap();
+        let trace = OperationTracker::new(Device::Rtx2070).track(&graph);
+        let pred = HybridPredictor::wave_only().predict(&trace, Device::V100);
+        (trace_comm(&trace), pred.run_time_ms())
+    }
+
+    #[test]
+    fn world_one_reproduces_the_compute_prediction_bit_for_bit() {
+        let (comm, compute_ms) = comm_for("resnet50", 32);
+        for t in [Topology::DGX, Topology::CLOUD] {
+            let p = compose(compute_ms, 32, &comm, t, 1, &ClusterParams::default());
+            assert_eq!(p.comm_ms, 0.0);
+            assert_eq!(p.exposed_ms, 0.0);
+            assert_eq!(p.iter_ms.to_bits(), compute_ms.to_bits());
+            assert!((p.efficiency - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn exposed_time_is_never_negative_and_efficiency_never_exceeds_one() {
+        let (comm, compute_ms) = comm_for("gnmt", 32);
+        for t in [Topology::DGX, Topology::CLOUD] {
+            for world in [1usize, 2, 4, 8, 16, 64, 256] {
+                for overlap in [0.0, 0.5, 1.0, 7.0, -3.0] {
+                    let params = ClusterParams { overlap, ..Default::default() };
+                    let p = compose(compute_ms, 32, &comm, t, world, &params);
+                    assert!(p.exposed_ms >= 0.0);
+                    assert!(p.iter_ms >= p.compute_ms);
+                    assert!(p.efficiency > 0.0 && p.efficiency <= 1.0 + 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn efficiency_decreases_with_world_size() {
+        let (comm, compute_ms) = comm_for("resnet50", 32);
+        for t in [Topology::DGX, Topology::CLOUD] {
+            let mut prev = 1.0 + 1e-9;
+            for world in [1usize, 2, 4, 8] {
+                let p = compose(compute_ms, 32, &comm, t, world, &ClusterParams::default());
+                assert!(p.efficiency <= prev + 1e-9, "{t} world {world}: {}", p.efficiency);
+                prev = p.efficiency;
+            }
+        }
+    }
+
+    #[test]
+    fn bucketing_matches_the_bucket_sum() {
+        let topo = Topology::CLOUD;
+        let spec = topo.spec();
+        let bucket = 25.0 * 1024.0 * 1024.0;
+        let grad = 2.5 * bucket; // two full buckets + a half
+        let expect = 2.0 * spec.allreduce_ms(bucket, 8) + spec.allreduce_ms(0.5 * bucket, 8);
+        assert_eq!(bucketed_allreduce_ms(topo, 8, grad, bucket).to_bits(), expect.to_bits());
+        // Disabled bucketing = one flat shot.
+        assert_eq!(
+            bucketed_allreduce_ms(topo, 8, grad, 0.0).to_bits(),
+            spec.allreduce_ms(grad, 8).to_bits()
+        );
+    }
+
+    #[test]
+    fn dgx_scales_better_than_cloud() {
+        let (comm, compute_ms) = comm_for("gnmt", 32);
+        for world in [8usize, 64, 256] {
+            let dgx = compose(compute_ms, 32, &comm, Topology::DGX, world, &ClusterParams::default());
+            let cloud =
+                compose(compute_ms, 32, &comm, Topology::CLOUD, world, &ClusterParams::default());
+            assert!(dgx.efficiency > cloud.efficiency, "world {world}");
+            assert!(dgx.iter_ms < cloud.iter_ms, "world {world}");
+        }
+    }
+
+    #[test]
+    fn trace_comm_counts_fp32_gradients() {
+        let graph = crate::models::by_name("resnet50", 32).unwrap();
+        let trace = OperationTracker::new(Device::Rtx2070).track(&graph);
+        let comm = trace_comm(&trace);
+        let params: u64 = trace.ops.iter().map(|o| o.op.kind.parameter_count()).sum();
+        assert_eq!(comm.grad_bytes.to_bits(), trace
+            .ops
+            .iter()
+            .map(|o| o.op.kind.parameter_count() as f64 * 4.0)
+            .sum::<f64>()
+            .to_bits());
+        assert!(params > 10_000_000, "resnet50 has >10M parameters");
+        assert!(comm.bwd_fraction > 0.0 && comm.bwd_fraction < 1.0);
+    }
+}

@@ -1,0 +1,228 @@
+//! Analytic cost functions for the standard collectives.
+//!
+//! All functions take the message size in bytes, the participant count
+//! `world`, and a [`Link`] whose spec supplies the per-hop effective
+//! bandwidth (bytes/s) and per-step launch latency (ms). They return
+//! milliseconds, and all return `0.0` for `world <= 1` — a collective
+//! over one rank is a no-op.
+//!
+//! The ring allreduce formula is the one every data-parallel
+//! performance study uses (`2·(n−1)/n · bytes/BW + 2·(n−1)·latency`),
+//! and its float-op order is kept identical to the legacy
+//! `predict::distributed::ring_allreduce_ms` so seed links reproduce
+//! the historical predictions bit-for-bit.
+
+use super::Link;
+
+/// The collective kinds the cost model (and the workload export) knows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Collective {
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    AllToAll,
+}
+
+impl Collective {
+    /// The COMM_OPS wire spelling (`ALLREDUCE`, `ALLGATHER`, …).
+    pub fn wire_name(self) -> &'static str {
+        match self {
+            Collective::AllReduce => "ALLREDUCE",
+            Collective::AllGather => "ALLGATHER",
+            Collective::ReduceScatter => "REDUCESCATTER",
+            Collective::AllToAll => "ALLTOALL",
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<Collective> {
+        match name {
+            "ALLREDUCE" => Some(Collective::AllReduce),
+            "ALLGATHER" => Some(Collective::AllGather),
+            "REDUCESCATTER" => Some(Collective::ReduceScatter),
+            "ALLTOALL" => Some(Collective::AllToAll),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Collective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.wire_name())
+    }
+}
+
+/// Ring all-reduce: `2·(n−1)/n · bytes/BW + 2·(n−1)·latency`. The
+/// float-op order matches the legacy constant-based implementation
+/// exactly (pinned by a bit-identity test in `predict::distributed`).
+pub fn ring_allreduce_ms(bytes: f64, world: usize, link: Link) -> f64 {
+    let s = link.spec();
+    ring_allreduce_ms_raw(bytes, world, s.bandwidth_bytes(), s.step_latency_ms)
+}
+
+/// [`ring_allreduce_ms`] over explicit per-hop parameters (bytes/s and
+/// ms) — the compatibility path for `Interconnect::Custom` bandwidths
+/// that never became registry links.
+pub fn ring_allreduce_ms_raw(bytes: f64, world: usize, bandwidth_bytes: f64, step_latency_ms: f64) -> f64 {
+    if world <= 1 {
+        return 0.0;
+    }
+    let n = world as f64;
+    let transfer = 2.0 * (n - 1.0) / n * bytes / bandwidth_bytes * 1e3;
+    let latency = 2.0 * (n - 1.0) * step_latency_ms;
+    transfer + latency
+}
+
+/// Binary-tree all-reduce (reduce + broadcast): `2·⌈log₂ n⌉` rounds,
+/// each moving the full payload one level:
+/// `2·⌈log₂ n⌉ · (bytes/BW + latency)`. Latency-bound small messages on
+/// large worlds prefer this over the ring's `2(n−1)` steps.
+pub fn tree_allreduce_ms(bytes: f64, world: usize, link: Link) -> f64 {
+    if world <= 1 {
+        return 0.0;
+    }
+    let s = link.spec();
+    let rounds = 2.0 * (world as f64).log2().ceil();
+    rounds * (bytes / s.bandwidth_bytes() * 1e3 + s.step_latency_ms)
+}
+
+/// The all-reduce the cluster model charges: the better of ring and
+/// tree for the given message size and world (NCCL-style algorithm
+/// selection).
+pub fn allreduce_ms(bytes: f64, world: usize, link: Link) -> f64 {
+    ring_allreduce_ms(bytes, world, link).min(tree_allreduce_ms(bytes, world, link))
+}
+
+/// Ring all-gather: each rank receives `(n−1)/n · bytes` over `n−1`
+/// steps: `(n−1)/n · bytes/BW + (n−1)·latency`.
+pub fn allgather_ms(bytes: f64, world: usize, link: Link) -> f64 {
+    one_pass_ring_ms(bytes, world, link)
+}
+
+/// Ring reduce-scatter: the same wire volume as all-gather.
+pub fn reduce_scatter_ms(bytes: f64, world: usize, link: Link) -> f64 {
+    one_pass_ring_ms(bytes, world, link)
+}
+
+/// All-to-all: every rank exchanges `bytes/n` with each of its `n−1`
+/// peers: `(n−1)/n · bytes/BW + (n−1)·latency` (pairwise-exchange
+/// schedule).
+pub fn alltoall_ms(bytes: f64, world: usize, link: Link) -> f64 {
+    one_pass_ring_ms(bytes, world, link)
+}
+
+fn one_pass_ring_ms(bytes: f64, world: usize, link: Link) -> f64 {
+    if world <= 1 {
+        return 0.0;
+    }
+    let s = link.spec();
+    let n = world as f64;
+    (n - 1.0) / n * bytes / s.bandwidth_bytes() * 1e3 + (n - 1.0) * s.step_latency_ms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SIZES: [f64; 6] = [0.0, 1e3, 1e5, 1e7, 1e9, 4e9];
+    const WORLDS: [usize; 7] = [1, 2, 3, 4, 8, 64, 256];
+
+    #[test]
+    fn world_one_is_free_for_every_collective() {
+        for l in [Link::PCIE3, Link::NVLINK, Link::ETHERNET_25G, Link::INFINIBAND] {
+            for bytes in SIZES {
+                assert_eq!(ring_allreduce_ms(bytes, 1, l), 0.0);
+                assert_eq!(tree_allreduce_ms(bytes, 1, l), 0.0);
+                assert_eq!(allreduce_ms(bytes, 1, l), 0.0);
+                assert_eq!(allgather_ms(bytes, 1, l), 0.0);
+                assert_eq!(reduce_scatter_ms(bytes, 1, l), 0.0);
+                assert_eq!(alltoall_ms(bytes, 1, l), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn costs_are_monotone_in_bytes() {
+        type CostFn = fn(f64, usize, Link) -> f64;
+        let fns: [CostFn; 6] = [
+            ring_allreduce_ms,
+            tree_allreduce_ms,
+            allreduce_ms,
+            allgather_ms,
+            reduce_scatter_ms,
+            alltoall_ms,
+        ];
+        for f in fns {
+            for world in WORLDS {
+                for l in [Link::PCIE3, Link::ETHERNET_25G] {
+                    let mut prev = -1.0;
+                    for bytes in SIZES {
+                        let ms = f(bytes, world, l);
+                        assert!(ms.is_finite() && ms >= 0.0);
+                        assert!(ms >= prev, "{ms} < {prev} at {bytes} bytes, world {world}");
+                        prev = ms;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_allreduce_approaches_bandwidth_asymptote() {
+        // As bytes → ∞ the latency term vanishes:
+        // time → 2(n−1)/n · bytes/BW.
+        for world in [2usize, 4, 8, 64] {
+            let n = world as f64;
+            let bytes = 1e12;
+            let bw = Link::PCIE3.spec().bandwidth_bytes();
+            let asymptote = 2.0 * (n - 1.0) / n * bytes / bw * 1e3;
+            let actual = ring_allreduce_ms(bytes, world, Link::PCIE3);
+            assert!(
+                (actual / asymptote - 1.0).abs() < 1e-6,
+                "world {world}: {actual} vs asymptote {asymptote}"
+            );
+        }
+    }
+
+    #[test]
+    fn tree_beats_ring_on_latency_bound_messages() {
+        // 1 KiB over 256 ranks: the ring pays 510 latency steps, the
+        // tree pays 16 rounds.
+        let bytes = 1024.0;
+        let tree = tree_allreduce_ms(bytes, 256, Link::ETHERNET_25G);
+        let ring = ring_allreduce_ms(bytes, 256, Link::ETHERNET_25G);
+        assert!(tree < ring, "tree {tree} vs ring {ring}");
+        assert_eq!(allreduce_ms(bytes, 256, Link::ETHERNET_25G), tree);
+        // 1 GiB over 4 ranks: bandwidth-bound, the ring's 2(n−1)/n
+        // factor wins over the tree's 2·log₂ n full-payload rounds.
+        let big = 1e9;
+        assert!(ring_allreduce_ms(big, 4, Link::PCIE3) < tree_allreduce_ms(big, 4, Link::PCIE3));
+    }
+
+    #[test]
+    fn faster_links_are_faster() {
+        for world in [2usize, 8, 64] {
+            let bytes = 1e8;
+            assert!(
+                ring_allreduce_ms(bytes, world, Link::NVLINK)
+                    < ring_allreduce_ms(bytes, world, Link::PCIE3)
+            );
+            assert!(
+                ring_allreduce_ms(bytes, world, Link::PCIE3)
+                    < ring_allreduce_ms(bytes, world, Link::ETHERNET_25G)
+            );
+        }
+    }
+
+    #[test]
+    fn collective_wire_names_round_trip() {
+        for c in [
+            Collective::AllReduce,
+            Collective::AllGather,
+            Collective::ReduceScatter,
+            Collective::AllToAll,
+        ] {
+            assert_eq!(Collective::parse(c.wire_name()), Some(c));
+        }
+        assert_eq!(Collective::parse("BROADCAST"), None);
+    }
+}

@@ -1,0 +1,252 @@
+//! Workload export: the predicted per-step compute + collective
+//! schedule as COMM_OPS-style JSON records (op, bytes, participants),
+//! consumable by an external network simulator.
+
+use crate::util::json::Json;
+use crate::Result;
+
+use super::cluster::ClusterParams;
+use super::collective::Collective;
+use super::topology::Topology;
+
+/// One collective in the exported schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommOp {
+    pub op: Collective,
+    /// Payload size in bytes.
+    pub bytes: f64,
+    /// Global ranks taking part.
+    pub participants: Vec<usize>,
+}
+
+impl CommOp {
+    pub fn to_value(&self) -> Json {
+        Json::obj(vec![
+            ("op", Json::Str(self.op.wire_name().into())),
+            ("bytes", Json::Num(self.bytes)),
+            (
+                "participants",
+                Json::Arr(self.participants.iter().map(|r| Json::Num(*r as f64)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_value(v: &Json) -> Result<CommOp> {
+        let name = v.req_str("op")?;
+        let op = Collective::parse(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown collective op {name:?}"))?;
+        let bytes = v
+            .get("bytes")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid number field \"bytes\""))?;
+        let participants = v
+            .get("participants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid array field \"participants\""))?
+            .iter()
+            .map(|r| r.as_usize().ok_or_else(|| anyhow::anyhow!("non-integer rank in \"participants\"")))
+            .collect::<Result<Vec<usize>>>()?;
+        Ok(CommOp { op, bytes, participants })
+    }
+}
+
+/// A predicted per-step workload: the compute span plus the gradient
+/// collectives one data-parallel iteration issues.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    pub model: String,
+    pub batch: usize,
+    /// Origin (profiled) device name.
+    pub origin: String,
+    /// Destination (predicted) device name.
+    pub dest: String,
+    pub topology: String,
+    pub world: usize,
+    /// Per-replica compute time for one iteration, ms.
+    pub compute_ms: f64,
+    pub comm_ops: Vec<CommOp>,
+}
+
+impl Workload {
+    pub fn to_value(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("origin", Json::Str(self.origin.clone())),
+            ("dest", Json::Str(self.dest.clone())),
+            ("topology", Json::Str(self.topology.clone())),
+            ("world", Json::Num(self.world as f64)),
+            ("compute_ms", Json::Num(self.compute_ms)),
+            ("comm_ops", Json::Arr(self.comm_ops.iter().map(CommOp::to_value).collect())),
+        ])
+    }
+
+    pub fn from_value(v: &Json) -> Result<Workload> {
+        Ok(Workload {
+            model: v.req_str("model")?.to_string(),
+            batch: v.req_usize("batch")?,
+            origin: v.req_str("origin")?.to_string(),
+            dest: v.req_str("dest")?.to_string(),
+            topology: v.req_str("topology")?.to_string(),
+            world: v.req_usize("world")?,
+            compute_ms: v
+                .get("compute_ms")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing/invalid number field \"compute_ms\""))?,
+            comm_ops: v
+                .get("comm_ops")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("missing/invalid array field \"comm_ops\""))?
+                .iter()
+                .map(CommOp::from_value)
+                .collect::<Result<Vec<CommOp>>>()?,
+        })
+    }
+}
+
+/// The collectives one iteration issues for `grad_bytes` of gradients
+/// on `topology` with `world` ranks, bucketed per
+/// [`ClusterParams::bucket_bytes`].
+///
+/// Mirrors the cost model's schedule exactly: single-node buckets are
+/// one flat ALLREDUCE over all ranks; multi-node buckets are per-node
+/// REDUCESCATTER, an inter-node ALLREDUCE of the per-GPU shard over the
+/// node leaders, and per-node ALLGATHER. Nodes with a single rank skip
+/// the (no-op) intra stages.
+pub fn comm_schedule(
+    topology: Topology,
+    world: usize,
+    grad_bytes: f64,
+    params: &ClusterParams,
+) -> Vec<CommOp> {
+    let mut ops = Vec::new();
+    if world <= 1 || grad_bytes <= 0.0 {
+        return ops;
+    }
+    let bucket = params.bucket_bytes;
+    if bucket <= 0.0 || grad_bytes <= bucket {
+        bucket_schedule(topology, world, grad_bytes, &mut ops);
+        return ops;
+    }
+    let full = (grad_bytes / bucket).floor() as usize;
+    for _ in 0..full {
+        bucket_schedule(topology, world, bucket, &mut ops);
+    }
+    let rem = grad_bytes - full as f64 * bucket;
+    if rem > 0.0 {
+        bucket_schedule(topology, world, rem, &mut ops);
+    }
+    ops
+}
+
+fn bucket_schedule(topology: Topology, world: usize, bytes: f64, out: &mut Vec<CommOp>) {
+    let spec = topology.spec();
+    let g = (spec.gpus_per_node.max(1) as usize).min(world);
+    if world <= spec.gpus_per_node.max(1) as usize {
+        out.push(CommOp {
+            op: Collective::AllReduce,
+            bytes,
+            participants: (0..world).collect(),
+        });
+        return;
+    }
+    let nodes = spec.nodes(world);
+    let node_ranks =
+        |node: usize| -> Vec<usize> { (node * g..((node + 1) * g).min(world)).collect() };
+    for node in 0..nodes {
+        let ranks = node_ranks(node);
+        if ranks.len() > 1 {
+            out.push(CommOp { op: Collective::ReduceScatter, bytes, participants: ranks });
+        }
+    }
+    out.push(CommOp {
+        op: Collective::AllReduce,
+        bytes: bytes / g as f64,
+        participants: (0..nodes).map(|node| node * g).collect(),
+    });
+    for node in 0..nodes {
+        let ranks = node_ranks(node);
+        if ranks.len() > 1 {
+            out.push(CommOp { op: Collective::AllGather, bytes, participants: ranks });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn single_node_bucket_is_one_flat_allreduce() {
+        let params = ClusterParams { bucket_bytes: 0.0, ..Default::default() };
+        let ops = comm_schedule(Topology::DGX, 4, 1e6, &params);
+        assert_eq!(ops.len(), 1);
+        assert_eq!(ops[0].op, Collective::AllReduce);
+        assert_eq!(ops[0].bytes, 1e6);
+        assert_eq!(ops[0].participants, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn world_one_has_no_collectives() {
+        assert!(comm_schedule(Topology::DGX, 1, 1e9, &ClusterParams::default()).is_empty());
+        assert!(comm_schedule(Topology::DGX, 8, 0.0, &ClusterParams::default()).is_empty());
+    }
+
+    #[test]
+    fn hierarchical_bucket_has_rs_ar_ag_structure() {
+        let params = ClusterParams { bucket_bytes: 0.0, ..Default::default() };
+        // 16 ranks on dgx: 2 nodes of 8.
+        let ops = comm_schedule(Topology::DGX, 16, 8e6, &params);
+        assert_eq!(ops.len(), 2 + 1 + 2);
+        assert_eq!(ops[0].op, Collective::ReduceScatter);
+        assert_eq!(ops[0].participants, (0..8).collect::<Vec<_>>());
+        assert_eq!(ops[1].participants, (8..16).collect::<Vec<_>>());
+        let ar = &ops[2];
+        assert_eq!(ar.op, Collective::AllReduce);
+        assert_eq!(ar.bytes, 1e6); // 8e6 / 8 GPUs per node
+        assert_eq!(ar.participants, vec![0, 8]); // node leaders
+        assert_eq!(ops[3].op, Collective::AllGather);
+        assert_eq!(ops[4].participants, (8..16).collect::<Vec<_>>());
+        // Every participant is a valid rank.
+        for op in &ops {
+            assert!(op.participants.iter().all(|&r| r < 16));
+        }
+    }
+
+    #[test]
+    fn bucketing_repeats_the_schedule_per_bucket() {
+        let params = ClusterParams { bucket_bytes: 1e6, ..Default::default() };
+        let ops = comm_schedule(Topology::CLOUD, 4, 2.5e6, &params);
+        // 2 full buckets + a 0.5e6 remainder, each one flat allreduce.
+        assert_eq!(ops.len(), 3);
+        assert_eq!(ops[0].bytes, 1e6);
+        assert_eq!(ops[1].bytes, 1e6);
+        assert!((ops[2].bytes - 0.5e6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn workload_round_trips_through_json() {
+        let params = ClusterParams::default();
+        let w = Workload {
+            model: "resnet50".into(),
+            batch: 32,
+            origin: "rtx2070".into(),
+            dest: "v100".into(),
+            topology: "dgx".into(),
+            world: 16,
+            compute_ms: 123.456,
+            comm_ops: comm_schedule(Topology::DGX, 16, 102.2e6, &params),
+        };
+        assert!(!w.comm_ops.is_empty());
+        let text = w.to_value().dump();
+        let parsed = Workload::from_value(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, w);
+    }
+
+    #[test]
+    fn comm_op_rejects_unknown_ops() {
+        let v = json::parse(r#"{"op":"BROADCAST","bytes":1,"participants":[0]}"#).unwrap();
+        assert!(CommOp::from_value(&v).is_err());
+    }
+}

@@ -1,0 +1,357 @@
+//! Topology-aware communication cost modeling — the cluster half of a
+//! distributed-training prediction.
+//!
+//! Habitat predicts the *compute* side of an iteration (one GPU, one
+//! step). Scaling that answer to a cluster decision — "how many of
+//! which GPU, on which interconnect" — needs the *communication* side:
+//! what the gradient collectives cost on a concrete topology, and how
+//! much of that cost hides behind the backward pass. This module
+//! supplies it:
+//!
+//! * [`Link`] — an interned interconnect description (effective bus
+//!   bandwidth + per-step launch latency), kept in a process-wide
+//!   registry exactly like [`crate::device::registry`]: the paper-set
+//!   links (PCIe 3/4, NVLink, 25G Ethernet) are **seed entries** with
+//!   the historical constants, and new links can be [`register_link`]ed
+//!   at runtime (from library code or over the wire).
+//! * [`collective`] — analytic cost functions for the standard
+//!   collectives (ring and tree ALLREDUCE, ALLGATHER, REDUCESCATTER,
+//!   ALLTOALL), parameterized by message size, world size, and the
+//!   link's per-hop bandwidth/latency.
+//! * [`topology`] — a [`Topology`] (GPUs per node, intra-node link,
+//!   inter-node link; also registry-interned) plus the hierarchical
+//!   allreduce composition over it.
+//! * [`cluster`] — the per-step composition: Habitat compute time +
+//!   bucketed allreduce overlapped with backward
+//!   (`exposed = max(0, comm − overlappable backward span)`).
+//! * [`export`] — the predicted per-step schedule as COMM_OPS-style
+//!   records (op, bytes, participants) so predictions can drive an
+//!   external network simulator.
+
+use std::sync::{OnceLock, RwLock};
+
+pub use crate::device::RegisterError;
+
+pub mod cluster;
+pub mod collective;
+pub mod export;
+pub mod topology;
+
+pub use cluster::{trace_comm, ClusterParams, ClusterPrediction, TraceComm};
+pub use collective::{
+    allgather_ms, alltoall_ms, reduce_scatter_ms, ring_allreduce_ms, tree_allreduce_ms, Collective,
+};
+pub use export::{comm_schedule, CommOp, Workload};
+pub use topology::{NewTopology, Topology, TopologySpec};
+
+/// An interned interconnect: an index into the process-wide link
+/// registry (seed links at fixed indices, runtime registrations after).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Link(pub(crate) u32);
+
+/// One link's cost-model parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkSpec {
+    pub link: Link,
+    /// Short unique name (case-insensitive lookups).
+    pub name: &'static str,
+    /// Effective all-reduce bus bandwidth, GB/s.
+    pub bandwidth_gbps: f64,
+    /// Per-message launch latency (one ring step / tree round), ms.
+    pub step_latency_ms: f64,
+}
+
+impl LinkSpec {
+    /// Effective bus bandwidth in bytes/s (the unit the cost formulas
+    /// use). Computed as `gbps * 1e9` — the exact expression the old
+    /// `Interconnect::bandwidth_bytes` constants used, so seed links
+    /// reproduce the legacy model bit-for-bit.
+    pub fn bandwidth_bytes(&self) -> f64 {
+        self.bandwidth_gbps * 1e9
+    }
+}
+
+/// The paper-set links (+ one InfiniBand-class inter-node seed), always
+/// present at indices `0..5`. Bandwidth/latency values for the first
+/// four are the exact constants the deprecated
+/// [`crate::predict::distributed::Interconnect`] enum hard-coded.
+const BUILTIN_LINKS: [LinkSpec; 5] = [
+    LinkSpec { link: Link(0), name: "pcie3", bandwidth_gbps: 12.0, step_latency_ms: 0.01 },
+    LinkSpec { link: Link(1), name: "pcie4", bandwidth_gbps: 24.0, step_latency_ms: 0.01 },
+    LinkSpec { link: Link(2), name: "nvlink", bandwidth_gbps: 130.0, step_latency_ms: 0.01 },
+    LinkSpec { link: Link(3), name: "eth25g", bandwidth_gbps: 2.9, step_latency_ms: 0.03 },
+    LinkSpec { link: Link(4), name: "ib-hdr", bandwidth_gbps: 25.0, step_latency_ms: 0.005 },
+];
+
+/// Extra accepted names for [`find_link`].
+const LINK_ALIASES: [(&str, Link); 2] = [
+    ("ethernet25g", Link::ETHERNET_25G),
+    ("infiniband", Link::INFINIBAND),
+];
+
+/// Hard cap on registry size (each registration leaks one spec).
+pub const MAX_LINKS: usize = 256;
+
+impl Link {
+    /// PCIe 3.0 x16 (~12 GB/s effective).
+    pub const PCIE3: Link = Link(0);
+    /// PCIe 4.0 x16 (~24 GB/s effective).
+    pub const PCIE4: Link = Link(1);
+    /// NVLink 2.0 (V100-class, ~130 GB/s effective per GPU).
+    pub const NVLINK: Link = Link(2);
+    /// 25 Gb/s Ethernet between nodes (~2.9 GB/s effective).
+    pub const ETHERNET_25G: Link = Link(3);
+    /// HDR InfiniBand between nodes (~25 GB/s effective).
+    pub const INFINIBAND: Link = Link(4);
+
+    /// Registry index of this link.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    /// The interned spec (panics for an id the registry never minted).
+    pub fn spec(self) -> &'static LinkSpec {
+        try_link_spec(self)
+            .unwrap_or_else(|| panic!("link id {} is not in the registry", self.index()))
+    }
+
+    pub fn name(self) -> &'static str {
+        self.spec().name
+    }
+
+    /// Case-insensitive name (or alias) lookup.
+    pub fn parse(name: &str) -> Option<Link> {
+        find_link(name)
+    }
+}
+
+impl std::fmt::Display for Link {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Runtime-registered link specs (beyond the seeds), in id order.
+fn extra_links() -> &'static RwLock<Vec<&'static LinkSpec>> {
+    static EXTRA: OnceLock<RwLock<Vec<&'static LinkSpec>>> = OnceLock::new();
+    EXTRA.get_or_init(|| RwLock::new(Vec::new()))
+}
+
+/// Number of links currently registered (seeds included).
+pub fn link_count() -> usize {
+    BUILTIN_LINKS.len() + extra_links().read().unwrap().len()
+}
+
+/// Every registered link, in id order (seeds first).
+pub fn all_links() -> Vec<Link> {
+    (0..link_count() as u32).map(Link).collect()
+}
+
+/// Every registered link name, in id order (for error messages).
+pub fn link_names() -> Vec<&'static str> {
+    let mut names: Vec<&'static str> = BUILTIN_LINKS.iter().map(|s| s.name).collect();
+    names.extend(extra_links().read().unwrap().iter().map(|s| s.name));
+    names
+}
+
+/// Spec lookup; `None` for an id this registry never minted.
+pub fn try_link_spec(l: Link) -> Option<&'static LinkSpec> {
+    let i = l.index();
+    if i < BUILTIN_LINKS.len() {
+        Some(&BUILTIN_LINKS[i])
+    } else {
+        extra_links().read().unwrap().get(i - BUILTIN_LINKS.len()).copied()
+    }
+}
+
+/// Case-insensitive name (or alias) lookup.
+pub fn find_link(name: &str) -> Option<Link> {
+    let lower = name.to_ascii_lowercase();
+    for s in &BUILTIN_LINKS {
+        if s.name == lower {
+            return Some(s.link);
+        }
+    }
+    for (alias, l) in LINK_ALIASES {
+        if alias == lower {
+            return Some(l);
+        }
+    }
+    let extras = extra_links().read().unwrap();
+    for (i, s) in extras.iter().enumerate() {
+        if s.name.to_ascii_lowercase() == lower {
+            return Some(Link((BUILTIN_LINKS.len() + i) as u32));
+        }
+    }
+    None
+}
+
+/// A new link description, as supplied by `register_link` (library or
+/// wire — inline link objects in cluster requests route here).
+#[derive(Debug, Clone)]
+pub struct NewLink {
+    /// Short unique name; 1–64 chars of `[A-Za-z0-9._-]`,
+    /// compared case-insensitively.
+    pub name: String,
+    /// Effective all-reduce bus bandwidth, GB/s.
+    pub bandwidth_gbps: f64,
+    /// Per-message launch latency, ms.
+    pub step_latency_ms: f64,
+}
+
+fn validate_link(d: &NewLink) -> Result<(), RegisterError> {
+    let bad = |m: String| Err(RegisterError::Invalid(m));
+    if d.name.is_empty() || d.name.len() > 64 {
+        return bad("link name must be 1..=64 characters".into());
+    }
+    if !d.name.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-')) {
+        return bad(format!("link name {:?} has characters outside [A-Za-z0-9._-]", d.name));
+    }
+    if !(d.bandwidth_gbps.is_finite() && d.bandwidth_gbps > 0.0) {
+        return bad("bandwidth_gbps must be a positive number".into());
+    }
+    if !(d.step_latency_ms.is_finite() && d.step_latency_ms >= 0.0) {
+        return bad("step_latency_ms must be a non-negative number".into());
+    }
+    Ok(())
+}
+
+fn same_link(a: &LinkSpec, b: &NewLink) -> bool {
+    a.bandwidth_gbps == b.bandwidth_gbps && a.step_latency_ms == b.step_latency_ms
+}
+
+/// Register a new link, returning its interned handle.
+///
+/// Idempotent: re-registering an identical description returns the
+/// existing handle. A name collision with a *different* spec —
+/// including the seed names and aliases — is a
+/// [`RegisterError::Conflict`].
+pub fn register_link(desc: &NewLink) -> Result<Link, RegisterError> {
+    validate_link(desc)?;
+    let lower = desc.name.to_ascii_lowercase();
+
+    for s in &BUILTIN_LINKS {
+        if s.name == lower {
+            return if same_link(s, desc) {
+                Ok(s.link)
+            } else {
+                Err(RegisterError::Conflict(format!(
+                    "link name {:?} is taken by a built-in link with a different spec",
+                    desc.name
+                )))
+            };
+        }
+    }
+    if LINK_ALIASES.iter().any(|(alias, _)| *alias == lower) {
+        return Err(RegisterError::Conflict(format!(
+            "link name {:?} is a reserved alias",
+            desc.name
+        )));
+    }
+
+    // Hold the write lock across the lookup so two racing registrations
+    // of the same name can't both insert.
+    let mut extras = extra_links().write().unwrap();
+    for (i, s) in extras.iter().enumerate() {
+        if s.name.to_ascii_lowercase() == lower {
+            return if same_link(s, desc) {
+                Ok(Link((BUILTIN_LINKS.len() + i) as u32))
+            } else {
+                Err(RegisterError::Conflict(format!(
+                    "link name {:?} is already registered with a different spec",
+                    desc.name
+                )))
+            };
+        }
+    }
+
+    if BUILTIN_LINKS.len() + extras.len() >= MAX_LINKS {
+        return Err(RegisterError::Invalid(format!(
+            "link registry is full ({MAX_LINKS} links)"
+        )));
+    }
+    let id = Link((BUILTIN_LINKS.len() + extras.len()) as u32);
+    let spec = LinkSpec {
+        link: id,
+        name: Box::leak(desc.name.clone().into_boxed_str()),
+        bandwidth_gbps: desc.bandwidth_gbps,
+        step_latency_ms: desc.step_latency_ms,
+    };
+    extras.push(Box::leak(Box::new(spec)));
+    Ok(id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: the registry is process-global and `cargo test` runs tests
+    // concurrently in one process — tests use unique `sim-*` names,
+    // assert "contains"-style, and never register names other tests
+    // expect to be unknown (e.g. "no-such-link").
+
+    #[test]
+    fn seed_links_carry_the_legacy_constants() {
+        assert_eq!(Link::PCIE3.spec().bandwidth_bytes().to_bits(), (12.0f64 * 1e9).to_bits());
+        assert_eq!(Link::PCIE4.spec().bandwidth_bytes().to_bits(), (24.0f64 * 1e9).to_bits());
+        assert_eq!(Link::NVLINK.spec().bandwidth_bytes().to_bits(), (130.0f64 * 1e9).to_bits());
+        assert_eq!(
+            Link::ETHERNET_25G.spec().bandwidth_bytes().to_bits(),
+            (2.9f64 * 1e9).to_bits()
+        );
+        assert_eq!(Link::ETHERNET_25G.spec().step_latency_ms, 0.03);
+        for l in [Link::PCIE3, Link::PCIE4, Link::NVLINK] {
+            assert_eq!(l.spec().step_latency_ms, 0.01);
+        }
+    }
+
+    #[test]
+    fn find_is_case_insensitive_and_knows_aliases() {
+        assert_eq!(find_link("NVLink"), Some(Link::NVLINK));
+        assert_eq!(find_link("ethernet25g"), Some(Link::ETHERNET_25G));
+        assert_eq!(find_link("infiniband"), Some(Link::INFINIBAND));
+        assert_eq!(find_link("no-such-link"), None);
+    }
+
+    #[test]
+    fn register_then_find_and_enumerate() {
+        let l = register_link(&NewLink {
+            name: "sim-roce100".into(),
+            bandwidth_gbps: 11.0,
+            step_latency_ms: 0.015,
+        })
+        .unwrap();
+        assert_eq!(Link::parse("SIM-ROCE100"), Some(l));
+        assert_eq!(l.spec().bandwidth_gbps, 11.0);
+        assert!(all_links().contains(&l));
+        assert!(link_names().contains(&"sim-roce100"));
+        assert_eq!(format!("{l}"), "sim-roce100");
+    }
+
+    #[test]
+    fn reregistration_is_idempotent_and_conflicts_are_refused() {
+        let desc = NewLink { name: "sim-idem-link".into(), bandwidth_gbps: 7.0, step_latency_ms: 0.02 };
+        let a = register_link(&desc).unwrap();
+        let b = register_link(&desc).unwrap();
+        assert_eq!(a, b);
+        let clash = NewLink { bandwidth_gbps: 8.0, ..desc };
+        assert!(matches!(register_link(&clash), Err(RegisterError::Conflict(_))));
+        let builtin = NewLink { name: "nvlink".into(), bandwidth_gbps: 1.0, step_latency_ms: 0.0 };
+        assert!(matches!(register_link(&builtin), Err(RegisterError::Conflict(_))));
+        let alias = NewLink { name: "infiniband".into(), bandwidth_gbps: 1.0, step_latency_ms: 0.0 };
+        assert!(matches!(register_link(&alias), Err(RegisterError::Conflict(_))));
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let bad = |d: NewLink| matches!(register_link(&d), Err(RegisterError::Invalid(_)));
+        assert!(bad(NewLink { name: "".into(), bandwidth_gbps: 1.0, step_latency_ms: 0.0 }));
+        assert!(bad(NewLink { name: "bad name".into(), bandwidth_gbps: 1.0, step_latency_ms: 0.0 }));
+        assert!(bad(NewLink { name: "sim-neg-bw".into(), bandwidth_gbps: -1.0, step_latency_ms: 0.0 }));
+        assert!(bad(NewLink {
+            name: "sim-nan-lat".into(),
+            bandwidth_gbps: 1.0,
+            step_latency_ms: f64::NAN,
+        }));
+    }
+}

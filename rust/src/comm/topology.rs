@@ -1,0 +1,383 @@
+//! Cluster topology descriptions and the hierarchical allreduce over
+//! them.
+//!
+//! A [`Topology`] fixes the *shape* of a cluster — how many GPUs share
+//! a node, what link connects GPUs inside a node, and what link
+//! connects nodes — without fixing the world size; the same topology
+//! handle serves a whole `{1,2,4,…,256}`-rank sweep. Topologies are
+//! registry-interned exactly like [`super::Link`] and
+//! [`crate::device::registry`]: two seeds ("dgx", "cloud") are always
+//! present, and new shapes can be registered at runtime.
+
+use std::sync::{OnceLock, RwLock};
+
+use super::collective;
+use super::{find_link, try_link_spec, Link, RegisterError};
+
+/// An interned topology: an index into the process-wide registry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Topology(pub(crate) u32);
+
+/// One topology's shape parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopologySpec {
+    pub topology: Topology,
+    /// Short unique name (case-insensitive lookups).
+    pub name: &'static str,
+    /// GPUs per node; worlds larger than this span nodes.
+    pub gpus_per_node: u32,
+    /// Link between GPUs inside one node.
+    pub intra: Link,
+    /// Link between nodes.
+    pub inter: Link,
+}
+
+/// The seed topologies, always present at indices `0..2`: an NVLink +
+/// InfiniBand DGX-style pod and a PCIe + 25G-Ethernet cloud instance.
+const BUILTIN_TOPOLOGIES: [TopologySpec; 2] = [
+    TopologySpec {
+        topology: Topology(0),
+        name: "dgx",
+        gpus_per_node: 8,
+        intra: Link::NVLINK,
+        inter: Link::INFINIBAND,
+    },
+    TopologySpec {
+        topology: Topology(1),
+        name: "cloud",
+        gpus_per_node: 4,
+        intra: Link::PCIE3,
+        inter: Link::ETHERNET_25G,
+    },
+];
+
+/// Hard cap on registry size (each registration leaks one spec).
+pub const MAX_TOPOLOGIES: usize = 256;
+
+impl Topology {
+    /// 8×NVLink GPUs per node, HDR InfiniBand between nodes.
+    pub const DGX: Topology = Topology(0);
+    /// 4×PCIe-3 GPUs per node, 25G Ethernet between nodes.
+    pub const CLOUD: Topology = Topology(1);
+
+    /// Registry index of this topology.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    /// The interned spec (panics for an id the registry never minted).
+    pub fn spec(self) -> &'static TopologySpec {
+        try_topology_spec(self)
+            .unwrap_or_else(|| panic!("topology id {} is not in the registry", self.index()))
+    }
+
+    pub fn name(self) -> &'static str {
+        self.spec().name
+    }
+
+    /// Case-insensitive name lookup.
+    pub fn parse(name: &str) -> Option<Topology> {
+        find_topology(name)
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+impl TopologySpec {
+    /// Nodes a `world`-rank job occupies (the last node may be partially
+    /// filled).
+    pub fn nodes(&self, world: usize) -> usize {
+        world.div_ceil(self.gpus_per_node.max(1) as usize)
+    }
+
+    /// One all-reduce of `bytes` over `world` ranks on this topology,
+    /// in ms.
+    ///
+    /// Flat (single-node) worlds pay the better of ring/tree over the
+    /// intra-node link. Multi-node worlds pay the standard hierarchical
+    /// schedule: intra-node reduce-scatter, inter-node all-reduce over
+    /// one shard per node, intra-node all-gather — the intra stages move
+    /// the full payload inside each node while the inter stage moves
+    /// only `bytes / gpus_per_node` between node leaders.
+    pub fn allreduce_ms(&self, bytes: f64, world: usize) -> f64 {
+        if world <= 1 {
+            return 0.0;
+        }
+        let g = self.gpus_per_node.max(1) as usize;
+        if world <= g {
+            return collective::allreduce_ms(bytes, world, self.intra);
+        }
+        let nodes = self.nodes(world);
+        collective::reduce_scatter_ms(bytes, g, self.intra)
+            + collective::allreduce_ms(bytes / g as f64, nodes, self.inter)
+            + collective::allgather_ms(bytes, g, self.intra)
+    }
+}
+
+/// Runtime-registered topology specs (beyond the seeds), in id order.
+fn extra_topologies() -> &'static RwLock<Vec<&'static TopologySpec>> {
+    static EXTRA: OnceLock<RwLock<Vec<&'static TopologySpec>>> = OnceLock::new();
+    EXTRA.get_or_init(|| RwLock::new(Vec::new()))
+}
+
+/// Number of topologies currently registered (seeds included).
+pub fn topology_count() -> usize {
+    BUILTIN_TOPOLOGIES.len() + extra_topologies().read().unwrap().len()
+}
+
+/// Every registered topology, in id order (seeds first).
+pub fn all_topologies() -> Vec<Topology> {
+    (0..topology_count() as u32).map(Topology).collect()
+}
+
+/// Every registered topology name, in id order (for error messages).
+pub fn topology_names() -> Vec<&'static str> {
+    let mut names: Vec<&'static str> = BUILTIN_TOPOLOGIES.iter().map(|s| s.name).collect();
+    names.extend(extra_topologies().read().unwrap().iter().map(|s| s.name));
+    names
+}
+
+/// Spec lookup; `None` for an id this registry never minted.
+pub fn try_topology_spec(t: Topology) -> Option<&'static TopologySpec> {
+    let i = t.index();
+    if i < BUILTIN_TOPOLOGIES.len() {
+        Some(&BUILTIN_TOPOLOGIES[i])
+    } else {
+        extra_topologies().read().unwrap().get(i - BUILTIN_TOPOLOGIES.len()).copied()
+    }
+}
+
+/// Case-insensitive name lookup.
+pub fn find_topology(name: &str) -> Option<Topology> {
+    let lower = name.to_ascii_lowercase();
+    for s in &BUILTIN_TOPOLOGIES {
+        if s.name == lower {
+            return Some(s.topology);
+        }
+    }
+    let extras = extra_topologies().read().unwrap();
+    for (i, s) in extras.iter().enumerate() {
+        if s.name.to_ascii_lowercase() == lower {
+            return Some(Topology((BUILTIN_TOPOLOGIES.len() + i) as u32));
+        }
+    }
+    None
+}
+
+/// A new topology description, as supplied by `register_topology`
+/// (library or wire — inline topology objects in cluster requests
+/// route here).
+#[derive(Debug, Clone)]
+pub struct NewTopology {
+    /// Short unique name; 1–64 chars of `[A-Za-z0-9._-]`,
+    /// compared case-insensitively.
+    pub name: String,
+    pub gpus_per_node: u32,
+    pub intra: Link,
+    pub inter: Link,
+}
+
+fn validate_topology(d: &NewTopology) -> Result<(), RegisterError> {
+    let bad = |m: String| Err(RegisterError::Invalid(m));
+    if d.name.is_empty() || d.name.len() > 64 {
+        return bad("topology name must be 1..=64 characters".into());
+    }
+    if !d.name.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-')) {
+        return bad(format!("topology name {:?} has characters outside [A-Za-z0-9._-]", d.name));
+    }
+    if d.gpus_per_node == 0 || d.gpus_per_node > 4096 {
+        return bad("gpus_per_node must be in 1..=4096".into());
+    }
+    for (role, l) in [("intra", d.intra), ("inter", d.inter)] {
+        if try_link_spec(l).is_none() {
+            return bad(format!("{role} link id {} is not in the link registry", l.index()));
+        }
+    }
+    Ok(())
+}
+
+fn same_topology(a: &TopologySpec, b: &NewTopology) -> bool {
+    a.gpus_per_node == b.gpus_per_node && a.intra == b.intra && a.inter == b.inter
+}
+
+/// Register a new topology, returning its interned handle.
+///
+/// Idempotent: re-registering an identical description returns the
+/// existing handle. A name collision with a *different* spec —
+/// including the seed names — is a [`RegisterError::Conflict`].
+pub fn register_topology(desc: &NewTopology) -> Result<Topology, RegisterError> {
+    validate_topology(desc)?;
+    let lower = desc.name.to_ascii_lowercase();
+
+    for s in &BUILTIN_TOPOLOGIES {
+        if s.name == lower {
+            return if same_topology(s, desc) {
+                Ok(s.topology)
+            } else {
+                Err(RegisterError::Conflict(format!(
+                    "topology name {:?} is taken by a built-in topology with a different spec",
+                    desc.name
+                )))
+            };
+        }
+    }
+
+    // Hold the write lock across the lookup so two racing registrations
+    // of the same name can't both insert.
+    let mut extras = extra_topologies().write().unwrap();
+    for (i, s) in extras.iter().enumerate() {
+        if s.name.to_ascii_lowercase() == lower {
+            return if same_topology(s, desc) {
+                Ok(Topology((BUILTIN_TOPOLOGIES.len() + i) as u32))
+            } else {
+                Err(RegisterError::Conflict(format!(
+                    "topology name {:?} is already registered with a different spec",
+                    desc.name
+                )))
+            };
+        }
+    }
+
+    if BUILTIN_TOPOLOGIES.len() + extras.len() >= MAX_TOPOLOGIES {
+        return Err(RegisterError::Invalid(format!(
+            "topology registry is full ({MAX_TOPOLOGIES} topologies)"
+        )));
+    }
+    let id = Topology((BUILTIN_TOPOLOGIES.len() + extras.len()) as u32);
+    let spec = TopologySpec {
+        topology: id,
+        name: Box::leak(desc.name.clone().into_boxed_str()),
+        gpus_per_node: desc.gpus_per_node,
+        intra: desc.intra,
+        inter: desc.inter,
+    };
+    extras.push(Box::leak(Box::new(spec)));
+    Ok(id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Same process-global-registry conventions as the link tests:
+    // unique `sim-*` names, contains-style asserts, and never register
+    // names other tests expect unknown (e.g. "no-such-topology").
+
+    #[test]
+    fn seed_topologies_are_findable() {
+        assert_eq!(find_topology("DGX"), Some(Topology::DGX));
+        assert_eq!(find_topology("cloud"), Some(Topology::CLOUD));
+        assert_eq!(find_topology("no-such-topology"), None);
+        assert_eq!(Topology::DGX.spec().gpus_per_node, 8);
+        assert_eq!(Topology::DGX.spec().intra, Link::NVLINK);
+        assert_eq!(Topology::CLOUD.spec().inter, Link::ETHERNET_25G);
+        assert_eq!(format!("{}", Topology::CLOUD), "cloud");
+    }
+
+    #[test]
+    fn node_count_rounds_up() {
+        let dgx = Topology::DGX.spec();
+        assert_eq!(dgx.nodes(1), 1);
+        assert_eq!(dgx.nodes(8), 1);
+        assert_eq!(dgx.nodes(9), 2);
+        assert_eq!(dgx.nodes(256), 32);
+    }
+
+    #[test]
+    fn single_node_worlds_use_the_intra_link_only() {
+        let dgx = Topology::DGX.spec();
+        let bytes = 1e8;
+        for world in [2usize, 4, 8] {
+            assert_eq!(
+                dgx.allreduce_ms(bytes, world).to_bits(),
+                collective::allreduce_ms(bytes, world, Link::NVLINK).to_bits()
+            );
+        }
+        assert_eq!(dgx.allreduce_ms(bytes, 1), 0.0);
+    }
+
+    #[test]
+    fn hierarchical_allreduce_matches_its_stage_sum() {
+        let dgx = Topology::DGX.spec();
+        let bytes = 4.08e8;
+        let world = 32;
+        let expect = collective::reduce_scatter_ms(bytes, 8, Link::NVLINK)
+            + collective::allreduce_ms(bytes / 8.0, 4, Link::INFINIBAND)
+            + collective::allgather_ms(bytes, 8, Link::NVLINK);
+        assert_eq!(dgx.allreduce_ms(bytes, world).to_bits(), expect.to_bits());
+    }
+
+    #[test]
+    fn allreduce_is_monotone_in_bytes_and_never_negative() {
+        for t in [Topology::DGX, Topology::CLOUD] {
+            let spec = t.spec();
+            for world in [1usize, 2, 8, 9, 64, 256] {
+                let mut prev = -1.0;
+                for bytes in [0.0, 1e3, 1e6, 1e9] {
+                    let ms = spec.allreduce_ms(bytes, world);
+                    assert!(ms.is_finite() && ms >= 0.0);
+                    assert!(ms >= prev);
+                    prev = ms;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dgx_is_faster_than_cloud() {
+        for world in [2usize, 8, 64, 256] {
+            let bytes = 1e8;
+            assert!(
+                Topology::DGX.spec().allreduce_ms(bytes, world)
+                    < Topology::CLOUD.spec().allreduce_ms(bytes, world)
+            );
+        }
+    }
+
+    #[test]
+    fn register_find_idempotence_and_conflicts() {
+        let desc = NewTopology {
+            name: "sim-pod16".into(),
+            gpus_per_node: 16,
+            intra: Link::NVLINK,
+            inter: Link::INFINIBAND,
+        };
+        let a = register_topology(&desc).unwrap();
+        let b = register_topology(&desc).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(Topology::parse("SIM-POD16"), Some(a));
+        assert!(all_topologies().contains(&a));
+        assert!(topology_names().contains(&"sim-pod16"));
+        let clash = NewTopology { gpus_per_node: 8, ..desc.clone() };
+        assert!(matches!(register_topology(&clash), Err(RegisterError::Conflict(_))));
+        let builtin = NewTopology { name: "dgx".into(), ..desc };
+        assert!(matches!(register_topology(&builtin), Err(RegisterError::Conflict(_))));
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let bad = |d: NewTopology| matches!(register_topology(&d), Err(RegisterError::Invalid(_)));
+        assert!(bad(NewTopology {
+            name: "".into(),
+            gpus_per_node: 8,
+            intra: Link::NVLINK,
+            inter: Link::INFINIBAND,
+        }));
+        assert!(bad(NewTopology {
+            name: "sim-zero-gpus".into(),
+            gpus_per_node: 0,
+            intra: Link::NVLINK,
+            inter: Link::INFINIBAND,
+        }));
+        assert!(bad(NewTopology {
+            name: "sim-bad-link".into(),
+            gpus_per_node: 8,
+            intra: Link(9999),
+            inter: Link::INFINIBAND,
+        }));
+    }
+}

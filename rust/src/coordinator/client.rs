@@ -17,7 +17,8 @@
 //! [`ClientError::Disconnected`] — downcastable from the returned
 //! `anyhow::Error` — never as a bare broken-pipe `io::Error`. For
 //! *idempotent* operations (`predict`, `rank`, `stats`,
-//! `predict_trace`, `rank_trace`) the client additionally performs
+//! `predict_trace`, `rank_trace`, `predict_cluster`, `rank_cluster`,
+//! `export_workload`) the client additionally performs
 //! **one** automatic reconnect-and-retry; state-changing operations
 //! (`submit_trace`, `register_device`) are never retried — the caller
 //! decides whether replaying a write is safe.
@@ -26,9 +27,10 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
+use crate::comm::Workload;
 use crate::coordinator::{
-    service, PredictionRequest, PredictionResponse, RankRequest, RankResponse, RegisteredDevice,
-    StatsResponse,
+    service, ClusterRankResponse, ClusterResponse, PredictionRequest, PredictionResponse,
+    RankRequest, RankResponse, RegisteredDevice, StatsResponse,
 };
 use crate::device::NewDevice;
 use crate::tracker::Trace;
@@ -215,6 +217,72 @@ impl Client {
             self.request_idempotent(&service::v2_rank_trace_request(trace_id, dests, precision))?;
         service::v2_check_error(&json::parse(&line)?)?;
         RankResponse::from_json(&line)
+    }
+
+    /// Sweep one destination across a topology × world grid
+    /// (`{"v":2,"op":"predict_cluster"}`). `None` topologies/worlds
+    /// mean the server defaults (every registered topology,
+    /// [`service::DEFAULT_CLUSTER_WORLDS`]). Idempotent: one automatic
+    /// reconnect-and-retry on disconnect.
+    #[allow(clippy::too_many_arguments)]
+    pub fn predict_cluster(
+        &mut self,
+        model: &str,
+        batch: usize,
+        origin: &str,
+        dest: &str,
+        topologies: Option<&[String]>,
+        worlds: Option<&[usize]>,
+        precision: Option<&str>,
+    ) -> Result<ClusterResponse> {
+        let line = self.request_idempotent(&service::v2_predict_cluster_request(
+            model, batch, origin, dest, topologies, worlds, precision,
+        ))?;
+        ClusterResponse::from_json(&line)
+    }
+
+    /// Rank every (destination, topology, world) configuration
+    /// (`{"v":2,"op":"rank_cluster"}`), best decision first. `None`
+    /// dests mean every device in the server's registry. Idempotent:
+    /// one automatic reconnect-and-retry on disconnect.
+    #[allow(clippy::too_many_arguments)]
+    pub fn rank_cluster(
+        &mut self,
+        model: &str,
+        batch: usize,
+        origin: &str,
+        dests: Option<&[String]>,
+        topologies: Option<&[String]>,
+        worlds: Option<&[usize]>,
+        precision: Option<&str>,
+    ) -> Result<ClusterRankResponse> {
+        let line = self.request_idempotent(&service::v2_rank_cluster_request(
+            model, batch, origin, dests, topologies, worlds, precision,
+        ))?;
+        ClusterRankResponse::from_json(&line)
+    }
+
+    /// Export one configuration's predicted compute + collective
+    /// schedule (`{"v":2,"op":"export_workload"}`) as a
+    /// [`Workload`]. Idempotent: one automatic reconnect-and-retry on
+    /// disconnect.
+    #[allow(clippy::too_many_arguments)]
+    pub fn export_workload(
+        &mut self,
+        model: &str,
+        batch: usize,
+        origin: &str,
+        dest: &str,
+        topology: &str,
+        world: usize,
+        precision: Option<&str>,
+    ) -> Result<Workload> {
+        let line = self.request_idempotent(&service::v2_export_workload_request(
+            model, batch, origin, dest, topology, world, precision,
+        ))?;
+        let v = json::parse(&line)?;
+        service::v2_check_error(&v)?;
+        Workload::from_value(&v)
     }
 
     /// One request/response roundtrip, retried exactly once over a
@@ -568,5 +636,40 @@ mod tests {
         assert!(ranked.ranking.len() >= crate::device::ALL_DEVICES.len());
         let unknown = client.predict_trace("tr-ffffffffffffffff", "v100", None).unwrap_err();
         assert!(unknown.to_string().contains("unknown_trace"), "{unknown}");
+    }
+
+    #[test]
+    fn cluster_ops_over_tcp() {
+        let addr = spawn_server();
+        let mut client = Client::connect(&addr).unwrap();
+        let topologies = vec!["dgx".to_string(), "cloud".to_string()];
+
+        let resp = client
+            .predict_cluster("mlp", 16, "t4", "v100", Some(&topologies), Some(&[1, 2, 8]), None)
+            .unwrap();
+        assert_eq!(resp.dest, "V100");
+        assert_eq!(resp.configs.len(), 6);
+        assert!(resp.configs.iter().all(|c| c.efficiency > 0.0 && c.efficiency <= 1.0 + 1e-9));
+
+        let dests = vec!["v100".to_string(), "t4".to_string()];
+        let ranked = client
+            .rank_cluster("mlp", 16, "t4", Some(&dests), Some(&topologies), Some(&[1, 8]), None)
+            .unwrap();
+        assert_eq!(ranked.ranking.len(), 2 * 2 * 2);
+        let scores: Vec<f64> = ranked
+            .ranking
+            .iter()
+            .map(|e| e.cost_normalized_throughput.unwrap())
+            .collect();
+        assert!(scores.windows(2).all(|w| w[0] >= w[1]));
+
+        let workload = client.export_workload("mlp", 16, "t4", "v100", "dgx", 16, None).unwrap();
+        assert_eq!(workload.world, 16);
+        assert!(!workload.comm_ops.is_empty());
+
+        let err = client
+            .predict_cluster("mlp", 16, "t4", "v100", Some(&["nope".to_string()]), None, None)
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown_topology"), "{err}");
     }
 }

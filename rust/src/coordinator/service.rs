@@ -17,10 +17,15 @@
 //!   hit & miss counters, wave-table counters, and fan-out pool size.
 //!
 //! **v2** (the open-world envelope, `{"v":2,"op":...}`): everything v1
-//! does, plus **register_device** (make a new GPU rankable at runtime)
-//! and **submit_trace** (predict arbitrary client-profiled workloads by
-//! content-hashed `trace_id`), with structured
-//! `{"error":{"code","message"}}` errors. See [`PredictionService::handle_v2`].
+//! does, plus **register_device** (make a new GPU rankable at runtime),
+//! **submit_trace** (predict arbitrary client-profiled workloads by
+//! content-hashed `trace_id`), and the cluster suite —
+//! **predict_cluster** / **rank_cluster** (topology × world-size sweeps
+//! of the data-parallel step-time model, with scaling efficiency and
+//! fleet-cost-normalized ranking) and **export_workload** (the
+//! predicted compute + collective schedule as COMM_OPS-style JSON) —
+//! with structured `{"error":{"code","message"}}` errors. See
+//! [`PredictionService::handle_v2`].
 //!
 //! The server is a **bounded runtime** over `std::net` (the image has
 //! no async runtime): a fixed acceptor, at most `HABITAT_MAX_CONNS`
@@ -48,6 +53,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::comm::{self, ClusterParams, Topology};
 use crate::device::{registry, Device, NewDevice, RegisterError};
 use crate::engine::PredictionEngine;
 use crate::lowering::Precision;
@@ -660,6 +666,310 @@ pub fn v2_stats_request() -> String {
     Json::obj(vec![("v", Json::Num(PROTOCOL_V2)), ("op", Json::Str("stats".into()))]).dump()
 }
 
+// --- cluster ops (v2 only) --------------------------------------------
+
+/// Default world-size sweep for the cluster ops when the request omits
+/// `worlds`: powers of two through 256 ranks.
+pub const DEFAULT_CLUSTER_WORLDS: [usize; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
+
+/// Largest accepted world size in a cluster sweep.
+const MAX_CLUSTER_WORLD: usize = 65_536;
+
+/// Cap on `dests × topologies × worlds` cells in one cluster request.
+const MAX_CLUSTER_SWEEP: usize = 16_384;
+
+/// One (topology, world) cell of a [`ClusterResponse`].
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub topology: String,
+    pub world: usize,
+    /// Predicted per-iteration wall time, ms (compute + exposed comm).
+    pub iter_ms: f64,
+    /// Raw bucketed-allreduce time before overlap, ms.
+    pub comm_ms: f64,
+    /// Communication left exposed after overlap with backward, ms.
+    pub exposed_ms: f64,
+    /// Global throughput, samples/s across all ranks.
+    pub throughput: f64,
+    /// Scaling efficiency vs perfect linear scaling, in (0, 1].
+    pub efficiency: f64,
+    /// Global samples/s per total fleet $/hr; `None` when unpriced.
+    pub cost_normalized_throughput: Option<f64>,
+}
+
+impl ClusterConfig {
+    fn to_value(&self) -> Json {
+        Json::obj(vec![
+            ("topology", Json::Str(self.topology.clone())),
+            ("world", Json::Num(self.world as f64)),
+            ("iter_ms", Json::Num(self.iter_ms)),
+            ("comm_ms", Json::Num(self.comm_ms)),
+            ("exposed_ms", Json::Num(self.exposed_ms)),
+            ("throughput", Json::Num(self.throughput)),
+            ("efficiency", Json::Num(self.efficiency)),
+            (
+                "cost_normalized_throughput",
+                self.cost_normalized_throughput.map_or(Json::Null, Json::Num),
+            ),
+        ])
+    }
+
+    fn from_value(v: &Json) -> Result<Self> {
+        let num = |k: &str| -> Result<f64> {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing/invalid number field {k:?}"))
+        };
+        Ok(ClusterConfig {
+            topology: v.req_str("topology")?.to_string(),
+            world: v.req_usize("world")?,
+            iter_ms: num("iter_ms")?,
+            comm_ms: num("comm_ms")?,
+            exposed_ms: num("exposed_ms")?,
+            throughput: num("throughput")?,
+            efficiency: num("efficiency")?,
+            cost_normalized_throughput: v.get("cost_normalized_throughput").and_then(Json::as_f64),
+        })
+    }
+}
+
+/// The answer to a `predict_cluster` request: one destination swept
+/// across a topology × world grid (topology-major, request order).
+#[derive(Debug, Clone)]
+pub struct ClusterResponse {
+    pub model: String,
+    pub batch: usize,
+    pub origin: String,
+    pub dest: String,
+    /// Per-replica single-GPU compute time shared by every cell, ms.
+    pub compute_ms: f64,
+    pub configs: Vec<ClusterConfig>,
+}
+
+impl ClusterResponse {
+    pub fn to_value(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("origin", Json::Str(self.origin.clone())),
+            ("dest", Json::Str(self.dest.clone())),
+            ("compute_ms", Json::Num(self.compute_ms)),
+            (
+                "configs",
+                Json::Arr(self.configs.iter().map(ClusterConfig::to_value).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(line: &str) -> Result<Self> {
+        let v = json::parse(line)?;
+        v2_check_error(&v)?;
+        Ok(ClusterResponse {
+            model: v.req_str("model")?.to_string(),
+            batch: v.req_usize("batch")?,
+            origin: v.req_str("origin")?.to_string(),
+            dest: v.req_str("dest")?.to_string(),
+            compute_ms: v
+                .get("compute_ms")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing compute_ms"))?,
+            configs: v
+                .get("configs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("missing configs array"))?
+                .iter()
+                .map(ClusterConfig::from_value)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+/// One entry of a [`ClusterRankResponse`], best decision first.
+#[derive(Debug, Clone)]
+pub struct ClusterRankedConfig {
+    pub dest: String,
+    pub topology: String,
+    pub world: usize,
+    pub iter_ms: f64,
+    pub throughput: f64,
+    pub efficiency: f64,
+    pub cost_normalized_throughput: Option<f64>,
+}
+
+impl ClusterRankedConfig {
+    fn to_value(&self) -> Json {
+        Json::obj(vec![
+            ("dest", Json::Str(self.dest.clone())),
+            ("topology", Json::Str(self.topology.clone())),
+            ("world", Json::Num(self.world as f64)),
+            ("iter_ms", Json::Num(self.iter_ms)),
+            ("throughput", Json::Num(self.throughput)),
+            ("efficiency", Json::Num(self.efficiency)),
+            (
+                "cost_normalized_throughput",
+                self.cost_normalized_throughput.map_or(Json::Null, Json::Num),
+            ),
+        ])
+    }
+
+    fn from_value(v: &Json) -> Result<Self> {
+        let num = |k: &str| -> Result<f64> {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing/invalid number field {k:?}"))
+        };
+        Ok(ClusterRankedConfig {
+            dest: v.req_str("dest")?.to_string(),
+            topology: v.req_str("topology")?.to_string(),
+            world: v.req_usize("world")?,
+            iter_ms: num("iter_ms")?,
+            throughput: num("throughput")?,
+            efficiency: num("efficiency")?,
+            cost_normalized_throughput: v.get("cost_normalized_throughput").and_then(Json::as_f64),
+        })
+    }
+}
+
+/// The answer to a `rank_cluster` request: every (destination, topology,
+/// world) configuration, ordered like `rank` — priced fleets by
+/// descending cost-normalized throughput, then unpriced by raw global
+/// throughput.
+#[derive(Debug, Clone)]
+pub struct ClusterRankResponse {
+    pub model: String,
+    pub batch: usize,
+    pub origin: String,
+    pub ranking: Vec<ClusterRankedConfig>,
+}
+
+impl ClusterRankResponse {
+    pub fn to_value(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("origin", Json::Str(self.origin.clone())),
+            (
+                "ranking",
+                Json::Arr(self.ranking.iter().map(ClusterRankedConfig::to_value).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(line: &str) -> Result<Self> {
+        let v = json::parse(line)?;
+        v2_check_error(&v)?;
+        Ok(ClusterRankResponse {
+            model: v.req_str("model")?.to_string(),
+            batch: v.req_usize("batch")?,
+            origin: v.req_str("origin")?.to_string(),
+            ranking: v
+                .get("ranking")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("missing ranking array"))?
+                .iter()
+                .map(ClusterRankedConfig::from_value)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+fn cluster_grid_pairs(
+    topologies: Option<&[String]>,
+    worlds: Option<&[usize]>,
+) -> Vec<(&'static str, Json)> {
+    let mut pairs = Vec::new();
+    if let Some(t) = topologies {
+        pairs.push((
+            "topologies",
+            Json::Arr(t.iter().map(|s| Json::Str(s.clone())).collect()),
+        ));
+    }
+    if let Some(w) = worlds {
+        pairs.push((
+            "worlds",
+            Json::Arr(w.iter().map(|&x| Json::Num(x as f64)).collect()),
+        ));
+    }
+    pairs
+}
+
+/// `{"v":2,"op":"predict_cluster"}` over a zoo model. `None` topologies
+/// and worlds mean the server defaults (every registered topology,
+/// [`DEFAULT_CLUSTER_WORLDS`]).
+pub fn v2_predict_cluster_request(
+    model: &str,
+    batch: usize,
+    origin: &str,
+    dest: &str,
+    topologies: Option<&[String]>,
+    worlds: Option<&[usize]>,
+    precision: Option<&str>,
+) -> String {
+    let mut pairs = vec![
+        ("v", Json::Num(PROTOCOL_V2)),
+        ("op", Json::Str("predict_cluster".into())),
+        ("model", Json::Str(model.to_string())),
+        ("batch", Json::Num(batch as f64)),
+        ("origin", Json::Str(origin.to_string())),
+        ("dest", Json::Str(dest.to_string())),
+    ];
+    pairs.extend(cluster_grid_pairs(topologies, worlds));
+    pairs.extend(precision_pair(precision));
+    Json::obj(pairs).dump()
+}
+
+/// `{"v":2,"op":"rank_cluster"}` over a zoo model. `None` dests mean
+/// every registered device.
+#[allow(clippy::too_many_arguments)]
+pub fn v2_rank_cluster_request(
+    model: &str,
+    batch: usize,
+    origin: &str,
+    dests: Option<&[String]>,
+    topologies: Option<&[String]>,
+    worlds: Option<&[usize]>,
+    precision: Option<&str>,
+) -> String {
+    let mut pairs = vec![
+        ("v", Json::Num(PROTOCOL_V2)),
+        ("op", Json::Str("rank_cluster".into())),
+        ("model", Json::Str(model.to_string())),
+        ("batch", Json::Num(batch as f64)),
+        ("origin", Json::Str(origin.to_string())),
+    ];
+    if let Some(d) = dests {
+        pairs.push(("dests", Json::Arr(d.iter().map(|s| Json::Str(s.clone())).collect())));
+    }
+    pairs.extend(cluster_grid_pairs(topologies, worlds));
+    pairs.extend(precision_pair(precision));
+    Json::obj(pairs).dump()
+}
+
+/// `{"v":2,"op":"export_workload"}`: one (dest, topology, world)
+/// configuration's predicted compute + collective schedule.
+pub fn v2_export_workload_request(
+    model: &str,
+    batch: usize,
+    origin: &str,
+    dest: &str,
+    topology: &str,
+    world: usize,
+    precision: Option<&str>,
+) -> String {
+    let mut pairs = vec![
+        ("v", Json::Num(PROTOCOL_V2)),
+        ("op", Json::Str("export_workload".into())),
+        ("model", Json::Str(model.to_string())),
+        ("batch", Json::Num(batch as f64)),
+        ("origin", Json::Str(origin.to_string())),
+        ("dest", Json::Str(dest.to_string())),
+        ("topology", Json::Str(topology.to_string())),
+        ("world", Json::Num(world as f64)),
+    ];
+    pairs.extend(precision_pair(precision));
+    Json::obj(pairs).dump()
+}
+
 /// The `register_device` acknowledgement (client-side view).
 #[derive(Debug, Clone)]
 pub struct RegisteredDevice {
@@ -890,9 +1200,12 @@ impl PredictionService {
             "stats" => Ok(self.v2_stats()),
             "submit_trace" => self.v2_submit_trace(v),
             "register_device" => self.v2_register_device(v),
+            "predict_cluster" => self.v2_predict_cluster(v),
+            "rank_cluster" => self.v2_rank_cluster(v),
+            "export_workload" => self.v2_export_workload(v),
             other => Err(V2Error::new(
                 "unsupported_op",
-                format!("unsupported op {other:?} (want predict|rank|stats|submit_trace|register_device)"),
+                format!("unsupported op {other:?} (want predict|rank|stats|submit_trace|register_device|predict_cluster|rank_cluster|export_workload)"),
             )),
         }
     }
@@ -1029,6 +1342,322 @@ impl PredictionService {
             ]),
             Vec::new(),
         ))
+    }
+
+    // --- cluster ops --------------------------------------------------
+
+    fn v2_predict_cluster(&self, v: &Json) -> V2Result {
+        let precision = Self::v2_precision(v)?;
+        let dest = Self::v2_dest(v)?;
+        let topologies = Self::v2_topologies(v)?;
+        let worlds = Self::v2_worlds(v)?;
+        let params = Self::v2_cluster_params(v)?;
+        Self::check_sweep(topologies.len().saturating_mul(worlds.len()))?;
+        if let Some(trace_id) = v.get("trace_id").and_then(Json::as_str) {
+            let report = self
+                .engine
+                .predict_cluster_uploaded(trace_id, dest, precision, &topologies, &worlds, &params)
+                .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
+            Ok(v2_envelope(
+                "predict_cluster",
+                Self::cluster_response(&report).to_value(),
+                vec![("trace_id", Json::Str(trace_id.to_string()))],
+            ))
+        } else {
+            let (model, batch, origin) = Self::v2_model_origin(v)?;
+            let report = self
+                .engine
+                .predict_cluster(&model, batch, origin, dest, precision, &topologies, &worlds, &params)
+                .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
+            Ok(v2_envelope("predict_cluster", Self::cluster_response(&report).to_value(), Vec::new()))
+        }
+    }
+
+    fn v2_rank_cluster(&self, v: &Json) -> V2Result {
+        let precision = Self::v2_precision(v)?;
+        let dests = Self::v2_dests(v)?;
+        let topologies = Self::v2_topologies(v)?;
+        let worlds = Self::v2_worlds(v)?;
+        let params = Self::v2_cluster_params(v)?;
+        Self::check_sweep(
+            dests
+                .len()
+                .saturating_mul(topologies.len())
+                .saturating_mul(worlds.len()),
+        )?;
+        if let Some(trace_id) = v.get("trace_id").and_then(Json::as_str) {
+            let ranking = self
+                .engine
+                .rank_cluster_uploaded(trace_id, &dests, precision, &topologies, &worlds, &params)
+                .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
+            Ok(v2_envelope(
+                "rank_cluster",
+                Self::cluster_rank_response(&ranking).to_value(),
+                vec![("trace_id", Json::Str(trace_id.to_string()))],
+            ))
+        } else {
+            let (model, batch, origin) = Self::v2_model_origin(v)?;
+            let ranking = self
+                .engine
+                .rank_cluster(&model, batch, origin, &dests, precision, &topologies, &worlds, &params)
+                .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
+            Ok(v2_envelope("rank_cluster", Self::cluster_rank_response(&ranking).to_value(), Vec::new()))
+        }
+    }
+
+    fn v2_export_workload(&self, v: &Json) -> V2Result {
+        let precision = Self::v2_precision(v)?;
+        let dest = Self::v2_dest(v)?;
+        let topology = match v.get("topology") {
+            None | Some(Json::Null) => {
+                return Err(V2Error::new("bad_request", "missing field \"topology\""))
+            }
+            Some(it) => Self::v2_topology_entry(it)?,
+        };
+        let world = v
+            .req_usize("world")
+            .map_err(|e| V2Error::new("bad_request", e.to_string()))?;
+        if !(1..=MAX_CLUSTER_WORLD).contains(&world) {
+            return Err(V2Error::new(
+                "invalid_argument",
+                format!("world size {world} out of range 1..={MAX_CLUSTER_WORLD}"),
+            ));
+        }
+        let params = Self::v2_cluster_params(v)?;
+        let (model, batch, origin) = Self::v2_model_origin(v)?;
+        let workload = self
+            .engine
+            .export_workload(&model, batch, origin, dest, precision, topology, world, &params)
+            .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
+        Ok(v2_envelope("export_workload", workload.to_value(), Vec::new()))
+    }
+
+    /// Common `model`/`batch`/`origin` triple of the zoo-model paths.
+    fn v2_model_origin(v: &Json) -> std::result::Result<(String, usize, Device), V2Error> {
+        let model = v
+            .req_str("model")
+            .map_err(|e| V2Error::new("bad_request", e.to_string()))?
+            .to_string();
+        let batch = v
+            .req_usize("batch")
+            .map_err(|e| V2Error::new("bad_request", e.to_string()))?;
+        let origin_name = v
+            .req_str("origin")
+            .map_err(|e| V2Error::new("bad_request", e.to_string()))?;
+        let origin = parse_device(origin_name, "origin")
+            .map_err(|e| V2Error::new("unknown_device", e.to_string()))?;
+        Ok((model, batch, origin))
+    }
+
+    /// Resolve a v2 `topologies` field: names and/or inline topology
+    /// objects, or every registered topology when absent.
+    fn v2_topologies(v: &Json) -> std::result::Result<Vec<Topology>, V2Error> {
+        match v.get("topologies") {
+            None | Some(Json::Null) => Ok(comm::topology::all_topologies()),
+            Some(arr) => {
+                let items = arr.as_arr().ok_or_else(|| {
+                    V2Error::new("bad_request", "topologies must be an array of names or objects")
+                })?;
+                if items.is_empty() {
+                    return Err(V2Error::new("invalid_argument", "topologies must be non-empty"));
+                }
+                items.iter().map(Self::v2_topology_entry).collect()
+            }
+        }
+    }
+
+    /// One topology entry: a registered name, or an inline
+    /// `{"name","gpus_per_node","intra","inter"}` object (registered
+    /// through the interning registry, idempotently).
+    fn v2_topology_entry(it: &Json) -> std::result::Result<Topology, V2Error> {
+        match it {
+            Json::Str(name) => comm::topology::find_topology(name).ok_or_else(|| {
+                V2Error::new(
+                    "unknown_topology",
+                    format!(
+                        "unknown topology {name:?} (known: {})",
+                        comm::topology::topology_names().join("|")
+                    ),
+                )
+            }),
+            Json::Obj(_) => {
+                let name = it
+                    .req_str("name")
+                    .map_err(|_| V2Error::new("bad_request", "inline topology needs string field \"name\""))?;
+                let gpus_per_node = it.req_usize("gpus_per_node").map_err(|_| {
+                    V2Error::new("bad_request", "inline topology needs integer field \"gpus_per_node\"")
+                })?;
+                let intra = Self::v2_link(it.get("intra"), "intra")?;
+                let inter = Self::v2_link(it.get("inter"), "inter")?;
+                comm::topology::register_topology(&comm::NewTopology {
+                    name: name.to_string(),
+                    gpus_per_node: gpus_per_node as u32,
+                    intra,
+                    inter,
+                })
+                .map_err(Self::register_error)
+            }
+            _ => Err(V2Error::new(
+                "bad_request",
+                "topologies entries must be topology names or inline objects",
+            )),
+        }
+    }
+
+    /// One link field of an inline topology: a registered name, or an
+    /// inline `{"name","bandwidth_gbps","step_latency_ms"?}` object.
+    fn v2_link(it: Option<&Json>, role: &str) -> std::result::Result<comm::Link, V2Error> {
+        let it = it.ok_or_else(|| {
+            V2Error::new("bad_request", format!("inline topology needs field {role:?}"))
+        })?;
+        match it {
+            Json::Str(name) => comm::find_link(name).ok_or_else(|| {
+                V2Error::new(
+                    "unknown_link",
+                    format!(
+                        "unknown {role} link {name:?} (known: {})",
+                        comm::link_names().join("|")
+                    ),
+                )
+            }),
+            Json::Obj(_) => {
+                let name = it.req_str("name").map_err(|_| {
+                    V2Error::new("bad_request", format!("inline {role} link needs string field \"name\""))
+                })?;
+                let bandwidth_gbps = it.get("bandwidth_gbps").and_then(Json::as_f64).ok_or_else(|| {
+                    V2Error::new(
+                        "bad_request",
+                        format!("inline {role} link needs number field \"bandwidth_gbps\""),
+                    )
+                })?;
+                let step_latency_ms =
+                    it.get("step_latency_ms").and_then(Json::as_f64).unwrap_or(0.01);
+                comm::register_link(&comm::NewLink {
+                    name: name.to_string(),
+                    bandwidth_gbps,
+                    step_latency_ms,
+                })
+                .map_err(Self::register_error)
+            }
+            _ => Err(V2Error::new(
+                "bad_request",
+                format!("{role} link must be a link name or an inline object"),
+            )),
+        }
+    }
+
+    /// Resolve a v2 `worlds` field ([`DEFAULT_CLUSTER_WORLDS`] when
+    /// absent).
+    fn v2_worlds(v: &Json) -> std::result::Result<Vec<usize>, V2Error> {
+        match v.get("worlds") {
+            None | Some(Json::Null) => Ok(DEFAULT_CLUSTER_WORLDS.to_vec()),
+            Some(arr) => {
+                let items = arr.as_arr().ok_or_else(|| {
+                    V2Error::new("bad_request", "worlds must be an array of rank counts")
+                })?;
+                if items.is_empty() {
+                    return Err(V2Error::new("invalid_argument", "worlds must be non-empty"));
+                }
+                items
+                    .iter()
+                    .map(|it| {
+                        let w = it.as_usize().ok_or_else(|| {
+                            V2Error::new("bad_request", "worlds entries must be non-negative integers")
+                        })?;
+                        if !(1..=MAX_CLUSTER_WORLD).contains(&w) {
+                            return Err(V2Error::new(
+                                "invalid_argument",
+                                format!("world size {w} out of range 1..={MAX_CLUSTER_WORLD}"),
+                            ));
+                        }
+                        Ok(w)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Optional overlap/bucket knobs → [`ClusterParams`].
+    fn v2_cluster_params(v: &Json) -> std::result::Result<ClusterParams, V2Error> {
+        let mut params = ClusterParams::default();
+        if let Some(x) = v.get("overlap") {
+            params.overlap = x
+                .as_f64()
+                .filter(|o| (0.0..=1.0).contains(o))
+                .ok_or_else(|| V2Error::new("invalid_argument", "overlap must be a number in 0..=1"))?;
+        }
+        if let Some(x) = v.get("bucket_mib") {
+            let mib = x
+                .as_f64()
+                .filter(|b| b.is_finite() && *b >= 0.0)
+                .ok_or_else(|| {
+                    V2Error::new("invalid_argument", "bucket_mib must be a non-negative number")
+                })?;
+            params.bucket_bytes = mib * 1024.0 * 1024.0;
+        }
+        Ok(params)
+    }
+
+    fn check_sweep(cells: usize) -> std::result::Result<(), V2Error> {
+        if cells > MAX_CLUSTER_SWEEP {
+            return Err(V2Error::new(
+                "invalid_argument",
+                format!("cluster sweep of {cells} configurations exceeds the {MAX_CLUSTER_SWEEP} limit"),
+            ));
+        }
+        Ok(())
+    }
+
+    fn register_error(e: RegisterError) -> V2Error {
+        match e {
+            RegisterError::Conflict(m) => V2Error::new("conflict", m),
+            RegisterError::Invalid(m) => V2Error::new("invalid_argument", m),
+        }
+    }
+
+    fn cluster_response(report: &crate::engine::ClusterReport) -> ClusterResponse {
+        ClusterResponse {
+            model: report.trace.model.clone(),
+            batch: report.trace.batch_size,
+            origin: report.trace.origin.id().to_string(),
+            dest: report.dest.id().to_string(),
+            compute_ms: report.compute_ms,
+            configs: report
+                .configs
+                .iter()
+                .map(|c| ClusterConfig {
+                    topology: c.topology.name().to_string(),
+                    world: c.world,
+                    iter_ms: c.pred.iter_ms,
+                    comm_ms: c.pred.comm_ms,
+                    exposed_ms: c.pred.exposed_ms,
+                    throughput: c.pred.throughput,
+                    efficiency: c.pred.efficiency,
+                    cost_normalized_throughput: c.cost_normalized_throughput,
+                })
+                .collect(),
+        }
+    }
+
+    fn cluster_rank_response(ranking: &crate::engine::ClusterRanking) -> ClusterRankResponse {
+        ClusterRankResponse {
+            model: ranking.trace.model.clone(),
+            batch: ranking.trace.batch_size,
+            origin: ranking.trace.origin.id().to_string(),
+            ranking: ranking
+                .entries
+                .iter()
+                .map(|e| ClusterRankedConfig {
+                    dest: e.dest.id().to_string(),
+                    topology: e.topology.name().to_string(),
+                    world: e.world,
+                    iter_ms: e.pred.iter_ms,
+                    throughput: e.pred.throughput,
+                    efficiency: e.pred.efficiency,
+                    cost_normalized_throughput: e.cost_normalized_throughput,
+                })
+                .collect(),
+        }
     }
 
     /// Resolve a v2 `dests` field: explicit names, or the full registry.
@@ -2068,5 +2697,167 @@ mod tests {
         assert!(ok.iter_ms > 0.0);
         let err_line = lines.next().unwrap().unwrap();
         assert!(err_line.contains("bad request"));
+    }
+
+    #[test]
+    fn v2_predict_cluster_world_one_matches_v2_predict() {
+        let s = wave_service();
+        let topologies = vec!["dgx".to_string()];
+        let reply = s.handle_line(&v2_predict_cluster_request(
+            "mlp",
+            8,
+            "t4",
+            "v100",
+            Some(&topologies),
+            Some(&[1, 4]),
+            None,
+        ));
+        let resp = ClusterResponse::from_json(&reply).unwrap();
+        assert_eq!(resp.model, "mlp");
+        assert_eq!(resp.dest, "V100");
+        assert_eq!(resp.configs.len(), 2);
+        for c in &resp.configs {
+            assert_eq!(c.topology, "dgx");
+            assert!(c.efficiency > 0.0 && c.efficiency <= 1.0 + 1e-9);
+            assert!(c.exposed_ms >= 0.0);
+        }
+        // The world=1 cell is the single-GPU prediction, bit-identical.
+        let single = s.handle_line(&v2_predict_model_request("mlp", 8, "t4", "v100", None));
+        let single_ms = json::parse(&single).unwrap().get("iter_ms").and_then(Json::as_f64).unwrap();
+        let w1 = resp.configs.iter().find(|c| c.world == 1).unwrap();
+        assert_eq!(w1.iter_ms.to_bits(), single_ms.to_bits());
+        assert_eq!(w1.comm_ms, 0.0);
+    }
+
+    #[test]
+    fn v2_predict_cluster_defaults_cover_every_topology_and_world() {
+        let s = wave_service();
+        let reply = s.handle_line(&v2_predict_cluster_request("mlp", 8, "t4", "v100", None, None, None));
+        let resp = ClusterResponse::from_json(&reply).unwrap();
+        // At least the dgx/cloud seeds × the default world sweep (other
+        // concurrently running tests may have registered more
+        // topologies).
+        assert!(resp.configs.len() >= 2 * DEFAULT_CLUSTER_WORLDS.len());
+        for t in ["dgx", "cloud"] {
+            for &w in &DEFAULT_CLUSTER_WORLDS {
+                assert!(
+                    resp.configs.iter().any(|c| c.topology == t && c.world == w),
+                    "missing cell ({t}, {w})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn v2_rank_cluster_is_sorted_and_complete() {
+        let s = wave_service();
+        let dests = vec!["v100".to_string(), "t4".to_string()];
+        let topologies = vec!["dgx".to_string(), "cloud".to_string()];
+        let reply = s.handle_line(&v2_rank_cluster_request(
+            "mlp",
+            8,
+            "t4",
+            Some(&dests),
+            Some(&topologies),
+            Some(&[1, 4]),
+            None,
+        ));
+        let resp = ClusterRankResponse::from_json(&reply).unwrap();
+        assert_eq!(resp.ranking.len(), 2 * 2 * 2);
+        // Both dests are rentable, so the whole ranking is priced and
+        // descending in cost-normalized throughput.
+        let priced: Vec<f64> = resp
+            .ranking
+            .iter()
+            .map(|e| e.cost_normalized_throughput.unwrap())
+            .collect();
+        for w in priced.windows(2) {
+            assert!(w[0] >= w[1], "ranking must be descending: {priced:?}");
+        }
+    }
+
+    #[test]
+    fn v2_cluster_errors_are_structured() {
+        let s = wave_service();
+        let check = |line: &str, code: &str| {
+            let reply = s.handle_line(line);
+            let v = json::parse(&reply).unwrap();
+            assert_eq!(
+                v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+                Some(code),
+                "line {line} → {reply}"
+            );
+        };
+        check(
+            "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"topologies\":[\"no-such-topology\"]}",
+            "unknown_topology",
+        );
+        check(
+            "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"topologies\":[{\"name\":\"sim-svc-badlink\",\"gpus_per_node\":4,\"intra\":\"no-such-link\",\"inter\":\"eth25g\"}]}",
+            "unknown_link",
+        );
+        check(
+            "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"worlds\":[0]}",
+            "invalid_argument",
+        );
+        check(
+            "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"topologies\":[]}",
+            "invalid_argument",
+        );
+        check(
+            "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"overlap\":1.5}",
+            "invalid_argument",
+        );
+        check(
+            "{\"v\":2,\"op\":\"rank_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dests\":[\"a100\"]}",
+            "unknown_device",
+        );
+        check(
+            "{\"v\":2,\"op\":\"export_workload\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"world\":8}",
+            "bad_request",
+        );
+        // An oversized sweep is refused before any compute.
+        let worlds: Vec<usize> = (1..=MAX_CLUSTER_SWEEP + 1).collect();
+        let line = v2_predict_cluster_request("mlp", 8, "t4", "v100", None, Some(&worlds), None);
+        check(&line, "invalid_argument");
+    }
+
+    #[test]
+    fn v2_inline_topologies_register_links_idempotently() {
+        let s = wave_service();
+        let line = "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"worlds\":[2],\"topologies\":[{\"name\":\"sim-svc-pod\",\"gpus_per_node\":2,\"intra\":\"nvlink\",\"inter\":{\"name\":\"sim-svc-wan\",\"bandwidth_gbps\":10.0,\"step_latency_ms\":0.02}}]}";
+        let resp = ClusterResponse::from_json(&s.handle_line(line)).unwrap();
+        assert_eq!(resp.configs.len(), 1);
+        assert_eq!(resp.configs[0].topology, "sim-svc-pod");
+        // Replay is idempotent (same inline specs re-intern silently)…
+        let replay = ClusterResponse::from_json(&s.handle_line(line)).unwrap();
+        assert_eq!(replay.configs[0].iter_ms.to_bits(), resp.configs[0].iter_ms.to_bits());
+        // …while the same name with a different shape is a conflict.
+        let clash = s.handle_line(
+            "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"worlds\":[2],\"topologies\":[{\"name\":\"sim-svc-pod\",\"gpus_per_node\":4,\"intra\":\"nvlink\",\"inter\":\"eth25g\"}]}",
+        );
+        let v = json::parse(&clash).unwrap();
+        assert_eq!(
+            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("conflict")
+        );
+    }
+
+    #[test]
+    fn v2_export_workload_round_trips() {
+        let s = wave_service();
+        let reply = s.handle_line(&v2_export_workload_request("mlp", 8, "t4", "v100", "dgx", 16, None));
+        let v = json::parse(&reply).unwrap();
+        v2_check_error(&v).unwrap();
+        assert_eq!(v.req_str("op").unwrap(), "export_workload");
+        let w = crate::comm::Workload::from_value(&v).unwrap();
+        assert_eq!(w.topology, "dgx");
+        assert_eq!(w.world, 16);
+        assert!(w.compute_ms > 0.0);
+        assert!(!w.comm_ops.is_empty());
+        assert!(w.comm_ops.iter().all(|op| op.participants.iter().all(|&r| r < 16)));
+        // A re-serialized workload parses back to the same value.
+        let again = crate::comm::Workload::from_value(&json::parse(&w.to_value().dump()).unwrap()).unwrap();
+        assert_eq!(again, w);
     }
 }

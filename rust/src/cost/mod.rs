@@ -20,6 +20,20 @@ pub fn cost_normalized_throughput(device: Device, tput: f64) -> Option<f64> {
     device.spec().rental_usd_per_hr.map(|price| tput / price)
 }
 
+/// Cost-normalized throughput for a `world`-GPU cluster: global
+/// samples/s per total rental $/hr (`world ×` the per-device price).
+/// `None` when the device is not offered for rent.
+pub fn cluster_cost_normalized_throughput(
+    device: Device,
+    world: usize,
+    global_tput: f64,
+) -> Option<f64> {
+    device
+        .spec()
+        .rental_usd_per_hr
+        .map(|price| global_tput / (world as f64 * price))
+}
+
 /// Dollars to process `samples` at a given throughput on a rented device.
 pub fn cost_to_train(device: Device, tput: f64, samples: u64) -> Option<f64> {
     device
@@ -58,6 +72,18 @@ mod tests {
         let t4 = cost_normalized_throughput(Device::T4, 100.0).unwrap();
         let v100 = cost_normalized_throughput(Device::V100, 100.0).unwrap();
         assert!(t4 > v100);
+    }
+
+    #[test]
+    fn cluster_cost_normalization_divides_by_fleet_price() {
+        // Perfect linear scaling keeps samples/s/$ flat as world grows.
+        let single = cost_normalized_throughput(Device::T4, 100.0).unwrap();
+        let four = cluster_cost_normalized_throughput(Device::T4, 4, 400.0).unwrap();
+        assert!((four - single).abs() < 1e-9);
+        // Sublinear scaling makes the cluster strictly less cost-efficient.
+        let lossy = cluster_cost_normalized_throughput(Device::T4, 4, 300.0).unwrap();
+        assert!(lossy < single);
+        assert!(cluster_cost_normalized_throughput(Device::Rtx2080Ti, 4, 300.0).is_none());
     }
 
     #[test]

@@ -56,6 +56,8 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
 use std::sync::mpsc;
 use std::sync::{Arc, OnceLock};
 
+use crate::comm;
+use crate::comm::{ClusterParams, ClusterPrediction, Topology};
 use crate::cost;
 use crate::device::registry::RegisterError;
 use crate::device::{Device, NewDevice};
@@ -105,6 +107,44 @@ pub struct RankEntry {
 pub struct Ranking {
     pub trace: Arc<Trace>,
     pub entries: Vec<RankEntry>,
+}
+
+/// One `(topology, world)` cell of a [`ClusterReport`].
+pub struct ClusterCell {
+    pub topology: Topology,
+    pub world: usize,
+    pub pred: ClusterPrediction,
+    /// Global samples/s per total rental $/hr (`world ×` the device
+    /// price); `None` for devices not offered for rent.
+    pub cost_normalized_throughput: Option<f64>,
+}
+
+/// The result of [`PredictionEngine::predict_cluster`]: one destination
+/// GPU swept across a topology × world-size grid. `configs` is
+/// topology-major in the caller's order.
+pub struct ClusterReport {
+    pub trace: Arc<Trace>,
+    pub dest: Device,
+    /// Per-replica single-GPU compute time (shared by every cell), ms.
+    pub compute_ms: f64,
+    pub configs: Vec<ClusterCell>,
+}
+
+/// One entry of a [`ClusterRanking`].
+pub struct ClusterRankEntry {
+    pub dest: Device,
+    pub topology: Topology,
+    pub world: usize,
+    pub pred: ClusterPrediction,
+    pub cost_normalized_throughput: Option<f64>,
+}
+
+/// The result of [`PredictionEngine::rank_cluster`]: every
+/// (destination, topology, world) configuration, best decision first
+/// (same ordering as [`rank_order`], with the fleet price as the cost).
+pub struct ClusterRanking {
+    pub trace: Arc<Trace>,
+    pub entries: Vec<ClusterRankEntry>,
 }
 
 /// The ordering used by [`PredictionEngine::rank`] (and the CLI table):
@@ -836,6 +876,214 @@ impl PredictionEngine {
         }
     }
 
+    /// Predict one `(model, batch, origin) → dest` pair across a whole
+    /// topology × world-size grid in one call: the single-GPU compute
+    /// time is evaluated once (Habitat's job), the trace's gradient
+    /// volume and backward share are derived once, and each
+    /// `(topology, world)` cell composes them with the bucketed
+    /// hierarchical allreduce model ([`comm::cluster::compose`]).
+    /// `world == 1` cells carry zero communication, so their `iter_ms`
+    /// is bit-identical to [`PredictionEngine::predict`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn predict_cluster(
+        &self,
+        model: &str,
+        batch: usize,
+        origin: Device,
+        dest: Device,
+        precision: Precision,
+        topologies: &[Topology],
+        worlds: &[usize],
+        params: &ClusterParams,
+    ) -> Result<ClusterReport> {
+        anyhow::ensure!(batch > 0, "batch must be positive");
+        let analyzed = self.analyzed(model, batch, origin)?;
+        self.cluster_report(&analyzed, dest, precision, topologies, worlds, params)
+    }
+
+    /// [`PredictionEngine::predict_cluster`] for a previously submitted
+    /// trace.
+    pub fn predict_cluster_uploaded(
+        &self,
+        trace_id: &str,
+        dest: Device,
+        precision: Precision,
+        topologies: &[Topology],
+        worlds: &[usize],
+        params: &ClusterParams,
+    ) -> Result<ClusterReport> {
+        let analyzed = self.uploaded_or_err(trace_id)?;
+        self.cluster_report(&analyzed, dest, precision, topologies, worlds, params)
+    }
+
+    fn check_cluster_grid(topologies: &[Topology], worlds: &[usize]) -> Result<()> {
+        anyhow::ensure!(!topologies.is_empty(), "cluster sweep needs at least one topology");
+        anyhow::ensure!(!worlds.is_empty(), "cluster sweep needs at least one world size");
+        anyhow::ensure!(
+            worlds.iter().all(|&w| w >= 1),
+            "world sizes must be at least 1"
+        );
+        Ok(())
+    }
+
+    fn cluster_report(
+        &self,
+        analyzed: &AnalyzedTrace,
+        dest: Device,
+        precision: Precision,
+        topologies: &[Topology],
+        worlds: &[usize],
+        params: &ClusterParams,
+    ) -> Result<ClusterReport> {
+        Self::check_cluster_grid(topologies, worlds)?;
+        let pred = self.evaluate(&analyzed.plan, dest, precision);
+        let compute_ms = pred.run_time_ms();
+        let tc = comm::trace_comm(&analyzed.trace);
+        let batch = analyzed.plan.batch_size;
+        let mut configs = Vec::with_capacity(topologies.len() * worlds.len());
+        for &topology in topologies {
+            for &world in worlds {
+                let cell = comm::cluster::compose(compute_ms, batch, &tc, topology, world, params);
+                configs.push(ClusterCell {
+                    topology,
+                    world,
+                    cost_normalized_throughput: cost::cluster_cost_normalized_throughput(
+                        dest,
+                        world,
+                        cell.throughput,
+                    ),
+                    pred: cell,
+                });
+            }
+        }
+        Ok(ClusterReport {
+            trace: Arc::clone(&analyzed.trace),
+            dest,
+            compute_ms,
+            configs,
+        })
+    }
+
+    /// Rank every `(destination, topology, world)` configuration of a
+    /// cluster sweep in one call. All destinations' compute times come
+    /// from **one** kernel-major batched evaluation
+    /// ([`PredictionEngine::evaluate_batch`]); the collective model then
+    /// composes each cell, and the result is sorted like
+    /// [`PredictionEngine::rank`] — priced fleets first by descending
+    /// cost-normalized global throughput, unpriced after by raw global
+    /// throughput.
+    #[allow(clippy::too_many_arguments)]
+    pub fn rank_cluster(
+        &self,
+        model: &str,
+        batch: usize,
+        origin: Device,
+        dests: &[Device],
+        precision: Precision,
+        topologies: &[Topology],
+        worlds: &[usize],
+        params: &ClusterParams,
+    ) -> Result<ClusterRanking> {
+        anyhow::ensure!(batch > 0, "batch must be positive");
+        let analyzed = self.analyzed(model, batch, origin)?;
+        self.rank_cluster_analyzed(&analyzed, dests, precision, topologies, worlds, params)
+    }
+
+    /// [`PredictionEngine::rank_cluster`] for a previously submitted
+    /// trace.
+    pub fn rank_cluster_uploaded(
+        &self,
+        trace_id: &str,
+        dests: &[Device],
+        precision: Precision,
+        topologies: &[Topology],
+        worlds: &[usize],
+        params: &ClusterParams,
+    ) -> Result<ClusterRanking> {
+        let analyzed = self.uploaded_or_err(trace_id)?;
+        self.rank_cluster_analyzed(&analyzed, dests, precision, topologies, worlds, params)
+    }
+
+    fn rank_cluster_analyzed(
+        &self,
+        analyzed: &AnalyzedTrace,
+        dests: &[Device],
+        precision: Precision,
+        topologies: &[Topology],
+        worlds: &[usize],
+        params: &ClusterParams,
+    ) -> Result<ClusterRanking> {
+        anyhow::ensure!(!dests.is_empty(), "rank_cluster needs at least one destination");
+        Self::check_cluster_grid(topologies, worlds)?;
+        let preds = self.evaluate_batch(&analyzed.plan, dests, precision);
+        let tc = comm::trace_comm(&analyzed.trace);
+        let batch = analyzed.plan.batch_size;
+        let mut entries = Vec::with_capacity(dests.len() * topologies.len() * worlds.len());
+        for (&dest, pred) in dests.iter().zip(&preds) {
+            let compute_ms = pred.run_time_ms();
+            for &topology in topologies {
+                for &world in worlds {
+                    let cell =
+                        comm::cluster::compose(compute_ms, batch, &tc, topology, world, params);
+                    entries.push(ClusterRankEntry {
+                        dest,
+                        topology,
+                        world,
+                        cost_normalized_throughput: cost::cluster_cost_normalized_throughput(
+                            dest,
+                            world,
+                            cell.throughput,
+                        ),
+                        pred: cell,
+                    });
+                }
+            }
+        }
+        entries.sort_by(|a, b| {
+            rank_order(
+                (a.cost_normalized_throughput, a.pred.throughput),
+                (b.cost_normalized_throughput, b.pred.throughput),
+            )
+        });
+        Ok(ClusterRanking {
+            trace: Arc::clone(&analyzed.trace),
+            entries,
+        })
+    }
+
+    /// Export the predicted per-step compute + collective schedule for
+    /// one cluster configuration as COMM_OPS-style records
+    /// ([`comm::Workload`]) — the input format an external network
+    /// simulator can replay.
+    #[allow(clippy::too_many_arguments)]
+    pub fn export_workload(
+        &self,
+        model: &str,
+        batch: usize,
+        origin: Device,
+        dest: Device,
+        precision: Precision,
+        topology: Topology,
+        world: usize,
+        params: &ClusterParams,
+    ) -> Result<comm::Workload> {
+        anyhow::ensure!(batch > 0, "batch must be positive");
+        anyhow::ensure!(world >= 1, "world must be at least 1");
+        let analyzed = self.analyzed(model, batch, origin)?;
+        let pred = self.evaluate(&analyzed.plan, dest, precision);
+        let tc = comm::trace_comm(&analyzed.trace);
+        Ok(comm::Workload {
+            model: analyzed.trace.model.clone(),
+            batch: analyzed.plan.batch_size,
+            origin: origin.to_string(),
+            dest: dest.to_string(),
+            topology: topology.name().to_string(),
+            world,
+            compute_ms: pred.run_time_ms(),
+            comm_ops: comm::comm_schedule(topology, world, tc.grad_bytes, params),
+        })
+    }
+
     /// Register a new device through this engine: intern it in the
     /// process-wide registry, then — if it is genuinely new — **extend
     /// every cached plan once** with the device's computed γ/wave/AMP
@@ -1341,6 +1589,134 @@ mod tests {
         }
         // Idempotent re-registration neither errors nor re-extends.
         assert_eq!(e.register_device(&desc).unwrap(), d);
+    }
+
+    #[test]
+    fn predict_cluster_world_one_is_bit_identical_to_predict() {
+        let e = engine();
+        let topos = [Topology::DGX, Topology::CLOUD];
+        let worlds = [1usize, 2, 8, 64];
+        let report = e
+            .predict_cluster(
+                "mlp",
+                32,
+                Device::T4,
+                Device::V100,
+                Precision::Fp32,
+                &topos,
+                &worlds,
+                &ClusterParams::default(),
+            )
+            .unwrap();
+        assert_eq!(report.configs.len(), topos.len() * worlds.len());
+        let single = e.predict("mlp", 32, Device::T4, Device::V100, Precision::Fp32).unwrap();
+        assert_eq!(report.compute_ms.to_bits(), single.pred.run_time_ms().to_bits());
+        for cell in &report.configs {
+            assert!(cell.pred.exposed_ms >= 0.0);
+            assert!(cell.pred.efficiency > 0.0 && cell.pred.efficiency <= 1.0 + 1e-9);
+            if cell.world == 1 {
+                assert_eq!(
+                    cell.pred.iter_ms.to_bits(),
+                    single.pred.run_time_ms().to_bits(),
+                    "{}: world=1 must reproduce the single-GPU path",
+                    cell.topology
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rank_cluster_sorts_and_matches_the_scalar_composition() {
+        let e = engine();
+        let dests = [Device::V100, Device::T4];
+        let topos = [Topology::DGX, Topology::CLOUD];
+        let worlds = [1usize, 4, 16];
+        let params = ClusterParams::default();
+        let ranking = e
+            .rank_cluster("mlp", 32, Device::T4, &dests, Precision::Fp32, &topos, &worlds, &params)
+            .unwrap();
+        assert_eq!(ranking.entries.len(), dests.len() * topos.len() * worlds.len());
+        for pair in ranking.entries.windows(2) {
+            assert_ne!(
+                rank_order(
+                    (pair[0].cost_normalized_throughput, pair[0].pred.throughput),
+                    (pair[1].cost_normalized_throughput, pair[1].pred.throughput),
+                ),
+                std::cmp::Ordering::Greater,
+                "entries must be in rank order"
+            );
+        }
+        // Every entry is bit-identical to the per-destination report.
+        for dest in dests {
+            let report = e
+                .predict_cluster("mlp", 32, Device::T4, dest, Precision::Fp32, &topos, &worlds, &params)
+                .unwrap();
+            for cell in &report.configs {
+                let en = ranking
+                    .entries
+                    .iter()
+                    .find(|en| {
+                        en.dest == dest && en.topology == cell.topology && en.world == cell.world
+                    })
+                    .unwrap();
+                assert_eq!(en.pred.iter_ms.to_bits(), cell.pred.iter_ms.to_bits());
+                assert_eq!(en.pred.throughput.to_bits(), cell.pred.throughput.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_sweeps_reject_bad_grids() {
+        let e = engine();
+        let params = ClusterParams::default();
+        assert!(e
+            .predict_cluster("mlp", 32, Device::T4, Device::V100, Precision::Fp32, &[], &[1], &params)
+            .is_err());
+        assert!(e
+            .predict_cluster(
+                "mlp", 32, Device::T4, Device::V100, Precision::Fp32,
+                &[Topology::DGX], &[], &params,
+            )
+            .is_err());
+        assert!(e
+            .predict_cluster(
+                "mlp", 32, Device::T4, Device::V100, Precision::Fp32,
+                &[Topology::DGX], &[0], &params,
+            )
+            .is_err());
+        assert!(e
+            .rank_cluster(
+                "mlp", 32, Device::T4, &[], Precision::Fp32,
+                &[Topology::DGX], &[1], &params,
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn exported_workload_is_consistent_with_the_cost_model() {
+        let e = engine();
+        let params = ClusterParams::default();
+        let w = e
+            .export_workload(
+                "mlp", 32, Device::T4, Device::V100, Precision::Fp32,
+                Topology::DGX, 16, &params,
+            )
+            .unwrap();
+        assert_eq!(w.model, "mlp");
+        assert_eq!(w.world, 16);
+        assert_eq!(w.topology, "dgx");
+        assert!(w.compute_ms > 0.0);
+        assert!(!w.comm_ops.is_empty());
+        for op in &w.comm_ops {
+            assert!(op.bytes > 0.0);
+            assert!(!op.participants.is_empty());
+            assert!(op.participants.iter().all(|&r| r < 16));
+        }
+        // Round-trips through its JSON encoding.
+        let parsed =
+            comm::Workload::from_value(&crate::util::json::parse(&w.to_value().dump()).unwrap())
+                .unwrap();
+        assert_eq!(parsed, w);
     }
 
     #[test]

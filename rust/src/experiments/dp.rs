@@ -1,48 +1,57 @@
-//! §6.1.1 — data-parallel scaling predictions.
+//! §6.1.1 — data-parallel scaling predictions, cluster-scale.
 //!
-//! Habitat's single-GPU predictions composed with the ring all-reduce
-//! model: predicted scaling curves (1–8 × V100) for a compute-heavy model
-//! (ResNet-50) and a communication-heavy model (GNMT, 160M parameters),
-//! over NVLink and PCIe 3.0 — the qualitative pattern every data-parallel
-//! performance study reports (GNMT over PCIe scales poorly; ResNet over
-//! NVLink scales almost linearly).
+//! Habitat's single-GPU predictions composed with the topology-aware
+//! collective model ([`crate::comm`]): predicted scaling curves
+//! (1–256 × V100) for a compute-heavy model (ResNet-50) and a
+//! communication-heavy model (GNMT, 160M parameters), over the two seed
+//! topologies — `dgx` (NVLink within a node, InfiniBand across) and
+//! `cloud` (PCIe 3.0 within, 25 GbE across). The qualitative pattern
+//! every data-parallel performance study reports: GNMT on `cloud`
+//! scales poorly, ResNet on `dgx` stays near-linear well past a single
+//! node.
 
+use crate::comm::{ClusterParams, Topology};
+use crate::coordinator::DEFAULT_CLUSTER_WORLDS;
 use crate::device::Device;
 use crate::experiments::Ctx;
-use crate::predict::distributed::{predict_data_parallel, DataParallelConfig, Interconnect};
 use crate::util::csv::CsvWriter;
 use crate::{Precision, Result};
 
 pub fn run(ctx: &Ctx) -> Result<()> {
-    println!("\n=== §6.1.1: data-parallel scaling (Habitat compute + ring all-reduce) ===");
+    println!("\n=== §6.1.1: data-parallel scaling (Habitat compute + topology-aware collectives) ===");
     let origin = Device::Rtx2070;
     let dest = Device::V100;
+    let topologies = [Topology::DGX, Topology::CLOUD];
+    let worlds = DEFAULT_CLUSTER_WORLDS;
+    let params = ClusterParams::default();
     let mut w = CsvWriter::create(
         ctx.csv_path("dp"),
-        &["model", "interconnect", "world", "iter_ms", "exposed_comm_ms", "throughput", "efficiency"],
+        &["model", "topology", "world", "iter_ms", "exposed_comm_ms", "throughput", "efficiency"],
     )?;
     for (model, batch) in [("resnet50", 32usize), ("gnmt", 32)] {
-        let analyzed = ctx.engine().analyzed(model, batch, origin)?;
-        let trace = &analyzed.trace;
-        let pred = ctx.engine().evaluate(&analyzed.plan, dest, Precision::Fp32);
-        for (ic_name, ic) in [("nvlink", Interconnect::NvLink), ("pcie3", Interconnect::Pcie3)] {
-            println!("\n{model} bs={batch}/gpu on {dest} over {ic_name}:");
+        // One kernel-major pass per model: the whole topology × world
+        // grid shares a single compute prediction.
+        let report = ctx.engine().predict_cluster(
+            model,
+            batch,
+            origin,
+            dest,
+            Precision::Fp32,
+            &topologies,
+            &worlds,
+            &params,
+        )?;
+        for topology in topologies {
+            println!("\n{model} bs={batch}/gpu on {dest} over {}:", topology.name());
             println!(
                 "{:>6} {:>10} {:>13} {:>12} {:>11}",
                 "GPUs", "iter ms", "exposed comm", "samples/s", "efficiency"
             );
-            for world in [1usize, 2, 4, 8] {
-                let dp = predict_data_parallel(
-                    trace,
-                    &pred,
-                    &DataParallelConfig {
-                        world,
-                        interconnect: ic,
-                        overlap: 0.7,
-                    },
-                );
+            for cell in report.configs.iter().filter(|c| c.topology == topology) {
+                let dp = &cell.pred;
                 println!(
-                    "{world:>6} {:>10.1} {:>12.1}ms {:>12.0} {:>10.0}%",
+                    "{:>6} {:>10.1} {:>12.1}ms {:>12.0} {:>10.0}%",
+                    cell.world,
                     dp.iter_ms,
                     dp.exposed_ms,
                     dp.throughput,
@@ -50,8 +59,8 @@ pub fn run(ctx: &Ctx) -> Result<()> {
                 );
                 w.row(&[
                     model.to_string(),
-                    ic_name.to_string(),
-                    world.to_string(),
+                    topology.name().to_string(),
+                    cell.world.to_string(),
                     format!("{:.4}", dp.iter_ms),
                     format!("{:.4}", dp.exposed_ms),
                     format!("{:.2}", dp.throughput),
@@ -61,6 +70,6 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         }
     }
     w.finish()?;
-    println!("\n(expected shape: resnet/nvlink ≈ linear; gnmt/pcie3 scales worst)");
+    println!("\n(expected shape: resnet/dgx ≈ linear; gnmt/cloud scales worst)");
     Ok(())
 }

@@ -11,6 +11,13 @@
 //!
 //! The interesting number is how close habitat-informed placement gets to
 //! the oracle (same greedy policy on ground-truth rates).
+//!
+//! A second round repeats the comparison for *gang* placements: each job
+//! is a ×2 data-parallel gang on the `dgx` topology, rates come from
+//! [`ThroughputMatrix::build_cluster`] (Habitat compute composed with
+//! the topology-aware collective model), and the ground truth applies
+//! the same collective composition to the measured single-GPU times —
+//! so the gap measured is purely Habitat's compute-prediction error.
 
 use crate::cluster::{schedule, Inventory, Job, ThroughputMatrix};
 use crate::device::Device;
@@ -139,6 +146,79 @@ pub fn run(ctx: &Ctx) -> Result<()> {
             name.to_string(),
             format!("{obj:.4}"),
             format!("{:.2}", obj / oracle_obj * 100.0),
+        ])?;
+    }
+
+    // ── Round 2: ×2 gang placement on the dgx topology ──────────────
+    // One gang slot per device model (the 2 GPUs of the inventory pair
+    // up), so 4 of the 8 jobs place — the policies fight over which.
+    println!("\n=== Scheduler value, ×2 gangs on dgx (4 gang slots) ===");
+    let topology = crate::comm::Topology::DGX;
+    let world = 2usize;
+    let params = crate::comm::ClusterParams::default();
+    let gang_inventory: Inventory = devices.iter().map(|d| (*d, 1usize)).collect();
+
+    // Ground-truth gang throughput: the measured single-GPU time run
+    // through the identical collective composition.
+    let truth_gang = |j: usize, d: Device| -> f64 {
+        let job = &jobs[j];
+        let compute_ms = crate::experiments::ground_truth_ms(&job.model, job.batch, d);
+        let comm = crate::comm::trace_comm(&pool[j].1);
+        crate::comm::cluster::compose(compute_ms, job.batch, &comm, topology, world, &params)
+            .throughput
+    };
+    let gang_objective = |placements: &[(usize, Device)]| -> f64 {
+        placements
+            .iter()
+            .map(|(j, d)| {
+                let best = devices.iter().map(|dev| truth_gang(*j, *dev)).fold(f64::MIN, f64::max);
+                truth_gang(*j, *d) / best
+            })
+            .sum()
+    };
+    let to_indices = |placements: Vec<crate::cluster::Placement>| -> Vec<(usize, Device)> {
+        placements
+            .into_iter()
+            .map(|p| {
+                let j = jobs.iter().position(|job| job.name == p.job).unwrap();
+                (j, p.device)
+            })
+            .collect()
+    };
+
+    // habitat policy: greedy on gang rates *predicted* by the cluster
+    // composition over the batched single-GPU sweep.
+    let predicted_gang =
+        ThroughputMatrix::build_cluster(ctx.predictor(), &pool, &devices, topology, world, &params);
+    let habitat_gang = to_indices(schedule(&predicted_gang, &gang_inventory));
+
+    // oracle: same greedy on ground-truth gang rates.
+    let oracle_gang_matrix = ThroughputMatrix {
+        jobs: jobs.clone(),
+        devices: devices.to_vec(),
+        matrix: (0..jobs.len())
+            .map(|j| devices.iter().map(|d| truth_gang(j, *d)).collect())
+            .collect(),
+    };
+    let oracle_gang = to_indices(schedule(&oracle_gang_matrix, &gang_inventory));
+
+    // round-robin: first 4 jobs in order, devices cycled.
+    let rr_gang: Vec<(usize, Device)> =
+        (0..devices.len()).map(|j| (j, devices[j % devices.len()])).collect();
+
+    let oracle_gang_obj = gang_objective(&oracle_gang);
+    println!("{:<24} {:>10} {:>12}", "policy", "objective", "% of oracle");
+    for (name, placement) in [
+        ("oracle ×2 dgx", &oracle_gang),
+        ("habitat ×2 dgx", &habitat_gang),
+        ("round-robin ×2 dgx", &rr_gang),
+    ] {
+        let obj = gang_objective(placement);
+        println!("{name:<24} {obj:>10.3} {:>11.1}%", obj / oracle_gang_obj * 100.0);
+        w.row(&[
+            name.to_string(),
+            format!("{obj:.4}"),
+            format!("{:.2}", obj / oracle_gang_obj * 100.0),
         ])?;
     }
     w.finish()?;

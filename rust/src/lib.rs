@@ -98,6 +98,7 @@
 //! errors, while v1 request lines keep working bit-identically.
 
 pub mod cluster;
+pub mod comm;
 pub mod coordinator;
 pub mod cost;
 pub mod dataset;

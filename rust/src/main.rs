@@ -7,6 +7,11 @@
 //! habitat compare   [--model M] [--batch N] [--origin D] [--dp WORLD]
 //! habitat dataset   [--out DIR] [--configs N] [--seed S]
 //! habitat experiment <id|all> [--out DIR] [--artifacts DIR]
+//! habitat cluster   [--model M] [--batch N] [--origin D] [--dest D]
+//!                   [--topologies T,T] [--worlds N,N] [--rank] [--dests D,D]
+//!                   [--overlap F] [--bucket-mib F]
+//! habitat workload  [--model M] [--batch N] [--origin D] [--dest D]
+//!                   [--topology T] [--world N] [--out FILE]
 //! habitat serve     [--addr HOST:PORT] [--artifacts DIR] [--max-conns N]
 //!                   [--workers N] [--queue-depth N] [--store DIR]
 //! habitat devices
@@ -79,17 +84,58 @@ fn parse_device(s: &str) -> anyhow::Result<Device> {
     })
 }
 
-const USAGE: &str = "usage: habitat <predict|track|compare|dataset|experiment|serve|devices> [flags]
+const USAGE: &str = "usage: habitat <predict|track|compare|cluster|workload|dataset|experiment|serve|devices> [flags]
   predict    [--model M | --trace FILE] --batch N --origin DEV --dest DEV
              [--artifacts DIR] [--wave-only] [--amp]
   track      --model M --batch N --origin DEV --out FILE   (save a trace)
   compare    --model M --batch N --origin DEV [--dp WORLD] [--wave-only]
+  cluster    --model M --batch N --origin DEV --dest DEV [--topologies T,T]
+             [--worlds N,N] [--rank] [--dests D,D] [--overlap F]
+             [--bucket-mib F] [--wave-only] [--amp]
+  workload   --model M --batch N --origin DEV --dest DEV --topology T
+             --world N [--out FILE] [--bucket-mib F] [--wave-only] [--amp]
   dataset    [--out DIR] [--configs N] [--seed S]
   experiment <fig1|fig3|fig4|table1|contribution|fig6|fig7|amp|extrapolate|ablation|dp|scheduler|all>
              [--out DIR] [--artifacts DIR]
   serve      [--addr HOST:PORT] [--artifacts DIR] [--max-conns N]
              [--workers N] [--queue-depth N] [--store DIR]
   devices";
+
+fn parse_topologies(arg: &str) -> anyhow::Result<Vec<habitat::comm::Topology>> {
+    arg.split(',')
+        .filter(|s| !s.is_empty())
+        .map(|name| {
+            habitat::comm::topology::find_topology(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown topology {name:?}; expected one of {}",
+                    habitat::comm::topology::topology_names().join(", ")
+                )
+            })
+        })
+        .collect()
+}
+
+fn parse_worlds(arg: &str) -> anyhow::Result<Vec<usize>> {
+    arg.split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<usize>().map_err(|e| anyhow::anyhow!("--worlds: {s:?}: {e}")))
+        .collect()
+}
+
+fn cluster_params(args: &Args) -> anyhow::Result<habitat::comm::ClusterParams> {
+    let mut params = habitat::comm::ClusterParams::default();
+    if let Some(v) = args.flags.get("overlap") {
+        let o = v.parse::<f64>().map_err(|e| anyhow::anyhow!("--overlap: {e}"))?;
+        anyhow::ensure!((0.0..=1.0).contains(&o), "--overlap must be in 0..=1");
+        params.overlap = o;
+    }
+    if let Some(v) = args.flags.get("bucket-mib") {
+        let b = v.parse::<f64>().map_err(|e| anyhow::anyhow!("--bucket-mib: {e}"))?;
+        anyhow::ensure!(b.is_finite() && b >= 0.0, "--bucket-mib must be non-negative");
+        params.bucket_bytes = b * 1024.0 * 1024.0;
+    }
+    Ok(params)
+}
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -232,6 +278,128 @@ fn main() -> anyhow::Result<()> {
                     cnt.map(|v| format!("{v:.1}")).unwrap_or_else(|| "-".into()),
                     if fits { "yes" } else { "NO" },
                 );
+            }
+        }
+        "cluster" => {
+            let args = Args::parse(rest, &["rank", "wave-only", "amp"])?;
+            let model = args.get("model", "resnet50");
+            let batch = args.get_usize("batch", 32)?;
+            let origin = parse_device(&args.get("origin", "rtx2070"))?;
+            let precision = if args.has("amp") { Precision::Amp } else { Precision::Fp32 };
+            let topologies = parse_topologies(&args.get("topologies", "dgx,cloud"))?;
+            let worlds = match args.flags.get("worlds") {
+                Some(v) => parse_worlds(v)?,
+                None => habitat::coordinator::DEFAULT_CLUSTER_WORLDS.to_vec(),
+            };
+            anyhow::ensure!(!topologies.is_empty(), "--topologies must name at least one topology");
+            anyhow::ensure!(!worlds.is_empty() && worlds.iter().all(|&w| w >= 1), "--worlds must be positive integers");
+            let params = cluster_params(&args)?;
+            let engine = if args.has("wave-only") {
+                PredictionEngine::wave_only()
+            } else {
+                PredictionEngine::from_artifacts(&args.get("artifacts", "artifacts"))
+                    .unwrap_or_else(|e| {
+                        eprintln!("(wave scaling only: {e})");
+                        PredictionEngine::wave_only()
+                    })
+            };
+            if args.has("rank") {
+                // Rank every (destination, topology, world) configuration
+                // by cost-normalized global throughput — the cluster
+                // procurement question as one kernel-major sweep.
+                let dests: Vec<Device> = match args.flags.get("dests") {
+                    Some(list) => list
+                        .split(',')
+                        .filter(|s| !s.is_empty())
+                        .map(parse_device)
+                        .collect::<anyhow::Result<_>>()?,
+                    None => registry::all_devices(),
+                };
+                let ranking =
+                    engine.rank_cluster(&model, batch, origin, &dests, precision, &topologies, &worlds, &params)?;
+                println!(
+                    "{model} (batch {batch}/replica) from {origin}, best cluster decision first:"
+                );
+                println!(
+                    "{:<10} {:<8} {:>6} {:>10} {:>12} {:>6} {:>14}",
+                    "GPU", "topology", "world", "iter ms", "samples/s", "eff", "samples/s/$"
+                );
+                for e in &ranking.entries {
+                    println!(
+                        "{:<10} {:<8} {:>6} {:>10.2} {:>12.1} {:>5.0}% {:>14}",
+                        e.dest.id(),
+                        e.topology.name(),
+                        e.world,
+                        e.pred.iter_ms,
+                        e.pred.throughput,
+                        e.pred.efficiency * 100.0,
+                        e.cost_normalized_throughput
+                            .map(|v| format!("{v:.1}"))
+                            .unwrap_or_else(|| "-".into()),
+                    );
+                }
+            } else {
+                let dest = parse_device(&args.get("dest", "v100"))?;
+                let report =
+                    engine.predict_cluster(&model, batch, origin, dest, precision, &topologies, &worlds, &params)?;
+                println!(
+                    "{model} (batch {batch}/replica) from {origin} on {dest}: {:.2} ms/iter compute",
+                    report.compute_ms
+                );
+                println!(
+                    "{:<8} {:>6} {:>10} {:>10} {:>10} {:>12} {:>6}",
+                    "topology", "world", "comm ms", "exposed", "iter ms", "samples/s", "eff"
+                );
+                for c in &report.configs {
+                    println!(
+                        "{:<8} {:>6} {:>10.2} {:>10.2} {:>10.2} {:>12.1} {:>5.0}%",
+                        c.topology.name(),
+                        c.world,
+                        c.pred.comm_ms,
+                        c.pred.exposed_ms,
+                        c.pred.iter_ms,
+                        c.pred.throughput,
+                        c.pred.efficiency * 100.0,
+                    );
+                }
+            }
+        }
+        "workload" => {
+            let args = Args::parse(rest, &["wave-only", "amp"])?;
+            let model = args.get("model", "resnet50");
+            let batch = args.get_usize("batch", 32)?;
+            let origin = parse_device(&args.get("origin", "rtx2070"))?;
+            let dest = parse_device(&args.get("dest", "v100"))?;
+            let precision = if args.has("amp") { Precision::Amp } else { Precision::Fp32 };
+            let topology = parse_topologies(&args.get("topology", "dgx"))?
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("--topology must name a topology"))?;
+            let world = args.get_usize("world", 8)?;
+            anyhow::ensure!(world >= 1, "--world must be positive");
+            let params = cluster_params(&args)?;
+            let engine = if args.has("wave-only") {
+                PredictionEngine::wave_only()
+            } else {
+                PredictionEngine::from_artifacts(&args.get("artifacts", "artifacts"))
+                    .unwrap_or_else(|e| {
+                        eprintln!("(wave scaling only: {e})");
+                        PredictionEngine::wave_only()
+                    })
+            };
+            let workload =
+                engine.export_workload(&model, batch, origin, dest, precision, topology, world, &params)?;
+            let json = workload.to_value().dump();
+            match args.flags.get("out") {
+                Some(path) => {
+                    std::fs::write(path, format!("{json}\n"))?;
+                    println!(
+                        "wrote {} comm ops ({model} ×{world} on {}) → {path}",
+                        workload.comm_ops.len(),
+                        topology.name()
+                    );
+                }
+                None => println!("{json}"),
             }
         }
         "dataset" => {

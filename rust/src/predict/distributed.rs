@@ -9,12 +9,24 @@
 //! single-GPU trace profiled on a workstation yields multi-GPU scaling
 //! estimates for a cluster the user does not have.
 
+use crate::comm;
+use crate::comm::cluster::{trace_comm, TraceComm};
 use crate::device::Device;
 use crate::plan::{AnalyzedPlan, EvalScratch};
 use crate::predict::{HybridPredictor, PredictedTrace};
 use crate::tracker::Trace;
 
 /// Interconnect between the replicas.
+///
+/// **Deprecated in favor of [`comm::Link`]**: the bandwidth/latency
+/// constants this enum used to hard-code now live as seed entries of
+/// the process-wide link registry (same pattern as the device
+/// registry), where new links can also be registered at runtime. The
+/// enum is kept so existing constructors compile; every variant except
+/// `Custom` is a thin name for a registry link (see
+/// [`Interconnect::link`]), and the cost arithmetic delegates to
+/// [`comm::collective`] — bit-identical for the seed links, pinned by
+/// `seed_links_are_bit_identical_to_the_legacy_constants` below.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Interconnect {
     /// PCIe 3.0 x16 (~12 GB/s effective).
@@ -25,28 +37,48 @@ pub enum Interconnect {
     NvLink,
     /// 25 Gb/s Ethernet between nodes (~2.9 GB/s effective).
     Ethernet25G,
-    /// Custom effective bus bandwidth, GB/s.
+    /// Custom effective bus bandwidth, GB/s (not registry-backed; use
+    /// [`comm::register_link`] + `Interconnect::from` for a named,
+    /// wire-addressable link instead).
     Custom(f64),
+    /// A registry link — the forward-looking variant the legacy names
+    /// above are aliases of.
+    Link(comm::Link),
+}
+
+impl From<comm::Link> for Interconnect {
+    fn from(l: comm::Link) -> Interconnect {
+        Interconnect::Link(l)
+    }
 }
 
 impl Interconnect {
+    /// The registry link backing this interconnect (`None` only for
+    /// `Custom`, which never entered the registry).
+    pub fn link(self) -> Option<comm::Link> {
+        match self {
+            Interconnect::Pcie3 => Some(comm::Link::PCIE3),
+            Interconnect::Pcie4 => Some(comm::Link::PCIE4),
+            Interconnect::NvLink => Some(comm::Link::NVLINK),
+            Interconnect::Ethernet25G => Some(comm::Link::ETHERNET_25G),
+            Interconnect::Custom(_) => None,
+            Interconnect::Link(l) => Some(l),
+        }
+    }
+
     /// Effective all-reduce bus bandwidth, bytes/s.
     pub fn bandwidth_bytes(self) -> f64 {
-        let gbps = match self {
-            Interconnect::Pcie3 => 12.0,
-            Interconnect::Pcie4 => 24.0,
-            Interconnect::NvLink => 130.0,
-            Interconnect::Ethernet25G => 2.9,
-            Interconnect::Custom(v) => v,
-        };
-        gbps * 1e9
+        if let Interconnect::Custom(v) = self {
+            return v * 1e9;
+        }
+        self.link().expect("non-custom interconnects are registry links").spec().bandwidth_bytes()
     }
 
     /// Per-message launch latency (ring step), ms.
     pub fn step_latency_ms(self) -> f64 {
-        match self {
-            Interconnect::Ethernet25G => 0.03,
-            _ => 0.01,
+        match self.link() {
+            Some(l) => l.spec().step_latency_ms,
+            None => 0.01, // legacy Custom default
         }
     }
 }
@@ -91,15 +123,16 @@ pub struct DpPrediction {
 }
 
 /// Ring all-reduce time for `bytes` over `world` replicas:
-/// `2·(n−1)/n · bytes / BW + 2·(n−1) · latency`.
+/// `2·(n−1)/n · bytes / BW + 2·(n−1) · latency`. Delegates to
+/// [`comm::collective::ring_allreduce_ms_raw`] (same float-op order as
+/// the historical inline formula).
 pub fn ring_allreduce_ms(bytes: f64, world: usize, interconnect: Interconnect) -> f64 {
-    if world <= 1 {
-        return 0.0;
-    }
-    let n = world as f64;
-    let transfer = 2.0 * (n - 1.0) / n * bytes / interconnect.bandwidth_bytes() * 1e3;
-    let latency = 2.0 * (n - 1.0) * interconnect.step_latency_ms();
-    transfer + latency
+    comm::collective::ring_allreduce_ms_raw(
+        bytes,
+        world,
+        interconnect.bandwidth_bytes(),
+        interconnect.step_latency_ms(),
+    )
 }
 
 /// Compose a Habitat cross-GPU prediction with the all-reduce model.
@@ -113,33 +146,6 @@ pub fn predict_data_parallel(
     config: &DataParallelConfig,
 ) -> DpPrediction {
     compose(pred.run_time_ms(), pred.batch_size, &trace_comm(trace), config)
-}
-
-/// The destination-independent communication inputs derived from the
-/// origin trace, hoisted so a multi-destination sweep pays them once.
-struct TraceComm {
-    /// FP32 gradient volume: 4 bytes per trainable parameter.
-    grad_bytes: f64,
-    /// Backward share of the iteration (from the origin trace's fwd/bwd
-    /// split, assumed stable across devices).
-    bwd_fraction: f64,
-}
-
-fn trace_comm(trace: &Trace) -> TraceComm {
-    let grad_bytes: f64 = trace
-        .ops
-        .iter()
-        .map(|o| o.op.kind.parameter_count() as f64 * 4.0)
-        .sum();
-    let (fwd, bwd): (f64, f64) = trace
-        .ops
-        .iter()
-        .fold((0.0, 0.0), |(f, b), o| (f + o.fwd_ms(), b + o.bwd_ms()));
-    let bwd_fraction = if fwd + bwd > 0.0 { bwd / (fwd + bwd) } else { 0.5 };
-    TraceComm {
-        grad_bytes,
-        bwd_fraction,
-    }
 }
 
 /// Compose one destination's compute time with the all-reduce model —
@@ -316,6 +322,50 @@ mod tests {
         // 4 GPUs, 1 GB, 12 GB/s: 2·3/4·(1/12) s = 125 ms + 6·0.01 latency.
         let ms = ring_allreduce_ms(1e9, 4, Interconnect::Pcie3);
         assert!((ms - (125.0 + 0.06)).abs() < 0.5, "{ms}");
+    }
+
+    #[test]
+    fn seed_links_are_bit_identical_to_the_legacy_constants() {
+        // The exact constants the enum hard-coded before the comm link
+        // registry existed; this pins the delegation bit-for-bit.
+        let seeds = [
+            (Interconnect::Pcie3, 12.0, 0.01),
+            (Interconnect::Pcie4, 24.0, 0.01),
+            (Interconnect::NvLink, 130.0, 0.01),
+            (Interconnect::Ethernet25G, 2.9, 0.03),
+        ];
+        for (ic, gbps, lat) in seeds {
+            assert_eq!(ic.bandwidth_bytes().to_bits(), (gbps * 1e9).to_bits(), "{ic:?}");
+            assert_eq!(ic.step_latency_ms().to_bits(), lat.to_bits(), "{ic:?}");
+            assert_eq!(ring_allreduce_ms(1e9, 1, ic), 0.0);
+            for world in [2usize, 4, 8, 64] {
+                for bytes in [1e6, 1e8, 4.08e9] {
+                    let n = world as f64;
+                    let legacy = 2.0 * (n - 1.0) / n * bytes / (gbps * 1e9) * 1e3
+                        + 2.0 * (n - 1.0) * lat;
+                    assert_eq!(
+                        ring_allreduce_ms(bytes, world, ic).to_bits(),
+                        legacy.to_bits(),
+                        "{ic:?} world {world} bytes {bytes}"
+                    );
+                    // The registry-link route computes the same number.
+                    let link = ic.link().unwrap();
+                    assert_eq!(
+                        crate::comm::ring_allreduce_ms(bytes, world, link).to_bits(),
+                        legacy.to_bits()
+                    );
+                    assert_eq!(
+                        ring_allreduce_ms(bytes, world, Interconnect::from(link)).to_bits(),
+                        legacy.to_bits()
+                    );
+                }
+            }
+        }
+        // Custom bandwidths keep the old arithmetic and default latency.
+        let c = Interconnect::Custom(42.0);
+        assert_eq!(c.bandwidth_bytes().to_bits(), (42.0f64 * 1e9).to_bits());
+        assert_eq!(c.step_latency_ms(), 0.01);
+        assert_eq!(c.link(), None);
     }
 
     #[test]

@@ -1,0 +1,241 @@
+//! Golden-value regression tests for cluster-scale prediction.
+//!
+//! The cluster subsystem's contract, pinned three ways:
+//!
+//! 1. `predict_cluster` at `world = 1` must be **bit-identical** to the
+//!    single-GPU `predict` path — the collective model composes on top
+//!    of the plan evaluation without perturbing it;
+//! 2. every cell of a `predict_cluster` sweep must be bit-identical to
+//!    an independent manual composition
+//!    (`evaluate` + `trace_comm` + `comm::cluster::compose`);
+//! 3. the bit patterns of the full 5-model × 2-topology × 9-world grid
+//!    are pinned in `tests/golden/cluster.txt` with the same
+//!    bless-on-first-run protocol as `golden_predictions`
+//!    (`GOLDEN_BLESS=1` re-blesses, `GOLDEN_REQUIRE=1` makes a missing
+//!    file an error).
+
+use std::fmt::Write as _;
+
+use habitat::comm::{self, ClusterParams, Topology};
+use habitat::device::Device;
+use habitat::engine::PredictionEngine;
+use habitat::{models, Precision};
+
+const TOPOLOGIES: [Topology; 2] = [Topology::DGX, Topology::CLOUD];
+const WORLDS: [usize; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
+
+fn golden_batch(model: &str) -> usize {
+    models::eval_batch_sizes(model)[0]
+}
+
+#[test]
+fn world_one_is_bit_identical_to_single_gpu_predict() {
+    let engine = PredictionEngine::wave_only();
+    let params = ClusterParams::default();
+    for model in models::MODEL_NAMES {
+        let batch = golden_batch(model);
+        let single = engine
+            .predict(model, batch, Device::Rtx2070, Device::V100, Precision::Fp32)
+            .unwrap()
+            .pred
+            .run_time_ms();
+        for topology in TOPOLOGIES {
+            let report = engine
+                .predict_cluster(
+                    model,
+                    batch,
+                    Device::Rtx2070,
+                    Device::V100,
+                    Precision::Fp32,
+                    &[topology],
+                    &[1],
+                    &params,
+                )
+                .unwrap();
+            assert_eq!(report.configs.len(), 1);
+            let cell = &report.configs[0];
+            assert_eq!(cell.pred.comm_ms, 0.0, "{model}: world=1 must move no bytes");
+            assert_eq!(cell.pred.exposed_ms, 0.0);
+            assert_eq!(
+                cell.pred.iter_ms.to_bits(),
+                single.to_bits(),
+                "{model} on {}: cluster world=1 {} vs single-GPU {}",
+                topology.name(),
+                cell.pred.iter_ms,
+                single
+            );
+        }
+    }
+}
+
+#[test]
+fn sweep_cells_match_manual_composition_bit_for_bit() {
+    let engine = PredictionEngine::wave_only();
+    let params = ClusterParams::default();
+    for (model, origin, dest) in [
+        ("resnet50", Device::Rtx2070, Device::V100),
+        ("gnmt", Device::P4000, Device::T4),
+    ] {
+        let batch = golden_batch(model);
+        let report = engine
+            .predict_cluster(model, batch, origin, dest, Precision::Fp32, &TOPOLOGIES, &WORLDS, &params)
+            .unwrap();
+        assert_eq!(report.configs.len(), TOPOLOGIES.len() * WORLDS.len());
+
+        // The independent path: scalar evaluate + per-cell composition.
+        let analyzed = engine.analyzed(model, batch, origin).unwrap();
+        let compute_ms = engine.evaluate(&analyzed.plan, dest, Precision::Fp32).run_time_ms();
+        let tc = comm::trace_comm(&analyzed.trace);
+        assert_eq!(report.compute_ms.to_bits(), compute_ms.to_bits());
+        for cell in &report.configs {
+            let manual = comm::cluster::compose(compute_ms, batch, &tc, cell.topology, cell.world, &params);
+            assert_eq!(
+                cell.pred.iter_ms.to_bits(),
+                manual.iter_ms.to_bits(),
+                "{model} {}×{}: sweep {} vs manual {}",
+                cell.topology.name(),
+                cell.world,
+                cell.pred.iter_ms,
+                manual.iter_ms
+            );
+            assert_eq!(cell.pred.comm_ms.to_bits(), manual.comm_ms.to_bits());
+            assert_eq!(cell.pred.throughput.to_bits(), manual.throughput.to_bits());
+            assert_eq!(cell.pred.efficiency.to_bits(), manual.efficiency.to_bits());
+        }
+    }
+}
+
+#[test]
+fn efficiency_is_monotone_nonincreasing_in_world_size() {
+    let engine = PredictionEngine::wave_only();
+    let params = ClusterParams::default();
+    for model in models::MODEL_NAMES {
+        let batch = golden_batch(model);
+        let report = engine
+            .predict_cluster(
+                model,
+                batch,
+                Device::Rtx2070,
+                Device::V100,
+                Precision::Fp32,
+                &TOPOLOGIES,
+                &WORLDS,
+                &params,
+            )
+            .unwrap();
+        for topology in TOPOLOGIES {
+            let effs: Vec<f64> = report
+                .configs
+                .iter()
+                .filter(|c| c.topology == topology)
+                .map(|c| c.pred.efficiency)
+                .collect();
+            assert_eq!(effs.len(), WORLDS.len());
+            assert!((effs[0] - 1.0).abs() < 1e-12, "{model}: world=1 efficiency must be 1");
+            for w in effs.windows(2) {
+                assert!(
+                    w[1] <= w[0] + 1e-12,
+                    "{model} on {}: efficiency rose with world size ({} → {})",
+                    topology.name(),
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn exported_workload_round_trips_and_matches_the_sweep() {
+    let engine = PredictionEngine::wave_only();
+    let params = ClusterParams::default();
+    let world = 16usize;
+    let workload = engine
+        .export_workload(
+            "resnet50",
+            golden_batch("resnet50"),
+            Device::Rtx2070,
+            Device::V100,
+            Precision::Fp32,
+            Topology::DGX,
+            world,
+            &params,
+        )
+        .unwrap();
+    assert!(!workload.comm_ops.is_empty());
+    for op in &workload.comm_ops {
+        assert!(op.bytes > 0.0);
+        assert!(!op.participants.is_empty());
+        assert!(op.participants.iter().all(|&r| r < world));
+    }
+    // COMM_OPS-style JSON: dump → parse → rebuild must be lossless.
+    let json = workload.to_value().dump();
+    let parsed = habitat::util::json::parse(&json).unwrap();
+    let back = comm::Workload::from_value(&parsed).unwrap();
+    assert_eq!(back, workload);
+    assert_eq!(back.to_value().dump(), json);
+}
+
+#[test]
+fn golden_cluster_bit_patterns_are_pinned() {
+    let engine = PredictionEngine::wave_only();
+    let params = ClusterParams::default();
+    let mut lines = Vec::new();
+    for model in models::MODEL_NAMES {
+        let batch = golden_batch(model);
+        let report = engine
+            .predict_cluster(
+                model,
+                batch,
+                Device::Rtx2070,
+                Device::V100,
+                Precision::Fp32,
+                &TOPOLOGIES,
+                &WORLDS,
+                &params,
+            )
+            .unwrap();
+        for cell in &report.configs {
+            let mut line = String::new();
+            write!(
+                line,
+                "{model},{batch},{},{},{:016x},{:016x}",
+                cell.topology.name(),
+                cell.world,
+                cell.pred.iter_ms.to_bits(),
+                cell.pred.efficiency.to_bits()
+            )
+            .unwrap();
+            lines.push(line);
+        }
+    }
+    let current = lines.join("\n") + "\n";
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden");
+    let path = dir.join("cluster.txt");
+    if !path.exists() && std::env::var_os("GOLDEN_REQUIRE").is_some() {
+        panic!(
+            "GOLDEN_REQUIRE is set but {} is missing — run the suite once without \
+             GOLDEN_REQUIRE and commit the blessed file",
+            path.display()
+        );
+    }
+    let bless = std::env::var_os("GOLDEN_BLESS").is_some() || !path.exists();
+    if bless {
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(&path, &current).unwrap();
+        eprintln!(
+            "golden: blessed {} ({} entries) — commit this file to pin the values",
+            path.display(),
+            lines.len()
+        );
+        return;
+    }
+    let recorded = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        recorded, current,
+        "golden cluster predictions drifted from {} — if the change is intentional, \
+         delete the file or re-run with GOLDEN_BLESS=1 to re-bless",
+        path.display()
+    );
+}

@@ -8,10 +8,11 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
 use habitat::coordinator::{
-    service, v2_check_error, v2_predict_model_request, v2_predict_trace_request,
-    v2_rank_trace_request, v2_stats_request, v2_submit_trace_request, Client, PredictionRequest,
-    PredictionResponse, PredictionService, RankRequest, RankResponse, RegisteredDevice, Request,
-    StatsResponse,
+    service, v2_check_error, v2_export_workload_request, v2_predict_cluster_request,
+    v2_predict_model_request, v2_predict_trace_request, v2_rank_cluster_request,
+    v2_rank_trace_request, v2_stats_request, v2_submit_trace_request, Client, ClusterRankResponse,
+    ClusterResponse, PredictionRequest, PredictionResponse, PredictionService, RankRequest,
+    RankResponse, RegisteredDevice, Request, StatsResponse,
 };
 use habitat::device::{Device, ALL_DEVICES};
 use habitat::predict::HybridPredictor;
@@ -347,6 +348,133 @@ fn v2_predict_payload_equals_v1_response_over_tcp() {
         }
         other => panic!("v1 reply not an object: {other:?}"),
     }
+}
+
+#[test]
+fn v2_predict_cluster_over_tcp_world_one_matches_predict() {
+    let (addr, _svc) = spawn_server();
+    let topologies = ["dgx".to_string()];
+    let worlds = [1usize, 8];
+    let replies = send_lines(
+        &addr,
+        &[
+            v2_predict_model_request("mlp", 16, "t4", "v100", None),
+            v2_predict_cluster_request("mlp", 16, "t4", "v100", Some(&topologies), Some(&worlds), None),
+        ],
+    );
+    let single = json::parse(&replies[0]).unwrap();
+    v2_check_error(&single).unwrap();
+    let single_ms = single.get("iter_ms").and_then(Json::as_f64).unwrap();
+
+    let cluster = ClusterResponse::from_json(&replies[1]).unwrap();
+    assert_eq!(cluster.model, "mlp");
+    assert_eq!(cluster.dest, "V100");
+    assert_eq!(cluster.configs.len(), 2);
+    let w1 = cluster.configs.iter().find(|c| c.world == 1).unwrap();
+    assert_eq!(
+        w1.iter_ms.to_bits(),
+        single_ms.to_bits(),
+        "world=1 over the wire must equal single-GPU predict: {} vs {single_ms}",
+        w1.iter_ms
+    );
+    assert_eq!(w1.comm_ms, 0.0);
+    for c in &cluster.configs {
+        assert!(c.efficiency > 0.0 && c.efficiency <= 1.0 + 1e-9);
+        assert!(c.iter_ms >= cluster.compute_ms - 1e-12);
+    }
+}
+
+#[test]
+fn v2_rank_cluster_over_tcp_is_sorted_and_complete() {
+    let (addr, _svc) = spawn_server();
+    let dests = ["v100".to_string(), "t4".to_string()];
+    let topologies = ["dgx".to_string(), "cloud".to_string()];
+    let worlds = [1usize, 4];
+    let replies = send_lines(
+        &addr,
+        &[v2_rank_cluster_request("mlp", 16, "t4", Some(&dests), Some(&topologies), Some(&worlds), None)],
+    );
+    let resp = ClusterRankResponse::from_json(&replies[0]).unwrap();
+    assert_eq!(resp.ranking.len(), dests.len() * topologies.len() * worlds.len());
+    // Both seed dests are rentable, so every entry is priced and the
+    // ranking is descending cost-normalized throughput.
+    let priced: Vec<f64> = resp
+        .ranking
+        .iter()
+        .map(|e| e.cost_normalized_throughput.expect("seed devices are priced"))
+        .collect();
+    for w in priced.windows(2) {
+        assert!(w[0] >= w[1], "cluster ranking out of order: {priced:?}");
+    }
+    for (dest, topology, world) in dests.iter().flat_map(|d| {
+        topologies
+            .iter()
+            .flat_map(move |t| worlds.iter().map(move |w| (d.clone(), t.clone(), *w)))
+    }) {
+        assert!(
+            resp.ranking.iter().any(|e| e.dest.eq_ignore_ascii_case(&dest)
+                && e.topology == topology
+                && e.world == world),
+            "missing cell {dest}/{topology}/{world}"
+        );
+    }
+}
+
+#[test]
+fn v2_cluster_errors_are_structured_over_tcp() {
+    let (addr, _svc) = spawn_server();
+    let bad_topo = ["atlantis".to_string()];
+    let replies = send_lines(
+        &addr,
+        &[
+            v2_predict_cluster_request("mlp", 8, "t4", "v100", Some(&bad_topo), None, None),
+            // Inline topology referencing a link that was never registered.
+            "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"topologies\":[{\"name\":\"sim-proto-badlink\",\"gpus_per_node\":4,\"intra\":\"no-such-link\",\"inter\":\"ib-hdr\"}]}".to_string(),
+            v2_export_workload_request("mlp", 8, "t4", "v100", "atlantis", 4, None),
+            // The connection survives all of the above.
+            v2_predict_cluster_request("mlp", 8, "t4", "v100", None, Some(&[2]), None),
+        ],
+    );
+    assert_eq!(replies.len(), 4);
+    let code_of = |line: &str| {
+        json::parse(line)
+            .unwrap()
+            .get("error")
+            .and_then(|e| e.get("code"))
+            .and_then(Json::as_str)
+            .map(str::to_string)
+    };
+    assert_eq!(code_of(&replies[0]).as_deref(), Some("unknown_topology"));
+    assert_eq!(code_of(&replies[1]).as_deref(), Some("unknown_link"));
+    assert_eq!(code_of(&replies[2]).as_deref(), Some("unknown_topology"));
+    let ok = ClusterResponse::from_json(&replies[3]).unwrap();
+    assert!(!ok.configs.is_empty());
+}
+
+#[test]
+fn v2_export_workload_over_tcp_round_trips() {
+    let (addr, _svc) = spawn_server();
+    let world = 16usize;
+    let replies = send_lines(
+        &addr,
+        &[v2_export_workload_request("resnet50", 32, "rtx2070", "v100", "dgx", world, None)],
+    );
+    let reply = json::parse(&replies[0]).unwrap();
+    v2_check_error(&reply).unwrap();
+    assert_eq!(reply.req_str("op").unwrap(), "export_workload");
+    // The envelope carries the COMM_OPS-style workload fields directly.
+    let workload = habitat::comm::Workload::from_value(&reply).unwrap();
+    assert_eq!(workload.model, "resnet50");
+    assert_eq!(workload.world, world);
+    assert!(!workload.comm_ops.is_empty());
+    for op in &workload.comm_ops {
+        assert!(op.bytes > 0.0);
+        assert!(op.participants.iter().all(|&r| r < world));
+    }
+    // Lossless: dump → parse → rebuild is identical.
+    let json_text = workload.to_value().dump();
+    let back = habitat::comm::Workload::from_value(&json::parse(&json_text).unwrap()).unwrap();
+    assert_eq!(back, workload);
 }
 
 #[test]

@@ -69,6 +69,14 @@ SPEEDUPS = [
         "engine/recompile_zoo",
         "engine/warm_restore_zoo",
     ),
+    # Informational: the 2-topology × 9-world cluster sweep against one
+    # scalar evaluate — how cheap the collective-model epilogue is on
+    # top of the shared compute prediction.
+    (
+        "cluster_sweep_256_vs_single_dest",
+        "cluster/sweep_256_ranks",
+        "engine/single_dest/resnet50",
+    ),
 ]
 
 # The ratio --min-speedup gates on (kept for CI-invocation stability).

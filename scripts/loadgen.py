@@ -36,11 +36,25 @@ DESTS = ["v100", "p100", "p4000", "t4", "rtx2070", "2080ti"]
 
 def build_requests(conn_id, count):
     """A deterministic mixed workload: mostly predicts (cache-hot after
-    the first round), with periodic ranks and stats probes."""
+    the first round), with periodic ranks, cluster sweeps, and stats
+    probes."""
     lines = []
     for i in range(count):
         if i % 13 == 12:
             lines.append({"stats": True})
+        elif i % 11 == 10:
+            lines.append(
+                {
+                    "v": 2,
+                    "op": "predict_cluster",
+                    "model": MODELS[(conn_id + i) % len(MODELS)],
+                    "batch": BATCHES[conn_id % len(BATCHES)],
+                    "origin": "t4",
+                    "dest": DESTS[(conn_id + i) % len(DESTS)],
+                    "topologies": ["dgx", "cloud"],
+                    "worlds": [1, 2, 4, 8],
+                }
+            )
         elif i % 7 == 6:
             lines.append(
                 {

@@ -13,9 +13,14 @@ Checks, in order:
      v1 predict of the same (model, batch, origin, dest) — i.e. the
      uploaded-trace path is numerically identical to the in-process
      path;
-  4. stats reflects the session's activity;
-  5. malformed lines produce the exact expected error shapes and do not
-     kill the connection.
+  4. predict_cluster/rank_cluster/export_workload answer over the same
+     connection: the sweep covers the full topology × world grid,
+     world=1 equals the single-GPU predict exactly, scaling efficiency
+     stays in (0, 1], the ranking is sorted, and the exported workload
+     is a well-formed COMM_OPS-style schedule;
+  5. stats reflects the session's activity;
+  6. malformed lines (including unknown topologies/links) produce the
+     exact expected error shapes and do not kill the connection.
 
 With `--store DIR` the server runs against the persistent plan store,
 and the script boots it TWICE: the first boot runs the full session
@@ -281,7 +286,79 @@ def run_session(port, cold=True, store=False):
         str(rank_by_id)[:200],
     )
 
-    # --- 4. stats ------------------------------------------------------
+    # --- 4. cluster prediction ops -------------------------------------
+    # Same (model, batch, origin) as section 1, so the sweep reuses the
+    # cached trace and the world=1 cell must equal the v1 predict.
+    topologies = ["dgx", "cloud"]
+    worlds = [1, 2, 4, 8]
+    clu = rpc(
+        {
+            "v": 2, "op": "predict_cluster", "model": "resnet50", "batch": 32,
+            "origin": "rtx2070", "dest": "v100",
+            "topologies": topologies, "worlds": worlds,
+        }
+    )
+    expect_eq("predict_cluster envelope op echo", clu.get("op"), "predict_cluster")
+    configs = clu.get("configs", [])
+    expect_eq("predict_cluster covers the full grid", len(configs), len(topologies) * len(worlds))
+    grid = {(c["topology"], c["world"]) for c in configs}
+    expect_eq(
+        "every (topology, world) cell present",
+        grid,
+        {(t, w) for t in topologies for w in worlds},
+    )
+    check(
+        "scaling efficiency in (0, 1]",
+        all(0.0 < c["efficiency"] <= 1.0 + 1e-9 for c in configs),
+        str([c["efficiency"] for c in configs]),
+    )
+    for c in configs:
+        if c["world"] == 1:
+            expect_eq(
+                f'world=1 on {c["topology"]} == single-GPU predict',
+                c["iter_ms"],
+                v1_predict["iter_ms"],
+            )
+            expect_eq(f'world=1 on {c["topology"]} moves no bytes', c["comm_ms"], 0.0)
+
+    rclu = rpc(
+        {
+            "v": 2, "op": "rank_cluster", "model": "resnet50", "batch": 32,
+            "origin": "rtx2070", "dests": ["v100", "t4"],
+            "topologies": ["dgx"], "worlds": [1, 4],
+        }
+    )
+    entries = rclu.get("ranking", [])
+    expect_eq("rank_cluster covers dests × topologies × worlds", len(entries), 4)
+    rpriced = [e["cost_normalized_throughput"] for e in entries]
+    check("rank_cluster entries all priced", all(v is not None for v in rpriced), str(rpriced))
+    check(
+        "rank_cluster sorted by cost-normalized throughput",
+        rpriced == sorted(rpriced, reverse=True),
+        str(rpriced),
+    )
+
+    wl = rpc(
+        {
+            "v": 2, "op": "export_workload", "model": "resnet50", "batch": 32,
+            "origin": "rtx2070", "dest": "v100", "topology": "dgx", "world": 8,
+        }
+    )
+    expect_eq("export_workload echoes the topology", wl.get("topology"), "dgx")
+    ops = wl.get("comm_ops", [])
+    check("export_workload emits a schedule", len(ops) > 0, str(wl)[:200])
+    check(
+        "comm ops are known collectives",
+        all(o["op"] in ("ALLREDUCE", "ALLGATHER", "REDUCESCATTER", "ALLTOALL") for o in ops),
+        str([o["op"] for o in ops]),
+    )
+    check(
+        "comm ops carry positive payloads and in-range ranks",
+        all(o["bytes"] > 0 and all(0 <= r < 8 for r in o["participants"]) for o in ops),
+        str(ops)[:200],
+    )
+
+    # --- 5. stats ------------------------------------------------------
     v1_stats = rpc({"stats": True})
     expect_eq(
         "v1 stats keeps its original seven fields",
@@ -308,7 +385,7 @@ def run_session(port, cold=True, store=False):
         # simulator no longer produces, in which case it re-uploads once.
         check("warm boot upload count sane", v2_stats.get("trace_uploads", 2) <= 1, str(v2_stats))
 
-    # --- 5. malformed input, exact expected error shapes ---------------
+    # --- 6. malformed input, exact expected error shapes ---------------
     bad = rpc("this is not json")
     check("v1 parse error shape", str(bad.get("error", "")).startswith("bad request:"), str(bad))
     expect_eq(
@@ -334,6 +411,39 @@ def run_session(port, cold=True, store=False):
     expect_eq(
         "bad embedded trace error",
         rpc({"v": 2, "op": "submit_trace", "trace": {"format": "nope"}})["error"]["code"],
+        "invalid_argument",
+    )
+    expect_eq(
+        "unknown topology error",
+        rpc(
+            {
+                "v": 2, "op": "predict_cluster", "model": "resnet50", "batch": 32,
+                "origin": "rtx2070", "dest": "v100", "topologies": ["atlantis"],
+            }
+        )["error"]["code"],
+        "unknown_topology",
+    )
+    expect_eq(
+        "unknown link error",
+        rpc(
+            {
+                "v": 2, "op": "predict_cluster", "model": "resnet50", "batch": 32,
+                "origin": "rtx2070", "dest": "v100",
+                "topologies": [
+                    {"name": "smoke-badlink", "gpus_per_node": 4, "intra": "no-such-link", "inter": "ib-hdr"}
+                ],
+            }
+        )["error"]["code"],
+        "unknown_link",
+    )
+    expect_eq(
+        "zero world size error",
+        rpc(
+            {
+                "v": 2, "op": "rank_cluster", "model": "resnet50", "batch": 32,
+                "origin": "rtx2070", "worlds": [0],
+            }
+        )["error"]["code"],
         "invalid_argument",
     )
     # The connection survived all of the above.
