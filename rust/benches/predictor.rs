@@ -170,6 +170,30 @@ fn main() {
             .len()
     });
 
+    // --- service: the layered request core -------------------------------
+    // One wire request through the transport-agnostic dispatcher, via
+    // both transport entry points: `handle_line` (TCP's path: parse →
+    // route → serialize → metrics) and `dispatch_http` (HTTP's path:
+    // same routing plus the outcome envelope). The engine cache is warm,
+    // so this measures pure protocol + dispatch overhead; the
+    // `http_vs_tcp_dispatch` ratio in BENCH_predictor.json is expected
+    // to sit near 1.0 — the transports share one brain by construction.
+    let service = habitat::coordinator::PredictionService::with_predictor(
+        HybridPredictor::wave_only(),
+    );
+    let predict_line = r#"{"model":"resnet50","batch":32,"origin":"rtx2070","dest":"v100"}"#;
+    service.handle_line(predict_line); // warm the trace/plan cache
+    bench("service/dispatch_tcp_line/predict", || {
+        service.handle_line(predict_line).len()
+    });
+    bench("service/dispatch_http_request/predict", || {
+        service.dispatch_http(predict_line).reply.len()
+    });
+    let stats_line = habitat::coordinator::service::stats_request_json();
+    bench("service/dispatch_tcp_line/stats", || {
+        service.handle_line(&stats_line).len()
+    });
+
     // --- engine: contended access (the sharding win) ---------------------
     // 16 threads hammering the cache. Under the old single-mutex engine
     // the hit path serialized globally; with the sharded RwLock cache the

@@ -1,0 +1,1455 @@
+//! The transport-agnostic dispatcher: one request core shared by every
+//! front end.
+//!
+//! [`Dispatcher`] owns the [`PredictionEngine`] and implements every op
+//! of the wire protocol ([`super::protocol`]) — decode, execute,
+//! encode — without ever touching a socket. The TCP runtime
+//! ([`super::tcp`]) and the HTTP front end ([`super::http`]) both hand
+//! raw request text to this layer and write back whatever bytes it
+//! returns, so v1/v2 semantics are defined exactly once.
+//!
+//! Every routed request is timed and recorded into the engine's
+//! [`ServiceMetrics`](crate::engine::metrics::ServiceMetrics): per-op
+//! request/error counters plus a fixed-bucket latency histogram,
+//! surfaced through the v2 `stats` op and the HTTP `GET /metrics`
+//! Prometheus endpoint.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::comm::{self, ClusterParams, Topology};
+use crate::device::{registry, Device, RegisterError};
+use crate::engine::metrics::OpKind;
+use crate::engine::PredictionEngine;
+use crate::lowering::Precision;
+use crate::predict::HybridPredictor;
+use crate::tracker::Trace;
+use crate::util::json::{self, Json};
+use crate::Result;
+
+use super::protocol::{
+    classify_engine_error, error_json, new_device_from_value, parse_device, parse_precision,
+    v2_envelope, v2_error_json, ClusterConfig, ClusterRankResponse, ClusterRankedConfig,
+    ClusterResponse, PredictionRequest, PredictionResponse, RankRequest, RankResponse, RankedDest,
+    Request, StatsResponse, V2Error, V2Result, DEFAULT_CLUSTER_WORLDS, MAX_CLUSTER_SWEEP,
+    MAX_CLUSTER_WORLD, PROTOCOL_V2,
+};
+
+/// One dispatched request's routed result: the serialized reply line,
+/// which op it was (for metrics), and the error code when it failed —
+/// `None` on success. Transports map the code to their own signalling
+/// (the HTTP front end turns it into a status; TCP sends the reply
+/// as-is, where the shape already carries the error).
+pub struct DispatchOutcome {
+    /// The reply, serialized in the shape the request's protocol
+    /// version dictates (no trailing newline).
+    pub reply: String,
+    /// The op this request routed to ([`OpKind::Other`] for lines that
+    /// never reached a handler).
+    pub op: OpKind,
+    /// Stable error code (`"bad_request"`, `"unknown_device"`, …);
+    /// `None` on success.
+    pub error: Option<&'static str>,
+}
+
+impl DispatchOutcome {
+    fn ok(reply: String, op: OpKind) -> Self {
+        DispatchOutcome { reply, op, error: None }
+    }
+
+    fn err(reply: String, op: OpKind, code: &'static str) -> Self {
+        DispatchOutcome { reply, op, error: Some(code) }
+    }
+}
+
+/// The historical name of the dispatcher, kept so every existing
+/// `PredictionService` call site (library users, tests, examples)
+/// compiles unchanged.
+pub type PredictionService = Dispatcher;
+
+/// The transport-agnostic prediction core: protocol decode → engine →
+/// protocol encode, with per-op metrics. See the module docs.
+pub struct Dispatcher {
+    engine: PredictionEngine,
+}
+
+impl Dispatcher {
+    /// Build with the paper's full hybrid predictor (requires artifacts).
+    pub fn new(artifacts: &str) -> Result<Self> {
+        Ok(Self::with_engine(PredictionEngine::from_artifacts(artifacts)?))
+    }
+
+    /// Build around any predictor (wave-only for tests / no artifacts).
+    pub fn with_predictor(predictor: HybridPredictor) -> Self {
+        Self::with_engine(PredictionEngine::new(predictor))
+    }
+
+    /// Build around an existing engine (shared caches, custom capacity).
+    pub fn with_engine(engine: PredictionEngine) -> Self {
+        Dispatcher { engine }
+    }
+
+    /// Attach (and warm-restore) a persistent plan store — see
+    /// [`PredictionEngine::attach_store`].
+    pub fn attach_store<P: AsRef<std::path::Path>>(&mut self, dir: P) -> Result<()> {
+        self.engine.attach_store(dir)
+    }
+
+    pub fn engine(&self) -> &PredictionEngine {
+        &self.engine
+    }
+
+    pub fn predictor(&self) -> &HybridPredictor {
+        self.engine.predictor()
+    }
+
+    /// Get or build the origin trace for a request (memoized in the
+    /// engine). The tracker always measures FP32 — the paper profiles
+    /// FP32 and *predicts* AMP.
+    pub fn trace_for(&self, model: &str, batch: usize, origin: Device) -> Result<Arc<Trace>> {
+        self.engine.trace(model, batch, origin)
+    }
+
+    /// Handle one prediction request synchronously.
+    pub fn handle(&self, req: &PredictionRequest) -> Result<PredictionResponse> {
+        let origin = parse_device(&req.origin, "origin")?;
+        let dest = parse_device(&req.dest, "destination")?;
+        let precision = parse_precision(req.precision.as_deref())?;
+        anyhow::ensure!(req.batch > 0, "batch must be positive");
+
+        let out = self.engine.predict(&req.model, req.batch, origin, dest, precision)?;
+        let tput = out.pred.throughput();
+        Ok(PredictionResponse {
+            model: req.model.clone(),
+            batch: req.batch,
+            origin: origin.id().to_string(),
+            dest: dest.id().to_string(),
+            origin_iter_ms: out.trace.run_time_ms(),
+            iter_ms: out.pred.run_time_ms(),
+            throughput: tput,
+            cost_normalized_throughput: crate::cost::cost_normalized_throughput(dest, tput),
+            mlp_time_fraction: out.pred.mlp_time_fraction(),
+            mlp_fallbacks: out.pred.mlp_fallbacks,
+        })
+    }
+
+    /// Handle one rank request: a single tracking pass, fanned out to
+    /// every destination on the engine's worker pool.
+    pub fn handle_rank(&self, req: &RankRequest) -> Result<RankResponse> {
+        let origin = parse_device(&req.origin, "origin")?;
+        let precision = parse_precision(req.precision.as_deref())?;
+        anyhow::ensure!(req.batch > 0, "batch must be positive");
+        // Default destination set: every device in the registry —
+        // including GPUs registered at runtime via `register_device`.
+        let dests: Vec<Device> = match &req.dests {
+            None => registry::all_devices(),
+            Some(names) => names
+                .iter()
+                .map(|n| parse_device(n, "destination"))
+                .collect::<Result<Vec<_>>>()?,
+        };
+
+        let ranking = self.engine.rank(&req.model, req.batch, origin, &dests, precision)?;
+        Ok(RankResponse {
+            model: req.model.clone(),
+            batch: req.batch,
+            origin: origin.id().to_string(),
+            origin_iter_ms: ranking.trace.run_time_ms(),
+            ranking: ranking
+                .entries
+                .iter()
+                .map(|e| RankedDest {
+                    dest: e.dest.id().to_string(),
+                    iter_ms: e.pred.run_time_ms(),
+                    throughput: e.pred.throughput(),
+                    cost_normalized_throughput: e.cost_normalized_throughput,
+                    mlp_time_fraction: e.pred.mlp_time_fraction(),
+                    mlp_fallbacks: e.pred.mlp_fallbacks,
+                })
+                .collect(),
+        })
+    }
+
+    /// Handle a stats request: the engine's counter snapshot.
+    pub fn handle_stats(&self) -> StatsResponse {
+        self.engine.stats().into()
+    }
+
+    /// Parse one wire line, dispatch it, serialize the reply, and
+    /// record the request into the per-op metrics.
+    ///
+    /// Version routing: a line with `"v":2` takes the v2 envelope path;
+    /// any other `"v"` value gets a structured `unsupported_version`
+    /// error; a line with no `"v"` field is a v1 request and flows
+    /// through the original code path **bit-identically** (pinned by the
+    /// golden suite and the CI service smoke).
+    pub fn handle_line(&self, line: &str) -> String {
+        let start = Instant::now();
+        let out = self.route_line(line);
+        self.engine.metrics().record(out.op, out.error.is_none(), start.elapsed());
+        out.reply
+    }
+
+    /// Route an HTTP request body: the same version routing as
+    /// [`Self::handle_line`] — a v1 body still gets the v1 reply shape —
+    /// except that unparseable bodies answer in the structured v2 error
+    /// shape (over HTTP there is no bit-identical v1 contract to
+    /// preserve for garbage, and the transport needs a code to map to a
+    /// status). Records metrics; the returned outcome carries the error
+    /// code for status mapping.
+    pub fn dispatch_http(&self, body: &str) -> DispatchOutcome {
+        let start = Instant::now();
+        let out = match json::parse(body) {
+            Ok(v) => self.route_value(&v),
+            Err(e) => DispatchOutcome::err(
+                v2_error_json("bad_request", &format!("bad request: {e}")),
+                OpKind::Other,
+                "bad_request",
+            ),
+        };
+        self.engine.metrics().record(out.op, out.error.is_none(), start.elapsed());
+        out
+    }
+
+    /// Dispatch one parsed v2 envelope and serialize the reply.
+    /// (Metrics are recorded by the line/body entry points, not here.)
+    pub fn handle_v2(&self, v: &Json) -> String {
+        self.route_v2(v).reply
+    }
+
+    /// One parse per line: the version sniff and the v1 dispatch share
+    /// the same value.
+    fn route_line(&self, line: &str) -> DispatchOutcome {
+        match json::parse(line) {
+            Ok(v) => self.route_value(&v),
+            // v1 contract: malformed lines answer in the v1 error shape.
+            Err(e) => DispatchOutcome::err(
+                error_json(&format!("bad request: {e}")),
+                OpKind::Other,
+                "bad_request",
+            ),
+        }
+    }
+
+    fn route_value(&self, v: &Json) -> DispatchOutcome {
+        match v.get("v") {
+            Some(Json::Num(n)) if *n == PROTOCOL_V2 => self.route_v2(v),
+            Some(other) => DispatchOutcome::err(
+                v2_error_json(
+                    "unsupported_version",
+                    &format!("unsupported protocol version {}", other.dump()),
+                ),
+                OpKind::Other,
+                "unsupported_version",
+            ),
+            None => self.route_v1(v),
+        }
+    }
+
+    fn route_v1(&self, v: &Json) -> DispatchOutcome {
+        match Request::from_value(v) {
+            Ok(Request::Predict(req)) => match self.handle(&req) {
+                Ok(resp) => DispatchOutcome::ok(resp.to_json(), OpKind::Predict),
+                Err(e) => DispatchOutcome::err(
+                    error_json(&e.to_string()),
+                    OpKind::Predict,
+                    Self::classify_v1(&e),
+                ),
+            },
+            Ok(Request::Rank(req)) => match self.handle_rank(&req) {
+                Ok(resp) => DispatchOutcome::ok(resp.to_json(), OpKind::Rank),
+                Err(e) => DispatchOutcome::err(
+                    error_json(&e.to_string()),
+                    OpKind::Rank,
+                    Self::classify_v1(&e),
+                ),
+            },
+            Ok(Request::Stats) => DispatchOutcome::ok(self.handle_stats().to_json(), OpKind::Stats),
+            Err(e) => DispatchOutcome::err(
+                error_json(&format!("bad request: {e}")),
+                OpKind::Other,
+                "bad_request",
+            ),
+        }
+    }
+
+    fn route_v2(&self, v: &Json) -> DispatchOutcome {
+        let (op, result) = self.dispatch_v2(v);
+        match result {
+            Ok(reply) => DispatchOutcome::ok(reply.dump(), op),
+            Err(e) => DispatchOutcome::err(v2_error_json(e.code, &e.message), op, e.code),
+        }
+    }
+
+    fn dispatch_v2(&self, v: &Json) -> (OpKind, V2Result) {
+        let op = match v.req_str("op") {
+            Ok(op) => op,
+            Err(_) => {
+                return (
+                    OpKind::Other,
+                    Err(V2Error::new("bad_request", "missing string field \"op\"")),
+                )
+            }
+        };
+        match op {
+            "predict" => (OpKind::Predict, self.v2_predict(v)),
+            "rank" => (OpKind::Rank, self.v2_rank(v)),
+            "stats" => (OpKind::Stats, Ok(self.v2_stats())),
+            "submit_trace" => (OpKind::SubmitTrace, self.v2_submit_trace(v)),
+            "register_device" => (OpKind::RegisterDevice, self.v2_register_device(v)),
+            "predict_cluster" => (OpKind::PredictCluster, self.v2_predict_cluster(v)),
+            "rank_cluster" => (OpKind::RankCluster, self.v2_rank_cluster(v)),
+            "export_workload" => (OpKind::ExportWorkload, self.v2_export_workload(v)),
+            other => (
+                OpKind::Other,
+                Err(V2Error::new(
+                    "unsupported_op",
+                    format!("unsupported op {other:?} (want predict|rank|stats|submit_trace|register_device|predict_cluster|rank_cluster|export_workload)"),
+                )),
+            ),
+        }
+    }
+
+    fn v2_precision(v: &Json) -> std::result::Result<Precision, V2Error> {
+        parse_precision(v.get("precision").and_then(Json::as_str))
+            .map_err(|e| V2Error::new("invalid_argument", e.to_string()))
+    }
+
+    fn v2_dest(v: &Json) -> std::result::Result<Device, V2Error> {
+        let name = v
+            .req_str("dest")
+            .map_err(|_| V2Error::new("bad_request", "missing string field \"dest\""))?;
+        parse_device(name, "destination").map_err(|e| V2Error::new("unknown_device", e.to_string()))
+    }
+
+    fn v2_predict(&self, v: &Json) -> V2Result {
+        let precision = Self::v2_precision(v)?;
+        let dest = Self::v2_dest(v)?;
+        if let Some(trace_id) = v.get("trace_id").and_then(Json::as_str) {
+            let out = self
+                .engine
+                .predict_uploaded(trace_id, dest, precision)
+                .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
+            let resp = Self::prediction_response(&out);
+            Ok(v2_envelope(
+                "predict",
+                resp.to_value(),
+                vec![("trace_id", Json::Str(trace_id.to_string()))],
+            ))
+        } else {
+            let req = PredictionRequest::from_value(v)
+                .map_err(|e| V2Error::new("bad_request", e.to_string()))?;
+            let resp = self
+                .handle(&req)
+                .map_err(|e| V2Error::new(Self::classify_v1(&e), e.to_string()))?;
+            Ok(v2_envelope("predict", resp.to_value(), Vec::new()))
+        }
+    }
+
+    fn v2_rank(&self, v: &Json) -> V2Result {
+        if let Some(trace_id) = v.get("trace_id").and_then(Json::as_str) {
+            let precision = Self::v2_precision(v)?;
+            let dests = Self::v2_dests(v)?;
+            let ranking = self
+                .engine
+                .rank_uploaded(trace_id, &dests, precision)
+                .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
+            let resp = Self::rank_response(&ranking);
+            Ok(v2_envelope(
+                "rank",
+                resp.to_value(),
+                vec![("trace_id", Json::Str(trace_id.to_string()))],
+            ))
+        } else {
+            let req = RankRequest::from_value(v)
+                .map_err(|e| V2Error::new("bad_request", e.to_string()))?;
+            let resp = self
+                .handle_rank(&req)
+                .map_err(|e| V2Error::new(Self::classify_v1(&e), e.to_string()))?;
+            Ok(v2_envelope("rank", resp.to_value(), Vec::new()))
+        }
+    }
+
+    fn v2_stats(&self) -> Json {
+        let s = self.engine.stats();
+        v2_envelope(
+            "stats",
+            StatsResponse::from(s).to_value(),
+            vec![
+                ("trace_uploads", Json::Num(s.trace_uploads as f64)),
+                ("uploaded_entries", Json::Num(s.uploaded_entries as f64)),
+                ("devices", Json::Num(s.devices as f64)),
+                ("store_hits", Json::Num(s.store_hits as f64)),
+                ("store_misses", Json::Num(s.store_misses as f64)),
+                ("warm_restores", Json::Num(s.warm_restores as f64)),
+                (
+                    "parallel_build_chunks",
+                    Json::Num(s.parallel_build_chunks as f64),
+                ),
+                // Dispatcher-level wire counters (0 until a transport
+                // routes through this dispatcher). A stats reply counts
+                // itself only after it is serialized, so these reflect
+                // the totals *before* the request carrying them.
+                ("requests", Json::Num(s.requests as f64)),
+                ("request_errors", Json::Num(s.request_errors as f64)),
+            ],
+        )
+    }
+
+    fn v2_submit_trace(&self, v: &Json) -> V2Result {
+        let tv = v
+            .get("trace")
+            .ok_or_else(|| V2Error::new("bad_request", "missing object field \"trace\""))?;
+        let trace = Trace::from_value(tv)
+            .map_err(|e| V2Error::new("invalid_argument", format!("bad trace: {e}")))?;
+        let (trace_id, analyzed) = self
+            .engine
+            .submit_trace(trace)
+            .map_err(|e| V2Error::new("invalid_argument", e.to_string()))?;
+        Ok(v2_envelope(
+            "submit_trace",
+            Json::obj(vec![
+                ("trace_id", Json::Str(trace_id)),
+                ("model", Json::Str(analyzed.trace.model.clone())),
+                ("batch", Json::Num(analyzed.trace.batch_size as f64)),
+                ("origin", Json::Str(analyzed.trace.origin.id().to_string())),
+                ("ops", Json::Num(analyzed.trace.ops.len() as f64)),
+                ("origin_iter_ms", Json::Num(analyzed.trace.run_time_ms())),
+            ]),
+            Vec::new(),
+        ))
+    }
+
+    fn v2_register_device(&self, v: &Json) -> V2Result {
+        let desc = new_device_from_value(v)?;
+        // Through the engine, not the bare registry: a genuinely new
+        // device gets its lane appended to every cached plan once and
+        // is logged to the persistent store's device log.
+        let d = self.engine.register_device(&desc).map_err(|e| match e {
+            RegisterError::Conflict(m) => V2Error::new("conflict", m),
+            RegisterError::Invalid(m) => V2Error::new("invalid_argument", m),
+        })?;
+        let s = d.spec();
+        Ok(v2_envelope(
+            "register_device",
+            Json::obj(vec![
+                ("device", Json::Str(s.name.to_string())),
+                ("id", Json::Num(d.index() as f64)),
+                ("arch", Json::Str(s.arch.to_string())),
+                ("sms", Json::Num(s.sms as f64)),
+                ("mem_gib", Json::Num(s.mem_gib)),
+                ("peak_mem_bw_gbps", Json::Num(s.peak_mem_bw_gbps)),
+                ("achieved_mem_bw_gbps", Json::Num(s.achieved_mem_bw_gbps)),
+                ("clock_mhz", Json::Num(s.boost_clock_mhz)),
+                ("fp32_tflops", Json::Num(s.peak_fp32_tflops)),
+                ("fp16_tflops", Json::Num(s.peak_fp16_tflops)),
+                ("usd_per_hr", s.rental_usd_per_hr.map_or(Json::Null, Json::Num)),
+                ("devices", Json::Num(registry::device_count() as f64)),
+            ]),
+            Vec::new(),
+        ))
+    }
+
+    // --- cluster ops --------------------------------------------------
+
+    fn v2_predict_cluster(&self, v: &Json) -> V2Result {
+        let precision = Self::v2_precision(v)?;
+        let dest = Self::v2_dest(v)?;
+        let topologies = Self::v2_topologies(v)?;
+        let worlds = Self::v2_worlds(v)?;
+        let params = Self::v2_cluster_params(v)?;
+        Self::check_sweep(topologies.len().saturating_mul(worlds.len()))?;
+        if let Some(trace_id) = v.get("trace_id").and_then(Json::as_str) {
+            let report = self
+                .engine
+                .predict_cluster_uploaded(trace_id, dest, precision, &topologies, &worlds, &params)
+                .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
+            Ok(v2_envelope(
+                "predict_cluster",
+                Self::cluster_response(&report).to_value(),
+                vec![("trace_id", Json::Str(trace_id.to_string()))],
+            ))
+        } else {
+            let (model, batch, origin) = Self::v2_model_origin(v)?;
+            let report = self
+                .engine
+                .predict_cluster(&model, batch, origin, dest, precision, &topologies, &worlds, &params)
+                .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
+            Ok(v2_envelope("predict_cluster", Self::cluster_response(&report).to_value(), Vec::new()))
+        }
+    }
+
+    fn v2_rank_cluster(&self, v: &Json) -> V2Result {
+        let precision = Self::v2_precision(v)?;
+        let dests = Self::v2_dests(v)?;
+        let topologies = Self::v2_topologies(v)?;
+        let worlds = Self::v2_worlds(v)?;
+        let params = Self::v2_cluster_params(v)?;
+        Self::check_sweep(
+            dests
+                .len()
+                .saturating_mul(topologies.len())
+                .saturating_mul(worlds.len()),
+        )?;
+        if let Some(trace_id) = v.get("trace_id").and_then(Json::as_str) {
+            let ranking = self
+                .engine
+                .rank_cluster_uploaded(trace_id, &dests, precision, &topologies, &worlds, &params)
+                .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
+            Ok(v2_envelope(
+                "rank_cluster",
+                Self::cluster_rank_response(&ranking).to_value(),
+                vec![("trace_id", Json::Str(trace_id.to_string()))],
+            ))
+        } else {
+            let (model, batch, origin) = Self::v2_model_origin(v)?;
+            let ranking = self
+                .engine
+                .rank_cluster(&model, batch, origin, &dests, precision, &topologies, &worlds, &params)
+                .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
+            Ok(v2_envelope("rank_cluster", Self::cluster_rank_response(&ranking).to_value(), Vec::new()))
+        }
+    }
+
+    fn v2_export_workload(&self, v: &Json) -> V2Result {
+        let precision = Self::v2_precision(v)?;
+        let dest = Self::v2_dest(v)?;
+        let topology = match v.get("topology") {
+            None | Some(Json::Null) => {
+                return Err(V2Error::new("bad_request", "missing field \"topology\""))
+            }
+            Some(it) => Self::v2_topology_entry(it)?,
+        };
+        let world = v
+            .req_usize("world")
+            .map_err(|e| V2Error::new("bad_request", e.to_string()))?;
+        if !(1..=MAX_CLUSTER_WORLD).contains(&world) {
+            return Err(V2Error::new(
+                "invalid_argument",
+                format!("world size {world} out of range 1..={MAX_CLUSTER_WORLD}"),
+            ));
+        }
+        let params = Self::v2_cluster_params(v)?;
+        let (model, batch, origin) = Self::v2_model_origin(v)?;
+        let workload = self
+            .engine
+            .export_workload(&model, batch, origin, dest, precision, topology, world, &params)
+            .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
+        Ok(v2_envelope("export_workload", workload.to_value(), Vec::new()))
+    }
+
+    /// Common `model`/`batch`/`origin` triple of the zoo-model paths.
+    fn v2_model_origin(v: &Json) -> std::result::Result<(String, usize, Device), V2Error> {
+        let model = v
+            .req_str("model")
+            .map_err(|e| V2Error::new("bad_request", e.to_string()))?
+            .to_string();
+        let batch = v
+            .req_usize("batch")
+            .map_err(|e| V2Error::new("bad_request", e.to_string()))?;
+        let origin_name = v
+            .req_str("origin")
+            .map_err(|e| V2Error::new("bad_request", e.to_string()))?;
+        let origin = parse_device(origin_name, "origin")
+            .map_err(|e| V2Error::new("unknown_device", e.to_string()))?;
+        Ok((model, batch, origin))
+    }
+
+    /// Resolve a v2 `topologies` field: names and/or inline topology
+    /// objects, or every registered topology when absent.
+    fn v2_topologies(v: &Json) -> std::result::Result<Vec<Topology>, V2Error> {
+        match v.get("topologies") {
+            None | Some(Json::Null) => Ok(comm::topology::all_topologies()),
+            Some(arr) => {
+                let items = arr.as_arr().ok_or_else(|| {
+                    V2Error::new("bad_request", "topologies must be an array of names or objects")
+                })?;
+                if items.is_empty() {
+                    return Err(V2Error::new("invalid_argument", "topologies must be non-empty"));
+                }
+                items.iter().map(Self::v2_topology_entry).collect()
+            }
+        }
+    }
+
+    /// One topology entry: a registered name, or an inline
+    /// `{"name","gpus_per_node","intra","inter"}` object (registered
+    /// through the interning registry, idempotently).
+    fn v2_topology_entry(it: &Json) -> std::result::Result<Topology, V2Error> {
+        match it {
+            Json::Str(name) => comm::topology::find_topology(name).ok_or_else(|| {
+                V2Error::new(
+                    "unknown_topology",
+                    format!(
+                        "unknown topology {name:?} (known: {})",
+                        comm::topology::topology_names().join("|")
+                    ),
+                )
+            }),
+            Json::Obj(_) => {
+                let name = it
+                    .req_str("name")
+                    .map_err(|_| V2Error::new("bad_request", "inline topology needs string field \"name\""))?;
+                let gpus_per_node = it.req_usize("gpus_per_node").map_err(|_| {
+                    V2Error::new("bad_request", "inline topology needs integer field \"gpus_per_node\"")
+                })?;
+                let intra = Self::v2_link(it.get("intra"), "intra")?;
+                let inter = Self::v2_link(it.get("inter"), "inter")?;
+                comm::topology::register_topology(&comm::NewTopology {
+                    name: name.to_string(),
+                    gpus_per_node: gpus_per_node as u32,
+                    intra,
+                    inter,
+                })
+                .map_err(Self::register_error)
+            }
+            _ => Err(V2Error::new(
+                "bad_request",
+                "topologies entries must be topology names or inline objects",
+            )),
+        }
+    }
+
+    /// One link field of an inline topology: a registered name, or an
+    /// inline `{"name","bandwidth_gbps","step_latency_ms"?}` object.
+    fn v2_link(it: Option<&Json>, role: &str) -> std::result::Result<comm::Link, V2Error> {
+        let it = it.ok_or_else(|| {
+            V2Error::new("bad_request", format!("inline topology needs field {role:?}"))
+        })?;
+        match it {
+            Json::Str(name) => comm::find_link(name).ok_or_else(|| {
+                V2Error::new(
+                    "unknown_link",
+                    format!(
+                        "unknown {role} link {name:?} (known: {})",
+                        comm::link_names().join("|")
+                    ),
+                )
+            }),
+            Json::Obj(_) => {
+                let name = it.req_str("name").map_err(|_| {
+                    V2Error::new("bad_request", format!("inline {role} link needs string field \"name\""))
+                })?;
+                let bandwidth_gbps = it.get("bandwidth_gbps").and_then(Json::as_f64).ok_or_else(|| {
+                    V2Error::new(
+                        "bad_request",
+                        format!("inline {role} link needs number field \"bandwidth_gbps\""),
+                    )
+                })?;
+                let step_latency_ms =
+                    it.get("step_latency_ms").and_then(Json::as_f64).unwrap_or(0.01);
+                comm::register_link(&comm::NewLink {
+                    name: name.to_string(),
+                    bandwidth_gbps,
+                    step_latency_ms,
+                })
+                .map_err(Self::register_error)
+            }
+            _ => Err(V2Error::new(
+                "bad_request",
+                format!("{role} link must be a link name or an inline object"),
+            )),
+        }
+    }
+
+    /// Resolve a v2 `worlds` field ([`DEFAULT_CLUSTER_WORLDS`] when
+    /// absent).
+    fn v2_worlds(v: &Json) -> std::result::Result<Vec<usize>, V2Error> {
+        match v.get("worlds") {
+            None | Some(Json::Null) => Ok(DEFAULT_CLUSTER_WORLDS.to_vec()),
+            Some(arr) => {
+                let items = arr.as_arr().ok_or_else(|| {
+                    V2Error::new("bad_request", "worlds must be an array of rank counts")
+                })?;
+                if items.is_empty() {
+                    return Err(V2Error::new("invalid_argument", "worlds must be non-empty"));
+                }
+                items
+                    .iter()
+                    .map(|it| {
+                        let w = it.as_usize().ok_or_else(|| {
+                            V2Error::new("bad_request", "worlds entries must be non-negative integers")
+                        })?;
+                        if !(1..=MAX_CLUSTER_WORLD).contains(&w) {
+                            return Err(V2Error::new(
+                                "invalid_argument",
+                                format!("world size {w} out of range 1..={MAX_CLUSTER_WORLD}"),
+                            ));
+                        }
+                        Ok(w)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Optional overlap/bucket knobs → [`ClusterParams`].
+    fn v2_cluster_params(v: &Json) -> std::result::Result<ClusterParams, V2Error> {
+        let mut params = ClusterParams::default();
+        if let Some(x) = v.get("overlap") {
+            params.overlap = x
+                .as_f64()
+                .filter(|o| (0.0..=1.0).contains(o))
+                .ok_or_else(|| V2Error::new("invalid_argument", "overlap must be a number in 0..=1"))?;
+        }
+        if let Some(x) = v.get("bucket_mib") {
+            let mib = x
+                .as_f64()
+                .filter(|b| b.is_finite() && *b >= 0.0)
+                .ok_or_else(|| {
+                    V2Error::new("invalid_argument", "bucket_mib must be a non-negative number")
+                })?;
+            params.bucket_bytes = mib * 1024.0 * 1024.0;
+        }
+        Ok(params)
+    }
+
+    fn check_sweep(cells: usize) -> std::result::Result<(), V2Error> {
+        if cells > MAX_CLUSTER_SWEEP {
+            return Err(V2Error::new(
+                "invalid_argument",
+                format!("cluster sweep of {cells} configurations exceeds the {MAX_CLUSTER_SWEEP} limit"),
+            ));
+        }
+        Ok(())
+    }
+
+    fn register_error(e: RegisterError) -> V2Error {
+        match e {
+            RegisterError::Conflict(m) => V2Error::new("conflict", m),
+            RegisterError::Invalid(m) => V2Error::new("invalid_argument", m),
+        }
+    }
+
+    fn cluster_response(report: &crate::engine::ClusterReport) -> ClusterResponse {
+        ClusterResponse {
+            model: report.trace.model.clone(),
+            batch: report.trace.batch_size,
+            origin: report.trace.origin.id().to_string(),
+            dest: report.dest.id().to_string(),
+            compute_ms: report.compute_ms,
+            configs: report
+                .configs
+                .iter()
+                .map(|c| ClusterConfig {
+                    topology: c.topology.name().to_string(),
+                    world: c.world,
+                    iter_ms: c.pred.iter_ms,
+                    comm_ms: c.pred.comm_ms,
+                    exposed_ms: c.pred.exposed_ms,
+                    throughput: c.pred.throughput,
+                    efficiency: c.pred.efficiency,
+                    cost_normalized_throughput: c.cost_normalized_throughput,
+                })
+                .collect(),
+        }
+    }
+
+    fn cluster_rank_response(ranking: &crate::engine::ClusterRanking) -> ClusterRankResponse {
+        ClusterRankResponse {
+            model: ranking.trace.model.clone(),
+            batch: ranking.trace.batch_size,
+            origin: ranking.trace.origin.id().to_string(),
+            ranking: ranking
+                .entries
+                .iter()
+                .map(|e| ClusterRankedConfig {
+                    dest: e.dest.id().to_string(),
+                    topology: e.topology.name().to_string(),
+                    world: e.world,
+                    iter_ms: e.pred.iter_ms,
+                    throughput: e.pred.throughput,
+                    efficiency: e.pred.efficiency,
+                    cost_normalized_throughput: e.cost_normalized_throughput,
+                })
+                .collect(),
+        }
+    }
+
+    /// Resolve a v2 `dests` field: explicit names, or the full registry.
+    fn v2_dests(v: &Json) -> std::result::Result<Vec<Device>, V2Error> {
+        match v.get("dests") {
+            None | Some(Json::Null) => Ok(registry::all_devices()),
+            Some(arr) => {
+                let items = arr
+                    .as_arr()
+                    .ok_or_else(|| V2Error::new("bad_request", "dests must be an array of device names"))?;
+                items
+                    .iter()
+                    .map(|it| {
+                        let name = it
+                            .as_str()
+                            .ok_or_else(|| V2Error::new("bad_request", "dests entries must be strings"))?;
+                        parse_device(name, "destination")
+                            .map_err(|e| V2Error::new("unknown_device", e.to_string()))
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// v1 handler errors carry no code; classify from the message.
+    fn classify_v1(e: &anyhow::Error) -> &'static str {
+        let msg = e.to_string();
+        if msg.contains("unknown model") {
+            "unknown_model"
+        } else if msg.contains("unknown origin device") || msg.contains("unknown destination device") {
+            "unknown_device"
+        } else {
+            "invalid_argument"
+        }
+    }
+
+    /// Decision-ready response fields from an engine prediction (the
+    /// uploaded-trace path, where there is no request echo to copy).
+    fn prediction_response(out: &crate::engine::EnginePrediction) -> PredictionResponse {
+        let pred = &out.pred;
+        let tput = pred.throughput();
+        PredictionResponse {
+            model: pred.model.clone(),
+            batch: pred.batch_size,
+            origin: pred.origin.id().to_string(),
+            dest: pred.dest.id().to_string(),
+            origin_iter_ms: out.trace.run_time_ms(),
+            iter_ms: pred.run_time_ms(),
+            throughput: tput,
+            cost_normalized_throughput: crate::cost::cost_normalized_throughput(pred.dest, tput),
+            mlp_time_fraction: pred.mlp_time_fraction(),
+            mlp_fallbacks: pred.mlp_fallbacks,
+        }
+    }
+
+    fn rank_response(ranking: &crate::engine::Ranking) -> RankResponse {
+        RankResponse {
+            model: ranking.trace.model.clone(),
+            batch: ranking.trace.batch_size,
+            origin: ranking.trace.origin.id().to_string(),
+            origin_iter_ms: ranking.trace.run_time_ms(),
+            ranking: ranking
+                .entries
+                .iter()
+                .map(|e| RankedDest {
+                    dest: e.dest.id().to_string(),
+                    iter_ms: e.pred.run_time_ms(),
+                    throughput: e.pred.throughput(),
+                    cost_normalized_throughput: e.cost_normalized_throughput,
+                    mlp_time_fraction: e.pred.mlp_time_fraction(),
+                    mlp_fallbacks: e.pred.mlp_fallbacks,
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::{
+        stats_request_json, v2_check_error, v2_export_workload_request, v2_predict_cluster_request,
+        v2_predict_model_request, v2_predict_trace_request, v2_rank_cluster_request,
+        v2_rank_trace_request, v2_stats_request, v2_submit_trace_request, RegisteredDevice,
+    };
+    use crate::device::ALL_DEVICES;
+
+    fn wave_service() -> PredictionService {
+        PredictionService::with_predictor(HybridPredictor::wave_only())
+    }
+
+    fn req(model: &str, batch: usize, origin: &str, dest: &str) -> PredictionRequest {
+        PredictionRequest {
+            model: model.into(),
+            batch,
+            origin: origin.into(),
+            dest: dest.into(),
+            precision: None,
+        }
+    }
+
+    fn rank_req(model: &str, batch: usize, origin: &str) -> RankRequest {
+        RankRequest {
+            model: model.into(),
+            batch,
+            origin: origin.into(),
+            precision: None,
+            dests: None,
+        }
+    }
+
+    #[test]
+    fn handles_basic_request() {
+        let s = wave_service();
+        let r = s.handle(&req("mlp", 32, "t4", "v100")).unwrap();
+        assert!(r.iter_ms > 0.0);
+        assert!(r.throughput > 0.0);
+        assert!(r.cost_normalized_throughput.is_some());
+        assert_eq!(r.dest, "V100");
+    }
+
+    #[test]
+    fn rejects_unknown_inputs() {
+        let s = wave_service();
+        assert!(s.handle(&req("nope", 32, "t4", "v100")).is_err());
+        assert!(s.handle(&req("mlp", 32, "a100", "v100")).is_err());
+        assert!(s.handle(&req("mlp", 0, "t4", "v100")).is_err());
+        let mut r = req("mlp", 8, "t4", "v100");
+        r.precision = Some("fp64".into());
+        assert!(s.handle(&r).is_err());
+    }
+
+    #[test]
+    fn request_response_json_roundtrip() {
+        let r = req("gnmt", 64, "p4000", "t4");
+        let parsed = PredictionRequest::from_json(&r.to_json()).unwrap();
+        assert_eq!(parsed.model, "gnmt");
+        assert_eq!(parsed.batch, 64);
+
+        let resp = wave_service().handle(&r).unwrap();
+        let parsed = PredictionResponse::from_json(&resp.to_json()).unwrap();
+        assert!((parsed.iter_ms - resp.iter_ms).abs() < 1e-9);
+        assert_eq!(
+            parsed.cost_normalized_throughput.is_some(),
+            resp.cost_normalized_throughput.is_some()
+        );
+    }
+
+    #[test]
+    fn rank_response_json_roundtrip() {
+        let s = wave_service();
+        let resp = s.handle_rank(&rank_req("mlp", 32, "t4")).unwrap();
+        let parsed = RankResponse::from_json(&resp.to_json()).unwrap();
+        assert_eq!(parsed.ranking.len(), resp.ranking.len());
+        for (a, b) in parsed.ranking.iter().zip(&resp.ranking) {
+            assert_eq!(a.dest, b.dest);
+            assert!((a.iter_ms - b.iter_ms).abs() < 1e-9);
+            assert_eq!(
+                a.cost_normalized_throughput.is_some(),
+                b.cost_normalized_throughput.is_some()
+            );
+        }
+    }
+
+    #[test]
+    fn rank_matches_individual_requests_with_one_tracking_pass() {
+        // A default rank equals N individual requests, with exactly one
+        // run of the tracking pipeline. (The default destination set is
+        // the whole registry — at least the six built-ins, plus any
+        // devices other concurrently running tests have registered.)
+        let s = wave_service();
+        let ranking = s.handle_rank(&rank_req("mlp", 16, "t4")).unwrap();
+        assert!(ranking.ranking.len() >= ALL_DEVICES.len());
+        for d in ALL_DEVICES {
+            assert!(
+                ranking.ranking.iter().any(|r| r.dest == d.id()),
+                "built-in {d} missing from the default rank"
+            );
+        }
+        let stats = s.engine().stats();
+        assert_eq!(stats.trace_misses, 1, "rank must track exactly once");
+        assert_eq!(stats.trace_hits, 0);
+
+        for entry in &ranking.ranking {
+            let resp = s.handle(&req("mlp", 16, "t4", &entry.dest)).unwrap();
+            assert!(
+                (resp.iter_ms - entry.iter_ms).abs() < 1e-9,
+                "{}: rank {} vs individual {}",
+                entry.dest,
+                entry.iter_ms,
+                resp.iter_ms
+            );
+        }
+        let stats = s.engine().stats();
+        assert_eq!(stats.trace_misses, 1, "individual requests must reuse the trace");
+        assert_eq!(stats.trace_hits as usize, ranking.ranking.len());
+    }
+
+    #[test]
+    fn rank_is_sorted_by_cost_normalized_throughput() {
+        let s = wave_service();
+        let resp = s.handle_rank(&rank_req("mlp", 32, "p4000")).unwrap();
+        let priced: Vec<f64> = resp
+            .ranking
+            .iter()
+            .filter_map(|r| r.cost_normalized_throughput)
+            .collect();
+        assert!(!priced.is_empty());
+        for w in priced.windows(2) {
+            assert!(w[0] >= w[1], "priced devices must be in descending order");
+        }
+        // Priced devices all come before unpriced ones.
+        let first_unpriced = resp
+            .ranking
+            .iter()
+            .position(|r| r.cost_normalized_throughput.is_none())
+            .unwrap_or(resp.ranking.len());
+        assert!(resp.ranking[first_unpriced..]
+            .iter()
+            .all(|r| r.cost_normalized_throughput.is_none()));
+    }
+
+    #[test]
+    fn rank_with_explicit_dests_and_errors() {
+        let s = wave_service();
+        let mut r = rank_req("mlp", 16, "t4");
+        r.dests = Some(vec!["v100".into(), "p100".into()]);
+        let resp = s.handle_rank(&r).unwrap();
+        assert_eq!(resp.ranking.len(), 2);
+
+        let mut bad = rank_req("mlp", 16, "t4");
+        bad.dests = Some(vec!["a100".into()]);
+        assert!(s.handle_rank(&bad).is_err());
+        assert!(s.handle_rank(&rank_req("nope", 16, "t4")).is_err());
+        assert!(s.handle_rank(&rank_req("mlp", 0, "t4")).is_err());
+    }
+
+    #[test]
+    fn handle_line_dispatches_and_reports_errors() {
+        let s = wave_service();
+        let ok = s.handle_line("{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}");
+        assert!(PredictionResponse::from_json(&ok).is_ok());
+        let rank = s.handle_line("{\"rank\":true,\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\"}");
+        assert!(RankResponse::from_json(&rank).is_ok());
+        let bad = s.handle_line("not json");
+        assert!(bad.contains("bad request"));
+        let unknown = s.handle_line("{\"model\":\"mlp\",\"batch\":8,\"origin\":\"a100\",\"dest\":\"v100\"}");
+        assert!(unknown.contains("error"));
+    }
+
+    #[test]
+    fn stats_request_reflects_engine_counters() {
+        let s = wave_service();
+        let cold = s.handle_stats();
+        assert_eq!(cold.trace_hits, 0);
+        assert_eq!(cold.trace_misses, 0);
+        assert!(cold.workers >= 1);
+
+        s.handle(&req("mlp", 8, "t4", "v100")).unwrap();
+        s.handle(&req("mlp", 8, "t4", "p100")).unwrap();
+        let warm = s.handle_stats();
+        assert_eq!(warm.trace_misses, 1);
+        assert_eq!(warm.trace_hits, 1);
+        assert_eq!(warm.trace_entries, 1);
+        assert_eq!(warm.plan_builds, 1);
+    }
+
+    #[test]
+    fn stats_line_dispatches_and_roundtrips() {
+        let s = wave_service();
+        s.handle(&req("mlp", 8, "t4", "v100")).unwrap();
+        let line = stats_request_json();
+        assert!(matches!(Request::from_json(&line).unwrap(), Request::Stats));
+        let reply = s.handle_line(&line);
+        let parsed = StatsResponse::from_json(&reply).unwrap();
+        assert_eq!(parsed.trace_misses, 1);
+        assert_eq!(parsed.workers, s.engine().workers());
+    }
+
+    #[test]
+    fn trace_cache_hits() {
+        let s = wave_service();
+        let a = s.trace_for("mlp", 16, Device::T4).unwrap();
+        let b = s.trace_for("mlp", 16, Device::T4).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+    }
+
+    #[test]
+    fn amp_prediction_not_slower_than_fp32() {
+        let s = wave_service();
+        let fp32 = s.handle(&req("mlp", 32, "p4000", "2080ti")).unwrap();
+        let mut amp_req = req("mlp", 32, "p4000", "2080ti");
+        amp_req.precision = Some("amp".into());
+        let amp = s.handle(&amp_req).unwrap();
+        assert!(amp.iter_ms <= fp32.iter_ms);
+    }
+
+    #[test]
+    fn handle_line_records_per_op_metrics() {
+        let s = wave_service();
+        s.handle_line("{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}");
+        s.handle_line("{\"stats\":true}");
+        s.handle_line("not json");
+        s.handle_line("{\"v\":2,\"op\":\"predict\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"a100\"}");
+
+        let m = s.engine().metrics();
+        let predict = m.snapshot(OpKind::Predict);
+        // One v1 success, one v2 unknown-device failure.
+        assert_eq!(predict.requests, 2);
+        assert_eq!(predict.errors, 1);
+        assert_eq!(predict.buckets.iter().sum::<u64>(), 2);
+        assert!(predict.latency_ms_sum > 0.0);
+        assert_eq!(m.snapshot(OpKind::Stats).requests, 1);
+        let other = m.snapshot(OpKind::Other);
+        assert_eq!(other.requests, 1);
+        assert_eq!(other.errors, 1);
+
+        // The totals surface through EngineStats (and so through the
+        // v2 stats op).
+        let es = s.engine().stats();
+        assert_eq!(es.requests, 4);
+        assert_eq!(es.request_errors, 2);
+        let reply = s.handle_line(&v2_stats_request());
+        let v = json::parse(&reply).unwrap();
+        assert_eq!(v.req_usize("requests").unwrap(), 4);
+        assert_eq!(v.req_usize("request_errors").unwrap(), 2);
+    }
+
+    #[test]
+    fn dispatch_http_shapes_parse_errors_structurally() {
+        let s = wave_service();
+        // Garbage answers in the structured v2 shape (the transport
+        // needs a code), unlike the TCP line path's v1 contract.
+        let out = s.dispatch_http("not json");
+        assert_eq!(out.error, Some("bad_request"));
+        let v = json::parse(&out.reply).unwrap();
+        assert_eq!(v.get("v"), Some(&Json::Num(PROTOCOL_V2)));
+        assert_eq!(
+            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("bad_request")
+        );
+
+        // Well-formed v1 bodies keep their v1 reply shape…
+        let out = s.dispatch_http("{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}");
+        assert!(out.error.is_none());
+        assert_eq!(out.op, OpKind::Predict);
+        assert!(PredictionResponse::from_json(&out.reply).is_ok());
+
+        // …including v1-shaped errors, classified for status mapping.
+        let out = s.dispatch_http("{\"model\":\"mlp\",\"batch\":8,\"origin\":\"a100\",\"dest\":\"v100\"}");
+        assert_eq!(out.error, Some("unknown_device"));
+        assert!(out.reply.contains("unknown origin device"));
+
+        // v2 bodies flow the envelope path, same as TCP.
+        let out = s.dispatch_http(&v2_predict_model_request("mlp", 8, "t4", "v100", None));
+        assert!(out.error.is_none());
+        let tcp = s.handle_line(&v2_predict_model_request("mlp", 8, "t4", "v100", None));
+        assert_eq!(out.reply, tcp);
+    }
+
+    #[test]
+    fn v2_predict_payload_matches_v1_bit_for_bit() {
+        let s = wave_service();
+        let v1_line = "{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}";
+        let v1 = s.handle_line(v1_line);
+        let v2 = s.handle_line(&v2_predict_model_request("mlp", 8, "t4", "v100", None));
+        let v1_parsed = json::parse(&v1).unwrap();
+        let v2_parsed = json::parse(&v2).unwrap();
+        assert_eq!(v2_parsed.get("v"), Some(&Json::Num(2.0)));
+        assert_eq!(v2_parsed.req_str("op").unwrap(), "predict");
+        // Every v1 field appears identically in the v2 payload.
+        if let Json::Obj(m) = &v1_parsed {
+            for (k, val) in m {
+                assert_eq!(v2_parsed.get(k), Some(val), "field {k}");
+            }
+        } else {
+            panic!("v1 reply is not an object");
+        }
+    }
+
+    #[test]
+    fn v2_envelope_dispatches_rank_and_stats() {
+        let s = wave_service();
+        let rank = s.handle_line(
+            "{\"v\":2,\"op\":\"rank\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dests\":[\"v100\",\"t4\"]}",
+        );
+        let parsed = json::parse(&rank).unwrap();
+        assert_eq!(parsed.req_str("op").unwrap(), "rank");
+        assert_eq!(parsed.get("ranking").and_then(Json::as_arr).unwrap().len(), 2);
+
+        let stats = s.handle_line(&v2_stats_request());
+        let parsed = json::parse(&stats).unwrap();
+        assert_eq!(parsed.req_str("op").unwrap(), "stats");
+        assert_eq!(parsed.req_usize("trace_misses").unwrap(), 1);
+        assert_eq!(parsed.req_usize("trace_uploads").unwrap(), 0);
+        assert!(parsed.req_usize("devices").unwrap() >= ALL_DEVICES.len());
+    }
+
+    #[test]
+    fn v2_errors_are_structured() {
+        let s = wave_service();
+        let check = |line: &str, code: &str| {
+            let reply = s.handle_line(line);
+            let v = json::parse(&reply).unwrap();
+            assert_eq!(
+                v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+                Some(code),
+                "line {line} → {reply}"
+            );
+            assert!(v.get("error").and_then(|e| e.get("message")).is_some());
+        };
+        check("{\"v\":2}", "bad_request");
+        check("{\"v\":2,\"op\":\"frobnicate\"}", "unsupported_op");
+        check(
+            "{\"v\":2,\"op\":\"predict\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"a100\"}",
+            "unknown_device",
+        );
+        check(
+            "{\"v\":2,\"op\":\"predict\",\"model\":\"nope\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}",
+            "unknown_model",
+        );
+        check(
+            "{\"v\":2,\"op\":\"predict\",\"trace_id\":\"tr-0000000000000000\",\"dest\":\"v100\"}",
+            "unknown_trace",
+        );
+        check(
+            "{\"v\":2,\"op\":\"predict\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"precision\":\"fp64\"}",
+            "invalid_argument",
+        );
+        check("{\"v\":3,\"op\":\"predict\"}", "unsupported_version");
+        // v1 malformed lines keep the v1 error shape.
+        assert!(s.handle_line("not json").contains("bad request"));
+    }
+
+    #[test]
+    fn v2_register_device_becomes_rankable_with_correct_ordering() {
+        let s = wave_service();
+        // Absurdly cost-efficient so its rank position is deterministic:
+        // V100-class hardware at a tenth of the T4's price.
+        let line = s.handle_line(
+            "{\"v\":2,\"op\":\"register_device\",\"name\":\"sim-wire9\",\"sms\":80,\"clock_mhz\":1530,\"mem_bw_gbps\":900,\"fp32_tflops\":15.7,\"tensor_cores\":true,\"usd_per_hr\":0.03}",
+        );
+        let ack = RegisteredDevice::from_json(&line).unwrap();
+        assert_eq!(ack.device, "sim-wire9");
+        assert!(ack.id >= ALL_DEVICES.len());
+        assert!(ack.devices > ALL_DEVICES.len());
+
+        // Idempotent replay: same spec, same id, no conflict.
+        let replay = RegisteredDevice::from_json(&s.handle_line(
+            "{\"v\":2,\"op\":\"register_device\",\"name\":\"sim-wire9\",\"sms\":80,\"clock_mhz\":1530,\"mem_bw_gbps\":900,\"fp32_tflops\":15.7,\"tensor_cores\":true,\"usd_per_hr\":0.03}",
+        ))
+        .unwrap();
+        assert_eq!(replay.id, ack.id);
+
+        // Different spec under the same name → conflict.
+        let clash = s.handle_line(
+            "{\"v\":2,\"op\":\"register_device\",\"name\":\"sim-wire9\",\"sms\":81,\"clock_mhz\":1530,\"mem_bw_gbps\":900,\"fp32_tflops\":15.7,\"tensor_cores\":true}",
+        );
+        let v = json::parse(&clash).unwrap();
+        assert_eq!(
+            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("conflict")
+        );
+
+        // The new device appears in a default (v1!) rank, and — being a
+        // V100 at 1/12 the T4's price — tops the cost-normalized order.
+        let ranking = s.handle_rank(&rank_req("mlp", 16, "t4")).unwrap();
+        let pos = ranking.ranking.iter().position(|r| r.dest == "sim-wire9");
+        assert_eq!(pos, Some(0), "cheapest-per-throughput device must rank first");
+        let entry = &ranking.ranking[pos.unwrap()];
+        let expected_cnt = entry.throughput / 0.03;
+        assert!(
+            (entry.cost_normalized_throughput.unwrap() - expected_cnt).abs() < 1e-6,
+            "cost normalization must use the registered price"
+        );
+
+        // …and works as an explicit v1 predict destination.
+        let resp = s.handle(&req("mlp", 16, "t4", "sim-wire9")).unwrap();
+        assert!(resp.iter_ms > 0.0);
+        assert_eq!(resp.dest, "sim-wire9");
+    }
+
+    #[test]
+    fn v2_submit_trace_then_predict_matches_in_process_evaluation() {
+        let s = wave_service();
+        let graph = crate::models::by_name("mlp", 12).unwrap();
+        let trace = crate::tracker::OperationTracker::new(Device::P4000).track(&graph);
+
+        let reply = s.handle_line(&v2_submit_trace_request(&trace));
+        let v = json::parse(&reply).unwrap();
+        v2_check_error(&v).unwrap();
+        let trace_id = v.req_str("trace_id").unwrap().to_string();
+        assert!(trace_id.starts_with("tr-"));
+        assert_eq!(v.req_usize("ops").unwrap(), trace.ops.len());
+        assert_eq!(v.req_str("origin").unwrap(), "P4000");
+
+        // Predict by id over the wire ≡ analyze+evaluate in-process.
+        let reply = s.handle_line(&v2_predict_trace_request(&trace_id, "v100", None));
+        let v = json::parse(&reply).unwrap();
+        v2_check_error(&v).unwrap();
+        let wire_ms = v.get("iter_ms").and_then(Json::as_f64).unwrap();
+        let plan = s.engine().analyze(&trace);
+        let direct = s.engine().evaluate(&plan, Device::V100, Precision::Fp32);
+        assert_eq!(
+            wire_ms.to_bits(),
+            direct.run_time_ms().to_bits(),
+            "wire {wire_ms} vs in-process {}",
+            direct.run_time_ms()
+        );
+
+        // Rank by id: default dests cover at least the built-ins.
+        let reply = s.handle_line(&v2_rank_trace_request(&trace_id, None, Some("amp")));
+        let v = json::parse(&reply).unwrap();
+        v2_check_error(&v).unwrap();
+        let ranking = v.get("ranking").and_then(Json::as_arr).unwrap();
+        assert!(ranking.len() >= ALL_DEVICES.len());
+        assert_eq!(v.req_str("model").unwrap(), "mlp");
+
+        // Submitting garbage is a structured error.
+        let bad = s.handle_line("{\"v\":2,\"op\":\"submit_trace\",\"trace\":{\"format\":\"nope\"}}");
+        let v = json::parse(&bad).unwrap();
+        assert_eq!(
+            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("invalid_argument")
+        );
+    }
+
+    #[test]
+    fn v2_predict_cluster_world_one_matches_v2_predict() {
+        let s = wave_service();
+        let topologies = vec!["dgx".to_string()];
+        let reply = s.handle_line(&v2_predict_cluster_request(
+            "mlp",
+            8,
+            "t4",
+            "v100",
+            Some(&topologies),
+            Some(&[1, 4]),
+            None,
+        ));
+        let resp = ClusterResponse::from_json(&reply).unwrap();
+        assert_eq!(resp.model, "mlp");
+        assert_eq!(resp.dest, "V100");
+        assert_eq!(resp.configs.len(), 2);
+        for c in &resp.configs {
+            assert_eq!(c.topology, "dgx");
+            assert!(c.efficiency > 0.0 && c.efficiency <= 1.0 + 1e-9);
+            assert!(c.exposed_ms >= 0.0);
+        }
+        // The world=1 cell is the single-GPU prediction, bit-identical.
+        let single = s.handle_line(&v2_predict_model_request("mlp", 8, "t4", "v100", None));
+        let single_ms = json::parse(&single).unwrap().get("iter_ms").and_then(Json::as_f64).unwrap();
+        let w1 = resp.configs.iter().find(|c| c.world == 1).unwrap();
+        assert_eq!(w1.iter_ms.to_bits(), single_ms.to_bits());
+        assert_eq!(w1.comm_ms, 0.0);
+    }
+
+    #[test]
+    fn v2_predict_cluster_defaults_cover_every_topology_and_world() {
+        let s = wave_service();
+        let reply = s.handle_line(&v2_predict_cluster_request("mlp", 8, "t4", "v100", None, None, None));
+        let resp = ClusterResponse::from_json(&reply).unwrap();
+        // At least the dgx/cloud seeds × the default world sweep (other
+        // concurrently running tests may have registered more
+        // topologies).
+        assert!(resp.configs.len() >= 2 * DEFAULT_CLUSTER_WORLDS.len());
+        for t in ["dgx", "cloud"] {
+            for &w in &DEFAULT_CLUSTER_WORLDS {
+                assert!(
+                    resp.configs.iter().any(|c| c.topology == t && c.world == w),
+                    "missing cell ({t}, {w})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn v2_rank_cluster_is_sorted_and_complete() {
+        let s = wave_service();
+        let dests = vec!["v100".to_string(), "t4".to_string()];
+        let topologies = vec!["dgx".to_string(), "cloud".to_string()];
+        let reply = s.handle_line(&v2_rank_cluster_request(
+            "mlp",
+            8,
+            "t4",
+            Some(&dests),
+            Some(&topologies),
+            Some(&[1, 4]),
+            None,
+        ));
+        let resp = ClusterRankResponse::from_json(&reply).unwrap();
+        assert_eq!(resp.ranking.len(), 2 * 2 * 2);
+        // Both dests are rentable, so the whole ranking is priced and
+        // descending in cost-normalized throughput.
+        let priced: Vec<f64> = resp
+            .ranking
+            .iter()
+            .map(|e| e.cost_normalized_throughput.unwrap())
+            .collect();
+        for w in priced.windows(2) {
+            assert!(w[0] >= w[1], "ranking must be descending: {priced:?}");
+        }
+    }
+
+    #[test]
+    fn v2_cluster_errors_are_structured() {
+        let s = wave_service();
+        let check = |line: &str, code: &str| {
+            let reply = s.handle_line(line);
+            let v = json::parse(&reply).unwrap();
+            assert_eq!(
+                v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+                Some(code),
+                "line {line} → {reply}"
+            );
+        };
+        check(
+            "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"topologies\":[\"no-such-topology\"]}",
+            "unknown_topology",
+        );
+        check(
+            "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"topologies\":[{\"name\":\"sim-svc-badlink\",\"gpus_per_node\":4,\"intra\":\"no-such-link\",\"inter\":\"eth25g\"}]}",
+            "unknown_link",
+        );
+        check(
+            "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"worlds\":[0]}",
+            "invalid_argument",
+        );
+        check(
+            "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"topologies\":[]}",
+            "invalid_argument",
+        );
+        check(
+            "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"overlap\":1.5}",
+            "invalid_argument",
+        );
+        check(
+            "{\"v\":2,\"op\":\"rank_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dests\":[\"a100\"]}",
+            "unknown_device",
+        );
+        check(
+            "{\"v\":2,\"op\":\"export_workload\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"world\":8}",
+            "bad_request",
+        );
+        // An oversized sweep is refused before any compute.
+        let worlds: Vec<usize> = (1..=MAX_CLUSTER_SWEEP + 1).collect();
+        let line = v2_predict_cluster_request("mlp", 8, "t4", "v100", None, Some(&worlds), None);
+        check(&line, "invalid_argument");
+    }
+
+    #[test]
+    fn v2_inline_topologies_register_links_idempotently() {
+        let s = wave_service();
+        let line = "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"worlds\":[2],\"topologies\":[{\"name\":\"sim-svc-pod\",\"gpus_per_node\":2,\"intra\":\"nvlink\",\"inter\":{\"name\":\"sim-svc-wan\",\"bandwidth_gbps\":10.0,\"step_latency_ms\":0.02}}]}";
+        let resp = ClusterResponse::from_json(&s.handle_line(line)).unwrap();
+        assert_eq!(resp.configs.len(), 1);
+        assert_eq!(resp.configs[0].topology, "sim-svc-pod");
+        // Replay is idempotent (same inline specs re-intern silently)…
+        let replay = ClusterResponse::from_json(&s.handle_line(line)).unwrap();
+        assert_eq!(replay.configs[0].iter_ms.to_bits(), resp.configs[0].iter_ms.to_bits());
+        // …while the same name with a different shape is a conflict.
+        let clash = s.handle_line(
+            "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"worlds\":[2],\"topologies\":[{\"name\":\"sim-svc-pod\",\"gpus_per_node\":4,\"intra\":\"nvlink\",\"inter\":\"eth25g\"}]}",
+        );
+        let v = json::parse(&clash).unwrap();
+        assert_eq!(
+            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("conflict")
+        );
+    }
+
+    #[test]
+    fn v2_export_workload_round_trips() {
+        let s = wave_service();
+        let reply = s.handle_line(&v2_export_workload_request("mlp", 8, "t4", "v100", "dgx", 16, None));
+        let v = json::parse(&reply).unwrap();
+        v2_check_error(&v).unwrap();
+        assert_eq!(v.req_str("op").unwrap(), "export_workload");
+        let w = crate::comm::Workload::from_value(&v).unwrap();
+        assert_eq!(w.topology, "dgx");
+        assert_eq!(w.world, 16);
+        assert!(w.compute_ms > 0.0);
+        assert!(!w.comm_ops.is_empty());
+        assert!(w.comm_ops.iter().all(|op| op.participants.iter().all(|&r| r < 16)));
+        // A re-serialized workload parses back to the same value.
+        let again = crate::comm::Workload::from_value(&json::parse(&w.to_value().dump()).unwrap()).unwrap();
+        assert_eq!(again, w);
+    }
+}

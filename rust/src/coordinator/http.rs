@@ -1,0 +1,685 @@
+//! The HTTP transport: a dependency-free HTTP/1.1 front end over the
+//! shared [`Dispatcher`](super::Dispatcher).
+//!
+//! Serves three endpoints (see `docs/SERVICE.md` for the full
+//! reference):
+//!
+//! * `POST /v2` — one request per body, same envelope the TCP transport
+//!   speaks (v1 bare objects are accepted too and answer in the v1
+//!   shape). The dispatcher's error code maps to the status: success →
+//!   200, `internal` → 500, `overloaded` → 503, everything else → 400.
+//! * `GET /healthz` — liveness: `200 ok`.
+//! * `GET /metrics` — Prometheus text exposition of the per-op request
+//!   counters, latency histograms, and engine gauges
+//!   ([`ServiceMetrics::render_prometheus`](crate::engine::metrics::ServiceMetrics::render_prometheus)).
+//!
+//! The runtime mirrors the TCP transport's bounds
+//! ([`ServeOptions`]): connection slots (a connect past
+//! `max_conns` gets one `503` and a close), per-request jobs on the
+//! engine's shared compute pool (full queue → `503 overloaded` for that
+//! request), and graceful drain on shutdown. Like every transport, this
+//! module never parses envelopes — bodies go to
+//! [`Dispatcher::dispatch_http`](super::Dispatcher::dispatch_http)
+//! opaque, and only the returned error code is inspected for status
+//! mapping.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::Result;
+
+use super::dispatch::PredictionService;
+use super::protocol::v2_error_json;
+use super::tcp::{internal_error_json, overloaded_json, ServeOptions, CONN_WRITE_TIMEOUT};
+
+/// Largest accepted request body. Even the biggest `submit_trace`
+/// payloads are a few MiB of JSON; anything larger is a mistake or
+/// abuse and gets `413` before the server buffers it.
+pub const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+
+const CONTENT_TYPE_JSON: &str = "application/json";
+const CONTENT_TYPE_TEXT: &str = "text/plain; version=0.0.4";
+
+/// One parsed request head plus its (bounded) body.
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: String,
+    /// Client asked to close (or speaks HTTP/1.0 without keep-alive).
+    close: bool,
+}
+
+/// What reading one request off the socket produced.
+enum ReadOutcome {
+    /// Clean end of the connection.
+    Eof,
+    Request(HttpRequest),
+    /// Protocol-level reject: answer with this status and close.
+    Reject { status: u16, message: String },
+}
+
+/// State shared by the acceptor, the connection threads, and the
+/// [`HttpServerHandle`] — the same slot/drain scaffolding as the TCP
+/// runtime.
+struct HttpShared {
+    service: Arc<PredictionService>,
+    opts: ServeOptions,
+    shutdown: AtomicBool,
+    active: AtomicUsize,
+    streams: Mutex<HashMap<u64, TcpStream>>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+    next_conn: AtomicU64,
+}
+
+impl HttpShared {
+    fn spawn_connection(self: &Arc<Self>, stream: TcpStream) {
+        if self.active.fetch_add(1, Ordering::SeqCst) >= self.opts.max_conns {
+            self.active.fetch_sub(1, Ordering::SeqCst);
+            let mut stream = stream;
+            let body = body_line(overloaded_json());
+            let _ = write_response(&mut stream, 503, CONTENT_TYPE_JSON, &body, true);
+            return; // drop closes the socket
+        }
+        let _ = stream.set_write_timeout(Some(CONN_WRITE_TIMEOUT));
+        let id = self.next_conn.fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = stream.try_clone() {
+            self.streams.lock().unwrap().insert(id, clone);
+        }
+        self.threads.lock().unwrap().retain(|h| !h.is_finished());
+        let shared = Arc::clone(self);
+        let spawned = std::thread::Builder::new()
+            .name(format!("habitat-http-{id}"))
+            .spawn(move || {
+                let peer = stream.peer_addr().map(|p| p.to_string()).unwrap_or_default();
+                if let Err(e) = run_connection(stream, &shared) {
+                    if !shared.shutdown.load(Ordering::SeqCst) {
+                        eprintln!("habitat: http connection {peer}: {e}");
+                    }
+                }
+                shared.streams.lock().unwrap().remove(&id);
+                shared.active.fetch_sub(1, Ordering::SeqCst);
+            });
+        match spawned {
+            Ok(handle) => self.threads.lock().unwrap().push(handle),
+            Err(_) => {
+                self.streams.lock().unwrap().remove(&id);
+                self.active.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// A running HTTP front end. Dropping the handle drains and stops it
+/// (same contract as the TCP [`ServerHandle`](super::ServerHandle)).
+pub struct HttpServerHandle {
+    addr: SocketAddr,
+    shared: Arc<HttpShared>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl HttpServerHandle {
+    /// The bound address (with the OS-assigned port when `:0` was
+    /// requested).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn service(&self) -> &Arc<PredictionService> {
+        &self.shared.service
+    }
+
+    /// Occupied connection slots right now.
+    pub fn active_connections(&self) -> usize {
+        self.shared.active.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting, drain in-flight responses, and join all runtime
+    /// threads. Idempotent; also invoked by `Drop`.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if self.shared.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST));
+        }
+        let _ = TcpStream::connect_timeout(&wake, std::time::Duration::from_millis(250));
+        if let Some(acceptor) = self.acceptor.take() {
+            let _ = acceptor.join();
+        }
+        // Half-close read sides: keep-alive connections parked in
+        // `read_line` see EOF and wind down after flushing their
+        // in-flight response.
+        for stream in self.shared.streams.lock().unwrap().values() {
+            let _ = stream.shutdown(std::net::Shutdown::Read);
+        }
+        let threads: Vec<JoinHandle<()>> = self.shared.threads.lock().unwrap().drain(..).collect();
+        for handle in threads {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for HttpServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Start the HTTP front end on `addr` around an existing (shared)
+/// service. Returns once the listener is bound; accepting and all
+/// request handling run on background threads owned by the returned
+/// handle. `opts.max_conns` bounds concurrent connections exactly like
+/// the TCP runtime ([`opts.http_port`](ServeOptions::http_port) is not
+/// consulted here — the caller already chose this address).
+pub fn start(
+    addr: &str,
+    service: Arc<PredictionService>,
+    opts: ServeOptions,
+) -> Result<HttpServerHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let shared = Arc::new(HttpShared {
+        service,
+        opts,
+        shutdown: AtomicBool::new(false),
+        active: AtomicUsize::new(0),
+        streams: Mutex::new(HashMap::new()),
+        threads: Mutex::new(Vec::new()),
+        next_conn: AtomicU64::new(0),
+    });
+    let for_acceptor = Arc::clone(&shared);
+    let acceptor = std::thread::Builder::new()
+        .name("habitat-http-accept".to_string())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                if for_acceptor.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let stream = match stream {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("habitat: http accept error: {e}");
+                        std::thread::sleep(std::time::Duration::from_millis(100));
+                        continue;
+                    }
+                };
+                for_acceptor.spawn_connection(stream);
+            }
+        })?;
+    Ok(HttpServerHandle {
+        addr: local,
+        shared,
+        acceptor: Some(acceptor),
+    })
+}
+
+/// One keep-alive connection: read a request, answer it, repeat until
+/// the client closes (or asks to via `Connection: close`).
+fn run_connection(stream: TcpStream, shared: &Arc<HttpShared>) -> Result<()> {
+    let mut write = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let req = match read_request(&mut reader, &mut write)? {
+            ReadOutcome::Eof => break,
+            ReadOutcome::Reject { status, message } => {
+                write_response(
+                    &mut write,
+                    status,
+                    CONTENT_TYPE_JSON,
+                    &body_line(v2_error_json("bad_request", &message)),
+                    true,
+                )?;
+                break;
+            }
+            ReadOutcome::Request(req) => req,
+        };
+        let (status, content_type, body) = respond(&req, shared);
+        let close = req.close || shared.shutdown.load(Ordering::SeqCst);
+        write_response(&mut write, status, content_type, &body, close)?;
+        if close {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Parse one request off the wire: request line, headers (only
+/// `Content-Length`, `Connection`, `Expect`, and `Transfer-Encoding`
+/// matter to us), then exactly `Content-Length` body bytes.
+fn read_request(
+    reader: &mut BufReader<TcpStream>,
+    write: &mut TcpStream,
+) -> Result<ReadOutcome> {
+    // Request line (tolerate stray blank lines between requests).
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(ReadOutcome::Eof);
+        }
+        if !line.trim_end().is_empty() {
+            break;
+        }
+    }
+    let mut parts = line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if v.starts_with("HTTP/") => (m, p, v),
+        _ => {
+            return Ok(ReadOutcome::Reject {
+                status: 400,
+                message: format!("malformed request line {:?}", line.trim_end()),
+            })
+        }
+    };
+    let method = method.to_string();
+    let path = path.to_string();
+    // HTTP/1.1 defaults to keep-alive; anything else to close.
+    let mut close = version != "HTTP/1.1";
+    let mut content_length = 0usize;
+    let mut expect_continue = false;
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header)? == 0 {
+            return Ok(ReadOutcome::Eof); // truncated mid-headers
+        }
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        let Some((key, value)) = header.split_once(':') else {
+            continue; // tolerate junk header lines
+        };
+        let value = value.trim();
+        match key.trim().to_ascii_lowercase().as_str() {
+            "content-length" => match value.parse::<usize>() {
+                Ok(n) => content_length = n,
+                Err(_) => {
+                    return Ok(ReadOutcome::Reject {
+                        status: 400,
+                        message: format!("invalid Content-Length {value:?}"),
+                    })
+                }
+            },
+            "connection" => {
+                let value = value.to_ascii_lowercase();
+                if value.split(',').any(|t| t.trim() == "close") {
+                    close = true;
+                } else if value.split(',').any(|t| t.trim() == "keep-alive") {
+                    close = false;
+                }
+            }
+            "expect" => {
+                if value.eq_ignore_ascii_case("100-continue") {
+                    expect_continue = true;
+                }
+            }
+            "transfer-encoding" => {
+                return Ok(ReadOutcome::Reject {
+                    status: 400,
+                    message: "chunked transfer encoding is not supported; send Content-Length"
+                        .to_string(),
+                })
+            }
+            _ => {}
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Ok(ReadOutcome::Reject {
+            status: 413,
+            message: format!(
+                "request body of {content_length} bytes exceeds the {MAX_BODY_BYTES} limit"
+            ),
+        });
+    }
+    if expect_continue && content_length > 0 {
+        write.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    let body = String::from_utf8_lossy(&body).into_owned();
+    Ok(ReadOutcome::Request(HttpRequest { method, path, body, close }))
+}
+
+/// Route one request: the observability endpoints answer inline (they
+/// only read counters); `POST /v2` rides the compute pool exactly like
+/// a TCP request line.
+fn respond(req: &HttpRequest, shared: &Arc<HttpShared>) -> (u16, &'static str, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (200, CONTENT_TYPE_TEXT, "ok\n".to_string()),
+        ("GET", "/metrics") => {
+            let engine = shared.service.engine();
+            let text = engine.metrics().render_prometheus(&engine.stats());
+            (200, CONTENT_TYPE_TEXT, text)
+        }
+        ("POST", "/v2") => dispatch_pooled(&req.body, shared),
+        (_, "/v2") => (
+            405,
+            CONTENT_TYPE_JSON,
+            body_line(v2_error_json(
+                "bad_request",
+                &format!("method {} not allowed on /v2 (want POST)", req.method),
+            )),
+        ),
+        (_, "/healthz") | (_, "/metrics") => (
+            405,
+            CONTENT_TYPE_JSON,
+            body_line(v2_error_json(
+                "bad_request",
+                &format!("method {} not allowed on {} (want GET)", req.method, req.path),
+            )),
+        ),
+        _ => (
+            404,
+            CONTENT_TYPE_JSON,
+            body_line(v2_error_json(
+                "bad_request",
+                &format!(
+                    "no such endpoint {:?} (want POST /v2, GET /healthz, GET /metrics)",
+                    req.path
+                ),
+            )),
+        ),
+    }
+}
+
+/// Run one body through the dispatcher on the engine's compute pool:
+/// the same bounded-concurrency path TCP lines take, including typed
+/// backpressure when the queue is full and panic containment.
+fn dispatch_pooled(body: &str, shared: &Arc<HttpShared>) -> (u16, &'static str, String) {
+    let service = Arc::clone(&shared.service);
+    let body = body.to_string();
+    let (tx, rx) = mpsc::channel::<(Option<&'static str>, String)>();
+    let submitted = shared.service.engine().pool().try_execute(move || {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            service.dispatch_http(&body)
+        }));
+        let _ = tx.send(match result {
+            Ok(out) => (out.error, out.reply),
+            Err(_) => (Some("internal"), internal_error_json()),
+        });
+    });
+    if submitted.is_err() {
+        return (503, CONTENT_TYPE_JSON, body_line(overloaded_json()));
+    }
+    match rx.recv() {
+        Ok((error, reply)) => (status_for(error), CONTENT_TYPE_JSON, body_line(reply)),
+        // Pool torn down mid-request: the job (and its sender) was lost.
+        Err(_) => (500, CONTENT_TYPE_JSON, body_line(internal_error_json())),
+    }
+}
+
+/// Dispatcher error code → HTTP status. Transports never look inside
+/// the reply; this code is the whole contract.
+fn status_for(error: Option<&'static str>) -> u16 {
+    match error {
+        None => 200,
+        Some("internal") => 500,
+        Some("overloaded") => 503,
+        Some(_) => 400,
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Error",
+    }
+}
+
+/// JSON reply lines get a trailing newline, mirroring the TCP wire
+/// (and keeping `curl` output tidy).
+fn body_line(mut reply: String) -> String {
+    reply.push('\n');
+    reply
+}
+
+fn write_response(
+    write: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &str,
+    close: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        reason(status),
+        body.len(),
+        if close { "close" } else { "keep-alive" },
+    );
+    write.write_all(head.as_bytes())?;
+    write.write_all(body.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::{
+        v2_predict_model_request, v2_stats_request, PredictionResponse,
+    };
+    use crate::engine::metrics::OpKind;
+    use crate::predict::HybridPredictor;
+    use crate::util::json::{self, Json};
+
+    fn wave_service() -> Arc<PredictionService> {
+        Arc::new(PredictionService::with_predictor(HybridPredictor::wave_only()))
+    }
+
+    /// A minimal keep-alive HTTP client over one socket.
+    struct TestClient {
+        write: TcpStream,
+        reader: BufReader<TcpStream>,
+    }
+
+    impl TestClient {
+        fn connect(addr: SocketAddr) -> Self {
+            let stream = TcpStream::connect(addr).unwrap();
+            TestClient {
+                write: stream.try_clone().unwrap(),
+                reader: BufReader::new(stream),
+            }
+        }
+
+        fn request(&mut self, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+            let mut req = format!("{method} {path} HTTP/1.1\r\nHost: test\r\n");
+            if let Some(b) = body {
+                req.push_str(&format!("Content-Length: {}\r\n", b.len()));
+            }
+            req.push_str("\r\n");
+            if let Some(b) = body {
+                req.push_str(b);
+            }
+            self.write.write_all(req.as_bytes()).unwrap();
+            self.read_response()
+        }
+
+        fn read_response(&mut self) -> (u16, String) {
+            let mut status_line = String::new();
+            self.reader.read_line(&mut status_line).unwrap();
+            let status: u16 = status_line
+                .split_whitespace()
+                .nth(1)
+                .unwrap_or_else(|| panic!("bad status line {status_line:?}"))
+                .parse()
+                .unwrap();
+            let mut len = 0usize;
+            loop {
+                let mut header = String::new();
+                self.reader.read_line(&mut header).unwrap();
+                if header.trim_end().is_empty() {
+                    break;
+                }
+                let lower = header.to_ascii_lowercase();
+                if let Some(v) = lower.strip_prefix("content-length:") {
+                    len = v.trim().parse().unwrap();
+                }
+            }
+            let mut body = vec![0u8; len];
+            self.reader.read_exact(&mut body).unwrap();
+            (status, String::from_utf8(body).unwrap())
+        }
+    }
+
+    #[test]
+    fn healthz_and_dispatch_over_one_keepalive_connection() {
+        let handle = start("127.0.0.1:0", wave_service(), ServeOptions::default()).unwrap();
+        let mut client = TestClient::connect(handle.local_addr());
+
+        let (status, body) = client.request("GET", "/healthz", None);
+        assert_eq!(status, 200);
+        assert_eq!(body, "ok\n");
+
+        // v1 body → 200 with the v1 reply shape, on the same socket.
+        let (status, body) = client.request(
+            "POST",
+            "/v2",
+            Some("{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}"),
+        );
+        assert_eq!(status, 200);
+        let resp = PredictionResponse::from_json(body.trim()).unwrap();
+        assert_eq!(resp.dest, "V100");
+
+        // v2 body → 200 with the envelope, byte-equal to the TCP reply.
+        let line = v2_predict_model_request("mlp", 8, "t4", "v100", None);
+        let (status, body) = client.request("POST", "/v2", Some(&line));
+        assert_eq!(status, 200);
+        assert_eq!(body.trim_end(), handle.service().handle_line(&line));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn error_bodies_carry_matching_statuses() {
+        let handle = start("127.0.0.1:0", wave_service(), ServeOptions::default()).unwrap();
+        let addr = handle.local_addr();
+        let check_code = |body: &str, code: &str| {
+            let v = json::parse(body.trim()).unwrap();
+            assert_eq!(
+                v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+                Some(code),
+                "{body}"
+            );
+        };
+
+        // Malformed JSON → 400 in the structured v2 shape.
+        let (status, body) = TestClient::connect(addr).request("POST", "/v2", Some("not json"));
+        assert_eq!(status, 400);
+        check_code(&body, "bad_request");
+
+        // Unknown device through a valid envelope → 400 with its code.
+        let (status, body) = TestClient::connect(addr).request(
+            "POST",
+            "/v2",
+            Some("{\"v\":2,\"op\":\"predict\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"a100\"}"),
+        );
+        assert_eq!(status, 400);
+        check_code(&body, "unknown_device");
+
+        // Routing errors.
+        let (status, body) = TestClient::connect(addr).request("GET", "/nope", None);
+        assert_eq!(status, 404);
+        check_code(&body, "bad_request");
+        let (status, _) = TestClient::connect(addr).request("GET", "/v2", None);
+        assert_eq!(status, 405);
+        let (status, _) = TestClient::connect(addr).request("POST", "/metrics", None);
+        assert_eq!(status, 405);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn metrics_expose_and_count_http_requests() {
+        let handle = start("127.0.0.1:0", wave_service(), ServeOptions::default()).unwrap();
+        let addr = handle.local_addr();
+        let mut client = TestClient::connect(addr);
+
+        let (status, before) = client.request("GET", "/metrics", None);
+        assert_eq!(status, 200);
+        assert!(before.contains("# TYPE habitat_requests_total counter"));
+        assert!(before.contains("habitat_request_latency_ms_bucket"));
+
+        client.request(
+            "POST",
+            "/v2",
+            Some("{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}"),
+        );
+        client.request("POST", "/v2", Some(&v2_stats_request()));
+
+        let (_, after) = client.request("GET", "/metrics", None);
+        assert!(after.contains("habitat_requests_total{op=\"predict\"} 1"));
+        assert!(after.contains("habitat_requests_total{op=\"stats\"} 1"));
+        let m = handle.service().engine().metrics();
+        assert_eq!(m.snapshot(OpKind::Predict).requests, 1);
+        assert_eq!(m.snapshot(OpKind::Stats).requests, 1);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn connection_slots_reject_with_503() {
+        let handle = start(
+            "127.0.0.1:0",
+            wave_service(),
+            ServeOptions {
+                max_conns: 1,
+                ..ServeOptions::default()
+            },
+        )
+        .unwrap();
+        let addr = handle.local_addr();
+
+        // Fill the slot and prove it live with a roundtrip.
+        let mut first = TestClient::connect(addr);
+        let (status, _) = first.request("GET", "/healthz", None);
+        assert_eq!(status, 200);
+
+        // The next connection gets a typed 503 and a close.
+        let (status, body) = TestClient::connect(addr).read_response();
+        assert_eq!(status, 503);
+        let v = json::parse(body.trim()).unwrap();
+        assert_eq!(
+            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("overloaded")
+        );
+        handle.shutdown();
+    }
+
+    #[test]
+    fn oversized_and_malformed_requests_are_rejected() {
+        let handle = start("127.0.0.1:0", wave_service(), ServeOptions::default()).unwrap();
+        let addr = handle.local_addr();
+
+        // A Content-Length past the cap is refused before buffering.
+        let mut client = TestClient::connect(addr);
+        client
+            .write
+            .write_all(
+                format!(
+                    "POST /v2 HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
+                    MAX_BODY_BYTES + 1
+                )
+                .as_bytes(),
+            )
+            .unwrap();
+        let (status, _) = client.read_response();
+        assert_eq!(status, 413);
+
+        // Garbage instead of a request line → 400.
+        let mut client = TestClient::connect(addr);
+        client.write.write_all(b"how are you\r\n\r\n").unwrap();
+        let (status, _) = client.read_response();
+        assert_eq!(status, 400);
+        handle.shutdown();
+    }
+}

@@ -1,11 +1,35 @@
-//! Layer-3 coordination: the prediction service.
+//! Layer-3 coordination: the prediction service, split into explicit
+//! layers.
 //!
 //! Habitat is a library in the paper; in this reproduction it is also a
-//! deployable *service*: a TCP front end (newline-delimited JSON on a
-//! bounded runtime — capped connection slots, a shared bounded compute
-//! pool, typed `overloaded` backpressure, in-order pipelining) that
-//! routes every request through the shared
-//! [`crate::engine::PredictionEngine`]. The engine supplies:
+//! deployable *service*. The request path is layered so every transport
+//! shares one brain:
+//!
+//! ```text
+//! TCP lines ──┐                                  ┌─ engine caches
+//! HTTP bodies ┴→ protocol (codec) → dispatch ────┤  fan-out pool
+//!                                   │            └─ hybrid predictor
+//!                                   └→ per-op metrics (/metrics, stats)
+//! ```
+//!
+//! * [`protocol`] — typed request/response structs for every op and the
+//!   v1/v2 JSON codec, including structured errors. Pure data: this
+//!   layer never touches a socket.
+//! * [`dispatch`] — [`Dispatcher`] (aliased [`PredictionService`]), the
+//!   transport-agnostic core that routes decoded requests into the
+//!   shared [`crate::engine::PredictionEngine`] and records per-op
+//!   counters and latency histograms
+//!   ([`crate::engine::metrics::ServiceMetrics`]).
+//! * [`tcp`] — the newline-delimited JSON transport on the bounded
+//!   runtime (capped connection slots, a shared bounded compute pool,
+//!   typed `overloaded` backpressure, in-order pipelining).
+//! * [`http`] — the dependency-free HTTP/1.1 transport on the same
+//!   bounds: `POST /v2` (same envelope), `GET /healthz`, and
+//!   `GET /metrics` (Prometheus text).
+//!
+//! Transports move bytes and map dispatch outcomes onto their wire;
+//! they never parse envelopes. The engine behind the dispatcher
+//! supplies:
 //!
 //! * the **trace/plan cache** — tracking a model on the simulator is
 //!   the expensive, reusable step, so traces are memoized per
@@ -23,11 +47,17 @@
 //!   (throughput, cost-normalized throughput), not just milliseconds.
 //!
 //! The wire protocol is documented in `docs/SERVICE.md`.
+//! [`service`] remains as a re-export shim for pre-split paths.
 
 pub mod client;
+pub mod dispatch;
+pub mod http;
+pub mod protocol;
 pub mod service;
+pub mod tcp;
 
 pub use client::{Client, ClientError};
+pub use dispatch::{DispatchOutcome, Dispatcher};
 pub use service::{
     overloaded_json, v2_check_error, v2_error_json, v2_export_workload_request,
     v2_predict_cluster_request, v2_predict_model_request, v2_predict_trace_request,
@@ -42,22 +72,24 @@ pub use service::{
 use crate::Result;
 
 /// Run the TCP prediction server (the `habitat serve` subcommand) on
-/// the bounded runtime. Blocks forever.
+/// the bounded runtime; with [`ServeOptions::http_port`] set, the HTTP
+/// front end runs alongside it. Blocks forever.
 pub fn serve(addr: &str, artifacts: &str) -> Result<()> {
-    service::serve(addr, artifacts)
+    tcp::serve(addr, artifacts)
 }
 
-/// [`serve`] with explicit runtime bounds (`--max-conns` etc.).
-pub fn serve_with(addr: &str, artifacts: &str, opts: service::ServeOptions) -> Result<()> {
-    service::serve_with(addr, artifacts, opts)
+/// [`serve`] with explicit runtime bounds (`--max-conns`,
+/// `--http-port`, etc.).
+pub fn serve_with(addr: &str, artifacts: &str, opts: ServeOptions) -> Result<()> {
+    tcp::serve_with(addr, artifacts, opts)
 }
 
-/// Start the server on background threads and return its
-/// [`service::ServerHandle`] (tests and embedding applications).
+/// Start the TCP server on background threads and return its
+/// [`ServerHandle`] (tests and embedding applications).
 pub fn start(
     addr: &str,
     service: std::sync::Arc<PredictionService>,
-    opts: service::ServeOptions,
-) -> Result<service::ServerHandle> {
-    service::start(addr, service, opts)
+    opts: ServeOptions,
+) -> Result<ServerHandle> {
+    tcp::start(addr, service, opts)
 }

@@ -1,0 +1,1072 @@
+//! Wire protocol: typed request/response codecs for every op, v1 and
+//! v2, with structured errors. Pure data — this module never touches a
+//! socket and holds no engine state; the transport-agnostic
+//! [`Dispatcher`](super::Dispatcher) consumes these types and the
+//! transports ([`super::tcp`], [`super::http`]) move the resulting
+//! bytes.
+//!
+//! Two protocol generations share the wire (see `docs/SERVICE.md`):
+//!
+//! **v1** (bare objects, no `"v"` field — kept bit-identical):
+//!
+//! * **predict** — `{"model", "batch", "origin", "dest", "precision"?}`
+//!   → one destination's decision metrics;
+//! * **rank** — `{"rank": true, ...}` → destination GPUs ordered by
+//!   cost-normalized throughput;
+//! * **stats** — `{"stats": true}` → the engine's counter snapshot.
+//!
+//! **v2** (the open-world envelope `{"v":2,"op":...}`): everything v1
+//! does, plus `submit_trace`, `register_device`, the cluster suite
+//! (`predict_cluster`, `rank_cluster`, `export_workload`), and
+//! structured `{"v":2,"error":{"code","message"}}` errors.
+
+use crate::device::{Device, NewDevice};
+use crate::lowering::Precision;
+use crate::tracker::Trace;
+use crate::util::json::{self, Json};
+use crate::Result;
+
+/// One prediction request (wire format and internal API).
+#[derive(Debug, Clone)]
+pub struct PredictionRequest {
+    /// Model name (see [`crate::models::MODEL_NAMES`]).
+    pub model: String,
+    pub batch: usize,
+    /// Origin GPU short name (e.g. `"t4"`).
+    pub origin: String,
+    /// Destination GPU short name.
+    pub dest: String,
+    /// `"fp32"` (default) or `"amp"` — AMP composes Habitat with the
+    /// Daydream transformation (§6.1.2).
+    pub precision: Option<String>,
+}
+
+impl PredictionRequest {
+    /// Parse from a JSON object line.
+    pub fn from_json(line: &str) -> Result<Self> {
+        Self::from_value(&json::parse(line)?)
+    }
+
+    pub(crate) fn from_value(v: &Json) -> Result<Self> {
+        Ok(PredictionRequest {
+            model: v.req_str("model")?.to_string(),
+            batch: v.req_usize("batch")?,
+            origin: v.req_str("origin")?.to_string(),
+            dest: v.req_str("dest")?.to_string(),
+            precision: v.get("precision").and_then(Json::as_str).map(str::to_string),
+        })
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut pairs = vec![
+            ("model", Json::Str(self.model.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("origin", Json::Str(self.origin.clone())),
+            ("dest", Json::Str(self.dest.clone())),
+        ];
+        if let Some(p) = &self.precision {
+            pairs.push(("precision", Json::Str(p.clone())));
+        }
+        Json::obj(pairs).dump()
+    }
+}
+
+/// A rank request: predict one origin trace onto many destinations and
+/// order them by cost-normalized throughput.
+#[derive(Debug, Clone)]
+pub struct RankRequest {
+    pub model: String,
+    pub batch: usize,
+    pub origin: String,
+    /// `"fp32"` (default) or `"amp"`.
+    pub precision: Option<String>,
+    /// Candidate destinations; `None` means every device in the
+    /// registry — built-ins plus runtime registrations.
+    pub dests: Option<Vec<String>>,
+}
+
+impl RankRequest {
+    pub fn from_json(line: &str) -> Result<Self> {
+        Self::from_value(&json::parse(line)?)
+    }
+
+    pub(crate) fn from_value(v: &Json) -> Result<Self> {
+        let dests = match v.get("dests") {
+            None | Some(Json::Null) => None,
+            Some(arr) => {
+                let items = arr
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("dests must be an array of device names"))?;
+                let mut names = Vec::with_capacity(items.len());
+                for it in items {
+                    names.push(
+                        it.as_str()
+                            .ok_or_else(|| anyhow::anyhow!("dests entries must be strings"))?
+                            .to_string(),
+                    );
+                }
+                Some(names)
+            }
+        };
+        Ok(RankRequest {
+            model: v.req_str("model")?.to_string(),
+            batch: v.req_usize("batch")?,
+            origin: v.req_str("origin")?.to_string(),
+            precision: v.get("precision").and_then(Json::as_str).map(str::to_string),
+            dests,
+        })
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut pairs = vec![
+            ("rank", Json::Bool(true)),
+            ("model", Json::Str(self.model.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("origin", Json::Str(self.origin.clone())),
+        ];
+        if let Some(p) = &self.precision {
+            pairs.push(("precision", Json::Str(p.clone())));
+        }
+        if let Some(d) = &self.dests {
+            pairs.push((
+                "dests",
+                Json::Arr(d.iter().map(|s| Json::Str(s.clone())).collect()),
+            ));
+        }
+        Json::obj(pairs).dump()
+    }
+}
+
+/// Any request shape, as dispatched off the wire: a line with
+/// `"rank": true` is a [`RankRequest`], a line with `"stats": true` a
+/// stats request, anything else a [`PredictionRequest`].
+#[derive(Debug, Clone)]
+pub enum Request {
+    Predict(PredictionRequest),
+    Rank(RankRequest),
+    Stats,
+}
+
+impl Request {
+    pub fn from_json(line: &str) -> Result<Request> {
+        Self::from_value(&json::parse(line)?)
+    }
+
+    /// Dispatch an already-parsed v1 request value (the dispatcher
+    /// parses each line once, for the version sniff, and reuses the
+    /// value here).
+    pub fn from_value(v: &Json) -> Result<Request> {
+        if matches!(v.get("rank"), Some(Json::Bool(true))) {
+            Ok(Request::Rank(RankRequest::from_value(v)?))
+        } else if matches!(v.get("stats"), Some(Json::Bool(true))) {
+            Ok(Request::Stats)
+        } else {
+            Ok(Request::Predict(PredictionRequest::from_value(v)?))
+        }
+    }
+}
+
+/// The wire form of a stats request.
+pub fn stats_request_json() -> String {
+    Json::obj(vec![("stats", Json::Bool(true))]).dump()
+}
+
+/// The answer to a stats request: the engine's counter snapshot
+/// ([`crate::engine::EngineStats`]) in wire form.
+#[derive(Debug, Clone, Copy)]
+pub struct StatsResponse {
+    /// Cache hits (requests that skipped the tracking pipeline).
+    pub trace_hits: u64,
+    /// Cache misses (tracking-pipeline executions).
+    pub trace_misses: u64,
+    /// Trace+plan entries currently resident.
+    pub trace_entries: usize,
+    /// Compiled-plan builds (cache misses + one-off analyses); the
+    /// plan rides the same cache entry as its trace, so cached-plan
+    /// reuses equal `trace_hits`.
+    pub plan_builds: u64,
+    /// Process-wide wave-table counters.
+    pub wave_hits: u64,
+    pub wave_misses: u64,
+    /// Persistent fan-out worker-pool width.
+    pub workers: usize,
+}
+
+impl From<crate::engine::EngineStats> for StatsResponse {
+    fn from(s: crate::engine::EngineStats) -> Self {
+        StatsResponse {
+            trace_hits: s.trace_hits,
+            trace_misses: s.trace_misses,
+            trace_entries: s.trace_entries,
+            plan_builds: s.plan_builds,
+            wave_hits: s.wave_hits,
+            wave_misses: s.wave_misses,
+            workers: s.workers,
+        }
+    }
+}
+
+impl StatsResponse {
+    pub fn to_json(&self) -> String {
+        self.to_value().dump()
+    }
+
+    /// The v1 stats payload. (The v2 `stats` op extends this with the
+    /// open-world counters — `trace_uploads`, `uploaded_entries`,
+    /// `devices` — the store/compile counters — `store_hits`,
+    /// `store_misses`, `warm_restores`, `parallel_build_chunks` — and
+    /// the dispatcher's wire counters — `requests`, `request_errors`;
+    /// v1 keeps its original seven fields bit-for-bit.)
+    pub fn to_value(&self) -> Json {
+        Json::obj(vec![
+            ("trace_hits", Json::Num(self.trace_hits as f64)),
+            ("trace_misses", Json::Num(self.trace_misses as f64)),
+            ("trace_entries", Json::Num(self.trace_entries as f64)),
+            ("plan_builds", Json::Num(self.plan_builds as f64)),
+            ("wave_hits", Json::Num(self.wave_hits as f64)),
+            ("wave_misses", Json::Num(self.wave_misses as f64)),
+            ("workers", Json::Num(self.workers as f64)),
+        ])
+    }
+
+    pub fn from_json(line: &str) -> Result<Self> {
+        let v = json::parse(line)?;
+        if let Some(err) = v.get("error").and_then(Json::as_str) {
+            anyhow::bail!("server error: {err}");
+        }
+        let req_u64 = |key: &str| -> Result<u64> {
+            Ok(v.req_usize(key)? as u64)
+        };
+        Ok(StatsResponse {
+            trace_hits: req_u64("trace_hits")?,
+            trace_misses: req_u64("trace_misses")?,
+            trace_entries: v.req_usize("trace_entries")?,
+            plan_builds: req_u64("plan_builds")?,
+            wave_hits: req_u64("wave_hits")?,
+            wave_misses: req_u64("wave_misses")?,
+            workers: v.req_usize("workers")?,
+        })
+    }
+}
+
+/// The service's answer: decision-ready metrics.
+#[derive(Debug, Clone)]
+pub struct PredictionResponse {
+    pub model: String,
+    pub batch: usize,
+    pub origin: String,
+    pub dest: String,
+    /// Measured iteration time on the origin, ms.
+    pub origin_iter_ms: f64,
+    /// Predicted iteration time on the destination, ms.
+    pub iter_ms: f64,
+    /// Predicted training throughput, samples/s.
+    pub throughput: f64,
+    /// Throughput per rental dollar, if the destination is rentable.
+    pub cost_normalized_throughput: Option<f64>,
+    /// Fraction of predicted time that came from the MLP predictors.
+    pub mlp_time_fraction: f64,
+    /// Kernel-varying ops that fell back to wave scaling.
+    pub mlp_fallbacks: usize,
+}
+
+impl PredictionResponse {
+    pub fn to_json(&self) -> String {
+        self.to_value().dump()
+    }
+
+    pub fn to_value(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("origin", Json::Str(self.origin.clone())),
+            ("dest", Json::Str(self.dest.clone())),
+            ("origin_iter_ms", Json::Num(self.origin_iter_ms)),
+            ("iter_ms", Json::Num(self.iter_ms)),
+            ("throughput", Json::Num(self.throughput)),
+            (
+                "cost_normalized_throughput",
+                self.cost_normalized_throughput.map_or(Json::Null, Json::Num),
+            ),
+            ("mlp_time_fraction", Json::Num(self.mlp_time_fraction)),
+            ("mlp_fallbacks", Json::Num(self.mlp_fallbacks as f64)),
+        ])
+    }
+
+    /// Parse a response line (used by clients/examples/tests).
+    pub fn from_json(line: &str) -> Result<Self> {
+        let v = json::parse(line)?;
+        if let Some(err) = v.get("error").and_then(Json::as_str) {
+            anyhow::bail!("server error: {err}");
+        }
+        Ok(PredictionResponse {
+            model: v.req_str("model")?.to_string(),
+            batch: v.req_usize("batch")?,
+            origin: v.req_str("origin")?.to_string(),
+            dest: v.req_str("dest")?.to_string(),
+            origin_iter_ms: v
+                .get("origin_iter_ms")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing origin_iter_ms"))?,
+            iter_ms: v
+                .get("iter_ms")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing iter_ms"))?,
+            throughput: v
+                .get("throughput")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing throughput"))?,
+            cost_normalized_throughput: v.get("cost_normalized_throughput").and_then(Json::as_f64),
+            mlp_time_fraction: v.get("mlp_time_fraction").and_then(Json::as_f64).unwrap_or(0.0),
+            mlp_fallbacks: v.get("mlp_fallbacks").and_then(Json::as_usize).unwrap_or(0),
+        })
+    }
+}
+
+/// One destination's row in a [`RankResponse`], best decision first.
+#[derive(Debug, Clone)]
+pub struct RankedDest {
+    pub dest: String,
+    pub iter_ms: f64,
+    pub throughput: f64,
+    pub cost_normalized_throughput: Option<f64>,
+    pub mlp_time_fraction: f64,
+    pub mlp_fallbacks: usize,
+}
+
+impl RankedDest {
+    fn to_value(&self) -> Json {
+        Json::obj(vec![
+            ("dest", Json::Str(self.dest.clone())),
+            ("iter_ms", Json::Num(self.iter_ms)),
+            ("throughput", Json::Num(self.throughput)),
+            (
+                "cost_normalized_throughput",
+                self.cost_normalized_throughput.map_or(Json::Null, Json::Num),
+            ),
+            ("mlp_time_fraction", Json::Num(self.mlp_time_fraction)),
+            ("mlp_fallbacks", Json::Num(self.mlp_fallbacks as f64)),
+        ])
+    }
+
+    fn from_value(v: &Json) -> Result<Self> {
+        Ok(RankedDest {
+            dest: v.req_str("dest")?.to_string(),
+            iter_ms: v
+                .get("iter_ms")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing iter_ms"))?,
+            throughput: v
+                .get("throughput")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing throughput"))?,
+            cost_normalized_throughput: v.get("cost_normalized_throughput").and_then(Json::as_f64),
+            mlp_time_fraction: v.get("mlp_time_fraction").and_then(Json::as_f64).unwrap_or(0.0),
+            mlp_fallbacks: v.get("mlp_fallbacks").and_then(Json::as_usize).unwrap_or(0),
+        })
+    }
+}
+
+/// The answer to a [`RankRequest`].
+#[derive(Debug, Clone)]
+pub struct RankResponse {
+    pub model: String,
+    pub batch: usize,
+    pub origin: String,
+    /// Measured iteration time on the origin, ms.
+    pub origin_iter_ms: f64,
+    /// Every requested destination, sorted: rentable devices by
+    /// descending cost-normalized throughput, then unpriced devices by
+    /// descending raw throughput.
+    pub ranking: Vec<RankedDest>,
+}
+
+impl RankResponse {
+    pub fn to_json(&self) -> String {
+        self.to_value().dump()
+    }
+
+    pub fn to_value(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("origin", Json::Str(self.origin.clone())),
+            ("origin_iter_ms", Json::Num(self.origin_iter_ms)),
+            (
+                "ranking",
+                Json::Arr(self.ranking.iter().map(RankedDest::to_value).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(line: &str) -> Result<Self> {
+        let v = json::parse(line)?;
+        if let Some(err) = v.get("error").and_then(Json::as_str) {
+            anyhow::bail!("server error: {err}");
+        }
+        let ranking = v
+            .get("ranking")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing ranking array"))?
+            .iter()
+            .map(RankedDest::from_value)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RankResponse {
+            model: v.req_str("model")?.to_string(),
+            batch: v.req_usize("batch")?,
+            origin: v.req_str("origin")?.to_string(),
+            origin_iter_ms: v
+                .get("origin_iter_ms")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing origin_iter_ms"))?,
+            ranking,
+        })
+    }
+}
+
+/// Serialize a v1 error line: `{"error": "<message>"}`.
+pub(crate) fn error_json(msg: &str) -> String {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))]).dump()
+}
+
+pub(crate) fn parse_device(name: &str, role: &str) -> Result<Device> {
+    Device::parse(name).ok_or_else(|| anyhow::anyhow!("unknown {role} device {name:?}"))
+}
+
+pub(crate) fn parse_precision(p: Option<&str>) -> Result<Precision> {
+    match p {
+        None | Some("fp32") => Ok(Precision::Fp32),
+        Some("amp") => Ok(Precision::Amp),
+        Some(other) => anyhow::bail!("unknown precision {other:?} (want fp32|amp)"),
+    }
+}
+
+// ------------------------------------------------------------------ v2 --
+//
+// The versioned envelope: `{"v":2,"op":"<op>",...}` requests, answered
+// with `{"v":2,"op":"<op>",...payload}` on success and
+// `{"v":2,"error":{"code","message"}}` on failure. v1 bare-object lines
+// (no "v" field) keep flowing through the original code path
+// bit-identically. See docs/SERVICE.md for the full schema.
+
+/// Envelope protocol version served by
+/// [`Dispatcher::handle_v2`](super::Dispatcher::handle_v2).
+pub const PROTOCOL_V2: f64 = 2.0;
+
+/// A structured v2 error: a stable machine-readable `code` plus a human
+/// message. Codes: `bad_request`, `unsupported_version`,
+/// `unsupported_op`, `unknown_device`, `unknown_model`, `unknown_trace`,
+/// `invalid_argument`, `conflict`.
+pub(crate) struct V2Error {
+    pub(crate) code: &'static str,
+    pub(crate) message: String,
+}
+
+impl V2Error {
+    pub(crate) fn new(code: &'static str, message: impl Into<String>) -> V2Error {
+        V2Error { code, message: message.into() }
+    }
+}
+
+pub(crate) type V2Result = std::result::Result<Json, V2Error>;
+
+/// Serialize a v2 error line.
+pub fn v2_error_json(code: &str, message: &str) -> String {
+    Json::obj(vec![
+        ("v", Json::Num(PROTOCOL_V2)),
+        (
+            "error",
+            Json::obj(vec![
+                ("code", Json::Str(code.to_string())),
+                ("message", Json::Str(message.to_string())),
+            ]),
+        ),
+    ])
+    .dump()
+}
+
+/// Wrap a payload object in the v2 success envelope.
+pub(crate) fn v2_envelope(op: &str, payload: Json, extra: Vec<(&str, Json)>) -> Json {
+    let mut m = match payload {
+        Json::Obj(m) => m,
+        _ => Default::default(),
+    };
+    m.insert("v".to_string(), Json::Num(PROTOCOL_V2));
+    m.insert("op".to_string(), Json::Str(op.to_string()));
+    for (k, v) in extra {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+/// Fail on a v2 (or v1) error line; `Ok(())` on a success payload.
+/// Client-side counterpart of [`v2_error_json`].
+pub fn v2_check_error(v: &Json) -> Result<()> {
+    match v.get("error") {
+        None => Ok(()),
+        Some(Json::Str(msg)) => anyhow::bail!("server error: {msg}"),
+        Some(err) => {
+            let code = err.get("code").and_then(Json::as_str).unwrap_or("unknown");
+            let msg = err.get("message").and_then(Json::as_str).unwrap_or("");
+            anyhow::bail!("server error [{code}]: {msg}")
+        }
+    }
+}
+
+pub(crate) fn classify_engine_error(e: &anyhow::Error) -> &'static str {
+    let msg = e.to_string();
+    if msg.contains("unknown model") {
+        "unknown_model"
+    } else if msg.contains("unknown trace") {
+        "unknown_trace"
+    } else {
+        "invalid_argument"
+    }
+}
+
+// --- v2 request builders (used by the Client and the tests) -----------
+
+fn precision_pair(precision: Option<&str>) -> Vec<(&'static str, Json)> {
+    match precision {
+        Some(p) => vec![("precision", Json::Str(p.to_string()))],
+        None => Vec::new(),
+    }
+}
+
+/// `{"v":2,"op":"predict"}` over a zoo model.
+pub fn v2_predict_model_request(
+    model: &str,
+    batch: usize,
+    origin: &str,
+    dest: &str,
+    precision: Option<&str>,
+) -> String {
+    let mut pairs = vec![
+        ("v", Json::Num(PROTOCOL_V2)),
+        ("op", Json::Str("predict".into())),
+        ("model", Json::Str(model.to_string())),
+        ("batch", Json::Num(batch as f64)),
+        ("origin", Json::Str(origin.to_string())),
+        ("dest", Json::Str(dest.to_string())),
+    ];
+    pairs.extend(precision_pair(precision));
+    Json::obj(pairs).dump()
+}
+
+/// `{"v":2,"op":"predict"}` over a previously submitted trace.
+pub fn v2_predict_trace_request(trace_id: &str, dest: &str, precision: Option<&str>) -> String {
+    let mut pairs = vec![
+        ("v", Json::Num(PROTOCOL_V2)),
+        ("op", Json::Str("predict".into())),
+        ("trace_id", Json::Str(trace_id.to_string())),
+        ("dest", Json::Str(dest.to_string())),
+    ];
+    pairs.extend(precision_pair(precision));
+    Json::obj(pairs).dump()
+}
+
+/// `{"v":2,"op":"rank"}` over a previously submitted trace.
+pub fn v2_rank_trace_request(
+    trace_id: &str,
+    dests: Option<&[String]>,
+    precision: Option<&str>,
+) -> String {
+    let mut pairs = vec![
+        ("v", Json::Num(PROTOCOL_V2)),
+        ("op", Json::Str("rank".into())),
+        ("trace_id", Json::Str(trace_id.to_string())),
+    ];
+    if let Some(d) = dests {
+        pairs.push(("dests", Json::Arr(d.iter().map(|s| Json::Str(s.clone())).collect())));
+    }
+    pairs.extend(precision_pair(precision));
+    Json::obj(pairs).dump()
+}
+
+/// `{"v":2,"op":"submit_trace"}` with the trace embedded.
+pub fn v2_submit_trace_request(trace: &Trace) -> String {
+    Json::obj(vec![
+        ("v", Json::Num(PROTOCOL_V2)),
+        ("op", Json::Str("submit_trace".into())),
+        ("trace", trace.to_value()),
+    ])
+    .dump()
+}
+
+/// `{"v":2,"op":"register_device"}` from a device description.
+pub fn v2_register_device_request(d: &NewDevice) -> String {
+    let mut pairs = vec![
+        ("v", Json::Num(PROTOCOL_V2)),
+        ("op", Json::Str("register_device".into())),
+        ("name", Json::Str(d.name.clone())),
+        ("sms", Json::Num(d.sms as f64)),
+        ("clock_mhz", Json::Num(d.clock_mhz)),
+        ("mem_bw_gbps", Json::Num(d.mem_bw_gbps)),
+        ("fp32_tflops", Json::Num(d.fp32_tflops)),
+        ("tensor_cores", Json::Bool(d.tensor_cores)),
+    ];
+    if let Some(p) = d.usd_per_hr {
+        pairs.push(("usd_per_hr", Json::Num(p)));
+    }
+    if let Some(a) = d.arch {
+        pairs.push(("arch", Json::Str(a.to_string().to_ascii_lowercase())));
+    }
+    if let Some(x) = d.achieved_bw_gbps {
+        pairs.push(("achieved_bw_gbps", Json::Num(x)));
+    }
+    if let Some(x) = d.mem_gib {
+        pairs.push(("mem_gib", Json::Num(x)));
+    }
+    if let Some(x) = d.fp16_tflops {
+        pairs.push(("fp16_tflops", Json::Num(x)));
+    }
+    if let Some(x) = d.cuda_cores {
+        pairs.push(("cuda_cores", Json::Num(x as f64)));
+    }
+    if let Some(x) = d.l2_kib {
+        pairs.push(("l2_kib", Json::Num(x as f64)));
+    }
+    Json::obj(pairs).dump()
+}
+
+/// `{"v":2,"op":"stats"}`.
+pub fn v2_stats_request() -> String {
+    Json::obj(vec![("v", Json::Num(PROTOCOL_V2)), ("op", Json::Str("stats".into()))]).dump()
+}
+
+// --- cluster ops (v2 only) --------------------------------------------
+
+/// Default world-size sweep for the cluster ops when the request omits
+/// `worlds`: powers of two through 256 ranks.
+pub const DEFAULT_CLUSTER_WORLDS: [usize; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
+
+/// Largest accepted world size in a cluster sweep.
+pub(crate) const MAX_CLUSTER_WORLD: usize = 65_536;
+
+/// Cap on `dests × topologies × worlds` cells in one cluster request.
+pub(crate) const MAX_CLUSTER_SWEEP: usize = 16_384;
+
+/// One (topology, world) cell of a [`ClusterResponse`].
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub topology: String,
+    pub world: usize,
+    /// Predicted per-iteration wall time, ms (compute + exposed comm).
+    pub iter_ms: f64,
+    /// Raw bucketed-allreduce time before overlap, ms.
+    pub comm_ms: f64,
+    /// Communication left exposed after overlap with backward, ms.
+    pub exposed_ms: f64,
+    /// Global throughput, samples/s across all ranks.
+    pub throughput: f64,
+    /// Scaling efficiency vs perfect linear scaling, in (0, 1].
+    pub efficiency: f64,
+    /// Global samples/s per total fleet $/hr; `None` when unpriced.
+    pub cost_normalized_throughput: Option<f64>,
+}
+
+impl ClusterConfig {
+    fn to_value(&self) -> Json {
+        Json::obj(vec![
+            ("topology", Json::Str(self.topology.clone())),
+            ("world", Json::Num(self.world as f64)),
+            ("iter_ms", Json::Num(self.iter_ms)),
+            ("comm_ms", Json::Num(self.comm_ms)),
+            ("exposed_ms", Json::Num(self.exposed_ms)),
+            ("throughput", Json::Num(self.throughput)),
+            ("efficiency", Json::Num(self.efficiency)),
+            (
+                "cost_normalized_throughput",
+                self.cost_normalized_throughput.map_or(Json::Null, Json::Num),
+            ),
+        ])
+    }
+
+    fn from_value(v: &Json) -> Result<Self> {
+        let num = |k: &str| -> Result<f64> {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing/invalid number field {k:?}"))
+        };
+        Ok(ClusterConfig {
+            topology: v.req_str("topology")?.to_string(),
+            world: v.req_usize("world")?,
+            iter_ms: num("iter_ms")?,
+            comm_ms: num("comm_ms")?,
+            exposed_ms: num("exposed_ms")?,
+            throughput: num("throughput")?,
+            efficiency: num("efficiency")?,
+            cost_normalized_throughput: v.get("cost_normalized_throughput").and_then(Json::as_f64),
+        })
+    }
+}
+
+/// The answer to a `predict_cluster` request: one destination swept
+/// across a topology × world grid (topology-major, request order).
+#[derive(Debug, Clone)]
+pub struct ClusterResponse {
+    pub model: String,
+    pub batch: usize,
+    pub origin: String,
+    pub dest: String,
+    /// Per-replica single-GPU compute time shared by every cell, ms.
+    pub compute_ms: f64,
+    pub configs: Vec<ClusterConfig>,
+}
+
+impl ClusterResponse {
+    pub fn to_value(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("origin", Json::Str(self.origin.clone())),
+            ("dest", Json::Str(self.dest.clone())),
+            ("compute_ms", Json::Num(self.compute_ms)),
+            (
+                "configs",
+                Json::Arr(self.configs.iter().map(ClusterConfig::to_value).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(line: &str) -> Result<Self> {
+        let v = json::parse(line)?;
+        v2_check_error(&v)?;
+        Ok(ClusterResponse {
+            model: v.req_str("model")?.to_string(),
+            batch: v.req_usize("batch")?,
+            origin: v.req_str("origin")?.to_string(),
+            dest: v.req_str("dest")?.to_string(),
+            compute_ms: v
+                .get("compute_ms")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing compute_ms"))?,
+            configs: v
+                .get("configs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("missing configs array"))?
+                .iter()
+                .map(ClusterConfig::from_value)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+/// One entry of a [`ClusterRankResponse`], best decision first.
+#[derive(Debug, Clone)]
+pub struct ClusterRankedConfig {
+    pub dest: String,
+    pub topology: String,
+    pub world: usize,
+    pub iter_ms: f64,
+    pub throughput: f64,
+    pub efficiency: f64,
+    pub cost_normalized_throughput: Option<f64>,
+}
+
+impl ClusterRankedConfig {
+    fn to_value(&self) -> Json {
+        Json::obj(vec![
+            ("dest", Json::Str(self.dest.clone())),
+            ("topology", Json::Str(self.topology.clone())),
+            ("world", Json::Num(self.world as f64)),
+            ("iter_ms", Json::Num(self.iter_ms)),
+            ("throughput", Json::Num(self.throughput)),
+            ("efficiency", Json::Num(self.efficiency)),
+            (
+                "cost_normalized_throughput",
+                self.cost_normalized_throughput.map_or(Json::Null, Json::Num),
+            ),
+        ])
+    }
+
+    fn from_value(v: &Json) -> Result<Self> {
+        let num = |k: &str| -> Result<f64> {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing/invalid number field {k:?}"))
+        };
+        Ok(ClusterRankedConfig {
+            dest: v.req_str("dest")?.to_string(),
+            topology: v.req_str("topology")?.to_string(),
+            world: v.req_usize("world")?,
+            iter_ms: num("iter_ms")?,
+            throughput: num("throughput")?,
+            efficiency: num("efficiency")?,
+            cost_normalized_throughput: v.get("cost_normalized_throughput").and_then(Json::as_f64),
+        })
+    }
+}
+
+/// The answer to a `rank_cluster` request: every (destination, topology,
+/// world) configuration, ordered like `rank` — priced fleets by
+/// descending cost-normalized throughput, then unpriced by raw global
+/// throughput.
+#[derive(Debug, Clone)]
+pub struct ClusterRankResponse {
+    pub model: String,
+    pub batch: usize,
+    pub origin: String,
+    pub ranking: Vec<ClusterRankedConfig>,
+}
+
+impl ClusterRankResponse {
+    pub fn to_value(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("origin", Json::Str(self.origin.clone())),
+            (
+                "ranking",
+                Json::Arr(self.ranking.iter().map(ClusterRankedConfig::to_value).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(line: &str) -> Result<Self> {
+        let v = json::parse(line)?;
+        v2_check_error(&v)?;
+        Ok(ClusterRankResponse {
+            model: v.req_str("model")?.to_string(),
+            batch: v.req_usize("batch")?,
+            origin: v.req_str("origin")?.to_string(),
+            ranking: v
+                .get("ranking")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("missing ranking array"))?
+                .iter()
+                .map(ClusterRankedConfig::from_value)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+fn cluster_grid_pairs(
+    topologies: Option<&[String]>,
+    worlds: Option<&[usize]>,
+) -> Vec<(&'static str, Json)> {
+    let mut pairs = Vec::new();
+    if let Some(t) = topologies {
+        pairs.push((
+            "topologies",
+            Json::Arr(t.iter().map(|s| Json::Str(s.clone())).collect()),
+        ));
+    }
+    if let Some(w) = worlds {
+        pairs.push((
+            "worlds",
+            Json::Arr(w.iter().map(|&x| Json::Num(x as f64)).collect()),
+        ));
+    }
+    pairs
+}
+
+/// `{"v":2,"op":"predict_cluster"}` over a zoo model. `None` topologies
+/// and worlds mean the server defaults (every registered topology,
+/// [`DEFAULT_CLUSTER_WORLDS`]).
+pub fn v2_predict_cluster_request(
+    model: &str,
+    batch: usize,
+    origin: &str,
+    dest: &str,
+    topologies: Option<&[String]>,
+    worlds: Option<&[usize]>,
+    precision: Option<&str>,
+) -> String {
+    let mut pairs = vec![
+        ("v", Json::Num(PROTOCOL_V2)),
+        ("op", Json::Str("predict_cluster".into())),
+        ("model", Json::Str(model.to_string())),
+        ("batch", Json::Num(batch as f64)),
+        ("origin", Json::Str(origin.to_string())),
+        ("dest", Json::Str(dest.to_string())),
+    ];
+    pairs.extend(cluster_grid_pairs(topologies, worlds));
+    pairs.extend(precision_pair(precision));
+    Json::obj(pairs).dump()
+}
+
+/// `{"v":2,"op":"rank_cluster"}` over a zoo model. `None` dests mean
+/// every registered device.
+#[allow(clippy::too_many_arguments)]
+pub fn v2_rank_cluster_request(
+    model: &str,
+    batch: usize,
+    origin: &str,
+    dests: Option<&[String]>,
+    topologies: Option<&[String]>,
+    worlds: Option<&[usize]>,
+    precision: Option<&str>,
+) -> String {
+    let mut pairs = vec![
+        ("v", Json::Num(PROTOCOL_V2)),
+        ("op", Json::Str("rank_cluster".into())),
+        ("model", Json::Str(model.to_string())),
+        ("batch", Json::Num(batch as f64)),
+        ("origin", Json::Str(origin.to_string())),
+    ];
+    if let Some(d) = dests {
+        pairs.push(("dests", Json::Arr(d.iter().map(|s| Json::Str(s.clone())).collect())));
+    }
+    pairs.extend(cluster_grid_pairs(topologies, worlds));
+    pairs.extend(precision_pair(precision));
+    Json::obj(pairs).dump()
+}
+
+/// `{"v":2,"op":"export_workload"}`: one (dest, topology, world)
+/// configuration's predicted compute + collective schedule.
+pub fn v2_export_workload_request(
+    model: &str,
+    batch: usize,
+    origin: &str,
+    dest: &str,
+    topology: &str,
+    world: usize,
+    precision: Option<&str>,
+) -> String {
+    let mut pairs = vec![
+        ("v", Json::Num(PROTOCOL_V2)),
+        ("op", Json::Str("export_workload".into())),
+        ("model", Json::Str(model.to_string())),
+        ("batch", Json::Num(batch as f64)),
+        ("origin", Json::Str(origin.to_string())),
+        ("dest", Json::Str(dest.to_string())),
+        ("topology", Json::Str(topology.to_string())),
+        ("world", Json::Num(world as f64)),
+    ];
+    pairs.extend(precision_pair(precision));
+    Json::obj(pairs).dump()
+}
+
+/// The `register_device` acknowledgement (client-side view).
+#[derive(Debug, Clone)]
+pub struct RegisteredDevice {
+    /// Canonical device name (as stored in the registry).
+    pub device: String,
+    /// Interned registry index on the server.
+    pub id: usize,
+    /// Registry size after the registration.
+    pub devices: usize,
+}
+
+impl RegisteredDevice {
+    pub fn from_json(line: &str) -> Result<RegisteredDevice> {
+        let v = json::parse(line)?;
+        v2_check_error(&v)?;
+        Ok(RegisteredDevice {
+            device: v.req_str("device")?.to_string(),
+            id: v.req_usize("id")?,
+            devices: v.req_usize("devices")?,
+        })
+    }
+}
+
+pub(crate) fn new_device_from_value(v: &Json) -> std::result::Result<NewDevice, V2Error> {
+    let req_num = |k: &str| -> std::result::Result<f64, V2Error> {
+        v.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| V2Error::new("bad_request", format!("missing/invalid number field {k:?}")))
+    };
+    let opt_num = |k: &str| v.get(k).and_then(Json::as_f64);
+    let opt_u32 = |k: &str| v.get(k).and_then(Json::as_usize).map(|x| x as u32);
+    let arch = match v.get("arch").and_then(Json::as_str) {
+        None => None,
+        Some(s) => Some(crate::device::Arch::parse(s).ok_or_else(|| {
+            V2Error::new("invalid_argument", format!("unknown arch {s:?} (want pascal|volta|turing)"))
+        })?),
+    };
+    Ok(NewDevice {
+        name: v
+            .req_str("name")
+            .map_err(|e| V2Error::new("bad_request", e.to_string()))?
+            .to_string(),
+        sms: v
+            .req_usize("sms")
+            .map_err(|e| V2Error::new("bad_request", e.to_string()))? as u32,
+        clock_mhz: req_num("clock_mhz")?,
+        mem_bw_gbps: req_num("mem_bw_gbps")?,
+        fp32_tflops: req_num("fp32_tflops")?,
+        // Absent `tensor_cores` defaults from an explicit arch (so
+        // `"arch":"turing"` alone is valid); bare requests default false.
+        tensor_cores: match v.get("tensor_cores") {
+            Some(Json::Bool(b)) => *b,
+            _ => arch.map_or(false, |a| a.has_tensor_cores()),
+        },
+        usd_per_hr: opt_num("usd_per_hr"),
+        arch,
+        achieved_bw_gbps: opt_num("achieved_bw_gbps"),
+        mem_gib: opt_num("mem_gib"),
+        fp16_tflops: opt_num("fp16_tflops"),
+        cuda_cores: opt_u32("cuda_cores"),
+        l2_kib: opt_u32("l2_kib"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_request_json_roundtrip() {
+        let r = RankRequest {
+            model: "mlp".into(),
+            batch: 16,
+            origin: "t4".into(),
+            precision: Some("amp".into()),
+            dests: Some(vec!["v100".into(), "p100".into()]),
+        };
+        let line = r.to_json();
+        let parsed = match Request::from_json(&line).unwrap() {
+            Request::Rank(rr) => rr,
+            other => panic!("expected rank request, got {other:?}"),
+        };
+        assert_eq!(parsed.model, "mlp");
+        assert_eq!(parsed.batch, 16);
+        assert_eq!(parsed.precision.as_deref(), Some("amp"));
+        assert_eq!(parsed.dests.as_deref().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn predict_line_still_dispatches_as_predict() {
+        let line = PredictionRequest {
+            model: "mlp".into(),
+            batch: 8,
+            origin: "t4".into(),
+            dest: "v100".into(),
+            precision: None,
+        }
+        .to_json();
+        assert!(matches!(Request::from_json(&line).unwrap(), Request::Predict(_)));
+    }
+
+    #[test]
+    fn stats_line_dispatches_as_stats() {
+        let line = stats_request_json();
+        assert!(matches!(Request::from_json(&line).unwrap(), Request::Stats));
+    }
+
+    #[test]
+    fn v2_error_shape_is_structured() {
+        let line = v2_error_json("bad_request", "nope");
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.get("v"), Some(&Json::Num(PROTOCOL_V2)));
+        assert_eq!(
+            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("bad_request")
+        );
+        assert!(v2_check_error(&v).is_err());
+    }
+
+    #[test]
+    fn v2_envelope_inserts_version_op_and_extras() {
+        let env = v2_envelope(
+            "predict",
+            Json::obj(vec![("iter_ms", Json::Num(1.5))]),
+            vec![("trace_id", Json::Str("tr-1".into()))],
+        );
+        assert_eq!(env.get("v"), Some(&Json::Num(PROTOCOL_V2)));
+        assert_eq!(env.req_str("op").unwrap(), "predict");
+        assert_eq!(env.req_str("trace_id").unwrap(), "tr-1");
+        assert_eq!(env.get("iter_ms"), Some(&Json::Num(1.5)));
+    }
+}

@@ -1,2863 +1,33 @@
-//! The prediction service and its TCP front end.
+//! Compatibility shim for the old service monolith.
 //!
-//! Wire protocol: newline-delimited JSON, one request per line, one
-//! response per line, pipelining allowed (see `docs/SERVICE.md` for the
-//! full schema and worked `nc` examples). Two protocol generations
-//! share the stream:
+//! The coordinator used to live in this one module; it is now split
+//! into explicit layers (see `docs/ARCHITECTURE.md`, "Request path"):
 //!
-//! **v1** (bare objects, no `"v"` field — kept bit-identical):
+//! * [`protocol`](super::protocol) — typed requests/responses and the
+//!   v1/v2 wire codec. Pure data; no sockets.
+//! * [`dispatch`](super::dispatch) — the transport-agnostic
+//!   [`Dispatcher`](super::dispatch::Dispatcher) that routes decoded
+//!   requests into the engine and records per-op metrics.
+//! * [`tcp`](super::tcp) / [`http`](super::http) — the transports.
+//!   They move bytes and map outcomes to their wire; they never parse
+//!   envelopes.
 //!
-//! * **predict** — `{"model", "batch", "origin", "dest", "precision"?}`
-//!   → one destination's decision metrics;
-//! * **rank** — `{"rank": true, "model", "batch", "origin",
-//!   "precision"?, "dests"?}` → destination GPUs ordered by
-//!   cost-normalized throughput, from a single pass over one cached
-//!   trace (the paper's Fig. 1 decision as one RPC);
-//! * **stats** — `{"stats": true}` → the engine's trace/plan cache
-//!   hit & miss counters, wave-table counters, and fan-out pool size.
-//!
-//! **v2** (the open-world envelope, `{"v":2,"op":...}`): everything v1
-//! does, plus **register_device** (make a new GPU rankable at runtime),
-//! **submit_trace** (predict arbitrary client-profiled workloads by
-//! content-hashed `trace_id`), and the cluster suite —
-//! **predict_cluster** / **rank_cluster** (topology × world-size sweeps
-//! of the data-parallel step-time model, with scaling efficiency and
-//! fleet-cost-normalized ranking) and **export_workload** (the
-//! predicted compute + collective schedule as COMM_OPS-style JSON) —
-//! with structured `{"error":{"code","message"}}` errors. See
-//! [`PredictionService::handle_v2`].
-//!
-//! The server is a **bounded runtime** over `std::net` (the image has
-//! no async runtime): a fixed acceptor, at most `HABITAT_MAX_CONNS`
-//! concurrent connections (excess connects receive a typed
-//! `overloaded` error and are closed), and per-request compute jobs
-//! submitted to the engine's shared bounded worker pool — the same
-//! pool that runs `rank` fan-out helpers, so 60 destinations and 60
-//! concurrent clients draw from one compute budget. A full queue is
-//! answered per request with `{"v":2,"error":{"code":"overloaded"}}`
-//! instead of piling work (or connections) up at the OS. Connections
-//! are pipelined: any number of in-flight lines, answered strictly in
-//! order. [`start`] returns a [`ServerHandle`] whose `shutdown` drains
-//! in-flight work and joins every runtime thread (tests use it instead
-//! of leaking listener threads); [`serve`] wraps it for the CLI.
-//!
-//! All prediction work funnels into the shared
-//! [`crate::engine::PredictionEngine`], so concurrent connections reuse
-//! each other's traces, and PJRT MLP execution stays centralized on the
-//! batching service thread regardless of how many connections are open.
-
-use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::thread::JoinHandle;
-
-use crate::comm::{self, ClusterParams, Topology};
-use crate::device::{registry, Device, NewDevice, RegisterError};
-use crate::engine::PredictionEngine;
-use crate::lowering::Precision;
-use crate::predict::HybridPredictor;
-use crate::tracker::Trace;
-use crate::util::json::{self, Json};
-use crate::Result;
-
-/// One prediction request (wire format and internal API).
-#[derive(Debug, Clone)]
-pub struct PredictionRequest {
-    /// Model name (see [`crate::models::MODEL_NAMES`]).
-    pub model: String,
-    pub batch: usize,
-    /// Origin GPU short name (e.g. `"t4"`).
-    pub origin: String,
-    /// Destination GPU short name.
-    pub dest: String,
-    /// `"fp32"` (default) or `"amp"` — AMP composes Habitat with the
-    /// Daydream transformation (§6.1.2).
-    pub precision: Option<String>,
-}
-
-impl PredictionRequest {
-    /// Parse from a JSON object line.
-    pub fn from_json(line: &str) -> Result<Self> {
-        Self::from_value(&json::parse(line)?)
-    }
-
-    fn from_value(v: &Json) -> Result<Self> {
-        Ok(PredictionRequest {
-            model: v.req_str("model")?.to_string(),
-            batch: v.req_usize("batch")?,
-            origin: v.req_str("origin")?.to_string(),
-            dest: v.req_str("dest")?.to_string(),
-            precision: v.get("precision").and_then(Json::as_str).map(str::to_string),
-        })
-    }
-
-    pub fn to_json(&self) -> String {
-        let mut pairs = vec![
-            ("model", Json::Str(self.model.clone())),
-            ("batch", Json::Num(self.batch as f64)),
-            ("origin", Json::Str(self.origin.clone())),
-            ("dest", Json::Str(self.dest.clone())),
-        ];
-        if let Some(p) = &self.precision {
-            pairs.push(("precision", Json::Str(p.clone())));
-        }
-        Json::obj(pairs).dump()
-    }
-}
-
-/// A rank request: predict one origin trace onto many destinations and
-/// order them by cost-normalized throughput.
-#[derive(Debug, Clone)]
-pub struct RankRequest {
-    pub model: String,
-    pub batch: usize,
-    pub origin: String,
-    /// `"fp32"` (default) or `"amp"`.
-    pub precision: Option<String>,
-    /// Candidate destinations; `None` means every device in the
-    /// registry — built-ins plus runtime registrations.
-    pub dests: Option<Vec<String>>,
-}
-
-impl RankRequest {
-    pub fn from_json(line: &str) -> Result<Self> {
-        Self::from_value(&json::parse(line)?)
-    }
-
-    fn from_value(v: &Json) -> Result<Self> {
-        let dests = match v.get("dests") {
-            None | Some(Json::Null) => None,
-            Some(arr) => {
-                let items = arr
-                    .as_arr()
-                    .ok_or_else(|| anyhow::anyhow!("dests must be an array of device names"))?;
-                let mut names = Vec::with_capacity(items.len());
-                for it in items {
-                    names.push(
-                        it.as_str()
-                            .ok_or_else(|| anyhow::anyhow!("dests entries must be strings"))?
-                            .to_string(),
-                    );
-                }
-                Some(names)
-            }
-        };
-        Ok(RankRequest {
-            model: v.req_str("model")?.to_string(),
-            batch: v.req_usize("batch")?,
-            origin: v.req_str("origin")?.to_string(),
-            precision: v.get("precision").and_then(Json::as_str).map(str::to_string),
-            dests,
-        })
-    }
-
-    pub fn to_json(&self) -> String {
-        let mut pairs = vec![
-            ("rank", Json::Bool(true)),
-            ("model", Json::Str(self.model.clone())),
-            ("batch", Json::Num(self.batch as f64)),
-            ("origin", Json::Str(self.origin.clone())),
-        ];
-        if let Some(p) = &self.precision {
-            pairs.push(("precision", Json::Str(p.clone())));
-        }
-        if let Some(d) = &self.dests {
-            pairs.push((
-                "dests",
-                Json::Arr(d.iter().map(|s| Json::Str(s.clone())).collect()),
-            ));
-        }
-        Json::obj(pairs).dump()
-    }
-}
-
-/// Any request shape, as dispatched off the wire: a line with
-/// `"rank": true` is a [`RankRequest`], a line with `"stats": true` a
-/// stats request, anything else a [`PredictionRequest`].
-#[derive(Debug, Clone)]
-pub enum Request {
-    Predict(PredictionRequest),
-    Rank(RankRequest),
-    Stats,
-}
-
-impl Request {
-    pub fn from_json(line: &str) -> Result<Request> {
-        Self::from_value(&json::parse(line)?)
-    }
-
-    /// Dispatch an already-parsed v1 request value (the service parses
-    /// each line once, for the version sniff, and reuses the value here).
-    pub fn from_value(v: &Json) -> Result<Request> {
-        if matches!(v.get("rank"), Some(Json::Bool(true))) {
-            Ok(Request::Rank(RankRequest::from_value(v)?))
-        } else if matches!(v.get("stats"), Some(Json::Bool(true))) {
-            Ok(Request::Stats)
-        } else {
-            Ok(Request::Predict(PredictionRequest::from_value(v)?))
-        }
-    }
-}
-
-/// The wire form of a stats request.
-pub fn stats_request_json() -> String {
-    Json::obj(vec![("stats", Json::Bool(true))]).dump()
-}
-
-/// The answer to a stats request: the engine's counter snapshot
-/// ([`crate::engine::EngineStats`]) in wire form.
-#[derive(Debug, Clone, Copy)]
-pub struct StatsResponse {
-    /// Cache hits (requests that skipped the tracking pipeline).
-    pub trace_hits: u64,
-    /// Cache misses (tracking-pipeline executions).
-    pub trace_misses: u64,
-    /// Trace+plan entries currently resident.
-    pub trace_entries: usize,
-    /// Compiled-plan builds (cache misses + one-off analyses); the
-    /// plan rides the same cache entry as its trace, so cached-plan
-    /// reuses equal `trace_hits`.
-    pub plan_builds: u64,
-    /// Process-wide wave-table counters.
-    pub wave_hits: u64,
-    pub wave_misses: u64,
-    /// Persistent fan-out worker-pool width.
-    pub workers: usize,
-}
-
-impl From<crate::engine::EngineStats> for StatsResponse {
-    fn from(s: crate::engine::EngineStats) -> Self {
-        StatsResponse {
-            trace_hits: s.trace_hits,
-            trace_misses: s.trace_misses,
-            trace_entries: s.trace_entries,
-            plan_builds: s.plan_builds,
-            wave_hits: s.wave_hits,
-            wave_misses: s.wave_misses,
-            workers: s.workers,
-        }
-    }
-}
-
-impl StatsResponse {
-    pub fn to_json(&self) -> String {
-        self.to_value().dump()
-    }
-
-    /// The v1 stats payload. (The v2 `stats` op extends this with the
-    /// open-world counters — `trace_uploads`, `uploaded_entries`,
-    /// `devices` — and the store/compile counters — `store_hits`,
-    /// `store_misses`, `warm_restores`, `parallel_build_chunks`; v1
-    /// keeps its original seven fields bit-for-bit.)
-    pub fn to_value(&self) -> Json {
-        Json::obj(vec![
-            ("trace_hits", Json::Num(self.trace_hits as f64)),
-            ("trace_misses", Json::Num(self.trace_misses as f64)),
-            ("trace_entries", Json::Num(self.trace_entries as f64)),
-            ("plan_builds", Json::Num(self.plan_builds as f64)),
-            ("wave_hits", Json::Num(self.wave_hits as f64)),
-            ("wave_misses", Json::Num(self.wave_misses as f64)),
-            ("workers", Json::Num(self.workers as f64)),
-        ])
-    }
-
-    pub fn from_json(line: &str) -> Result<Self> {
-        let v = json::parse(line)?;
-        if let Some(err) = v.get("error").and_then(Json::as_str) {
-            anyhow::bail!("server error: {err}");
-        }
-        let req_u64 = |key: &str| -> Result<u64> {
-            Ok(v.req_usize(key)? as u64)
-        };
-        Ok(StatsResponse {
-            trace_hits: req_u64("trace_hits")?,
-            trace_misses: req_u64("trace_misses")?,
-            trace_entries: v.req_usize("trace_entries")?,
-            plan_builds: req_u64("plan_builds")?,
-            wave_hits: req_u64("wave_hits")?,
-            wave_misses: req_u64("wave_misses")?,
-            workers: v.req_usize("workers")?,
-        })
-    }
-}
-
-/// The service's answer: decision-ready metrics.
-#[derive(Debug, Clone)]
-pub struct PredictionResponse {
-    pub model: String,
-    pub batch: usize,
-    pub origin: String,
-    pub dest: String,
-    /// Measured iteration time on the origin, ms.
-    pub origin_iter_ms: f64,
-    /// Predicted iteration time on the destination, ms.
-    pub iter_ms: f64,
-    /// Predicted training throughput, samples/s.
-    pub throughput: f64,
-    /// Throughput per rental dollar, if the destination is rentable.
-    pub cost_normalized_throughput: Option<f64>,
-    /// Fraction of predicted time that came from the MLP predictors.
-    pub mlp_time_fraction: f64,
-    /// Kernel-varying ops that fell back to wave scaling.
-    pub mlp_fallbacks: usize,
-}
-
-impl PredictionResponse {
-    pub fn to_json(&self) -> String {
-        self.to_value().dump()
-    }
-
-    pub fn to_value(&self) -> Json {
-        Json::obj(vec![
-            ("model", Json::Str(self.model.clone())),
-            ("batch", Json::Num(self.batch as f64)),
-            ("origin", Json::Str(self.origin.clone())),
-            ("dest", Json::Str(self.dest.clone())),
-            ("origin_iter_ms", Json::Num(self.origin_iter_ms)),
-            ("iter_ms", Json::Num(self.iter_ms)),
-            ("throughput", Json::Num(self.throughput)),
-            (
-                "cost_normalized_throughput",
-                self.cost_normalized_throughput.map_or(Json::Null, Json::Num),
-            ),
-            ("mlp_time_fraction", Json::Num(self.mlp_time_fraction)),
-            ("mlp_fallbacks", Json::Num(self.mlp_fallbacks as f64)),
-        ])
-    }
-
-    /// Parse a response line (used by clients/examples/tests).
-    pub fn from_json(line: &str) -> Result<Self> {
-        let v = json::parse(line)?;
-        if let Some(err) = v.get("error").and_then(Json::as_str) {
-            anyhow::bail!("server error: {err}");
-        }
-        Ok(PredictionResponse {
-            model: v.req_str("model")?.to_string(),
-            batch: v.req_usize("batch")?,
-            origin: v.req_str("origin")?.to_string(),
-            dest: v.req_str("dest")?.to_string(),
-            origin_iter_ms: v
-                .get("origin_iter_ms")
-                .and_then(Json::as_f64)
-                .ok_or_else(|| anyhow::anyhow!("missing origin_iter_ms"))?,
-            iter_ms: v
-                .get("iter_ms")
-                .and_then(Json::as_f64)
-                .ok_or_else(|| anyhow::anyhow!("missing iter_ms"))?,
-            throughput: v
-                .get("throughput")
-                .and_then(Json::as_f64)
-                .ok_or_else(|| anyhow::anyhow!("missing throughput"))?,
-            cost_normalized_throughput: v.get("cost_normalized_throughput").and_then(Json::as_f64),
-            mlp_time_fraction: v.get("mlp_time_fraction").and_then(Json::as_f64).unwrap_or(0.0),
-            mlp_fallbacks: v.get("mlp_fallbacks").and_then(Json::as_usize).unwrap_or(0),
-        })
-    }
-}
-
-/// One destination's row in a [`RankResponse`], best decision first.
-#[derive(Debug, Clone)]
-pub struct RankedDest {
-    pub dest: String,
-    pub iter_ms: f64,
-    pub throughput: f64,
-    pub cost_normalized_throughput: Option<f64>,
-    pub mlp_time_fraction: f64,
-    pub mlp_fallbacks: usize,
-}
-
-impl RankedDest {
-    fn to_value(&self) -> Json {
-        Json::obj(vec![
-            ("dest", Json::Str(self.dest.clone())),
-            ("iter_ms", Json::Num(self.iter_ms)),
-            ("throughput", Json::Num(self.throughput)),
-            (
-                "cost_normalized_throughput",
-                self.cost_normalized_throughput.map_or(Json::Null, Json::Num),
-            ),
-            ("mlp_time_fraction", Json::Num(self.mlp_time_fraction)),
-            ("mlp_fallbacks", Json::Num(self.mlp_fallbacks as f64)),
-        ])
-    }
-
-    fn from_value(v: &Json) -> Result<Self> {
-        Ok(RankedDest {
-            dest: v.req_str("dest")?.to_string(),
-            iter_ms: v
-                .get("iter_ms")
-                .and_then(Json::as_f64)
-                .ok_or_else(|| anyhow::anyhow!("missing iter_ms"))?,
-            throughput: v
-                .get("throughput")
-                .and_then(Json::as_f64)
-                .ok_or_else(|| anyhow::anyhow!("missing throughput"))?,
-            cost_normalized_throughput: v.get("cost_normalized_throughput").and_then(Json::as_f64),
-            mlp_time_fraction: v.get("mlp_time_fraction").and_then(Json::as_f64).unwrap_or(0.0),
-            mlp_fallbacks: v.get("mlp_fallbacks").and_then(Json::as_usize).unwrap_or(0),
-        })
-    }
-}
-
-/// The answer to a [`RankRequest`].
-#[derive(Debug, Clone)]
-pub struct RankResponse {
-    pub model: String,
-    pub batch: usize,
-    pub origin: String,
-    /// Measured iteration time on the origin, ms.
-    pub origin_iter_ms: f64,
-    /// Every requested destination, sorted: rentable devices by
-    /// descending cost-normalized throughput, then unpriced devices by
-    /// descending raw throughput.
-    pub ranking: Vec<RankedDest>,
-}
-
-impl RankResponse {
-    pub fn to_json(&self) -> String {
-        self.to_value().dump()
-    }
-
-    pub fn to_value(&self) -> Json {
-        Json::obj(vec![
-            ("model", Json::Str(self.model.clone())),
-            ("batch", Json::Num(self.batch as f64)),
-            ("origin", Json::Str(self.origin.clone())),
-            ("origin_iter_ms", Json::Num(self.origin_iter_ms)),
-            (
-                "ranking",
-                Json::Arr(self.ranking.iter().map(RankedDest::to_value).collect()),
-            ),
-        ])
-    }
-
-    pub fn from_json(line: &str) -> Result<Self> {
-        let v = json::parse(line)?;
-        if let Some(err) = v.get("error").and_then(Json::as_str) {
-            anyhow::bail!("server error: {err}");
-        }
-        let ranking = v
-            .get("ranking")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow::anyhow!("missing ranking array"))?
-            .iter()
-            .map(RankedDest::from_value)
-            .collect::<Result<Vec<_>>>()?;
-        Ok(RankResponse {
-            model: v.req_str("model")?.to_string(),
-            batch: v.req_usize("batch")?,
-            origin: v.req_str("origin")?.to_string(),
-            origin_iter_ms: v
-                .get("origin_iter_ms")
-                .and_then(Json::as_f64)
-                .ok_or_else(|| anyhow::anyhow!("missing origin_iter_ms"))?,
-            ranking,
-        })
-    }
-}
-
-fn error_json(msg: &str) -> String {
-    Json::obj(vec![("error", Json::Str(msg.to_string()))]).dump()
-}
-
-fn parse_device(name: &str, role: &str) -> Result<Device> {
-    Device::parse(name).ok_or_else(|| anyhow::anyhow!("unknown {role} device {name:?}"))
-}
-
-fn parse_precision(p: Option<&str>) -> Result<Precision> {
-    match p {
-        None | Some("fp32") => Ok(Precision::Fp32),
-        Some("amp") => Ok(Precision::Amp),
-        Some(other) => anyhow::bail!("unknown precision {other:?} (want fp32|amp)"),
-    }
-}
-
-// ------------------------------------------------------------------ v2 --
-//
-// The versioned envelope: `{"v":2,"op":"<op>",...}` requests, answered
-// with `{"v":2,"op":"<op>",...payload}` on success and
-// `{"v":2,"error":{"code","message"}}` on failure. v1 bare-object lines
-// (no "v" field) keep flowing through the original code path
-// bit-identically. See docs/SERVICE.md for the full schema.
-
-/// Envelope protocol version served by [`PredictionService::handle_v2`].
-pub const PROTOCOL_V2: f64 = 2.0;
-
-/// A structured v2 error: a stable machine-readable `code` plus a human
-/// message. Codes: `bad_request`, `unsupported_version`,
-/// `unsupported_op`, `unknown_device`, `unknown_model`, `unknown_trace`,
-/// `invalid_argument`, `conflict`.
-struct V2Error {
-    code: &'static str,
-    message: String,
-}
-
-impl V2Error {
-    fn new(code: &'static str, message: impl Into<String>) -> V2Error {
-        V2Error { code, message: message.into() }
-    }
-}
-
-type V2Result = std::result::Result<Json, V2Error>;
-
-/// Serialize a v2 error line.
-pub fn v2_error_json(code: &str, message: &str) -> String {
-    Json::obj(vec![
-        ("v", Json::Num(PROTOCOL_V2)),
-        (
-            "error",
-            Json::obj(vec![
-                ("code", Json::Str(code.to_string())),
-                ("message", Json::Str(message.to_string())),
-            ]),
-        ),
-    ])
-    .dump()
-}
-
-/// Wrap a payload object in the v2 success envelope.
-fn v2_envelope(op: &str, payload: Json, extra: Vec<(&str, Json)>) -> Json {
-    let mut m = match payload {
-        Json::Obj(m) => m,
-        _ => Default::default(),
-    };
-    m.insert("v".to_string(), Json::Num(PROTOCOL_V2));
-    m.insert("op".to_string(), Json::Str(op.to_string()));
-    for (k, v) in extra {
-        m.insert(k.to_string(), v);
-    }
-    Json::Obj(m)
-}
-
-/// Fail on a v2 (or v1) error line; `Ok(())` on a success payload.
-/// Client-side counterpart of [`v2_error_json`].
-pub fn v2_check_error(v: &Json) -> Result<()> {
-    match v.get("error") {
-        None => Ok(()),
-        Some(Json::Str(msg)) => anyhow::bail!("server error: {msg}"),
-        Some(err) => {
-            let code = err.get("code").and_then(Json::as_str).unwrap_or("unknown");
-            let msg = err.get("message").and_then(Json::as_str).unwrap_or("");
-            anyhow::bail!("server error [{code}]: {msg}")
-        }
-    }
-}
-
-fn classify_engine_error(e: &anyhow::Error) -> &'static str {
-    let msg = e.to_string();
-    if msg.contains("unknown model") {
-        "unknown_model"
-    } else if msg.contains("unknown trace") {
-        "unknown_trace"
-    } else {
-        "invalid_argument"
-    }
-}
-
-// --- v2 request builders (used by the Client and the tests) -----------
-
-fn precision_pair(precision: Option<&str>) -> Vec<(&'static str, Json)> {
-    match precision {
-        Some(p) => vec![("precision", Json::Str(p.to_string()))],
-        None => Vec::new(),
-    }
-}
-
-/// `{"v":2,"op":"predict"}` over a zoo model.
-pub fn v2_predict_model_request(
-    model: &str,
-    batch: usize,
-    origin: &str,
-    dest: &str,
-    precision: Option<&str>,
-) -> String {
-    let mut pairs = vec![
-        ("v", Json::Num(PROTOCOL_V2)),
-        ("op", Json::Str("predict".into())),
-        ("model", Json::Str(model.to_string())),
-        ("batch", Json::Num(batch as f64)),
-        ("origin", Json::Str(origin.to_string())),
-        ("dest", Json::Str(dest.to_string())),
-    ];
-    pairs.extend(precision_pair(precision));
-    Json::obj(pairs).dump()
-}
-
-/// `{"v":2,"op":"predict"}` over a previously submitted trace.
-pub fn v2_predict_trace_request(trace_id: &str, dest: &str, precision: Option<&str>) -> String {
-    let mut pairs = vec![
-        ("v", Json::Num(PROTOCOL_V2)),
-        ("op", Json::Str("predict".into())),
-        ("trace_id", Json::Str(trace_id.to_string())),
-        ("dest", Json::Str(dest.to_string())),
-    ];
-    pairs.extend(precision_pair(precision));
-    Json::obj(pairs).dump()
-}
-
-/// `{"v":2,"op":"rank"}` over a previously submitted trace.
-pub fn v2_rank_trace_request(
-    trace_id: &str,
-    dests: Option<&[String]>,
-    precision: Option<&str>,
-) -> String {
-    let mut pairs = vec![
-        ("v", Json::Num(PROTOCOL_V2)),
-        ("op", Json::Str("rank".into())),
-        ("trace_id", Json::Str(trace_id.to_string())),
-    ];
-    if let Some(d) = dests {
-        pairs.push(("dests", Json::Arr(d.iter().map(|s| Json::Str(s.clone())).collect())));
-    }
-    pairs.extend(precision_pair(precision));
-    Json::obj(pairs).dump()
-}
-
-/// `{"v":2,"op":"submit_trace"}` with the trace embedded.
-pub fn v2_submit_trace_request(trace: &Trace) -> String {
-    Json::obj(vec![
-        ("v", Json::Num(PROTOCOL_V2)),
-        ("op", Json::Str("submit_trace".into())),
-        ("trace", trace.to_value()),
-    ])
-    .dump()
-}
-
-/// `{"v":2,"op":"register_device"}` from a device description.
-pub fn v2_register_device_request(d: &NewDevice) -> String {
-    let mut pairs = vec![
-        ("v", Json::Num(PROTOCOL_V2)),
-        ("op", Json::Str("register_device".into())),
-        ("name", Json::Str(d.name.clone())),
-        ("sms", Json::Num(d.sms as f64)),
-        ("clock_mhz", Json::Num(d.clock_mhz)),
-        ("mem_bw_gbps", Json::Num(d.mem_bw_gbps)),
-        ("fp32_tflops", Json::Num(d.fp32_tflops)),
-        ("tensor_cores", Json::Bool(d.tensor_cores)),
-    ];
-    if let Some(p) = d.usd_per_hr {
-        pairs.push(("usd_per_hr", Json::Num(p)));
-    }
-    if let Some(a) = d.arch {
-        pairs.push(("arch", Json::Str(a.to_string().to_ascii_lowercase())));
-    }
-    if let Some(x) = d.achieved_bw_gbps {
-        pairs.push(("achieved_bw_gbps", Json::Num(x)));
-    }
-    if let Some(x) = d.mem_gib {
-        pairs.push(("mem_gib", Json::Num(x)));
-    }
-    if let Some(x) = d.fp16_tflops {
-        pairs.push(("fp16_tflops", Json::Num(x)));
-    }
-    if let Some(x) = d.cuda_cores {
-        pairs.push(("cuda_cores", Json::Num(x as f64)));
-    }
-    if let Some(x) = d.l2_kib {
-        pairs.push(("l2_kib", Json::Num(x as f64)));
-    }
-    Json::obj(pairs).dump()
-}
-
-/// `{"v":2,"op":"stats"}`.
-pub fn v2_stats_request() -> String {
-    Json::obj(vec![("v", Json::Num(PROTOCOL_V2)), ("op", Json::Str("stats".into()))]).dump()
-}
-
-// --- cluster ops (v2 only) --------------------------------------------
-
-/// Default world-size sweep for the cluster ops when the request omits
-/// `worlds`: powers of two through 256 ranks.
-pub const DEFAULT_CLUSTER_WORLDS: [usize; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
-
-/// Largest accepted world size in a cluster sweep.
-const MAX_CLUSTER_WORLD: usize = 65_536;
-
-/// Cap on `dests × topologies × worlds` cells in one cluster request.
-const MAX_CLUSTER_SWEEP: usize = 16_384;
-
-/// One (topology, world) cell of a [`ClusterResponse`].
-#[derive(Debug, Clone)]
-pub struct ClusterConfig {
-    pub topology: String,
-    pub world: usize,
-    /// Predicted per-iteration wall time, ms (compute + exposed comm).
-    pub iter_ms: f64,
-    /// Raw bucketed-allreduce time before overlap, ms.
-    pub comm_ms: f64,
-    /// Communication left exposed after overlap with backward, ms.
-    pub exposed_ms: f64,
-    /// Global throughput, samples/s across all ranks.
-    pub throughput: f64,
-    /// Scaling efficiency vs perfect linear scaling, in (0, 1].
-    pub efficiency: f64,
-    /// Global samples/s per total fleet $/hr; `None` when unpriced.
-    pub cost_normalized_throughput: Option<f64>,
-}
-
-impl ClusterConfig {
-    fn to_value(&self) -> Json {
-        Json::obj(vec![
-            ("topology", Json::Str(self.topology.clone())),
-            ("world", Json::Num(self.world as f64)),
-            ("iter_ms", Json::Num(self.iter_ms)),
-            ("comm_ms", Json::Num(self.comm_ms)),
-            ("exposed_ms", Json::Num(self.exposed_ms)),
-            ("throughput", Json::Num(self.throughput)),
-            ("efficiency", Json::Num(self.efficiency)),
-            (
-                "cost_normalized_throughput",
-                self.cost_normalized_throughput.map_or(Json::Null, Json::Num),
-            ),
-        ])
-    }
-
-    fn from_value(v: &Json) -> Result<Self> {
-        let num = |k: &str| -> Result<f64> {
-            v.get(k)
-                .and_then(Json::as_f64)
-                .ok_or_else(|| anyhow::anyhow!("missing/invalid number field {k:?}"))
-        };
-        Ok(ClusterConfig {
-            topology: v.req_str("topology")?.to_string(),
-            world: v.req_usize("world")?,
-            iter_ms: num("iter_ms")?,
-            comm_ms: num("comm_ms")?,
-            exposed_ms: num("exposed_ms")?,
-            throughput: num("throughput")?,
-            efficiency: num("efficiency")?,
-            cost_normalized_throughput: v.get("cost_normalized_throughput").and_then(Json::as_f64),
-        })
-    }
-}
-
-/// The answer to a `predict_cluster` request: one destination swept
-/// across a topology × world grid (topology-major, request order).
-#[derive(Debug, Clone)]
-pub struct ClusterResponse {
-    pub model: String,
-    pub batch: usize,
-    pub origin: String,
-    pub dest: String,
-    /// Per-replica single-GPU compute time shared by every cell, ms.
-    pub compute_ms: f64,
-    pub configs: Vec<ClusterConfig>,
-}
-
-impl ClusterResponse {
-    pub fn to_value(&self) -> Json {
-        Json::obj(vec![
-            ("model", Json::Str(self.model.clone())),
-            ("batch", Json::Num(self.batch as f64)),
-            ("origin", Json::Str(self.origin.clone())),
-            ("dest", Json::Str(self.dest.clone())),
-            ("compute_ms", Json::Num(self.compute_ms)),
-            (
-                "configs",
-                Json::Arr(self.configs.iter().map(ClusterConfig::to_value).collect()),
-            ),
-        ])
-    }
-
-    pub fn from_json(line: &str) -> Result<Self> {
-        let v = json::parse(line)?;
-        v2_check_error(&v)?;
-        Ok(ClusterResponse {
-            model: v.req_str("model")?.to_string(),
-            batch: v.req_usize("batch")?,
-            origin: v.req_str("origin")?.to_string(),
-            dest: v.req_str("dest")?.to_string(),
-            compute_ms: v
-                .get("compute_ms")
-                .and_then(Json::as_f64)
-                .ok_or_else(|| anyhow::anyhow!("missing compute_ms"))?,
-            configs: v
-                .get("configs")
-                .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow::anyhow!("missing configs array"))?
-                .iter()
-                .map(ClusterConfig::from_value)
-                .collect::<Result<Vec<_>>>()?,
-        })
-    }
-}
-
-/// One entry of a [`ClusterRankResponse`], best decision first.
-#[derive(Debug, Clone)]
-pub struct ClusterRankedConfig {
-    pub dest: String,
-    pub topology: String,
-    pub world: usize,
-    pub iter_ms: f64,
-    pub throughput: f64,
-    pub efficiency: f64,
-    pub cost_normalized_throughput: Option<f64>,
-}
-
-impl ClusterRankedConfig {
-    fn to_value(&self) -> Json {
-        Json::obj(vec![
-            ("dest", Json::Str(self.dest.clone())),
-            ("topology", Json::Str(self.topology.clone())),
-            ("world", Json::Num(self.world as f64)),
-            ("iter_ms", Json::Num(self.iter_ms)),
-            ("throughput", Json::Num(self.throughput)),
-            ("efficiency", Json::Num(self.efficiency)),
-            (
-                "cost_normalized_throughput",
-                self.cost_normalized_throughput.map_or(Json::Null, Json::Num),
-            ),
-        ])
-    }
-
-    fn from_value(v: &Json) -> Result<Self> {
-        let num = |k: &str| -> Result<f64> {
-            v.get(k)
-                .and_then(Json::as_f64)
-                .ok_or_else(|| anyhow::anyhow!("missing/invalid number field {k:?}"))
-        };
-        Ok(ClusterRankedConfig {
-            dest: v.req_str("dest")?.to_string(),
-            topology: v.req_str("topology")?.to_string(),
-            world: v.req_usize("world")?,
-            iter_ms: num("iter_ms")?,
-            throughput: num("throughput")?,
-            efficiency: num("efficiency")?,
-            cost_normalized_throughput: v.get("cost_normalized_throughput").and_then(Json::as_f64),
-        })
-    }
-}
-
-/// The answer to a `rank_cluster` request: every (destination, topology,
-/// world) configuration, ordered like `rank` — priced fleets by
-/// descending cost-normalized throughput, then unpriced by raw global
-/// throughput.
-#[derive(Debug, Clone)]
-pub struct ClusterRankResponse {
-    pub model: String,
-    pub batch: usize,
-    pub origin: String,
-    pub ranking: Vec<ClusterRankedConfig>,
-}
-
-impl ClusterRankResponse {
-    pub fn to_value(&self) -> Json {
-        Json::obj(vec![
-            ("model", Json::Str(self.model.clone())),
-            ("batch", Json::Num(self.batch as f64)),
-            ("origin", Json::Str(self.origin.clone())),
-            (
-                "ranking",
-                Json::Arr(self.ranking.iter().map(ClusterRankedConfig::to_value).collect()),
-            ),
-        ])
-    }
-
-    pub fn from_json(line: &str) -> Result<Self> {
-        let v = json::parse(line)?;
-        v2_check_error(&v)?;
-        Ok(ClusterRankResponse {
-            model: v.req_str("model")?.to_string(),
-            batch: v.req_usize("batch")?,
-            origin: v.req_str("origin")?.to_string(),
-            ranking: v
-                .get("ranking")
-                .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow::anyhow!("missing ranking array"))?
-                .iter()
-                .map(ClusterRankedConfig::from_value)
-                .collect::<Result<Vec<_>>>()?,
-        })
-    }
-}
-
-fn cluster_grid_pairs(
-    topologies: Option<&[String]>,
-    worlds: Option<&[usize]>,
-) -> Vec<(&'static str, Json)> {
-    let mut pairs = Vec::new();
-    if let Some(t) = topologies {
-        pairs.push((
-            "topologies",
-            Json::Arr(t.iter().map(|s| Json::Str(s.clone())).collect()),
-        ));
-    }
-    if let Some(w) = worlds {
-        pairs.push((
-            "worlds",
-            Json::Arr(w.iter().map(|&x| Json::Num(x as f64)).collect()),
-        ));
-    }
-    pairs
-}
-
-/// `{"v":2,"op":"predict_cluster"}` over a zoo model. `None` topologies
-/// and worlds mean the server defaults (every registered topology,
-/// [`DEFAULT_CLUSTER_WORLDS`]).
-pub fn v2_predict_cluster_request(
-    model: &str,
-    batch: usize,
-    origin: &str,
-    dest: &str,
-    topologies: Option<&[String]>,
-    worlds: Option<&[usize]>,
-    precision: Option<&str>,
-) -> String {
-    let mut pairs = vec![
-        ("v", Json::Num(PROTOCOL_V2)),
-        ("op", Json::Str("predict_cluster".into())),
-        ("model", Json::Str(model.to_string())),
-        ("batch", Json::Num(batch as f64)),
-        ("origin", Json::Str(origin.to_string())),
-        ("dest", Json::Str(dest.to_string())),
-    ];
-    pairs.extend(cluster_grid_pairs(topologies, worlds));
-    pairs.extend(precision_pair(precision));
-    Json::obj(pairs).dump()
-}
-
-/// `{"v":2,"op":"rank_cluster"}` over a zoo model. `None` dests mean
-/// every registered device.
-#[allow(clippy::too_many_arguments)]
-pub fn v2_rank_cluster_request(
-    model: &str,
-    batch: usize,
-    origin: &str,
-    dests: Option<&[String]>,
-    topologies: Option<&[String]>,
-    worlds: Option<&[usize]>,
-    precision: Option<&str>,
-) -> String {
-    let mut pairs = vec![
-        ("v", Json::Num(PROTOCOL_V2)),
-        ("op", Json::Str("rank_cluster".into())),
-        ("model", Json::Str(model.to_string())),
-        ("batch", Json::Num(batch as f64)),
-        ("origin", Json::Str(origin.to_string())),
-    ];
-    if let Some(d) = dests {
-        pairs.push(("dests", Json::Arr(d.iter().map(|s| Json::Str(s.clone())).collect())));
-    }
-    pairs.extend(cluster_grid_pairs(topologies, worlds));
-    pairs.extend(precision_pair(precision));
-    Json::obj(pairs).dump()
-}
-
-/// `{"v":2,"op":"export_workload"}`: one (dest, topology, world)
-/// configuration's predicted compute + collective schedule.
-pub fn v2_export_workload_request(
-    model: &str,
-    batch: usize,
-    origin: &str,
-    dest: &str,
-    topology: &str,
-    world: usize,
-    precision: Option<&str>,
-) -> String {
-    let mut pairs = vec![
-        ("v", Json::Num(PROTOCOL_V2)),
-        ("op", Json::Str("export_workload".into())),
-        ("model", Json::Str(model.to_string())),
-        ("batch", Json::Num(batch as f64)),
-        ("origin", Json::Str(origin.to_string())),
-        ("dest", Json::Str(dest.to_string())),
-        ("topology", Json::Str(topology.to_string())),
-        ("world", Json::Num(world as f64)),
-    ];
-    pairs.extend(precision_pair(precision));
-    Json::obj(pairs).dump()
-}
-
-/// The `register_device` acknowledgement (client-side view).
-#[derive(Debug, Clone)]
-pub struct RegisteredDevice {
-    /// Canonical device name (as stored in the registry).
-    pub device: String,
-    /// Interned registry index on the server.
-    pub id: usize,
-    /// Registry size after the registration.
-    pub devices: usize,
-}
-
-impl RegisteredDevice {
-    pub fn from_json(line: &str) -> Result<RegisteredDevice> {
-        let v = json::parse(line)?;
-        v2_check_error(&v)?;
-        Ok(RegisteredDevice {
-            device: v.req_str("device")?.to_string(),
-            id: v.req_usize("id")?,
-            devices: v.req_usize("devices")?,
-        })
-    }
-}
-
-fn new_device_from_value(v: &Json) -> std::result::Result<NewDevice, V2Error> {
-    let req_num = |k: &str| -> std::result::Result<f64, V2Error> {
-        v.get(k)
-            .and_then(Json::as_f64)
-            .ok_or_else(|| V2Error::new("bad_request", format!("missing/invalid number field {k:?}")))
-    };
-    let opt_num = |k: &str| v.get(k).and_then(Json::as_f64);
-    let opt_u32 = |k: &str| v.get(k).and_then(Json::as_usize).map(|x| x as u32);
-    let arch = match v.get("arch").and_then(Json::as_str) {
-        None => None,
-        Some(s) => Some(crate::device::Arch::parse(s).ok_or_else(|| {
-            V2Error::new("invalid_argument", format!("unknown arch {s:?} (want pascal|volta|turing)"))
-        })?),
-    };
-    Ok(NewDevice {
-        name: v
-            .req_str("name")
-            .map_err(|e| V2Error::new("bad_request", e.to_string()))?
-            .to_string(),
-        sms: v
-            .req_usize("sms")
-            .map_err(|e| V2Error::new("bad_request", e.to_string()))? as u32,
-        clock_mhz: req_num("clock_mhz")?,
-        mem_bw_gbps: req_num("mem_bw_gbps")?,
-        fp32_tflops: req_num("fp32_tflops")?,
-        // Absent `tensor_cores` defaults from an explicit arch (so
-        // `"arch":"turing"` alone is valid); bare requests default false.
-        tensor_cores: match v.get("tensor_cores") {
-            Some(Json::Bool(b)) => *b,
-            _ => arch.map_or(false, |a| a.has_tensor_cores()),
-        },
-        usd_per_hr: opt_num("usd_per_hr"),
-        arch,
-        achieved_bw_gbps: opt_num("achieved_bw_gbps"),
-        mem_gib: opt_num("mem_gib"),
-        fp16_tflops: opt_num("fp16_tflops"),
-        cuda_cores: opt_u32("cuda_cores"),
-        l2_kib: opt_u32("l2_kib"),
-    })
-}
-
-/// The TCP-facing prediction service: a thin protocol layer over the
-/// shared [`PredictionEngine`].
-pub struct PredictionService {
-    engine: PredictionEngine,
-}
-
-impl PredictionService {
-    /// Build with the paper's full hybrid predictor (requires artifacts).
-    pub fn new(artifacts: &str) -> Result<Self> {
-        Ok(Self::with_engine(PredictionEngine::from_artifacts(artifacts)?))
-    }
-
-    /// Build around any predictor (wave-only for tests / no artifacts).
-    pub fn with_predictor(predictor: HybridPredictor) -> Self {
-        Self::with_engine(PredictionEngine::new(predictor))
-    }
-
-    /// Build around an existing engine (shared caches, custom capacity).
-    pub fn with_engine(engine: PredictionEngine) -> Self {
-        PredictionService { engine }
-    }
-
-    /// Attach (and warm-restore) a persistent plan store — see
-    /// [`PredictionEngine::attach_store`].
-    pub fn attach_store<P: AsRef<std::path::Path>>(&mut self, dir: P) -> Result<()> {
-        self.engine.attach_store(dir)
-    }
-
-    pub fn engine(&self) -> &PredictionEngine {
-        &self.engine
-    }
-
-    pub fn predictor(&self) -> &HybridPredictor {
-        self.engine.predictor()
-    }
-
-    /// Get or build the origin trace for a request (memoized in the
-    /// engine). The tracker always measures FP32 — the paper profiles
-    /// FP32 and *predicts* AMP.
-    pub fn trace_for(&self, model: &str, batch: usize, origin: Device) -> Result<Arc<Trace>> {
-        self.engine.trace(model, batch, origin)
-    }
-
-    /// Handle one prediction request synchronously.
-    pub fn handle(&self, req: &PredictionRequest) -> Result<PredictionResponse> {
-        let origin = parse_device(&req.origin, "origin")?;
-        let dest = parse_device(&req.dest, "destination")?;
-        let precision = parse_precision(req.precision.as_deref())?;
-        anyhow::ensure!(req.batch > 0, "batch must be positive");
-
-        let out = self.engine.predict(&req.model, req.batch, origin, dest, precision)?;
-        let tput = out.pred.throughput();
-        Ok(PredictionResponse {
-            model: req.model.clone(),
-            batch: req.batch,
-            origin: origin.id().to_string(),
-            dest: dest.id().to_string(),
-            origin_iter_ms: out.trace.run_time_ms(),
-            iter_ms: out.pred.run_time_ms(),
-            throughput: tput,
-            cost_normalized_throughput: crate::cost::cost_normalized_throughput(dest, tput),
-            mlp_time_fraction: out.pred.mlp_time_fraction(),
-            mlp_fallbacks: out.pred.mlp_fallbacks,
-        })
-    }
-
-    /// Handle one rank request: a single tracking pass, fanned out to
-    /// every destination on the engine's worker pool.
-    pub fn handle_rank(&self, req: &RankRequest) -> Result<RankResponse> {
-        let origin = parse_device(&req.origin, "origin")?;
-        let precision = parse_precision(req.precision.as_deref())?;
-        anyhow::ensure!(req.batch > 0, "batch must be positive");
-        // Default destination set: every device in the registry —
-        // including GPUs registered at runtime via `register_device`.
-        let dests: Vec<Device> = match &req.dests {
-            None => registry::all_devices(),
-            Some(names) => names
-                .iter()
-                .map(|n| parse_device(n, "destination"))
-                .collect::<Result<Vec<_>>>()?,
-        };
-
-        let ranking = self.engine.rank(&req.model, req.batch, origin, &dests, precision)?;
-        Ok(RankResponse {
-            model: req.model.clone(),
-            batch: req.batch,
-            origin: origin.id().to_string(),
-            origin_iter_ms: ranking.trace.run_time_ms(),
-            ranking: ranking
-                .entries
-                .iter()
-                .map(|e| RankedDest {
-                    dest: e.dest.id().to_string(),
-                    iter_ms: e.pred.run_time_ms(),
-                    throughput: e.pred.throughput(),
-                    cost_normalized_throughput: e.cost_normalized_throughput,
-                    mlp_time_fraction: e.pred.mlp_time_fraction(),
-                    mlp_fallbacks: e.pred.mlp_fallbacks,
-                })
-                .collect(),
-        })
-    }
-
-    /// Handle a stats request: the engine's counter snapshot.
-    pub fn handle_stats(&self) -> StatsResponse {
-        self.engine.stats().into()
-    }
-
-    /// Parse one wire line, dispatch it, and serialize the reply.
-    ///
-    /// Version routing: a line with `"v":2` takes the v2 envelope path;
-    /// any other `"v"` value gets a structured `unsupported_version`
-    /// error; a line with no `"v"` field is a v1 request and flows
-    /// through the original code path **bit-identically** (pinned by the
-    /// golden suite and the CI service smoke).
-    pub fn handle_line(&self, line: &str) -> String {
-        // One parse per line: the version sniff and the v1 dispatch
-        // share the same value.
-        let request = match json::parse(line) {
-            Ok(v) => {
-                match v.get("v") {
-                    Some(Json::Num(n)) if *n == PROTOCOL_V2 => return self.handle_v2(&v),
-                    Some(other) => {
-                        return v2_error_json(
-                            "unsupported_version",
-                            &format!("unsupported protocol version {}", other.dump()),
-                        )
-                    }
-                    None => {}
-                }
-                Request::from_value(&v)
-            }
-            Err(e) => Err(e),
-        };
-        match request {
-            Ok(Request::Predict(req)) => match self.handle(&req) {
-                Ok(resp) => resp.to_json(),
-                Err(e) => error_json(&e.to_string()),
-            },
-            Ok(Request::Rank(req)) => match self.handle_rank(&req) {
-                Ok(resp) => resp.to_json(),
-                Err(e) => error_json(&e.to_string()),
-            },
-            Ok(Request::Stats) => self.handle_stats().to_json(),
-            Err(e) => error_json(&format!("bad request: {e}")),
-        }
-    }
-
-    /// Dispatch one parsed v2 envelope and serialize the reply.
-    pub fn handle_v2(&self, v: &Json) -> String {
-        match self.dispatch_v2(v) {
-            Ok(reply) => reply.dump(),
-            Err(e) => v2_error_json(e.code, &e.message),
-        }
-    }
-
-    fn dispatch_v2(&self, v: &Json) -> V2Result {
-        let op = v
-            .req_str("op")
-            .map_err(|_| V2Error::new("bad_request", "missing string field \"op\""))?;
-        match op {
-            "predict" => self.v2_predict(v),
-            "rank" => self.v2_rank(v),
-            "stats" => Ok(self.v2_stats()),
-            "submit_trace" => self.v2_submit_trace(v),
-            "register_device" => self.v2_register_device(v),
-            "predict_cluster" => self.v2_predict_cluster(v),
-            "rank_cluster" => self.v2_rank_cluster(v),
-            "export_workload" => self.v2_export_workload(v),
-            other => Err(V2Error::new(
-                "unsupported_op",
-                format!("unsupported op {other:?} (want predict|rank|stats|submit_trace|register_device|predict_cluster|rank_cluster|export_workload)"),
-            )),
-        }
-    }
-
-    fn v2_precision(v: &Json) -> std::result::Result<Precision, V2Error> {
-        parse_precision(v.get("precision").and_then(Json::as_str))
-            .map_err(|e| V2Error::new("invalid_argument", e.to_string()))
-    }
-
-    fn v2_dest(v: &Json) -> std::result::Result<Device, V2Error> {
-        let name = v
-            .req_str("dest")
-            .map_err(|_| V2Error::new("bad_request", "missing string field \"dest\""))?;
-        parse_device(name, "destination").map_err(|e| V2Error::new("unknown_device", e.to_string()))
-    }
-
-    fn v2_predict(&self, v: &Json) -> V2Result {
-        let precision = Self::v2_precision(v)?;
-        let dest = Self::v2_dest(v)?;
-        if let Some(trace_id) = v.get("trace_id").and_then(Json::as_str) {
-            let out = self
-                .engine
-                .predict_uploaded(trace_id, dest, precision)
-                .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
-            let resp = Self::prediction_response(&out);
-            Ok(v2_envelope(
-                "predict",
-                resp.to_value(),
-                vec![("trace_id", Json::Str(trace_id.to_string()))],
-            ))
-        } else {
-            let req = PredictionRequest::from_value(v)
-                .map_err(|e| V2Error::new("bad_request", e.to_string()))?;
-            let resp = self
-                .handle(&req)
-                .map_err(|e| V2Error::new(Self::classify_v1(&e), e.to_string()))?;
-            Ok(v2_envelope("predict", resp.to_value(), Vec::new()))
-        }
-    }
-
-    fn v2_rank(&self, v: &Json) -> V2Result {
-        if let Some(trace_id) = v.get("trace_id").and_then(Json::as_str) {
-            let precision = Self::v2_precision(v)?;
-            let dests = Self::v2_dests(v)?;
-            let ranking = self
-                .engine
-                .rank_uploaded(trace_id, &dests, precision)
-                .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
-            let resp = Self::rank_response(&ranking);
-            Ok(v2_envelope(
-                "rank",
-                resp.to_value(),
-                vec![("trace_id", Json::Str(trace_id.to_string()))],
-            ))
-        } else {
-            let req = RankRequest::from_value(v)
-                .map_err(|e| V2Error::new("bad_request", e.to_string()))?;
-            let resp = self
-                .handle_rank(&req)
-                .map_err(|e| V2Error::new(Self::classify_v1(&e), e.to_string()))?;
-            Ok(v2_envelope("rank", resp.to_value(), Vec::new()))
-        }
-    }
-
-    fn v2_stats(&self) -> Json {
-        let s = self.engine.stats();
-        v2_envelope(
-            "stats",
-            StatsResponse::from(s).to_value(),
-            vec![
-                ("trace_uploads", Json::Num(s.trace_uploads as f64)),
-                ("uploaded_entries", Json::Num(s.uploaded_entries as f64)),
-                ("devices", Json::Num(s.devices as f64)),
-                ("store_hits", Json::Num(s.store_hits as f64)),
-                ("store_misses", Json::Num(s.store_misses as f64)),
-                ("warm_restores", Json::Num(s.warm_restores as f64)),
-                (
-                    "parallel_build_chunks",
-                    Json::Num(s.parallel_build_chunks as f64),
-                ),
-            ],
-        )
-    }
-
-    fn v2_submit_trace(&self, v: &Json) -> V2Result {
-        let tv = v
-            .get("trace")
-            .ok_or_else(|| V2Error::new("bad_request", "missing object field \"trace\""))?;
-        let trace = Trace::from_value(tv)
-            .map_err(|e| V2Error::new("invalid_argument", format!("bad trace: {e}")))?;
-        let (trace_id, analyzed) = self
-            .engine
-            .submit_trace(trace)
-            .map_err(|e| V2Error::new("invalid_argument", e.to_string()))?;
-        Ok(v2_envelope(
-            "submit_trace",
-            Json::obj(vec![
-                ("trace_id", Json::Str(trace_id)),
-                ("model", Json::Str(analyzed.trace.model.clone())),
-                ("batch", Json::Num(analyzed.trace.batch_size as f64)),
-                ("origin", Json::Str(analyzed.trace.origin.id().to_string())),
-                ("ops", Json::Num(analyzed.trace.ops.len() as f64)),
-                ("origin_iter_ms", Json::Num(analyzed.trace.run_time_ms())),
-            ]),
-            Vec::new(),
-        ))
-    }
-
-    fn v2_register_device(&self, v: &Json) -> V2Result {
-        let desc = new_device_from_value(v)?;
-        // Through the engine, not the bare registry: a genuinely new
-        // device gets its lane appended to every cached plan once and
-        // is logged to the persistent store's device log.
-        let d = self.engine.register_device(&desc).map_err(|e| match e {
-            RegisterError::Conflict(m) => V2Error::new("conflict", m),
-            RegisterError::Invalid(m) => V2Error::new("invalid_argument", m),
-        })?;
-        let s = d.spec();
-        Ok(v2_envelope(
-            "register_device",
-            Json::obj(vec![
-                ("device", Json::Str(s.name.to_string())),
-                ("id", Json::Num(d.index() as f64)),
-                ("arch", Json::Str(s.arch.to_string())),
-                ("sms", Json::Num(s.sms as f64)),
-                ("mem_gib", Json::Num(s.mem_gib)),
-                ("peak_mem_bw_gbps", Json::Num(s.peak_mem_bw_gbps)),
-                ("achieved_mem_bw_gbps", Json::Num(s.achieved_mem_bw_gbps)),
-                ("clock_mhz", Json::Num(s.boost_clock_mhz)),
-                ("fp32_tflops", Json::Num(s.peak_fp32_tflops)),
-                ("fp16_tflops", Json::Num(s.peak_fp16_tflops)),
-                ("usd_per_hr", s.rental_usd_per_hr.map_or(Json::Null, Json::Num)),
-                ("devices", Json::Num(registry::device_count() as f64)),
-            ]),
-            Vec::new(),
-        ))
-    }
-
-    // --- cluster ops --------------------------------------------------
-
-    fn v2_predict_cluster(&self, v: &Json) -> V2Result {
-        let precision = Self::v2_precision(v)?;
-        let dest = Self::v2_dest(v)?;
-        let topologies = Self::v2_topologies(v)?;
-        let worlds = Self::v2_worlds(v)?;
-        let params = Self::v2_cluster_params(v)?;
-        Self::check_sweep(topologies.len().saturating_mul(worlds.len()))?;
-        if let Some(trace_id) = v.get("trace_id").and_then(Json::as_str) {
-            let report = self
-                .engine
-                .predict_cluster_uploaded(trace_id, dest, precision, &topologies, &worlds, &params)
-                .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
-            Ok(v2_envelope(
-                "predict_cluster",
-                Self::cluster_response(&report).to_value(),
-                vec![("trace_id", Json::Str(trace_id.to_string()))],
-            ))
-        } else {
-            let (model, batch, origin) = Self::v2_model_origin(v)?;
-            let report = self
-                .engine
-                .predict_cluster(&model, batch, origin, dest, precision, &topologies, &worlds, &params)
-                .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
-            Ok(v2_envelope("predict_cluster", Self::cluster_response(&report).to_value(), Vec::new()))
-        }
-    }
-
-    fn v2_rank_cluster(&self, v: &Json) -> V2Result {
-        let precision = Self::v2_precision(v)?;
-        let dests = Self::v2_dests(v)?;
-        let topologies = Self::v2_topologies(v)?;
-        let worlds = Self::v2_worlds(v)?;
-        let params = Self::v2_cluster_params(v)?;
-        Self::check_sweep(
-            dests
-                .len()
-                .saturating_mul(topologies.len())
-                .saturating_mul(worlds.len()),
-        )?;
-        if let Some(trace_id) = v.get("trace_id").and_then(Json::as_str) {
-            let ranking = self
-                .engine
-                .rank_cluster_uploaded(trace_id, &dests, precision, &topologies, &worlds, &params)
-                .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
-            Ok(v2_envelope(
-                "rank_cluster",
-                Self::cluster_rank_response(&ranking).to_value(),
-                vec![("trace_id", Json::Str(trace_id.to_string()))],
-            ))
-        } else {
-            let (model, batch, origin) = Self::v2_model_origin(v)?;
-            let ranking = self
-                .engine
-                .rank_cluster(&model, batch, origin, &dests, precision, &topologies, &worlds, &params)
-                .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
-            Ok(v2_envelope("rank_cluster", Self::cluster_rank_response(&ranking).to_value(), Vec::new()))
-        }
-    }
-
-    fn v2_export_workload(&self, v: &Json) -> V2Result {
-        let precision = Self::v2_precision(v)?;
-        let dest = Self::v2_dest(v)?;
-        let topology = match v.get("topology") {
-            None | Some(Json::Null) => {
-                return Err(V2Error::new("bad_request", "missing field \"topology\""))
-            }
-            Some(it) => Self::v2_topology_entry(it)?,
-        };
-        let world = v
-            .req_usize("world")
-            .map_err(|e| V2Error::new("bad_request", e.to_string()))?;
-        if !(1..=MAX_CLUSTER_WORLD).contains(&world) {
-            return Err(V2Error::new(
-                "invalid_argument",
-                format!("world size {world} out of range 1..={MAX_CLUSTER_WORLD}"),
-            ));
-        }
-        let params = Self::v2_cluster_params(v)?;
-        let (model, batch, origin) = Self::v2_model_origin(v)?;
-        let workload = self
-            .engine
-            .export_workload(&model, batch, origin, dest, precision, topology, world, &params)
-            .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
-        Ok(v2_envelope("export_workload", workload.to_value(), Vec::new()))
-    }
-
-    /// Common `model`/`batch`/`origin` triple of the zoo-model paths.
-    fn v2_model_origin(v: &Json) -> std::result::Result<(String, usize, Device), V2Error> {
-        let model = v
-            .req_str("model")
-            .map_err(|e| V2Error::new("bad_request", e.to_string()))?
-            .to_string();
-        let batch = v
-            .req_usize("batch")
-            .map_err(|e| V2Error::new("bad_request", e.to_string()))?;
-        let origin_name = v
-            .req_str("origin")
-            .map_err(|e| V2Error::new("bad_request", e.to_string()))?;
-        let origin = parse_device(origin_name, "origin")
-            .map_err(|e| V2Error::new("unknown_device", e.to_string()))?;
-        Ok((model, batch, origin))
-    }
-
-    /// Resolve a v2 `topologies` field: names and/or inline topology
-    /// objects, or every registered topology when absent.
-    fn v2_topologies(v: &Json) -> std::result::Result<Vec<Topology>, V2Error> {
-        match v.get("topologies") {
-            None | Some(Json::Null) => Ok(comm::topology::all_topologies()),
-            Some(arr) => {
-                let items = arr.as_arr().ok_or_else(|| {
-                    V2Error::new("bad_request", "topologies must be an array of names or objects")
-                })?;
-                if items.is_empty() {
-                    return Err(V2Error::new("invalid_argument", "topologies must be non-empty"));
-                }
-                items.iter().map(Self::v2_topology_entry).collect()
-            }
-        }
-    }
-
-    /// One topology entry: a registered name, or an inline
-    /// `{"name","gpus_per_node","intra","inter"}` object (registered
-    /// through the interning registry, idempotently).
-    fn v2_topology_entry(it: &Json) -> std::result::Result<Topology, V2Error> {
-        match it {
-            Json::Str(name) => comm::topology::find_topology(name).ok_or_else(|| {
-                V2Error::new(
-                    "unknown_topology",
-                    format!(
-                        "unknown topology {name:?} (known: {})",
-                        comm::topology::topology_names().join("|")
-                    ),
-                )
-            }),
-            Json::Obj(_) => {
-                let name = it
-                    .req_str("name")
-                    .map_err(|_| V2Error::new("bad_request", "inline topology needs string field \"name\""))?;
-                let gpus_per_node = it.req_usize("gpus_per_node").map_err(|_| {
-                    V2Error::new("bad_request", "inline topology needs integer field \"gpus_per_node\"")
-                })?;
-                let intra = Self::v2_link(it.get("intra"), "intra")?;
-                let inter = Self::v2_link(it.get("inter"), "inter")?;
-                comm::topology::register_topology(&comm::NewTopology {
-                    name: name.to_string(),
-                    gpus_per_node: gpus_per_node as u32,
-                    intra,
-                    inter,
-                })
-                .map_err(Self::register_error)
-            }
-            _ => Err(V2Error::new(
-                "bad_request",
-                "topologies entries must be topology names or inline objects",
-            )),
-        }
-    }
-
-    /// One link field of an inline topology: a registered name, or an
-    /// inline `{"name","bandwidth_gbps","step_latency_ms"?}` object.
-    fn v2_link(it: Option<&Json>, role: &str) -> std::result::Result<comm::Link, V2Error> {
-        let it = it.ok_or_else(|| {
-            V2Error::new("bad_request", format!("inline topology needs field {role:?}"))
-        })?;
-        match it {
-            Json::Str(name) => comm::find_link(name).ok_or_else(|| {
-                V2Error::new(
-                    "unknown_link",
-                    format!(
-                        "unknown {role} link {name:?} (known: {})",
-                        comm::link_names().join("|")
-                    ),
-                )
-            }),
-            Json::Obj(_) => {
-                let name = it.req_str("name").map_err(|_| {
-                    V2Error::new("bad_request", format!("inline {role} link needs string field \"name\""))
-                })?;
-                let bandwidth_gbps = it.get("bandwidth_gbps").and_then(Json::as_f64).ok_or_else(|| {
-                    V2Error::new(
-                        "bad_request",
-                        format!("inline {role} link needs number field \"bandwidth_gbps\""),
-                    )
-                })?;
-                let step_latency_ms =
-                    it.get("step_latency_ms").and_then(Json::as_f64).unwrap_or(0.01);
-                comm::register_link(&comm::NewLink {
-                    name: name.to_string(),
-                    bandwidth_gbps,
-                    step_latency_ms,
-                })
-                .map_err(Self::register_error)
-            }
-            _ => Err(V2Error::new(
-                "bad_request",
-                format!("{role} link must be a link name or an inline object"),
-            )),
-        }
-    }
-
-    /// Resolve a v2 `worlds` field ([`DEFAULT_CLUSTER_WORLDS`] when
-    /// absent).
-    fn v2_worlds(v: &Json) -> std::result::Result<Vec<usize>, V2Error> {
-        match v.get("worlds") {
-            None | Some(Json::Null) => Ok(DEFAULT_CLUSTER_WORLDS.to_vec()),
-            Some(arr) => {
-                let items = arr.as_arr().ok_or_else(|| {
-                    V2Error::new("bad_request", "worlds must be an array of rank counts")
-                })?;
-                if items.is_empty() {
-                    return Err(V2Error::new("invalid_argument", "worlds must be non-empty"));
-                }
-                items
-                    .iter()
-                    .map(|it| {
-                        let w = it.as_usize().ok_or_else(|| {
-                            V2Error::new("bad_request", "worlds entries must be non-negative integers")
-                        })?;
-                        if !(1..=MAX_CLUSTER_WORLD).contains(&w) {
-                            return Err(V2Error::new(
-                                "invalid_argument",
-                                format!("world size {w} out of range 1..={MAX_CLUSTER_WORLD}"),
-                            ));
-                        }
-                        Ok(w)
-                    })
-                    .collect()
-            }
-        }
-    }
-
-    /// Optional overlap/bucket knobs → [`ClusterParams`].
-    fn v2_cluster_params(v: &Json) -> std::result::Result<ClusterParams, V2Error> {
-        let mut params = ClusterParams::default();
-        if let Some(x) = v.get("overlap") {
-            params.overlap = x
-                .as_f64()
-                .filter(|o| (0.0..=1.0).contains(o))
-                .ok_or_else(|| V2Error::new("invalid_argument", "overlap must be a number in 0..=1"))?;
-        }
-        if let Some(x) = v.get("bucket_mib") {
-            let mib = x
-                .as_f64()
-                .filter(|b| b.is_finite() && *b >= 0.0)
-                .ok_or_else(|| {
-                    V2Error::new("invalid_argument", "bucket_mib must be a non-negative number")
-                })?;
-            params.bucket_bytes = mib * 1024.0 * 1024.0;
-        }
-        Ok(params)
-    }
-
-    fn check_sweep(cells: usize) -> std::result::Result<(), V2Error> {
-        if cells > MAX_CLUSTER_SWEEP {
-            return Err(V2Error::new(
-                "invalid_argument",
-                format!("cluster sweep of {cells} configurations exceeds the {MAX_CLUSTER_SWEEP} limit"),
-            ));
-        }
-        Ok(())
-    }
-
-    fn register_error(e: RegisterError) -> V2Error {
-        match e {
-            RegisterError::Conflict(m) => V2Error::new("conflict", m),
-            RegisterError::Invalid(m) => V2Error::new("invalid_argument", m),
-        }
-    }
-
-    fn cluster_response(report: &crate::engine::ClusterReport) -> ClusterResponse {
-        ClusterResponse {
-            model: report.trace.model.clone(),
-            batch: report.trace.batch_size,
-            origin: report.trace.origin.id().to_string(),
-            dest: report.dest.id().to_string(),
-            compute_ms: report.compute_ms,
-            configs: report
-                .configs
-                .iter()
-                .map(|c| ClusterConfig {
-                    topology: c.topology.name().to_string(),
-                    world: c.world,
-                    iter_ms: c.pred.iter_ms,
-                    comm_ms: c.pred.comm_ms,
-                    exposed_ms: c.pred.exposed_ms,
-                    throughput: c.pred.throughput,
-                    efficiency: c.pred.efficiency,
-                    cost_normalized_throughput: c.cost_normalized_throughput,
-                })
-                .collect(),
-        }
-    }
-
-    fn cluster_rank_response(ranking: &crate::engine::ClusterRanking) -> ClusterRankResponse {
-        ClusterRankResponse {
-            model: ranking.trace.model.clone(),
-            batch: ranking.trace.batch_size,
-            origin: ranking.trace.origin.id().to_string(),
-            ranking: ranking
-                .entries
-                .iter()
-                .map(|e| ClusterRankedConfig {
-                    dest: e.dest.id().to_string(),
-                    topology: e.topology.name().to_string(),
-                    world: e.world,
-                    iter_ms: e.pred.iter_ms,
-                    throughput: e.pred.throughput,
-                    efficiency: e.pred.efficiency,
-                    cost_normalized_throughput: e.cost_normalized_throughput,
-                })
-                .collect(),
-        }
-    }
-
-    /// Resolve a v2 `dests` field: explicit names, or the full registry.
-    fn v2_dests(v: &Json) -> std::result::Result<Vec<Device>, V2Error> {
-        match v.get("dests") {
-            None | Some(Json::Null) => Ok(registry::all_devices()),
-            Some(arr) => {
-                let items = arr
-                    .as_arr()
-                    .ok_or_else(|| V2Error::new("bad_request", "dests must be an array of device names"))?;
-                items
-                    .iter()
-                    .map(|it| {
-                        let name = it
-                            .as_str()
-                            .ok_or_else(|| V2Error::new("bad_request", "dests entries must be strings"))?;
-                        parse_device(name, "destination")
-                            .map_err(|e| V2Error::new("unknown_device", e.to_string()))
-                    })
-                    .collect()
-            }
-        }
-    }
-
-    /// v1 handler errors carry no code; classify from the message.
-    fn classify_v1(e: &anyhow::Error) -> &'static str {
-        let msg = e.to_string();
-        if msg.contains("unknown model") {
-            "unknown_model"
-        } else if msg.contains("unknown origin device") || msg.contains("unknown destination device") {
-            "unknown_device"
-        } else {
-            "invalid_argument"
-        }
-    }
-
-    /// Decision-ready response fields from an engine prediction (the
-    /// uploaded-trace path, where there is no request echo to copy).
-    fn prediction_response(out: &crate::engine::EnginePrediction) -> PredictionResponse {
-        let pred = &out.pred;
-        let tput = pred.throughput();
-        PredictionResponse {
-            model: pred.model.clone(),
-            batch: pred.batch_size,
-            origin: pred.origin.id().to_string(),
-            dest: pred.dest.id().to_string(),
-            origin_iter_ms: out.trace.run_time_ms(),
-            iter_ms: pred.run_time_ms(),
-            throughput: tput,
-            cost_normalized_throughput: crate::cost::cost_normalized_throughput(pred.dest, tput),
-            mlp_time_fraction: pred.mlp_time_fraction(),
-            mlp_fallbacks: pred.mlp_fallbacks,
-        }
-    }
-
-    fn rank_response(ranking: &crate::engine::Ranking) -> RankResponse {
-        RankResponse {
-            model: ranking.trace.model.clone(),
-            batch: ranking.trace.batch_size,
-            origin: ranking.trace.origin.id().to_string(),
-            origin_iter_ms: ranking.trace.run_time_ms(),
-            ranking: ranking
-                .entries
-                .iter()
-                .map(|e| RankedDest {
-                    dest: e.dest.id().to_string(),
-                    iter_ms: e.pred.run_time_ms(),
-                    throughput: e.pred.throughput(),
-                    cost_normalized_throughput: e.cost_normalized_throughput,
-                    mlp_time_fraction: e.pred.mlp_time_fraction(),
-                    mlp_fallbacks: e.pred.mlp_fallbacks,
-                })
-                .collect(),
-        }
-    }
-}
-
-// ------------------------------------------------- bounded runtime --
-
-/// Environment variable bounding concurrent connections
-/// ([`DEFAULT_MAX_CONNS`] when unset).
-pub const MAX_CONNS_ENV: &str = "HABITAT_MAX_CONNS";
-
-/// Default concurrent-connection bound.
-pub const DEFAULT_MAX_CONNS: usize = 256;
-
-/// Default per-connection pipelining bound: how many request lines may
-/// be in flight (submitted but unanswered) on one connection before the
-/// reader stops pulling bytes off the socket — backpressure lands on
-/// that connection's TCP window, not on server memory.
-pub const DEFAULT_PIPELINE_DEPTH: usize = 64;
-
-/// Server-side write timeout per connection. A client that stops
-/// reading its replies (zero TCP window) errors that connection's
-/// writer out instead of pinning a runtime thread forever — without
-/// this, `ServerHandle::shutdown` could block joining a writer stuck
-/// in `write_all`.
-pub const CONN_WRITE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
-
-/// The wire form of the typed backpressure reply: sent per request when
-/// the compute queue is full, and once (followed by a close) to a
-/// connection that arrives while every connection slot is taken. Always
-/// the structured v2 error shape, whatever protocol generation the
-/// client speaks — `overloaded` is a server condition, not a request
-/// parse result.
-pub fn overloaded_json() -> String {
-    v2_error_json("overloaded", "server at capacity; retry later")
-}
-
-fn internal_error_json() -> String {
-    v2_error_json("internal", "request handler failed")
-}
-
-/// Serving-runtime knobs (see `docs/SERVICE.md`).
-#[derive(Debug, Clone)]
-pub struct ServeOptions {
-    /// Connection slots; further connects get an `overloaded` line and
-    /// a close. `Default` reads [`MAX_CONNS_ENV`].
-    pub max_conns: usize,
-    /// In-flight request lines per connection.
-    pub pipeline_depth: usize,
-}
-
-impl Default for ServeOptions {
-    fn default() -> Self {
-        ServeOptions {
-            max_conns: std::env::var(MAX_CONNS_ENV)
-                .ok()
-                .and_then(|v| v.parse::<usize>().ok())
-                .filter(|&n| n > 0)
-                .unwrap_or(DEFAULT_MAX_CONNS),
-            pipeline_depth: DEFAULT_PIPELINE_DEPTH,
-        }
-    }
-}
-
-/// State shared by the acceptor, the connection threads, and the
-/// [`ServerHandle`].
-struct ServerShared {
-    service: Arc<PredictionService>,
-    opts: ServeOptions,
-    shutdown: AtomicBool,
-    /// Occupied connection slots.
-    active: AtomicUsize,
-    /// Socket clones of live connections, for shutdown wake-up.
-    streams: Mutex<HashMap<u64, TcpStream>>,
-    /// Connection reader threads, joined on shutdown.
-    threads: Mutex<Vec<JoinHandle<()>>>,
-    next_conn: AtomicU64,
-}
-
-impl ServerShared {
-    fn spawn_connection(self: &Arc<Self>, stream: TcpStream) {
-        // Claim a slot optimistically; over the bound, tell the client
-        // why and close instead of letting connects pile up at the OS.
-        if self.active.fetch_add(1, Ordering::SeqCst) >= self.opts.max_conns {
-            self.active.fetch_sub(1, Ordering::SeqCst);
-            let mut stream = stream;
-            let _ = stream.write_all(overloaded_json().as_bytes());
-            let _ = stream.write_all(b"\n");
-            return; // drop closes the socket
-        }
-        // A stalled client must not pin a writer thread forever (see
-        // CONN_WRITE_TIMEOUT); reads stay unbounded — idle connections
-        // are legitimate.
-        let _ = stream.set_write_timeout(Some(CONN_WRITE_TIMEOUT));
-        let id = self.next_conn.fetch_add(1, Ordering::Relaxed);
-        if let Ok(clone) = stream.try_clone() {
-            self.streams.lock().unwrap().insert(id, clone);
-        }
-        // Reap finished connection threads so a long-running server's
-        // handle list stays proportional to *live* connections, not to
-        // every connection ever accepted.
-        self.threads.lock().unwrap().retain(|h| !h.is_finished());
-        let shared = Arc::clone(self);
-        let spawned = std::thread::Builder::new()
-            .name(format!("habitat-conn-{id}"))
-            .spawn(move || {
-                let peer = stream.peer_addr().map(|p| p.to_string()).unwrap_or_default();
-                if let Err(e) = run_connection(stream, &shared) {
-                    if !shared.shutdown.load(Ordering::SeqCst) {
-                        eprintln!("habitat: connection {peer}: {e}");
-                    }
-                }
-                shared.streams.lock().unwrap().remove(&id);
-                shared.active.fetch_sub(1, Ordering::SeqCst);
-            });
-        match spawned {
-            Ok(handle) => self.threads.lock().unwrap().push(handle),
-            Err(_) => {
-                self.streams.lock().unwrap().remove(&id);
-                self.active.fetch_sub(1, Ordering::SeqCst);
-            }
-        }
-    }
-}
-
-/// A running prediction server. Dropping the handle shuts the runtime
-/// down; [`ServerHandle::join`] blocks on the acceptor instead (the
-/// `habitat serve` foreground mode).
-pub struct ServerHandle {
-    addr: SocketAddr,
-    shared: Arc<ServerShared>,
-    acceptor: Option<JoinHandle<()>>,
-}
-
-impl ServerHandle {
-    /// The bound address (with the OS-assigned port when `:0` was
-    /// requested).
-    pub fn local_addr(&self) -> SocketAddr {
-        self.addr
-    }
-
-    pub fn service(&self) -> &Arc<PredictionService> {
-        &self.shared.service
-    }
-
-    /// Occupied connection slots right now.
-    pub fn active_connections(&self) -> usize {
-        self.shared.active.load(Ordering::SeqCst)
-    }
-
-    /// Stop accepting, unblock every connection reader, drain in-flight
-    /// replies, and join all runtime threads. Idempotent; also invoked
-    /// by `Drop`, so tests can simply let the handle fall out of scope.
-    pub fn shutdown(mut self) {
-        self.stop();
-    }
-
-    /// Block on the acceptor thread (runs until the process exits or
-    /// another owner flips the shutdown flag).
-    pub fn join(mut self) -> Result<()> {
-        if let Some(acceptor) = self.acceptor.take() {
-            acceptor
-                .join()
-                .map_err(|_| anyhow::anyhow!("acceptor thread panicked"))?;
-        }
-        Ok(())
-    }
-
-    fn stop(&mut self) {
-        if self.shared.shutdown.swap(true, Ordering::SeqCst) {
-            return;
-        }
-        // Wake the acceptor out of `accept` with one throwaway connect.
-        let mut wake = self.addr;
-        if wake.ip().is_unspecified() {
-            wake.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST));
-        }
-        let _ = TcpStream::connect_timeout(&wake, std::time::Duration::from_millis(250));
-        if let Some(acceptor) = self.acceptor.take() {
-            let _ = acceptor.join();
-        }
-        // Half-close every live connection's read side: readers see EOF
-        // and wind down, while writers still flush in-flight replies —
-        // a drain, not an abort.
-        for stream in self.shared.streams.lock().unwrap().values() {
-            let _ = stream.shutdown(std::net::Shutdown::Read);
-        }
-        let threads: Vec<JoinHandle<()>> = self.shared.threads.lock().unwrap().drain(..).collect();
-        for handle in threads {
-            let _ = handle.join();
-        }
-    }
-}
-
-impl Drop for ServerHandle {
-    fn drop(&mut self) {
-        self.stop();
-    }
-}
-
-/// Start the bounded serving runtime on `addr` around an existing
-/// (shared) service. Returns once the listener is bound; the acceptor
-/// and all connection handling run on background threads owned by the
-/// returned [`ServerHandle`].
-pub fn start(
-    addr: &str,
-    service: Arc<PredictionService>,
-    opts: ServeOptions,
-) -> Result<ServerHandle> {
-    let listener = TcpListener::bind(addr)?;
-    let local = listener.local_addr()?;
-    let shared = Arc::new(ServerShared {
-        service,
-        opts,
-        shutdown: AtomicBool::new(false),
-        active: AtomicUsize::new(0),
-        streams: Mutex::new(HashMap::new()),
-        threads: Mutex::new(Vec::new()),
-        next_conn: AtomicU64::new(0),
-    });
-    let for_acceptor = Arc::clone(&shared);
-    let acceptor = std::thread::Builder::new()
-        .name("habitat-accept".to_string())
-        .spawn(move || {
-            for stream in listener.incoming() {
-                if for_acceptor.shutdown.load(Ordering::SeqCst) {
-                    break;
-                }
-                let stream = match stream {
-                    Ok(s) => s,
-                    Err(e) => {
-                        // A persistent accept failure (e.g. fd
-                        // exhaustion) must not become a silent
-                        // busy-loop: say so and back off.
-                        eprintln!("habitat: accept error: {e}");
-                        std::thread::sleep(std::time::Duration::from_millis(100));
-                        continue;
-                    }
-                };
-                for_acceptor.spawn_connection(stream);
-            }
-        })?;
-    Ok(ServerHandle {
-        addr: local,
-        shared,
-        acceptor: Some(acceptor),
-    })
-}
-
-/// One pipelined connection: the reader submits each line as a job on
-/// the engine's shared compute pool and a writer thread emits replies
-/// strictly in request order. A full compute queue becomes a typed
-/// `overloaded` reply for that line (the stream stays in sync); a full
-/// pipeline window stops reading the socket (TCP backpressure).
-fn run_connection(stream: TcpStream, shared: &Arc<ServerShared>) -> Result<()> {
-    let mut write = stream.try_clone()?;
-    // The in-order reply rail: the reader enqueues one slot (a oneshot
-    // receiver) per request; the writer drains slots in order, waiting
-    // on each request's reply before touching the next.
-    let (slot_tx, slot_rx) =
-        mpsc::sync_channel::<mpsc::Receiver<String>>(shared.opts.pipeline_depth.max(1));
-    let writer = std::thread::Builder::new()
-        .name("habitat-conn-writer".to_string())
-        .spawn(move || {
-            while let Ok(slot) = slot_rx.recv() {
-                // A dropped slot without a reply means the handler was
-                // lost (e.g. pool teardown mid-request): answer with a
-                // typed internal error so the stream never desyncs.
-                let reply = slot.recv().unwrap_or_else(|_| internal_error_json());
-                if write.write_all(reply.as_bytes()).is_err() || write.write_all(b"\n").is_err() {
-                    break;
-                }
-            }
-        })?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let (reply_tx, reply_rx) = mpsc::channel::<String>();
-        if slot_tx.send(reply_rx).is_err() {
-            break; // writer gone: the socket is dead
-        }
-        let service = Arc::clone(&shared.service);
-        let tx = reply_tx.clone();
-        let submitted = shared.service.engine().pool().try_execute(move || {
-            let reply =
-                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    service.handle_line(&line)
-                }))
-                .unwrap_or_else(|_| internal_error_json());
-            let _ = tx.send(reply);
-        });
-        if submitted.is_err() {
-            // Compute queue full: typed per-request backpressure through
-            // the same reply slot, preserving response order.
-            let _ = reply_tx.send(overloaded_json());
-        }
-    }
-    drop(slot_tx);
-    let _ = writer.join();
-    Ok(())
-}
-
-/// Build the service for `serve`/`start`: the paper's full hybrid
-/// predictor, degrading to wave-scaling-only predictions when MLP
-/// artifacts are missing (like `habitat compare`) rather than refusing
-/// to start.
-pub fn service_from_artifacts(artifacts: &str) -> PredictionService {
-    match PredictionService::new(artifacts) {
-        Ok(s) => s,
-        Err(e) => {
-            eprintln!(
-                "habitat: MLP artifacts unavailable ({e}); serving wave-scaling-only predictions"
-            );
-            PredictionService::with_predictor(HybridPredictor::wave_only())
-        }
-    }
-}
-
-/// Serve newline-delimited JSON requests over TCP on the bounded
-/// runtime (the `habitat serve` subcommand). Blocks forever.
-pub fn serve(addr: &str, artifacts: &str) -> Result<()> {
-    serve_with(addr, artifacts, ServeOptions::default())
-}
-
-/// Environment variable naming the persistent plan-store directory for
-/// `habitat serve` (also settable via the CLI's `--store` flag). Only
-/// the serving entry point reads it — library engines never attach a
-/// store implicitly.
-pub const STORE_ENV: &str = "HABITAT_STORE";
-
-/// [`serve`] with explicit runtime bounds.
-pub fn serve_with(addr: &str, artifacts: &str, opts: ServeOptions) -> Result<()> {
-    let mut service = service_from_artifacts(artifacts);
-    if let Ok(dir) = std::env::var(STORE_ENV) {
-        if !dir.is_empty() {
-            // Persistence is an optimization: a store that cannot be
-            // opened degrades to a cold boot, never a refused one.
-            match service.attach_store(&dir) {
-                Ok(()) => println!(
-                    "habitat: plan store at {dir} ({} plans warm-restored)",
-                    service.engine().stats().warm_restores
-                ),
-                Err(e) => eprintln!("habitat: plan store at {dir} unavailable ({e}); serving without persistence"),
-            }
-        }
-    }
-    let service = Arc::new(service);
-    let max_conns = opts.max_conns;
-    let handle = start(addr, service, opts)?;
-    {
-        let engine = handle.service().engine();
-        println!(
-            "habitat: serving predictions on {addr} ({} workers, queue depth {}, max {} connections)",
-            engine.workers(),
-            engine.queue_depth(),
-            max_conns
-        );
-    }
-    handle.join()
-}
-
-/// Handle one connection until EOF.
-pub fn handle_connection(stream: TcpStream, service: &PredictionService) -> Result<()> {
-    let mut write = stream.try_clone()?;
-    let read = BufReader::new(stream);
-    for line in read.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let reply = service.handle_line(&line);
-        write.write_all(reply.as_bytes())?;
-        write.write_all(b"\n")?;
-    }
-    Ok(())
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::device::ALL_DEVICES;
-
-    fn wave_service() -> PredictionService {
-        PredictionService::with_predictor(HybridPredictor::wave_only())
-    }
-
-    fn req(model: &str, batch: usize, origin: &str, dest: &str) -> PredictionRequest {
-        PredictionRequest {
-            model: model.into(),
-            batch,
-            origin: origin.into(),
-            dest: dest.into(),
-            precision: None,
-        }
-    }
-
-    fn rank_req(model: &str, batch: usize, origin: &str) -> RankRequest {
-        RankRequest {
-            model: model.into(),
-            batch,
-            origin: origin.into(),
-            precision: None,
-            dests: None,
-        }
-    }
-
-    #[test]
-    fn handles_basic_request() {
-        let s = wave_service();
-        let r = s.handle(&req("mlp", 32, "t4", "v100")).unwrap();
-        assert!(r.iter_ms > 0.0);
-        assert!(r.throughput > 0.0);
-        assert!(r.cost_normalized_throughput.is_some());
-        assert_eq!(r.dest, "V100");
-    }
-
-    #[test]
-    fn rejects_unknown_inputs() {
-        let s = wave_service();
-        assert!(s.handle(&req("nope", 32, "t4", "v100")).is_err());
-        assert!(s.handle(&req("mlp", 32, "a100", "v100")).is_err());
-        assert!(s.handle(&req("mlp", 0, "t4", "v100")).is_err());
-        let mut r = req("mlp", 8, "t4", "v100");
-        r.precision = Some("fp64".into());
-        assert!(s.handle(&r).is_err());
-    }
-
-    #[test]
-    fn request_response_json_roundtrip() {
-        let r = req("gnmt", 64, "p4000", "t4");
-        let parsed = PredictionRequest::from_json(&r.to_json()).unwrap();
-        assert_eq!(parsed.model, "gnmt");
-        assert_eq!(parsed.batch, 64);
-
-        let resp = wave_service().handle(&r).unwrap();
-        let parsed = PredictionResponse::from_json(&resp.to_json()).unwrap();
-        assert!((parsed.iter_ms - resp.iter_ms).abs() < 1e-9);
-        assert_eq!(
-            parsed.cost_normalized_throughput.is_some(),
-            resp.cost_normalized_throughput.is_some()
-        );
-    }
-
-    #[test]
-    fn rank_request_json_roundtrip() {
-        let mut r = rank_req("mlp", 16, "t4");
-        r.dests = Some(vec!["v100".into(), "p100".into()]);
-        r.precision = Some("amp".into());
-        let line = r.to_json();
-        let parsed = match Request::from_json(&line).unwrap() {
-            Request::Rank(rr) => rr,
-            other => panic!("expected rank request, got {other:?}"),
-        };
-        assert_eq!(parsed.model, "mlp");
-        assert_eq!(parsed.batch, 16);
-        assert_eq!(parsed.precision.as_deref(), Some("amp"));
-        assert_eq!(parsed.dests.as_deref().unwrap().len(), 2);
-    }
-
-    #[test]
-    fn predict_line_still_dispatches_as_predict() {
-        let line = req("mlp", 8, "t4", "v100").to_json();
-        assert!(matches!(Request::from_json(&line).unwrap(), Request::Predict(_)));
-    }
-
-    #[test]
-    fn rank_response_json_roundtrip() {
-        let s = wave_service();
-        let resp = s.handle_rank(&rank_req("mlp", 32, "t4")).unwrap();
-        let parsed = RankResponse::from_json(&resp.to_json()).unwrap();
-        assert_eq!(parsed.ranking.len(), resp.ranking.len());
-        for (a, b) in parsed.ranking.iter().zip(&resp.ranking) {
-            assert_eq!(a.dest, b.dest);
-            assert!((a.iter_ms - b.iter_ms).abs() < 1e-9);
-            assert_eq!(
-                a.cost_normalized_throughput.is_some(),
-                b.cost_normalized_throughput.is_some()
-            );
-        }
-    }
-
-    #[test]
-    fn rank_matches_individual_requests_with_one_tracking_pass() {
-        // A default rank equals N individual requests, with exactly one
-        // run of the tracking pipeline. (The default destination set is
-        // the whole registry — at least the six built-ins, plus any
-        // devices other concurrently running tests have registered.)
-        let s = wave_service();
-        let ranking = s.handle_rank(&rank_req("mlp", 16, "t4")).unwrap();
-        assert!(ranking.ranking.len() >= ALL_DEVICES.len());
-        for d in ALL_DEVICES {
-            assert!(
-                ranking.ranking.iter().any(|r| r.dest == d.id()),
-                "built-in {d} missing from the default rank"
-            );
-        }
-        let stats = s.engine().stats();
-        assert_eq!(stats.trace_misses, 1, "rank must track exactly once");
-        assert_eq!(stats.trace_hits, 0);
-
-        for entry in &ranking.ranking {
-            let resp = s.handle(&req("mlp", 16, "t4", &entry.dest)).unwrap();
-            assert!(
-                (resp.iter_ms - entry.iter_ms).abs() < 1e-9,
-                "{}: rank {} vs individual {}",
-                entry.dest,
-                entry.iter_ms,
-                resp.iter_ms
-            );
-        }
-        let stats = s.engine().stats();
-        assert_eq!(stats.trace_misses, 1, "individual requests must reuse the trace");
-        assert_eq!(stats.trace_hits as usize, ranking.ranking.len());
-    }
-
-    #[test]
-    fn rank_is_sorted_by_cost_normalized_throughput() {
-        let s = wave_service();
-        let resp = s.handle_rank(&rank_req("mlp", 32, "p4000")).unwrap();
-        let priced: Vec<f64> = resp
-            .ranking
-            .iter()
-            .filter_map(|r| r.cost_normalized_throughput)
-            .collect();
-        assert!(!priced.is_empty());
-        for w in priced.windows(2) {
-            assert!(w[0] >= w[1], "priced devices must be in descending order");
-        }
-        // Priced devices all come before unpriced ones.
-        let first_unpriced = resp
-            .ranking
-            .iter()
-            .position(|r| r.cost_normalized_throughput.is_none())
-            .unwrap_or(resp.ranking.len());
-        assert!(resp.ranking[first_unpriced..]
-            .iter()
-            .all(|r| r.cost_normalized_throughput.is_none()));
-    }
-
-    #[test]
-    fn rank_with_explicit_dests_and_errors() {
-        let s = wave_service();
-        let mut r = rank_req("mlp", 16, "t4");
-        r.dests = Some(vec!["v100".into(), "p100".into()]);
-        let resp = s.handle_rank(&r).unwrap();
-        assert_eq!(resp.ranking.len(), 2);
-
-        let mut bad = rank_req("mlp", 16, "t4");
-        bad.dests = Some(vec!["a100".into()]);
-        assert!(s.handle_rank(&bad).is_err());
-        assert!(s.handle_rank(&rank_req("nope", 16, "t4")).is_err());
-        assert!(s.handle_rank(&rank_req("mlp", 0, "t4")).is_err());
-    }
-
-    #[test]
-    fn handle_line_dispatches_and_reports_errors() {
-        let s = wave_service();
-        let ok = s.handle_line("{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}");
-        assert!(PredictionResponse::from_json(&ok).is_ok());
-        let rank = s.handle_line("{\"rank\":true,\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\"}");
-        assert!(RankResponse::from_json(&rank).is_ok());
-        let bad = s.handle_line("not json");
-        assert!(bad.contains("bad request"));
-        let unknown = s.handle_line("{\"model\":\"mlp\",\"batch\":8,\"origin\":\"a100\",\"dest\":\"v100\"}");
-        assert!(unknown.contains("error"));
-    }
-
-    #[test]
-    fn stats_request_reflects_engine_counters() {
-        let s = wave_service();
-        let cold = s.handle_stats();
-        assert_eq!(cold.trace_hits, 0);
-        assert_eq!(cold.trace_misses, 0);
-        assert!(cold.workers >= 1);
-
-        s.handle(&req("mlp", 8, "t4", "v100")).unwrap();
-        s.handle(&req("mlp", 8, "t4", "p100")).unwrap();
-        let warm = s.handle_stats();
-        assert_eq!(warm.trace_misses, 1);
-        assert_eq!(warm.trace_hits, 1);
-        assert_eq!(warm.trace_entries, 1);
-        assert_eq!(warm.plan_builds, 1);
-    }
-
-    #[test]
-    fn stats_line_dispatches_and_roundtrips() {
-        let s = wave_service();
-        s.handle(&req("mlp", 8, "t4", "v100")).unwrap();
-        let line = stats_request_json();
-        assert!(matches!(Request::from_json(&line).unwrap(), Request::Stats));
-        let reply = s.handle_line(&line);
-        let parsed = StatsResponse::from_json(&reply).unwrap();
-        assert_eq!(parsed.trace_misses, 1);
-        assert_eq!(parsed.workers, s.engine().workers());
-    }
-
-    #[test]
-    fn trace_cache_hits() {
-        let s = wave_service();
-        let a = s.trace_for("mlp", 16, Device::T4).unwrap();
-        let b = s.trace_for("mlp", 16, Device::T4).unwrap();
-        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
-    }
-
-    #[test]
-    fn amp_prediction_not_slower_than_fp32() {
-        let s = wave_service();
-        let fp32 = s.handle(&req("mlp", 32, "p4000", "2080ti")).unwrap();
-        let mut amp_req = req("mlp", 32, "p4000", "2080ti");
-        amp_req.precision = Some("amp".into());
-        let amp = s.handle(&amp_req).unwrap();
-        assert!(amp.iter_ms <= fp32.iter_ms);
-    }
-
-    #[test]
-    fn v2_predict_payload_matches_v1_bit_for_bit() {
-        let s = wave_service();
-        let v1_line = "{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}";
-        let v1 = s.handle_line(v1_line);
-        let v2 = s.handle_line(&v2_predict_model_request("mlp", 8, "t4", "v100", None));
-        let v1_parsed = json::parse(&v1).unwrap();
-        let v2_parsed = json::parse(&v2).unwrap();
-        assert_eq!(v2_parsed.get("v"), Some(&Json::Num(2.0)));
-        assert_eq!(v2_parsed.req_str("op").unwrap(), "predict");
-        // Every v1 field appears identically in the v2 payload.
-        if let Json::Obj(m) = &v1_parsed {
-            for (k, val) in m {
-                assert_eq!(v2_parsed.get(k), Some(val), "field {k}");
-            }
-        } else {
-            panic!("v1 reply is not an object");
-        }
-    }
-
-    #[test]
-    fn v2_envelope_dispatches_rank_and_stats() {
-        let s = wave_service();
-        let rank = s.handle_line(
-            "{\"v\":2,\"op\":\"rank\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dests\":[\"v100\",\"t4\"]}",
-        );
-        let parsed = json::parse(&rank).unwrap();
-        assert_eq!(parsed.req_str("op").unwrap(), "rank");
-        assert_eq!(parsed.get("ranking").and_then(Json::as_arr).unwrap().len(), 2);
-
-        let stats = s.handle_line(&v2_stats_request());
-        let parsed = json::parse(&stats).unwrap();
-        assert_eq!(parsed.req_str("op").unwrap(), "stats");
-        assert_eq!(parsed.req_usize("trace_misses").unwrap(), 1);
-        assert_eq!(parsed.req_usize("trace_uploads").unwrap(), 0);
-        assert!(parsed.req_usize("devices").unwrap() >= ALL_DEVICES.len());
-    }
-
-    #[test]
-    fn v2_errors_are_structured() {
-        let s = wave_service();
-        let check = |line: &str, code: &str| {
-            let reply = s.handle_line(line);
-            let v = json::parse(&reply).unwrap();
-            assert_eq!(
-                v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
-                Some(code),
-                "line {line} → {reply}"
-            );
-            assert!(v.get("error").and_then(|e| e.get("message")).is_some());
-        };
-        check("{\"v\":2}", "bad_request");
-        check("{\"v\":2,\"op\":\"frobnicate\"}", "unsupported_op");
-        check(
-            "{\"v\":2,\"op\":\"predict\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"a100\"}",
-            "unknown_device",
-        );
-        check(
-            "{\"v\":2,\"op\":\"predict\",\"model\":\"nope\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}",
-            "unknown_model",
-        );
-        check(
-            "{\"v\":2,\"op\":\"predict\",\"trace_id\":\"tr-0000000000000000\",\"dest\":\"v100\"}",
-            "unknown_trace",
-        );
-        check(
-            "{\"v\":2,\"op\":\"predict\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"precision\":\"fp64\"}",
-            "invalid_argument",
-        );
-        check("{\"v\":3,\"op\":\"predict\"}", "unsupported_version");
-        // v1 malformed lines keep the v1 error shape.
-        assert!(s.handle_line("not json").contains("bad request"));
-    }
-
-    #[test]
-    fn v2_register_device_becomes_rankable_with_correct_ordering() {
-        let s = wave_service();
-        // Absurdly cost-efficient so its rank position is deterministic:
-        // V100-class hardware at a tenth of the T4's price.
-        let line = s.handle_line(
-            "{\"v\":2,\"op\":\"register_device\",\"name\":\"sim-wire9\",\"sms\":80,\"clock_mhz\":1530,\"mem_bw_gbps\":900,\"fp32_tflops\":15.7,\"tensor_cores\":true,\"usd_per_hr\":0.03}",
-        );
-        let ack = RegisteredDevice::from_json(&line).unwrap();
-        assert_eq!(ack.device, "sim-wire9");
-        assert!(ack.id >= ALL_DEVICES.len());
-        assert!(ack.devices > ALL_DEVICES.len());
-
-        // Idempotent replay: same spec, same id, no conflict.
-        let replay = RegisteredDevice::from_json(&s.handle_line(
-            "{\"v\":2,\"op\":\"register_device\",\"name\":\"sim-wire9\",\"sms\":80,\"clock_mhz\":1530,\"mem_bw_gbps\":900,\"fp32_tflops\":15.7,\"tensor_cores\":true,\"usd_per_hr\":0.03}",
-        ))
-        .unwrap();
-        assert_eq!(replay.id, ack.id);
-
-        // Different spec under the same name → conflict.
-        let clash = s.handle_line(
-            "{\"v\":2,\"op\":\"register_device\",\"name\":\"sim-wire9\",\"sms\":81,\"clock_mhz\":1530,\"mem_bw_gbps\":900,\"fp32_tflops\":15.7,\"tensor_cores\":true}",
-        );
-        let v = json::parse(&clash).unwrap();
-        assert_eq!(
-            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
-            Some("conflict")
-        );
-
-        // The new device appears in a default (v1!) rank, and — being a
-        // V100 at 1/12 the T4's price — tops the cost-normalized order.
-        let ranking = s.handle_rank(&rank_req("mlp", 16, "t4")).unwrap();
-        let pos = ranking.ranking.iter().position(|r| r.dest == "sim-wire9");
-        assert_eq!(pos, Some(0), "cheapest-per-throughput device must rank first");
-        let entry = &ranking.ranking[pos.unwrap()];
-        let expected_cnt = entry.throughput / 0.03;
-        assert!(
-            (entry.cost_normalized_throughput.unwrap() - expected_cnt).abs() < 1e-6,
-            "cost normalization must use the registered price"
-        );
-
-        // …and works as an explicit v1 predict destination.
-        let resp = s.handle(&req("mlp", 16, "t4", "sim-wire9")).unwrap();
-        assert!(resp.iter_ms > 0.0);
-        assert_eq!(resp.dest, "sim-wire9");
-    }
-
-    #[test]
-    fn v2_submit_trace_then_predict_matches_in_process_evaluation() {
-        let s = wave_service();
-        let graph = crate::models::by_name("mlp", 12).unwrap();
-        let trace = crate::tracker::OperationTracker::new(Device::P4000).track(&graph);
-
-        let reply = s.handle_line(&v2_submit_trace_request(&trace));
-        let v = json::parse(&reply).unwrap();
-        v2_check_error(&v).unwrap();
-        let trace_id = v.req_str("trace_id").unwrap().to_string();
-        assert!(trace_id.starts_with("tr-"));
-        assert_eq!(v.req_usize("ops").unwrap(), trace.ops.len());
-        assert_eq!(v.req_str("origin").unwrap(), "P4000");
-
-        // Predict by id over the wire ≡ analyze+evaluate in-process.
-        let reply = s.handle_line(&v2_predict_trace_request(&trace_id, "v100", None));
-        let v = json::parse(&reply).unwrap();
-        v2_check_error(&v).unwrap();
-        let wire_ms = v.get("iter_ms").and_then(Json::as_f64).unwrap();
-        let plan = s.engine().analyze(&trace);
-        let direct = s.engine().evaluate(&plan, Device::V100, Precision::Fp32);
-        assert_eq!(
-            wire_ms.to_bits(),
-            direct.run_time_ms().to_bits(),
-            "wire {wire_ms} vs in-process {}",
-            direct.run_time_ms()
-        );
-
-        // Rank by id: default dests cover at least the built-ins.
-        let reply = s.handle_line(&v2_rank_trace_request(&trace_id, None, Some("amp")));
-        let v = json::parse(&reply).unwrap();
-        v2_check_error(&v).unwrap();
-        let ranking = v.get("ranking").and_then(Json::as_arr).unwrap();
-        assert!(ranking.len() >= ALL_DEVICES.len());
-        assert_eq!(v.req_str("model").unwrap(), "mlp");
-
-        // Submitting garbage is a structured error.
-        let bad = s.handle_line("{\"v\":2,\"op\":\"submit_trace\",\"trace\":{\"format\":\"nope\"}}");
-        let v = json::parse(&bad).unwrap();
-        assert_eq!(
-            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
-            Some("invalid_argument")
-        );
-    }
-
-    #[test]
-    fn serve_options_defaults_are_bounded() {
-        let opts = ServeOptions::default();
-        assert!(opts.max_conns >= 1);
-        assert!(opts.pipeline_depth >= 1);
-        let line = overloaded_json();
-        let v = json::parse(&line).unwrap();
-        assert_eq!(
-            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
-            Some("overloaded")
-        );
-        assert_eq!(v.get("v"), Some(&Json::Num(2.0)));
-    }
-
-    #[test]
-    fn bounded_runtime_serves_pipelined_lines_in_order() {
-        let handle = start(
-            "127.0.0.1:0",
-            Arc::new(wave_service()),
-            ServeOptions::default(),
-        )
-        .unwrap();
-        let addr = handle.local_addr();
-        let stream = TcpStream::connect(addr).unwrap();
-        let mut write = stream.try_clone().unwrap();
-        write
-            .write_all(
-                b"{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}\n\
-                  {\"rank\":true,\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\"}\n\
-                  {\"stats\":true}\n",
-            )
-            .unwrap();
-        // Half-close the write side so the server sees EOF after the
-        // pipelined burst (dropping a clone alone does not, because the
-        // read half still holds the socket open).
-        stream.shutdown(std::net::Shutdown::Write).unwrap();
-        let replies: Vec<String> = BufReader::new(stream).lines().map(|l| l.unwrap()).collect();
-        assert_eq!(replies.len(), 3);
-        assert_eq!(PredictionResponse::from_json(&replies[0]).unwrap().dest, "V100");
-        assert!(RankResponse::from_json(&replies[1]).unwrap().ranking.len() >= ALL_DEVICES.len());
-        assert!(StatsResponse::from_json(&replies[2]).is_ok());
-        handle.shutdown();
-        // The listener is gone after shutdown — nothing leaked.
-        assert!(TcpStream::connect(addr).is_err(), "listener must be closed");
-    }
-
-    #[test]
-    fn connection_slots_are_enforced_with_a_typed_reply() {
-        let handle = start(
-            "127.0.0.1:0",
-            Arc::new(wave_service()),
-            ServeOptions {
-                max_conns: 1,
-                ..ServeOptions::default()
-            },
-        )
-        .unwrap();
-        let addr = handle.local_addr();
-
-        // Fill the single slot and prove it is live with a roundtrip
-        // (which also guarantees the acceptor registered it).
-        let first = TcpStream::connect(addr).unwrap();
-        let mut w1 = first.try_clone().unwrap();
-        w1.write_all(b"{\"stats\":true}\n").unwrap();
-        let mut r1 = BufReader::new(first.try_clone().unwrap());
-        let mut line = String::new();
-        r1.read_line(&mut line).unwrap();
-        assert!(StatsResponse::from_json(line.trim()).is_ok());
-
-        // The second connection gets one typed overloaded line, then EOF.
-        let second = TcpStream::connect(addr).unwrap();
-        let mut lines = BufReader::new(second).lines();
-        let reply = lines.next().unwrap().unwrap();
-        let v = json::parse(&reply).unwrap();
-        assert_eq!(
-            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
-            Some("overloaded"),
-            "{reply}"
-        );
-        assert!(lines.next().is_none(), "rejected connection must be closed");
-
-        // Freeing the slot readmits clients (every clone of the first
-        // connection must drop for the server to see EOF).
-        drop(w1);
-        drop(r1);
-        drop(first);
-        for _ in 0..100 {
-            let probe = TcpStream::connect(addr).unwrap();
-            let mut w = probe.try_clone().unwrap();
-            w.write_all(b"{\"stats\":true}\n").unwrap();
-            let mut line = String::new();
-            BufReader::new(probe).read_line(&mut line).unwrap();
-            if StatsResponse::from_json(line.trim()).is_ok() {
-                return; // slot reclaimed
-            }
-            std::thread::sleep(std::time::Duration::from_millis(10));
-        }
-        panic!("slot was never reclaimed after the first client left");
-    }
-
-    #[test]
-    fn full_compute_queue_answers_overloaded_per_request() {
-        let engine = PredictionEngine::wave_only()
-            .with_workers(1)
-            .with_queue_depth(1);
-        let handle = start(
-            "127.0.0.1:0",
-            Arc::new(PredictionService::with_engine(engine)),
-            ServeOptions::default(),
-        )
-        .unwrap();
-        let addr = handle.local_addr();
-        let pool_gate = {
-            // Wedge the single worker and fill the single queue slot so
-            // the next request job cannot be accepted. Wait for the
-            // wedge job to *start* before filling: otherwise the fillers
-            // could land while the wedge is still queued, and the queue
-            // would drain again as the worker picks it up.
-            let engine = handle.service().engine();
-            let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
-            let (started_tx, started_rx) = std::sync::mpsc::channel::<()>();
-            engine.pool().execute(move || {
-                started_tx.send(()).unwrap();
-                gate_rx.recv().unwrap();
-            });
-            started_rx.recv().unwrap();
-            while engine.pool().try_execute(|| {}).is_ok() {}
-            gate_tx
-        };
-
-        let stream = TcpStream::connect(addr).unwrap();
-        let mut write = stream.try_clone().unwrap();
-        write
-            .write_all(b"{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}\n")
-            .unwrap();
-        let mut reader = BufReader::new(stream.try_clone().unwrap());
-        let mut line = String::new();
-        reader.read_line(&mut line).unwrap();
-        let v = json::parse(line.trim()).unwrap();
-        assert_eq!(
-            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
-            Some("overloaded"),
-            "wedged pool must answer with typed backpressure: {line}"
-        );
-
-        // Release the pool; the connection is still in sync and serves.
-        drop(pool_gate);
-        for _ in 0..100 {
-            write
-                .write_all(b"{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}\n")
-                .unwrap();
-            let mut line = String::new();
-            reader.read_line(&mut line).unwrap();
-            if PredictionResponse::from_json(line.trim()).is_ok() {
-                return;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(10));
-        }
-        panic!("service never recovered after the queue drained");
-    }
-
-    #[test]
-    fn tcp_roundtrip() {
-        let service = Arc::new(wave_service());
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let srv = service.clone();
-        std::thread::spawn(move || {
-            let (stream, _) = listener.accept().unwrap();
-            handle_connection(stream, &srv).unwrap();
-        });
-
-        let stream = TcpStream::connect(addr).unwrap();
-        let mut write = stream.try_clone().unwrap();
-        write
-            .write_all(b"{\"model\":\"mlp\",\"batch\":16,\"origin\":\"t4\",\"dest\":\"p100\"}\nnot json\n")
-            .unwrap();
-        drop(write);
-        let mut lines = BufReader::new(stream).lines();
-        let ok = PredictionResponse::from_json(&lines.next().unwrap().unwrap()).unwrap();
-        assert!(ok.iter_ms > 0.0);
-        let err_line = lines.next().unwrap().unwrap();
-        assert!(err_line.contains("bad request"));
-    }
-
-    #[test]
-    fn v2_predict_cluster_world_one_matches_v2_predict() {
-        let s = wave_service();
-        let topologies = vec!["dgx".to_string()];
-        let reply = s.handle_line(&v2_predict_cluster_request(
-            "mlp",
-            8,
-            "t4",
-            "v100",
-            Some(&topologies),
-            Some(&[1, 4]),
-            None,
-        ));
-        let resp = ClusterResponse::from_json(&reply).unwrap();
-        assert_eq!(resp.model, "mlp");
-        assert_eq!(resp.dest, "V100");
-        assert_eq!(resp.configs.len(), 2);
-        for c in &resp.configs {
-            assert_eq!(c.topology, "dgx");
-            assert!(c.efficiency > 0.0 && c.efficiency <= 1.0 + 1e-9);
-            assert!(c.exposed_ms >= 0.0);
-        }
-        // The world=1 cell is the single-GPU prediction, bit-identical.
-        let single = s.handle_line(&v2_predict_model_request("mlp", 8, "t4", "v100", None));
-        let single_ms = json::parse(&single).unwrap().get("iter_ms").and_then(Json::as_f64).unwrap();
-        let w1 = resp.configs.iter().find(|c| c.world == 1).unwrap();
-        assert_eq!(w1.iter_ms.to_bits(), single_ms.to_bits());
-        assert_eq!(w1.comm_ms, 0.0);
-    }
-
-    #[test]
-    fn v2_predict_cluster_defaults_cover_every_topology_and_world() {
-        let s = wave_service();
-        let reply = s.handle_line(&v2_predict_cluster_request("mlp", 8, "t4", "v100", None, None, None));
-        let resp = ClusterResponse::from_json(&reply).unwrap();
-        // At least the dgx/cloud seeds × the default world sweep (other
-        // concurrently running tests may have registered more
-        // topologies).
-        assert!(resp.configs.len() >= 2 * DEFAULT_CLUSTER_WORLDS.len());
-        for t in ["dgx", "cloud"] {
-            for &w in &DEFAULT_CLUSTER_WORLDS {
-                assert!(
-                    resp.configs.iter().any(|c| c.topology == t && c.world == w),
-                    "missing cell ({t}, {w})"
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn v2_rank_cluster_is_sorted_and_complete() {
-        let s = wave_service();
-        let dests = vec!["v100".to_string(), "t4".to_string()];
-        let topologies = vec!["dgx".to_string(), "cloud".to_string()];
-        let reply = s.handle_line(&v2_rank_cluster_request(
-            "mlp",
-            8,
-            "t4",
-            Some(&dests),
-            Some(&topologies),
-            Some(&[1, 4]),
-            None,
-        ));
-        let resp = ClusterRankResponse::from_json(&reply).unwrap();
-        assert_eq!(resp.ranking.len(), 2 * 2 * 2);
-        // Both dests are rentable, so the whole ranking is priced and
-        // descending in cost-normalized throughput.
-        let priced: Vec<f64> = resp
-            .ranking
-            .iter()
-            .map(|e| e.cost_normalized_throughput.unwrap())
-            .collect();
-        for w in priced.windows(2) {
-            assert!(w[0] >= w[1], "ranking must be descending: {priced:?}");
-        }
-    }
-
-    #[test]
-    fn v2_cluster_errors_are_structured() {
-        let s = wave_service();
-        let check = |line: &str, code: &str| {
-            let reply = s.handle_line(line);
-            let v = json::parse(&reply).unwrap();
-            assert_eq!(
-                v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
-                Some(code),
-                "line {line} → {reply}"
-            );
-        };
-        check(
-            "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"topologies\":[\"no-such-topology\"]}",
-            "unknown_topology",
-        );
-        check(
-            "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"topologies\":[{\"name\":\"sim-svc-badlink\",\"gpus_per_node\":4,\"intra\":\"no-such-link\",\"inter\":\"eth25g\"}]}",
-            "unknown_link",
-        );
-        check(
-            "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"worlds\":[0]}",
-            "invalid_argument",
-        );
-        check(
-            "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"topologies\":[]}",
-            "invalid_argument",
-        );
-        check(
-            "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"overlap\":1.5}",
-            "invalid_argument",
-        );
-        check(
-            "{\"v\":2,\"op\":\"rank_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dests\":[\"a100\"]}",
-            "unknown_device",
-        );
-        check(
-            "{\"v\":2,\"op\":\"export_workload\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"world\":8}",
-            "bad_request",
-        );
-        // An oversized sweep is refused before any compute.
-        let worlds: Vec<usize> = (1..=MAX_CLUSTER_SWEEP + 1).collect();
-        let line = v2_predict_cluster_request("mlp", 8, "t4", "v100", None, Some(&worlds), None);
-        check(&line, "invalid_argument");
-    }
-
-    #[test]
-    fn v2_inline_topologies_register_links_idempotently() {
-        let s = wave_service();
-        let line = "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"worlds\":[2],\"topologies\":[{\"name\":\"sim-svc-pod\",\"gpus_per_node\":2,\"intra\":\"nvlink\",\"inter\":{\"name\":\"sim-svc-wan\",\"bandwidth_gbps\":10.0,\"step_latency_ms\":0.02}}]}";
-        let resp = ClusterResponse::from_json(&s.handle_line(line)).unwrap();
-        assert_eq!(resp.configs.len(), 1);
-        assert_eq!(resp.configs[0].topology, "sim-svc-pod");
-        // Replay is idempotent (same inline specs re-intern silently)…
-        let replay = ClusterResponse::from_json(&s.handle_line(line)).unwrap();
-        assert_eq!(replay.configs[0].iter_ms.to_bits(), resp.configs[0].iter_ms.to_bits());
-        // …while the same name with a different shape is a conflict.
-        let clash = s.handle_line(
-            "{\"v\":2,\"op\":\"predict_cluster\",\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\",\"worlds\":[2],\"topologies\":[{\"name\":\"sim-svc-pod\",\"gpus_per_node\":4,\"intra\":\"nvlink\",\"inter\":\"eth25g\"}]}",
-        );
-        let v = json::parse(&clash).unwrap();
-        assert_eq!(
-            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
-            Some("conflict")
-        );
-    }
-
-    #[test]
-    fn v2_export_workload_round_trips() {
-        let s = wave_service();
-        let reply = s.handle_line(&v2_export_workload_request("mlp", 8, "t4", "v100", "dgx", 16, None));
-        let v = json::parse(&reply).unwrap();
-        v2_check_error(&v).unwrap();
-        assert_eq!(v.req_str("op").unwrap(), "export_workload");
-        let w = crate::comm::Workload::from_value(&v).unwrap();
-        assert_eq!(w.topology, "dgx");
-        assert_eq!(w.world, 16);
-        assert!(w.compute_ms > 0.0);
-        assert!(!w.comm_ops.is_empty());
-        assert!(w.comm_ops.iter().all(|op| op.participants.iter().all(|&r| r < 16)));
-        // A re-serialized workload parses back to the same value.
-        let again = crate::comm::Workload::from_value(&json::parse(&w.to_value().dump()).unwrap()).unwrap();
-        assert_eq!(again, w);
-    }
-}
+//! Everything that was public here is re-exported below, so
+//! `coordinator::service::*` paths keep compiling unchanged. New code
+//! should import from the layer modules (or from
+//! [`coordinator`](crate::coordinator) directly) instead.
+
+pub use super::dispatch::{DispatchOutcome, Dispatcher, PredictionService};
+pub use super::protocol::{
+    stats_request_json, v2_check_error, v2_error_json, v2_export_workload_request,
+    v2_predict_cluster_request, v2_predict_model_request, v2_predict_trace_request,
+    v2_rank_cluster_request, v2_rank_trace_request, v2_register_device_request, v2_stats_request,
+    v2_submit_trace_request, ClusterConfig, ClusterRankResponse, ClusterRankedConfig,
+    ClusterResponse, PredictionRequest, PredictionResponse, RankRequest, RankResponse, RankedDest,
+    RegisteredDevice, Request, StatsResponse, DEFAULT_CLUSTER_WORLDS, PROTOCOL_V2,
+};
+pub use super::tcp::{
+    handle_connection, overloaded_json, serve, serve_with, service_from_artifacts, start,
+    ServeOptions, ServerHandle, CONN_WRITE_TIMEOUT, DEFAULT_MAX_CONNS, DEFAULT_PIPELINE_DEPTH,
+    MAX_CONNS_ENV, STORE_ENV,
+};

@@ -1,0 +1,630 @@
+//! The TCP transport: newline-delimited JSON over a bounded serving
+//! runtime.
+//!
+//! This module moves bytes and threads only — every request line goes
+//! straight to [`Dispatcher::handle_line`](super::Dispatcher::handle_line)
+//! and the reply is written back verbatim, so the wire protocol
+//! (including v1 bit-compatibility) is owned entirely by
+//! [`super::protocol`] / [`super::dispatch`]. What lives here:
+//!
+//! * **Connection slots** ([`ServeOptions::max_conns`]): a connect past
+//!   the bound gets one typed `overloaded` line and a close.
+//! * **Pipelined connections**: each line becomes a job on the engine's
+//!   shared compute pool; a writer thread emits replies strictly in
+//!   request order. A full compute queue answers `overloaded` per
+//!   request; a full pipeline window stops reading the socket (TCP
+//!   backpressure).
+//! * **Graceful drain**: shutdown half-closes the read side of every
+//!   live connection so in-flight replies still flush.
+//!
+//! [`serve_with`] also boots the HTTP front end ([`super::http`]) next
+//! to the TCP listener when [`ServeOptions::http_port`] is set — both
+//! transports share one dispatcher, one engine, and one metrics
+//! surface.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::predict::HybridPredictor;
+use crate::Result;
+
+use super::dispatch::PredictionService;
+use super::protocol::v2_error_json;
+
+/// Environment variable bounding concurrent connections
+/// ([`DEFAULT_MAX_CONNS`] when unset).
+pub const MAX_CONNS_ENV: &str = "HABITAT_MAX_CONNS";
+
+/// Default concurrent-connection bound.
+pub const DEFAULT_MAX_CONNS: usize = 256;
+
+/// Default per-connection pipelining bound: how many request lines may
+/// be in flight (submitted but unanswered) on one connection before the
+/// reader stops pulling bytes off the socket — backpressure lands on
+/// that connection's TCP window, not on server memory.
+pub const DEFAULT_PIPELINE_DEPTH: usize = 64;
+
+/// Server-side write timeout per connection. A client that stops
+/// reading its replies (zero TCP window) errors that connection's
+/// writer out instead of pinning a runtime thread forever — without
+/// this, `ServerHandle::shutdown` could block joining a writer stuck
+/// in `write_all`.
+pub const CONN_WRITE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
+
+/// The wire form of the typed backpressure reply: sent per request when
+/// the compute queue is full, and once (followed by a close) to a
+/// connection that arrives while every connection slot is taken. Always
+/// the structured v2 error shape, whatever protocol generation the
+/// client speaks — `overloaded` is a server condition, not a request
+/// parse result.
+pub fn overloaded_json() -> String {
+    v2_error_json("overloaded", "server at capacity; retry later")
+}
+
+pub(crate) fn internal_error_json() -> String {
+    v2_error_json("internal", "request handler failed")
+}
+
+/// Serving-runtime knobs (see `docs/SERVICE.md`).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Connection slots; further connects get an `overloaded` line and
+    /// a close. `Default` reads [`MAX_CONNS_ENV`].
+    pub max_conns: usize,
+    /// In-flight request lines per connection.
+    pub pipeline_depth: usize,
+    /// When set, [`serve_with`] also boots the HTTP front end
+    /// ([`super::http`]) on this port (same host as the TCP address),
+    /// sharing the dispatcher. `None` (the default) serves TCP only.
+    pub http_port: Option<u16>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            max_conns: std::env::var(MAX_CONNS_ENV)
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .unwrap_or(DEFAULT_MAX_CONNS),
+            pipeline_depth: DEFAULT_PIPELINE_DEPTH,
+            http_port: None,
+        }
+    }
+}
+
+/// State shared by the acceptor, the connection threads, and the
+/// [`ServerHandle`].
+struct ServerShared {
+    service: Arc<PredictionService>,
+    opts: ServeOptions,
+    shutdown: AtomicBool,
+    /// Occupied connection slots.
+    active: AtomicUsize,
+    /// Socket clones of live connections, for shutdown wake-up.
+    streams: Mutex<HashMap<u64, TcpStream>>,
+    /// Connection reader threads, joined on shutdown.
+    threads: Mutex<Vec<JoinHandle<()>>>,
+    next_conn: AtomicU64,
+}
+
+impl ServerShared {
+    fn spawn_connection(self: &Arc<Self>, stream: TcpStream) {
+        // Claim a slot optimistically; over the bound, tell the client
+        // why and close instead of letting connects pile up at the OS.
+        if self.active.fetch_add(1, Ordering::SeqCst) >= self.opts.max_conns {
+            self.active.fetch_sub(1, Ordering::SeqCst);
+            let mut stream = stream;
+            let _ = stream.write_all(overloaded_json().as_bytes());
+            let _ = stream.write_all(b"\n");
+            return; // drop closes the socket
+        }
+        // A stalled client must not pin a writer thread forever (see
+        // CONN_WRITE_TIMEOUT); reads stay unbounded — idle connections
+        // are legitimate.
+        let _ = stream.set_write_timeout(Some(CONN_WRITE_TIMEOUT));
+        let id = self.next_conn.fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = stream.try_clone() {
+            self.streams.lock().unwrap().insert(id, clone);
+        }
+        // Reap finished connection threads so a long-running server's
+        // handle list stays proportional to *live* connections, not to
+        // every connection ever accepted.
+        self.threads.lock().unwrap().retain(|h| !h.is_finished());
+        let shared = Arc::clone(self);
+        let spawned = std::thread::Builder::new()
+            .name(format!("habitat-conn-{id}"))
+            .spawn(move || {
+                let peer = stream.peer_addr().map(|p| p.to_string()).unwrap_or_default();
+                if let Err(e) = run_connection(stream, &shared) {
+                    if !shared.shutdown.load(Ordering::SeqCst) {
+                        eprintln!("habitat: connection {peer}: {e}");
+                    }
+                }
+                shared.streams.lock().unwrap().remove(&id);
+                shared.active.fetch_sub(1, Ordering::SeqCst);
+            });
+        match spawned {
+            Ok(handle) => self.threads.lock().unwrap().push(handle),
+            Err(_) => {
+                self.streams.lock().unwrap().remove(&id);
+                self.active.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// A running prediction server. Dropping the handle shuts the runtime
+/// down; [`ServerHandle::join`] blocks on the acceptor instead (the
+/// `habitat serve` foreground mode).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<ServerShared>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (with the OS-assigned port when `:0` was
+    /// requested).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn service(&self) -> &Arc<PredictionService> {
+        &self.shared.service
+    }
+
+    /// Occupied connection slots right now.
+    pub fn active_connections(&self) -> usize {
+        self.shared.active.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting, unblock every connection reader, drain in-flight
+    /// replies, and join all runtime threads. Idempotent; also invoked
+    /// by `Drop`, so tests can simply let the handle fall out of scope.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    /// Block on the acceptor thread (runs until the process exits or
+    /// another owner flips the shutdown flag).
+    pub fn join(mut self) -> Result<()> {
+        if let Some(acceptor) = self.acceptor.take() {
+            acceptor
+                .join()
+                .map_err(|_| anyhow::anyhow!("acceptor thread panicked"))?;
+        }
+        Ok(())
+    }
+
+    fn stop(&mut self) {
+        if self.shared.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Wake the acceptor out of `accept` with one throwaway connect.
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST));
+        }
+        let _ = TcpStream::connect_timeout(&wake, std::time::Duration::from_millis(250));
+        if let Some(acceptor) = self.acceptor.take() {
+            let _ = acceptor.join();
+        }
+        // Half-close every live connection's read side: readers see EOF
+        // and wind down, while writers still flush in-flight replies —
+        // a drain, not an abort.
+        for stream in self.shared.streams.lock().unwrap().values() {
+            let _ = stream.shutdown(std::net::Shutdown::Read);
+        }
+        let threads: Vec<JoinHandle<()>> = self.shared.threads.lock().unwrap().drain(..).collect();
+        for handle in threads {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Start the bounded serving runtime on `addr` around an existing
+/// (shared) service. Returns once the listener is bound; the acceptor
+/// and all connection handling run on background threads owned by the
+/// returned [`ServerHandle`].
+pub fn start(
+    addr: &str,
+    service: Arc<PredictionService>,
+    opts: ServeOptions,
+) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let shared = Arc::new(ServerShared {
+        service,
+        opts,
+        shutdown: AtomicBool::new(false),
+        active: AtomicUsize::new(0),
+        streams: Mutex::new(HashMap::new()),
+        threads: Mutex::new(Vec::new()),
+        next_conn: AtomicU64::new(0),
+    });
+    let for_acceptor = Arc::clone(&shared);
+    let acceptor = std::thread::Builder::new()
+        .name("habitat-accept".to_string())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                if for_acceptor.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let stream = match stream {
+                    Ok(s) => s,
+                    Err(e) => {
+                        // A persistent accept failure (e.g. fd
+                        // exhaustion) must not become a silent
+                        // busy-loop: say so and back off.
+                        eprintln!("habitat: accept error: {e}");
+                        std::thread::sleep(std::time::Duration::from_millis(100));
+                        continue;
+                    }
+                };
+                for_acceptor.spawn_connection(stream);
+            }
+        })?;
+    Ok(ServerHandle {
+        addr: local,
+        shared,
+        acceptor: Some(acceptor),
+    })
+}
+
+/// One pipelined connection: the reader submits each line as a job on
+/// the engine's shared compute pool and a writer thread emits replies
+/// strictly in request order. A full compute queue becomes a typed
+/// `overloaded` reply for that line (the stream stays in sync); a full
+/// pipeline window stops reading the socket (TCP backpressure).
+fn run_connection(stream: TcpStream, shared: &Arc<ServerShared>) -> Result<()> {
+    let mut write = stream.try_clone()?;
+    // The in-order reply rail: the reader enqueues one slot (a oneshot
+    // receiver) per request; the writer drains slots in order, waiting
+    // on each request's reply before touching the next.
+    let (slot_tx, slot_rx) =
+        mpsc::sync_channel::<mpsc::Receiver<String>>(shared.opts.pipeline_depth.max(1));
+    let writer = std::thread::Builder::new()
+        .name("habitat-conn-writer".to_string())
+        .spawn(move || {
+            while let Ok(slot) = slot_rx.recv() {
+                // A dropped slot without a reply means the handler was
+                // lost (e.g. pool teardown mid-request): answer with a
+                // typed internal error so the stream never desyncs.
+                let reply = slot.recv().unwrap_or_else(|_| internal_error_json());
+                if write.write_all(reply.as_bytes()).is_err() || write.write_all(b"\n").is_err() {
+                    break;
+                }
+            }
+        })?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (reply_tx, reply_rx) = mpsc::channel::<String>();
+        if slot_tx.send(reply_rx).is_err() {
+            break; // writer gone: the socket is dead
+        }
+        let service = Arc::clone(&shared.service);
+        let tx = reply_tx.clone();
+        let submitted = shared.service.engine().pool().try_execute(move || {
+            let reply =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    service.handle_line(&line)
+                }))
+                .unwrap_or_else(|_| internal_error_json());
+            let _ = tx.send(reply);
+        });
+        if submitted.is_err() {
+            // Compute queue full: typed per-request backpressure through
+            // the same reply slot, preserving response order.
+            let _ = reply_tx.send(overloaded_json());
+        }
+    }
+    drop(slot_tx);
+    let _ = writer.join();
+    Ok(())
+}
+
+/// Build the service for `serve`/`start`: the paper's full hybrid
+/// predictor, degrading to wave-scaling-only predictions when MLP
+/// artifacts are missing (like `habitat compare`) rather than refusing
+/// to start.
+pub fn service_from_artifacts(artifacts: &str) -> PredictionService {
+    match PredictionService::new(artifacts) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!(
+                "habitat: MLP artifacts unavailable ({e}); serving wave-scaling-only predictions"
+            );
+            PredictionService::with_predictor(HybridPredictor::wave_only())
+        }
+    }
+}
+
+/// Serve newline-delimited JSON requests over TCP on the bounded
+/// runtime (the `habitat serve` subcommand). Blocks forever.
+pub fn serve(addr: &str, artifacts: &str) -> Result<()> {
+    serve_with(addr, artifacts, ServeOptions::default())
+}
+
+/// Environment variable naming the persistent plan-store directory for
+/// `habitat serve` (also settable via the CLI's `--store` flag). Only
+/// the serving entry point reads it — library engines never attach a
+/// store implicitly.
+pub const STORE_ENV: &str = "HABITAT_STORE";
+
+/// [`serve`] with explicit runtime bounds. When
+/// [`ServeOptions::http_port`] is set, the HTTP front end boots next to
+/// the TCP listener on the same host, sharing the dispatcher.
+pub fn serve_with(addr: &str, artifacts: &str, opts: ServeOptions) -> Result<()> {
+    let mut service = service_from_artifacts(artifacts);
+    if let Ok(dir) = std::env::var(STORE_ENV) {
+        if !dir.is_empty() {
+            // Persistence is an optimization: a store that cannot be
+            // opened degrades to a cold boot, never a refused one.
+            match service.attach_store(&dir) {
+                Ok(()) => println!(
+                    "habitat: plan store at {dir} ({} plans warm-restored)",
+                    service.engine().stats().warm_restores
+                ),
+                Err(e) => eprintln!("habitat: plan store at {dir} unavailable ({e}); serving without persistence"),
+            }
+        }
+    }
+    let service = Arc::new(service);
+    let max_conns = opts.max_conns;
+    // The HTTP handle must outlive `handle.join()` below: dropping it
+    // would drain the HTTP runtime while TCP keeps serving.
+    let _http = match opts.http_port {
+        None => None,
+        Some(port) => {
+            let host = addr.rsplit_once(':').map_or(addr, |(h, _)| h);
+            let http_addr = format!("{host}:{port}");
+            let handle = super::http::start(&http_addr, Arc::clone(&service), opts.clone())?;
+            println!(
+                "habitat: http front end on {} (POST /v2, GET /healthz, GET /metrics)",
+                handle.local_addr()
+            );
+            Some(handle)
+        }
+    };
+    let handle = start(addr, service, opts)?;
+    {
+        let engine = handle.service().engine();
+        println!(
+            "habitat: serving predictions on {addr} ({} workers, queue depth {}, max {} connections)",
+            engine.workers(),
+            engine.queue_depth(),
+            max_conns
+        );
+    }
+    handle.join()
+}
+
+/// Handle one connection until EOF.
+pub fn handle_connection(stream: TcpStream, service: &PredictionService) -> Result<()> {
+    let mut write = stream.try_clone()?;
+    let read = BufReader::new(stream);
+    for line in read.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = service.handle_line(&line);
+        write.write_all(reply.as_bytes())?;
+        write.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::{PredictionResponse, RankResponse, StatsResponse};
+    use crate::device::ALL_DEVICES;
+    use crate::engine::PredictionEngine;
+    use crate::util::json::{self, Json};
+
+    fn wave_service() -> PredictionService {
+        PredictionService::with_predictor(HybridPredictor::wave_only())
+    }
+
+    #[test]
+    fn serve_options_defaults_are_bounded() {
+        let opts = ServeOptions::default();
+        assert!(opts.max_conns >= 1);
+        assert!(opts.pipeline_depth >= 1);
+        assert!(opts.http_port.is_none(), "HTTP must be opt-in");
+        let line = overloaded_json();
+        let v = json::parse(&line).unwrap();
+        assert_eq!(
+            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("overloaded")
+        );
+        assert_eq!(v.get("v"), Some(&Json::Num(2.0)));
+    }
+
+    #[test]
+    fn bounded_runtime_serves_pipelined_lines_in_order() {
+        let handle = start(
+            "127.0.0.1:0",
+            Arc::new(wave_service()),
+            ServeOptions::default(),
+        )
+        .unwrap();
+        let addr = handle.local_addr();
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut write = stream.try_clone().unwrap();
+        write
+            .write_all(
+                b"{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}\n\
+                  {\"rank\":true,\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\"}\n\
+                  {\"stats\":true}\n",
+            )
+            .unwrap();
+        // Half-close the write side so the server sees EOF after the
+        // pipelined burst (dropping a clone alone does not, because the
+        // read half still holds the socket open).
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+        let replies: Vec<String> = BufReader::new(stream).lines().map(|l| l.unwrap()).collect();
+        assert_eq!(replies.len(), 3);
+        assert_eq!(PredictionResponse::from_json(&replies[0]).unwrap().dest, "V100");
+        assert!(RankResponse::from_json(&replies[1]).unwrap().ranking.len() >= ALL_DEVICES.len());
+        assert!(StatsResponse::from_json(&replies[2]).is_ok());
+        handle.shutdown();
+        // The listener is gone after shutdown — nothing leaked.
+        assert!(TcpStream::connect(addr).is_err(), "listener must be closed");
+    }
+
+    #[test]
+    fn connection_slots_are_enforced_with_a_typed_reply() {
+        let handle = start(
+            "127.0.0.1:0",
+            Arc::new(wave_service()),
+            ServeOptions {
+                max_conns: 1,
+                ..ServeOptions::default()
+            },
+        )
+        .unwrap();
+        let addr = handle.local_addr();
+
+        // Fill the single slot and prove it is live with a roundtrip
+        // (which also guarantees the acceptor registered it).
+        let first = TcpStream::connect(addr).unwrap();
+        let mut w1 = first.try_clone().unwrap();
+        w1.write_all(b"{\"stats\":true}\n").unwrap();
+        let mut r1 = BufReader::new(first.try_clone().unwrap());
+        let mut line = String::new();
+        r1.read_line(&mut line).unwrap();
+        assert!(StatsResponse::from_json(line.trim()).is_ok());
+
+        // The second connection gets one typed overloaded line, then EOF.
+        let second = TcpStream::connect(addr).unwrap();
+        let mut lines = BufReader::new(second).lines();
+        let reply = lines.next().unwrap().unwrap();
+        let v = json::parse(&reply).unwrap();
+        assert_eq!(
+            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("overloaded"),
+            "{reply}"
+        );
+        assert!(lines.next().is_none(), "rejected connection must be closed");
+
+        // Freeing the slot readmits clients (every clone of the first
+        // connection must drop for the server to see EOF).
+        drop(w1);
+        drop(r1);
+        drop(first);
+        for _ in 0..100 {
+            let probe = TcpStream::connect(addr).unwrap();
+            let mut w = probe.try_clone().unwrap();
+            w.write_all(b"{\"stats\":true}\n").unwrap();
+            let mut line = String::new();
+            BufReader::new(probe).read_line(&mut line).unwrap();
+            if StatsResponse::from_json(line.trim()).is_ok() {
+                return; // slot reclaimed
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        panic!("slot was never reclaimed after the first client left");
+    }
+
+    #[test]
+    fn full_compute_queue_answers_overloaded_per_request() {
+        let engine = PredictionEngine::wave_only()
+            .with_workers(1)
+            .with_queue_depth(1);
+        let handle = start(
+            "127.0.0.1:0",
+            Arc::new(PredictionService::with_engine(engine)),
+            ServeOptions::default(),
+        )
+        .unwrap();
+        let addr = handle.local_addr();
+        let pool_gate = {
+            // Wedge the single worker and fill the single queue slot so
+            // the next request job cannot be accepted. Wait for the
+            // wedge job to *start* before filling: otherwise the fillers
+            // could land while the wedge is still queued, and the queue
+            // would drain again as the worker picks it up.
+            let engine = handle.service().engine();
+            let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+            let (started_tx, started_rx) = std::sync::mpsc::channel::<()>();
+            engine.pool().execute(move || {
+                started_tx.send(()).unwrap();
+                gate_rx.recv().unwrap();
+            });
+            started_rx.recv().unwrap();
+            while engine.pool().try_execute(|| {}).is_ok() {}
+            gate_tx
+        };
+
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut write = stream.try_clone().unwrap();
+        write
+            .write_all(b"{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}\n")
+            .unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = json::parse(line.trim()).unwrap();
+        assert_eq!(
+            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("overloaded"),
+            "wedged pool must answer with typed backpressure: {line}"
+        );
+
+        // Release the pool; the connection is still in sync and serves.
+        drop(pool_gate);
+        for _ in 0..100 {
+            write
+                .write_all(b"{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\",\"dest\":\"v100\"}\n")
+                .unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            if PredictionResponse::from_json(line.trim()).is_ok() {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        panic!("service never recovered after the queue drained");
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let service = Arc::new(wave_service());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let srv = service.clone();
+        std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            handle_connection(stream, &srv).unwrap();
+        });
+
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut write = stream.try_clone().unwrap();
+        write
+            .write_all(b"{\"model\":\"mlp\",\"batch\":16,\"origin\":\"t4\",\"dest\":\"p100\"}\nnot json\n")
+            .unwrap();
+        drop(write);
+        let mut lines = BufReader::new(stream).lines();
+        let ok = PredictionResponse::from_json(&lines.next().unwrap().unwrap()).unwrap();
+        assert!(ok.iter_ms > 0.0);
+        let err_line = lines.next().unwrap().unwrap();
+        assert!(err_line.contains("bad request"));
+    }
+}

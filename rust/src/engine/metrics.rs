@@ -1,0 +1,346 @@
+//! Per-op service metrics: lock-free request/error counters and
+//! fixed-bucket latency histograms.
+//!
+//! One [`ServiceMetrics`] lives on each [`PredictionEngine`] and is
+//! fed by the transport-agnostic dispatcher
+//! ([`crate::coordinator::Dispatcher`]): every wire request — over TCP
+//! or HTTP — is classified into an [`OpKind`], timed, and recorded
+//! here. Everything is a relaxed atomic, so recording never contends
+//! with the prediction hot path, and a `/metrics` scrape or a v2
+//! `stats` op reads a consistent-enough snapshot without stopping the
+//! world.
+//!
+//! The histogram uses fixed bucket bounds (milliseconds, chosen to
+//! straddle the cache-hit path at tens of µs and the tracking pipeline
+//! at tens of ms) so scrapes from different processes are directly
+//! comparable and the Prometheus exposition needs no float formatting
+//! gymnastics: every `le` label is a pre-rendered string constant.
+//!
+//! [`PredictionEngine`]: super::PredictionEngine
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::time::Duration;
+
+use super::EngineStats;
+
+/// The wire operations the dispatcher distinguishes. `Other` absorbs
+/// unparseable lines, unsupported versions, and unknown ops — traffic
+/// that never resolved to a real operation but still cost a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Predict,
+    Rank,
+    Stats,
+    SubmitTrace,
+    RegisterDevice,
+    PredictCluster,
+    RankCluster,
+    ExportWorkload,
+    Other,
+}
+
+impl OpKind {
+    /// Every kind, in the order they are emitted on `/metrics`.
+    pub const ALL: [OpKind; 9] = [
+        OpKind::Predict,
+        OpKind::Rank,
+        OpKind::Stats,
+        OpKind::SubmitTrace,
+        OpKind::RegisterDevice,
+        OpKind::PredictCluster,
+        OpKind::RankCluster,
+        OpKind::ExportWorkload,
+        OpKind::Other,
+    ];
+
+    /// The wire name of the op (matches the v2 `"op"` field; `Other`
+    /// has no wire name and labels as `"other"`).
+    pub fn label(self) -> &'static str {
+        match self {
+            OpKind::Predict => "predict",
+            OpKind::Rank => "rank",
+            OpKind::Stats => "stats",
+            OpKind::SubmitTrace => "submit_trace",
+            OpKind::RegisterDevice => "register_device",
+            OpKind::PredictCluster => "predict_cluster",
+            OpKind::RankCluster => "rank_cluster",
+            OpKind::ExportWorkload => "export_workload",
+            OpKind::Other => "other",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            OpKind::Predict => 0,
+            OpKind::Rank => 1,
+            OpKind::Stats => 2,
+            OpKind::SubmitTrace => 3,
+            OpKind::RegisterDevice => 4,
+            OpKind::PredictCluster => 5,
+            OpKind::RankCluster => 6,
+            OpKind::ExportWorkload => 7,
+            OpKind::Other => 8,
+        }
+    }
+}
+
+/// Histogram bucket upper bounds in milliseconds, paired with the
+/// exact `le` label each renders as. The final `+Inf` bucket is
+/// implicit (it is the observation count).
+pub const BUCKET_BOUNDS_MS: [(f64, &str); 11] = [
+    (0.05, "0.05"),
+    (0.1, "0.1"),
+    (0.25, "0.25"),
+    (0.5, "0.5"),
+    (1.0, "1"),
+    (2.5, "2.5"),
+    (5.0, "5"),
+    (10.0, "10"),
+    (25.0, "25"),
+    (100.0, "100"),
+    (1000.0, "1000"),
+];
+
+/// Finite buckets plus the `+Inf` overflow slot.
+const SLOTS: usize = BUCKET_BOUNDS_MS.len() + 1;
+
+/// Counters for one [`OpKind`]. Bucket slots are *disjoint* (slot `i`
+/// counts observations in `(bound[i-1], bound[i]]`); the cumulative
+/// sums Prometheus wants are computed at render time.
+#[derive(Default)]
+struct OpCell {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    slots: [AtomicU64; SLOTS],
+    latency_ns: AtomicU64,
+}
+
+/// A point-in-time copy of one op's counters, for tests and the v2
+/// `stats` payload.
+#[derive(Debug, Clone)]
+pub struct OpSnapshot {
+    pub op: OpKind,
+    pub requests: u64,
+    pub errors: u64,
+    /// Disjoint per-slot counts; `buckets[SLOTS - 1]` is the `+Inf`
+    /// overflow slot.
+    pub buckets: Vec<u64>,
+    pub latency_ms_sum: f64,
+}
+
+/// Lock-free per-op request metrics for one engine/service instance.
+#[derive(Default)]
+pub struct ServiceMetrics {
+    cells: [OpCell; OpKind::ALL.len()],
+}
+
+impl ServiceMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed request: which op it resolved to, whether
+    /// the reply was an error, and how long routing + handling took.
+    pub fn record(&self, op: OpKind, ok: bool, elapsed: Duration) {
+        let cell = &self.cells[op.index()];
+        cell.requests.fetch_add(1, Relaxed);
+        if !ok {
+            cell.errors.fetch_add(1, Relaxed);
+        }
+        let ms = elapsed.as_secs_f64() * 1e3;
+        let slot = BUCKET_BOUNDS_MS
+            .iter()
+            .position(|&(bound, _)| ms <= bound)
+            .unwrap_or(SLOTS - 1);
+        cell.slots[slot].fetch_add(1, Relaxed);
+        cell.latency_ns
+            .fetch_add(elapsed.as_nanos().min(u64::MAX as u128) as u64, Relaxed);
+    }
+
+    /// Total requests recorded across every op.
+    pub fn requests_total(&self) -> u64 {
+        self.cells.iter().map(|c| c.requests.load(Relaxed)).sum()
+    }
+
+    /// Total error replies recorded across every op.
+    pub fn errors_total(&self) -> u64 {
+        self.cells.iter().map(|c| c.errors.load(Relaxed)).sum()
+    }
+
+    /// Snapshot one op's counters.
+    pub fn snapshot(&self, op: OpKind) -> OpSnapshot {
+        let cell = &self.cells[op.index()];
+        OpSnapshot {
+            op,
+            requests: cell.requests.load(Relaxed),
+            errors: cell.errors.load(Relaxed),
+            buckets: cell.slots.iter().map(|s| s.load(Relaxed)).collect(),
+            latency_ms_sum: cell.latency_ns.load(Relaxed) as f64 / 1e6,
+        }
+    }
+
+    /// Render the Prometheus text exposition for `GET /metrics`: the
+    /// per-op request/error counters, the per-op latency histograms,
+    /// and the engine counter gauges from `stats`. Every op is emitted
+    /// even at zero so scrape series are stable from the first scrape.
+    pub fn render_prometheus(&self, engine: &EngineStats) -> String {
+        let mut out = String::with_capacity(8 * 1024);
+
+        out.push_str("# HELP habitat_requests_total Wire requests handled, by op.\n");
+        out.push_str("# TYPE habitat_requests_total counter\n");
+        for op in OpKind::ALL {
+            let snap = self.snapshot(op);
+            out.push_str(&format!(
+                "habitat_requests_total{{op=\"{}\"}} {}\n",
+                op.label(),
+                snap.requests
+            ));
+        }
+
+        out.push_str("# HELP habitat_request_errors_total Error replies, by op.\n");
+        out.push_str("# TYPE habitat_request_errors_total counter\n");
+        for op in OpKind::ALL {
+            let snap = self.snapshot(op);
+            out.push_str(&format!(
+                "habitat_request_errors_total{{op=\"{}\"}} {}\n",
+                op.label(),
+                snap.errors
+            ));
+        }
+
+        out.push_str(
+            "# HELP habitat_request_latency_ms Request routing+handling latency, by op.\n",
+        );
+        out.push_str("# TYPE habitat_request_latency_ms histogram\n");
+        for op in OpKind::ALL {
+            let snap = self.snapshot(op);
+            let mut cumulative = 0u64;
+            for (slot, &(_, le)) in BUCKET_BOUNDS_MS.iter().enumerate() {
+                cumulative += snap.buckets[slot];
+                out.push_str(&format!(
+                    "habitat_request_latency_ms_bucket{{op=\"{}\",le=\"{}\"}} {}\n",
+                    op.label(),
+                    le,
+                    cumulative
+                ));
+            }
+            cumulative += snap.buckets[SLOTS - 1];
+            out.push_str(&format!(
+                "habitat_request_latency_ms_bucket{{op=\"{}\",le=\"+Inf\"}} {}\n",
+                op.label(),
+                cumulative
+            ));
+            out.push_str(&format!(
+                "habitat_request_latency_ms_sum{{op=\"{}\"}} {}\n",
+                op.label(),
+                snap.latency_ms_sum
+            ));
+            out.push_str(&format!(
+                "habitat_request_latency_ms_count{{op=\"{}\"}} {}\n",
+                op.label(),
+                cumulative
+            ));
+        }
+
+        let gauges: [(&str, &str, u64); 14] = [
+            ("habitat_engine_trace_hits", "Trace-cache hits.", engine.trace_hits),
+            ("habitat_engine_trace_misses", "Trace-cache misses.", engine.trace_misses),
+            (
+                "habitat_engine_trace_entries",
+                "Resident trace+plan entries.",
+                engine.trace_entries as u64,
+            ),
+            (
+                "habitat_engine_trace_uploads",
+                "Distinct uploaded traces accepted.",
+                engine.trace_uploads,
+            ),
+            (
+                "habitat_engine_uploaded_entries",
+                "Resident uploaded trace+plan entries.",
+                engine.uploaded_entries as u64,
+            ),
+            ("habitat_engine_devices", "Devices in the registry.", engine.devices as u64),
+            ("habitat_engine_plan_builds", "Plan compilations.", engine.plan_builds),
+            ("habitat_engine_wave_hits", "Wave-table hits (process-wide).", engine.wave_hits),
+            (
+                "habitat_engine_wave_misses",
+                "Wave-table misses (process-wide).",
+                engine.wave_misses,
+            ),
+            ("habitat_engine_workers", "Fan-out worker-pool width.", engine.workers as u64),
+            ("habitat_engine_store_hits", "Plan-store hits.", engine.store_hits),
+            ("habitat_engine_store_misses", "Plan-store misses.", engine.store_misses),
+            (
+                "habitat_engine_warm_restores",
+                "Records warm-restored from the plan store.",
+                engine.warm_restores,
+            ),
+            (
+                "habitat_engine_parallel_build_chunks",
+                "Lane rows filled by the parallel plan builder.",
+                engine.parallel_build_chunks,
+            ),
+        ];
+        for (name, help, value) in gauges {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {value}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_into_the_right_bucket_and_op() {
+        let m = ServiceMetrics::new();
+        m.record(OpKind::Predict, true, Duration::from_micros(80)); // ≤ 0.1 ms
+        m.record(OpKind::Predict, false, Duration::from_millis(3)); // ≤ 5 ms
+        m.record(OpKind::Rank, true, Duration::from_secs(2)); // +Inf slot
+
+        let p = m.snapshot(OpKind::Predict);
+        assert_eq!(p.requests, 2);
+        assert_eq!(p.errors, 1);
+        assert_eq!(p.buckets[1], 1, "80 µs lands in the (0.05, 0.1] slot");
+        assert_eq!(p.buckets[6], 1, "3 ms lands in the (2.5, 5] slot");
+
+        let r = m.snapshot(OpKind::Rank);
+        assert_eq!(r.buckets[SLOTS - 1], 1, "2 s overflows to +Inf");
+        assert_eq!(m.requests_total(), 3);
+        assert_eq!(m.errors_total(), 1);
+    }
+
+    #[test]
+    fn prometheus_exposition_is_cumulative_and_complete() {
+        let m = ServiceMetrics::new();
+        m.record(OpKind::Stats, true, Duration::from_micros(10));
+        m.record(OpKind::Stats, true, Duration::from_millis(50));
+        let engine = crate::engine::PredictionEngine::wave_only();
+        let text = m.render_prometheus(&engine.stats());
+
+        // Every op appears even at zero.
+        for op in OpKind::ALL {
+            assert!(
+                text.contains(&format!("habitat_requests_total{{op=\"{}\"}}", op.label())),
+                "missing series for {}",
+                op.label()
+            );
+        }
+        // Cumulative: the 100 ms bucket and +Inf both see the 50 ms hit
+        // plus the 10 µs one.
+        assert!(text.contains("habitat_request_latency_ms_bucket{op=\"stats\",le=\"0.05\"} 1"));
+        assert!(text.contains("habitat_request_latency_ms_bucket{op=\"stats\",le=\"100\"} 2"));
+        assert!(text.contains("habitat_request_latency_ms_bucket{op=\"stats\",le=\"+Inf\"} 2"));
+        assert!(text.contains("habitat_request_latency_ms_count{op=\"stats\"} 2"));
+        assert!(text.contains("habitat_engine_workers "));
+    }
+
+    #[test]
+    fn labels_match_wire_op_names() {
+        assert_eq!(OpKind::SubmitTrace.label(), "submit_trace");
+        assert_eq!(OpKind::ExportWorkload.label(), "export_workload");
+        assert_eq!(OpKind::ALL.len(), 9);
+    }
+}

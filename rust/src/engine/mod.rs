@@ -49,6 +49,7 @@
 
 pub mod cache;
 pub mod memo;
+pub mod metrics;
 pub mod pool;
 pub mod store;
 
@@ -204,6 +205,12 @@ pub struct EngineStats {
     /// Per-device lane rows filled by the work-claiming parallel plan
     /// builder (serial fallback builds contribute 0).
     pub parallel_build_chunks: u64,
+    /// Wire requests recorded by the dispatcher across every transport
+    /// (see [`metrics::ServiceMetrics`]); 0 for engines never served
+    /// over the wire.
+    pub requests: u64,
+    /// Wire requests whose reply was an error.
+    pub request_errors: u64,
 }
 
 /// The shared prediction engine. `Send + Sync`: one engine serves any
@@ -246,6 +253,9 @@ pub struct PredictionEngine {
     /// Bounded submission-queue depth for the compute pool.
     queue_depth: usize,
     pool: OnceLock<WorkerPool>,
+    /// Per-op wire-request counters and latency histograms, fed by the
+    /// coordinator dispatcher and rendered on `GET /metrics`.
+    metrics: metrics::ServiceMetrics,
 }
 
 impl PredictionEngine {
@@ -284,6 +294,7 @@ impl PredictionEngine {
             workers,
             queue_depth: pool::queue_depth_from_env(),
             pool: OnceLock::new(),
+            metrics: metrics::ServiceMetrics::new(),
         }
     }
 
@@ -1132,7 +1143,16 @@ impl PredictionEngine {
             store_misses: self.store_misses.load(Relaxed),
             warm_restores: self.warm_restores.load(Relaxed),
             parallel_build_chunks: self.parallel_build_chunks.load(Relaxed),
+            requests: self.metrics.requests_total(),
+            request_errors: self.metrics.errors_total(),
         }
+    }
+
+    /// The per-op wire-request metrics fed by the coordinator
+    /// dispatcher (every engine has them; they stay zero unless the
+    /// engine is served over the wire).
+    pub fn metrics(&self) -> &metrics::ServiceMetrics {
+        &self.metrics
     }
 
     /// Drop every cached trace+plan entry (the counters are preserved).

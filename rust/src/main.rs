@@ -14,6 +14,7 @@
 //!                   [--topology T] [--world N] [--out FILE]
 //! habitat serve     [--addr HOST:PORT] [--artifacts DIR] [--max-conns N]
 //!                   [--workers N] [--queue-depth N] [--store DIR]
+//!                   [--http-port PORT]
 //! habitat devices
 //! ```
 //!
@@ -99,6 +100,7 @@ const USAGE: &str = "usage: habitat <predict|track|compare|cluster|workload|data
              [--out DIR] [--artifacts DIR]
   serve      [--addr HOST:PORT] [--artifacts DIR] [--max-conns N]
              [--workers N] [--queue-depth N] [--store DIR]
+             [--http-port PORT]   (HTTP front end: POST /v2, /healthz, /metrics)
   devices";
 
 fn parse_topologies(arg: &str) -> anyhow::Result<Vec<habitat::comm::Topology>> {
@@ -437,9 +439,18 @@ fn main() -> anyhow::Result<()> {
                 anyhow::ensure!(!dir.is_empty(), "--store needs a directory path");
                 std::env::set_var(habitat::coordinator::service::STORE_ENV, dir);
             }
+            let http_port = match args.flags.get("http-port") {
+                None => None,
+                Some(v) => {
+                    let p = v.parse::<u16>().map_err(|e| anyhow::anyhow!("--http-port: {e}"))?;
+                    anyhow::ensure!(p > 0, "--http-port must be positive (the TCP --addr already picks the JSON-lines port)");
+                    Some(p)
+                }
+            };
             let defaults = habitat::coordinator::ServeOptions::default();
             let opts = habitat::coordinator::ServeOptions {
                 max_conns: args.get_usize("max-conns", defaults.max_conns)?.max(1),
+                http_port,
                 ..defaults
             };
             habitat::coordinator::serve_with(

@@ -1,0 +1,237 @@
+//! Table-driven v1/v2 parity for the layered request core.
+//!
+//! The service monolith was split into protocol (codec) → dispatch →
+//! transports (tcp/http). These tests pin the invariant the split must
+//! preserve: every entry point into the [`Dispatcher`] produces the
+//! same bytes for the same request. Concretely:
+//!
+//! * a scripted session of every op replayed through `handle_line`
+//!   (the TCP path) and through `dispatch_http` (the HTTP path) on
+//!   fresh engines answers reply-for-reply byte-identically;
+//! * v2 envelopes through `handle_v2` (the embedding API) match
+//!   `handle_line`;
+//! * the v1 typed codec path — decode with [`Request`], dispatch with
+//!   `handle`/`handle_rank`/`handle_stats`, encode with `to_json` —
+//!   reproduces `handle_line` exactly (this *is* the pre-split
+//!   `handle_line` semantics, spelled out);
+//! * error replies are the same strings the public
+//!   [`v2_error_json`] helper builds, and `dispatch_http` labels each
+//!   outcome with the matching error code.
+//!
+//! Expected strings are always *computed* through the same codec
+//! helpers (`util::json` sorts object keys on dump), never hardcoded.
+
+use habitat::coordinator::{
+    service, v2_check_error, v2_error_json, v2_export_workload_request,
+    v2_predict_cluster_request, v2_predict_model_request, v2_predict_trace_request,
+    v2_rank_cluster_request, v2_rank_trace_request, v2_register_device_request, v2_stats_request,
+    v2_submit_trace_request, PredictionService, RegisteredDevice, Request,
+};
+use habitat::device::{registry::NewDevice, Device};
+use habitat::predict::HybridPredictor;
+use habitat::util::json::{self, Json};
+use habitat::{models, OperationTracker};
+
+fn fresh() -> PredictionService {
+    PredictionService::with_predictor(HybridPredictor::wave_only())
+}
+
+fn t4() -> Device {
+    Device::parse("t4").unwrap()
+}
+
+/// A small real trace plus its content-hashed id (deterministic, so
+/// every fresh engine in a case agrees on it).
+fn mlp_trace_line_and_id() -> (String, String) {
+    let graph = models::by_name("mlp", 8).unwrap();
+    let trace = OperationTracker::new(t4()).track(&graph);
+    let line = v2_submit_trace_request(&trace);
+    let reply = fresh().handle_line(&line);
+    let v = json::parse(&reply).unwrap();
+    v2_check_error(&v).unwrap();
+    let id = v.get("trace_id").and_then(Json::as_str).unwrap().to_string();
+    (line, id)
+}
+
+/// One scripted session covering every op (and every error family),
+/// with the error code `dispatch_http` must attach to each reply.
+fn script() -> Vec<(String, Option<&'static str>)> {
+    let (submit_line, trace_id) = mlp_trace_line_and_id();
+    let dests: Vec<String> = vec!["v100".into(), "p4000".into()];
+    let dgx: Vec<String> = vec!["dgx".into()];
+    let v1_rank = r#"{"rank":true,"model":"mlp","batch":8,"origin":"t4","dests":["v100","p4000"]}"#;
+    let v2_rank =
+        r#"{"v":2,"op":"rank","model":"mlp","batch":8,"origin":"t4","dests":["v100","p4000"]}"#;
+    let cluster =
+        v2_predict_cluster_request("mlp", 8, "t4", "v100", Some(&dgx), Some(&[1, 2, 4]), None);
+    let rank_cluster =
+        v2_rank_cluster_request("mlp", 8, "t4", Some(&dests), Some(&dgx), Some(&[1, 2]), None);
+    vec![
+        // Happy paths, v1 then v2, across every op family.
+        (r#"{"model":"mlp","batch":8,"origin":"t4","dest":"v100"}"#.into(), None),
+        (v2_predict_model_request("mlp", 8, "t4", "p4000", None), None),
+        (v1_rank.into(), None),
+        (v2_rank.into(), None),
+        (submit_line, None),
+        (v2_predict_trace_request(&trace_id, "v100", None), None),
+        (v2_rank_trace_request(&trace_id, Some(&dests), None), None),
+        (cluster, None),
+        (rank_cluster, None),
+        (v2_export_workload_request("mlp", 8, "t4", "v100", "dgx", 8, None), None),
+        // Every error family.
+        (r#"{"model":"mlp","batch":8,"origin":"t4","dest":"a100"}"#.into(), Some("unknown_device")),
+        (v2_predict_model_request("mlp", 8, "t4", "a100", None), Some("unknown_device")),
+        (r#"{"model":"nope","batch":8,"origin":"t4","dest":"v100"}"#.into(), Some("unknown_model")),
+        (v2_predict_trace_request("deadbeef", "v100", None), Some("unknown_trace")),
+        (r#"{"v":7}"#.into(), Some("unsupported_version")),
+        (r#"{"v":2,"op":"noop"}"#.into(), Some("unsupported_op")),
+        ("this is not json".into(), Some("bad_request")),
+        // Stats last: the v2 reply carries the per-op request counters,
+        // so it only matches across entry points that record metrics
+        // identically for every prior line (both of these do).
+        (service::stats_request_json(), None),
+        (v2_stats_request(), None),
+    ]
+}
+
+#[test]
+fn scripted_session_matches_byte_for_byte_across_tcp_and_http_entry_points() {
+    let cases = script();
+    let via_tcp = fresh();
+    let via_http = fresh();
+    for (i, (line, code)) in cases.iter().enumerate() {
+        let tcp_reply = via_tcp.handle_line(line);
+        let outcome = via_http.dispatch_http(line);
+        if *code == Some("bad_request") && json::parse(line).is_err() {
+            // The one deliberate divergence: a line that is not JSON at
+            // all answers in the transport's native error shape — the
+            // flat v1 `{"error": "bad request: ..."}` object on the line
+            // protocol, the structured v2 object over HTTP (its
+            // transport needs a code to map to a status). Codes and the
+            // embedded parse message still agree.
+            let v1 = json::parse(&tcp_reply).unwrap();
+            let msg = v1.get("error").and_then(Json::as_str).unwrap();
+            assert!(msg.starts_with("bad request: "), "case {i}: {tcp_reply}");
+            let v = json::parse(&outcome.reply).unwrap();
+            let err = v2_check_error(&v).unwrap_err().to_string();
+            assert!(err.contains("bad_request"), "case {i}: {err}");
+            assert!(err.contains(msg), "case {i}: {err} vs {msg}");
+        } else {
+            assert_eq!(tcp_reply, outcome.reply, "case {i} ({line}) diverged across transports");
+        }
+        assert_eq!(outcome.error, *code, "case {i} ({line}) mislabeled its outcome");
+    }
+}
+
+#[test]
+fn v2_envelopes_match_between_handle_line_and_handle_v2() {
+    // v2-only (handle_v2 is the post-version-sniff entry) and
+    // stats-free (handle_v2 deliberately records no metrics, so the
+    // counter-bearing stats reply is the one op that may differ).
+    let v2_lines: Vec<String> = script()
+        .into_iter()
+        .map(|(line, _)| line)
+        .filter(|l| {
+            json::parse(l).is_ok_and(|v| {
+                v.get("v").and_then(Json::as_f64) == Some(2.0)
+                    && v.get("op").and_then(Json::as_str) != Some("stats")
+            })
+        })
+        .collect();
+    assert!(v2_lines.len() >= 8, "script lost its v2 coverage");
+    let via_line = fresh();
+    let via_value = fresh();
+    for line in &v2_lines {
+        let parsed = json::parse(line).unwrap();
+        assert_eq!(
+            via_line.handle_line(line),
+            via_value.handle_v2(&parsed),
+            "{line} diverged between handle_line and handle_v2"
+        );
+    }
+}
+
+#[test]
+fn v1_typed_codec_path_reproduces_handle_line() {
+    // decode → dispatch → encode, spelled out with the protocol types,
+    // equals the dispatcher's own routing for each v1 op.
+    let via_typed = fresh();
+    let via_line = fresh();
+    let lines = [
+        r#"{"model":"mlp","batch":8,"origin":"t4","dest":"v100"}"#,
+        r#"{"rank":true,"model":"mlp","batch":8,"origin":"t4","dests":["v100","p4000"]}"#,
+        r#"{"stats":true}"#,
+    ];
+    for line in lines {
+        let expected = match Request::from_json(line).unwrap() {
+            Request::Predict(req) => via_typed.handle(&req).unwrap().to_json(),
+            Request::Rank(req) => via_typed.handle_rank(&req).unwrap().to_json(),
+            Request::Stats => via_typed.handle_stats().to_json(),
+        };
+        assert_eq!(via_line.handle_line(line), expected, "{line}");
+    }
+}
+
+#[test]
+fn v1_error_strings_survive_the_split() {
+    // The v1 error contract is frozen: a bare {"error": "..."} object,
+    // parse failures prefixed `bad request: `. Computed via the codec,
+    // compared byte-for-byte.
+    let svc = fresh();
+    let reply = svc.handle_line(r#"{"model":"mlp","batch":8,"origin":"t4","dest":"a100"}"#);
+    let expected = Json::obj(vec![(
+        "error",
+        Json::Str("unknown destination device \"a100\"".into()),
+    )])
+    .dump();
+    assert_eq!(reply, expected);
+    let reply = svc.handle_line(r#"{"model":"mlp","batch":"eight"}"#);
+    let v = json::parse(&reply).unwrap();
+    let msg = v.get("error").and_then(Json::as_str).unwrap();
+    assert!(msg.starts_with("bad request: "), "{reply}");
+}
+
+#[test]
+fn v2_error_replies_are_the_public_helper_strings() {
+    let svc = fresh();
+    assert_eq!(
+        svc.handle_line(r#"{"v":7}"#),
+        v2_error_json("unsupported_version", "unsupported protocol version 7"),
+    );
+    let reply = svc.handle_line(r#"{"v":2}"#);
+    assert_eq!(reply, v2_error_json("bad_request", "missing string field \"op\""));
+    // dispatch_http wraps even non-JSON input in the same structured
+    // shape (its transport has a body to put it in).
+    let out = svc.dispatch_http("{{{");
+    let v = json::parse(&out.reply).unwrap();
+    let code = v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str);
+    assert_eq!(code, Some("bad_request"));
+    assert_eq!(out.error, Some("bad_request"));
+}
+
+#[test]
+fn register_device_conflicts_identically_across_transports() {
+    // register_device mutates the process-global registry, so the
+    // byte-parity claim is made on the *conflict* replies (idempotently
+    // reproducible), while first registration is checked structurally.
+    let line = v2_register_device_request(&NewDevice {
+        usd_per_hr: Some(0.40),
+        ..NewDevice::new("sim-parity9", 40, 1500.0, 320.0, 8.1, true)
+    });
+    let svc = fresh();
+    let first = svc.handle_line(&line);
+    let ack = RegisteredDevice::from_json(&first).unwrap();
+    assert_eq!(ack.device, "sim-parity9");
+    // Same descriptor again: idempotent success must also agree.
+    assert_eq!(svc.handle_line(&line), svc.dispatch_http(&line).reply);
+    // A conflicting descriptor (different SM count) errors with the
+    // same bytes and a labeled code on the HTTP side.
+    let clash =
+        v2_register_device_request(&NewDevice::new("sim-parity9", 41, 1500.0, 320.0, 8.1, true));
+    let via_line = svc.handle_line(&clash);
+    let via_http = svc.dispatch_http(&clash);
+    assert_eq!(via_line, via_http.reply);
+    assert_eq!(via_http.error, Some("conflict"));
+    let v = json::parse(&via_line).unwrap();
+    assert!(v2_check_error(&v).unwrap_err().to_string().contains("conflict"), "{via_line}");
+}

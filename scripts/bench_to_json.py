@@ -77,6 +77,15 @@ SPEEDUPS = [
         "cluster/sweep_256_ranks",
         "engine/single_dest/resnet50",
     ),
+    # Informational: the HTTP dispatch entry point against the TCP line
+    # entry point for the same warm predict request. Both route through
+    # the one shared Dispatcher, so this should sit near 1.0 — a drift
+    # would mean a transport grew its own request-handling logic.
+    (
+        "http_vs_tcp_dispatch",
+        "service/dispatch_http_request/predict",
+        "service/dispatch_tcp_line/predict",
+    ),
 ]
 
 # The ratio --min-speedup gates on (kept for CI-invocation stability).

@@ -13,12 +13,21 @@ typed `overloaded` backpressure signal — `overloaded` replies are
 counted and reported, not treated as failures, because they are the
 bounded runtime doing its job.
 
+With `--http` the same request mix is driven as `POST /v2` bodies over
+keep-alive HTTP/1.1 connections (one request in flight per connection —
+the HTTP front end is measured request/response, not pipelined), against
+the server's `--http-port` front end. A `503` carrying the typed
+`overloaded` body counts as backpressure, exactly like the TCP mode.
+
 Usage:
   # against an already running server
   python3 scripts/loadgen.py --addr 127.0.0.1:7780
 
   # boot a private server first (CI mode), quick settings
   python3 scripts/loadgen.py --spawn target/release/habitat --quick
+
+  # the HTTP front end (spawn mode boots the TCP listener on PORT+1)
+  python3 scripts/loadgen.py --spawn target/release/habitat --quick --http
 """
 
 import argparse
@@ -136,6 +145,79 @@ def run_connection(host, port, conn_id, requests, window, timeout, result):
             pass
 
 
+def read_http_response(rfile):
+    """One HTTP/1.1 response off a buffered reader: (status, body str)."""
+    status_line = rfile.readline()
+    if not status_line:
+        raise OSError("connection closed mid-response")
+    parts = status_line.split()
+    status = int(parts[1]) if len(parts) >= 2 else 0
+    length = 0
+    while True:
+        header = rfile.readline()
+        if not header:
+            raise OSError("connection closed mid-headers")
+        if header in (b"\r\n", b"\n"):
+            break
+        key, _, value = header.partition(b":")
+        if key.strip().lower() == b"content-length":
+            length = int(value.strip())
+    body = rfile.read(length) if length else b""
+    if length and len(body) < length:
+        raise OSError("connection closed mid-body")
+    return status, body.decode("utf-8", errors="replace")
+
+
+def run_http_connection(host, port, conn_id, requests, timeout, result):
+    """The HTTP twin of run_connection: same workload, same accounting,
+    one keep-alive connection, request/response (no pipelining)."""
+    try:
+        sock = socket.create_connection((host, port), timeout=timeout)
+    except OSError as e:
+        result.errors.append(f"conn {conn_id}: connect failed: {e}")
+        result.dropped += len(requests)
+        return
+    sock.settimeout(timeout)
+    rfile = sock.makefile("rb")
+    answered = 0
+    try:
+        for line in requests:
+            body = line.encode()
+            head = (
+                f"POST /v2 HTTP/1.1\r\nHost: {host}\r\n"
+                f"Content-Type: application/json\r\nContent-Length: {len(body)}\r\n\r\n"
+            ).encode()
+            t0 = time.monotonic()
+            sock.sendall(head + body)
+            status, reply = read_http_response(rfile)
+            result.latencies_ms.append((time.monotonic() - t0) * 1e3)
+            try:
+                obj = json.loads(reply)
+            except json.JSONDecodeError:
+                result.errors.append(f"conn {conn_id}: unparseable reply: {reply[:120]!r}")
+                obj = {}
+            err = obj.get("error")
+            if err is not None:
+                code = err.get("code") if isinstance(err, dict) else None
+                if code == "overloaded":
+                    result.overloaded += 1
+                else:
+                    result.errors.append(
+                        f"conn {conn_id}: error reply (HTTP {status}): {reply.strip()[:200]}"
+                    )
+            elif status != 200:
+                result.errors.append(f"conn {conn_id}: HTTP {status} without an error body")
+            answered += 1
+    except OSError as e:
+        result.dropped += len(requests) - answered
+        result.errors.append(f"conn {conn_id}: socket error: {e}")
+    finally:
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+
 def percentile(sorted_vals, p):
     if not sorted_vals:
         return 0.0
@@ -168,10 +250,16 @@ def main():
     ap.add_argument("--out", default="BENCH_service.json", help="JSON results path")
     ap.add_argument("--quick", action="store_true", help="small CI-sized run (8 conns x 50 reqs)")
     ap.add_argument(
+        "--http",
+        action="store_true",
+        help="drive POST /v2 on the HTTP front end at ADDR instead of the TCP line protocol",
+    )
+    ap.add_argument(
         "--spawn",
         metavar="HABITAT_BIN",
         default=None,
-        help="boot `HABITAT_BIN serve --addr ADDR` first and tear it down after",
+        help="boot `HABITAT_BIN serve --addr ADDR` first and tear it down after "
+        "(with --http, ADDR is the HTTP port and the TCP listener takes PORT+1)",
     )
     args = ap.parse_args()
     if args.quick:
@@ -183,8 +271,15 @@ def main():
 
     server = None
     if args.spawn:
+        cmd = [args.spawn, "serve"]
+        if args.http:
+            # ADDR names the HTTP front end under test; the (always-on)
+            # TCP listener parks one port up.
+            cmd += ["--addr", f"{host}:{port + 1}", "--http-port", str(port)]
+        else:
+            cmd += ["--addr", args.addr]
         server = subprocess.Popen(
-            [args.spawn, "serve", "--addr", args.addr],
+            cmd,
             stdout=subprocess.PIPE,
             stderr=subprocess.STDOUT,
         )
@@ -196,7 +291,10 @@ def main():
         # Warm the trace cache so the measured run reflects steady-state
         # service latency, not first-touch tracking passes.
         warm = ConnResult()
-        run_connection(host, port, 0, build_requests(0, 8), 1, args.timeout, warm)
+        if args.http:
+            run_http_connection(host, port, 0, build_requests(0, 8), args.timeout, warm)
+        else:
+            run_connection(host, port, 0, build_requests(0, 8), 1, args.timeout, warm)
         if warm.errors:
             print("loadgen: warmup failed:")
             for e in warm.errors:
@@ -207,10 +305,15 @@ def main():
         threads = []
         t0 = time.monotonic()
         for c in range(args.conns):
-            t = threading.Thread(
-                target=run_connection,
-                args=(host, port, c, build_requests(c, args.requests), args.window, args.timeout, results[c]),
-            )
+            if args.http:
+                target, targs = run_http_connection, (
+                    host, port, c, build_requests(c, args.requests), args.timeout, results[c],
+                )
+            else:
+                target, targs = run_connection, (
+                    host, port, c, build_requests(c, args.requests), args.window, args.timeout, results[c],
+                )
+            t = threading.Thread(target=target, args=targs)
             t.start()
             threads.append(t)
         for t in threads:
@@ -233,11 +336,13 @@ def main():
     errors = [e for r in results for e in r.errors]
 
     summary = {
+        "schema": "habitat-loadgen-v1",
         "config": {
             "addr": args.addr,
             "conns": args.conns,
             "requests_per_conn": args.requests,
-            "pipeline_window": args.window,
+            "pipeline_window": 1 if args.http else args.window,
+            "transport": "http" if args.http else "tcp",
         },
         "totals": {
             "requests": total,

@@ -20,7 +20,13 @@ Checks, in order:
      is a well-formed COMM_OPS-style schedule;
   5. stats reflects the session's activity;
   6. malformed lines (including unknown topologies/links) produce the
-     exact expected error shapes and do not kill the connection.
+     exact expected error shapes and do not kill the connection;
+  7. the HTTP front end (`--http-port`) answers the same dispatcher:
+     `GET /healthz`, `POST /v2` (a v1-shaped body replies field-for-field
+     identically to the TCP session's v1 predict), malformed bodies get
+     a structured 400, and `GET /metrics` exposes per-op request
+     counters and latency histogram buckets that increase across the
+     scripted HTTP session.
 
 With `--store DIR` the server runs against the persistent plan store,
 and the script boots it TWICE: the first boot runs the full session
@@ -38,6 +44,7 @@ exits 1.
 
 import argparse
 import glob
+import http.client
 import json
 import os
 import socket
@@ -46,6 +53,7 @@ import sys
 import time
 
 HOST, PORT = "127.0.0.1", 7797
+HTTP_PORT = PORT + 2  # PORT + 1 is the warm-restore second boot
 FAILURES = []
 BUILTINS = ["P4000", "P100", "V100", "RTX2070", "RTX2080Ti", "T4"]
 
@@ -61,10 +69,12 @@ def expect_eq(name, got, want):
     check(name, got == want, f"got {got!r}, want {want!r}")
 
 
-def boot_server(port, store):
+def boot_server(port, store, http_port=None):
     argv = ["target/release/habitat", "serve", "--addr", f"{HOST}:{port}"]
     if store:
         argv += ["--store", store]
+    if http_port:
+        argv += ["--http-port", str(http_port)]
     server = subprocess.Popen(argv, stdout=subprocess.PIPE, stderr=subprocess.STDOUT)
     for _ in range(100):
         try:
@@ -118,9 +128,10 @@ def main():
     # store at all, or a store directory with no persisted plans yet.
     cold = args.store is None or plan_count(args.store) == 0
 
-    server = boot_server(PORT, args.store)
+    server = boot_server(PORT, args.store, http_port=HTTP_PORT)
     try:
         v1_predict = run_session(PORT, cold=cold, store=args.store is not None)
+        run_http_session(HTTP_PORT, v1_predict)
     finally:
         if args.store:
             # The engine persists write-behind on its worker pool; give
@@ -161,6 +172,97 @@ def run_warm_boot_checks(port, store, v1_predict_ref):
         sock.close()
     finally:
         stop_server(server)
+
+
+def metric_value(text, name, labels):
+    """Value of one Prometheus sample line, e.g.
+    metric_value(text, "habitat_requests_total", '{op="predict"}')."""
+    prefix = f"{name}{labels} "
+    for line in text.splitlines():
+        if line.startswith(prefix):
+            return float(line[len(prefix):])
+    return None
+
+
+def run_http_session(port, v1_predict_ref):
+    print(f"\n-- HTTP front end on :{port} (same dispatcher, second transport) --")
+    conn = http.client.HTTPConnection(HOST, port, timeout=120)
+
+    def http_rpc(method, path, body=None):
+        payload = None if body is None else (
+            body if isinstance(body, str) else json.dumps(body)
+        )
+        conn.request(method, path, body=payload)
+        resp = conn.getresponse()
+        return resp.status, resp.read().decode("utf-8")
+
+    status, body = http_rpc("GET", "/healthz")
+    expect_eq("healthz status", status, 200)
+    expect_eq("healthz body", body, "ok\n")
+
+    # Baseline scrape, then a scripted session, then a second scrape:
+    # the per-op counters and histogram buckets must count every request.
+    status, before = http_rpc("GET", "/metrics")
+    expect_eq("metrics scrape status", status, 200)
+    check("metrics exposes the request counter family", "# TYPE habitat_requests_total counter" in before, before[:200])
+    check("metrics exposes latency histograms", "# TYPE habitat_request_latency_ms histogram" in before, before[:200])
+    p_before = metric_value(before, "habitat_requests_total", '{op="predict"}') or 0
+    h_before = metric_value(before, "habitat_request_latency_ms_count", '{op="predict"}') or 0
+    e_before = metric_value(before, "habitat_request_errors_total", '{op="predict"}') or 0
+
+    # A v1-shaped body over HTTP answers field-for-field like the TCP
+    # session's v1 predict (one dispatcher behind both transports).
+    status, body = http_rpc(
+        "POST", "/v2", {"model": "resnet50", "batch": 32, "origin": "rtx2070", "dest": "v100"}
+    )
+    expect_eq("HTTP v1-shaped predict status", status, 200)
+    expect_eq("HTTP v1-shaped predict == TCP v1 predict", json.loads(body), v1_predict_ref)
+
+    status, body = http_rpc(
+        "POST", "/v2",
+        {"v": 2, "op": "predict", "model": "resnet50", "batch": 32, "origin": "rtx2070", "dest": "v100"},
+    )
+    expect_eq("HTTP v2 predict status", status, 200)
+    expect_eq("HTTP v2 envelope op echo", json.loads(body).get("op"), "predict")
+
+    status, body = http_rpc("POST", "/v2", {"v": 2, "op": "stats"})
+    expect_eq("HTTP v2 stats status", status, 200)
+    v2_stats = json.loads(body)
+    for field in ("requests", "request_errors"):
+        check(f"HTTP v2 stats carries {field}", field in v2_stats, str(v2_stats)[:200])
+
+    # Error mapping: dispatcher codes become statuses, bodies stay
+    # structured.
+    status, body = http_rpc("POST", "/v2", "this is not json")
+    expect_eq("malformed body status", status, 400)
+    expect_eq("malformed body error code", json.loads(body).get("error", {}).get("code"), "bad_request")
+    status, body = http_rpc(
+        "POST", "/v2", {"model": "resnet50", "batch": 8, "origin": "a100", "dest": "v100"}
+    )
+    expect_eq("unknown device over HTTP status", status, 400)
+    expect_eq("unknown device over HTTP keeps the v1 body", json.loads(body), {"error": 'unknown origin device "a100"'})
+    status, body = http_rpc("GET", "/nope")
+    expect_eq("unknown endpoint status", status, 404)
+    expect_eq("unknown endpoint error code", json.loads(body).get("error", {}).get("code"), "bad_request")
+    status, _ = http_rpc("PUT", "/v2")
+    expect_eq("wrong method status", status, 405)
+
+    status, after = http_rpc("GET", "/metrics")
+    expect_eq("second metrics scrape status", status, 200)
+    p_after = metric_value(after, "habitat_requests_total", '{op="predict"}')
+    h_after = metric_value(after, "habitat_request_latency_ms_count", '{op="predict"}')
+    e_after = metric_value(after, "habitat_request_errors_total", '{op="predict"}')
+    inf_after = metric_value(after, "habitat_request_latency_ms_bucket", '{op="predict",le="+Inf"}')
+    # 3 predict requests this session (v1-shaped, v2, unknown-device),
+    # one of them an error.
+    expect_eq("predict counter counted the HTTP session", p_after, p_before + 3)
+    expect_eq("predict histogram counted the HTTP session", h_after, h_before + 3)
+    expect_eq("predict error counter counted the bad device", e_after, e_before + 1)
+    expect_eq("+Inf bucket is cumulative over all requests", inf_after, h_after)
+    s_after = metric_value(after, "habitat_requests_total", '{op="stats"}')
+    check("stats op counted", (s_after or 0) >= 1, after[:400])
+
+    conn.close()
 
 
 def run_session(port, cold=True, store=False):
