@@ -93,6 +93,21 @@ fn main() {
             .sum::<f64>()
     });
 
+    // --- plan: SIMD lanes vs the per-destination scalar path -------------
+    // The vectorization claim as one gated ratio: `plan/evaluate_60_dests`
+    // above is the per-destination scalar path (60 independent evaluate
+    // calls); this is the identical workload through the lane-vectorized
+    // kernel-major sweep with a warm scratch arena. bench_to_json.py
+    // emits their ratio as `scalar_vs_simd_sweep` (CI gates it ≥ 1.5×).
+    println!("(simd backend: {})", habitat::util::simdf64::backend());
+    let mut simd_scratch = EvalScratch::new();
+    bench("plan/evaluate_batch_simd_vs_scalar", || {
+        wave.evaluate_batch_times(&plan, &many_dests, Precision::Fp32, &mut simd_scratch);
+        (0..many_dests.len())
+            .map(|i| simd_scratch.run_time_ms(i))
+            .sum::<f64>()
+    });
+
     // --- engine: cold (tracking pipeline every time) vs cached ----------
     let engine = PredictionEngine::wave_only();
     bench("engine/predict_cold/resnet50", || {
@@ -145,6 +160,32 @@ fn main() {
             .unwrap()
             .entries
             .len()
+    });
+
+    // --- engine: one-call multi-trace sweep over the zoo -----------------
+    // Five models × 60 destinations as ONE work-claimed job set
+    // (`evaluate_many_times`) — the path `rank_many`, the throughput
+    // matrices, and `predict_cluster_many` all ride. Jobs and the
+    // `SweepTimes` arena are built once outside the closure, so steady
+    // state is the zero-allocation serving regime.
+    let zoo_plans: Vec<_> = habitat::models::MODEL_NAMES
+        .iter()
+        .map(|m| engine.analyzed(m, 32, Device::Rtx2070).unwrap())
+        .collect();
+    let zoo_jobs: Vec<habitat::engine::SweepJob<'_>> = zoo_plans
+        .iter()
+        .map(|a| habitat::engine::SweepJob {
+            plan: std::sync::Arc::clone(&a.plan),
+            dests: &many_dests,
+            precision: Precision::Fp32,
+        })
+        .collect();
+    let mut zoo_times = habitat::engine::SweepTimes::new();
+    bench("engine/evaluate_many_zoo", || {
+        engine.evaluate_many_times(&zoo_jobs, &mut zoo_times);
+        (0..zoo_jobs.len())
+            .map(|j| zoo_times.job(j)[0])
+            .sum::<f64>()
     });
     // --- cluster: the full topology × world sweep ------------------------
     // 2 topologies × 9 world sizes up to 256 ranks, all composed on a
@@ -252,13 +293,14 @@ fn main() {
 
     let stats = engine.stats();
     println!(
-        "(engine counters: trace {} hits / {} misses; {} plan builds; {} workers; wave table {} hits / {} misses, process-wide)",
+        "(engine counters: trace {} hits / {} misses; {} plan builds; {} workers; wave table {} hits / {} misses; simd {}, process-wide)",
         stats.trace_hits,
         stats.trace_misses,
         stats.plan_builds,
         stats.workers,
         stats.wave_hits,
-        stats.wave_misses
+        stats.wave_misses,
+        stats.simd
     );
 
     match habitat::runtime::predictor_from_artifacts("artifacts") {

@@ -10,12 +10,12 @@
 //! owner had.
 
 use std::collections::BTreeMap;
-
+use std::sync::Arc;
 
 use crate::device::Device;
+use crate::engine::{PredictionEngine, SweepJob, SweepTimes};
 use crate::lowering::Precision;
-use crate::plan::EvalScratch;
-use crate::predict::HybridPredictor;
+use crate::plan::AnalyzedPlan;
 use crate::tracker::Trace;
 
 /// One training job waiting for placement.
@@ -51,29 +51,46 @@ pub struct ThroughputMatrix {
 }
 
 impl ThroughputMatrix {
-    /// Build the matrix by tracking each job once on its origin and
-    /// predicting every candidate device.
-    pub fn build(
-        predictor: &HybridPredictor,
+    /// Compile every job's trace into a plan and run the whole matrix as
+    /// **one** multi-trace sweep on the engine's shared worker pool
+    /// ([`PredictionEngine::evaluate_many_times`]): one work-claimed job
+    /// set, one scratch arena per worker, no per-job pool round-trips.
+    /// Each row stays bit-identical to a per-job kernel-major sweep —
+    /// and therefore to per-cell scalar evaluates.
+    fn sweep(
+        engine: &PredictionEngine,
         traces: &[(Job, Trace)],
         devices: &[Device],
-    ) -> Self {
-        let mut matrix = Vec::with_capacity(traces.len());
-        // One scratch arena for the whole matrix: each job is a single
-        // kernel-major batched sweep over all candidate devices
-        // (bit-identical to per-cell scalar evaluates), and the arena's
-        // buffers carry their capacity from job to job. Throughputs are
-        // read straight off the sweep accumulator — no per-cell
-        // `PredictedTrace` materialization.
-        let mut scratch = EvalScratch::new();
-        for (_, trace) in traces {
-            let plan = crate::plan::AnalyzedPlan::build(trace, &predictor.metrics_policy);
-            predictor.evaluate_batch_times(&plan, devices, Precision::Fp32, &mut scratch);
-            let row: Vec<f64> = (0..devices.len())
-                .map(|i| scratch.throughput(i, plan.batch_size))
-                .collect();
-            matrix.push(row);
-        }
+    ) -> (Vec<Arc<AnalyzedPlan>>, SweepTimes) {
+        let plans: Vec<Arc<AnalyzedPlan>> =
+            traces.iter().map(|(_, t)| engine.analyze(t)).collect();
+        let jobs: Vec<SweepJob<'_>> = plans
+            .iter()
+            .map(|plan| SweepJob {
+                plan: Arc::clone(plan),
+                dests: devices,
+                precision: Precision::Fp32,
+            })
+            .collect();
+        let mut times = SweepTimes::new();
+        engine.evaluate_many_times(&jobs, &mut times);
+        (plans, times)
+    }
+
+    /// Build the matrix by tracking each job once on its origin and
+    /// predicting every candidate device.
+    pub fn build(engine: &PredictionEngine, traces: &[(Job, Trace)], devices: &[Device]) -> Self {
+        let (plans, times) = Self::sweep(engine, traces, devices);
+        let matrix: Vec<Vec<f64>> = plans
+            .iter()
+            .enumerate()
+            .map(|(j, plan)| {
+                // Same expression as `EvalScratch::throughput`, applied
+                // to the swept per-destination times.
+                let batch = plan.batch_size as f64;
+                times.job(j).iter().map(|ms| batch / (ms / 1e3)).collect()
+            })
+            .collect();
         ThroughputMatrix {
             jobs: traces.iter().map(|(j, _)| j.clone()).collect(),
             devices: devices.to_vec(),
@@ -85,39 +102,40 @@ impl ThroughputMatrix {
     /// the **global** samples/s of a `world`-replica data-parallel gang
     /// of that device on `topology`, composed with the topology-aware
     /// collective model ([`crate::comm::cluster::compose`]). `world = 1`
-    /// degenerates to `build` exactly. Each job is still one
-    /// kernel-major batched sweep; the collective composition is a
-    /// per-cell epilogue on the swept compute times.
+    /// degenerates to `build` exactly. All jobs still run as one
+    /// multi-trace sweep; the collective composition is a per-cell
+    /// epilogue on the swept compute times.
     pub fn build_cluster(
-        predictor: &HybridPredictor,
+        engine: &PredictionEngine,
         traces: &[(Job, Trace)],
         devices: &[Device],
         topology: crate::comm::Topology,
         world: usize,
         params: &crate::comm::ClusterParams,
     ) -> Self {
-        let mut matrix = Vec::with_capacity(traces.len());
-        let mut scratch = EvalScratch::new();
-        for (_, trace) in traces {
-            let plan = crate::plan::AnalyzedPlan::build(trace, &predictor.metrics_policy);
-            let comm = crate::comm::trace_comm(trace);
-            predictor.evaluate_batch_times(&plan, devices, Precision::Fp32, &mut scratch);
-            let row: Vec<f64> = (0..devices.len())
-                .map(|i| {
-                    let compute_ms = scratch.run_time_ms(i);
-                    crate::comm::cluster::compose(
-                        compute_ms,
-                        plan.batch_size,
-                        &comm,
-                        topology,
-                        world,
-                        params,
-                    )
-                    .throughput
-                })
-                .collect();
-            matrix.push(row);
-        }
+        let (plans, times) = Self::sweep(engine, traces, devices);
+        let matrix: Vec<Vec<f64>> = plans
+            .iter()
+            .enumerate()
+            .map(|(j, plan)| {
+                let comm = crate::comm::trace_comm(&traces[j].1);
+                times
+                    .job(j)
+                    .iter()
+                    .map(|compute_ms| {
+                        crate::comm::cluster::compose(
+                            *compute_ms,
+                            plan.batch_size,
+                            &comm,
+                            topology,
+                            world,
+                            params,
+                        )
+                        .throughput
+                    })
+                    .collect()
+            })
+            .collect();
         ThroughputMatrix {
             jobs: traces.iter().map(|(j, _)| j.clone()).collect(),
             devices: devices.to_vec(),
@@ -191,25 +209,25 @@ mod tests {
     }
 
     fn toy_matrix() -> ThroughputMatrix {
-        let predictor = HybridPredictor::wave_only();
+        let engine = PredictionEngine::wave_only();
         let traces = vec![job("a", "mlp", 64), job("b", "dcgan", 64)];
-        ThroughputMatrix::build(&predictor, &traces, &[Device::V100, Device::T4])
+        ThroughputMatrix::build(&engine, &traces, &[Device::V100, Device::T4])
     }
 
     #[test]
     fn matrix_is_bit_identical_to_per_cell_scalar_evaluation() {
-        // The batched rewrite of `build` must not move a single bit:
-        // every cell is pinned against an independent scalar evaluate.
-        let predictor = HybridPredictor::wave_only();
+        // The multi-trace-sweep rewrite of `build` must not move a single
+        // bit: every cell is pinned against an independent scalar evaluate.
+        let engine = PredictionEngine::wave_only();
         let traces = vec![job("a", "mlp", 64), job("b", "dcgan", 64)];
         let devices = [Device::V100, Device::T4, Device::P4000];
-        let m = ThroughputMatrix::build(&predictor, &traces, &devices);
+        let m = ThroughputMatrix::build(&engine, &traces, &devices);
         assert_eq!(m.matrix.len(), traces.len());
         for (j, (_, trace)) in traces.iter().enumerate() {
-            let plan = crate::plan::AnalyzedPlan::build(trace, &predictor.metrics_policy);
+            let plan = engine.analyze(trace);
             assert_eq!(m.matrix[j].len(), devices.len());
             for (d, dev) in devices.iter().enumerate() {
-                let scalar = predictor.evaluate(&plan, *dev).throughput();
+                let scalar = engine.predictor().evaluate(&plan, *dev).throughput();
                 assert_eq!(
                     m.matrix[j][d].to_bits(),
                     scalar.to_bits(),
@@ -222,12 +240,12 @@ mod tests {
 
     #[test]
     fn cluster_matrix_world_one_is_bit_identical_to_single_gpu_build() {
-        let predictor = HybridPredictor::wave_only();
+        let engine = PredictionEngine::wave_only();
         let traces = vec![job("a", "mlp", 64), job("b", "dcgan", 64)];
         let devices = [Device::V100, Device::T4];
-        let single = ThroughputMatrix::build(&predictor, &traces, &devices);
+        let single = ThroughputMatrix::build(&engine, &traces, &devices);
         let gang = ThroughputMatrix::build_cluster(
-            &predictor,
+            &engine,
             &traces,
             &devices,
             crate::comm::Topology::DGX,
@@ -243,23 +261,23 @@ mod tests {
 
     #[test]
     fn cluster_matrix_gangs_scale_sublinearly_but_upward() {
-        let predictor = HybridPredictor::wave_only();
+        let engine = PredictionEngine::wave_only();
         let traces = vec![job("a", "resnet50", 32)];
         let devices = [Device::V100];
         let params = crate::comm::ClusterParams::default();
         let t1 = ThroughputMatrix::build_cluster(
-            &predictor, &traces, &devices, crate::comm::Topology::DGX, 1, &params,
+            &engine, &traces, &devices, crate::comm::Topology::DGX, 1, &params,
         )
         .matrix[0][0];
         let t8 = ThroughputMatrix::build_cluster(
-            &predictor, &traces, &devices, crate::comm::Topology::DGX, 8, &params,
+            &engine, &traces, &devices, crate::comm::Topology::DGX, 8, &params,
         )
         .matrix[0][0];
         assert!(t8 > t1, "an 8-gang should beat one GPU: {t8} vs {t1}");
         assert!(t8 <= 8.0 * t1 + 1e-9, "no superlinear scaling: {t8} vs 8×{t1}");
         // A slower interconnect can only hurt.
         let t8_cloud = ThroughputMatrix::build_cluster(
-            &predictor, &traces, &devices, crate::comm::Topology::CLOUD, 8, &params,
+            &engine, &traces, &devices, crate::comm::Topology::CLOUD, 8, &params,
         )
         .matrix[0][0];
         assert!(t8_cloud <= t8 + 1e-9, "cloud gang beat NVLink gang: {t8_cloud} vs {t8}");
@@ -269,10 +287,10 @@ mod tests {
     fn schedule_accepts_a_cluster_matrix() {
         // Gang-level placement: cells are global gang throughputs, the
         // greedy objective is unchanged.
-        let predictor = HybridPredictor::wave_only();
+        let engine = PredictionEngine::wave_only();
         let traces = vec![job("a", "mlp", 64), job("b", "dcgan", 64)];
         let m = ThroughputMatrix::build_cluster(
-            &predictor,
+            &engine,
             &traces,
             &[Device::V100, Device::T4],
             crate::comm::Topology::DGX,
@@ -333,9 +351,9 @@ mod tests {
             ..crate::device::NewDevice::new("sim-sched-xl", 128, 1700.0, 1600.0, 48.0, true)
         })
         .unwrap();
-        let predictor = HybridPredictor::wave_only();
+        let engine = PredictionEngine::wave_only();
         let traces = vec![job("a", "mlp", 64)];
-        let m = ThroughputMatrix::build(&predictor, &traces, &[Device::T4, d]);
+        let m = ThroughputMatrix::build(&engine, &traces, &[Device::T4, d]);
         assert!(m.matrix[0].iter().all(|t| *t > 0.0));
         // The big registered GPU out-throughputs a T4; with only it free,
         // the job lands there.

@@ -16,7 +16,7 @@
 //! connection mid-session surfaces as the typed
 //! [`ClientError::Disconnected`] — downcastable from the returned
 //! `anyhow::Error` — never as a bare broken-pipe `io::Error`. For
-//! *idempotent* operations (`predict`, `rank`, `stats`,
+//! *idempotent* operations (`predict`, `rank`, `rank_many`, `stats`,
 //! `predict_trace`, `rank_trace`, `predict_cluster`, `rank_cluster`,
 //! `export_workload`) the client additionally performs
 //! **one** automatic reconnect-and-retry; state-changing operations
@@ -30,7 +30,7 @@ use std::time::Duration;
 use crate::comm::Workload;
 use crate::coordinator::{
     service, ClusterRankResponse, ClusterResponse, PredictionRequest, PredictionResponse,
-    RankRequest, RankResponse, RegisteredDevice, StatsResponse,
+    RankManyResponse, RankRequest, RankResponse, RegisteredDevice, StatsResponse,
 };
 use crate::device::NewDevice;
 use crate::tracker::Trace;
@@ -217,6 +217,23 @@ impl Client {
             self.request_idempotent(&service::v2_rank_trace_request(trace_id, dests, precision))?;
         service::v2_check_error(&json::parse(&line)?)?;
         RankResponse::from_json(&line)
+    }
+
+    /// Rank several `(model, batch, origin)` traces over one shared
+    /// destination set in a single roundtrip
+    /// (`{"v":2,"op":"rank_many"}`) — the server runs all of them as one
+    /// work-claimed multi-trace sweep. `None` dests mean every device in
+    /// the server's registry. Idempotent: one automatic
+    /// reconnect-and-retry on disconnect.
+    pub fn rank_many(
+        &mut self,
+        items: &[(&str, usize, &str)],
+        dests: Option<&[String]>,
+        precision: Option<&str>,
+    ) -> Result<RankManyResponse> {
+        let line =
+            self.request_idempotent(&service::v2_rank_many_request(items, dests, precision))?;
+        RankManyResponse::from_json(&line)
     }
 
     /// Sweep one destination across a topology × world grid
@@ -671,5 +688,39 @@ mod tests {
             .predict_cluster("mlp", 16, "t4", "v100", Some(&["nope".to_string()]), None, None)
             .unwrap_err();
         assert!(err.to_string().contains("unknown_topology"), "{err}");
+    }
+
+    #[test]
+    fn rank_many_over_tcp() {
+        let addr = spawn_server();
+        let mut client = Client::connect(&addr).unwrap();
+        let dests = vec!["v100".to_string(), "t4".to_string()];
+        let items = [("mlp", 8usize, "t4"), ("dcgan", 16, "p4000")];
+
+        let many = client.rank_many(&items, Some(&dests), None).unwrap();
+        assert_eq!(many.results.len(), items.len());
+
+        // Each result is bitwise the same ranking a per-model `rank`
+        // with the same destination set would produce.
+        for ((model, batch, origin), got) in items.iter().zip(&many.results) {
+            let solo = client
+                .rank(&crate::coordinator::RankRequest {
+                    model: model.to_string(),
+                    batch: *batch,
+                    origin: origin.to_string(),
+                    precision: None,
+                    dests: Some(dests.clone()),
+                })
+                .unwrap();
+            assert_eq!(got.model, solo.model);
+            assert_eq!(got.ranking.len(), solo.ranking.len());
+            for (a, b) in got.ranking.iter().zip(&solo.ranking) {
+                assert_eq!(a.dest, b.dest);
+                assert_eq!(a.iter_ms.to_bits(), b.iter_ms.to_bits());
+            }
+        }
+
+        let err = client.rank_many(&[("nope", 8, "t4")], Some(&dests), None).unwrap_err();
+        assert!(err.to_string().contains("unknown_model"), "{err}");
     }
 }

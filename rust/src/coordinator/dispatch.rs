@@ -294,6 +294,7 @@ impl Dispatcher {
         match op {
             "predict" => (OpKind::Predict, self.v2_predict(v)),
             "rank" => (OpKind::Rank, self.v2_rank(v)),
+            "rank_many" => (OpKind::RankMany, self.v2_rank_many(v)),
             "stats" => (OpKind::Stats, Ok(self.v2_stats())),
             "submit_trace" => (OpKind::SubmitTrace, self.v2_submit_trace(v)),
             "register_device" => (OpKind::RegisterDevice, self.v2_register_device(v)),
@@ -304,7 +305,7 @@ impl Dispatcher {
                 OpKind::Other,
                 Err(V2Error::new(
                     "unsupported_op",
-                    format!("unsupported op {other:?} (want predict|rank|stats|submit_trace|register_device|predict_cluster|rank_cluster|export_workload)"),
+                    format!("unsupported op {other:?} (want predict|rank|rank_many|stats|submit_trace|register_device|predict_cluster|rank_cluster|export_workload)"),
                 )),
             ),
         }
@@ -370,6 +371,42 @@ impl Dispatcher {
         }
     }
 
+    /// `rank_many`: several `(model, batch, origin)` items ranked over
+    /// one shared destination set, served by a single work-claimed
+    /// multi-trace sweep ([`PredictionEngine::rank_many`]). The
+    /// `items × dests` product is capped like the cluster sweeps.
+    fn v2_rank_many(&self, v: &Json) -> V2Result {
+        let precision = Self::v2_precision(v)?;
+        let dests = Self::v2_dests(v)?;
+        let items_v = v
+            .get("items")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| V2Error::new("bad_request", "missing array field \"items\""))?;
+        if items_v.is_empty() {
+            return Err(V2Error::new("invalid_argument", "items must be non-empty"));
+        }
+        Self::check_sweep(items_v.len().saturating_mul(dests.len()))?;
+        let mut items = Vec::with_capacity(items_v.len());
+        for it in items_v {
+            let (model, batch, origin) = Self::v2_model_origin(it)?;
+            items.push(crate::engine::RankManyItem { model, batch, origin });
+        }
+        let rankings = self
+            .engine
+            .rank_many(&items, &dests, precision)
+            .map_err(|e| V2Error::new(classify_engine_error(&e), e.to_string()))?;
+        let results: Vec<Json> =
+            rankings.iter().map(|r| Self::rank_response(r).to_value()).collect();
+        Ok(v2_envelope(
+            "rank_many",
+            Json::obj(vec![
+                ("count", Json::Num(results.len() as f64)),
+                ("results", Json::Arr(results)),
+            ]),
+            Vec::new(),
+        ))
+    }
+
     fn v2_stats(&self) -> Json {
         let s = self.engine.stats();
         v2_envelope(
@@ -386,6 +423,9 @@ impl Dispatcher {
                     "parallel_build_chunks",
                     Json::Num(s.parallel_build_chunks as f64),
                 ),
+                // Which evaluation backend the sweeps run on ("avx2" or
+                // "scalar") — bit-identical either way.
+                ("simd", Json::Str(s.simd.to_string())),
                 // Dispatcher-level wire counters (0 until a transport
                 // routes through this dispatcher). A stats reply counts
                 // itself only after it is serialized, so these reflect
@@ -847,7 +887,8 @@ mod tests {
     use crate::coordinator::protocol::{
         stats_request_json, v2_check_error, v2_export_workload_request, v2_predict_cluster_request,
         v2_predict_model_request, v2_predict_trace_request, v2_rank_cluster_request,
-        v2_rank_trace_request, v2_stats_request, v2_submit_trace_request, RegisteredDevice,
+        v2_rank_many_request, v2_rank_trace_request, v2_stats_request, v2_submit_trace_request,
+        RankManyResponse, RegisteredDevice,
     };
     use crate::device::ALL_DEVICES;
 
@@ -1160,6 +1201,76 @@ mod tests {
         assert_eq!(parsed.req_usize("trace_misses").unwrap(), 1);
         assert_eq!(parsed.req_usize("trace_uploads").unwrap(), 0);
         assert!(parsed.req_usize("devices").unwrap() >= ALL_DEVICES.len());
+    }
+
+    #[test]
+    fn v2_rank_many_matches_individual_ranks() {
+        let s = wave_service();
+        let dests = vec!["v100".to_string(), "t4".to_string()];
+        let items = [("mlp", 8usize, "t4"), ("dcgan", 16, "p4000")];
+        let reply = s.handle_line(&v2_rank_many_request(&items, Some(&dests), None));
+        let v = json::parse(&reply).unwrap();
+        assert_eq!(v.req_str("op").unwrap(), "rank_many");
+        assert_eq!(v.req_usize("count").unwrap(), items.len());
+        let many = RankManyResponse::from_json(&reply).unwrap();
+        assert_eq!(many.results.len(), items.len());
+        for ((model, batch, origin), result) in items.iter().zip(&many.results) {
+            let mut solo_req = rank_req(model, *batch, origin);
+            solo_req.dests = Some(dests.clone());
+            let solo = s.handle_rank(&solo_req).unwrap();
+            assert_eq!(result.model, solo.model);
+            assert_eq!(result.origin_iter_ms.to_bits(), solo.origin_iter_ms.to_bits());
+            assert_eq!(result.ranking.len(), solo.ranking.len());
+            for (a, b) in result.ranking.iter().zip(&solo.ranking) {
+                assert_eq!(a.dest, b.dest);
+                assert_eq!(a.iter_ms.to_bits(), b.iter_ms.to_bits());
+                assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+            }
+        }
+        // One sweep's metrics line: a single rank_many request recorded.
+        assert_eq!(s.engine().metrics().snapshot(OpKind::RankMany).requests, 1);
+    }
+
+    #[test]
+    fn v2_rank_many_errors_are_structured() {
+        let s = wave_service();
+        let check = |line: &str, code: &str| {
+            let reply = s.handle_line(line);
+            let v = json::parse(&reply).unwrap();
+            assert_eq!(
+                v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+                Some(code),
+                "line {line} → {reply}"
+            );
+        };
+        check("{\"v\":2,\"op\":\"rank_many\"}", "bad_request");
+        check("{\"v\":2,\"op\":\"rank_many\",\"items\":[]}", "invalid_argument");
+        check(
+            "{\"v\":2,\"op\":\"rank_many\",\"items\":[{\"model\":\"nope\",\"batch\":8,\"origin\":\"t4\"}],\"dests\":[\"v100\"]}",
+            "unknown_model",
+        );
+        check(
+            "{\"v\":2,\"op\":\"rank_many\",\"items\":[{\"model\":\"mlp\",\"batch\":8,\"origin\":\"t4\"}],\"dests\":[\"a100\"]}",
+            "unknown_device",
+        );
+        // An oversized items × dests sweep is refused before any compute.
+        let dests = vec!["v100".to_string(), "t4".to_string()];
+        let items: Vec<(&str, usize, &str)> =
+            (0..MAX_CLUSTER_SWEEP / 2 + 1).map(|_| ("mlp", 8usize, "t4")).collect();
+        let line = v2_rank_many_request(&items, Some(&dests), None);
+        check(&line, "invalid_argument");
+    }
+
+    #[test]
+    fn v2_stats_report_the_simd_backend() {
+        let s = wave_service();
+        let reply = s.handle_line(&v2_stats_request());
+        let v = json::parse(&reply).unwrap();
+        assert_eq!(
+            v.req_str("simd").unwrap(),
+            crate::util::simdf64::backend(),
+            "v2 stats must report the active evaluation backend"
+        );
     }
 
     #[test]

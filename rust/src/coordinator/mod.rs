@@ -61,12 +61,12 @@ pub use dispatch::{DispatchOutcome, Dispatcher};
 pub use service::{
     overloaded_json, v2_check_error, v2_error_json, v2_export_workload_request,
     v2_predict_cluster_request, v2_predict_model_request, v2_predict_trace_request,
-    v2_rank_cluster_request, v2_rank_trace_request, v2_register_device_request,
-    v2_stats_request, v2_submit_trace_request, ClusterConfig, ClusterRankResponse,
-    ClusterRankedConfig, ClusterResponse, PredictionRequest, PredictionResponse,
-    PredictionService, RankRequest, RankResponse, RankedDest, RegisteredDevice, Request,
-    ServeOptions, ServerHandle, StatsResponse, DEFAULT_CLUSTER_WORLDS, DEFAULT_MAX_CONNS,
-    MAX_CONNS_ENV, PROTOCOL_V2, STORE_ENV,
+    v2_rank_cluster_request, v2_rank_many_request, v2_rank_trace_request,
+    v2_register_device_request, v2_stats_request, v2_submit_trace_request, ClusterConfig,
+    ClusterRankResponse, ClusterRankedConfig, ClusterResponse, PredictionRequest,
+    PredictionResponse, PredictionService, RankManyResponse, RankRequest, RankResponse,
+    RankedDest, RegisteredDevice, Request, ServeOptions, ServerHandle, StatsResponse,
+    DEFAULT_CLUSTER_WORLDS, DEFAULT_MAX_CONNS, MAX_CONNS_ENV, PROTOCOL_V2, STORE_ENV,
 };
 
 use crate::Result;

@@ -16,8 +16,9 @@
 //! * **stats** — `{"stats": true}` → the engine's counter snapshot.
 //!
 //! **v2** (the open-world envelope `{"v":2,"op":...}`): everything v1
-//! does, plus `submit_trace`, `register_device`, the cluster suite
-//! (`predict_cluster`, `rank_cluster`, `export_workload`), and
+//! does, plus `submit_trace`, `register_device`, `rank_many` (one call,
+//! many traces — served by a single multi-trace sweep), the cluster
+//! suite (`predict_cluster`, `rank_cluster`, `export_workload`), and
 //! structured `{"v":2,"error":{"code","message"}}` errors.
 
 use crate::device::{Device, NewDevice};
@@ -404,6 +405,12 @@ impl RankResponse {
         if let Some(err) = v.get("error").and_then(Json::as_str) {
             anyhow::bail!("server error: {err}");
         }
+        Self::from_value(&v)
+    }
+
+    /// Parse one ranking object — a whole v1/v2 `rank` response line, or
+    /// one entry of a v2 `rank_many` `results` array.
+    pub fn from_value(v: &Json) -> Result<Self> {
         let ranking = v
             .get("ranking")
             .and_then(Json::as_arr)
@@ -420,6 +427,38 @@ impl RankResponse {
                 .and_then(Json::as_f64)
                 .ok_or_else(|| anyhow::anyhow!("missing origin_iter_ms"))?,
             ranking,
+        })
+    }
+}
+
+/// The answer to a v2 `rank_many` request: one [`RankResponse`]-shaped
+/// object per requested `(model, batch, origin)` item, in request
+/// order. Every item's sweep ran as one work-claimed job set on the
+/// server ([`crate::engine::PredictionEngine::rank_many`]).
+#[derive(Debug, Clone)]
+pub struct RankManyResponse {
+    pub results: Vec<RankResponse>,
+}
+
+impl RankManyResponse {
+    pub fn to_value(&self) -> Json {
+        Json::obj(vec![(
+            "results",
+            Json::Arr(self.results.iter().map(RankResponse::to_value).collect()),
+        )])
+    }
+
+    pub fn from_json(line: &str) -> Result<Self> {
+        let v = json::parse(line)?;
+        v2_check_error(&v)?;
+        Ok(RankManyResponse {
+            results: v
+                .get("results")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("missing results array"))?
+                .iter()
+                .map(RankResponse::from_value)
+                .collect::<Result<Vec<_>>>()?,
         })
     }
 }
@@ -626,6 +665,40 @@ pub fn v2_register_device_request(d: &NewDevice) -> String {
     if let Some(x) = d.l2_kib {
         pairs.push(("l2_kib", Json::Num(x as f64)));
     }
+    Json::obj(pairs).dump()
+}
+
+/// `{"v":2,"op":"rank_many"}`: rank several `(model, batch, origin)`
+/// traces over one shared destination set in a single call. `None`
+/// dests mean every registered device.
+pub fn v2_rank_many_request(
+    items: &[(&str, usize, &str)],
+    dests: Option<&[String]>,
+    precision: Option<&str>,
+) -> String {
+    let mut pairs = vec![
+        ("v", Json::Num(PROTOCOL_V2)),
+        ("op", Json::Str("rank_many".into())),
+        (
+            "items",
+            Json::Arr(
+                items
+                    .iter()
+                    .map(|(model, batch, origin)| {
+                        Json::obj(vec![
+                            ("model", Json::Str(model.to_string())),
+                            ("batch", Json::Num(*batch as f64)),
+                            ("origin", Json::Str(origin.to_string())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ];
+    if let Some(d) = dests {
+        pairs.push(("dests", Json::Arr(d.iter().map(|s| Json::Str(s.clone())).collect())));
+    }
+    pairs.extend(precision_pair(precision));
     Json::obj(pairs).dump()
 }
 
@@ -1043,6 +1116,44 @@ mod tests {
     fn stats_line_dispatches_as_stats() {
         let line = stats_request_json();
         assert!(matches!(Request::from_json(&line).unwrap(), Request::Stats));
+    }
+
+    #[test]
+    fn rank_many_request_and_response_roundtrip() {
+        let line = v2_rank_many_request(
+            &[("mlp", 16, "t4"), ("dcgan", 32, "p4000")],
+            Some(&["v100".to_string()]),
+            Some("amp"),
+        );
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.req_str("op").unwrap(), "rank_many");
+        let items = v.get("items").and_then(Json::as_arr).unwrap();
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[1].req_str("model").unwrap(), "dcgan");
+        assert_eq!(items[1].req_usize("batch").unwrap(), 32);
+        assert_eq!(v.req_str("precision").unwrap(), "amp");
+
+        let resp = RankManyResponse {
+            results: vec![RankResponse {
+                model: "mlp".into(),
+                batch: 16,
+                origin: "t4".into(),
+                origin_iter_ms: 2.0,
+                ranking: vec![RankedDest {
+                    dest: "v100".into(),
+                    iter_ms: 1.0,
+                    throughput: 16_000.0,
+                    cost_normalized_throughput: None,
+                    mlp_time_fraction: 0.0,
+                    mlp_fallbacks: 0,
+                }],
+            }],
+        };
+        let env = v2_envelope("rank_many", resp.to_value(), vec![("count", Json::Num(1.0))]);
+        let parsed = RankManyResponse::from_json(&env.dump()).unwrap();
+        assert_eq!(parsed.results.len(), 1);
+        assert_eq!(parsed.results[0].model, "mlp");
+        assert_eq!(parsed.results[0].ranking[0].dest, "v100");
     }
 
     #[test]

@@ -21,10 +21,11 @@ pub use super::dispatch::{DispatchOutcome, Dispatcher, PredictionService};
 pub use super::protocol::{
     stats_request_json, v2_check_error, v2_error_json, v2_export_workload_request,
     v2_predict_cluster_request, v2_predict_model_request, v2_predict_trace_request,
-    v2_rank_cluster_request, v2_rank_trace_request, v2_register_device_request, v2_stats_request,
-    v2_submit_trace_request, ClusterConfig, ClusterRankResponse, ClusterRankedConfig,
-    ClusterResponse, PredictionRequest, PredictionResponse, RankRequest, RankResponse, RankedDest,
-    RegisteredDevice, Request, StatsResponse, DEFAULT_CLUSTER_WORLDS, PROTOCOL_V2,
+    v2_rank_cluster_request, v2_rank_many_request, v2_rank_trace_request,
+    v2_register_device_request, v2_stats_request, v2_submit_trace_request, ClusterConfig,
+    ClusterRankResponse, ClusterRankedConfig, ClusterResponse, PredictionRequest,
+    PredictionResponse, RankManyResponse, RankRequest, RankResponse, RankedDest, RegisteredDevice,
+    Request, StatsResponse, DEFAULT_CLUSTER_WORLDS, PROTOCOL_V2,
 };
 pub use super::tcp::{
     handle_connection, overloaded_json, serve, serve_with, service_from_artifacts, start,

@@ -30,6 +30,7 @@ use super::EngineStats;
 pub enum OpKind {
     Predict,
     Rank,
+    RankMany,
     Stats,
     SubmitTrace,
     RegisterDevice,
@@ -41,9 +42,10 @@ pub enum OpKind {
 
 impl OpKind {
     /// Every kind, in the order they are emitted on `/metrics`.
-    pub const ALL: [OpKind; 9] = [
+    pub const ALL: [OpKind; 10] = [
         OpKind::Predict,
         OpKind::Rank,
+        OpKind::RankMany,
         OpKind::Stats,
         OpKind::SubmitTrace,
         OpKind::RegisterDevice,
@@ -59,6 +61,7 @@ impl OpKind {
         match self {
             OpKind::Predict => "predict",
             OpKind::Rank => "rank",
+            OpKind::RankMany => "rank_many",
             OpKind::Stats => "stats",
             OpKind::SubmitTrace => "submit_trace",
             OpKind::RegisterDevice => "register_device",
@@ -73,13 +76,14 @@ impl OpKind {
         match self {
             OpKind::Predict => 0,
             OpKind::Rank => 1,
-            OpKind::Stats => 2,
-            OpKind::SubmitTrace => 3,
-            OpKind::RegisterDevice => 4,
-            OpKind::PredictCluster => 5,
-            OpKind::RankCluster => 6,
-            OpKind::ExportWorkload => 7,
-            OpKind::Other => 8,
+            OpKind::RankMany => 2,
+            OpKind::Stats => 3,
+            OpKind::SubmitTrace => 4,
+            OpKind::RegisterDevice => 5,
+            OpKind::PredictCluster => 6,
+            OpKind::RankCluster => 7,
+            OpKind::ExportWorkload => 8,
+            OpKind::Other => 9,
         }
     }
 }
@@ -242,7 +246,7 @@ impl ServiceMetrics {
             ));
         }
 
-        let gauges: [(&str, &str, u64); 14] = [
+        let gauges: [(&str, &str, u64); 15] = [
             ("habitat_engine_trace_hits", "Trace-cache hits.", engine.trace_hits),
             ("habitat_engine_trace_misses", "Trace-cache misses.", engine.trace_misses),
             (
@@ -280,6 +284,12 @@ impl ServiceMetrics {
                 "habitat_engine_parallel_build_chunks",
                 "Lane rows filled by the parallel plan builder.",
                 engine.parallel_build_chunks,
+            ),
+            (
+                "habitat_engine_simd_active",
+                "1 when the evaluation sweeps run on the vector backend, \
+                 0 on the scalar fallback (bit-identical either way).",
+                u64::from(engine.simd == "avx2"),
             ),
         ];
         for (name, help, value) in gauges {
@@ -335,12 +345,16 @@ mod tests {
         assert!(text.contains("habitat_request_latency_ms_bucket{op=\"stats\",le=\"+Inf\"} 2"));
         assert!(text.contains("habitat_request_latency_ms_count{op=\"stats\"} 2"));
         assert!(text.contains("habitat_engine_workers "));
+        // The SIMD gauge mirrors the engine's selected backend.
+        let expect = u64::from(crate::util::simdf64::backend() == "avx2");
+        assert!(text.contains(&format!("habitat_engine_simd_active {expect}")));
     }
 
     #[test]
     fn labels_match_wire_op_names() {
         assert_eq!(OpKind::SubmitTrace.label(), "submit_trace");
+        assert_eq!(OpKind::RankMany.label(), "rank_many");
         assert_eq!(OpKind::ExportWorkload.label(), "export_workload");
-        assert_eq!(OpKind::ALL.len(), 9);
+        assert_eq!(OpKind::ALL.len(), 10);
     }
 }

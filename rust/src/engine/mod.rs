@@ -110,6 +110,70 @@ pub struct Ranking {
     pub entries: Vec<RankEntry>,
 }
 
+/// One `(plan, destination set)` sweep of a multi-trace evaluation
+/// ([`PredictionEngine::evaluate_many`]). The plan rides an `Arc` bump
+/// (no clone of the arena) and the destination slice is borrowed, so
+/// building a job list allocates nothing beyond the list itself.
+pub struct SweepJob<'a> {
+    pub plan: Arc<AnalyzedPlan>,
+    pub dests: &'a [Device],
+    pub precision: Precision,
+}
+
+/// Reusable arena of per-destination iteration times filled by
+/// [`PredictionEngine::evaluate_many_times`]: one flat `times` buffer
+/// with one contiguous row per job, in the job's caller destination
+/// order. Capacity is retained across calls, so steady-state
+/// multi-trace sweeps through a warm arena allocate nothing (pinned by
+/// `rust/tests/batched_alloc.rs`).
+#[derive(Default)]
+pub struct SweepTimes {
+    times: Vec<f64>,
+    /// `offsets[j]..offsets[j + 1]` is job `j`'s row; one trailing
+    /// entry holds the total.
+    offsets: Vec<usize>,
+}
+
+impl SweepTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size the arena for `jobs` (capacity-reusing `clear` + `resize`).
+    fn reset(&mut self, jobs: &[SweepJob<'_>]) {
+        self.offsets.clear();
+        let mut total = 0usize;
+        self.offsets.push(0);
+        for job in jobs {
+            total += job.dests.len();
+            self.offsets.push(total);
+        }
+        self.times.clear();
+        self.times.resize(total, 0.0);
+    }
+
+    /// Jobs in the last fill.
+    pub fn n_jobs(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// Job `j`'s predicted iteration times (ms), one per caller
+    /// destination, in the job's destination order — each bit-identical
+    /// to [`crate::plan::EvalScratch::run_time_ms`] for that sweep.
+    pub fn job(&self, j: usize) -> &[f64] {
+        &self.times[self.offsets[j]..self.offsets[j + 1]]
+    }
+}
+
+/// One `(model, batch, origin)` row of a [`PredictionEngine::rank_many`]
+/// request.
+#[derive(Debug, Clone)]
+pub struct RankManyItem {
+    pub model: String,
+    pub batch: usize,
+    pub origin: Device,
+}
+
 /// One `(topology, world)` cell of a [`ClusterReport`].
 pub struct ClusterCell {
     pub topology: Topology,
@@ -211,6 +275,11 @@ pub struct EngineStats {
     pub requests: u64,
     /// Wire requests whose reply was an error.
     pub request_errors: u64,
+    /// The evaluation-lane backend the sweeps run on
+    /// ([`crate::util::simdf64::backend`]): `"avx2"` or `"scalar"`
+    /// (forced by `HABITAT_SIMD=off`, or no AVX2 on this machine).
+    /// Both backends produce bit-identical predictions.
+    pub simd: &'static str,
 }
 
 /// The shared prediction engine. `Send + Sync`: one engine serves any
@@ -834,6 +903,189 @@ impl PredictionEngine {
             .collect()
     }
 
+    /// Run every job of a multi-trace sweep through one work-claimed
+    /// job set on the shared pool: jobs sit behind an atomic cursor,
+    /// helpers are offered once with a non-blocking
+    /// [`pool::WorkerPool::try_execute`], and the calling thread claims
+    /// jobs too (deadlock-free from inside a pool worker, like
+    /// [`PredictionEngine::fan_out`]). Each claimed job is one batched
+    /// sweep on the claimer's pooled scratch — no per-job pool
+    /// round-trip, no cross-job barrier. With one worker (or one job)
+    /// everything runs on the calling thread with no channel at all.
+    /// `eval` maps one `(plan, dests, precision)` job to its result;
+    /// results come back in job order; a panicking job re-raises its
+    /// payload in the caller.
+    fn sweep_many<T, F>(&self, jobs: &[SweepJob<'_>], eval: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(&HybridPredictor, &AnalyzedPlan, &[Device], Precision) -> T
+            + Send
+            + Sync
+            + 'static,
+    {
+        let n_claimers = self.workers().min(jobs.len()).max(1);
+        if n_claimers == 1 {
+            return jobs
+                .iter()
+                .map(|j| eval(&self.predictor, &j.plan, j.dests, j.precision))
+                .collect();
+        }
+
+        struct ManySweeps<T, F> {
+            predictor: Arc<HybridPredictor>,
+            jobs: Vec<(Arc<AnalyzedPlan>, Vec<Device>, Precision)>,
+            eval: F,
+            next: AtomicUsize,
+            tx: mpsc::Sender<(usize, std::thread::Result<T>)>,
+        }
+        impl<T, F> ManySweeps<T, F>
+        where
+            F: Fn(&HybridPredictor, &AnalyzedPlan, &[Device], Precision) -> T,
+        {
+            fn run(&self) {
+                loop {
+                    let j = self.next.fetch_add(1, Relaxed);
+                    let Some((plan, dests, precision)) = self.jobs.get(j) else {
+                        break;
+                    };
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        (self.eval)(&self.predictor, plan, dests, *precision)
+                    }));
+                    if self.tx.send((j, result)).is_err() {
+                        break; // the caller bailed (panic propagation)
+                    }
+                }
+            }
+        }
+
+        let (tx, rx) = mpsc::channel();
+        let shared = Arc::new(ManySweeps {
+            predictor: Arc::clone(&self.predictor),
+            jobs: jobs
+                .iter()
+                .map(|j| (Arc::clone(&j.plan), j.dests.to_vec(), j.precision))
+                .collect(),
+            eval,
+            next: AtomicUsize::new(0),
+            tx,
+        });
+        for _ in 0..n_claimers - 1 {
+            let state = Arc::clone(&shared);
+            if self.pool().try_execute(move || state.run()).is_err() {
+                break; // pool saturated: the caller covers the rest alone
+            }
+        }
+        shared.run();
+        drop(shared);
+        let mut out: Vec<Option<T>> = Vec::with_capacity(jobs.len());
+        out.resize_with(jobs.len(), || None);
+        for _ in 0..jobs.len() {
+            let (j, result) = rx.recv().expect("a multi-sweep participant vanished");
+            match result {
+                Ok(v) => out[j] = Some(v),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        out.into_iter().map(|v| v.expect("every job swept")).collect()
+    }
+
+    /// Evaluate many `(plan, destination set)` pairs in one call: all
+    /// sweeps are scheduled as a single work-claimed job set on the
+    /// shared pool (one scratch per claiming thread, no per-call pool
+    /// round-trips). Results come back in job order, each a
+    /// `Vec<PredictedTrace>` in that job's destination order,
+    /// bit-identical to calling [`PredictionEngine::evaluate_batch`]
+    /// per job.
+    pub fn evaluate_many(&self, jobs: &[SweepJob<'_>]) -> Vec<Vec<PredictedTrace>> {
+        self.sweep_many(jobs, |predictor, plan, dests, precision| {
+            pool::with_scratch(|scratch| {
+                predictor.evaluate_batch_with(plan, dests, precision, scratch)
+            })
+        })
+    }
+
+    /// The aggregate-only multi-trace sweep: like
+    /// [`PredictionEngine::evaluate_many`] but leaving only each
+    /// destination's predicted iteration time (ms) in `out`, without
+    /// materializing any [`PredictedTrace`]. The cluster throughput
+    /// matrix and the dp/scheduler experiments run on this path. With a
+    /// warm `out` arena and a single worker, steady-state calls perform
+    /// **zero heap allocation** (pinned by
+    /// `rust/tests/batched_alloc.rs`); the multi-worker path pays only
+    /// the job-set channel, never per-destination allocations.
+    pub fn evaluate_many_times(&self, jobs: &[SweepJob<'_>], out: &mut SweepTimes) {
+        out.reset(jobs);
+        let n_claimers = self.workers().min(jobs.len()).max(1);
+        if n_claimers == 1 {
+            // Serial: sweep straight into the caller's arena — no
+            // channel, no per-job result vectors.
+            for (j, job) in jobs.iter().enumerate() {
+                let start = out.offsets[j];
+                pool::with_scratch(|scratch| {
+                    self.predictor.evaluate_batch_times(
+                        &job.plan,
+                        job.dests,
+                        job.precision,
+                        scratch,
+                    );
+                    for i in 0..job.dests.len() {
+                        out.times[start + i] = scratch.run_time_ms(i);
+                    }
+                });
+            }
+            return;
+        }
+        let rows = self.sweep_many(jobs, |predictor, plan, dests, precision| {
+            pool::with_scratch(|scratch| {
+                predictor.evaluate_batch_times(plan, dests, precision, scratch);
+                (0..dests.len()).map(|i| scratch.run_time_ms(i)).collect::<Vec<f64>>()
+            })
+        });
+        for (j, row) in rows.into_iter().enumerate() {
+            let start = out.offsets[j];
+            out.times[start..start + row.len()].copy_from_slice(&row);
+        }
+    }
+
+    /// Rank many `(model, batch, origin)` traces against one shared
+    /// destination set in a single call: every origin is tracked +
+    /// analyzed (or reused) through the cache, all sweeps run as one
+    /// work-claimed job set ([`PredictionEngine::evaluate_many`]), and
+    /// each trace's destinations are ordered exactly as
+    /// [`PredictionEngine::rank`] orders them — one result row per
+    /// item, in item order. A whole model zoo × registry ranking is one
+    /// call (and, over the wire, one `rank_many` request).
+    pub fn rank_many(
+        &self,
+        items: &[RankManyItem],
+        dests: &[Device],
+        precision: Precision,
+    ) -> Result<Vec<Ranking>> {
+        anyhow::ensure!(!items.is_empty(), "rank_many needs at least one item");
+        anyhow::ensure!(!dests.is_empty(), "rank_many needs at least one destination");
+        for item in items {
+            anyhow::ensure!(item.batch > 0, "batch must be positive");
+        }
+        let analyzed = items
+            .iter()
+            .map(|item| self.analyzed(&item.model, item.batch, item.origin))
+            .collect::<Result<Vec<_>>>()?;
+        let jobs: Vec<SweepJob<'_>> = analyzed
+            .iter()
+            .map(|a| SweepJob {
+                plan: Arc::clone(&a.plan),
+                dests,
+                precision,
+            })
+            .collect();
+        let preds = self.evaluate_many(&jobs);
+        Ok(analyzed
+            .iter()
+            .zip(preds)
+            .map(|(a, preds)| Self::ranking(a, dests, preds))
+            .collect())
+    }
+
     /// The paper's Fig. 1 decision as one call: track + analyze (or
     /// reuse) the origin once, fan out to every destination on the
     /// persistent pool, and rank by cost-normalized throughput. Rentable
@@ -863,6 +1115,14 @@ impl PredictionEngine {
         precision: Precision,
     ) -> Ranking {
         let preds = self.fan_out(&analyzed.plan, dests, precision);
+        Self::ranking(analyzed, dests, preds)
+    }
+
+    /// Build one sorted [`Ranking`] from already-evaluated destination
+    /// predictions — the single entry-construction + ordering used by
+    /// [`PredictionEngine::rank`] and [`PredictionEngine::rank_many`],
+    /// so the two cannot drift.
+    fn ranking(analyzed: &AnalyzedTrace, dests: &[Device], preds: Vec<PredictedTrace>) -> Ranking {
         let mut entries: Vec<RankEntry> = dests
             .iter()
             .zip(preds)
@@ -912,6 +1172,51 @@ impl PredictionEngine {
         self.cluster_report(&analyzed, dest, precision, topologies, worlds, params)
     }
 
+    /// [`PredictionEngine::predict_cluster`] for several `(model, batch)`
+    /// pairs at once: every model's single-GPU compute time comes from
+    /// **one** multi-trace sweep on the shared pool
+    /// ([`PredictionEngine::evaluate_many_times`]), then each report's
+    /// topology × world grid composes exactly as in
+    /// [`PredictionEngine::predict_cluster`] — reports are bit-identical
+    /// to the per-model calls, in input order.
+    #[allow(clippy::too_many_arguments)]
+    pub fn predict_cluster_many(
+        &self,
+        items: &[(&str, usize)],
+        origin: Device,
+        dest: Device,
+        precision: Precision,
+        topologies: &[Topology],
+        worlds: &[usize],
+        params: &ClusterParams,
+    ) -> Result<Vec<ClusterReport>> {
+        Self::check_cluster_grid(topologies, worlds)?;
+        anyhow::ensure!(!items.is_empty(), "cluster sweep needs at least one model");
+        let analyzed: Vec<AnalyzedTrace> = items
+            .iter()
+            .map(|(model, batch)| {
+                anyhow::ensure!(*batch > 0, "batch must be positive");
+                self.analyzed(model, *batch, origin)
+            })
+            .collect::<Result<_>>()?;
+        let dests = [dest];
+        let jobs: Vec<SweepJob<'_>> = analyzed
+            .iter()
+            .map(|a| SweepJob {
+                plan: Arc::clone(&a.plan),
+                dests: &dests,
+                precision,
+            })
+            .collect();
+        let mut times = SweepTimes::new();
+        self.evaluate_many_times(&jobs, &mut times);
+        Ok(analyzed
+            .iter()
+            .enumerate()
+            .map(|(i, a)| Self::compose_report(a, dest, times.job(i)[0], topologies, worlds, params))
+            .collect())
+    }
+
     /// [`PredictionEngine::predict_cluster`] for a previously submitted
     /// trace.
     pub fn predict_cluster_uploaded(
@@ -948,7 +1253,20 @@ impl PredictionEngine {
     ) -> Result<ClusterReport> {
         Self::check_cluster_grid(topologies, worlds)?;
         let pred = self.evaluate(&analyzed.plan, dest, precision);
-        let compute_ms = pred.run_time_ms();
+        Ok(Self::compose_report(analyzed, dest, pred.run_time_ms(), topologies, worlds, params))
+    }
+
+    /// The grid-composition epilogue shared by [`PredictionEngine::predict_cluster`]
+    /// and [`PredictionEngine::predict_cluster_many`]: one already-swept
+    /// single-GPU compute time, composed per `(topology, world)` cell.
+    fn compose_report(
+        analyzed: &AnalyzedTrace,
+        dest: Device,
+        compute_ms: f64,
+        topologies: &[Topology],
+        worlds: &[usize],
+        params: &ClusterParams,
+    ) -> ClusterReport {
         let tc = comm::trace_comm(&analyzed.trace);
         let batch = analyzed.plan.batch_size;
         let mut configs = Vec::with_capacity(topologies.len() * worlds.len());
@@ -967,12 +1285,12 @@ impl PredictionEngine {
                 });
             }
         }
-        Ok(ClusterReport {
+        ClusterReport {
             trace: Arc::clone(&analyzed.trace),
             dest,
             compute_ms,
             configs,
-        })
+        }
     }
 
     /// Rank every `(destination, topology, world)` configuration of a
@@ -1145,6 +1463,7 @@ impl PredictionEngine {
             parallel_build_chunks: self.parallel_build_chunks.load(Relaxed),
             requests: self.metrics.requests_total(),
             request_errors: self.metrics.errors_total(),
+            simd: crate::util::simdf64::backend(),
         }
     }
 
@@ -1314,6 +1633,192 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn evaluate_many_matches_per_job_batches() {
+        let e = PredictionEngine::wave_only().with_workers(4);
+        let jobs_spec = [
+            ("mlp", 16, Device::T4, Precision::Fp32),
+            ("mlp", 32, Device::T4, Precision::Amp),
+            ("dcgan", 16, Device::P4000, Precision::Fp32),
+        ];
+        let analyzed: Vec<_> = jobs_spec
+            .iter()
+            .map(|&(m, b, o, _)| e.analyzed(m, b, o).unwrap())
+            .collect();
+        let jobs: Vec<SweepJob<'_>> = analyzed
+            .iter()
+            .zip(&jobs_spec)
+            .map(|(a, &(_, _, _, precision))| SweepJob {
+                plan: Arc::clone(&a.plan),
+                dests: &ALL_DEVICES,
+                precision,
+            })
+            .collect();
+        let many = e.evaluate_many(&jobs);
+        assert_eq!(many.len(), jobs.len());
+        for ((job, a), preds) in jobs.iter().zip(&analyzed).zip(&many) {
+            let solo = e.evaluate_batch(&a.plan, job.dests, job.precision);
+            assert_eq!(preds.len(), solo.len());
+            for (p, s) in preds.iter().zip(&solo) {
+                assert_eq!(p.dest, s.dest);
+                assert_eq!(
+                    p.run_time_ms().to_bits(),
+                    s.run_time_ms().to_bits(),
+                    "{}: one-call sweep must match the per-job batch",
+                    p.dest
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn evaluate_many_times_matches_materialized_predictions() {
+        // Both the serial (1 worker) and the work-claimed (4 workers)
+        // paths must leave the exact run times the materializing sweep
+        // reports.
+        for workers in [1, 4] {
+            let e = PredictionEngine::wave_only().with_workers(workers);
+            let a = e.analyzed("mlp", 16, Device::T4).unwrap();
+            let b = e.analyzed("mlp", 24, Device::T4).unwrap();
+            let jobs = [
+                SweepJob {
+                    plan: Arc::clone(&a.plan),
+                    dests: &ALL_DEVICES,
+                    precision: Precision::Fp32,
+                },
+                SweepJob {
+                    plan: Arc::clone(&b.plan),
+                    dests: &ALL_DEVICES[..3],
+                    precision: Precision::Amp,
+                },
+            ];
+            let mut times = SweepTimes::new();
+            e.evaluate_many_times(&jobs, &mut times);
+            assert_eq!(times.n_jobs(), jobs.len());
+            let preds = e.evaluate_many(&jobs);
+            for (j, job) in jobs.iter().enumerate() {
+                let row = times.job(j);
+                assert_eq!(row.len(), job.dests.len());
+                for (i, pred) in preds[j].iter().enumerate() {
+                    assert_eq!(
+                        row[i].to_bits(),
+                        pred.run_time_ms().to_bits(),
+                        "job {j} dest {i} ({workers} workers)"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rank_many_matches_individual_ranks() {
+        let e = engine();
+        let items = vec![
+            RankManyItem {
+                model: "mlp".into(),
+                batch: 16,
+                origin: Device::T4,
+            },
+            RankManyItem {
+                model: "dcgan".into(),
+                batch: 16,
+                origin: Device::P4000,
+            },
+        ];
+        let many = e.rank_many(&items, &ALL_DEVICES, Precision::Fp32).unwrap();
+        assert_eq!(many.len(), items.len());
+        for (item, ranking) in items.iter().zip(&many) {
+            let solo = e
+                .rank(&item.model, item.batch, item.origin, &ALL_DEVICES, Precision::Fp32)
+                .unwrap();
+            assert_eq!(ranking.entries.len(), solo.entries.len());
+            for (m, s) in ranking.entries.iter().zip(&solo.entries) {
+                assert_eq!(m.dest, s.dest, "{}: one-call rank order must match", item.model);
+                assert_eq!(m.pred.run_time_ms().to_bits(), s.pred.run_time_ms().to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn rank_many_rejects_bad_input() {
+        let e = engine();
+        let item = |model: &str, batch| RankManyItem {
+            model: model.into(),
+            batch,
+            origin: Device::T4,
+        };
+        assert!(e.rank_many(&[], &ALL_DEVICES, Precision::Fp32).is_err());
+        assert!(e
+            .rank_many(&[item("mlp", 8)], &[], Precision::Fp32)
+            .is_err());
+        assert!(e
+            .rank_many(&[item("mlp", 0)], &ALL_DEVICES, Precision::Fp32)
+            .is_err());
+        assert!(e
+            .rank_many(&[item("not_a_model", 8)], &ALL_DEVICES, Precision::Fp32)
+            .is_err());
+    }
+
+    #[test]
+    fn predict_cluster_many_matches_per_model_reports() {
+        let e = engine();
+        let items = [("mlp", 16usize), ("dcgan", 16)];
+        let topologies = [Topology::DGX, Topology::CLOUD];
+        let worlds = [1usize, 4];
+        let params = ClusterParams::default();
+        let many = e
+            .predict_cluster_many(
+                &items,
+                Device::T4,
+                Device::V100,
+                Precision::Fp32,
+                &topologies,
+                &worlds,
+                &params,
+            )
+            .unwrap();
+        assert_eq!(many.len(), items.len());
+        for ((model, batch), report) in items.iter().zip(&many) {
+            let solo = e
+                .predict_cluster(
+                    model,
+                    *batch,
+                    Device::T4,
+                    Device::V100,
+                    Precision::Fp32,
+                    &topologies,
+                    &worlds,
+                    &params,
+                )
+                .unwrap();
+            assert_eq!(report.compute_ms.to_bits(), solo.compute_ms.to_bits());
+            assert_eq!(report.configs.len(), solo.configs.len());
+            for (a, b) in report.configs.iter().zip(&solo.configs) {
+                assert_eq!((a.topology, a.world), (b.topology, b.world));
+                assert_eq!(a.pred.iter_ms.to_bits(), b.pred.iter_ms.to_bits());
+                assert_eq!(a.pred.throughput.to_bits(), b.pred.throughput.to_bits());
+            }
+        }
+        assert!(e
+            .predict_cluster_many(
+                &[],
+                Device::T4,
+                Device::V100,
+                Precision::Fp32,
+                &topologies,
+                &worlds,
+                &params,
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn stats_report_the_simd_backend() {
+        let s = engine().stats();
+        assert_eq!(s.simd, crate::util::simdf64::backend());
+        assert!(matches!(s.simd, "avx2" | "scalar"));
     }
 
     #[test]

@@ -28,19 +28,20 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         ctx.csv_path("dp"),
         &["model", "topology", "world", "iter_ms", "exposed_comm_ms", "throughput", "efficiency"],
     )?;
-    for (model, batch) in [("resnet50", 32usize), ("gnmt", 32)] {
-        // One kernel-major pass per model: the whole topology × world
-        // grid shares a single compute prediction.
-        let report = ctx.engine().predict_cluster(
-            model,
-            batch,
-            origin,
-            dest,
-            Precision::Fp32,
-            &topologies,
-            &worlds,
-            &params,
-        )?;
+    // Both models' compute predictions come from one multi-trace sweep
+    // on the engine's shared pool; each topology × world grid then
+    // shares its model's single swept compute time.
+    let items = [("resnet50", 32usize), ("gnmt", 32)];
+    let reports = ctx.engine().predict_cluster_many(
+        &items,
+        origin,
+        dest,
+        Precision::Fp32,
+        &topologies,
+        &worlds,
+        &params,
+    )?;
+    for ((model, batch), report) in items.iter().zip(&reports) {
         for topology in topologies {
             println!("\n{model} bs={batch}/gpu on {dest} over {}:", topology.name());
             println!(

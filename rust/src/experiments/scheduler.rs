@@ -82,8 +82,9 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     let devices = [Device::V100, Device::P100, Device::T4, Device::Rtx2080Ti];
     let inventory: Inventory = devices.iter().map(|d| (*d, 2usize)).collect();
 
-    // habitat policy: greedy on *predicted* rates.
-    let predicted = ThroughputMatrix::build(ctx.predictor(), &pool, &devices);
+    // habitat policy: greedy on *predicted* rates — the whole matrix is
+    // one multi-trace sweep on the engine's shared pool.
+    let predicted = ThroughputMatrix::build(ctx.engine(), &pool, &devices);
     let habitat_placement: Vec<(usize, Device)> = schedule(&predicted, &inventory)
         .into_iter()
         .map(|p| {
@@ -187,9 +188,9 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     };
 
     // habitat policy: greedy on gang rates *predicted* by the cluster
-    // composition over the batched single-GPU sweep.
+    // composition over the multi-trace single-GPU sweep.
     let predicted_gang =
-        ThroughputMatrix::build_cluster(ctx.predictor(), &pool, &devices, topology, world, &params);
+        ThroughputMatrix::build_cluster(ctx.engine(), &pool, &devices, topology, world, &params);
     let habitat_gang = to_indices(schedule(&predicted_gang, &gang_inventory));
 
     // oracle: same greedy on ground-truth gang rates.

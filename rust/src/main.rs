@@ -4,7 +4,8 @@
 //! habitat predict   [--model M | --trace FILE] [--batch N] [--origin D]
 //!                   [--dest D] [--artifacts DIR] [--wave-only] [--amp]
 //! habitat track     [--model M] [--batch N] [--origin D] --out FILE
-//! habitat compare   [--model M] [--batch N] [--origin D] [--dp WORLD]
+//! habitat compare   [--model M | --models M,M] [--batch N] [--origin D]
+//!                   [--dp WORLD]
 //! habitat dataset   [--out DIR] [--configs N] [--seed S]
 //! habitat experiment <id|all> [--out DIR] [--artifacts DIR]
 //! habitat cluster   [--model M] [--batch N] [--origin D] [--dest D]
@@ -89,7 +90,8 @@ const USAGE: &str = "usage: habitat <predict|track|compare|cluster|workload|data
   predict    [--model M | --trace FILE] --batch N --origin DEV --dest DEV
              [--artifacts DIR] [--wave-only] [--amp]
   track      --model M --batch N --origin DEV --out FILE   (save a trace)
-  compare    --model M --batch N --origin DEV [--dp WORLD] [--wave-only]
+  compare    --model M | --models M,M --batch N --origin DEV [--dp WORLD]
+             [--wave-only]   (--models ranks all of them in one sweep)
   cluster    --model M --batch N --origin DEV --dest DEV [--topologies T,T]
              [--worlds N,N] [--rank] [--dests D,D] [--overlap F]
              [--bucket-mib F] [--wave-only] [--amp]
@@ -231,6 +233,48 @@ fn main() -> anyhow::Result<()> {
                         PredictionEngine::wave_only()
                     })
             };
+            // Multi-model compare: every model is ranked over the whole
+            // registry in ONE work-claimed multi-trace sweep
+            // (`engine.rank_many`) instead of one fan-out per model.
+            if let Some(list) = args.flags.get("models") {
+                anyhow::ensure!(!args.has("dp"), "--models and --dp cannot be combined");
+                let items: Vec<habitat::engine::RankManyItem> = list
+                    .split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(|m| habitat::engine::RankManyItem {
+                        model: m.to_string(),
+                        batch,
+                        origin,
+                    })
+                    .collect();
+                anyhow::ensure!(!items.is_empty(), "--models must name at least one model");
+                let rankings =
+                    engine.rank_many(&items, &registry::all_devices(), Precision::Fp32)?;
+                for (item, ranking) in items.iter().zip(&rankings) {
+                    println!(
+                        "{} (batch {batch}) from {origin}, best decision first:",
+                        item.model
+                    );
+                    println!(
+                        "{:<10} {:>10} {:>12} {:>14}",
+                        "GPU", "pred ms", "samples/s", "samples/s/$"
+                    );
+                    for entry in &ranking.entries {
+                        let tput = entry.pred.throughput();
+                        println!(
+                            "{:<10} {:>10.2} {:>12.1} {:>14}",
+                            entry.dest.id(),
+                            entry.pred.run_time_ms(),
+                            tput,
+                            habitat::cost::cost_normalized_throughput(entry.dest, tput)
+                                .map(|v| format!("{v:.1}"))
+                                .unwrap_or_else(|| "-".into()),
+                        );
+                    }
+                    println!();
+                }
+                return Ok(());
+            }
             let world = args.get_usize("dp", 1)?;
             // One tracking pass, fanned out to every destination on the
             // engine's worker pool, ranked by cost-normalized throughput.

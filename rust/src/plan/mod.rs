@@ -57,6 +57,7 @@ use crate::opgraph::MlpOp;
 use crate::predict::roofline::{self, MetricsPolicy};
 use crate::predict::{amp, PredictedOp, PredictedTrace};
 use crate::tracker::Trace;
+use crate::util::simdf64;
 
 /// A trace and its compiled plan, produced together by
 /// [`crate::tracker::OperationTracker::track_analyzed`] and cached
@@ -341,28 +342,49 @@ impl DeviceLanes<'_> {
 /// computation on first touch; after that their appended lane is read
 /// by `Arc` bump and the sweep stays allocation-free. The engine pools
 /// one arena per thread ([`crate::engine::pool::with_scratch`]).
+///
+/// Every destination-indexed matrix row is padded to an internal
+/// `stride` — the unique-destination count rounded up to the SIMD lane
+/// width ([`crate::util::simdf64::LANES`]) — so the vector backend
+/// consumes whole chunks without a tail branch. Pad lanes hold the
+/// identity values of each lane (ratio 1, γ 0, wave count 1): they run
+/// through the same arithmetic as real destinations, stay finite, and
+/// are never read back (every reader maps caller indices through the
+/// dedup slot map, which only produces slots `< n_unique`).
 #[derive(Default)]
 pub struct EvalScratch {
     /// Unique destinations of the current sweep, first-occurrence order.
     pub(crate) dests: Vec<Device>,
     /// Caller index → slot in [`EvalScratch::dests`] (dedup expansion).
     pub(crate) slot: Vec<usize>,
-    /// `D_o/D_d` per unique destination.
+    /// Row stride of every destination-indexed matrix: `n_unique`
+    /// rounded up to the SIMD lane width.
+    pub(crate) stride: usize,
+    /// `D_o/D_d` per unique destination (padded, pad = 1).
     pub(crate) bw: Vec<f64>,
-    /// `C_o/C_d` per unique destination.
+    /// `C_o/C_d` per unique destination (padded, pad = 1).
     pub(crate) clock: Vec<f64>,
-    /// γ, dense `[kernel * n_dests + dest]` (transposed so the batched
-    /// inner loop over destinations is contiguous).
+    /// γ, dense `[kernel * stride + dest]` (transposed so the batched
+    /// inner loop over destinations is contiguous; pad = 0).
     pub(crate) gamma_t: Vec<f64>,
-    /// Wave ratio `W_o/W_d`, same `kernels × dests` layout.
+    /// Wave ratio `W_o/W_d`, same `kernels × stride` layout (pad = 1).
     pub(crate) wave_t: Vec<f64>,
-    /// `⌈B/W_d⌉` per `(kernel, dest)` — filled for Eq. 1 sweeps only.
+    /// `⌈B/W_d⌉` per `(kernel, dest)` — filled for Eq. 1 sweeps only
+    /// (pad = 1).
     pub(crate) waves_d_t: Vec<f64>,
     /// `⌈B/W_o⌉` per kernel — Eq. 1 sweeps only.
     pub(crate) waves_o: Vec<f64>,
-    /// Accumulated op times, `[op * n_dests + dest]`.
+    /// Per-kernel working lane: `wave · clock` (Eq. 2) or `bw / wave`
+    /// (Eq. 1), one exact IEEE op per element.
+    pub(crate) wc: Vec<f64>,
+    /// Per-kernel `powf` factor lanes of the wave-scaling expressions
+    /// (see [`crate::predict::wave::eq2_factor_lanes`] /
+    /// [`crate::predict::wave::eq1_factor_lanes`]).
+    pub(crate) p1: Vec<f64>,
+    pub(crate) p2: Vec<f64>,
+    /// Accumulated op times, `[op * stride + dest]`.
     pub(crate) acc: Vec<f64>,
-    /// Whether an MLP overwrote the op, `[op * n_dests + dest]`.
+    /// Whether an MLP overwrote the op, `[op * stride + dest]`.
     pub(crate) mlp_hit: Vec<bool>,
     /// MLP fallback count per unique destination.
     pub(crate) fallbacks: Vec<usize>,
@@ -370,6 +392,10 @@ pub struct EvalScratch {
     /// plan's snapshot (the appended lane is copied in so the sweep can
     /// borrow it; reused across sweeps like everything else).
     pub(crate) lane_amp: Vec<f64>,
+    /// AMP factors transposed to the accumulator's `[op * stride +
+    /// dest]` layout (pad = 1), staged so the factor application is a
+    /// per-op-row vector multiply.
+    pub(crate) amp_t: Vec<f64>,
     /// Ops in the last sweep's plan (row count of `acc`).
     pub(crate) n_ops: usize,
     /// Whether the last sweep had to grow any buffer (a steady-state
@@ -409,6 +435,7 @@ impl EvalScratch {
                 }
             }
         }
+        self.stride = self.dests.len().next_multiple_of(simdf64::LANES);
     }
 
     /// Unique destinations in the last sweep.
@@ -430,16 +457,16 @@ impl EvalScratch {
     /// Predicted time of op `op` for caller destination `dest_idx`
     /// (an index into the `dests` slice passed to the sweep).
     pub fn op_time_ms(&self, dest_idx: usize, op: usize) -> f64 {
-        self.acc[op * self.dests.len() + self.slot[dest_idx]]
+        self.acc[op * self.stride + self.slot[dest_idx]]
     }
 
     /// Predicted iteration time for caller destination `dest_idx`, ms —
     /// summed in op order, bit-identical to
     /// [`PredictedTrace::run_time_ms`] on the materialized trace.
     pub fn run_time_ms(&self, dest_idx: usize) -> f64 {
-        let nd = self.dests.len();
+        let stride = self.stride;
         let di = self.slot[dest_idx];
-        (0..self.n_ops).map(|o| self.acc[o * nd + di]).sum()
+        (0..self.n_ops).map(|o| self.acc[o * stride + di]).sum()
     }
 
     /// Predicted throughput (samples/s) for caller destination
@@ -457,15 +484,15 @@ impl EvalScratch {
     /// `dest_idx` — field-for-field what the scalar evaluator returns
     /// (this is the only allocating step of the batched path).
     pub fn materialize(&self, plan: &AnalyzedPlan, dest_idx: usize) -> PredictedTrace {
-        let nd = self.dests.len();
+        let stride = self.stride;
         let di = self.slot[dest_idx];
         let ops = (0..self.n_ops)
             .map(|o| PredictedOp {
                 index: plan.op_index[o],
                 name: plan.op_name[o].clone(),
                 short_name: plan.op_short_name[o].to_string(),
-                time_ms: self.acc[o * nd + di],
-                method: if self.mlp_hit[o * nd + di] {
+                time_ms: self.acc[o * stride + di],
+                method: if self.mlp_hit[o * stride + di] {
                     crate::predict::PredictionMethod::Mlp
                 } else {
                     crate::predict::PredictionMethod::WaveScaling
@@ -1073,32 +1100,41 @@ impl AnalyzedPlan {
     /// Fill `scratch` with the dense `kernels × unique-dests` lane
     /// matrices for the batched evaluator. [`EvalScratch::begin`] must
     /// have deduped the destination set first. The layout is transposed
-    /// (`[kernel * n_unique + dest]`) so the sweep's innermost
-    /// destination loop walks contiguous memory.
+    /// (`[kernel * stride + dest]`, rows lane-padded to the SIMD chunk
+    /// width with identity values) so the sweep's innermost destination
+    /// loop walks contiguous memory in whole vector chunks.
     pub(crate) fn gather_lanes(&self, eq1: bool, scratch: &mut EvalScratch) {
         let (nk, no, ns) = (self.n_kernels(), self.n_ops(), self.n_shapes());
         let EvalScratch {
             dests,
+            stride,
             bw,
             clock,
             gamma_t,
             wave_t,
             waves_d_t,
             waves_o,
+            wc,
+            p1,
+            p2,
             acc,
             mlp_hit,
             fallbacks,
+            amp_t,
             n_ops,
             grew,
             ..
         } = scratch;
-        let nd = dests.len();
-        ensure(bw, nd, 0.0, grew);
-        ensure(clock, nd, 0.0, grew);
-        ensure(gamma_t, nk * nd, 0.0, grew);
-        ensure(wave_t, nk * nd, 0.0, grew);
+        let sd = *stride;
+        // Pad fills are the identity of each lane (ratio 1, γ 0, wave
+        // count 1): pad elements flow through the same vector arithmetic
+        // as real destinations, stay finite, and are never read back.
+        ensure(bw, sd, 1.0, grew);
+        ensure(clock, sd, 1.0, grew);
+        ensure(gamma_t, nk * sd, 0.0, grew);
+        ensure(wave_t, nk * sd, 1.0, grew);
         if eq1 {
-            ensure(waves_d_t, nk * nd, 0.0, grew);
+            ensure(waves_d_t, nk * sd, 1.0, grew);
             ensure(waves_o, nk, 0.0, grew);
             for k in 0..nk {
                 // The exact `scale_eq1` origin wave count ⌈B/W_o⌉.
@@ -1107,9 +1143,13 @@ impl AnalyzedPlan {
                     as f64;
             }
         }
-        ensure(acc, no * nd, 0.0, grew);
-        ensure(mlp_hit, no * nd, false, grew);
-        ensure(fallbacks, nd, 0, grew);
+        ensure(wc, sd, 1.0, grew);
+        ensure(p1, sd, 1.0, grew);
+        ensure(p2, sd, 1.0, grew);
+        ensure(acc, no * sd, 0.0, grew);
+        ensure(mlp_hit, no * sd, false, grew);
+        ensure(fallbacks, dests.len(), 0, grew);
+        ensure(amp_t, no * sd, 1.0, grew);
         *n_ops = no;
 
         let origin_spec = self.origin.spec();
@@ -1135,11 +1175,11 @@ impl AnalyzedPlan {
             for k in 0..nk {
                 let s = self.shape_idx[k] as usize;
                 let w_dest = w_row[s];
-                gamma_t[k * nd + di] = g_row[k];
+                gamma_t[k * sd + di] = g_row[k];
                 // The exact `ratios_from_parts` wave ratio `W_o/W_d`.
-                wave_t[k * nd + di] = self.wave_origin[s] as f64 / w_dest as f64;
+                wave_t[k * sd + di] = self.wave_origin[s] as f64 / w_dest as f64;
                 if eq1 {
-                    waves_d_t[k * nd + di] = self.blocks[k].div_ceil(w_dest) as f64;
+                    waves_d_t[k * sd + di] = self.blocks[k].div_ceil(w_dest) as f64;
                 }
             }
         }
@@ -1486,8 +1526,9 @@ mod tests {
         let dests = [Device::V100, Device::T4, Device::V100];
         scratch.begin(&dests);
         plan.gather_lanes(true, &mut scratch);
-        let nd = scratch.n_unique();
-        assert_eq!(nd, 2);
+        assert_eq!(scratch.n_unique(), 2);
+        let sd = scratch.stride;
+        assert_eq!(sd, crate::util::simdf64::LANES, "2 unique dests pad to one lane chunk");
         let origin = plan.origin.spec();
         for (u, &dest) in scratch.dests.iter().enumerate() {
             let spec = dest.spec();
@@ -1501,18 +1542,18 @@ mod tests {
             );
             for k in 0..plan.n_kernels() {
                 assert_eq!(
-                    scratch.gamma_t[k * nd + u].to_bits(),
+                    scratch.gamma_t[k * sd + u].to_bits(),
                     plan.gamma(k, dest).to_bits(),
                     "{dest} γ kernel {k}"
                 );
                 let (wo, wd) = (plan.wave_origin(k), plan.wave_dest(k, dest));
                 assert_eq!(
-                    scratch.wave_t[k * nd + u].to_bits(),
+                    scratch.wave_t[k * sd + u].to_bits(),
                     (wo as f64 / wd as f64).to_bits(),
                     "{dest} wave ratio kernel {k}"
                 );
                 assert_eq!(
-                    scratch.waves_d_t[k * nd + u],
+                    scratch.waves_d_t[k * sd + u],
                     plan.kernel_blocks(k).div_ceil(wd) as f64,
                     "{dest} ⌈B/W_d⌉ kernel {k}"
                 );
@@ -1521,6 +1562,16 @@ mod tests {
                     plan.kernel_blocks(k).div_ceil(wo) as f64,
                     "⌈B/W_o⌉ kernel {k}"
                 );
+            }
+        }
+        // Pad lanes hold the documented identity values.
+        for u in scratch.n_unique()..sd {
+            assert_eq!(scratch.bw[u], 1.0);
+            assert_eq!(scratch.clock[u], 1.0);
+            for k in 0..plan.n_kernels() {
+                assert_eq!(scratch.gamma_t[k * sd + u], 0.0, "pad γ kernel {k}");
+                assert_eq!(scratch.wave_t[k * sd + u], 1.0, "pad wave ratio kernel {k}");
+                assert_eq!(scratch.waves_d_t[k * sd + u], 1.0, "pad ⌈B/W_d⌉ kernel {k}");
             }
         }
     }

@@ -20,6 +20,7 @@ use crate::opgraph::MlpOp;
 use crate::predict::roofline::{self, MetricsPolicy};
 use crate::predict::wave;
 use crate::tracker::Trace;
+use crate::util::simdf64;
 use crate::Result;
 
 /// How one op's destination time was obtained.
@@ -346,8 +347,12 @@ impl HybridPredictor {
     /// the sweep and re-expanded to the caller's order in the result.
     /// Bit-identical to N [`HybridPredictor::evaluate_with_precision`]
     /// calls (pinned by the golden suite): the sweep accumulates in the
-    /// same kernel order through the same [`wave::scale_eq2_parts`] /
-    /// [`wave::scale_eq1_parts`] expressions the scalar path uses.
+    /// same kernel order through the factorized form of the same
+    /// [`wave::scale_eq2_parts`] / [`wave::scale_eq1_parts`] expressions
+    /// the scalar path uses — its exact IEEE pieces run on the
+    /// [`crate::util::simdf64`] lanes (AVX2 when available, scalar
+    /// chunks otherwise, `HABITAT_SIMD=off` to force the latter), and
+    /// both backends produce the same bits.
     pub fn evaluate_batch(
         &self,
         plan: &crate::plan::AnalyzedPlan,
@@ -391,47 +396,50 @@ impl HybridPredictor {
     ) {
         scratch.begin(dests);
         plan.gather_lanes(self.use_eq1, scratch);
-        let nd = scratch.n_unique();
         let time = plan.kernel_times();
 
         // Phase 1: the wave-scaling sweep. Kernel-major: for each
-        // kernel of each op, the innermost loop runs over destinations,
-        // reading contiguous rows of the transposed lane matrices —
-        // branch-free, hash-free, slice-indexed f64 arithmetic the
-        // compiler can vectorize.
+        // kernel of each op, the innermost loop runs over the
+        // lane-padded destination rows of the transposed matrices in
+        // whole SIMD chunks. Per kernel row, the exact IEEE pieces of
+        // the wave expression (`wave · clock` or `bw / wave`, the
+        // multiply-accumulate around the factors) go through
+        // `util::simdf64`; the two `powf` factors stay scalar per-lane
+        // libm calls (`wave::eq{1,2}_factor_lanes`) on every backend, so
+        // each lane computes exactly the `scale_eq{1,2}_parts`
+        // expression in the same association order — bit-identical to
+        // the scalar path with either backend selected.
         {
             let s = &mut *scratch;
+            let sd = s.stride;
             let acc = &mut s.acc[..];
             let (gamma_t, wave_t) = (&s.gamma_t[..], &s.wave_t[..]);
             let (bw, clock) = (&s.bw[..], &s.clock[..]);
+            let (wc, p1, p2) = (&mut s.wc[..], &mut s.p1[..], &mut s.p2[..]);
             if self.use_eq1 {
                 let (waves_d_t, waves_o) = (&s.waves_d_t[..], &s.waves_o[..]);
                 for o in 0..plan.n_ops() {
-                    let row = &mut acc[o * nd..(o + 1) * nd];
+                    let row = &mut acc[o * sd..(o + 1) * sd];
                     for k in plan.kernel_range(o) {
                         let (t, wo) = (time[k], waves_o[k]);
-                        let g_row = &gamma_t[k * nd..(k + 1) * nd];
-                        let w_row = &wave_t[k * nd..(k + 1) * nd];
-                        let wd_row = &waves_d_t[k * nd..(k + 1) * nd];
-                        for di in 0..nd {
-                            row[di] += wave::scale_eq1_parts(
-                                t, wo, wd_row[di], bw[di], w_row[di], clock[di], g_row[di],
-                            );
-                        }
+                        let g_row = &gamma_t[k * sd..(k + 1) * sd];
+                        let w_row = &wave_t[k * sd..(k + 1) * sd];
+                        let wd_row = &waves_d_t[k * sd..(k + 1) * sd];
+                        simdf64::div_into(wc, bw, w_row);
+                        wave::eq1_factor_lanes(p1, p2, wc, clock, g_row);
+                        simdf64::eq1_add(row, t, wd_row, p1, p2, wo);
                     }
                 }
             } else {
                 for o in 0..plan.n_ops() {
-                    let row = &mut acc[o * nd..(o + 1) * nd];
+                    let row = &mut acc[o * sd..(o + 1) * sd];
                     for k in plan.kernel_range(o) {
                         let t = time[k];
-                        let g_row = &gamma_t[k * nd..(k + 1) * nd];
-                        let w_row = &wave_t[k * nd..(k + 1) * nd];
-                        for di in 0..nd {
-                            row[di] += wave::scale_eq2_parts(
-                                t, bw[di], w_row[di], clock[di], g_row[di],
-                            );
-                        }
+                        let g_row = &gamma_t[k * sd..(k + 1) * sd];
+                        let w_row = &wave_t[k * sd..(k + 1) * sd];
+                        simdf64::mul_into(wc, w_row, clock);
+                        wave::eq2_factor_lanes(p1, p2, bw, wc, g_row);
+                        simdf64::eq2_add(row, t, p1, p2);
                     }
                 }
             }
@@ -443,6 +451,7 @@ impl HybridPredictor {
         // execution per op family.
         if let Some(backend) = &self.mlp {
             let s = &mut *scratch;
+            let sd = s.stride;
             for group in plan.mlp_groups() {
                 let results = backend.predict_batch_multi(group.op, &group.features, &s.dests);
                 for (di, res) in results.into_iter().enumerate() {
@@ -450,8 +459,8 @@ impl HybridPredictor {
                         Ok(times) if times.len() == group.slots.len() => {
                             for (&slot, ms) in group.slots.iter().zip(times) {
                                 if ms.is_finite() && ms > 0.0 {
-                                    s.acc[slot * nd + di] = ms;
-                                    s.mlp_hit[slot * nd + di] = true;
+                                    s.acc[slot * sd + di] = ms;
+                                    s.mlp_hit[slot * sd + di] = true;
                                 } else {
                                     s.fallbacks[di] += 1;
                                 }
@@ -465,15 +474,24 @@ impl HybridPredictor {
 
         // Phase 3: AMP — multiply the precomputed Daydream factor rows
         // in, after MLP overrides, exactly as the scalar path composes
-        // `evaluate` + `apply_amp`.
+        // `evaluate` + `apply_amp`. The rows are staged into the
+        // accumulator's transposed `[op * stride + dest]` layout (pad
+        // columns keep their identity-1 fill), then each op row is one
+        // exact vector multiply — the same per-element `acc *= factor`
+        // the scalar path performs, so bits cannot change.
         if precision == crate::lowering::Precision::Amp {
             let s = &mut *scratch;
-            for di in 0..nd {
-                let dest = s.dests[di];
-                let factors = plan.amp_row(dest, &mut s.lane_amp);
+            let sd = s.stride;
+            let (dests, lane_amp, amp_t, acc) =
+                (&s.dests, &mut s.lane_amp, &mut s.amp_t, &mut s.acc);
+            for (di, &dest) in dests.iter().enumerate() {
+                let factors = plan.amp_row(dest, lane_amp);
                 for o in 0..plan.n_ops() {
-                    s.acc[o * nd + di] *= factors[o];
+                    amp_t[o * sd + di] = factors[o];
                 }
+            }
+            for o in 0..plan.n_ops() {
+                simdf64::mul_assign(&mut acc[o * sd..(o + 1) * sd], &amp_t[o * sd..(o + 1) * sd]);
             }
         }
     }

@@ -107,6 +107,45 @@ pub fn scale_eq1_parts(
     time_origin_ms * waves_d * (bw / wave).powf(gamma) * clock.powf(1.0 - gamma) / waves_o
 }
 
+/// Fill the two `powf` factor lanes of Eq. 2 for one kernel row of the
+/// batched sweep: `p1[i] = bw[i]^γᵢ`, `p2[i] = wc[i]^(1−γᵢ)` where
+/// `wc[i]` is the precomputed exact product `wave[i] · clock[i]`.
+/// These are the *same* two `powf` calls [`scale_eq2_parts`] makes, so
+/// `(t · p1[i]) · p2[i]` (the [`crate::util::simdf64::eq2_add`] lane
+/// step) reproduces the scalar expression bit-for-bit. `powf` stays a
+/// scalar per-lane libm call on every backend — only the exact IEEE
+/// multiplies and adds around it are vectorized.
+#[inline]
+pub fn eq2_factor_lanes(p1: &mut [f64], p2: &mut [f64], bw: &[f64], wc: &[f64], gamma: &[f64]) {
+    for i in 0..p1.len() {
+        let g = gamma[i];
+        p1[i] = bw[i].powf(g);
+        p2[i] = wc[i].powf(1.0 - g);
+    }
+}
+
+/// Fill the two `powf` factor lanes of Eq. 1 for one kernel row:
+/// `p1[i] = ratio[i]^γᵢ` where `ratio[i]` is the precomputed exact
+/// quotient `bw[i] / wave[i]`, and `p2[i] = clock[i]^(1−γᵢ)`. The same
+/// two `powf` calls as [`scale_eq1_parts`], so the
+/// [`crate::util::simdf64::eq1_add`] lane step
+/// `(((t · wd[i]) · p1[i]) · p2[i]) / wo` matches the scalar expression
+/// bit-for-bit.
+#[inline]
+pub fn eq1_factor_lanes(
+    p1: &mut [f64],
+    p2: &mut [f64],
+    ratio: &[f64],
+    clock: &[f64],
+    gamma: &[f64],
+) {
+    for i in 0..p1.len() {
+        let g = gamma[i];
+        p1[i] = ratio[i].powf(g);
+        p2[i] = clock[i].powf(1.0 - g);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,6 +211,36 @@ mod tests {
         let eq2 = scale_eq2(1.0, &r, 0.0);
         // Eq1 quantizes to whole waves; must differ from the smooth Eq2.
         assert!((eq1 / eq2 - 1.0).abs() > 0.01);
+    }
+
+    #[test]
+    fn factor_lanes_reassemble_the_scalar_expressions_bitwise() {
+        // The batched sweep's factorized form — powf lanes + exact
+        // mul/add — must reproduce scale_eq{1,2}_parts bit-for-bit.
+        let bw = [0.8, 1.6, 0.5];
+        let wave = [1.3, 0.7, 2.5];
+        let clock = [0.95, 1.2, 0.85];
+        let gamma = [0.0, 0.4, 1.0];
+        let (t, wo) = (1.75, 3.0);
+        let wd = [5.0, 2.0, 9.0];
+        let n = bw.len();
+
+        let wc: Vec<f64> = (0..n).map(|i| wave[i] * clock[i]).collect();
+        let (mut p1, mut p2) = (vec![0.0; n], vec![0.0; n]);
+        eq2_factor_lanes(&mut p1, &mut p2, &bw, &wc, &gamma);
+        for i in 0..n {
+            let lane = (t * p1[i]) * p2[i];
+            let scalar = scale_eq2_parts(t, bw[i], wave[i], clock[i], gamma[i]);
+            assert_eq!(lane.to_bits(), scalar.to_bits(), "eq2 lane {i}");
+        }
+
+        let ratio: Vec<f64> = (0..n).map(|i| bw[i] / wave[i]).collect();
+        eq1_factor_lanes(&mut p1, &mut p2, &ratio, &clock, &gamma);
+        for i in 0..n {
+            let lane = (((t * wd[i]) * p1[i]) * p2[i]) / wo;
+            let scalar = scale_eq1_parts(t, wo, wd[i], bw[i], wave[i], clock[i], gamma[i]);
+            assert_eq!(lane.to_bits(), scalar.to_bits(), "eq1 lane {i}");
+        }
     }
 
     #[test]

@@ -6,6 +6,7 @@ pub mod binio;
 pub mod csv;
 pub mod json;
 pub mod rng;
+pub mod simdf64;
 pub mod stats;
 
 pub use rng::Rng;

@@ -1,0 +1,366 @@
+//! Fixed-width SIMD chunk ops over `f64` slices — the vector lanes
+//! under the batched evaluation sweep
+//! ([`crate::predict::HybridPredictor::evaluate_batch_times`]).
+//!
+//! Everything here is **bit-identical** to the equivalent scalar loop:
+//! only IEEE-754-exact element-wise operations (multiply, divide, add)
+//! are vectorized, each lane computes exactly the expression the scalar
+//! path computes in exactly the same association order, and no FMA
+//! contraction is ever used (a fused multiply-add rounds once where
+//! `mul` + `add` round twice, which would change bits). Transcendental
+//! factors (`powf`) are *not* vectorized — the evaluator computes them
+//! with scalar per-lane libm calls and hands the results in as plain
+//! slices — so switching the backend can never change a prediction.
+//!
+//! Backend selection happens once, at first use:
+//!
+//! * on `x86_64` with AVX2 available at runtime
+//!   (`is_x86_feature_detected!`), the 4-lane `std::arch` path;
+//! * otherwise a portable scalar-chunk fallback (the same loop shape,
+//!   plain Rust — the optimizer is free to auto-vectorize it).
+//!
+//! Kill-switch: set `HABITAT_SIMD=off` (or `0`/`false`) to force the
+//! scalar path — CI runs the whole test suite under both settings, and
+//! the golden suite pins the two paths bit-identical. Tests can also
+//! flip the backend in-process with [`set_enabled`]; because the paths
+//! are bit-identical this is safe even while other threads evaluate.
+
+use std::sync::atomic::{AtomicU8, Ordering::Relaxed};
+
+/// Lane width the evaluator pads its destination arrays to. The AVX2
+/// path consumes exactly this many `f64`s per vector op; the portable
+/// fallback uses the same chunking so both paths touch memory alike.
+pub const LANES: usize = 4;
+
+/// Environment variable disabling the vector path (`off`, `0`, `false`).
+pub const SIMD_ENV: &str = "HABITAT_SIMD";
+
+const UNINIT: u8 = 0;
+const SCALAR: u8 = 1;
+const AVX2: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(UNINIT);
+
+fn detect() -> u8 {
+    if let Ok(v) = std::env::var(SIMD_ENV) {
+        let v = v.to_ascii_lowercase();
+        if v == "off" || v == "0" || v == "false" {
+            return SCALAR;
+        }
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return AVX2;
+        }
+    }
+    SCALAR
+}
+
+fn state() -> u8 {
+    match STATE.load(Relaxed) {
+        UNINIT => {
+            let s = detect();
+            // A concurrent first use races benignly: both sides compute
+            // the same value from the same environment.
+            STATE.store(s, Relaxed);
+            s
+        }
+        s => s,
+    }
+}
+
+/// Is the vector backend selected? (`false`: scalar-chunk fallback —
+/// killed by `HABITAT_SIMD=off`, or no AVX2 on this machine.)
+pub fn active() -> bool {
+    state() == AVX2
+}
+
+/// The selected backend, for the engine's `simd` stat: `"avx2"` or
+/// `"scalar"`.
+pub fn backend() -> &'static str {
+    if active() {
+        "avx2"
+    } else {
+        "scalar"
+    }
+}
+
+/// Force the backend in-process: `set_enabled(false)` selects the
+/// scalar path, `set_enabled(true)` re-detects (which still honours
+/// `HABITAT_SIMD=off`). For tests that pin SIMD-on/SIMD-off
+/// bit-identity without respawning the process.
+pub fn set_enabled(on: bool) {
+    STATE.store(if on { detect() } else { SCALAR }, Relaxed);
+}
+
+/// `dst[i] = a[i] * b[i]` — one exact IEEE multiply per lane.
+pub fn mul_into(dst: &mut [f64], a: &[f64], b: &[f64]) {
+    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: AVX2 availability was runtime-checked by `active`.
+        unsafe { avx2::mul_into(dst, a, b) };
+        return;
+    }
+    for i in 0..dst.len() {
+        dst[i] = a[i] * b[i];
+    }
+}
+
+/// `dst[i] = a[i] / b[i]` — one exact IEEE divide per lane.
+pub fn div_into(dst: &mut [f64], a: &[f64], b: &[f64]) {
+    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: AVX2 availability was runtime-checked by `active`.
+        unsafe { avx2::div_into(dst, a, b) };
+        return;
+    }
+    for i in 0..dst.len() {
+        dst[i] = a[i] / b[i];
+    }
+}
+
+/// `dst[i] *= a[i]` — the AMP factor application.
+pub fn mul_assign(dst: &mut [f64], a: &[f64]) {
+    debug_assert!(dst.len() == a.len());
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: AVX2 availability was runtime-checked by `active`.
+        unsafe { avx2::mul_assign(dst, a) };
+        return;
+    }
+    for i in 0..dst.len() {
+        dst[i] *= a[i];
+    }
+}
+
+/// `dst[i] += (t * p1[i]) * p2[i]` — the Eq. 2 accumulation step
+/// ([`crate::predict::wave::scale_eq2_parts`] with its two `powf`
+/// factors precomputed into `p1`/`p2`). Association order matches the
+/// scalar expression exactly; no FMA.
+pub fn eq2_add(dst: &mut [f64], t: f64, p1: &[f64], p2: &[f64]) {
+    debug_assert!(dst.len() == p1.len() && dst.len() == p2.len());
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: AVX2 availability was runtime-checked by `active`.
+        unsafe { avx2::eq2_add(dst, t, p1, p2) };
+        return;
+    }
+    for i in 0..dst.len() {
+        dst[i] += (t * p1[i]) * p2[i];
+    }
+}
+
+/// `dst[i] += (((t * wd[i]) * p1[i]) * p2[i]) / wo` — the Eq. 1
+/// accumulation step ([`crate::predict::wave::scale_eq1_parts`] with
+/// its two `powf` factors precomputed). Same association order as the
+/// scalar expression; no FMA.
+pub fn eq1_add(dst: &mut [f64], t: f64, wd: &[f64], p1: &[f64], p2: &[f64], wo: f64) {
+    debug_assert!(dst.len() == wd.len() && dst.len() == p1.len() && dst.len() == p2.len());
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: AVX2 availability was runtime-checked by `active`.
+        unsafe { avx2::eq1_add(dst, t, wd, p1, p2, wo) };
+        return;
+    }
+    for i in 0..dst.len() {
+        dst[i] += (((t * wd[i]) * p1[i]) * p2[i]) / wo;
+    }
+}
+
+/// The AVX2 lanes. Every function is `unsafe` (callers must have
+/// runtime-verified AVX2) and uses only `_mm256_{mul,div,add}_pd` —
+/// exact IEEE-754 operations, never FMA — so each lane is bit-identical
+/// to the scalar fallback. Trailing elements past the last full
+/// 4-lane chunk run the identical scalar expressions.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::{
+        __m256d, _mm256_add_pd, _mm256_div_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd,
+        _mm256_storeu_pd,
+    };
+
+    use super::LANES;
+
+    #[inline]
+    unsafe fn load(s: &[f64], i: usize) -> __m256d {
+        _mm256_loadu_pd(s.as_ptr().add(i))
+    }
+
+    #[inline]
+    unsafe fn store(s: &mut [f64], i: usize, v: __m256d) {
+        _mm256_storeu_pd(s.as_mut_ptr().add(i), v)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn mul_into(dst: &mut [f64], a: &[f64], b: &[f64]) {
+        let n = dst.len() / LANES * LANES;
+        for i in (0..n).step_by(LANES) {
+            store(dst, i, _mm256_mul_pd(load(a, i), load(b, i)));
+        }
+        for i in n..dst.len() {
+            dst[i] = a[i] * b[i];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn div_into(dst: &mut [f64], a: &[f64], b: &[f64]) {
+        let n = dst.len() / LANES * LANES;
+        for i in (0..n).step_by(LANES) {
+            store(dst, i, _mm256_div_pd(load(a, i), load(b, i)));
+        }
+        for i in n..dst.len() {
+            dst[i] = a[i] / b[i];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn mul_assign(dst: &mut [f64], a: &[f64]) {
+        let n = dst.len() / LANES * LANES;
+        for i in (0..n).step_by(LANES) {
+            store(dst, i, _mm256_mul_pd(load(dst, i), load(a, i)));
+        }
+        for i in n..dst.len() {
+            dst[i] *= a[i];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn eq2_add(dst: &mut [f64], t: f64, p1: &[f64], p2: &[f64]) {
+        let tv = _mm256_set1_pd(t);
+        let n = dst.len() / LANES * LANES;
+        for i in (0..n).step_by(LANES) {
+            let term = _mm256_mul_pd(_mm256_mul_pd(tv, load(p1, i)), load(p2, i));
+            store(dst, i, _mm256_add_pd(load(dst, i), term));
+        }
+        for i in n..dst.len() {
+            dst[i] += (t * p1[i]) * p2[i];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn eq1_add(
+        dst: &mut [f64],
+        t: f64,
+        wd: &[f64],
+        p1: &[f64],
+        p2: &[f64],
+        wo: f64,
+    ) {
+        let tv = _mm256_set1_pd(t);
+        let wov = _mm256_set1_pd(wo);
+        let n = dst.len() / LANES * LANES;
+        for i in (0..n).step_by(LANES) {
+            let term = _mm256_mul_pd(
+                _mm256_mul_pd(_mm256_mul_pd(tv, load(wd, i)), load(p1, i)),
+                load(p2, i),
+            );
+            store(dst, i, _mm256_add_pd(load(dst, i), _mm256_div_pd(term, wov)));
+        }
+        for i in n..dst.len() {
+            dst[i] += (((t * wd[i]) * p1[i]) * p2[i]) / wo;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(n: usize, seed: f64) -> Vec<f64> {
+        (0..n).map(|i| seed + i as f64 * 0.37).collect()
+    }
+
+    /// Run `f` under both backends and assert the outputs match
+    /// bit-for-bit (on machines without AVX2 both runs take the scalar
+    /// path and the comparison is trivially true).
+    fn both_backends(f: impl Fn() -> Vec<f64>) {
+        set_enabled(true);
+        let vector = f();
+        set_enabled(false);
+        let scalar = f();
+        set_enabled(true);
+        for (a, b) in vector.iter().zip(&scalar) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn backend_reports_a_known_name() {
+        assert!(matches!(backend(), "avx2" | "scalar"));
+        set_enabled(false);
+        assert_eq!(backend(), "scalar");
+        assert!(!active());
+        set_enabled(true);
+    }
+
+    #[test]
+    fn mul_div_assign_match_scalar_bitwise() {
+        // Lengths straddling the 4-lane chunk boundary exercise both
+        // the vector body and the scalar tail.
+        for n in [1usize, 3, 4, 7, 8, 17] {
+            let a = ramp(n, 1.25);
+            let b = ramp(n, 0.5);
+            both_backends(|| {
+                let mut dst = vec![0.0; n];
+                mul_into(&mut dst, &a, &b);
+                dst
+            });
+            both_backends(|| {
+                let mut dst = vec![0.0; n];
+                div_into(&mut dst, &a, &b);
+                dst
+            });
+            both_backends(|| {
+                let mut dst = a.clone();
+                mul_assign(&mut dst, &b);
+                dst
+            });
+        }
+    }
+
+    #[test]
+    fn accumulation_steps_match_scalar_bitwise() {
+        for n in [1usize, 4, 6, 12, 31] {
+            let p1 = ramp(n, 0.9);
+            let p2 = ramp(n, 1.1);
+            let wd = ramp(n, 2.0);
+            both_backends(|| {
+                let mut dst = ramp(n, 0.01);
+                eq2_add(&mut dst, 3.5, &p1, &p2);
+                dst
+            });
+            both_backends(|| {
+                let mut dst = ramp(n, 0.02);
+                eq1_add(&mut dst, 3.5, &wd, &p1, &p2, 7.0);
+                dst
+            });
+        }
+    }
+
+    #[test]
+    fn eq2_add_matches_the_wave_expression() {
+        // The lane step must reproduce scale_eq2_parts exactly when
+        // handed its powf factors.
+        let (t, bw, wave, clock, g) = (1.75, 0.8, 1.3, 0.95, 0.4);
+        let p1 = [f64::powf(bw, g)];
+        let p2 = [f64::powf(wave * clock, 1.0 - g)];
+        let mut dst = [0.0];
+        eq2_add(&mut dst, t, &p1, &p2);
+        let scalar = crate::predict::wave::scale_eq2_parts(t, bw, wave, clock, g);
+        assert_eq!(dst[0].to_bits(), scalar.to_bits());
+    }
+
+    #[test]
+    fn eq1_add_matches_the_wave_expression() {
+        let (t, wo, wd, bw, wave, clock, g) = (1.75, 3.0, 5.0, 0.8, 1.3, 0.95, 0.4);
+        let p1 = [f64::powf(bw / wave, g)];
+        let p2 = [f64::powf(clock, 1.0 - g)];
+        let mut dst = [0.0];
+        eq1_add(&mut dst, t, &[wd], &p1, &p2, wo);
+        let scalar = crate::predict::wave::scale_eq1_parts(t, wo, wd, bw, wave, clock, g);
+        assert_eq!(dst[0].to_bits(), scalar.to_bits());
+    }
+}

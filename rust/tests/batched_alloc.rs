@@ -4,7 +4,10 @@
 //! scratch arena has been sized by a first sweep, repeat sweeps over
 //! the same `(plan, destination-set)` shape perform **no heap
 //! allocation** — the property that makes high-rate fan-out serving
-//! cheap. This binary pins it with a counting `#[global_allocator]`.
+//! cheap. `PredictionEngine::evaluate_many_times` extends the promise
+//! to one-call multi-trace sweeps through a warm `SweepTimes` arena on
+//! a serial engine. This binary pins both with a counting
+//! `#[global_allocator]`.
 //!
 //! It lives in its own test binary (see the `[[test]]` entry in
 //! `Cargo.toml`) with exactly one `#[test]`: the allocator counts every
@@ -39,6 +42,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
 static GLOBAL: CountingAlloc = CountingAlloc;
 
 use habitat::device::{Device, ALL_DEVICES};
+use habitat::engine::{PredictionEngine, SweepJob, SweepTimes};
 use habitat::plan::{AnalyzedPlan, EvalScratch};
 use habitat::predict::HybridPredictor;
 use habitat::tracker::OperationTracker;
@@ -79,5 +83,43 @@ fn steady_state_batched_sweep_allocates_nothing() {
         after - before,
         0,
         "steady-state batched evaluation must not touch the heap"
+    );
+
+    // The one-call multi-trace sweep keeps the same promise: on a
+    // serial engine (one claimer — the parallel path's channel is the
+    // documented allocating exception) with a warm `SweepTimes` arena,
+    // repeat `evaluate_many_times` calls over the same job shapes stay
+    // off the heap. The job list is built outside the measured window;
+    // each job carries only an `Arc` bump and a borrowed destination
+    // slice.
+    let engine = PredictionEngine::wave_only().with_workers(1);
+    let mlp_graph = habitat::models::by_name("mlp", 16).unwrap();
+    let mlp_trace = OperationTracker::new(Device::Rtx2070).track(&mlp_graph);
+    let plans = [engine.analyze(&trace), engine.analyze(&mlp_trace)];
+    let jobs: Vec<SweepJob<'_>> = plans
+        .iter()
+        .zip([Precision::Fp32, Precision::Amp])
+        .map(|(plan, precision)| SweepJob {
+            plan: std::sync::Arc::clone(plan),
+            dests: &dests,
+            precision,
+        })
+        .collect();
+    let mut times = SweepTimes::new();
+    engine.evaluate_many_times(&jobs, &mut times); // sizes the arena
+
+    let before = ALLOCS.load(Relaxed);
+    let mut many_checksum = 0.0_f64;
+    for _ in 0..16 {
+        engine.evaluate_many_times(&jobs, &mut times);
+        many_checksum += times.job(0)[0] + times.job(1)[dests.len() - 1];
+    }
+    let after = ALLOCS.load(Relaxed);
+
+    assert!(many_checksum.is_finite() && many_checksum > 0.0);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state multi-trace sweeps must not touch the heap"
     );
 }

@@ -211,6 +211,74 @@ fn batched_evaluation_covers_post_snapshot_registered_devices() {
 }
 
 #[test]
+fn simd_lanes_match_the_scalar_fallback_bit_for_bit() {
+    use habitat::device::registry::{self, NewDevice};
+    use habitat::util::simdf64;
+
+    // The SIMD referee: the vector backend and the portable
+    // scalar-chunk fallback must produce identical bits across the
+    // whole golden grid — every zoo model × every registry device
+    // (plus one registered after the plans compiled, to cover the
+    // padded computed-lane path) × both precisions, per op. CI also
+    // runs the entire suite twice (default and `HABITAT_SIMD=off`);
+    // this test pins the same equivalence in-process so a divergence
+    // names the exact op. On machines without AVX2 both sweeps select
+    // the scalar backend and the comparison is trivially tight.
+    let engine = PredictionEngine::wave_only();
+    let plans: Vec<_> = models::MODEL_NAMES
+        .iter()
+        .map(|m| engine.analyzed(m, golden_batch(m), Device::Rtx2070).unwrap())
+        .collect();
+    registry::register(&NewDevice::new("sim-golden-simd", 48, 1400.0, 550.0, 12.0, true))
+        .unwrap();
+    let dests = registry::all_devices();
+
+    simdf64::set_enabled(false);
+    assert_eq!(simdf64::backend(), "scalar");
+    let mut scalar = Vec::new();
+    for a in &plans {
+        for (precision, _) in PRECISIONS {
+            scalar.push(engine.evaluate_batch(&a.plan, &dests, precision));
+        }
+    }
+    // Re-detect: AVX2 where the CPU has it (still scalar under
+    // `HABITAT_SIMD=off`) — either way the bits below must agree.
+    simdf64::set_enabled(true);
+
+    let mut idx = 0;
+    for (model, a) in models::MODEL_NAMES.iter().zip(&plans) {
+        for (precision, label) in PRECISIONS {
+            let vector = engine.evaluate_batch(&a.plan, &dests, precision);
+            let base = &scalar[idx];
+            idx += 1;
+            assert_eq!(vector.len(), base.len());
+            for ((v, s), &dest) in vector.iter().zip(base).zip(&dests) {
+                assert_eq!(v.ops.len(), s.ops.len());
+                assert_eq!(v.mlp_fallbacks, s.mlp_fallbacks);
+                for (s_op, v_op) in s.ops.iter().zip(&v.ops) {
+                    assert_eq!(
+                        s_op.time_ms.to_bits(),
+                        v_op.time_ms.to_bits(),
+                        "{model} {label} {dest} op {}: scalar {} vs simd {}",
+                        s_op.name,
+                        s_op.time_ms,
+                        v_op.time_ms
+                    );
+                    assert_eq!(s_op.method, v_op.method);
+                }
+                assert_eq!(
+                    v.run_time_ms().to_bits(),
+                    s.run_time_ms().to_bits(),
+                    "{model} {label} {dest}: scalar {} vs simd {}",
+                    s.run_time_ms(),
+                    v.run_time_ms()
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn restored_plans_are_bit_identical_across_the_zoo() {
     // The persistent plan store's referee: compile + persist the whole
     // five-model zoo, reboot a fresh engine from disk, and compare the

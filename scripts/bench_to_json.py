@@ -59,6 +59,16 @@ SPEEDUPS = [
         "plan/evaluate_batch_60_dests/resnet50",
         "plan/evaluate_batch_sweep_60_dests/resnet50",
     ),
+    # The SIMD-lane gate: the per-destination scalar path against the
+    # lane-vectorized warm-scratch sweep over the same 60 destinations
+    # (CI gates this at >= 1.5x). Note this compares code paths, not
+    # backends — SIMD-on vs HABITAT_SIMD=off on the same path is
+    # powf-dominated and intentionally not gated.
+    (
+        "scalar_vs_simd_sweep",
+        "plan/evaluate_60_dests/resnet50",
+        "plan/evaluate_batch_simd_vs_scalar",
+    ),
     (
         "plan_build_serial_vs_parallel",
         "plan/build_serial/resnet50",

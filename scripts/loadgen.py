@@ -45,11 +45,27 @@ DESTS = ["v100", "p100", "p4000", "t4", "rtx2070", "2080ti"]
 
 def build_requests(conn_id, count):
     """A deterministic mixed workload: mostly predicts (cache-hot after
-    the first round), with periodic ranks, cluster sweeps, and stats
-    probes."""
+    the first round), with periodic ranks, multi-trace rank_many sweeps,
+    cluster sweeps, and stats probes."""
     lines = []
     for i in range(count):
-        if i % 13 == 12:
+        if i % 17 == 16:
+            lines.append(
+                {
+                    "v": 2,
+                    "op": "rank_many",
+                    "items": [
+                        {
+                            "model": MODELS[(conn_id + i + k) % len(MODELS)],
+                            "batch": BATCHES[(conn_id + k) % len(BATCHES)],
+                            "origin": "t4",
+                        }
+                        for k in range(3)
+                    ],
+                    "dests": DESTS[:4],
+                }
+            )
+        elif i % 13 == 12:
             lines.append({"stats": True})
         elif i % 11 == 10:
             lines.append(

@@ -18,10 +18,12 @@ Checks, in order:
      world=1 equals the single-GPU predict exactly, scaling efficiency
      stays in (0, 1], the ranking is sorted, and the exported workload
      is a well-formed COMM_OPS-style schedule;
-  5. stats reflects the session's activity;
-  6. malformed lines (including unknown topologies/links) produce the
+  5. rank_many answers both cached items in one multi-trace sweep, and
+     each item's ranking is identical to the equivalent standalone rank;
+  6. stats reflects the session's activity;
+  7. malformed lines (including unknown topologies/links) produce the
      exact expected error shapes and do not kill the connection;
-  7. the HTTP front end (`--http-port`) answers the same dispatcher:
+  8. the HTTP front end (`--http-port`) answers the same dispatcher:
      `GET /healthz`, `POST /v2` (a v1-shaped body replies field-for-field
      identically to the TCP session's v1 predict), malformed bodies get
      a structured 400, and `GET /metrics` exposes per-op request
@@ -460,7 +462,29 @@ def run_session(port, cold=True, store=False):
         str(ops)[:200],
     )
 
-    # --- 5. stats ------------------------------------------------------
+    # --- 5. rank_many: one multi-trace sweep ---------------------------
+    # Both items are (model, batch, origin) combos the session already
+    # cached, so this adds no tracking work — and each item's ranking
+    # must be identical to the standalone rank of the same trace.
+    many = rpc(
+        {
+            "v": 2, "op": "rank_many",
+            "items": [
+                {"model": "resnet50", "batch": 32, "origin": "rtx2070"},
+                {"model": "dcgan", "batch": 16, "origin": "t4"},
+            ],
+        }
+    )
+    expect_eq("rank_many envelope op echo", many.get("op"), "rank_many")
+    expect_eq("rank_many answers every item", many.get("count"), 2)
+    results = many.get("results", [])
+    expect_eq("rank_many result count matches items", len(results), 2)
+    if len(results) == 2:
+        expect_eq("rank_many echoes item models", [r.get("model") for r in results], ["resnet50", "dcgan"])
+        expect_eq("rank_many[resnet50] == standalone rank", results[0].get("ranking"), rank2["ranking"])
+        expect_eq("rank_many[dcgan] == standalone trace rank", results[1].get("ranking"), rank_by_id.get("ranking"))
+
+    # --- 6. stats ------------------------------------------------------
     v1_stats = rpc({"stats": True})
     expect_eq(
         "v1 stats keeps its original seven fields",
@@ -487,7 +511,7 @@ def run_session(port, cold=True, store=False):
         # simulator no longer produces, in which case it re-uploads once.
         check("warm boot upload count sane", v2_stats.get("trace_uploads", 2) <= 1, str(v2_stats))
 
-    # --- 6. malformed input, exact expected error shapes ---------------
+    # --- 7. malformed input, exact expected error shapes ---------------
     bad = rpc("this is not json")
     check("v1 parse error shape", str(bad.get("error", "")).startswith("bad request:"), str(bad))
     expect_eq(
@@ -537,6 +561,16 @@ def run_session(port, cold=True, store=False):
             }
         )["error"]["code"],
         "unknown_link",
+    )
+    expect_eq(
+        "empty rank_many items error",
+        rpc({"v": 2, "op": "rank_many", "items": []})["error"]["code"],
+        "invalid_argument",
+    )
+    expect_eq(
+        "rank_many without items error",
+        rpc({"v": 2, "op": "rank_many"})["error"]["code"],
+        "bad_request",
     )
     expect_eq(
         "zero world size error",
